@@ -1,0 +1,170 @@
+//! END-TO-END DRIVER (DESIGN.md §6, EXPERIMENTS.md §E2E): the full
+//! data-engineering workload the paper motivates, across all three
+//! layers:
+//!
+//!   CSV on disk → distributed ingest → select → join (fact ⋈ dim) →
+//!   groupby → global sort → **table→tensor featurize through the AOT
+//!   PJRT artifact** (L2/L1) → ML-ready tensor + stats.
+//!
+//! It reports rows, per-stage seconds, shuffle bytes, wall time, and the
+//! paper's headline metric (distributed-join throughput), then
+//! cross-checks the PJRT featurize against the native implementation.
+//!
+//!     make artifacts && cargo run --release --example etl_pipeline [rows]
+
+use rylon::dist::{Cluster, DistConfig};
+use rylon::io::csv::{read_csv, write_csv, CsvOptions};
+use rylon::io::datagen::{gen_table, DataGenSpec, KeyDist};
+use rylon::metrics::{Phases, Timer};
+use rylon::ops::groupby::{Agg, GroupByOptions};
+use rylon::ops::join::JoinOptions;
+use rylon::ops::orderby::SortKey;
+use rylon::pipeline::{Env, Pipeline};
+use rylon::prelude::*;
+use rylon::runtime::{FeaturizeKernel, Runtime};
+use rylon::util::fmt::{human_bytes, human_count};
+
+fn main() -> Result<()> {
+    let rows: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(500_000);
+    let world = 4;
+    let dir = std::env::temp_dir().join("rylon_etl_example");
+    std::fs::create_dir_all(&dir)?;
+
+    // ---- 1. Produce the "raw data lake": CSV files on disk. -------------
+    println!("[1/5] generating {} fact rows + dim table as CSV…", human_count(rows as u64));
+    let fact_path = dir.join("fact.csv");
+    let dim_path = dir.join("dim.csv");
+    write_csv(
+        &gen_table(&DataGenSpec::paper_scaling(rows, 0xE71))?,
+        &fact_path,
+        &CsvOptions::default(),
+    )?;
+    write_csv(
+        &gen_table(&DataGenSpec {
+            rows: (rows / 20).max(1),
+            payload_cols: 1,
+            key_dist: KeyDist::Sequential,
+            seed: 0xD1,
+        })?,
+        &dim_path,
+        &CsvOptions::default(),
+    )?;
+
+    // ---- 2. Distributed ETL over the cluster. ---------------------------
+    println!("[2/5] running distributed ETL on {world} rank threads…");
+    let pipeline = Pipeline::new()
+        .select("d0 > -50")? // cheap row filter near the source
+        .join("dim", JoinOptions::inner("id", "id"))
+        .groupby(GroupByOptions::new(
+            &["id"],
+            vec![Agg::sum("d1"), Agg::mean("d2"), Agg::count("d1")],
+        ))
+        .orderby(vec![SortKey::asc("id")])
+        .rebalance();
+
+    let wall = Timer::start();
+    let cluster = Cluster::new(DistConfig::threads(world))?;
+    let fact = read_csv(&fact_path, &CsvOptions::default())?;
+    let dim = read_csv(&dim_path, &CsvOptions::default())?;
+    let outs = cluster.run(|ctx| {
+        // Block-partition the CSVs across ranks (each rank reads its
+        // slice; with a parallel FS each rank would read its own file).
+        let slice = |t: &Table| {
+            let n = t.num_rows();
+            let base = n / ctx.size;
+            let extra = n % ctx.size;
+            let my = base + (ctx.rank < extra) as usize;
+            let off = base * ctx.rank + ctx.rank.min(extra);
+            t.slice(off, my)
+        };
+        let mut env = Env::new();
+        env.insert("dim".to_string(), slice(&dim));
+        pipeline.run_dist(ctx, &slice(&fact), &env)
+    })?;
+    let wall_s = wall.seconds();
+
+    let mut phases = Phases::new();
+    let mut result_rows = 0usize;
+    for (t, p) in &outs {
+        phases.merge(p);
+        result_rows += t.num_rows();
+    }
+    println!(
+        "      {} result rows in {wall_s:.3}s wall; shuffle bytes {}",
+        human_count(result_rows as u64),
+        human_bytes(cluster.bytes_sent()),
+    );
+    println!("      per-stage seconds (summed over ranks): {}", phases.to_json().to_string());
+    // Headline metric, paper-style: joined rows per second.
+    println!(
+        "      headline: {:.1}M input rows/s through the full pipeline",
+        rows as f64 / wall_s / 1e6
+    );
+
+    // ---- 3. Gather the (small) result and bridge to tensors. ------------
+    println!("[3/5] gathering result + featurizing via the AOT artifact…");
+    let parts: Vec<Table> = outs.iter().map(|(t, _)| t.clone()).collect();
+    let result = Table::concat_all(parts[0].schema(), &parts)?;
+    let sum = result.column_by_name("sum_d1")?.cast_f64()?;
+    let mean = result.column_by_name("mean_d2")?.cast_f64()?;
+    let cnt = result.column_by_name("count_d1")?.cast_f64()?;
+    let n = sum.len();
+    let mut x = Vec::with_capacity(n * 3);
+    for i in 0..n {
+        x.push(sum[i] as f32);
+        x.push(mean[i] as f32);
+        x.push(cnt[i] as f32);
+    }
+
+    let rt = Runtime::open("artifacts").ok();
+    let (feats, via) = match &rt {
+        Some(rt) => (FeaturizeKernel::new(rt).run(&x, n, 3)?, "pjrt"),
+        None => (FeaturizeKernel::native().run(&x, n, 3)?, "native (run `make artifacts` for the PJRT path)"),
+    };
+    println!(
+        "      tensor: {}×{} f32 via {via}; column means {:?}",
+        feats.rows, feats.cols, feats.mean
+    );
+
+    // ---- 4. Cross-check PJRT vs native numerics. -------------------------
+    println!("[4/5] cross-checking PJRT output against native…");
+    let native = FeaturizeKernel::native().run(&x, n, 3)?;
+    let mut max_abs = 0f32;
+    for (a, b) in feats.features.iter().zip(&native.features) {
+        max_abs = max_abs.max((a - b).abs());
+    }
+    println!("      max |pjrt - native| = {max_abs:e}");
+    assert!(max_abs < 1e-3, "bridge mismatch");
+
+    // ---- 5. Hand off: write the ML-ready matrix. -------------------------
+    let out_path = dir.join("features.csv");
+    let feat_table = Table::from_columns(vec![
+        (
+            "f0",
+            Column::from_f64(
+                (0..n).map(|i| feats.features[i * 3] as f64).collect(),
+            ),
+        ),
+        (
+            "f1",
+            Column::from_f64(
+                (0..n).map(|i| feats.features[i * 3 + 1] as f64).collect(),
+            ),
+        ),
+        (
+            "f2",
+            Column::from_f64(
+                (0..n).map(|i| feats.features[i * 3 + 2] as f64).collect(),
+            ),
+        ),
+    ])?;
+    write_csv(&feat_table, &out_path, &CsvOptions::default())?;
+    println!(
+        "[5/5] wrote ML-ready features to {} — done.",
+        out_path.display()
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the Table I relational operators on a small in-memory
+//! table — the 30-line tour of the local API.
+//!
+//!     cargo run --release --example quickstart
+
+use rylon::ops::select::CmpOp;
+use rylon::prelude::*;
+
+fn main() -> Result<()> {
+    // Build two small tables (mirrors the PyCylon sequential example).
+    let orders = Table::from_columns(vec![
+        ("order_id", Column::from_i64(vec![1, 2, 3, 4, 5, 6])),
+        ("user", Column::from_i64(vec![10, 11, 10, 12, 11, 10])),
+        (
+            "amount",
+            Column::from_f64(vec![9.5, 120.0, 33.0, 5.0, 78.0, 61.5]),
+        ),
+    ])?;
+    let users = Table::from_columns(vec![
+        ("user", Column::from_i64(vec![10, 11, 13])),
+        ("name", Column::from_str(&["ada", "grace", "edsger"])),
+    ])?;
+
+    // Select: orders above 20.
+    let big = select(
+        &orders,
+        &rylon::ops::select::Predicate::cmp("amount", CmpOp::Gt, 20.0),
+    )?;
+    println!("orders over 20:\n{}", big.pretty(10));
+
+    // Join: attach user names (inner, sort algorithm — Cylon's default).
+    let joined = join(&big, &users, &JoinOptions::inner("user", "user"))?;
+    println!("joined:\n{}", joined.pretty(10));
+
+    // Project: drop the duplicate key column.
+    let slim = project(&joined, &["order_id", "name", "amount"])?;
+
+    // GroupBy: spend per user.
+    let spend = groupby(
+        &slim,
+        &GroupByOptions::new(
+            &["name"],
+            vec![Agg::sum("amount"), Agg::count("amount")],
+        ),
+    )?;
+    println!("spend per user:\n{}", spend.pretty(10));
+
+    // OrderBy + set ops round out Table I.
+    let sorted = orderby(&spend, &[SortKey::desc("sum_amount")])?;
+    println!("top spender: {}", sorted.row(0)[0].render());
+
+    let a = project(&orders, &["user"])?;
+    let b = project(&users, &["user"])?;
+    println!(
+        "distinct users in both: {} | only one side: {}",
+        intersect(&a, &b)?.num_rows(),
+        difference(&a, &b)?.num_rows(),
+    );
+    Ok(())
+}

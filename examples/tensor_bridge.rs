@@ -1,0 +1,90 @@
+//! The table→tensor bridge in isolation (paper Fig 1 / §IV "to_numpy"):
+//! load the AOT featurize artifact, run it on a table's numeric columns
+//! through PJRT, compare against the native implementation, and time
+//! both call paths.
+//!
+//!     make artifacts && cargo run --release --example tensor_bridge
+
+use rylon::bench_harness::{measure, BenchOpts};
+use rylon::io::datagen::{gen_table, DataGenSpec};
+use rylon::prelude::*;
+use rylon::runtime::{FeaturizeKernel, HashKernel, Runtime};
+
+fn main() -> Result<()> {
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("{e}\n(this example needs `make artifacts`)");
+            std::process::exit(1);
+        }
+    };
+    println!("artifacts loaded:");
+    for a in rt.artifacts() {
+        println!("  {:28} kind={}", a.name, a.kind);
+    }
+
+    // A table whose numeric columns become the feature matrix. The
+    // featurize artifact variant r4096×c4 serves exactly 4096 rows.
+    let rows = 4096usize;
+    let t = gen_table(&DataGenSpec {
+        rows,
+        payload_cols: 4,
+        key_dist: rylon::io::datagen::KeyDist::Sequential,
+        seed: 9,
+    })?;
+    let cols = ["d0", "d1", "d2", "d3"];
+    let mut x = vec![0f32; rows * cols.len()];
+    for (c, name) in cols.iter().enumerate() {
+        let v = t.column_by_name(name)?.f64_values();
+        for r in 0..rows {
+            x[r * cols.len() + c] = v[r] as f32;
+        }
+    }
+
+    // PJRT vs native numerics.
+    let aot = FeaturizeKernel::new(&rt);
+    assert!(aot.is_aot(rows, cols.len()), "expected AOT artifact");
+    let a = aot.run(&x, rows, cols.len())?;
+    let b = FeaturizeKernel::native().run(&x, rows, cols.len())?;
+    let max_abs: f32 = a
+        .features
+        .iter()
+        .zip(&b.features)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max);
+    println!(
+        "\nfeaturize {rows}×{}: max |pjrt − native| = {max_abs:e}",
+        cols.len()
+    );
+    assert!(max_abs < 1e-3);
+
+    // Hash kernel the same way (bit-exact check).
+    let keys = t.column_by_name("id")?.i64_values();
+    let hk = HashKernel::new(&rt, 16);
+    let batch = &keys[..keys.len().min(16384)];
+    let (pids_aot, hist_aot) = hk.run(batch)?;
+    let (pids_nat, hist_nat) = HashKernel::native(16).run(batch).unwrap();
+    assert_eq!(pids_aot, pids_nat, "hash pids must be bit-exact");
+    assert_eq!(hist_aot, hist_nat);
+    println!("hash_partition: AOT vs native bit-exact over {} keys ✓", batch.len());
+
+    // Timings for both call paths.
+    let opts = BenchOpts {
+        warmup_iters: 2,
+        samples: 5,
+    };
+    let t_aot = measure(opts, || {
+        std::hint::black_box(aot.run(&x, rows, cols.len()).unwrap());
+    });
+    let nat = FeaturizeKernel::native();
+    let t_nat = measure(opts, || {
+        std::hint::black_box(nat.run(&x, rows, cols.len()).unwrap());
+    });
+    println!(
+        "\nfeaturize timing: pjrt {:.3}ms vs native {:.3}ms per call \
+         (PJRT pays dispatch; both off the shuffle hot path)",
+        t_aot.median * 1e3,
+        t_nat.median * 1e3
+    );
+    Ok(())
+}

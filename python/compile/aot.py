@@ -1,0 +1,133 @@
+"""AOT: lower the L2 graphs to HLO **text** artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT ``lowered.compile()``/serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+the ``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the HLO text parser reassigns ids, so text round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Each artifact is compiled for a fixed shape; the Rust runtime keeps a
+registry (name → shape → path), pads batches up to the artifact shape and
+masks the padding.  A JSON manifest describes every artifact so the Rust
+side never hard-codes shapes.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+(``make artifacts`` from the repo root is a no-op when inputs are older
+than the manifest.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+# (n, nparts) variants for the shuffle kernel.  n is the shuffle batch
+# size the Rust side pads to; nparts covers the parallelism sweep used by
+# the figures (Fig 10: 1..160 ranks -> next-pow2 buckets).
+HASH_VARIANTS = [
+    (16384, 4),
+    (16384, 16),
+    (65536, 16),
+    (65536, 64),
+    (65536, 256),
+]
+HASH_BLOCK = 4096
+
+# (rows, cols) variants for the featurize bridge.
+FEATURIZE_VARIANTS = [
+    (4096, 4),
+    (16384, 8),
+]
+FEATURIZE_BLOCK_R = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_hash(n: int, nparts: int) -> str:
+    keys = jax.ShapeDtypeStruct((n,), jnp.uint64)
+    mask = jax.ShapeDtypeStruct((n,), jnp.float32)
+    fn = lambda k, m: model.hash_partition_model(  # noqa: E731
+        k, m, nparts=nparts, block=HASH_BLOCK)
+    return to_hlo_text(jax.jit(fn).lower(keys, mask))
+
+
+def lower_featurize(rows: int, cols: int) -> str:
+    x = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+    fn = lambda a: model.featurize_model(  # noqa: E731
+        a, block_r=FEATURIZE_BLOCK_R)
+    return to_hlo_text(jax.jit(fn).lower(x))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": []}
+
+    for n, p in HASH_VARIANTS:
+        name = f"hash_partition_n{n}_p{p}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_hash(n, p)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": name, "kind": "hash_partition", "file": f"{name}.hlo.txt",
+            "n": n, "nparts": p, "block": HASH_BLOCK,
+            "inputs": [
+                {"dtype": "u64", "shape": [n]},
+                {"dtype": "f32", "shape": [n]},
+            ],
+            "outputs": [
+                {"dtype": "s32", "shape": [n]},
+                {"dtype": "f32", "shape": [p]},
+            ],
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for rows, cols in FEATURIZE_VARIANTS:
+        name = f"featurize_r{rows}_c{cols}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_featurize(rows, cols)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": name, "kind": "featurize", "file": f"{name}.hlo.txt",
+            "rows": rows, "cols": cols, "block_r": FEATURIZE_BLOCK_R,
+            "inputs": [{"dtype": "f32", "shape": [rows, cols]}],
+            "outputs": [
+                {"dtype": "f32", "shape": [rows, cols]},
+                {"dtype": "f32", "shape": [cols]},
+                {"dtype": "f32", "shape": [cols]},
+            ],
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: column-standardising table→tensor featurizer.
+
+The paper's whole motivation (Fig 1, §I) is the handoff from data
+engineering to data analytics: after the relational pipeline, the table's
+numeric columns become the vector/matrix/tensor a DL framework consumes
+(PyCylon's ``to_numpy``).  This kernel performs the numeric half of that
+bridge: given an ``(R, C)`` block of f32 values and per-column
+``mean``/``inv_std`` vectors, it emits the standardised f32 feature block
+``(x - mean) * inv_std`` (optionally clipped) that is fed to the model.
+
+Shaping: rows are tiled in ``(BLOCK_R, C)`` blocks — C is the (small)
+feature width, padded to a lane-friendly multiple by the caller — and
+each grid step is pure element-wise VPU work with a broadcast over the
+column statistics.  The column statistics themselves are computed in the
+L2 JAX graph (a reduction XLA fuses well on its own).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 1024
+
+
+def _kernel(x_ref, mean_ref, inv_std_ref, o_ref, *, clip: float):
+    x = x_ref[...]
+    z = (x - mean_ref[...]) * inv_std_ref[...]
+    if clip > 0.0:
+        z = jnp.clip(z, -clip, clip)
+    o_ref[...] = z
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "clip"))
+def standardize(x: jax.Array, mean: jax.Array, inv_std: jax.Array, *,
+                block_r: int = DEFAULT_BLOCK_R, clip: float = 0.0):
+    """Standardise ``x`` (f32[R, C]) with per-column stats (f32[1, C]).
+
+    R must be a multiple of ``block_r``.  Returns f32[R, C].
+    """
+    r, c = x.shape
+    assert r % block_r == 0, f"rows={r} not a multiple of block_r={block_r}"
+    nblocks = r // block_r
+    return pl.pallas_call(
+        functools.partial(_kernel, clip=clip),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, mean, inv_std)
+
+
+def vmem_footprint_bytes(c: int, block_r: int = DEFAULT_BLOCK_R) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md §Perf)."""
+    return block_r * c * 4 * 2 + 2 * c * 4

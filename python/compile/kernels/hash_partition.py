@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: hash-partition assignment + per-block histogram.
+
+This is the compute hot-spot of Cylon's distributed relational operators
+(paper §III-C): every distributed join/union/intersect/difference first
+key-partitions each table with a hash function and shuffles rows to the
+rank that owns the hash bucket.  The kernel maps a block of int64 join
+keys to
+
+  * ``pids``  — the destination partition id of every key, and
+  * ``hist``  — a per-block partition histogram (so the caller can size
+    send buffers before materialising the shuffle).
+
+Hash function: **splitmix64** finalizer (Steele et al., the JDK
+SplittableRandom mixer).  It is bit-exact with the Rust implementation in
+``rust/src/compute/hash.rs`` — cross-checked by ``rust/tests/`` against
+the AOT artifact — so a row hashed in Python land and a row hashed on the
+Rust hot path always land in the same partition.
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): keys are tiled in
+``(BLOCK,)`` chunks via ``BlockSpec``; the histogram is computed as a
+one-hot ``(BLOCK, P)`` matrix summed over rows, which on a real TPU maps
+the reduction onto the MXU as a matmul with an all-ones vector.  The hash
+itself is element-wise VPU work.  On CPU we must run ``interpret=True``
+(Mosaic custom-calls cannot execute on the CPU PJRT plugin).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# splitmix64 finalizer constants (Steele et al. 2014).
+_SM64_M1 = 0xBF58476D1CE4E5B9
+_SM64_M2 = 0x94D049BB133111EB
+_GOLDEN = 0x9E3779B97F4A7C15
+
+DEFAULT_BLOCK = 4096
+
+
+def splitmix64(x: jax.Array) -> jax.Array:
+    """splitmix64 finalizer over uint64 lanes (bit-exact w/ Rust)."""
+    x = x.astype(jnp.uint64)
+    z = x + jnp.uint64(_GOLDEN)
+    z = (z ^ (z >> jnp.uint64(30))) * jnp.uint64(_SM64_M1)
+    z = (z ^ (z >> jnp.uint64(27))) * jnp.uint64(_SM64_M2)
+    return z ^ (z >> jnp.uint64(31))
+
+
+def _kernel(key_ref, mask_ref, pid_ref, hist_ref, *, nparts: int):
+    """One grid step: hash a block of keys, emit pids + partial histogram."""
+    keys = key_ref[...].astype(jnp.uint64)
+    h = splitmix64(keys)
+    pid = (h % jnp.uint64(nparts)).astype(jnp.int32)
+    # Mask padded lanes to partition -1 so they never count anywhere.
+    mask = mask_ref[...] > 0
+    pid_ref[...] = jnp.where(mask, pid, jnp.int32(-1))
+    # Histogram as a one-hot reduction: (BLOCK, P) @ ones -> (P,).  f32 is
+    # exact for counts < 2^24, far above any BLOCK we use.  On TPU this is
+    # the MXU-shaped part of the kernel.
+    onehot = (pid[:, None] == jnp.arange(nparts, dtype=jnp.int32)[None, :])
+    onehot = onehot & mask[:, None]
+    hist_ref[...] = jnp.sum(onehot.astype(jnp.float32), axis=0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("nparts", "block"))
+def hash_partition(keys: jax.Array, mask: jax.Array, *, nparts: int,
+                   block: int = DEFAULT_BLOCK):
+    """Partition-assign ``keys`` (uint64[n]) into ``nparts`` buckets.
+
+    ``mask`` is f32[n] with 1.0 on valid lanes, 0.0 on padding.  Returns
+    ``(pids int32[n], hist f32[nblocks, nparts])``; the caller sums the
+    block-partial histograms (done in L2, see model.py).
+
+    ``n`` must be a multiple of ``block``.
+    """
+    n = keys.shape[0]
+    assert n % block == 0, f"n={n} not a multiple of block={block}"
+    nblocks = n // block
+    return pl.pallas_call(
+        functools.partial(_kernel, nparts=nparts),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1, nparts), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, nparts), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(keys, mask)
+
+
+def vmem_footprint_bytes(nparts: int, block: int = DEFAULT_BLOCK) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md §Perf)."""
+    keys = block * 8
+    mask = block * 4
+    pids = block * 4
+    onehot = block * nparts * 4
+    hist = nparts * 4
+    return keys + mask + pids + onehot + hist

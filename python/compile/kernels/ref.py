@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package has a reference implementation here written
+with plain jnp ops and no Pallas.  ``python/tests`` asserts allclose
+(bit-exact for the integer hash) between kernel and oracle across a
+hypothesis-driven sweep of shapes, dtypes and partition counts; the Rust
+side additionally cross-checks its native implementations against the AOT
+artifacts built from the L2 graph.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_SM64_M1 = 0xBF58476D1CE4E5B9
+_SM64_M2 = 0x94D049BB133111EB
+_GOLDEN = 0x9E3779B97F4A7C15
+
+
+def splitmix64_ref(x: jax.Array) -> jax.Array:
+    """Reference splitmix64 finalizer (uint64 lanes)."""
+    x = x.astype(jnp.uint64)
+    z = x + jnp.uint64(_GOLDEN)
+    z = (z ^ (z >> jnp.uint64(30))) * jnp.uint64(_SM64_M1)
+    z = (z ^ (z >> jnp.uint64(27))) * jnp.uint64(_SM64_M2)
+    return z ^ (z >> jnp.uint64(31))
+
+
+def hash_partition_ref(keys: jax.Array, mask: jax.Array, nparts: int):
+    """Reference for kernels.hash_partition.hash_partition.
+
+    Returns (pids int32[n], hist f32[nparts]) — note the histogram is
+    already summed over blocks here (the L2 graph sums the kernel's
+    block-partials, so compare against model-level outputs).
+    """
+    h = splitmix64_ref(keys.astype(jnp.uint64))
+    pid = (h % jnp.uint64(nparts)).astype(jnp.int32)
+    valid = mask > 0
+    pid = jnp.where(valid, pid, jnp.int32(-1))
+    hist = jnp.zeros((nparts,), jnp.float32).at[
+        jnp.where(valid, pid, 0)
+    ].add(jnp.where(valid, 1.0, 0.0))
+    return pid, hist
+
+
+def standardize_ref(x: jax.Array, mean: jax.Array, inv_std: jax.Array,
+                    clip: float = 0.0) -> jax.Array:
+    """Reference for kernels.featurize.standardize."""
+    z = (x - mean) * inv_std
+    if clip > 0.0:
+        z = jnp.clip(z, -clip, clip)
+    return z.astype(jnp.float32)
+
+
+def featurize_ref(x: jax.Array, clip: float = 0.0, eps: float = 1e-6):
+    """Reference for model.featurize: column stats + standardise."""
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=0, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=0, keepdims=True)
+    inv_std = 1.0 / jnp.sqrt(var + eps)
+    return standardize_ref(x, mean, inv_std, clip=clip)

@@ -1,0 +1,58 @@
+"""L2: the JAX compute graphs AOT-lowered for the Rust hot path.
+
+Two graphs, both calling the L1 Pallas kernels:
+
+* ``hash_partition_model`` — the shuffle hot-spot of every distributed
+  relational operator (paper §III-C): uint64 join keys → destination
+  partition ids + a summed partition histogram.  The Rust coordinator
+  calls this through PJRT per shuffle batch (with a bit-exact native
+  fallback, cross-checked in tests).
+
+* ``featurize_model`` — the data-engineering→data-analytics bridge
+  (paper Fig 1, §IV "to_numpy"): an (R, C) f32 matrix of numeric table
+  columns → standardised feature tensor.  Column statistics are computed
+  here in plain jnp (XLA fuses the reduction); the element-wise
+  standardisation runs in the Pallas kernel so the whole bridge lowers
+  into one HLO module.
+
+Python runs only at build time (``make artifacts``); the lowered HLO text
+is the interchange format (see aot.py for why text, not protos).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import hash_partition as hp
+from compile.kernels import featurize as fz
+
+EPS = 1e-6
+
+
+@functools.partial(jax.jit, static_argnames=("nparts", "block"))
+def hash_partition_model(keys: jax.Array, mask: jax.Array, *, nparts: int,
+                         block: int = hp.DEFAULT_BLOCK):
+    """keys uint64[n], mask f32[n] -> (pids int32[n], hist f32[nparts])."""
+    pids, hist_blocks = hp.hash_partition(keys, mask, nparts=nparts,
+                                          block=block)
+    return pids, jnp.sum(hist_blocks, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "clip"))
+def featurize_model(x: jax.Array, *, block_r: int = fz.DEFAULT_BLOCK_R,
+                    clip: float = 0.0):
+    """x f32[R, C] -> (features f32[R, C], mean f32[C], inv_std f32[C]).
+
+    Returns the stats too: the ML consumer needs them to apply the same
+    transform to held-out data (and Rust asserts them against its native
+    computation).
+    """
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=0, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=0, keepdims=True)
+    inv_std = 1.0 / jnp.sqrt(var + EPS)
+    feats = fz.standardize(x, mean, inv_std, block_r=block_r, clip=clip)
+    return feats, mean[0], inv_std[0]

@@ -1,0 +1,155 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+hypothesis sweeps shapes/values/partition counts for the Pallas kernels
+and asserts (bit-exact for integer outputs, allclose for floats) against
+the pure-jnp oracles in kernels/ref.py.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import featurize as fz
+from compile.kernels import hash_partition as hp
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# splitmix64
+# ---------------------------------------------------------------------------
+
+def test_splitmix64_known_vectors():
+    # Golden values from the Rust implementation (compute/hash.rs), which
+    # itself matches the published splitmix64 reference.
+    xs = jnp.array([0, 1, 2, 0xDEADBEEF, 2**63, 2**64 - 1], dtype=jnp.uint64)
+    got = np.asarray(hp.splitmix64(xs), dtype=np.uint64)
+    want = np.asarray(ref.splitmix64_ref(xs), dtype=np.uint64)
+    np.testing.assert_array_equal(got, want)
+    # Spot-check one absolute value (splitmix64(0) is a published constant).
+    assert int(got[0]) == 0xE220A8397B1DCDAF
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2**64 - 1),
+                min_size=1, max_size=64))
+@settings(**SETTINGS)
+def test_splitmix64_matches_ref(vals):
+    xs = jnp.array(vals, dtype=jnp.uint64)
+    np.testing.assert_array_equal(
+        np.asarray(hp.splitmix64(xs)), np.asarray(ref.splitmix64_ref(xs)))
+
+
+def test_splitmix64_is_permutation_like():
+    # No collisions over a contiguous range (sanity for partition balance).
+    xs = jnp.arange(4096, dtype=jnp.uint64)
+    hs = np.asarray(hp.splitmix64(xs))
+    assert len(np.unique(hs)) == 4096
+
+
+# ---------------------------------------------------------------------------
+# hash_partition kernel
+# ---------------------------------------------------------------------------
+
+@given(
+    nblocks=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([128, 256]),
+    nparts=st.sampled_from([2, 3, 16, 64]),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    pad=st.integers(min_value=0, max_value=100),
+)
+@settings(**SETTINGS)
+def test_hash_partition_matches_ref(nblocks, block, nparts, seed, pad):
+    n = nblocks * block
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 2**63, size=n, dtype=np.uint64)
+    pad = min(pad, n)
+    mask = np.ones(n, np.float32)
+    if pad:
+        mask[n - pad:] = 0.0
+    kj = jnp.asarray(keys)
+    mj = jnp.asarray(mask)
+
+    pids, hist_blocks = hp.hash_partition(kj, mj, nparts=nparts, block=block)
+    hist = jnp.sum(hist_blocks, axis=0)
+    rp, rh = ref.hash_partition_ref(kj, mj, nparts)
+
+    np.testing.assert_array_equal(np.asarray(pids), np.asarray(rp))
+    np.testing.assert_allclose(np.asarray(hist), np.asarray(rh))
+    # Histogram accounts for exactly the valid lanes.
+    assert float(jnp.sum(hist)) == n - pad
+    # All valid pids within range; padded lanes are -1.
+    pn = np.asarray(pids)
+    assert ((pn[mask > 0] >= 0) & (pn[mask > 0] < nparts)).all()
+    if pad:
+        assert (pn[mask == 0] == -1).all()
+
+
+def test_hash_partition_balance():
+    # splitmix64 should spread a contiguous key range near-uniformly.
+    n, nparts = 65536, 16
+    keys = jnp.arange(n, dtype=jnp.uint64)
+    mask = jnp.ones(n, jnp.float32)
+    _, hist_blocks = hp.hash_partition(keys, mask, nparts=nparts, block=4096)
+    hist = np.asarray(jnp.sum(hist_blocks, axis=0))
+    expect = n / nparts
+    assert (np.abs(hist - expect) < 0.05 * expect).all(), hist
+
+
+def test_hash_partition_deterministic():
+    keys = jnp.arange(8192, dtype=jnp.uint64) * jnp.uint64(2654435761)
+    mask = jnp.ones(8192, jnp.float32)
+    a = hp.hash_partition(keys, mask, nparts=8, block=1024)
+    b = hp.hash_partition(keys, mask, nparts=8, block=2048)
+    # Block shape must not change results (only the partial-hist split).
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_allclose(np.asarray(jnp.sum(a[1], axis=0)),
+                               np.asarray(jnp.sum(b[1], axis=0)))
+
+
+def test_hash_partition_rejects_ragged():
+    keys = jnp.zeros(100, jnp.uint64)
+    mask = jnp.ones(100, jnp.float32)
+    with pytest.raises(AssertionError):
+        hp.hash_partition(keys, mask, nparts=4, block=64)
+
+
+# ---------------------------------------------------------------------------
+# featurize kernel
+# ---------------------------------------------------------------------------
+
+@given(
+    nblocks=st.integers(min_value=1, max_value=3),
+    block_r=st.sampled_from([64, 128]),
+    cols=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    clip=st.sampled_from([0.0, 3.0]),
+)
+@settings(**SETTINGS)
+def test_standardize_matches_ref(nblocks, block_r, cols, seed, clip):
+    r = nblocks * block_r
+    rng = np.random.default_rng(seed)
+    x = rng.normal(3.0, 10.0, size=(r, cols)).astype(np.float32)
+    mean = x.mean(axis=0, keepdims=True)
+    inv_std = (1.0 / np.sqrt(x.var(axis=0, keepdims=True) + 1e-6)).astype(
+        np.float32)
+    got = fz.standardize(jnp.asarray(x), jnp.asarray(mean),
+                         jnp.asarray(inv_std), block_r=block_r, clip=clip)
+    want = ref.standardize_ref(jnp.asarray(x), jnp.asarray(mean),
+                               jnp.asarray(inv_std), clip=clip)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_standardize_constant_column():
+    # A constant column standardises to ~0 (eps guards the 1/sqrt).
+    x = jnp.full((256, 3), 7.5, jnp.float32)
+    from compile import model
+    feats, mean, inv_std = model.featurize_model(x, block_r=64)
+    np.testing.assert_allclose(np.asarray(feats), 0.0, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(mean), 7.5, rtol=1e-6)

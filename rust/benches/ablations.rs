@@ -1,0 +1,56 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   * join algorithm (sort vs hash) on the local hot path;
+//!   * network latency α sweep — moves the Fig 10 plateau (§V-1's
+//!     communication-bound argument);
+//!   * shuffle chunk size — streaming vs buffered AllToAll
+//!     (backpressure knob);
+//!   * dist groupby strategy — shuffle-all vs local pre-aggregation.
+//!
+//! Env overrides: ABL_ROWS (default 500_000), ABL_SAMPLES.
+
+use rylon::bench_harness::{figures, BenchOpts};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let rows = env_usize("ABL_ROWS", 500_000);
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        samples: env_usize("ABL_SAMPLES", 3),
+    };
+
+    let r = figures::ablation_join_algo(&[rows / 10, rows / 2, rows], opts)
+        .expect("join_algo");
+    println!("{}", r.render());
+    r.save("ablation_join_algo").expect("save");
+
+    let r = figures::ablation_fabric(
+        rows,
+        &[1, 4, 16, 64, 160],
+        &[1e-6, 5e-6, 5e-5],
+        opts,
+    )
+    .expect("fabric");
+    println!("{}", r.render());
+    r.save("ablation_fabric").expect("save");
+
+    let r = figures::ablation_chunk(
+        rows,
+        16,
+        &[256, 4096, 65_536, 1 << 20],
+        opts,
+    )
+    .expect("chunk");
+    println!("{}", r.render());
+    r.save("ablation_chunk").expect("save");
+
+    let r = figures::ablation_groupby(rows, 16, 1000, opts)
+        .expect("groupby");
+    println!("{}", r.render());
+    r.save("ablation_groupby").expect("save");
+}

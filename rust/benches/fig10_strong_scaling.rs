@@ -1,0 +1,40 @@
+//! Fig 10 — strong scaling of the distributed inner join (paper §V-1).
+//! Fixed total work, parallelism 1→160, four engines, simulated
+//! makespan on the calibrated fabric (DESIGN.md §3).
+//!
+//! Env overrides: FIG10_ROWS (default 2_000_000 — paper used 200M per
+//! relation), FIG10_MAX_WORLD, FIG10_SAMPLES.
+
+use rylon::bench_harness::{figures, BenchOpts};
+use rylon::net::CostModel;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let rows = env_usize("FIG10_ROWS", 2_000_000);
+    let max_world = env_usize("FIG10_MAX_WORLD", 160);
+    let samples = env_usize("FIG10_SAMPLES", 3);
+    let worlds: Vec<usize> = [1usize, 2, 4, 8, 16, 32, 64, 128, 160]
+        .into_iter()
+        .filter(|&w| w <= max_world)
+        .collect();
+    let report = figures::fig10(
+        rows,
+        &worlds,
+        &["rylon", "spark_sim", "dask_sim", "modin_sim"],
+        BenchOpts {
+            warmup_iters: 1,
+            samples,
+        },
+        CostModel::default(),
+    )
+    .expect("fig10");
+    println!("{}", report.render());
+    report.save("fig10").expect("save");
+    println!("(series saved to bench_out/fig10.json)");
+}

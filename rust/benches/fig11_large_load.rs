@@ -1,0 +1,42 @@
+//! Fig 11 — larger loads at fixed parallelism (paper §V-2): 200 ranks,
+//! total rows swept upward; the paper reports the PySpark/Cylon time
+//! ratio growing from ~2.1× to ~4.5×. We sweep 1×..50× a base size and
+//! report the same ratio column.
+//!
+//! Env overrides: FIG11_BASE_ROWS (default 2_000_000; paper's sweep is
+//! 200M → 10B), FIG11_WORLD (default 200), FIG11_SAMPLES.
+
+use rylon::bench_harness::{figures, BenchOpts};
+use rylon::net::CostModel;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let base = env_usize("FIG11_BASE_ROWS", 500_000);
+    let world = env_usize("FIG11_WORLD", 200);
+    let samples = env_usize("FIG11_SAMPLES", 3);
+    let sweep: Vec<usize> =
+        [1usize, 5, 10, 25, 50].iter().map(|&m| base * m).collect();
+    let report = figures::fig11(
+        &sweep,
+        world,
+        BenchOpts {
+            warmup_iters: 1,
+            samples,
+        },
+        CostModel::default(),
+    )
+    .expect("fig11");
+    println!("{}", report.render());
+    // Print the headline ratio series explicitly.
+    println!("rows -> spark/rylon ratio:");
+    for s in report.samples.iter().filter(|s| !s.extra.is_empty()) {
+        println!("  {:>12}: {:.2}x", s.x, s.extra[0].1);
+    }
+    report.save("fig11").expect("save");
+}

@@ -1,0 +1,66 @@
+//! Fig 12 — binding overhead (paper §V-3): the identical inner join
+//! (sort) through the typed core API, the dynamic binding layer, and
+//! the PJRT-artifact hot-spot path. The paper's finding — a thin
+//! binding over a fast core costs ~nothing — reproduces as three
+//! near-coincident curves.
+//!
+//! Env overrides: FIG12_ROWS (default 2_000_000), FIG12_MAX_WORLD,
+//! FIG12_SAMPLES, FIG12_ARTIFACTS (default "artifacts").
+
+use rylon::bench_harness::{figures, BenchOpts};
+use rylon::runtime::Runtime;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let rows = env_usize("FIG12_ROWS", 2_000_000);
+    let max_world = env_usize("FIG12_MAX_WORLD", 160);
+    let samples = env_usize("FIG12_SAMPLES", 3);
+    let artifacts = std::env::var("FIG12_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let rt = Runtime::open(&artifacts).ok();
+    if rt.is_none() {
+        eprintln!(
+            "note: no artifacts at '{artifacts}' — pjrt arm falls back to \
+             the native kernel (run `make artifacts`)"
+        );
+    }
+    let workers: Vec<usize> = [1usize, 2, 4, 8, 16, 32, 64, 128, 160]
+        .into_iter()
+        .filter(|&w| w <= max_world)
+        .collect();
+    let report = figures::fig12(
+        rows,
+        &workers,
+        rt.as_ref(),
+        BenchOpts {
+            warmup_iters: 1,
+            samples,
+        },
+    )
+    .expect("fig12");
+    println!("{}", report.render());
+    // Overhead summary: binding vs core per worker count.
+    println!("binding overhead vs core:");
+    for &w in &workers {
+        let get = |label: &str| {
+            report
+                .samples
+                .iter()
+                .find(|s| s.label == label && s.x == w as f64)
+                .map(|s| s.seconds)
+        };
+        if let (Some(core), Some(binding)) = (get("core"), get("binding")) {
+            println!(
+                "  w={w:>4}: {:+.2}%",
+                (binding / core - 1.0) * 100.0
+            );
+        }
+    }
+    report.save("fig12").expect("save");
+}

@@ -1,0 +1,116 @@
+//! Per-operator microbenchmarks: every Table I operator on the columnar
+//! engine vs the boxed-row engine — the single-node version of the
+//! paper's "high performance compute kernels" claim (§II-B/§III).
+//!
+//! Env overrides: LOCAL_ROWS (default 1_000_000), LOCAL_SAMPLES.
+
+use rylon::baselines::row_engine::RowTable;
+use rylon::bench_harness::{measure, BenchOpts, Report};
+use rylon::io::datagen::{gen_table, DataGenSpec};
+use rylon::ops::groupby::{Agg, GroupByOptions};
+use rylon::ops::join::{JoinAlgo, JoinOptions};
+use rylon::ops::orderby::SortKey;
+use rylon::ops::select::{CmpOp, Predicate};
+use rylon::ops::{
+    difference, groupby, intersect, join, orderby, project, select, union,
+};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let rows = env_usize("LOCAL_ROWS", 1_000_000);
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        samples: env_usize("LOCAL_SAMPLES", 3),
+    };
+    let a = gen_table(&DataGenSpec::paper_scaling(rows, 1)).unwrap();
+    let b = gen_table(&DataGenSpec::paper_scaling(rows, 2)).unwrap();
+    let mut report = Report::new(&format!(
+        "Local operators, {rows} rows (columnar vs boxed-row where applicable)"
+    ));
+
+    // -- Table I operators, columnar engine. -----------------------------
+    let pred = Predicate::cmp("d0", CmpOp::Gt, 0.0);
+    let s = measure(opts, || {
+        std::hint::black_box(select(&a, &pred).unwrap().num_rows());
+    });
+    report.add("select", rows as f64, s.median);
+
+    let s = measure(opts, || {
+        std::hint::black_box(
+            project(&a, &["id", "d1"]).unwrap().num_columns(),
+        );
+    });
+    report.add("project", rows as f64, s.median);
+
+    for (name, algo) in [("join_sort", JoinAlgo::Sort), ("join_hash", JoinAlgo::Hash)] {
+        let jo = JoinOptions::inner("id", "id").with_algo(algo);
+        let s = measure(opts, || {
+            std::hint::black_box(join(&a, &b, &jo).unwrap().num_rows());
+        });
+        report.add(name, rows as f64, s.median);
+    }
+
+    let s = measure(opts, || {
+        std::hint::black_box(union(&a, &b).unwrap().num_rows());
+    });
+    report.add("union", rows as f64, s.median);
+    let s = measure(opts, || {
+        std::hint::black_box(intersect(&a, &b).unwrap().num_rows());
+    });
+    report.add("intersect", rows as f64, s.median);
+    let s = measure(opts, || {
+        std::hint::black_box(difference(&a, &b).unwrap().num_rows());
+    });
+    report.add("difference", rows as f64, s.median);
+
+    let g = GroupByOptions::new(&["id"], vec![Agg::sum("d1")]);
+    let s = measure(opts, || {
+        std::hint::black_box(groupby(&a, &g).unwrap().num_rows());
+    });
+    report.add("groupby", rows as f64, s.median);
+
+    let s = measure(opts, || {
+        std::hint::black_box(
+            orderby(&a, &[SortKey::asc("id")]).unwrap().num_rows(),
+        );
+    });
+    report.add("orderby", rows as f64, s.median);
+
+    // -- Boxed-row comparison on the join (the interpreted-engine cost).
+    let small_rows = (rows / 10).max(1);
+    let sa = gen_table(&DataGenSpec::paper_scaling(small_rows, 1)).unwrap();
+    let sb = gen_table(&DataGenSpec::paper_scaling(small_rows, 2)).unwrap();
+    let jo = JoinOptions::inner("id", "id").with_algo(JoinAlgo::Sort);
+    let s = measure(opts, || {
+        std::hint::black_box(join(&sa, &sb, &jo).unwrap().num_rows());
+    });
+    report.add("join_columnar_small", small_rows as f64, s.median);
+    let ra = RowTable::from_table(&sa);
+    let rb = RowTable::from_table(&sb);
+    let s = measure(opts, || {
+        std::hint::black_box(ra.inner_join(&rb, "id", "id").unwrap().len());
+    });
+    report.add("join_boxedrow_small", small_rows as f64, s.median);
+
+    println!("{}", report.render());
+    // Speed ratio headline.
+    let get = |l: &str| {
+        report
+            .samples
+            .iter()
+            .find(|s| s.label == l)
+            .map(|s| s.seconds)
+            .unwrap_or(f64::NAN)
+    };
+    println!(
+        "columnar vs boxed-row join speedup: {:.1}x",
+        get("join_boxedrow_small") / get("join_columnar_small")
+    );
+    report.save("local_ops").expect("save");
+}

@@ -1,0 +1,23 @@
+//! Baseline mechanism simulators (DESIGN.md §4) — the comparators of the
+//! paper's Fig 10/11: PySpark, Dask-distributed and Modin/Ray, rebuilt
+//! as *executed mechanisms* on the same table substrate so the measured
+//! differences come from the mechanisms the paper blames, not fudge
+//! factors:
+//!
+//! * [`row_engine`] — boxed `Vec<Value>` rows with enum-dispatched
+//!   dynamic typing: the stand-in for Python-level compute kernels
+//!   (same asymptotics as Pandas-on-objects, interpreted-style constant
+//!   factor).
+//! * [`serde_wall`] — a pickle-like tagged row codec: the
+//!   JVM↔Python / worker↔object-store serialization boundary, executed
+//!   for real on every crossing.
+//! * [`engines`] — the four [`engines::JoinEngine`]s (rylon, spark_sim,
+//!   dask_sim, modin_sim) the figure benches sweep.
+
+pub mod row_engine;
+pub mod serde_wall;
+pub mod engines;
+
+pub use engines::{
+    DaskSimEngine, JoinEngine, ModinSimEngine, RylonEngine, SparkSimEngine,
+};

@@ -1,0 +1,407 @@
+//! Drivers that regenerate the paper's evaluation figures (§V). Shared
+//! by the `cargo bench` targets and the `rylon bench` CLI subcommand so
+//! both produce identical tables.
+//!
+//! All scaling runs use the **sim fabric** (DESIGN.md §3): per-rank
+//! compute is measured thread-CPU work, communication is the calibrated
+//! α-β model, and the reported time is the BSP makespan. On the paper's
+//! own testbed these would be wall-clock MPI runs; on this single-core
+//! box the simulator is what preserves the scaling *shape*.
+
+use crate::baselines::{
+    DaskSimEngine, JoinEngine, ModinSimEngine, RylonEngine, SparkSimEngine,
+};
+use crate::bench_harness::{measure_with, BenchOpts, Report};
+use crate::binding::{kwargs, DynTable};
+use crate::dist::{Cluster, DistConfig};
+use crate::error::Result;
+use crate::io::datagen::{gen_partition, gen_table, DataGenSpec};
+use crate::net::CostModel;
+use crate::ops::join::{join, JoinAlgo, JoinOptions};
+use crate::runtime::{HashKernel, Runtime};
+
+/// Engine registry for the comparison figures.
+pub fn engine_by_name(name: &str) -> Option<Box<dyn JoinEngine>> {
+    match name {
+        "rylon" => Some(Box::new(RylonEngine)),
+        "spark_sim" => Some(Box::new(SparkSimEngine)),
+        "dask_sim" => Some(Box::new(DaskSimEngine)),
+        "modin_sim" => Some(Box::new(ModinSimEngine)),
+        _ => None,
+    }
+}
+
+/// One simulated distributed join: returns the makespan in seconds.
+pub fn sim_join_makespan(
+    engine: &dyn JoinEngine,
+    total_rows: usize,
+    world: usize,
+    cost: CostModel,
+    chunk_rows: usize,
+) -> Result<f64> {
+    let mut cfg = DistConfig::sim(world, cost);
+    cfg.shuffle_chunk_rows = chunk_rows;
+    let cluster = Cluster::new(cfg)?;
+    let opts = JoinOptions::inner("id", "id");
+    cluster.run(|ctx| {
+        let l = gen_partition(
+            &DataGenSpec::paper_scaling(total_rows, 0xA),
+            ctx.rank,
+            ctx.size,
+        )?;
+        let r = gen_partition(
+            &DataGenSpec::paper_scaling(total_rows, 0xB),
+            ctx.rank,
+            ctx.size,
+        )?;
+        engine.dist_join(ctx, &l, &r, &opts)
+    })?;
+    Ok(cluster.makespan().unwrap_or(0.0))
+}
+
+/// Fig 10 — strong scaling of the distributed inner join: fixed total
+/// work (paper: 200M rows/relation), parallelism swept 1→160, four
+/// engines.
+pub fn fig10(
+    total_rows: usize,
+    worlds: &[usize],
+    engines: &[&str],
+    opts: BenchOpts,
+    cost: CostModel,
+) -> Result<Report> {
+    let mut report = Report::new(&format!(
+        "Fig 10: strong scaling, inner join, {total_rows} rows/relation (simulated makespan)"
+    ));
+    for name in engines {
+        let engine = engine_by_name(name)
+            .ok_or_else(|| crate::RylonError::invalid(format!("engine {name}")))?;
+        for &w in worlds {
+            let stats = measure_with(opts, || {
+                sim_join_makespan(engine.as_ref(), total_rows, w, cost, 1 << 16)
+                    .expect("sim join")
+            });
+            report.add_with(
+                name,
+                w as f64,
+                stats.median,
+                vec![("min".to_string(), stats.min)],
+            );
+        }
+    }
+    Ok(report)
+}
+
+/// Fig 11 — larger loads: fixed parallelism (paper: 200), total work
+/// swept 200M → 10B rows, rylon vs spark_sim; the paper's claim is the
+/// time *ratio* grows from ~2.1× to ~4.5×.
+pub fn fig11(
+    rows_sweep: &[usize],
+    world: usize,
+    opts: BenchOpts,
+    cost: CostModel,
+) -> Result<Report> {
+    let mut report = Report::new(&format!(
+        "Fig 11: rylon vs spark_sim, {world} ranks (simulated makespan)"
+    ));
+    for &rows in rows_sweep {
+        let ry = measure_with(opts, || {
+            sim_join_makespan(&RylonEngine, rows, world, cost, 1 << 16)
+                .expect("rylon join")
+        });
+        let sp = measure_with(opts, || {
+            sim_join_makespan(&SparkSimEngine, rows, world, cost, 1 << 16)
+                .expect("spark join")
+        });
+        let ratio = sp.median / ry.median.max(1e-12);
+        report.add_with(
+            "rylon",
+            rows as f64,
+            ry.median,
+            vec![("ratio_spark_over_rylon".to_string(), ratio)],
+        );
+        report.add("spark_sim", rows as f64, sp.median);
+    }
+    Ok(report)
+}
+
+/// Fig 12 — binding overhead: the identical inner join (sort) driven
+/// through (a) the typed core API, (b) the dynamic binding layer, and
+/// (c) with the hash hot-spot crossing into the PJRT artifact. The
+/// paper's claim: the thin-binding curves coincide.
+///
+/// `workers` scales the per-worker slice of the fixed total (the paper
+/// plots 200M rows at 1..160 workers; per-worker time is what each arm
+/// measures).
+pub fn fig12(
+    total_rows: usize,
+    workers: &[usize],
+    runtime: Option<&Runtime>,
+    opts: BenchOpts,
+) -> Result<Report> {
+    let mut report = Report::new(&format!(
+        "Fig 12: binding overhead, inner join (sort), {total_rows} rows total"
+    ));
+    for &w in workers {
+        let rows = (total_rows / w).max(1);
+        let left = gen_table(&DataGenSpec::paper_scaling(rows, 0xC))?;
+        let right = gen_table(&DataGenSpec::paper_scaling(rows, 0xD))?;
+        let jopts = JoinOptions::inner("id", "id").with_algo(JoinAlgo::Sort);
+
+        // (a) typed core API.
+        let core = measure_with(opts, || {
+            let t = std::time::Instant::now();
+            let out = join(&left, &right, &jopts).expect("join");
+            std::hint::black_box(out.num_rows());
+            t.elapsed().as_secs_f64()
+        });
+        report.add("core", w as f64, core.median);
+
+        // (b) dynamic binding layer (string dispatch + kwarg marshal).
+        let dl = DynTable::wrap(left.clone());
+        let dr = DynTable::wrap(right.clone());
+        let binding = measure_with(opts, || {
+            let t = std::time::Instant::now();
+            let out = dl
+                .call2(
+                    "join",
+                    &dr,
+                    &kwargs(&[
+                        ("on", "id".into()),
+                        ("how", "inner".into()),
+                        ("algorithm", "sort".into()),
+                    ]),
+                )
+                .expect("dyn join");
+            std::hint::black_box(out.table().num_rows());
+            t.elapsed().as_secs_f64()
+        });
+        report.add("binding", w as f64, binding.median);
+
+        // (c) PJRT artifact path for the partition hot-spot + core join
+        // (the "foreign runtime" arm; native-hash fallback if artifacts
+        // are absent, flagged in the label).
+        let label = match runtime {
+            Some(_) => "pjrt",
+            None => "pjrt(native-fallback)",
+        };
+        let keys = left.column_by_name("id")?.i64_values().to_vec();
+        let pjrt = measure_with(opts, || {
+            let t = std::time::Instant::now();
+            let nparts = 16usize;
+            let (pids, hist) = match runtime {
+                Some(rt) => {
+                    let k = HashKernel::new(rt, nparts);
+                    k.run(&keys).expect("hash kernel")
+                }
+                None => HashKernel::native(nparts).run(&keys).expect("hash"),
+            };
+            std::hint::black_box((pids.len(), hist.len()));
+            let out = join(&left, &right, &jopts).expect("join");
+            std::hint::black_box(out.num_rows());
+            t.elapsed().as_secs_f64()
+        });
+        report.add(label, w as f64, pjrt.median);
+    }
+    Ok(report)
+}
+
+/// Ablation: hash vs sort join algorithms on the local path.
+pub fn ablation_join_algo(rows_sweep: &[usize], opts: BenchOpts) -> Result<Report> {
+    let mut report =
+        Report::new("Ablation: local join algorithm (hash vs sort)");
+    for &rows in rows_sweep {
+        let left = gen_table(&DataGenSpec::paper_scaling(rows, 1))?;
+        let right = gen_table(&DataGenSpec::paper_scaling(rows, 2))?;
+        for (name, algo) in
+            [("sort", JoinAlgo::Sort), ("hash", JoinAlgo::Hash)]
+        {
+            let jopts = JoinOptions::inner("id", "id").with_algo(algo);
+            let stats = measure_with(opts, || {
+                let t = std::time::Instant::now();
+                let out = join(&left, &right, &jopts).expect("join");
+                std::hint::black_box(out.num_rows());
+                t.elapsed().as_secs_f64()
+            });
+            report.add(name, rows as f64, stats.median);
+        }
+    }
+    Ok(report)
+}
+
+/// Ablation: fabric cost-model sweep — demonstrates the comm-bound
+/// plateau moving with α (the paper's §V-1 explanation).
+pub fn ablation_fabric(
+    total_rows: usize,
+    worlds: &[usize],
+    alphas: &[f64],
+    opts: BenchOpts,
+) -> Result<Report> {
+    let mut report = Report::new(
+        "Ablation: scaling plateau vs network latency α (rylon join)",
+    );
+    for &alpha in alphas {
+        let cost = CostModel {
+            alpha,
+            ..CostModel::default()
+        };
+        let label = format!("alpha={alpha:.0e}");
+        for &w in worlds {
+            let stats = measure_with(opts, || {
+                sim_join_makespan(&RylonEngine, total_rows, w, cost, 1 << 16)
+                    .expect("sim join")
+            });
+            report.add(&label, w as f64, stats.median);
+        }
+    }
+    Ok(report)
+}
+
+/// Ablation: shuffle chunk size (streaming vs buffered AllToAll).
+pub fn ablation_chunk(
+    total_rows: usize,
+    world: usize,
+    chunks: &[usize],
+    opts: BenchOpts,
+) -> Result<Report> {
+    let mut report =
+        Report::new("Ablation: shuffle chunk rows (backpressure knob)");
+    for &chunk in chunks {
+        let stats = measure_with(opts, || {
+            sim_join_makespan(
+                &RylonEngine,
+                total_rows,
+                world,
+                CostModel::default(),
+                chunk,
+            )
+            .expect("sim join")
+        });
+        report.add("rylon", chunk as f64, stats.median);
+    }
+    Ok(report)
+}
+
+/// Ablation: dist_groupby shuffle-then-aggregate vs local pre-aggregate.
+pub fn ablation_groupby(
+    total_rows: usize,
+    world: usize,
+    ngroups: u64,
+    opts: BenchOpts,
+) -> Result<Report> {
+    use crate::dist::{dist_groupby, dist_groupby_preagg};
+    use crate::ops::groupby::{Agg, GroupByOptions};
+    let mut report = Report::new(&format!(
+        "Ablation: dist groupby strategies, {ngroups} groups, {world} ranks"
+    ));
+    for (name, preagg) in [("shuffle-all", false), ("pre-agg", true)] {
+        let stats = measure_with(opts, || {
+            let cluster =
+                Cluster::new(DistConfig::sim(world, CostModel::default()))
+                    .expect("cluster");
+            cluster
+                .run(|ctx| {
+                    let part = gen_partition(
+                        &DataGenSpec {
+                            rows: total_rows,
+                            payload_cols: 1,
+                            key_dist:
+                                crate::io::datagen::KeyDist::Uniform {
+                                    domain: ngroups,
+                                },
+                            seed: 5,
+                        },
+                        ctx.rank,
+                        ctx.size,
+                    )?;
+                    let gopts = GroupByOptions::new(
+                        &["id"],
+                        vec![Agg::sum("d0"), Agg::count("d0")],
+                    );
+                    let out = if preagg {
+                        dist_groupby_preagg(ctx, &part, &gopts)?
+                    } else {
+                        dist_groupby(ctx, &part, &gopts)?
+                    };
+                    Ok(out.num_rows())
+                })
+                .expect("groupby");
+            cluster.makespan().unwrap_or(0.0)
+        });
+        report.add(name, ngroups as f64, stats.median);
+    }
+    Ok(report)
+}
+
+/// Sanity helper shared by tests: a quick correctness probe that the
+/// figure workloads produce non-trivial joins.
+pub fn probe_join_rows(total_rows: usize) -> Result<usize> {
+    let l = gen_table(&DataGenSpec::paper_scaling(total_rows, 0xA))?;
+    let r = gen_table(&DataGenSpec::paper_scaling(total_rows, 0xB))?;
+    Ok(join(&l, &r, &JoinOptions::inner("id", "id"))?.num_rows())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FAST: BenchOpts = BenchOpts {
+        warmup_iters: 0,
+        samples: 1,
+    };
+
+    #[test]
+    fn fig10_small_produces_all_series() {
+        let r = fig10(
+            2000,
+            &[1, 2, 4],
+            &["rylon", "spark_sim"],
+            FAST,
+            CostModel::default(),
+        )
+        .unwrap();
+        assert_eq!(r.samples.len(), 6);
+        assert!(r.render().contains("rylon"));
+    }
+
+    #[test]
+    fn fig11_reports_ratio() {
+        let r = fig11(&[1000, 4000], 2, FAST, CostModel::default()).unwrap();
+        let with_ratio = r
+            .samples
+            .iter()
+            .find(|s| !s.extra.is_empty())
+            .expect("ratio sample");
+        assert!(with_ratio.extra[0].1 > 0.0);
+    }
+
+    #[test]
+    fn fig12_three_arms() {
+        let r = fig12(4000, &[1, 2], None, FAST).unwrap();
+        let labels: std::collections::HashSet<_> =
+            r.samples.iter().map(|s| s.label.as_str()).collect();
+        assert!(labels.contains("core"));
+        assert!(labels.contains("binding"));
+        assert!(labels.len() == 3);
+    }
+
+    #[test]
+    fn ablations_run() {
+        assert!(ablation_join_algo(&[2000], FAST).unwrap().samples.len() == 2);
+        assert!(
+            ablation_chunk(2000, 2, &[64, 65536], FAST)
+                .unwrap()
+                .samples
+                .len()
+                == 2
+        );
+        assert!(
+            ablation_groupby(2000, 2, 50, FAST).unwrap().samples.len() == 2
+        );
+    }
+
+    #[test]
+    fn probe_join_is_nontrivial() {
+        let n = probe_join_rows(4000).unwrap();
+        assert!(n > 500, "join too small: {n}");
+    }
+}

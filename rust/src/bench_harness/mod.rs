@@ -1,0 +1,245 @@
+//! Criterion-lite benchmark harness (criterion is not in the offline
+//! registry): warmup + N samples, median/mean/p95, paper-style table
+//! printer and JSON export. Every `rust/benches/*` target uses this.
+
+use std::time::Instant;
+
+use crate::util::fmt::human_duration;
+use crate::util::json::Json;
+
+/// One measured series point.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub label: String,
+    /// x-axis value (parallelism, rows, …).
+    pub x: f64,
+    /// seconds per iteration (median unless noted).
+    pub seconds: f64,
+    /// extra metadata columns (e.g. "speedup", "bytes").
+    pub extra: Vec<(String, f64)>,
+}
+
+/// Measurement options.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub samples: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup_iters: 1,
+            samples: 3,
+        }
+    }
+}
+
+/// Statistics over the collected samples.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Run `f` under warmup + sampling, timing each call with the wall
+/// clock; the closure may instead return its own metric (e.g. the sim
+/// fabric's makespan) — see [`measure_with`].
+pub fn measure<F: FnMut()>(opts: BenchOpts, mut f: F) -> Stats {
+    measure_with(opts, move || {
+        let t = Instant::now();
+        f();
+        t.elapsed().as_secs_f64()
+    })
+}
+
+/// Like [`measure`], but the closure reports its own seconds (used for
+/// simulated-makespan benches where wall time is meaningless).
+pub fn measure_with<F: FnMut() -> f64>(opts: BenchOpts, mut f: F) -> Stats {
+    for _ in 0..opts.warmup_iters {
+        let _ = f();
+    }
+    let mut xs: Vec<f64> = (0..opts.samples.max(1)).map(|_| f()).collect();
+    xs.sort_by(|a, b| a.total_cmp(b));
+    let n = xs.len();
+    Stats {
+        median: xs[n / 2],
+        mean: xs.iter().sum::<f64>() / n as f64,
+        min: xs[0],
+        max: xs[n - 1],
+    }
+}
+
+/// Collects series and renders the paper-style output.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub title: String,
+    pub samples: Vec<Sample>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Report {
+        Report {
+            title: title.to_string(),
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, label: &str, x: f64, seconds: f64) {
+        self.samples.push(Sample {
+            label: label.to_string(),
+            x,
+            seconds,
+            extra: Vec::new(),
+        });
+    }
+
+    pub fn add_with(
+        &mut self,
+        label: &str,
+        x: f64,
+        seconds: f64,
+        extra: Vec<(String, f64)>,
+    ) {
+        self.samples.push(Sample {
+            label: label.to_string(),
+            x,
+            seconds,
+            extra,
+        });
+    }
+
+    /// Distinct series labels in first-seen order.
+    fn labels(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for s in &self.samples {
+            if !out.contains(&s.label) {
+                out.push(s.label.clone());
+            }
+        }
+        out
+    }
+
+    /// Render an aligned grid: rows = x values, columns = series.
+    pub fn render(&self) -> String {
+        let labels = self.labels();
+        let mut xs: Vec<f64> = self.samples.iter().map(|s| s.x).collect();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        xs.dedup();
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&format!("{:>12}", "x"));
+        for l in &labels {
+            out.push_str(&format!("  {l:>14}"));
+        }
+        out.push('\n');
+        for &x in &xs {
+            out.push_str(&format!("{x:>12}"));
+            for l in &labels {
+                let v = self
+                    .samples
+                    .iter()
+                    .find(|s| s.x == x && &s.label == l)
+                    .map(|s| s.seconds);
+                match v {
+                    Some(v) => out.push_str(&format!(
+                        "  {:>14}",
+                        human_duration(std::time::Duration::from_secs_f64(
+                            v.max(0.0)
+                        ))
+                    )),
+                    None => out.push_str(&format!("  {:>14}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "samples",
+                Json::Arr(
+                    self.samples
+                        .iter()
+                        .map(|s| {
+                            let mut pairs = vec![
+                                ("label", Json::str(s.label.clone())),
+                                ("x", Json::num(s.x)),
+                                ("seconds", Json::num(s.seconds)),
+                            ];
+                            for (k, v) in &s.extra {
+                                pairs.push((k.as_str(), Json::num(*v)));
+                            }
+                            Json::obj(pairs)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the JSON next to the text output (under `bench_out/`).
+    pub fn save(&self, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all("bench_out")?;
+        std::fs::write(
+            format!("bench_out/{name}.json"),
+            self.to_json().to_string(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_sane_stats() {
+        let stats = measure(
+            BenchOpts {
+                warmup_iters: 1,
+                samples: 5,
+            },
+            || {
+                std::hint::black_box((0..10_000).sum::<u64>());
+            },
+        );
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+        assert!(stats.mean > 0.0);
+    }
+
+    #[test]
+    fn measure_with_custom_metric() {
+        let mut i = 0.0;
+        let stats = measure_with(
+            BenchOpts {
+                warmup_iters: 0,
+                samples: 3,
+            },
+            || {
+                i += 1.0;
+                i
+            },
+        );
+        assert_eq!(stats.median, 2.0);
+        assert_eq!(stats.max, 3.0);
+    }
+
+    #[test]
+    fn report_renders_grid_and_json() {
+        let mut r = Report::new("fig-test");
+        r.add("rylon", 1.0, 0.5);
+        r.add("spark", 1.0, 1.0);
+        r.add("rylon", 2.0, 0.25);
+        let text = r.render();
+        assert!(text.contains("fig-test"));
+        assert!(text.contains("rylon"));
+        assert!(text.contains("spark"));
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"seconds\""));
+    }
+}
+pub mod figures;

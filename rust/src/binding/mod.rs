@@ -1,0 +1,279 @@
+//! The dynamic "binding" layer — arm (b) of the Fig 12 reproduction.
+//!
+//! PyCylon's thesis (§IV, Fig 12) is that a *thin* dynamic binding over
+//! a fast core costs almost nothing, because the per-call overhead
+//! (string dispatch, boxed argument marshalling, option parsing) is
+//! amortised over the whole columnar operation — unlike per-row
+//! boundaries. This module is that thin layer for Rust: a string-keyed,
+//! boxed-argument API with PyCylon's method surface. The Fig 12 bench
+//! drives the identical join through (a) the typed core API, (b) this
+//! layer, and (c) the PJRT artifact path, and measures the deltas.
+
+use std::collections::HashMap;
+
+use crate::error::{Result, RylonError};
+use crate::ops;
+use crate::ops::groupby::{Agg, GroupByOptions};
+use crate::ops::join::{JoinAlgo, JoinOptions, JoinType};
+use crate::ops::orderby::SortKey;
+use crate::ops::select::Predicate;
+use crate::table::Table;
+use crate::types::Value;
+
+/// Boxed call arguments: string → value, PyCylon-kwargs style.
+pub type Kwargs = HashMap<String, Value>;
+
+/// Build kwargs tersely.
+pub fn kwargs(pairs: &[(&str, Value)]) -> Kwargs {
+    pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.clone()))
+        .collect()
+}
+
+/// A dynamically-dispatched table handle (the "DataTable" of §IV).
+#[derive(Debug, Clone)]
+pub struct DynTable {
+    inner: Table,
+}
+
+impl DynTable {
+    pub fn wrap(table: Table) -> DynTable {
+        DynTable { inner: table }
+    }
+
+    pub fn unwrap(self) -> Table {
+        self.inner
+    }
+
+    pub fn table(&self) -> &Table {
+        &self.inner
+    }
+
+    fn str_arg<'k>(kw: &'k Kwargs, key: &str) -> Result<&'k str> {
+        kw.get(key)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| {
+                RylonError::invalid(format!("missing/invalid kwarg '{key}'"))
+            })
+    }
+
+    /// One-table methods: `select`, `project`, `orderby`, `distinct`,
+    /// `groupby`. Marshals every argument from boxed values, then calls
+    /// the typed core.
+    pub fn call(&self, method: &str, kw: &Kwargs) -> Result<DynTable> {
+        let out = match method {
+            "select" => {
+                let expr = Self::str_arg(kw, "expr")?;
+                ops::select(&self.inner, &Predicate::parse(expr)?)?
+            }
+            "project" => {
+                let cols = Self::str_arg(kw, "columns")?;
+                let names: Vec<&str> =
+                    cols.split(',').map(|s| s.trim()).collect();
+                ops::project(&self.inner, &names)?
+            }
+            "orderby" => {
+                let keyspec = Self::str_arg(kw, "by")?;
+                let keys: Vec<SortKey> = keyspec
+                    .split(',')
+                    .map(|s| {
+                        let s = s.trim();
+                        match s.strip_prefix('-') {
+                            Some(col) => SortKey::desc(col),
+                            None => SortKey::asc(s),
+                        }
+                    })
+                    .collect();
+                ops::orderby(&self.inner, &keys)?
+            }
+            "distinct" => ops::distinct(&self.inner),
+            "groupby" => {
+                let keyspec = Self::str_arg(kw, "by")?;
+                let aggspec = Self::str_arg(kw, "agg")?;
+                let keys: Vec<&str> =
+                    keyspec.split(',').map(|s| s.trim()).collect();
+                let mut aggs = Vec::new();
+                for a in aggspec.split(',') {
+                    // "sum(v)" form.
+                    let a = a.trim();
+                    let (kind, col) = a
+                        .split_once('(')
+                        .and_then(|(k, rest)| {
+                            rest.strip_suffix(')').map(|c| (k, c))
+                        })
+                        .ok_or_else(|| {
+                            RylonError::invalid(format!(
+                                "bad agg spec '{a}' (want kind(col))"
+                            ))
+                        })?;
+                    let kind =
+                        crate::compute::aggregate::AggKind::parse(kind)
+                            .ok_or_else(|| {
+                                RylonError::invalid(format!(
+                                    "unknown aggregate '{kind}'"
+                                ))
+                            })?;
+                    aggs.push(Agg::new(kind, col));
+                }
+                ops::groupby(
+                    &self.inner,
+                    &GroupByOptions {
+                        keys: keys.iter().map(|s| s.to_string()).collect(),
+                        aggs,
+                    },
+                )?
+            }
+            other => {
+                return Err(RylonError::invalid(format!(
+                    "unknown method '{other}'"
+                )))
+            }
+        };
+        Ok(DynTable::wrap(out))
+    }
+
+    /// Two-table methods: `join`, `union`, `intersect`, `difference`.
+    pub fn call2(
+        &self,
+        method: &str,
+        other: &DynTable,
+        kw: &Kwargs,
+    ) -> Result<DynTable> {
+        let out = match method {
+            "join" => {
+                let on = Self::str_arg(kw, "on")?;
+                let jt = kw
+                    .get("how")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("inner");
+                let join_type = JoinType::parse(jt).ok_or_else(|| {
+                    RylonError::invalid(format!("unknown join type '{jt}'"))
+                })?;
+                let algo = kw
+                    .get("algorithm")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("sort");
+                let algo = JoinAlgo::parse(algo).ok_or_else(|| {
+                    RylonError::invalid(format!("unknown join algo '{algo}'"))
+                })?;
+                let keys: Vec<&str> =
+                    on.split(',').map(|s| s.trim()).collect();
+                let opts = JoinOptions::new(join_type, &keys, &keys)
+                    .with_algo(algo);
+                ops::join(&self.inner, &other.inner, &opts)?
+            }
+            "union" => ops::union(&self.inner, &other.inner)?,
+            "intersect" => ops::intersect(&self.inner, &other.inner)?,
+            "difference" => ops::difference(&self.inner, &other.inner)?,
+            other => {
+                return Err(RylonError::invalid(format!(
+                    "unknown method '{other}'"
+                )))
+            }
+        };
+        Ok(DynTable::wrap(out))
+    }
+
+    /// Boxed row export (PyCylon's `to_pandas`-style materialisation) —
+    /// deliberately pays the per-row boxing cost; used by the row-engine
+    /// baselines and tests.
+    pub fn to_rows(&self) -> Vec<Vec<Value>> {
+        (0..self.inner.num_rows())
+            .map(|i| self.inner.row(i))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    fn t() -> DynTable {
+        DynTable::wrap(
+            Table::from_columns(vec![
+                ("id", Column::from_i64(vec![1, 2, 3])),
+                ("v", Column::from_f64(vec![1.5, 0.5, 2.5])),
+            ])
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn dynamic_select_project() {
+        let r = t().call("select", &kwargs(&[("expr", "v > 1".into())]))
+            .unwrap();
+        assert_eq!(r.table().num_rows(), 2);
+        let p = r
+            .call("project", &kwargs(&[("columns", "v".into())]))
+            .unwrap();
+        assert_eq!(p.table().num_columns(), 1);
+    }
+
+    #[test]
+    fn dynamic_join_matches_typed() {
+        let l = t();
+        let r = t();
+        let dyn_out = l
+            .call2(
+                "join",
+                &r,
+                &kwargs(&[
+                    ("on", "id".into()),
+                    ("how", "inner".into()),
+                    ("algorithm", "hash".into()),
+                ]),
+            )
+            .unwrap();
+        let typed = ops::join(
+            l.table(),
+            r.table(),
+            &JoinOptions::inner("id", "id").with_algo(JoinAlgo::Hash),
+        )
+        .unwrap();
+        assert_eq!(dyn_out.table().num_rows(), typed.num_rows());
+    }
+
+    #[test]
+    fn dynamic_groupby_and_orderby() {
+        let g = t()
+            .call(
+                "groupby",
+                &kwargs(&[
+                    ("by", "id".into()),
+                    ("agg", "sum(v),count(v)".into()),
+                ]),
+            )
+            .unwrap();
+        assert_eq!(g.table().num_rows(), 3);
+        assert!(g.table().schema().contains("sum_v"));
+        let o = t().call("orderby", &kwargs(&[("by", "-v".into())])).unwrap();
+        assert_eq!(o.table().column(1).f64_values()[0], 2.5);
+    }
+
+    #[test]
+    fn error_paths() {
+        assert!(t().call("nope", &kwargs(&[])).is_err());
+        assert!(t().call("select", &kwargs(&[])).is_err());
+        assert!(t()
+            .call("groupby", &kwargs(&[
+                ("by", "id".into()),
+                ("agg", "sum v".into()),
+            ]))
+            .is_err());
+        assert!(t()
+            .call2("join", &t(), &kwargs(&[
+                ("on", "id".into()),
+                ("how", "sideways".into()),
+            ]))
+            .is_err());
+    }
+
+    #[test]
+    fn to_rows_boxes() {
+        let rows = t().to_rows();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0][0], Value::Int64(1));
+    }
+}

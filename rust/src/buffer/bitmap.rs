@@ -1,0 +1,220 @@
+//! Arrow-style validity bitmap: bit i set ⇒ row i is valid (non-null).
+//! `None` bitmap at the column level means "all valid"; this type is only
+//! materialised when at least one null exists.
+
+/// Packed little-endian bitmap with a logical length in bits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitmap {
+    bits: Vec<u64>,
+    len: usize,
+}
+
+impl Bitmap {
+    /// All-valid bitmap of `len` bits.
+    pub fn ones(len: usize) -> Bitmap {
+        let words = len.div_ceil(64);
+        let mut bits = vec![u64::MAX; words];
+        Self::mask_tail(&mut bits, len);
+        Bitmap { bits, len }
+    }
+
+    /// All-null bitmap of `len` bits.
+    pub fn zeros(len: usize) -> Bitmap {
+        Bitmap {
+            bits: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    /// Build from a bool slice (true = valid).
+    pub fn from_bools(vals: &[bool]) -> Bitmap {
+        let mut b = Bitmap::zeros(vals.len());
+        for (i, &v) in vals.iter().enumerate() {
+            if v {
+                b.set(i, true);
+            }
+        }
+        b
+    }
+
+    fn mask_tail(bits: &mut [u64], len: usize) {
+        let tail = len % 64;
+        if tail != 0 {
+            if let Some(last) = bits.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.bits[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, valid: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if valid {
+            self.bits[w] |= 1 << b;
+        } else {
+            self.bits[w] &= !(1 << b);
+        }
+    }
+
+    /// Append one bit (used by builders).
+    pub fn push(&mut self, valid: bool) {
+        if self.len % 64 == 0 {
+            self.bits.push(0);
+        }
+        self.len += 1;
+        if valid {
+            self.set(self.len - 1, true);
+        }
+    }
+
+    /// Number of valid (set) bits — popcount over words.
+    pub fn count_ones(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Number of nulls.
+    pub fn count_zeros(&self) -> usize {
+        self.len - self.count_ones()
+    }
+
+    /// True if every bit is set (column can drop its bitmap).
+    pub fn all_valid(&self) -> bool {
+        self.count_ones() == self.len
+    }
+
+    /// Gather: new bitmap with `out[i] = self[indices[i]]`.
+    pub fn take(&self, indices: &[usize]) -> Bitmap {
+        let mut out = Bitmap::zeros(indices.len());
+        for (i, &idx) in indices.iter().enumerate() {
+            if self.get(idx) {
+                out.set(i, true);
+            }
+        }
+        out
+    }
+
+    /// Contiguous slice `[offset, offset+len)`.
+    pub fn slice(&self, offset: usize, len: usize) -> Bitmap {
+        assert!(offset + len <= self.len);
+        let mut out = Bitmap::zeros(len);
+        for i in 0..len {
+            if self.get(offset + i) {
+                out.set(i, true);
+            }
+        }
+        out
+    }
+
+    /// Concatenate two bitmaps.
+    pub fn concat(&self, other: &Bitmap) -> Bitmap {
+        let mut out = Bitmap::zeros(self.len + other.len);
+        for i in 0..self.len {
+            if self.get(i) {
+                out.set(i, true);
+            }
+        }
+        for i in 0..other.len {
+            if other.get(i) {
+                out.set(self.len + i, true);
+            }
+        }
+        out
+    }
+
+    /// Iterate bits as bools.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// Serialize to words (wire format for the shuffle).
+    pub fn words(&self) -> &[u64] {
+        &self.bits
+    }
+
+    /// Rebuild from wire words + logical length.
+    pub fn from_words(words: Vec<u64>, len: usize) -> Bitmap {
+        assert_eq!(words.len(), len.div_ceil(64));
+        let mut bits = words;
+        Self::mask_tail(&mut bits, len);
+        Bitmap { bits, len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ones_zeros_counts() {
+        let o = Bitmap::ones(70);
+        assert_eq!(o.count_ones(), 70);
+        assert!(o.all_valid());
+        let z = Bitmap::zeros(70);
+        assert_eq!(z.count_ones(), 0);
+        assert_eq!(z.count_zeros(), 70);
+    }
+
+    #[test]
+    fn set_get_push() {
+        let mut b = Bitmap::zeros(0);
+        for i in 0..130 {
+            b.push(i % 3 == 0);
+        }
+        assert_eq!(b.len(), 130);
+        for i in 0..130 {
+            assert_eq!(b.get(i), i % 3 == 0, "bit {i}");
+        }
+        b.set(1, true);
+        assert!(b.get(1));
+        b.set(0, false);
+        assert!(!b.get(0));
+    }
+
+    #[test]
+    fn tail_bits_masked() {
+        let b = Bitmap::ones(65);
+        assert_eq!(b.count_ones(), 65);
+        // Word 1 must only have 1 bit set.
+        assert_eq!(b.words()[1], 1);
+    }
+
+    #[test]
+    fn take_slice_concat() {
+        let b = Bitmap::from_bools(&[true, false, true, true, false]);
+        let t = b.take(&[4, 2, 0]);
+        assert_eq!(
+            t.iter().collect::<Vec<_>>(),
+            vec![false, true, true]
+        );
+        let s = b.slice(1, 3);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![false, true, true]);
+        let c = s.concat(&t);
+        assert_eq!(c.len(), 6);
+        assert_eq!(
+            c.iter().collect::<Vec<_>>(),
+            vec![false, true, true, false, true, true]
+        );
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let b = Bitmap::from_bools(&[true, true, false, true]);
+        let b2 = Bitmap::from_words(b.words().to_vec(), b.len());
+        assert_eq!(b, b2);
+    }
+}

@@ -1,0 +1,8 @@
+//! Physical storage: validity [`Bitmap`]s. Value buffers are plain
+//! `Vec<T>` (we own the allocator story end-to-end; Arrow-style shared
+//! immutable buffers arrive with zero-copy slicing in `table::slice`,
+//! which shares column `Arc`s instead).
+
+mod bitmap;
+
+pub use bitmap::Bitmap;

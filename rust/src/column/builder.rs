@@ -1,0 +1,198 @@
+//! Incremental column construction (CSV reader, gather paths, binding
+//! layer). One builder per output column; `finish()` produces the packed
+//! [`Column`].
+
+use crate::column::{Column, PrimitiveColumn, StringColumn};
+use crate::error::{Result, RylonError};
+use crate::types::{DataType, Value};
+
+/// Append-only builder for one column.
+#[derive(Debug)]
+pub enum ColumnBuilder {
+    Int64(Vec<Option<i64>>),
+    Float64(Vec<Option<f64>>),
+    Utf8(Vec<Option<String>>),
+    Bool(Vec<Option<bool>>),
+}
+
+impl ColumnBuilder {
+    pub fn new(dtype: DataType, capacity: usize) -> ColumnBuilder {
+        match dtype {
+            DataType::Int64 => ColumnBuilder::Int64(Vec::with_capacity(capacity)),
+            DataType::Float64 => {
+                ColumnBuilder::Float64(Vec::with_capacity(capacity))
+            }
+            DataType::Utf8 => ColumnBuilder::Utf8(Vec::with_capacity(capacity)),
+            DataType::Bool => ColumnBuilder::Bool(Vec::with_capacity(capacity)),
+        }
+    }
+
+    pub fn dtype(&self) -> DataType {
+        match self {
+            ColumnBuilder::Int64(_) => DataType::Int64,
+            ColumnBuilder::Float64(_) => DataType::Float64,
+            ColumnBuilder::Utf8(_) => DataType::Utf8,
+            ColumnBuilder::Bool(_) => DataType::Bool,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnBuilder::Int64(v) => v.len(),
+            ColumnBuilder::Float64(v) => v.len(),
+            ColumnBuilder::Utf8(v) => v.len(),
+            ColumnBuilder::Bool(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn push_null(&mut self) {
+        match self {
+            ColumnBuilder::Int64(v) => v.push(None),
+            ColumnBuilder::Float64(v) => v.push(None),
+            ColumnBuilder::Utf8(v) => v.push(None),
+            ColumnBuilder::Bool(v) => v.push(None),
+        }
+    }
+
+    /// Append a boxed value; `Null` is accepted by every builder, other
+    /// variants must match the builder dtype.
+    pub fn push_value(&mut self, v: &Value) -> Result<()> {
+        match (self, v) {
+            (b, Value::Null) => {
+                b.push_null();
+                Ok(())
+            }
+            (ColumnBuilder::Int64(vec), Value::Int64(x)) => {
+                vec.push(Some(*x));
+                Ok(())
+            }
+            (ColumnBuilder::Float64(vec), Value::Float64(x)) => {
+                vec.push(Some(*x));
+                Ok(())
+            }
+            (ColumnBuilder::Float64(vec), Value::Int64(x)) => {
+                vec.push(Some(*x as f64));
+                Ok(())
+            }
+            (ColumnBuilder::Utf8(vec), Value::Utf8(s)) => {
+                vec.push(Some(s.clone()));
+                Ok(())
+            }
+            (ColumnBuilder::Bool(vec), Value::Bool(x)) => {
+                vec.push(Some(*x));
+                Ok(())
+            }
+            (b, v) => Err(RylonError::ty(format!(
+                "cannot append {:?} to {} builder",
+                v,
+                b.dtype()
+            ))),
+        }
+    }
+
+    /// Parse-and-append a CSV cell. Empty string is null.
+    pub fn push_parse(&mut self, cell: &str) -> Result<()> {
+        if cell.is_empty() {
+            self.push_null();
+            return Ok(());
+        }
+        match self {
+            ColumnBuilder::Int64(v) => {
+                let x = cell.trim().parse::<i64>().map_err(|_| {
+                    RylonError::parse(format!("bad i64 literal '{cell}'"))
+                })?;
+                v.push(Some(x));
+            }
+            ColumnBuilder::Float64(v) => {
+                let x = cell.trim().parse::<f64>().map_err(|_| {
+                    RylonError::parse(format!("bad f64 literal '{cell}'"))
+                })?;
+                v.push(Some(x));
+            }
+            ColumnBuilder::Utf8(v) => v.push(Some(cell.to_string())),
+            ColumnBuilder::Bool(v) => {
+                let x = match cell.trim() {
+                    "true" | "True" | "TRUE" | "1" => true,
+                    "false" | "False" | "FALSE" | "0" => false,
+                    _ => {
+                        return Err(RylonError::parse(format!(
+                            "bad bool literal '{cell}'"
+                        )))
+                    }
+                };
+                v.push(Some(x));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn finish(self) -> Column {
+        match self {
+            ColumnBuilder::Int64(v) => {
+                Column::Int64(PrimitiveColumn::from_options(v))
+            }
+            ColumnBuilder::Float64(v) => {
+                Column::Float64(PrimitiveColumn::from_options(v))
+            }
+            ColumnBuilder::Utf8(v) => Column::Utf8(StringColumn::from_options(&v)),
+            ColumnBuilder::Bool(v) => {
+                Column::Bool(PrimitiveColumn::from_options(v))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_append_and_finish() {
+        let mut b = ColumnBuilder::new(DataType::Int64, 4);
+        b.push_value(&Value::Int64(1)).unwrap();
+        b.push_null();
+        b.push_value(&Value::Null).unwrap();
+        let c = b.finish();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.null_count(), 2);
+        assert_eq!(c.value(0), Value::Int64(1));
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let mut b = ColumnBuilder::new(DataType::Bool, 1);
+        assert!(b.push_value(&Value::Int64(1)).is_err());
+    }
+
+    #[test]
+    fn int_widens_to_float() {
+        let mut b = ColumnBuilder::new(DataType::Float64, 1);
+        b.push_value(&Value::Int64(3)).unwrap();
+        assert_eq!(b.finish().value(0), Value::Float64(3.0));
+    }
+
+    #[test]
+    fn parse_cells() {
+        let mut b = ColumnBuilder::new(DataType::Float64, 3);
+        b.push_parse("1.5").unwrap();
+        b.push_parse("").unwrap();
+        assert!(b.push_parse("abc").is_err());
+        let c = b.finish();
+        assert_eq!(c.value(0), Value::Float64(1.5));
+        assert_eq!(c.value(1), Value::Null);
+    }
+
+    #[test]
+    fn parse_bools() {
+        let mut b = ColumnBuilder::new(DataType::Bool, 4);
+        for s in ["true", "FALSE", "1", "0"] {
+            b.push_parse(s).unwrap();
+        }
+        let c = b.finish();
+        assert_eq!(c.bool_values(), &[true, false, true, false]);
+    }
+}

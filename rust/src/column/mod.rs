@@ -1,0 +1,376 @@
+//! [`Column`] — one typed, nullable column. The enum dispatches to the
+//! typed storages ([`PrimitiveColumn`], [`StringColumn`]); operator hot
+//! loops match once on the variant and then run monomorphic code over raw
+//! slices, so dynamic dispatch never appears inside a row loop.
+
+pub mod primitive;
+pub mod string;
+mod builder;
+
+use std::cmp::Ordering;
+
+pub use builder::ColumnBuilder;
+pub use primitive::PrimitiveColumn;
+pub use string::StringColumn;
+
+use crate::buffer::Bitmap;
+use crate::error::{Result, RylonError};
+use crate::types::{DataType, Value};
+
+/// A typed column of row values.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    Int64(PrimitiveColumn<i64>),
+    Float64(PrimitiveColumn<f64>),
+    Utf8(StringColumn),
+    Bool(PrimitiveColumn<bool>),
+}
+
+impl Column {
+    // ---- constructors ----------------------------------------------------
+
+    pub fn from_i64(values: Vec<i64>) -> Column {
+        Column::Int64(PrimitiveColumn::from_values(values))
+    }
+
+    pub fn from_f64(values: Vec<f64>) -> Column {
+        Column::Float64(PrimitiveColumn::from_values(values))
+    }
+
+    pub fn from_str<S: AsRef<str>>(values: &[S]) -> Column {
+        Column::Utf8(StringColumn::from_values(values))
+    }
+
+    pub fn from_bool(values: Vec<bool>) -> Column {
+        Column::Bool(PrimitiveColumn::from_values(values))
+    }
+
+    pub fn from_opt_i64(values: Vec<Option<i64>>) -> Column {
+        Column::Int64(PrimitiveColumn::from_options(values))
+    }
+
+    pub fn from_opt_f64(values: Vec<Option<f64>>) -> Column {
+        Column::Float64(PrimitiveColumn::from_options(values))
+    }
+
+    pub fn from_opt_str<S: AsRef<str>>(values: &[Option<S>]) -> Column {
+        Column::Utf8(StringColumn::from_options(values))
+    }
+
+    pub fn from_opt_bool(values: Vec<Option<bool>>) -> Column {
+        Column::Bool(PrimitiveColumn::from_options(values))
+    }
+
+    /// Build a column of `dtype` from boxed values (binding layer / CSV).
+    pub fn from_values(dtype: DataType, values: &[Value]) -> Result<Column> {
+        let mut b = ColumnBuilder::new(dtype, values.len());
+        for v in values {
+            b.push_value(v)?;
+        }
+        Ok(b.finish())
+    }
+
+    // ---- introspection ---------------------------------------------------
+
+    pub fn dtype(&self) -> DataType {
+        match self {
+            Column::Int64(_) => DataType::Int64,
+            Column::Float64(_) => DataType::Float64,
+            Column::Utf8(_) => DataType::Utf8,
+            Column::Bool(_) => DataType::Bool,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Int64(c) => c.len(),
+            Column::Float64(c) => c.len(),
+            Column::Utf8(c) => c.len(),
+            Column::Bool(c) => c.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn null_count(&self) -> usize {
+        match self {
+            Column::Int64(c) => c.null_count(),
+            Column::Float64(c) => c.null_count(),
+            Column::Utf8(c) => c.null_count(),
+            Column::Bool(c) => c.null_count(),
+        }
+    }
+
+    #[inline]
+    pub fn is_valid(&self, i: usize) -> bool {
+        match self {
+            Column::Int64(c) => c.is_valid(i),
+            Column::Float64(c) => c.is_valid(i),
+            Column::Utf8(c) => c.is_valid(i),
+            Column::Bool(c) => c.is_valid(i),
+        }
+    }
+
+    pub fn validity(&self) -> Option<&Bitmap> {
+        match self {
+            Column::Int64(c) => c.validity(),
+            Column::Float64(c) => c.validity(),
+            Column::Utf8(c) => c.validity(),
+            Column::Bool(c) => c.validity(),
+        }
+    }
+
+    /// Boxed cell at row i (off the hot path).
+    pub fn value(&self, i: usize) -> Value {
+        if !self.is_valid(i) {
+            return Value::Null;
+        }
+        match self {
+            Column::Int64(c) => Value::Int64(c.value(i)),
+            Column::Float64(c) => Value::Float64(c.value(i)),
+            Column::Utf8(c) => Value::Utf8(c.value(i).to_string()),
+            Column::Bool(c) => Value::Bool(c.value(i)),
+        }
+    }
+
+    /// Typed accessors (panic on type mismatch — operator code checks
+    /// dtypes up front).
+    pub fn i64_values(&self) -> &[i64] {
+        match self {
+            Column::Int64(c) => c.values(),
+            _ => panic!("i64_values on {:?} column", self.dtype()),
+        }
+    }
+
+    pub fn f64_values(&self) -> &[f64] {
+        match self {
+            Column::Float64(c) => c.values(),
+            _ => panic!("f64_values on {:?} column", self.dtype()),
+        }
+    }
+
+    pub fn as_utf8(&self) -> &StringColumn {
+        match self {
+            Column::Utf8(c) => c,
+            _ => panic!("as_utf8 on {:?} column", self.dtype()),
+        }
+    }
+
+    pub fn bool_values(&self) -> &[bool] {
+        match self {
+            Column::Bool(c) => c.values(),
+            _ => panic!("bool_values on {:?} column", self.dtype()),
+        }
+    }
+
+    /// In-memory footprint of the value buffers (metrics / cost model).
+    pub fn byte_size(&self) -> usize {
+        let validity = self
+            .validity()
+            .map_or(0, |b| b.words().len() * 8);
+        validity
+            + match self {
+                Column::Int64(c) => c.len() * 8,
+                Column::Float64(c) => c.len() * 8,
+                Column::Bool(c) => c.len(),
+                Column::Utf8(c) => c.bytes().len() + (c.len() + 1) * 8,
+            }
+    }
+
+    // ---- row kernels (used by ops) ----------------------------------------
+
+    /// Row equality between two columns of the same dtype. Nulls compare
+    /// equal to nulls (SQL `IS NOT DISTINCT FROM` — required for the set
+    /// operators' duplicate semantics, paper Table I).
+    #[inline]
+    pub fn eq_rows(&self, i: usize, other: &Column, j: usize) -> bool {
+        match (self, other) {
+            (Column::Int64(a), Column::Int64(b)) => {
+                match (a.is_valid(i), b.is_valid(j)) {
+                    (true, true) => a.value(i) == b.value(j),
+                    (false, false) => true,
+                    _ => false,
+                }
+            }
+            (Column::Float64(a), Column::Float64(b)) => {
+                match (a.is_valid(i), b.is_valid(j)) {
+                    (true, true) => {
+                        a.value(i).to_bits() == b.value(j).to_bits()
+                    }
+                    (false, false) => true,
+                    _ => false,
+                }
+            }
+            (Column::Utf8(a), Column::Utf8(b)) => {
+                match (a.is_valid(i), b.is_valid(j)) {
+                    (true, true) => a.value(i) == b.value(j),
+                    (false, false) => true,
+                    _ => false,
+                }
+            }
+            (Column::Bool(a), Column::Bool(b)) => {
+                match (a.is_valid(i), b.is_valid(j)) {
+                    (true, true) => a.value(i) == b.value(j),
+                    (false, false) => true,
+                    _ => false,
+                }
+            }
+            _ => false,
+        }
+    }
+
+    /// Total order between rows (nulls first, NaN greatest).
+    #[inline]
+    pub fn cmp_rows(&self, i: usize, other: &Column, j: usize) -> Ordering {
+        match (self.is_valid(i), other.is_valid(j)) {
+            (false, false) => return Ordering::Equal,
+            (false, true) => return Ordering::Less,
+            (true, false) => return Ordering::Greater,
+            (true, true) => {}
+        }
+        match (self, other) {
+            (Column::Int64(a), Column::Int64(b)) => a.value(i).cmp(&b.value(j)),
+            (Column::Float64(a), Column::Float64(b)) => {
+                a.value(i).total_cmp(&b.value(j))
+            }
+            (Column::Utf8(a), Column::Utf8(b)) => a.value(i).cmp(b.value(j)),
+            (Column::Bool(a), Column::Bool(b)) => a.value(i).cmp(&b.value(j)),
+            _ => panic!("cmp_rows across dtypes"),
+        }
+    }
+
+    // ---- structural ops ---------------------------------------------------
+
+    pub fn take(&self, indices: &[usize]) -> Column {
+        match self {
+            Column::Int64(c) => Column::Int64(c.take(indices)),
+            Column::Float64(c) => Column::Float64(c.take(indices)),
+            Column::Utf8(c) => Column::Utf8(c.take(indices)),
+            Column::Bool(c) => Column::Bool(c.take(indices)),
+        }
+    }
+
+    pub fn slice(&self, offset: usize, len: usize) -> Column {
+        match self {
+            Column::Int64(c) => Column::Int64(c.slice(offset, len)),
+            Column::Float64(c) => Column::Float64(c.slice(offset, len)),
+            Column::Utf8(c) => Column::Utf8(c.slice(offset, len)),
+            Column::Bool(c) => Column::Bool(c.slice(offset, len)),
+        }
+    }
+
+    pub fn concat(&self, other: &Column) -> Result<Column> {
+        match (self, other) {
+            (Column::Int64(a), Column::Int64(b)) => {
+                Ok(Column::Int64(a.concat(b)))
+            }
+            (Column::Float64(a), Column::Float64(b)) => {
+                Ok(Column::Float64(a.concat(b)))
+            }
+            (Column::Utf8(a), Column::Utf8(b)) => Ok(Column::Utf8(a.concat(b))),
+            (Column::Bool(a), Column::Bool(b)) => Ok(Column::Bool(a.concat(b))),
+            _ => Err(RylonError::ty(format!(
+                "concat {} with {}",
+                self.dtype(),
+                other.dtype()
+            ))),
+        }
+    }
+
+    /// Cast numeric columns to f64 (the tensor-bridge path).
+    pub fn cast_f64(&self) -> Result<Vec<f64>> {
+        match self {
+            Column::Int64(c) => Ok(c
+                .values()
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| if c.is_valid(i) { v as f64 } else { f64::NAN })
+                .collect()),
+            Column::Float64(c) => Ok(c
+                .values()
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| if c.is_valid(i) { v } else { f64::NAN })
+                .collect()),
+            Column::Bool(c) => Ok(c
+                .values()
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| {
+                    if c.is_valid(i) {
+                        v as u8 as f64
+                    } else {
+                        f64::NAN
+                    }
+                })
+                .collect()),
+            Column::Utf8(_) => {
+                Err(RylonError::ty("cannot cast utf8 column to f64"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_boxing() {
+        let c = Column::from_opt_i64(vec![Some(1), None]);
+        assert_eq!(c.value(0), Value::Int64(1));
+        assert_eq!(c.value(1), Value::Null);
+        assert_eq!(c.null_count(), 1);
+    }
+
+    #[test]
+    fn eq_rows_null_semantics() {
+        let a = Column::from_opt_i64(vec![Some(1), None]);
+        let b = Column::from_opt_i64(vec![Some(1), None]);
+        assert!(a.eq_rows(0, &b, 0));
+        assert!(a.eq_rows(1, &b, 1)); // null == null for set ops
+        assert!(!a.eq_rows(0, &b, 1));
+    }
+
+    #[test]
+    fn cmp_rows_null_first() {
+        let a = Column::from_opt_f64(vec![None, Some(2.0)]);
+        assert_eq!(a.cmp_rows(0, &a, 1), Ordering::Less);
+        assert_eq!(a.cmp_rows(1, &a, 0), Ordering::Greater);
+        assert_eq!(a.cmp_rows(0, &a, 0), Ordering::Equal);
+    }
+
+    #[test]
+    fn concat_type_checked() {
+        let a = Column::from_i64(vec![1]);
+        let b = Column::from_f64(vec![2.0]);
+        assert!(a.concat(&b).is_err());
+        assert_eq!(a.concat(&a).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn cast_f64_paths() {
+        assert_eq!(
+            Column::from_i64(vec![1, 2]).cast_f64().unwrap(),
+            vec![1.0, 2.0]
+        );
+        assert_eq!(
+            Column::from_bool(vec![true, false]).cast_f64().unwrap(),
+            vec![1.0, 0.0]
+        );
+        assert!(Column::from_str(&["x"]).cast_f64().is_err());
+        let with_null = Column::from_opt_f64(vec![Some(1.0), None]);
+        let v = with_null.cast_f64().unwrap();
+        assert!(v[1].is_nan());
+    }
+
+    #[test]
+    fn byte_size_counts_buffers() {
+        let c = Column::from_i64(vec![0; 100]);
+        assert_eq!(c.byte_size(), 800);
+        let s = Column::from_str(&["ab", "c"]);
+        assert_eq!(s.byte_size(), 3 + 3 * 8);
+    }
+}

@@ -1,0 +1,155 @@
+//! Fixed-width column storage: a contiguous `Vec<T>` plus an optional
+//! validity bitmap (absent ⇔ all rows valid) — the Arrow layout the paper
+//! adopts (§III-A).
+
+use crate::buffer::Bitmap;
+
+/// Storage for `i64` / `f64` / `bool` columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrimitiveColumn<T> {
+    pub(crate) values: Vec<T>,
+    pub(crate) validity: Option<Bitmap>,
+}
+
+impl<T: Copy + Default> PrimitiveColumn<T> {
+    /// Non-null column from raw values.
+    pub fn from_values(values: Vec<T>) -> Self {
+        PrimitiveColumn {
+            values,
+            validity: None,
+        }
+    }
+
+    /// Column from optional values.
+    pub fn from_options(values: Vec<Option<T>>) -> Self {
+        let mut validity = Bitmap::zeros(values.len());
+        let mut out = Vec::with_capacity(values.len());
+        let mut any_null = false;
+        for (i, v) in values.into_iter().enumerate() {
+            match v {
+                Some(v) => {
+                    validity.set(i, true);
+                    out.push(v);
+                }
+                None => {
+                    any_null = true;
+                    out.push(T::default());
+                }
+            }
+        }
+        PrimitiveColumn {
+            values: out,
+            validity: if any_null { Some(validity) } else { None },
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    #[inline]
+    pub fn is_valid(&self, i: usize) -> bool {
+        self.validity.as_ref().map_or(true, |b| b.get(i))
+    }
+
+    #[inline]
+    pub fn value(&self, i: usize) -> T {
+        self.values[i]
+    }
+
+    pub fn get(&self, i: usize) -> Option<T> {
+        if self.is_valid(i) {
+            Some(self.values[i])
+        } else {
+            None
+        }
+    }
+
+    pub fn values(&self) -> &[T] {
+        &self.values
+    }
+
+    pub fn validity(&self) -> Option<&Bitmap> {
+        self.validity.as_ref()
+    }
+
+    pub fn null_count(&self) -> usize {
+        self.validity.as_ref().map_or(0, |b| b.count_zeros())
+    }
+
+    /// Gather rows by index (out-of-range panics in debug).
+    pub fn take(&self, indices: &[usize]) -> Self {
+        let values = indices.iter().map(|&i| self.values[i]).collect();
+        let validity = self.validity.as_ref().map(|b| b.take(indices));
+        PrimitiveColumn { values, validity }
+    }
+
+    pub fn slice(&self, offset: usize, len: usize) -> Self {
+        PrimitiveColumn {
+            values: self.values[offset..offset + len].to_vec(),
+            validity: self.validity.as_ref().map(|b| b.slice(offset, len)),
+        }
+    }
+
+    pub fn concat(&self, other: &Self) -> Self {
+        let mut values = self.values.clone();
+        values.extend_from_slice(&other.values);
+        let validity = match (&self.validity, &other.validity) {
+            (None, None) => None,
+            (a, b) => {
+                let left = a.clone().unwrap_or_else(|| Bitmap::ones(self.len()));
+                let right =
+                    b.clone().unwrap_or_else(|| Bitmap::ones(other.len()));
+                Some(left.concat(&right))
+            }
+        };
+        PrimitiveColumn { values, validity }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_options_tracks_nulls() {
+        let c = PrimitiveColumn::from_options(vec![Some(1i64), None, Some(3)]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.null_count(), 1);
+        assert_eq!(c.get(0), Some(1));
+        assert_eq!(c.get(1), None);
+        assert_eq!(c.get(2), Some(3));
+    }
+
+    #[test]
+    fn all_valid_drops_bitmap() {
+        let c = PrimitiveColumn::from_options(vec![Some(1i64), Some(2)]);
+        assert!(c.validity().is_none());
+    }
+
+    #[test]
+    fn take_reorders_values_and_nulls() {
+        let c = PrimitiveColumn::from_options(vec![Some(10i64), None, Some(30)]);
+        let t = c.take(&[2, 1, 0, 2]);
+        assert_eq!(t.get(0), Some(30));
+        assert_eq!(t.get(1), None);
+        assert_eq!(t.get(2), Some(10));
+        assert_eq!(t.get(3), Some(30));
+    }
+
+    #[test]
+    fn slice_concat() {
+        let a = PrimitiveColumn::from_values(vec![1i64, 2, 3, 4]);
+        let s = a.slice(1, 2);
+        assert_eq!(s.values(), &[2, 3]);
+        let b = PrimitiveColumn::from_options(vec![None, Some(9)]);
+        let c = s.concat(&b);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.get(2), None);
+        assert_eq!(c.get(3), Some(9));
+    }
+}

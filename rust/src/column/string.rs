@@ -1,0 +1,227 @@
+//! Variable-width UTF-8 column: Arrow-style offsets + contiguous byte
+//! buffer, so string data stays cache-friendly and serialises to the wire
+//! with two memcpys.
+
+use crate::buffer::Bitmap;
+
+/// UTF-8 column storage. `offsets.len() == len + 1`; value i occupies
+/// `bytes[offsets[i]..offsets[i+1]]`. Null rows have empty extents.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StringColumn {
+    pub(crate) offsets: Vec<u64>,
+    pub(crate) bytes: Vec<u8>,
+    pub(crate) validity: Option<Bitmap>,
+}
+
+impl StringColumn {
+    pub fn from_values<S: AsRef<str>>(values: &[S]) -> Self {
+        let mut offsets = Vec::with_capacity(values.len() + 1);
+        let mut bytes = Vec::new();
+        offsets.push(0);
+        for v in values {
+            bytes.extend_from_slice(v.as_ref().as_bytes());
+            offsets.push(bytes.len() as u64);
+        }
+        StringColumn {
+            offsets,
+            bytes,
+            validity: None,
+        }
+    }
+
+    pub fn from_options<S: AsRef<str>>(values: &[Option<S>]) -> Self {
+        let mut offsets = Vec::with_capacity(values.len() + 1);
+        let mut bytes = Vec::new();
+        let mut validity = Bitmap::zeros(values.len());
+        let mut any_null = false;
+        offsets.push(0);
+        for (i, v) in values.iter().enumerate() {
+            match v {
+                Some(s) => {
+                    validity.set(i, true);
+                    bytes.extend_from_slice(s.as_ref().as_bytes());
+                }
+                None => any_null = true,
+            }
+            offsets.push(bytes.len() as u64);
+        }
+        StringColumn {
+            offsets,
+            bytes,
+            validity: if any_null { Some(validity) } else { None },
+        }
+    }
+
+    /// Construct from raw Arrow-layout parts (wire deserialisation).
+    pub fn from_parts(
+        offsets: Vec<u64>,
+        bytes: Vec<u8>,
+        validity: Option<Bitmap>,
+    ) -> Self {
+        assert!(!offsets.is_empty());
+        assert_eq!(*offsets.last().unwrap() as usize, bytes.len());
+        StringColumn {
+            offsets,
+            bytes,
+            validity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn is_valid(&self, i: usize) -> bool {
+        self.validity.as_ref().map_or(true, |b| b.get(i))
+    }
+
+    #[inline]
+    pub fn value(&self, i: usize) -> &str {
+        let lo = self.offsets[i] as usize;
+        let hi = self.offsets[i + 1] as usize;
+        // Bytes arrived from &str or validated wire data.
+        unsafe { std::str::from_utf8_unchecked(&self.bytes[lo..hi]) }
+    }
+
+    pub fn get(&self, i: usize) -> Option<&str> {
+        if self.is_valid(i) {
+            Some(self.value(i))
+        } else {
+            None
+        }
+    }
+
+    pub fn null_count(&self) -> usize {
+        self.validity.as_ref().map_or(0, |b| b.count_zeros())
+    }
+
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn validity(&self) -> Option<&Bitmap> {
+        self.validity.as_ref()
+    }
+
+    pub fn take(&self, indices: &[usize]) -> Self {
+        let mut offsets = Vec::with_capacity(indices.len() + 1);
+        let mut bytes = Vec::new();
+        offsets.push(0u64);
+        for &i in indices {
+            let lo = self.offsets[i] as usize;
+            let hi = self.offsets[i + 1] as usize;
+            bytes.extend_from_slice(&self.bytes[lo..hi]);
+            offsets.push(bytes.len() as u64);
+        }
+        let validity = self.validity.as_ref().map(|b| b.take(indices));
+        StringColumn {
+            offsets,
+            bytes,
+            validity,
+        }
+    }
+
+    pub fn slice(&self, offset: usize, len: usize) -> Self {
+        let lo = self.offsets[offset] as usize;
+        let hi = self.offsets[offset + len] as usize;
+        let offsets = self.offsets[offset..=offset + len]
+            .iter()
+            .map(|&o| o - lo as u64)
+            .collect();
+        StringColumn {
+            offsets,
+            bytes: self.bytes[lo..hi].to_vec(),
+            validity: self.validity.as_ref().map(|b| b.slice(offset, len)),
+        }
+    }
+
+    pub fn concat(&self, other: &Self) -> Self {
+        let mut offsets = self.offsets.clone();
+        let base = self.bytes.len() as u64;
+        offsets.extend(other.offsets.iter().skip(1).map(|&o| o + base));
+        let mut bytes = self.bytes.clone();
+        bytes.extend_from_slice(&other.bytes);
+        let validity = match (&self.validity, &other.validity) {
+            (None, None) => None,
+            (a, b) => {
+                let left =
+                    a.clone().unwrap_or_else(|| Bitmap::ones(self.len()));
+                let right =
+                    b.clone().unwrap_or_else(|| Bitmap::ones(other.len()));
+                Some(left.concat(&right))
+            }
+        };
+        StringColumn {
+            offsets,
+            bytes,
+            validity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_values() {
+        let c = StringColumn::from_values(&["ab", "", "cde"]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.value(0), "ab");
+        assert_eq!(c.value(1), "");
+        assert_eq!(c.value(2), "cde");
+        assert_eq!(c.null_count(), 0);
+    }
+
+    #[test]
+    fn options_and_nulls() {
+        let c = StringColumn::from_options(&[Some("x"), None, Some("yz")]);
+        assert_eq!(c.get(0), Some("x"));
+        assert_eq!(c.get(1), None);
+        assert_eq!(c.get(2), Some("yz"));
+        assert_eq!(c.null_count(), 1);
+    }
+
+    #[test]
+    fn take_slice_concat() {
+        let c = StringColumn::from_values(&["a", "bb", "ccc", "dddd"]);
+        let t = c.take(&[3, 0]);
+        assert_eq!(t.value(0), "dddd");
+        assert_eq!(t.value(1), "a");
+        let s = c.slice(1, 2);
+        assert_eq!(s.value(0), "bb");
+        assert_eq!(s.value(1), "ccc");
+        let j = t.concat(&s);
+        assert_eq!(j.len(), 4);
+        assert_eq!(j.value(2), "bb");
+    }
+
+    #[test]
+    fn unicode_safe() {
+        let c = StringColumn::from_values(&["héllo", "日本語"]);
+        assert_eq!(c.value(0), "héllo");
+        assert_eq!(c.value(1), "日本語");
+        let s = c.slice(1, 1);
+        assert_eq!(s.value(0), "日本語");
+    }
+
+    #[test]
+    fn parts_roundtrip() {
+        let c = StringColumn::from_options(&[Some("ab"), None]);
+        let c2 = StringColumn::from_parts(
+            c.offsets().to_vec(),
+            c.bytes().to_vec(),
+            c.validity().cloned(),
+        );
+        assert_eq!(c, c2);
+    }
+}

@@ -1,0 +1,285 @@
+//! Aggregation primitives for groupby and whole-column reductions.
+//! Null handling follows SQL: nulls are skipped; `count` counts non-null
+//! rows; an all-null group yields null (except count = 0).
+
+use crate::column::Column;
+use crate::error::{Result, RylonError};
+use crate::types::Value;
+
+/// Streaming accumulator for one aggregate over one group.
+#[derive(Debug, Clone)]
+pub enum Accumulator {
+    Sum { acc: f64, any: bool, int: bool },
+    Min { acc: Option<Value> },
+    Max { acc: Option<Value> },
+    Count { n: i64 },
+    Mean { sum: f64, n: i64 },
+}
+
+/// The aggregate functions offered by `groupby` (paper-adjacent set; the
+/// paper's Table I covers relational ops, groupby is part of the
+/// DataTable API surface PyCylon exposes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggKind {
+    Sum,
+    Min,
+    Max,
+    Count,
+    Mean,
+}
+
+impl AggKind {
+    pub fn parse(s: &str) -> Option<AggKind> {
+        match s {
+            "sum" => Some(AggKind::Sum),
+            "min" => Some(AggKind::Min),
+            "max" => Some(AggKind::Max),
+            "count" => Some(AggKind::Count),
+            "mean" | "avg" => Some(AggKind::Mean),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggKind::Sum => "sum",
+            AggKind::Min => "min",
+            AggKind::Max => "max",
+            AggKind::Count => "count",
+            AggKind::Mean => "mean",
+        }
+    }
+
+    pub fn new_acc(&self, input_is_int: bool) -> Accumulator {
+        match self {
+            AggKind::Sum => Accumulator::Sum {
+                acc: 0.0,
+                any: false,
+                int: input_is_int,
+            },
+            AggKind::Min => Accumulator::Min { acc: None },
+            AggKind::Max => Accumulator::Max { acc: None },
+            AggKind::Count => Accumulator::Count { n: 0 },
+            AggKind::Mean => Accumulator::Mean { sum: 0.0, n: 0 },
+        }
+    }
+
+    /// Output dtype given the input dtype.
+    pub fn output_dtype(
+        &self,
+        input: crate::types::DataType,
+    ) -> Result<crate::types::DataType> {
+        use crate::types::DataType::*;
+        match self {
+            AggKind::Count => Ok(Int64),
+            AggKind::Mean => {
+                if input.is_numeric() {
+                    Ok(Float64)
+                } else {
+                    Err(RylonError::ty(format!("mean over {input}")))
+                }
+            }
+            AggKind::Sum => {
+                if input.is_numeric() {
+                    Ok(input)
+                } else {
+                    Err(RylonError::ty(format!("sum over {input}")))
+                }
+            }
+            AggKind::Min | AggKind::Max => Ok(input),
+        }
+    }
+}
+
+impl Accumulator {
+    /// Fold row `i` of `col` into the accumulator.
+    pub fn update(&mut self, col: &Column, i: usize) {
+        if !col.is_valid(i) {
+            return;
+        }
+        match self {
+            Accumulator::Sum { acc, any, .. } => {
+                *acc += cell_f64(col, i);
+                *any = true;
+            }
+            Accumulator::Min { acc } => {
+                let v = col.value(i);
+                let better = acc
+                    .as_ref()
+                    .map_or(true, |cur| v.total_cmp(cur).is_lt());
+                if better {
+                    *acc = Some(v);
+                }
+            }
+            Accumulator::Max { acc } => {
+                let v = col.value(i);
+                let better = acc
+                    .as_ref()
+                    .map_or(true, |cur| v.total_cmp(cur).is_gt());
+                if better {
+                    *acc = Some(v);
+                }
+            }
+            Accumulator::Count { n } => *n += 1,
+            Accumulator::Mean { sum, n } => {
+                *sum += cell_f64(col, i);
+                *n += 1;
+            }
+        }
+    }
+
+    /// Merge another accumulator of the same kind (distributed combine
+    /// step — dist_groupby folds per-rank partials with this).
+    pub fn merge(&mut self, other: &Accumulator) {
+        match (self, other) {
+            (
+                Accumulator::Sum { acc, any, .. },
+                Accumulator::Sum {
+                    acc: oa, any: oany, ..
+                },
+            ) => {
+                *acc += oa;
+                *any |= oany;
+            }
+            (Accumulator::Min { acc }, Accumulator::Min { acc: oa }) => {
+                if let Some(ov) = oa {
+                    let better = acc
+                        .as_ref()
+                        .map_or(true, |cur| ov.total_cmp(cur).is_lt());
+                    if better {
+                        *acc = Some(ov.clone());
+                    }
+                }
+            }
+            (Accumulator::Max { acc }, Accumulator::Max { acc: oa }) => {
+                if let Some(ov) = oa {
+                    let better = acc
+                        .as_ref()
+                        .map_or(true, |cur| ov.total_cmp(cur).is_gt());
+                    if better {
+                        *acc = Some(ov.clone());
+                    }
+                }
+            }
+            (Accumulator::Count { n }, Accumulator::Count { n: on }) => {
+                *n += on;
+            }
+            (
+                Accumulator::Mean { sum, n },
+                Accumulator::Mean { sum: os, n: on },
+            ) => {
+                *sum += os;
+                *n += on;
+            }
+            _ => panic!("merging mismatched accumulators"),
+        }
+    }
+
+    /// Final boxed result.
+    pub fn finish(&self) -> Value {
+        match self {
+            Accumulator::Sum { acc, any, int } => {
+                if !any {
+                    Value::Null
+                } else if *int {
+                    Value::Int64(*acc as i64)
+                } else {
+                    Value::Float64(*acc)
+                }
+            }
+            Accumulator::Min { acc } | Accumulator::Max { acc } => {
+                acc.clone().unwrap_or(Value::Null)
+            }
+            Accumulator::Count { n } => Value::Int64(*n),
+            Accumulator::Mean { sum, n } => {
+                if *n == 0 {
+                    Value::Null
+                } else {
+                    Value::Float64(sum / *n as f64)
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn cell_f64(col: &Column, i: usize) -> f64 {
+    match col {
+        Column::Int64(c) => c.value(i) as f64,
+        Column::Float64(c) => c.value(i),
+        Column::Bool(c) => c.value(i) as u8 as f64,
+        Column::Utf8(_) => f64::NAN,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(kind: AggKind, col: &Column) -> Value {
+        let mut acc = kind.new_acc(col.dtype() == crate::types::DataType::Int64);
+        for i in 0..col.len() {
+            acc.update(col, i);
+        }
+        acc.finish()
+    }
+
+    #[test]
+    fn sum_min_max_count_mean() {
+        let c = Column::from_opt_i64(vec![Some(3), None, Some(-1), Some(4)]);
+        assert_eq!(run(AggKind::Sum, &c), Value::Int64(6));
+        assert_eq!(run(AggKind::Min, &c), Value::Int64(-1));
+        assert_eq!(run(AggKind::Max, &c), Value::Int64(4));
+        assert_eq!(run(AggKind::Count, &c), Value::Int64(3));
+        assert_eq!(run(AggKind::Mean, &c), Value::Float64(2.0));
+    }
+
+    #[test]
+    fn all_null_group() {
+        let c = Column::from_opt_f64(vec![None, None]);
+        assert_eq!(run(AggKind::Sum, &c), Value::Null);
+        assert_eq!(run(AggKind::Min, &c), Value::Null);
+        assert_eq!(run(AggKind::Count, &c), Value::Int64(0));
+        assert_eq!(run(AggKind::Mean, &c), Value::Null);
+    }
+
+    #[test]
+    fn string_min_max() {
+        let c = Column::from_str(&["pear", "apple", "zebra"]);
+        assert_eq!(run(AggKind::Min, &c), Value::Utf8("apple".into()));
+        assert_eq!(run(AggKind::Max, &c), Value::Utf8("zebra".into()));
+        assert!(AggKind::Sum.output_dtype(crate::types::DataType::Utf8).is_err());
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let c = Column::from_f64(vec![1.0, 2.0, 3.0, 4.0]);
+        for kind in [
+            AggKind::Sum,
+            AggKind::Min,
+            AggKind::Max,
+            AggKind::Count,
+            AggKind::Mean,
+        ] {
+            let mut whole = kind.new_acc(false);
+            for i in 0..4 {
+                whole.update(&c, i);
+            }
+            let mut a = kind.new_acc(false);
+            let mut b = kind.new_acc(false);
+            a.update(&c, 0);
+            a.update(&c, 1);
+            b.update(&c, 2);
+            b.update(&c, 3);
+            a.merge(&b);
+            assert_eq!(a.finish(), whole.finish(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(AggKind::parse("avg"), Some(AggKind::Mean));
+        assert_eq!(AggKind::parse("sum").unwrap().name(), "sum");
+        assert_eq!(AggKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,191 @@
+//! Column arithmetic — the numeric half of PyCylon's DataTable API
+//! (derived columns feeding the table→tensor bridge). Element-wise
+//! binary ops between numeric columns (or column ⊕ scalar) with SQL
+//! null propagation (any null operand → null result).
+
+use crate::buffer::Bitmap;
+use crate::column::{Column, PrimitiveColumn};
+use crate::error::{Result, RylonError};
+
+/// Element-wise binary operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl BinOp {
+    #[inline]
+    fn apply_f64(&self, a: f64, b: f64) -> f64 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Sub => a - b,
+            BinOp::Mul => a * b,
+            BinOp::Div => a / b,
+        }
+    }
+
+    #[inline]
+    fn apply_i64(&self, a: i64, b: i64) -> Option<i64> {
+        match self {
+            BinOp::Add => a.checked_add(b),
+            BinOp::Sub => a.checked_sub(b),
+            BinOp::Mul => a.checked_mul(b),
+            BinOp::Div => a.checked_div(b), // None on /0 and MIN/-1
+        }
+    }
+}
+
+fn combined_validity(a: &Column, b: &Column) -> Option<Bitmap> {
+    match (a.validity(), b.validity()) {
+        (None, None) => None,
+        (va, vb) => {
+            let n = a.len();
+            let mut bm = Bitmap::ones(n);
+            for i in 0..n {
+                let valid = va.map_or(true, |v| v.get(i))
+                    && vb.map_or(true, |v| v.get(i));
+                if !valid {
+                    bm.set(i, false);
+                }
+            }
+            Some(bm)
+        }
+    }
+}
+
+/// `a ⊕ b` element-wise. Int⊕Int stays Int64 (nulls on overflow or /0);
+/// any float operand promotes to Float64.
+pub fn binary(a: &Column, b: &Column, op: BinOp) -> Result<Column> {
+    if a.len() != b.len() {
+        return Err(RylonError::invalid(format!(
+            "arithmetic length mismatch: {} vs {}",
+            a.len(),
+            b.len()
+        )));
+    }
+    match (a, b) {
+        (Column::Int64(x), Column::Int64(y)) => {
+            let validity = combined_validity(a, b);
+            let vals: Vec<Option<i64>> = (0..a.len())
+                .map(|i| {
+                    let valid =
+                        validity.as_ref().map_or(true, |v| v.get(i));
+                    if valid {
+                        op.apply_i64(x.value(i), y.value(i))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            Ok(Column::Int64(PrimitiveColumn::from_options(vals)))
+        }
+        _ => {
+            let xf = a.cast_f64()?;
+            let yf = b.cast_f64()?;
+            let validity = combined_validity(a, b);
+            let vals: Vec<Option<f64>> = (0..a.len())
+                .map(|i| {
+                    let valid =
+                        validity.as_ref().map_or(true, |v| v.get(i));
+                    if valid {
+                        Some(op.apply_f64(xf[i], yf[i]))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            Ok(Column::Float64(PrimitiveColumn::from_options(vals)))
+        }
+    }
+}
+
+/// `col ⊕ scalar` (f64 scalar; int columns promote).
+pub fn scalar_f64(a: &Column, s: f64, op: BinOp) -> Result<Column> {
+    let xf = a.cast_f64()?;
+    let vals: Vec<Option<f64>> = (0..a.len())
+        .map(|i| {
+            if a.is_valid(i) {
+                Some(op.apply_f64(xf[i], s))
+            } else {
+                None
+            }
+        })
+        .collect();
+    Ok(Column::Float64(PrimitiveColumn::from_options(vals)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Value;
+
+    #[test]
+    fn int_int_stays_int() {
+        let a = Column::from_i64(vec![1, 2, 3]);
+        let b = Column::from_i64(vec![10, 20, 30]);
+        let c = binary(&a, &b, BinOp::Add).unwrap();
+        assert_eq!(c.i64_values(), &[11, 22, 33]);
+        let m = binary(&a, &b, BinOp::Mul).unwrap();
+        assert_eq!(m.i64_values(), &[10, 40, 90]);
+    }
+
+    #[test]
+    fn division_by_zero_is_null_for_ints_inf_for_floats() {
+        let a = Column::from_i64(vec![6, 6]);
+        let b = Column::from_i64(vec![2, 0]);
+        let c = binary(&a, &b, BinOp::Div).unwrap();
+        assert_eq!(c.value(0), Value::Int64(3));
+        assert!(c.value(1).is_null());
+        let fa = Column::from_f64(vec![1.0]);
+        let fb = Column::from_f64(vec![0.0]);
+        let fc = binary(&fa, &fb, BinOp::Div).unwrap();
+        assert_eq!(fc.f64_values()[0], f64::INFINITY);
+    }
+
+    #[test]
+    fn overflow_is_null() {
+        let a = Column::from_i64(vec![i64::MAX]);
+        let b = Column::from_i64(vec![1]);
+        let c = binary(&a, &b, BinOp::Add).unwrap();
+        assert!(c.value(0).is_null());
+    }
+
+    #[test]
+    fn mixed_promotes_to_float() {
+        let a = Column::from_i64(vec![1, 2]);
+        let b = Column::from_f64(vec![0.5, 0.25]);
+        let c = binary(&a, &b, BinOp::Sub).unwrap();
+        assert_eq!(c.f64_values(), &[0.5, 1.75]);
+    }
+
+    #[test]
+    fn null_propagation() {
+        let a = Column::from_opt_i64(vec![Some(1), None, Some(3)]);
+        let b = Column::from_opt_i64(vec![None, Some(2), Some(4)]);
+        let c = binary(&a, &b, BinOp::Add).unwrap();
+        assert!(c.value(0).is_null());
+        assert!(c.value(1).is_null());
+        assert_eq!(c.value(2), Value::Int64(7));
+    }
+
+    #[test]
+    fn scalar_ops() {
+        let a = Column::from_opt_i64(vec![Some(4), None]);
+        let c = scalar_f64(&a, 2.0, BinOp::Div).unwrap();
+        assert_eq!(c.value(0), Value::Float64(2.0));
+        assert!(c.value(1).is_null());
+    }
+
+    #[test]
+    fn errors() {
+        let a = Column::from_i64(vec![1]);
+        let b = Column::from_i64(vec![1, 2]);
+        assert!(binary(&a, &b, BinOp::Add).is_err());
+        let s = Column::from_str(&["x"]);
+        assert!(binary(&a, &s, BinOp::Add).is_err());
+        assert!(scalar_f64(&s, 1.0, BinOp::Add).is_err());
+    }
+}

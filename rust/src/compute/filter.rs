@@ -1,0 +1,91 @@
+//! Selection vectors: turn a predicate into row indices and gather.
+//! Select/project and the partition scatter all funnel through here.
+
+use crate::error::Result;
+use crate::table::Table;
+use crate::types::Value;
+
+/// Indices of rows where `pred` is true.
+pub fn filter_indices<F: FnMut(usize) -> bool>(nrows: usize, mut pred: F) -> Vec<usize> {
+    let mut out = Vec::new();
+    for i in 0..nrows {
+        if pred(i) {
+            out.push(i);
+        }
+    }
+    out
+}
+
+/// Gather rows of `table` by `indices`.
+pub fn take_indices(table: &Table, indices: &[usize]) -> Table {
+    table.take(indices)
+}
+
+/// Filter a table with a row-level predicate over boxed values — the
+/// *convenience* select path (binding layer, examples). The typed
+/// operators in `ops::select` offer columnar predicates that never box.
+pub fn filter_table<F>(table: &Table, mut pred: F) -> Result<Table>
+where
+    F: FnMut(&[Value]) -> bool,
+{
+    let mut keep = Vec::new();
+    let mut row: Vec<Value>;
+    for i in 0..table.num_rows() {
+        row = table.row(i);
+        if pred(&row) {
+            keep.push(i);
+        }
+    }
+    Ok(table.take(&keep))
+}
+
+/// Scatter rows into `nparts` index lists according to `pids` (the
+/// partition step of every distributed operator). `pids[i] == -1`
+/// (masked/padded lanes from the kernel path) are dropped.
+pub fn scatter_indices(pids: &[i32], nparts: usize) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); nparts];
+    for (i, &p) in pids.iter().enumerate() {
+        if p >= 0 {
+            out[p as usize].push(i);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("id", Column::from_i64(vec![1, 2, 3, 4])),
+            ("v", Column::from_f64(vec![0.1, 0.9, 0.5, 0.7])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn filter_indices_basic() {
+        assert_eq!(filter_indices(5, |i| i % 2 == 0), vec![0, 2, 4]);
+        assert!(filter_indices(0, |_| true).is_empty());
+    }
+
+    #[test]
+    fn filter_table_by_row() {
+        let t = t();
+        let f = filter_table(&t, |row| row[1].as_f64().unwrap() > 0.6).unwrap();
+        assert_eq!(f.num_rows(), 2);
+        assert_eq!(f.column(0).i64_values(), &[2, 4]);
+    }
+
+    #[test]
+    fn scatter_partitions_and_drops_masked() {
+        let pids = vec![0, 1, 0, -1, 2];
+        let parts = scatter_indices(&pids, 3);
+        assert_eq!(parts[0], vec![0, 2]);
+        assert_eq!(parts[1], vec![1]);
+        assert_eq!(parts[2], vec![4]);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 4);
+    }
+}

@@ -1,0 +1,281 @@
+//! Row hashing for partitioning and hash joins.
+//!
+//! The scalar finalizer is **splitmix64** — bit-exact with the L1 Pallas
+//! kernel (`python/compile/kernels/hash_partition.py`), so a key hashed
+//! on the Rust hot path lands in the same bucket as one hashed through
+//! the AOT artifact. `rust/tests/pjrt_artifacts.rs` cross-checks the two
+//! paths on real batches.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+use crate::column::Column;
+use crate::error::{Result, RylonError};
+use crate::table::Table;
+
+/// No-op hasher for keys that are already splitmix64-mixed (§Perf:
+/// avoids SipHash re-hashing inside hash joins / groupby / set ops —
+/// the u64 *is* the hash).
+#[derive(Default)]
+pub struct IdentityHasher {
+    state: u64,
+}
+
+impl Hasher for IdentityHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, _bytes: &[u8]) {
+        unreachable!("IdentityHasher only accepts u64 keys");
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.state = v;
+    }
+}
+
+/// `HashMap` keyed by pre-hashed u64s with no re-hashing.
+pub type PreHashedMap<V> =
+    std::collections::HashMap<u64, V, BuildHasherDefault<IdentityHasher>>;
+
+/// A chained multimap for (hash → row ids): one `heads` map plus a
+/// `next` chain indexed by row — a single allocation regardless of the
+/// number of buckets (vs `HashMap<u64, Vec<u32>>`'s alloc per key).
+pub struct HashChains {
+    heads: PreHashedMap<u32>,
+    next: Vec<u32>,
+}
+
+pub const CHAIN_END: u32 = u32::MAX;
+
+impl HashChains {
+    /// Build from row hashes, skipping rows where `skip(row)` is true.
+    pub fn build<F: Fn(usize) -> bool>(hashes: &[u64], skip: F) -> HashChains {
+        let mut heads: PreHashedMap<u32> = PreHashedMap::with_capacity_and_hasher(
+            hashes.len() * 2,
+            Default::default(),
+        );
+        let mut next = vec![CHAIN_END; hashes.len()];
+        for (i, &h) in hashes.iter().enumerate() {
+            if skip(i) {
+                continue;
+            }
+            let e = heads.entry(h).or_insert(CHAIN_END);
+            next[i] = *e;
+            *e = i as u32;
+        }
+        HashChains { heads, next }
+    }
+
+    /// Iterate the rows in the bucket for hash `h` (reverse insertion
+    /// order).
+    #[inline]
+    pub fn bucket(&self, h: u64) -> ChainIter<'_> {
+        ChainIter {
+            next: &self.next,
+            cur: self.heads.get(&h).copied().unwrap_or(CHAIN_END),
+        }
+    }
+}
+
+/// Iterator over one hash chain.
+pub struct ChainIter<'a> {
+    next: &'a [u32],
+    cur: u32,
+}
+
+impl Iterator for ChainIter<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        if self.cur == CHAIN_END {
+            None
+        } else {
+            let i = self.cur as usize;
+            self.cur = self.next[i];
+            Some(i)
+        }
+    }
+}
+
+/// splitmix64 finalizer (Steele et al.) — the crate-wide scalar hash.
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a 64 over bytes (strings) feeding into the finalizer.
+#[inline]
+pub fn hash_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    splitmix64(h)
+}
+
+const NULL_SENTINEL: u64 = 0x6E75_6C6C_6E75_6C6C; // "nullnull"
+
+/// Hash one row of one column.
+#[inline]
+pub fn hash_cell(col: &Column, row: usize) -> u64 {
+    if !col.is_valid(row) {
+        return splitmix64(NULL_SENTINEL);
+    }
+    match col {
+        Column::Int64(c) => splitmix64(c.value(row) as u64),
+        Column::Float64(c) => {
+            // Normalise -0.0 to 0.0 so equal floats hash equal.
+            let v = c.value(row);
+            let v = if v == 0.0 { 0.0 } else { v };
+            splitmix64(v.to_bits())
+        }
+        Column::Utf8(c) => hash_bytes(c.value(row).as_bytes()),
+        Column::Bool(c) => splitmix64(c.value(row) as u64),
+    }
+}
+
+/// Hash every row of a column into `out` (overwrites).
+pub fn hash_column(col: &Column, out: &mut Vec<u64>) {
+    out.clear();
+    out.reserve(col.len());
+    match col {
+        // Monomorphic fast path for the common i64 join key: no validity
+        // check per row when the column has no nulls.
+        Column::Int64(c) if c.validity().is_none() => {
+            out.extend(c.values().iter().map(|&v| splitmix64(v as u64)));
+        }
+        _ => out.extend((0..col.len()).map(|i| hash_cell(col, i))),
+    }
+}
+
+/// Combined hash over multiple key columns (boost-style hash_combine on
+/// top of the per-cell finalizer).
+pub fn hash_columns(cols: &[&Column], nrows: usize, out: &mut Vec<u64>) {
+    out.clear();
+    if cols.is_empty() {
+        out.resize(nrows, splitmix64(0));
+        return;
+    }
+    hash_column(cols[0], out);
+    for col in &cols[1..] {
+        for (i, h) in out.iter_mut().enumerate() {
+            let c = hash_cell(col, i);
+            // hash_combine: h ^= c + golden + (h<<6) + (h>>2)
+            *h ^= c
+                .wrapping_add(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(*h << 6)
+                .wrapping_add(*h >> 2);
+        }
+    }
+}
+
+/// Hash the named key columns of a table.
+pub fn hash_table_keys(
+    table: &Table,
+    keys: &[String],
+    out: &mut Vec<u64>,
+) -> Result<()> {
+    if keys.is_empty() {
+        return Err(RylonError::invalid("empty key list"));
+    }
+    let cols: Result<Vec<&Column>> = keys
+        .iter()
+        .map(|k| table.column_by_name(k))
+        .collect();
+    hash_columns(&cols?, table.num_rows(), out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix64_reference_vector() {
+        // Same golden constant pinned by the python test
+        // (test_splitmix64_known_vectors): splitmix64(0).
+        assert_eq!(splitmix64(0), 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
+    fn equal_values_hash_equal_across_construction() {
+        let a = Column::from_i64(vec![42, -1]);
+        let b = Column::from_opt_i64(vec![Some(42), None]);
+        assert_eq!(hash_cell(&a, 0), hash_cell(&b, 0));
+        assert_ne!(hash_cell(&a, 1), hash_cell(&b, 1));
+    }
+
+    #[test]
+    fn negative_zero_normalised() {
+        let c = Column::from_f64(vec![0.0, -0.0]);
+        assert_eq!(hash_cell(&c, 0), hash_cell(&c, 1));
+    }
+
+    #[test]
+    fn nulls_hash_consistently() {
+        let a = Column::from_opt_i64(vec![None]);
+        let b = Column::from_opt_f64(vec![None]);
+        assert_eq!(hash_cell(&a, 0), hash_cell(&b, 0));
+    }
+
+    #[test]
+    fn fast_path_matches_generic() {
+        let vals: Vec<i64> = (0..1000).map(|i| i * 31 - 500).collect();
+        let dense = Column::from_i64(vals.clone());
+        let opt = Column::from_opt_i64(vals.iter().map(|&v| Some(v)).collect());
+        let (mut h1, mut h2) = (Vec::new(), Vec::new());
+        hash_column(&dense, &mut h1);
+        hash_column(&opt, &mut h2);
+        assert_eq!(h1, h2);
+    }
+
+    #[test]
+    fn multi_key_order_sensitive() {
+        let a = Column::from_i64(vec![1]);
+        let b = Column::from_i64(vec![2]);
+        let (mut h_ab, mut h_ba) = (Vec::new(), Vec::new());
+        hash_columns(&[&a, &b], 1, &mut h_ab);
+        hash_columns(&[&b, &a], 1, &mut h_ba);
+        assert_ne!(h_ab, h_ba);
+    }
+
+    #[test]
+    fn string_hash_differs() {
+        let c = Column::from_str(&["abc", "abd", ""]);
+        assert_ne!(hash_cell(&c, 0), hash_cell(&c, 1));
+        assert_ne!(hash_cell(&c, 0), hash_cell(&c, 2));
+    }
+
+    #[test]
+    fn hash_chains_bucket_contents() {
+        let hashes = vec![7u64, 9, 7, 7, 9, 1];
+        let chains = HashChains::build(&hashes, |i| i == 3); // skip row 3
+        let b7: Vec<usize> = chains.bucket(7).collect();
+        assert_eq!(b7, vec![2, 0]); // reverse insertion, row 3 skipped
+        let b9: Vec<usize> = chains.bucket(9).collect();
+        assert_eq!(b9, vec![4, 1]);
+        assert_eq!(chains.bucket(999).count(), 0);
+    }
+
+    #[test]
+    fn table_key_hash_errors() {
+        let t = Table::from_columns(vec![("a", Column::from_i64(vec![1]))])
+            .unwrap();
+        let mut out = Vec::new();
+        assert!(hash_table_keys(&t, &[], &mut out).is_err());
+        assert!(
+            hash_table_keys(&t, &["nope".into()], &mut out).is_err()
+        );
+        hash_table_keys(&t, &["a".into()], &mut out).unwrap();
+        assert_eq!(out.len(), 1);
+    }
+}

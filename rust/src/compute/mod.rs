@@ -1,0 +1,13 @@
+//! Low-level compute kernels shared by the relational operators: hashing
+//! (bit-exact sibling of the L1 Pallas kernel), sorting, selection-vector
+//! filtering/gathering, and aggregation primitives.
+
+pub mod hash;
+pub mod sort;
+pub mod filter;
+pub mod aggregate;
+pub mod arithmetic;
+
+pub use filter::{filter_table, take_indices};
+pub use hash::{hash_column, hash_columns, splitmix64};
+pub use sort::{argsort_by_columns, argsort_i64};

@@ -1,0 +1,187 @@
+//! Sorting kernels. The paper's joins are sort-joins ("sorting … is the
+//! core task in Cylon joins", §V-1), so argsort speed dominates the local
+//! phase. Two paths:
+//!
+//! * [`argsort_i64`] — LSD radix sort on 64-bit keys (sign-flipped so
+//!   order is numeric), 8 passes × 8 bits over index/key pairs. This is
+//!   the hot path for the benchmark workloads (int64 join keys).
+//! * [`argsort_by_columns`] — general multi-column comparison sort
+//!   (stable `sort_unstable_by` over row indices with a lexicographic
+//!   comparator), used for strings/mixed keys and orderby.
+
+use std::cmp::Ordering;
+
+use crate::column::Column;
+
+/// Argsort of an i64 slice via LSD radix sort; `nulls_first` rows (given
+/// by `validity`) are emitted ahead of all valid rows. Returns the
+/// permutation `perm` such that `keys[perm]` is ascending.
+pub fn argsort_i64(keys: &[i64], validity: Option<&crate::buffer::Bitmap>) -> Vec<usize> {
+    let n = keys.len();
+    // Partition nulls up front (rare path).
+    let mut nulls: Vec<usize> = Vec::new();
+    let mut pairs: Vec<(u64, u32)> = Vec::with_capacity(n);
+    match validity {
+        None => {
+            for (i, &k) in keys.iter().enumerate() {
+                pairs.push(((k as u64) ^ (1u64 << 63), i as u32));
+            }
+        }
+        Some(bm) => {
+            for (i, &k) in keys.iter().enumerate() {
+                if bm.get(i) {
+                    pairs.push(((k as u64) ^ (1u64 << 63), i as u32));
+                } else {
+                    nulls.push(i);
+                }
+            }
+        }
+    }
+
+    radix_sort_pairs(&mut pairs);
+
+    let mut out = nulls;
+    out.extend(pairs.iter().map(|&(_, i)| i as usize));
+    out
+}
+
+/// LSD radix sort of (key, payload) pairs, 8 bits per pass, skipping
+/// passes whose byte is constant (common for small key domains).
+pub fn radix_sort_pairs(pairs: &mut Vec<(u64, u32)>) {
+    let n = pairs.len();
+    if n <= 1 {
+        return;
+    }
+    let mut scratch: Vec<(u64, u32)> = vec![(0, 0); n];
+    let mut src_is_pairs = true;
+    for pass in 0..8 {
+        let shift = pass * 8;
+        // Histogram.
+        let mut counts = [0usize; 256];
+        {
+            let src: &[(u64, u32)] = if src_is_pairs { pairs } else { &scratch };
+            for &(k, _) in src {
+                counts[((k >> shift) & 0xFF) as usize] += 1;
+            }
+        }
+        // Skip constant-byte passes.
+        if counts.iter().any(|&c| c == n) {
+            continue;
+        }
+        // Prefix sums.
+        let mut offsets = [0usize; 256];
+        let mut acc = 0usize;
+        for b in 0..256 {
+            offsets[b] = acc;
+            acc += counts[b];
+        }
+        // Scatter.
+        if src_is_pairs {
+            for &(k, v) in pairs.iter() {
+                let b = ((k >> shift) & 0xFF) as usize;
+                scratch[offsets[b]] = (k, v);
+                offsets[b] += 1;
+            }
+        } else {
+            for &(k, v) in scratch.iter() {
+                let b = ((k >> shift) & 0xFF) as usize;
+                pairs[offsets[b]] = (k, v);
+                offsets[b] += 1;
+            }
+        }
+        src_is_pairs = !src_is_pairs;
+    }
+    if !src_is_pairs {
+        pairs.copy_from_slice(&scratch);
+    }
+}
+
+/// Generic argsort over several key columns with per-key direction
+/// (`true` = descending). Stable so ties preserve input order.
+pub fn argsort_by_columns(
+    cols: &[&Column],
+    descending: &[bool],
+    nrows: usize,
+) -> Vec<usize> {
+    debug_assert_eq!(cols.len(), descending.len());
+    let mut idx: Vec<usize> = (0..nrows).collect();
+    idx.sort_by(|&a, &b| {
+        for (c, &desc) in cols.iter().zip(descending) {
+            let ord = c.cmp_rows(a, *c, b);
+            let ord = if desc { ord.reverse() } else { ord };
+            if ord != Ordering::Equal {
+                return ord;
+            }
+        }
+        Ordering::Equal
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::Bitmap;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn radix_matches_std_sort() {
+        let mut r = Xoshiro256::new(9);
+        let keys: Vec<i64> =
+            (0..10_000).map(|_| r.next_u64() as i64).collect();
+        let perm = argsort_i64(&keys, None);
+        let mut expect: Vec<i64> = keys.clone();
+        expect.sort_unstable();
+        let got: Vec<i64> = perm.iter().map(|&i| keys[i]).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn radix_handles_negatives_and_extremes() {
+        let keys = vec![i64::MAX, -1, 0, i64::MIN, 5, -5];
+        let perm = argsort_i64(&keys, None);
+        let got: Vec<i64> = perm.iter().map(|&i| keys[i]).collect();
+        assert_eq!(got, vec![i64::MIN, -5, -1, 0, 5, i64::MAX]);
+    }
+
+    #[test]
+    fn nulls_sort_first() {
+        let keys = vec![3, 1, 2];
+        let bm = Bitmap::from_bools(&[true, false, true]);
+        let perm = argsort_i64(&keys, Some(&bm));
+        assert_eq!(perm, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn small_domain_skips_passes() {
+        // All keys < 256: only one meaningful pass; result still correct.
+        let keys: Vec<i64> = (0..1000).map(|i| (i * 7 % 256) as i64).collect();
+        let perm = argsort_i64(&keys, None);
+        for w in perm.windows(2) {
+            assert!(keys[w[0]] <= keys[w[1]]);
+        }
+    }
+
+    #[test]
+    fn multi_column_lexicographic_and_desc() {
+        let a = Column::from_i64(vec![1, 1, 0, 0]);
+        let b = Column::from_str(&["x", "a", "z", "z"]);
+        let idx = argsort_by_columns(&[&a, &b], &[false, false], 4);
+        assert_eq!(idx, vec![2, 3, 1, 0]);
+        let idx = argsort_by_columns(&[&a, &b], &[true, false], 4);
+        assert_eq!(idx, vec![1, 0, 2, 3]);
+    }
+
+    #[test]
+    fn stability_on_ties() {
+        let a = Column::from_i64(vec![5, 5, 5]);
+        let idx = argsort_by_columns(&[&a], &[false], 3);
+        assert_eq!(idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(argsort_i64(&[], None).is_empty());
+        assert_eq!(argsort_i64(&[7], None), vec![0]);
+    }
+}

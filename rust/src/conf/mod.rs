@@ -1,0 +1,248 @@
+//! Configuration: a TOML-subset parser (flat `[section]`s with string /
+//! number / bool values — the offline registry has no `toml` crate) and
+//! the typed [`RylonConfig`] the CLI and launcher consume.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Result, RylonError};
+use crate::net::CostModel;
+
+/// One parsed scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl ConfValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ConfValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ConfValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            ConfValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key` → value (top-level keys use section "").
+#[derive(Debug, Default, Clone)]
+pub struct ConfFile {
+    values: BTreeMap<String, ConfValue>,
+}
+
+impl ConfFile {
+    /// Parse TOML-subset text: comments (`#`), `[section]`, `key = value`
+    /// with quoted strings, numbers, booleans.
+    pub fn parse(text: &str) -> Result<ConfFile> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // Only strip comments outside quotes (cheap check: no
+                // quote after the hash).
+                Some(i) if !raw[..i].contains('"') => &raw[..i],
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line
+                .strip_prefix('[')
+                .and_then(|s| s.strip_suffix(']'))
+            {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                RylonError::parse(format!(
+                    "config line {}: expected key = value",
+                    lineno + 1
+                ))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, Self::parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(ConfFile { values })
+    }
+
+    fn parse_value(s: &str, lineno: usize) -> Result<ConfValue> {
+        if let Some(q) = s
+            .strip_prefix('"')
+            .and_then(|x| x.strip_suffix('"'))
+        {
+            return Ok(ConfValue::Str(q.to_string()));
+        }
+        match s {
+            "true" => return Ok(ConfValue::Bool(true)),
+            "false" => return Ok(ConfValue::Bool(false)),
+            _ => {}
+        }
+        s.parse::<f64>().map(ConfValue::Num).map_err(|_| {
+            RylonError::parse(format!(
+                "config line {lineno}: bad value {s:?} (quote strings)"
+            ))
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ConfFile> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ConfValue> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+/// Typed top-level configuration for the `rylon` launcher.
+#[derive(Debug, Clone)]
+pub struct RylonConfig {
+    /// World size (ranks).
+    pub world: usize,
+    /// `"threads"` or `"sim"`.
+    pub fabric: String,
+    pub shuffle_chunk_rows: usize,
+    pub cost: CostModel,
+    /// Directory holding AOT artifacts + manifest.json.
+    pub artifacts_dir: String,
+}
+
+impl Default for RylonConfig {
+    fn default() -> Self {
+        RylonConfig {
+            world: 4,
+            fabric: "threads".to_string(),
+            shuffle_chunk_rows: 1 << 16,
+            cost: CostModel::default(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl RylonConfig {
+    /// Read from a parsed file; missing keys keep defaults.
+    pub fn from_file(f: &ConfFile) -> RylonConfig {
+        let d = RylonConfig::default();
+        let dc = CostModel::default();
+        RylonConfig {
+            world: f.usize_or("cluster.world", d.world),
+            fabric: f.str_or("cluster.fabric", &d.fabric),
+            shuffle_chunk_rows: f
+                .usize_or("shuffle.chunk_rows", d.shuffle_chunk_rows),
+            cost: CostModel {
+                alpha: f.f64_or("cost.alpha", dc.alpha),
+                beta: f.f64_or("cost.beta", dc.beta),
+                ranks_per_node: f
+                    .usize_or("cost.ranks_per_node", dc.ranks_per_node),
+                beta_local: f.f64_or("cost.beta_local", dc.beta_local),
+            },
+            artifacts_dir: f.str_or("runtime.artifacts_dir", &d.artifacts_dir),
+        }
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<RylonConfig> {
+        Ok(Self::from_file(&ConfFile::load(path)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# rylon config
+[cluster]
+world = 16
+fabric = "sim"
+
+[shuffle]
+chunk_rows = 4096
+
+[cost]
+alpha = 1e-5
+ranks_per_node = 8
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let f = ConfFile::parse(SAMPLE).unwrap();
+        assert_eq!(f.get("cluster.world").unwrap().as_usize(), Some(16));
+        assert_eq!(
+            f.get("cluster.fabric").unwrap().as_str(),
+            Some("sim")
+        );
+        assert_eq!(f.get("cost.alpha").unwrap().as_f64(), Some(1e-5));
+        assert!(f.get("nope").is_none());
+    }
+
+    #[test]
+    fn typed_config_with_defaults() {
+        let c =
+            RylonConfig::from_file(&ConfFile::parse(SAMPLE).unwrap());
+        assert_eq!(c.world, 16);
+        assert_eq!(c.fabric, "sim");
+        assert_eq!(c.shuffle_chunk_rows, 4096);
+        assert_eq!(c.cost.alpha, 1e-5);
+        assert_eq!(c.cost.ranks_per_node, 8);
+        // Untouched keys keep defaults.
+        assert_eq!(c.artifacts_dir, "artifacts");
+        assert_eq!(c.cost.beta, CostModel::default().beta);
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(ConfFile::parse("just words").is_err());
+        assert!(ConfFile::parse("k = unquoted_string").is_err());
+    }
+
+    #[test]
+    fn bools_and_comments() {
+        let f =
+            ConfFile::parse("flag = true # trailing\nother = false").unwrap();
+        assert_eq!(f.bool_or("flag", false), true);
+        assert_eq!(f.bool_or("other", true), false);
+        assert_eq!(f.bool_or("missing", true), true);
+    }
+}

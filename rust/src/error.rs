@@ -1,0 +1,109 @@
+//! Crate-wide error type.
+//!
+//! A single flat enum rather than per-module errors: the operator surface
+//! is small and callers (CLI, examples, benches) handle everything the
+//! same way. `thiserror` is not available offline, so Display/Error are
+//! hand-implemented.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, RylonError>;
+
+/// All error conditions surfaced by the rylon public API.
+#[derive(Debug)]
+pub enum RylonError {
+    /// Schema mismatch between tables or against an operator requirement.
+    Schema(String),
+    /// A named column does not exist in the table.
+    ColumnNotFound(String),
+    /// Type error: operator applied to an unsupported [`crate::types::DataType`].
+    Type(String),
+    /// Malformed input data (CSV parse errors, ragged rows, bad literals).
+    Parse(String),
+    /// Invalid argument to an API call (bad parallelism, empty key list…).
+    Invalid(String),
+    /// Communication-layer failure (rank exited, channel closed, timeout).
+    Comm(String),
+    /// PJRT / XLA runtime failure (artifact missing, compile/execute error).
+    Runtime(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for RylonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RylonError::Schema(m) => write!(f, "schema error: {m}"),
+            RylonError::ColumnNotFound(c) => write!(f, "column not found: {c}"),
+            RylonError::Type(m) => write!(f, "type error: {m}"),
+            RylonError::Parse(m) => write!(f, "parse error: {m}"),
+            RylonError::Invalid(m) => write!(f, "invalid argument: {m}"),
+            RylonError::Comm(m) => write!(f, "communication error: {m}"),
+            RylonError::Runtime(m) => write!(f, "runtime error: {m}"),
+            RylonError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RylonError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RylonError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RylonError {
+    fn from(e: std::io::Error) -> Self {
+        RylonError::Io(e)
+    }
+}
+
+/// Helpers for constructing the common variants tersely.
+impl RylonError {
+    pub fn schema(msg: impl Into<String>) -> Self {
+        RylonError::Schema(msg.into())
+    }
+    pub fn ty(msg: impl Into<String>) -> Self {
+        RylonError::Type(msg.into())
+    }
+    pub fn parse(msg: impl Into<String>) -> Self {
+        RylonError::Parse(msg.into())
+    }
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        RylonError::Invalid(msg.into())
+    }
+    pub fn comm(msg: impl Into<String>) -> Self {
+        RylonError::Comm(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        RylonError::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(
+            RylonError::ColumnNotFound("id".into()).to_string(),
+            "column not found: id"
+        );
+        assert!(RylonError::schema("width").to_string().contains("width"));
+        assert!(RylonError::comm("closed").to_string().contains("closed"));
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        let e = RylonError::from(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

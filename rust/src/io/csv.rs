@@ -1,0 +1,323 @@
+//! CSV reader/writer. RFC-4180-style quoting (double-quote fields,
+//! doubled quotes inside), optional header, explicit or inferred schema.
+//! Empty cells are nulls.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::column::ColumnBuilder;
+use crate::error::{Result, RylonError};
+use crate::table::Table;
+use crate::types::{DataType, Field, Schema};
+
+/// CSV read/write options.
+#[derive(Debug, Clone)]
+pub struct CsvOptions {
+    pub delimiter: char,
+    /// First row is a header (read: column names; write: emit header).
+    pub has_header: bool,
+    /// Explicit schema; when `None` the reader infers types from the
+    /// first `infer_rows` records (i64 ⊂ f64 ⊂ str; bool literal set).
+    pub schema: Option<Schema>,
+    pub infer_rows: usize,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        CsvOptions {
+            delimiter: ',',
+            has_header: true,
+            schema: None,
+            infer_rows: 128,
+        }
+    }
+}
+
+impl CsvOptions {
+    pub fn with_schema(mut self, schema: Schema) -> CsvOptions {
+        self.schema = Some(schema);
+        self
+    }
+
+    pub fn no_header(mut self) -> CsvOptions {
+        self.has_header = false;
+        self
+    }
+}
+
+/// Split one CSV record honouring quotes. Returns the cells.
+fn split_record(line: &str, delim: char) -> Result<Vec<String>> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                cur.push(c);
+            }
+        } else if c == '"' {
+            in_quotes = true;
+        } else if c == delim {
+            cells.push(std::mem::take(&mut cur));
+        } else {
+            cur.push(c);
+        }
+    }
+    if in_quotes {
+        return Err(RylonError::parse(format!(
+            "unterminated quote in record: {line:?}"
+        )));
+    }
+    cells.push(cur);
+    Ok(cells)
+}
+
+fn infer_dtype(samples: &[&str]) -> DataType {
+    let non_empty: Vec<&&str> =
+        samples.iter().filter(|s| !s.is_empty()).collect();
+    if non_empty.is_empty() {
+        return DataType::Utf8;
+    }
+    if non_empty
+        .iter()
+        .all(|s| s.trim().parse::<i64>().is_ok())
+    {
+        return DataType::Int64;
+    }
+    if non_empty
+        .iter()
+        .all(|s| s.trim().parse::<f64>().is_ok())
+    {
+        return DataType::Float64;
+    }
+    if non_empty.iter().all(|s| {
+        matches!(s.trim(), "true" | "false" | "True" | "False")
+    }) {
+        return DataType::Bool;
+    }
+    DataType::Utf8
+}
+
+/// Read a CSV from any reader.
+pub fn read_csv_from<R: Read>(reader: R, opts: &CsvOptions) -> Result<Table> {
+    let buf = BufReader::new(reader);
+    let mut lines = Vec::new();
+    for line in buf.lines() {
+        let line = line?;
+        if !line.is_empty() {
+            lines.push(line);
+        }
+    }
+    let mut records: Vec<Vec<String>> = Vec::with_capacity(lines.len());
+    for l in &lines {
+        records.push(split_record(l, opts.delimiter)?);
+    }
+    let header: Option<Vec<String>> = if opts.has_header && !records.is_empty()
+    {
+        Some(records.remove(0))
+    } else {
+        None
+    };
+
+    // Establish the schema.
+    let schema = match &opts.schema {
+        Some(s) => s.clone(),
+        None => {
+            let width = header
+                .as_ref()
+                .map(|h| h.len())
+                .or_else(|| records.first().map(|r| r.len()))
+                .ok_or_else(|| RylonError::parse("empty csv"))?;
+            let fields = (0..width)
+                .map(|c| {
+                    let name = header
+                        .as_ref()
+                        .map(|h| h[c].clone())
+                        .unwrap_or_else(|| format!("c{c}"));
+                    let samples: Vec<&str> = records
+                        .iter()
+                        .take(opts.infer_rows)
+                        .map(|r| r.get(c).map(|s| s.as_str()).unwrap_or(""))
+                        .collect();
+                    Field::new(name, infer_dtype(&samples))
+                })
+                .collect();
+            Schema::new(fields)
+        }
+    };
+
+    let mut builders: Vec<ColumnBuilder> = schema
+        .fields()
+        .iter()
+        .map(|f| ColumnBuilder::new(f.dtype, records.len()))
+        .collect();
+    for (lineno, rec) in records.iter().enumerate() {
+        if rec.len() != schema.len() {
+            return Err(RylonError::parse(format!(
+                "record {} has {} cells, schema has {}",
+                lineno + 1 + opts.has_header as usize,
+                rec.len(),
+                schema.len()
+            )));
+        }
+        for (b, cell) in builders.iter_mut().zip(rec) {
+            b.push_parse(cell)?;
+        }
+    }
+    Table::try_new(
+        schema,
+        builders.into_iter().map(|b| b.finish()).collect(),
+    )
+}
+
+/// Read a CSV file.
+pub fn read_csv(path: impl AsRef<Path>, opts: &CsvOptions) -> Result<Table> {
+    let f = std::fs::File::open(path)?;
+    read_csv_from(f, opts)
+}
+
+fn needs_quoting(s: &str, delim: char) -> bool {
+    s.contains(delim) || s.contains('"') || s.contains('\n')
+}
+
+/// Write a table to any writer.
+pub fn write_csv_to<W: Write>(
+    table: &Table,
+    writer: W,
+    opts: &CsvOptions,
+) -> Result<()> {
+    let mut w = BufWriter::new(writer);
+    let d = opts.delimiter;
+    if opts.has_header {
+        let names: Vec<&str> = table
+            .schema()
+            .fields()
+            .iter()
+            .map(|f| f.name.as_str())
+            .collect();
+        writeln!(w, "{}", names.join(&d.to_string()))?;
+    }
+    let mut cell = String::new();
+    for r in 0..table.num_rows() {
+        for c in 0..table.num_columns() {
+            if c > 0 {
+                write!(w, "{d}")?;
+            }
+            cell.clear();
+            cell.push_str(&table.column(c).value(r).render());
+            if needs_quoting(&cell, d) {
+                write!(w, "\"{}\"", cell.replace('"', "\"\""))?;
+            } else {
+                write!(w, "{cell}")?;
+            }
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write a table to a CSV file.
+pub fn write_csv(
+    table: &Table,
+    path: impl AsRef<Path>,
+    opts: &CsvOptions,
+) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    write_csv_to(table, f, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::types::Value;
+
+    #[test]
+    fn read_with_inference() {
+        let data = "id,price,name,ok\n1,2.5,apple,true\n2,,\"b,c\",false\n";
+        let t = read_csv_from(data.as_bytes(), &CsvOptions::default())
+            .unwrap();
+        assert_eq!(t.num_rows(), 2);
+        assert_eq!(t.schema().field(0).dtype, DataType::Int64);
+        assert_eq!(t.schema().field(1).dtype, DataType::Float64);
+        assert_eq!(t.schema().field(2).dtype, DataType::Utf8);
+        assert_eq!(t.schema().field(3).dtype, DataType::Bool);
+        assert_eq!(t.column(1).value(1), Value::Null);
+        assert_eq!(t.column(2).value(1), Value::Utf8("b,c".into()));
+    }
+
+    #[test]
+    fn explicit_schema_and_no_header() {
+        let data = "1,x\n2,y\n";
+        let opts = CsvOptions::default()
+            .no_header()
+            .with_schema(Schema::parse("a:i64,b:str").unwrap());
+        let t = read_csv_from(data.as_bytes(), &opts).unwrap();
+        assert_eq!(t.num_rows(), 2);
+        assert_eq!(t.column(0).i64_values(), &[1, 2]);
+    }
+
+    #[test]
+    fn quoted_quotes_and_roundtrip() {
+        let t = Table::from_columns(vec![
+            ("s", Column::from_str(&["plain", "has,comma", "has\"quote"])),
+            ("v", Column::from_opt_i64(vec![Some(1), None, Some(3)])),
+        ])
+        .unwrap();
+        let mut buf = Vec::new();
+        write_csv_to(&t, &mut buf, &CsvOptions::default()).unwrap();
+        let opts = CsvOptions::default()
+            .with_schema(Schema::parse("s:str,v:i64").unwrap());
+        let back = read_csv_from(&buf[..], &opts).unwrap();
+        assert_eq!(back.column(0).as_utf8().value(1), "has,comma");
+        assert_eq!(back.column(0).as_utf8().value(2), "has\"quote");
+        assert_eq!(back.column(1).value(1), Value::Null);
+    }
+
+    #[test]
+    fn ragged_record_rejected() {
+        let data = "a,b\n1,2\n3\n";
+        assert!(read_csv_from(data.as_bytes(), &CsvOptions::default())
+            .is_err());
+    }
+
+    #[test]
+    fn bad_literal_with_schema_rejected() {
+        let data = "a\nxyz\n";
+        let opts = CsvOptions::default()
+            .with_schema(Schema::parse("a:i64").unwrap());
+        assert!(read_csv_from(data.as_bytes(), &opts).is_err());
+    }
+
+    #[test]
+    fn unterminated_quote_rejected() {
+        let data = "a\n\"oops\n";
+        assert!(read_csv_from(data.as_bytes(), &CsvOptions::default())
+            .is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("rylon_csv_test.csv");
+        let t = Table::from_columns(vec![
+            ("id", Column::from_i64(vec![10, 20])),
+            ("v", Column::from_f64(vec![1.25, -0.5])),
+        ])
+        .unwrap();
+        write_csv(&t, &path, &CsvOptions::default()).unwrap();
+        let back = read_csv(&path, &CsvOptions::default()).unwrap();
+        assert_eq!(back.column(0).i64_values(), &[10, 20]);
+        assert_eq!(back.column(1).f64_values(), &[1.25, -0.5]);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,203 @@
+//! Synthetic workload generators matching the paper's datasets (§V
+//! "Dataset Formats"): "CSV files were generated with four columns (one
+//! int_64 as index and three doubles)" for the strong-scaling runs, and
+//! "two columns (one int_64 as index and one double as payload)" for the
+//! larger load tests. Deterministic per (seed, rank) so distributed
+//! workloads are reproducible.
+
+use crate::column::Column;
+use crate::error::{Result, RylonError};
+use crate::table::Table;
+use crate::util::rng::Xoshiro256;
+
+/// Key distribution for the index column.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KeyDist {
+    /// Uniform over `[0, domain)`.
+    Uniform { domain: u64 },
+    /// Zipf over `[0, domain)` with exponent `s` (skewed joins).
+    Zipf { domain: u64, s: f64 },
+    /// Sequential from this partition's global offset (no duplicates).
+    Sequential,
+}
+
+/// Spec for one generated table partition.
+#[derive(Debug, Clone)]
+pub struct DataGenSpec {
+    pub rows: usize,
+    /// Number of f64 payload columns (paper: 3 for scaling, 1 for load).
+    pub payload_cols: usize,
+    pub key_dist: KeyDist,
+    pub seed: u64,
+}
+
+impl DataGenSpec {
+    /// Paper's strong-scaling relation: int64 index + 3 doubles, uniform
+    /// keys over twice the row count (≈50% match rate between two
+    /// relations).
+    pub fn paper_scaling(rows: usize, seed: u64) -> DataGenSpec {
+        DataGenSpec {
+            rows,
+            payload_cols: 3,
+            key_dist: KeyDist::Uniform {
+                domain: (rows as u64 * 2).max(1),
+            },
+            seed,
+        }
+    }
+
+    /// Paper's larger-load relation: int64 index + 1 double.
+    pub fn paper_load(rows: usize, seed: u64) -> DataGenSpec {
+        DataGenSpec {
+            rows,
+            payload_cols: 1,
+            key_dist: KeyDist::Uniform {
+                domain: (rows as u64 * 2).max(1),
+            },
+            seed,
+        }
+    }
+}
+
+/// Generate one partition of a table for `rank` of `world`.
+/// `spec.rows` is the *total* row count; each rank gets its share
+/// (remainder spread over the first ranks).
+pub fn gen_partition(
+    spec: &DataGenSpec,
+    rank: usize,
+    world: usize,
+) -> Result<Table> {
+    if world == 0 || rank >= world {
+        return Err(RylonError::invalid(format!(
+            "bad rank/world {rank}/{world}"
+        )));
+    }
+    let base = spec.rows / world;
+    let extra = spec.rows % world;
+    let my_rows = base + (rank < extra) as usize;
+    let my_offset: usize =
+        base * rank + rank.min(extra);
+    // Independent stream per (seed, rank).
+    let mut rng = Xoshiro256::new(
+        spec.seed ^ crate::compute::hash::splitmix64(rank as u64),
+    );
+
+    let keys: Vec<i64> = match spec.key_dist {
+        KeyDist::Uniform { domain } => (0..my_rows)
+            .map(|_| rng.next_below(domain.max(1)) as i64)
+            .collect(),
+        KeyDist::Zipf { domain, s } => (0..my_rows)
+            .map(|_| rng.next_zipf(domain.max(1), s) as i64)
+            .collect(),
+        KeyDist::Sequential => {
+            (my_offset as i64..(my_offset + my_rows) as i64).collect()
+        }
+    };
+
+    let mut cols: Vec<(String, Column)> =
+        vec![("id".to_string(), Column::from_i64(keys))];
+    for c in 0..spec.payload_cols {
+        let vals: Vec<f64> =
+            (0..my_rows).map(|_| rng.next_normal() * 100.0).collect();
+        cols.push((format!("d{c}"), Column::from_f64(vals)));
+    }
+    let pairs: Vec<(&str, Column)> = cols
+        .iter()
+        .map(|(n, c)| (n.as_str(), c.clone()))
+        .collect();
+    Table::from_columns(pairs)
+}
+
+/// Generate a whole (single-partition) table.
+pub fn gen_table(spec: &DataGenSpec) -> Result<Table> {
+    gen_partition(spec, 0, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_cover_total_rows() {
+        let spec = DataGenSpec::paper_scaling(103, 7);
+        let world = 4;
+        let mut total = 0;
+        for r in 0..world {
+            let t = gen_partition(&spec, r, world).unwrap();
+            assert_eq!(t.num_columns(), 4); // id + 3 payloads
+            total += t.num_rows();
+        }
+        assert_eq!(total, 103);
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_rank() {
+        let spec = DataGenSpec::paper_load(50, 42);
+        let a = gen_partition(&spec, 1, 3).unwrap();
+        let b = gen_partition(&spec, 1, 3).unwrap();
+        assert_eq!(a, b);
+        let c = gen_partition(&spec, 2, 3).unwrap();
+        assert_ne!(
+            a.column(0).i64_values(),
+            c.column(0).i64_values()
+        );
+    }
+
+    #[test]
+    fn sequential_keys_are_global_offsets() {
+        let spec = DataGenSpec {
+            rows: 10,
+            payload_cols: 0,
+            key_dist: KeyDist::Sequential,
+            seed: 0,
+        };
+        let p0 = gen_partition(&spec, 0, 2).unwrap();
+        let p1 = gen_partition(&spec, 1, 2).unwrap();
+        assert_eq!(p0.column(0).i64_values(), &[0, 1, 2, 3, 4]);
+        assert_eq!(p1.column(0).i64_values(), &[5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn zipf_keys_skewed() {
+        let spec = DataGenSpec {
+            rows: 20_000,
+            payload_cols: 0,
+            key_dist: KeyDist::Zipf {
+                domain: 1000,
+                s: 1.2,
+            },
+            seed: 3,
+        };
+        let t = gen_table(&spec).unwrap();
+        let hot = t
+            .column(0)
+            .i64_values()
+            .iter()
+            .filter(|&&k| k == 0)
+            .count();
+        assert!(hot > 1000, "zipf head too small: {hot}");
+    }
+
+    #[test]
+    fn bad_rank_rejected() {
+        let spec = DataGenSpec::paper_load(10, 0);
+        assert!(gen_partition(&spec, 2, 2).is_err());
+        assert!(gen_partition(&spec, 0, 0).is_err());
+    }
+
+    #[test]
+    fn uniform_match_rate_near_half() {
+        // Two relations over domain 2n should inner-join to ≈ n/2 matches
+        // per the paper's workload design; sanity-check the generator.
+        let a = gen_table(&DataGenSpec::paper_scaling(20_000, 1)).unwrap();
+        let b = gen_table(&DataGenSpec::paper_scaling(20_000, 2)).unwrap();
+        let j = crate::ops::join::join(
+            &a,
+            &b,
+            &crate::ops::join::JoinOptions::inner("id", "id"),
+        )
+        .unwrap();
+        let ratio = j.num_rows() as f64 / 20_000.0;
+        assert!(ratio > 0.2 && ratio < 1.2, "ratio={ratio}");
+    }
+}

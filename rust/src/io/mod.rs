@@ -1,0 +1,7 @@
+//! Data ingress/egress: CSV (own parser — the paper's experiments load
+//! four-column CSVs) and deterministic synthetic generators matching the
+//! paper's workload shapes (§V "Dataset Formats").
+
+pub mod csv;
+pub mod datagen;
+pub mod ryf;

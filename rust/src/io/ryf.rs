@@ -1,0 +1,268 @@
+//! RYF — "rylon file", a minimal columnar container (the role Parquet
+//! plays in the paper's future-work list, §VIII: "we will be integrating
+//! HDF5 and Parquet data loading"). Row-grouped so distributed readers
+//! can fetch disjoint groups per rank without touching the rest of the
+//! file:
+//!
+//! ```text
+//! "RYF1" | u32 n_groups
+//! group 0 bytes (net::wire format) | group 1 bytes | …
+//! footer: n_groups × (u64 offset, u64 len, u64 rows) | u64 footer_off
+//! ```
+
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::error::{Result, RylonError};
+use crate::net::wire::{deserialize_table, serialize_table};
+use crate::table::Table;
+
+const MAGIC: &[u8; 4] = b"RYF1";
+
+/// One row group's footer entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupMeta {
+    pub offset: u64,
+    pub len: u64,
+    pub rows: u64,
+}
+
+/// Write `table` as an RYF file with row groups of `group_rows` rows.
+pub fn write_ryf(
+    table: &Table,
+    path: impl AsRef<Path>,
+    group_rows: usize,
+) -> Result<()> {
+    if group_rows == 0 {
+        return Err(RylonError::invalid("group_rows must be >= 1"));
+    }
+    let mut f = std::fs::File::create(path)?;
+    let n_groups = if table.num_rows() == 0 {
+        1
+    } else {
+        table.num_rows().div_ceil(group_rows)
+    };
+    f.write_all(MAGIC)?;
+    f.write_all(&(n_groups as u32).to_le_bytes())?;
+    let mut metas: Vec<GroupMeta> = Vec::with_capacity(n_groups);
+    let mut offset = (MAGIC.len() + 4) as u64;
+    for g in 0..n_groups {
+        let slice = table.slice(g * group_rows, group_rows);
+        let bytes = serialize_table(&slice);
+        f.write_all(&bytes)?;
+        metas.push(GroupMeta {
+            offset,
+            len: bytes.len() as u64,
+            rows: slice.num_rows() as u64,
+        });
+        offset += bytes.len() as u64;
+    }
+    let footer_off = offset;
+    for m in &metas {
+        f.write_all(&m.offset.to_le_bytes())?;
+        f.write_all(&m.len.to_le_bytes())?;
+        f.write_all(&m.rows.to_le_bytes())?;
+    }
+    f.write_all(&footer_off.to_le_bytes())?;
+    f.flush()?;
+    Ok(())
+}
+
+/// Open an RYF file: returns the group index (footer).
+pub fn read_ryf_footer(path: impl AsRef<Path>) -> Result<Vec<GroupMeta>> {
+    let mut f = std::fs::File::open(path)?;
+    let mut head = [0u8; 8];
+    f.read_exact(&mut head).map_err(|_| {
+        RylonError::parse("ryf: file too small for header")
+    })?;
+    if &head[..4] != MAGIC {
+        return Err(RylonError::parse("ryf: bad magic"));
+    }
+    let n_groups = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    f.seek(SeekFrom::End(-8))?;
+    let mut tail = [0u8; 8];
+    f.read_exact(&mut tail)?;
+    let footer_off = u64::from_le_bytes(tail);
+    f.seek(SeekFrom::Start(footer_off))?;
+    let mut metas = Vec::with_capacity(n_groups);
+    let mut entry = [0u8; 24];
+    for _ in 0..n_groups {
+        f.read_exact(&mut entry).map_err(|_| {
+            RylonError::parse("ryf: truncated footer")
+        })?;
+        metas.push(GroupMeta {
+            offset: u64::from_le_bytes(entry[0..8].try_into().unwrap()),
+            len: u64::from_le_bytes(entry[8..16].try_into().unwrap()),
+            rows: u64::from_le_bytes(entry[16..24].try_into().unwrap()),
+        });
+    }
+    Ok(metas)
+}
+
+/// Read one row group.
+pub fn read_ryf_group(
+    path: impl AsRef<Path>,
+    meta: &GroupMeta,
+) -> Result<Table> {
+    let mut f = std::fs::File::open(path)?;
+    f.seek(SeekFrom::Start(meta.offset))?;
+    let mut buf = vec![0u8; meta.len as usize];
+    f.read_exact(&mut buf).map_err(|_| {
+        RylonError::parse("ryf: truncated row group")
+    })?;
+    deserialize_table(&buf)
+}
+
+/// Read the whole file.
+pub fn read_ryf(path: impl AsRef<Path>) -> Result<Table> {
+    let metas = read_ryf_footer(&path)?;
+    let mut parts = Vec::with_capacity(metas.len());
+    for m in &metas {
+        parts.push(read_ryf_group(&path, m)?);
+    }
+    let schema = parts
+        .first()
+        .map(|t| t.schema().clone())
+        .ok_or_else(|| RylonError::parse("ryf: no groups"))?;
+    Table::concat_all(&schema, &parts)
+}
+
+/// Read this rank's share of row groups (block distribution over
+/// groups) — the distributed ingest path.
+pub fn read_ryf_partition(
+    path: impl AsRef<Path>,
+    rank: usize,
+    world: usize,
+) -> Result<Table> {
+    if world == 0 || rank >= world {
+        return Err(RylonError::invalid("bad rank/world"));
+    }
+    let metas = read_ryf_footer(&path)?;
+    let mut parts = Vec::new();
+    let mut schema = None;
+    for (g, m) in metas.iter().enumerate() {
+        let t = if g % world == rank {
+            read_ryf_group(&path, m)?
+        } else if schema.is_none() {
+            // Read the first group only for its schema.
+            let t = read_ryf_group(&path, m)?;
+            schema = Some(t.schema().clone());
+            continue;
+        } else {
+            continue;
+        };
+        if schema.is_none() {
+            schema = Some(t.schema().clone());
+        }
+        parts.push(t);
+    }
+    let schema = schema
+        .ok_or_else(|| RylonError::parse("ryf: empty file"))?;
+    Table::concat_all(&schema, &parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    fn t(n: usize) -> Table {
+        Table::from_columns(vec![
+            ("id", Column::from_i64((0..n as i64).collect())),
+            (
+                "s",
+                Column::from_opt_str(
+                    &(0..n)
+                        .map(|i| {
+                            if i % 7 == 0 {
+                                None
+                            } else {
+                                Some(format!("row{i}"))
+                            }
+                        })
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+        .unwrap()
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("rylon_ryf_{name}"))
+    }
+
+    #[test]
+    fn roundtrip_multiple_groups() {
+        let path = tmp("rt");
+        let table = t(1000);
+        write_ryf(&table, &path, 128).unwrap();
+        let metas = read_ryf_footer(&path).unwrap();
+        assert_eq!(metas.len(), 8); // ceil(1000/128)
+        assert_eq!(metas.iter().map(|m| m.rows).sum::<u64>(), 1000);
+        let back = read_ryf(&path).unwrap();
+        assert_eq!(back, table);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn single_group_and_empty() {
+        let path = tmp("small");
+        write_ryf(&t(3), &path, 1000).unwrap();
+        assert_eq!(read_ryf(&path).unwrap().num_rows(), 3);
+        let empty = Table::empty(t(1).schema().clone());
+        write_ryf(&empty, &path, 10).unwrap();
+        assert_eq!(read_ryf(&path).unwrap().num_rows(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn partitioned_read_covers_all_groups() {
+        let path = tmp("part");
+        let table = t(500);
+        write_ryf(&table, &path, 64).unwrap();
+        let world = 3;
+        let mut total = 0;
+        let mut ids = Vec::new();
+        for r in 0..world {
+            let p = read_ryf_partition(&path, r, world).unwrap();
+            total += p.num_rows();
+            ids.extend(p.column(0).i64_values().to_vec());
+        }
+        assert_eq!(total, 500);
+        ids.sort();
+        assert_eq!(ids, (0..500).collect::<Vec<_>>());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn group_reads_are_independent() {
+        let path = tmp("grp");
+        write_ryf(&t(100), &path, 30).unwrap();
+        let metas = read_ryf_footer(&path).unwrap();
+        let g2 = read_ryf_group(&path, &metas[2]).unwrap();
+        assert_eq!(g2.column(0).i64_values()[0], 60);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let path = tmp("bad");
+        write_ryf(&t(10), &path, 5).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_ryf_footer(&path).is_err());
+        std::fs::write(&path, b"tiny").unwrap();
+        assert!(read_ryf_footer(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_args() {
+        let path = tmp("args");
+        assert!(write_ryf(&t(5), &path, 0).is_err());
+        write_ryf(&t(5), &path, 2).unwrap();
+        assert!(read_ryf_partition(&path, 3, 3).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

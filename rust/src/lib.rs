@@ -1,0 +1,74 @@
+//! # Rylon — HPC data engineering with a distributed table abstraction
+//!
+//! Rylon is a reproduction of *"Data Engineering for HPC with Python"*
+//! (Abeykoon et al., CS.DC 2020 — the Cylon/PyCylon paper) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: an Arrow-like columnar
+//!   [`table::Table`], the six relational-algebra operators of the paper's
+//!   Table I ([`ops`]), an MPI-like communicator with a non-blocking
+//!   AllToAll shuffle ([`net`]), and data-parallel distributed operators
+//!   ([`dist`]). One worker = one thread (paper §III-B).
+//! * **L2/L1 (build time)** — JAX graphs calling Pallas kernels for the
+//!   numeric hot-spots (hash-partition, table→tensor featurize), AOT
+//!   lowered to HLO text and executed from Rust through PJRT
+//!   ([`runtime`]). Python never runs on the data path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use rylon::prelude::*;
+//!
+//! let left = read_csv("left.csv", &CsvOptions::default()).unwrap();
+//! let right = read_csv("right.csv", &CsvOptions::default()).unwrap();
+//! let joined = join(&left, &right, &JoinOptions::inner("id", "id")).unwrap();
+//! println!("{}", joined.pretty(5));
+//! ```
+//!
+//! Distributed execution mirrors the PyCylon API: the same operator names
+//! with a `dist_` prefix, run inside a [`dist::Cluster`] whose ranks talk
+//! through a pluggable [`net::Fabric`] (threads + channels for real
+//! concurrency, or the calibrated BSP simulator used for the paper's
+//! scaling figures — see DESIGN.md §3).
+
+pub mod error;
+pub mod util;
+pub mod conf;
+pub mod types;
+pub mod buffer;
+pub mod column;
+pub mod table;
+pub mod io;
+pub mod compute;
+pub mod ops;
+pub mod net;
+pub mod dist;
+pub mod pipeline;
+pub mod sql;
+pub mod runtime;
+pub mod binding;
+pub mod baselines;
+pub mod metrics;
+pub mod bench_harness;
+
+pub use error::{Result, RylonError};
+
+/// Convenience re-exports covering the public API surface.
+pub mod prelude {
+    pub use crate::column::Column;
+    pub use crate::dist::{Cluster, DistConfig};
+    pub use crate::error::{Result, RylonError};
+    pub use crate::io::csv::{read_csv, write_csv, CsvOptions};
+    pub use crate::io::datagen::{gen_table, DataGenSpec};
+    pub use crate::ops::groupby::{groupby, Agg, GroupByOptions};
+    pub use crate::ops::join::{join, JoinAlgo, JoinOptions, JoinType};
+    pub use crate::ops::orderby::{orderby, SortKey, SortOrder};
+    pub use crate::ops::project::project;
+    pub use crate::ops::select::select;
+    pub use crate::ops::set_ops::{difference, intersect, union};
+    pub use crate::table::Table;
+    pub use crate::types::{DataType, Field, Schema, Value};
+}
+
+/// Crate version string (mirrored into metrics output and the CLI).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

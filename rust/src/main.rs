@@ -1,0 +1,466 @@
+//! `rylon` — the launcher/CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   gen      generate a synthetic CSV workload
+//!   inspect  read a CSV, print schema + head
+//!   join     distributed join of two CSVs (threads or sim fabric)
+//!   etl      run the demo ETL pipeline end-to-end
+//!   bench    regenerate a paper figure (--fig fig10|fig11|fig12|ablations)
+//!
+//! `--config path.toml` loads a [`rylon::conf::RylonConfig`]; flags
+//! override config values. Run `rylon help` for flag details.
+
+use std::collections::HashMap;
+
+use rylon::bench_harness::{figures, BenchOpts};
+use rylon::conf::RylonConfig;
+use rylon::dist::{Cluster, DistConfig, FabricKind};
+use rylon::error::{Result, RylonError};
+use rylon::io::csv::{read_csv, write_csv, CsvOptions};
+use rylon::io::datagen::{gen_table, DataGenSpec, KeyDist};
+use rylon::ops::groupby::{Agg, GroupByOptions};
+use rylon::ops::join::JoinOptions;
+use rylon::pipeline::{Env, Pipeline};
+use rylon::runtime::Runtime;
+use rylon::util::fmt::{human_bytes, human_count};
+
+const HELP: &str = "\
+rylon — HPC data engineering with a distributed table abstraction
+(reproduction of 'Data Engineering for HPC with Python', CS.DC 2020)
+
+USAGE: rylon <command> [flags]
+
+COMMANDS
+  gen      --rows N [--payload-cols K] [--dist uniform|zipf|seq]
+           [--seed S] --out FILE.csv
+  inspect  --in FILE.csv [--rows N]
+  join     --left L.csv --right R.csv --on KEY [--how inner|left|right|outer]
+           [--algo sort|hash] [--world P] [--fabric threads|sim] [--out F.csv]
+  etl      [--rows N] [--world P] [--fabric threads|sim]
+           [--artifacts DIR]   (end-to-end demo pipeline + tensor bridge)
+  bench    --fig fig10|fig11|fig12|ablations [--rows N] [--samples K]
+           [--max-world P] [--artifacts DIR]
+  sql      --query 'SELECT …' --tables name=a.csv,name2=b.csv
+           [--out FILE.csv]
+  help
+
+GLOBAL FLAGS
+  --config FILE.toml    load defaults from a config file
+";
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut flags = HashMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| {
+                    RylonError::invalid(format!(
+                        "expected --flag, got '{}'",
+                        argv[i]
+                    ))
+                })?
+                .to_string();
+            let v = argv.get(i + 1).cloned().ok_or_else(|| {
+                RylonError::invalid(format!("flag --{k} needs a value"))
+            })?;
+            flags.insert(k, v);
+            i += 2;
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn req(&self, key: &str) -> Result<&str> {
+        self.str(key).ok_or_else(|| {
+            RylonError::invalid(format!("missing required flag --{key}"))
+        })
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.str(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+fn load_config(args: &Args) -> Result<RylonConfig> {
+    match args.str("config") {
+        Some(path) => RylonConfig::load(path),
+        None => Ok(RylonConfig::default()),
+    }
+}
+
+fn make_cluster(
+    args: &Args,
+    cfg: &RylonConfig,
+    world: usize,
+) -> Result<Cluster> {
+    let fabric = args.str("fabric").unwrap_or(&cfg.fabric).to_string();
+    let kind = match fabric.as_str() {
+        "threads" => FabricKind::Threads,
+        "sim" => FabricKind::Sim(cfg.cost),
+        other => {
+            return Err(RylonError::invalid(format!(
+                "unknown fabric '{other}' (threads|sim)"
+            )))
+        }
+    };
+    Cluster::new(DistConfig {
+        world,
+        fabric: kind,
+        shuffle_chunk_rows: cfg.shuffle_chunk_rows,
+    })
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let rows = args.usize_or("rows", 100_000);
+    let payload = args.usize_or("payload-cols", 3);
+    let seed = args.usize_or("seed", 42) as u64;
+    let out = args.req("out")?;
+    let key_dist = match args.str("dist").unwrap_or("uniform") {
+        "uniform" => KeyDist::Uniform {
+            domain: (rows as u64 * 2).max(1),
+        },
+        "zipf" => KeyDist::Zipf {
+            domain: (rows as u64 * 2).max(1),
+            s: 1.1,
+        },
+        "seq" => KeyDist::Sequential,
+        other => {
+            return Err(RylonError::invalid(format!(
+                "unknown key dist '{other}'"
+            )))
+        }
+    };
+    let t = gen_table(&DataGenSpec {
+        rows,
+        payload_cols: payload,
+        key_dist,
+        seed,
+    })?;
+    write_csv(&t, out, &CsvOptions::default())?;
+    println!(
+        "wrote {} rows × {} cols ({}) to {out}",
+        human_count(t.num_rows() as u64),
+        t.num_columns(),
+        human_bytes(t.byte_size() as u64),
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args.req("in")?;
+    let t = read_csv(path, &CsvOptions::default())?;
+    println!("schema: {}", t.schema());
+    println!(
+        "rows: {}   bytes: {}",
+        human_count(t.num_rows() as u64),
+        human_bytes(t.byte_size() as u64)
+    );
+    println!("{}", t.pretty(args.usize_or("rows", 10)));
+    Ok(())
+}
+
+fn cmd_join(args: &Args, cfg: &RylonConfig) -> Result<()> {
+    let left = read_csv(args.req("left")?, &CsvOptions::default())?;
+    let right = read_csv(args.req("right")?, &CsvOptions::default())?;
+    let on = args.req("on")?;
+    let how = args.str("how").unwrap_or("inner");
+    let jt = rylon::ops::join::JoinType::parse(how)
+        .ok_or_else(|| RylonError::invalid(format!("bad --how {how}")))?;
+    let algo = rylon::ops::join::JoinAlgo::parse(
+        args.str("algo").unwrap_or("sort"),
+    )
+    .ok_or_else(|| RylonError::invalid("bad --algo"))?;
+    let opts = JoinOptions::new(jt, &[on], &[on]).with_algo(algo);
+    let world = args.usize_or("world", cfg.world);
+
+    let timer = rylon::metrics::Timer::start();
+    let cluster = make_cluster(args, cfg, world)?;
+    let outs = cluster.run(|ctx| {
+        // Block-partition the inputs across ranks.
+        let slice = |t: &rylon::table::Table| {
+            let n = t.num_rows();
+            let base = n / ctx.size;
+            let extra = n % ctx.size;
+            let my = base + (ctx.rank < extra) as usize;
+            let off = base * ctx.rank + ctx.rank.min(extra);
+            t.slice(off, my)
+        };
+        rylon::dist::dist_join(ctx, &slice(&left), &slice(&right), &opts)
+    })?;
+    let total: usize = outs.iter().map(|t| t.num_rows()).sum();
+    println!(
+        "join produced {} rows across {world} ranks in {:.3}s{}",
+        human_count(total as u64),
+        timer.seconds(),
+        cluster
+            .makespan()
+            .map(|m| format!(" (simulated makespan {m:.4}s)"))
+            .unwrap_or_default()
+    );
+    if let Some(out) = args.str("out") {
+        let merged =
+            rylon::table::Table::concat_all(outs[0].schema(), &outs)?;
+        write_csv(&merged, out, &CsvOptions::default())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_etl(args: &Args, cfg: &RylonConfig) -> Result<()> {
+    let rows = args.usize_or("rows", 200_000);
+    let world = args.usize_or("world", cfg.world);
+    let artifacts_dir = args
+        .str("artifacts")
+        .unwrap_or(&cfg.artifacts_dir)
+        .to_string();
+    println!("== rylon etl: {rows} rows, {world} ranks ==");
+
+    // The demo ETL: filter → fact ⋈ dim → groupby → global sort.
+    let pipeline = Pipeline::new()
+        .select("d0 > 0")?
+        .join("dim", JoinOptions::inner("id", "id"))
+        .groupby(GroupByOptions::new(
+            &["id"],
+            vec![Agg::sum("d1"), Agg::count("d1"), Agg::mean("d2")],
+        ))
+        .orderby(vec![rylon::ops::orderby::SortKey::desc("sum_d1")]);
+
+    let timer = rylon::metrics::Timer::start();
+    let cluster = make_cluster(args, cfg, world)?;
+    let outs = cluster.run(|ctx| {
+        let fact = rylon::io::datagen::gen_partition(
+            &DataGenSpec::paper_scaling(rows, 0xFAC7),
+            ctx.rank,
+            ctx.size,
+        )?;
+        let dim = rylon::io::datagen::gen_partition(
+            &DataGenSpec {
+                rows: (rows / 10).max(1),
+                payload_cols: 1,
+                key_dist: KeyDist::Sequential,
+                seed: 0xD17,
+            },
+            ctx.rank,
+            ctx.size,
+        )?;
+        let mut env = Env::new();
+        env.insert("dim".to_string(), dim);
+        pipeline.run_dist(ctx, &fact, &env)
+    })?;
+    let total: usize = outs.iter().map(|(t, _)| t.num_rows()).sum();
+    let mut phases = rylon::metrics::Phases::new();
+    for (_, p) in &outs {
+        phases.merge(p);
+    }
+    println!(
+        "pipeline: {} result rows in {:.3}s wall{}",
+        human_count(total as u64),
+        timer.seconds(),
+        cluster
+            .makespan()
+            .map(|m| format!(", simulated makespan {m:.4}s"))
+            .unwrap_or_default()
+    );
+    println!("stage seconds (sum over ranks): {}", phases.to_json().to_string());
+
+    // Tensor bridge: featurize rank 0's numeric result columns (the
+    // paper's Fig 1 handoff to data analytics).
+    let (head, _) = &outs[0];
+    if !head.is_empty() {
+        let rt = Runtime::open(&artifacts_dir).ok();
+        let bridge = match &rt {
+            Some(rt) => rylon::runtime::FeaturizeKernel::new(rt),
+            None => rylon::runtime::FeaturizeKernel::native(),
+        };
+        let sum_col = head.column_by_name("sum_d1")?.cast_f64()?;
+        let cnt_col = head.column_by_name("count_d1")?.cast_f64()?;
+        let rows_n = sum_col.len();
+        let mut x = Vec::with_capacity(rows_n * 2);
+        for i in 0..rows_n {
+            x.push(sum_col[i] as f32);
+            x.push(cnt_col[i] as f32);
+        }
+        let feats = bridge.run(&x, rows_n, 2)?;
+        println!(
+            "tensor bridge ({}): {}×{} features, mean[0]={:.3} inv_std[0]={:.3}",
+            if rt.is_some() { "pjrt" } else { "native" },
+            feats.rows,
+            feats.cols,
+            feats.mean[0],
+            feats.inv_std[0]
+        );
+    }
+    println!("head:\n{}", outs[0].0.pretty(5));
+    Ok(())
+}
+
+fn cmd_bench(args: &Args, cfg: &RylonConfig) -> Result<()> {
+    let which = args.req("fig")?;
+    let samples = args.usize_or("samples", 3);
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        samples,
+    };
+    let cost = cfg.cost;
+    match which {
+        "fig10" => {
+            let rows = args.usize_or("rows", 2_000_000);
+            let max_world = args.usize_or("max-world", 160);
+            let worlds: Vec<usize> = [1usize, 2, 4, 8, 16, 32, 64, 128, 160]
+                .into_iter()
+                .filter(|&w| w <= max_world)
+                .collect();
+            let r = figures::fig10(
+                rows,
+                &worlds,
+                &["rylon", "spark_sim", "dask_sim", "modin_sim"],
+                opts,
+                cost,
+            )?;
+            println!("{}", r.render());
+            r.save("fig10")?;
+        }
+        "fig11" => {
+            let world = args.usize_or("max-world", 200);
+            let base = args.usize_or("rows", 2_000_000);
+            let sweep: Vec<usize> =
+                [1usize, 5, 10, 25, 50].iter().map(|&m| base * m).collect();
+            let r = figures::fig11(&sweep, world, opts, cost)?;
+            println!("{}", r.render());
+            r.save("fig11")?;
+        }
+        "fig12" => {
+            let rows = args.usize_or("rows", 2_000_000);
+            let rt = Runtime::open(
+                args.str("artifacts").unwrap_or(&cfg.artifacts_dir),
+            )
+            .ok();
+            if rt.is_none() {
+                eprintln!(
+                    "note: artifacts not found — pjrt arm uses native fallback"
+                );
+            }
+            let workers: Vec<usize> = [1, 2, 4, 8, 16, 32, 64, 128, 160]
+                .into_iter()
+                .filter(|&w| w <= args.usize_or("max-world", 160))
+                .collect();
+            let r = figures::fig12(rows, &workers, rt.as_ref(), opts)?;
+            println!("{}", r.render());
+            r.save("fig12")?;
+        }
+        "ablations" => {
+            let rows = args.usize_or("rows", 500_000);
+            for (name, r) in [
+                (
+                    "join_algo",
+                    figures::ablation_join_algo(
+                        &[rows / 10, rows / 2, rows],
+                        opts,
+                    )?,
+                ),
+                (
+                    "fabric",
+                    figures::ablation_fabric(
+                        rows,
+                        &[1, 4, 16, 64, 160],
+                        &[1e-6, 5e-6, 5e-5],
+                        opts,
+                    )?,
+                ),
+                (
+                    "chunk",
+                    figures::ablation_chunk(
+                        rows,
+                        16,
+                        &[256, 4096, 65536, 1 << 20],
+                        opts,
+                    )?,
+                ),
+                (
+                    "groupby",
+                    figures::ablation_groupby(rows, 16, 1000, opts)?,
+                ),
+            ] {
+                println!("{}", r.render());
+                r.save(&format!("ablation_{name}"))?;
+            }
+        }
+        other => {
+            return Err(RylonError::invalid(format!(
+                "unknown figure '{other}' (fig10|fig11|fig12|ablations)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sql(args: &Args) -> Result<()> {
+    let query = args.req("query")?;
+    let mut env = Env::new();
+    for spec in args.req("tables")?.split(',') {
+        let (name, path) = spec.split_once('=').ok_or_else(|| {
+            RylonError::invalid(format!(
+                "bad --tables entry '{spec}' (want name=path.csv)"
+            ))
+        })?;
+        env.insert(
+            name.trim().to_string(),
+            read_csv(path.trim(), &CsvOptions::default())?,
+        );
+    }
+    let timer = rylon::metrics::Timer::start();
+    let out = rylon::sql::execute_local(query, &env)?;
+    println!(
+        "{} rows in {:.3}s\n{}",
+        human_count(out.num_rows() as u64),
+        timer.seconds(),
+        out.pretty(20)
+    );
+    if let Some(path) = args.str("out") {
+        write_csv(&out, path, &CsvOptions::default())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let cfg = load_config(&args)?;
+    match args.cmd.as_str() {
+        "gen" => cmd_gen(&args),
+        "inspect" => cmd_inspect(&args),
+        "join" => cmd_join(&args, &cfg),
+        "etl" => cmd_etl(&args, &cfg),
+        "bench" => cmd_bench(&args, &cfg),
+        "sql" => cmd_sql(&args),
+        "help" | "-h" | "--help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(RylonError::invalid(format!(
+            "unknown command '{other}' — try `rylon help`"
+        ))),
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("rylon: {e}");
+        std::process::exit(1);
+    }
+}

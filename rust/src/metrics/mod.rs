@@ -1,0 +1,122 @@
+//! Lightweight metrics: scoped timers, counters, and per-phase
+//! compute/comm breakdowns emitted as JSON by the CLI and benches.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Wall-clock scoped timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulating phase breakdown (e.g. partition / shuffle / local-op).
+#[derive(Debug, Default, Clone)]
+pub struct Phases {
+    phases: BTreeMap<String, f64>,
+    counters: BTreeMap<String, u64>,
+}
+
+impl Phases {
+    pub fn new() -> Phases {
+        Phases::default()
+    }
+
+    /// Time a closure under a named phase.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add_seconds(phase, t.seconds());
+        out
+    }
+
+    pub fn add_seconds(&mut self, phase: &str, secs: f64) {
+        *self.phases.entry(phase.to_string()).or_insert(0.0) += secs;
+    }
+
+    pub fn count(&mut self, counter: &str, n: u64) {
+        *self.counters.entry(counter.to_string()).or_insert(0) += n;
+    }
+
+    pub fn seconds(&self, phase: &str) -> f64 {
+        self.phases.get(phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn counter(&self, counter: &str) -> u64 {
+        self.counters.get(counter).copied().unwrap_or(0)
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.phases.values().sum()
+    }
+
+    /// Merge another breakdown (e.g. fold per-rank phases).
+    pub fn merge(&mut self, other: &Phases) {
+        for (k, v) in &other.phases {
+            self.add_seconds(k, *v);
+        }
+        for (k, v) in &other.counters {
+            self.count(k, *v);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        for (k, v) in &self.phases {
+            pairs.push((k.as_str(), Json::num(*v)));
+        }
+        for (k, v) in &self.counters {
+            pairs.push((k.as_str(), Json::num(*v as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.seconds() >= 0.004);
+    }
+
+    #[test]
+    fn phases_accumulate_and_merge() {
+        let mut p = Phases::new();
+        let out = p.time("sort", || 42);
+        assert_eq!(out, 42);
+        p.add_seconds("sort", 1.0);
+        p.add_seconds("shuffle", 0.5);
+        p.count("bytes", 100);
+        let mut q = Phases::new();
+        q.add_seconds("sort", 2.0);
+        q.count("bytes", 20);
+        p.merge(&q);
+        assert!(p.seconds("sort") >= 3.0);
+        assert_eq!(p.counter("bytes"), 120);
+        assert!(p.total_seconds() >= 3.5);
+        let j = p.to_json().to_string();
+        assert!(j.contains("shuffle"));
+        assert!(j.contains("bytes"));
+    }
+}

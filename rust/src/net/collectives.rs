@@ -1,0 +1,204 @@
+//! MPI-like collectives derived from the [`Fabric::exchange`] primitive:
+//! barrier, gather, allgather, bcast, allreduce. These are what the
+//! distributed operators and the sample-sort splitter exchange use; the
+//! user-facing API never sees them (paper §IV: "We do not expose the
+//! communication API to the data scientist").
+
+use crate::error::Result;
+use crate::net::{Fabric, OutBufs, ReduceOp};
+
+/// Synchronise all ranks.
+pub fn barrier(fabric: &dyn Fabric, rank: usize) -> Result<()> {
+    let empty: OutBufs = vec![Vec::new(); fabric.size()];
+    fabric.exchange(rank, empty)?;
+    Ok(())
+}
+
+/// Gather every rank's buffer at `root`. Returns `Some(bufs)` (indexed
+/// by source rank) at the root, `None` elsewhere.
+pub fn gather(
+    fabric: &dyn Fabric,
+    rank: usize,
+    root: usize,
+    data: Vec<u8>,
+) -> Result<Option<Vec<Vec<u8>>>> {
+    let size = fabric.size();
+    let mut out: OutBufs = vec![Vec::new(); size];
+    out[root] = data;
+    let incoming = fabric.exchange(rank, out)?;
+    if rank == root {
+        Ok(Some(incoming))
+    } else {
+        Ok(None)
+    }
+}
+
+/// Every rank receives every rank's buffer (indexed by source).
+pub fn allgather(
+    fabric: &dyn Fabric,
+    rank: usize,
+    data: Vec<u8>,
+) -> Result<Vec<Vec<u8>>> {
+    let size = fabric.size();
+    let out: OutBufs = (0..size).map(|_| data.clone()).collect();
+    fabric.exchange(rank, out)
+}
+
+/// Broadcast `root`'s buffer to every rank.
+pub fn bcast(
+    fabric: &dyn Fabric,
+    rank: usize,
+    root: usize,
+    data: Vec<u8>,
+) -> Result<Vec<u8>> {
+    let size = fabric.size();
+    let out: OutBufs = if rank == root {
+        (0..size).map(|_| data.clone()).collect()
+    } else {
+        vec![Vec::new(); size]
+    };
+    let mut incoming = fabric.exchange(rank, out)?;
+    Ok(std::mem::take(&mut incoming[root]))
+}
+
+/// Element-wise allreduce over an f64 vector.
+pub fn allreduce_f64(
+    fabric: &dyn Fabric,
+    rank: usize,
+    vals: &[f64],
+    op: ReduceOp,
+) -> Result<Vec<f64>> {
+    let bytes: Vec<u8> =
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+    let all = allgather(fabric, rank, bytes)?;
+    let mut acc = vals.to_vec();
+    for (src, buf) in all.iter().enumerate() {
+        if src == rank {
+            continue;
+        }
+        for (i, chunk) in buf.chunks_exact(8).enumerate() {
+            let v = f64::from_le_bytes(chunk.try_into().unwrap());
+            acc[i] = op.fold(acc[i], v);
+        }
+    }
+    Ok(acc)
+}
+
+/// Element-wise allreduce over a u64 vector (exact, no f64 rounding).
+pub fn allreduce_u64(
+    fabric: &dyn Fabric,
+    rank: usize,
+    vals: &[u64],
+    op: ReduceOp,
+) -> Result<Vec<u64>> {
+    let bytes: Vec<u8> =
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+    let all = allgather(fabric, rank, bytes)?;
+    let mut acc = vals.to_vec();
+    for (src, buf) in all.iter().enumerate() {
+        if src == rank {
+            continue;
+        }
+        for (i, chunk) in buf.chunks_exact(8).enumerate() {
+            let v = u64::from_le_bytes(chunk.try_into().unwrap());
+            acc[i] = match op {
+                ReduceOp::Sum => acc[i] + v,
+                ReduceOp::Min => acc[i].min(v),
+                ReduceOp::Max => acc[i].max(v),
+            };
+        }
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::local::LocalFabric;
+    use std::sync::Arc;
+
+    fn run<F, T>(size: usize, f: F) -> Vec<T>
+    where
+        F: Fn(usize, Arc<LocalFabric>) -> T + Send + Sync + 'static,
+        T: Send + 'static,
+    {
+        let fabric = Arc::new(LocalFabric::new(size));
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..size)
+            .map(|r| {
+                let fab = Arc::clone(&fabric);
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || f(r, fab))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn barrier_completes() {
+        run(4, |rank, fab| {
+            for _ in 0..5 {
+                barrier(fab.as_ref(), rank).unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn gather_collects_at_root() {
+        let results = run(4, |rank, fab| {
+            gather(fab.as_ref(), rank, 2, vec![rank as u8]).unwrap()
+        });
+        for (rank, r) in results.iter().enumerate() {
+            if rank == 2 {
+                let bufs = r.as_ref().unwrap();
+                assert_eq!(
+                    bufs.iter().map(|b| b[0]).collect::<Vec<_>>(),
+                    vec![0, 1, 2, 3]
+                );
+            } else {
+                assert!(r.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_everyone_sees_all() {
+        let results = run(3, |rank, fab| {
+            allgather(fab.as_ref(), rank, vec![rank as u8 * 10]).unwrap()
+        });
+        for r in results {
+            assert_eq!(r.iter().map(|b| b[0]).collect::<Vec<_>>(), vec![
+                0, 10, 20
+            ]);
+        }
+    }
+
+    #[test]
+    fn bcast_from_root() {
+        let results = run(3, |rank, fab| {
+            let data = if rank == 1 { b"hello".to_vec() } else { vec![] };
+            bcast(fab.as_ref(), rank, 1, data).unwrap()
+        });
+        for r in results {
+            assert_eq!(r, b"hello");
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_min_max() {
+        let results = run(4, |rank, fab| {
+            let v = vec![rank as f64, 1.0];
+            (
+                allreduce_f64(fab.as_ref(), rank, &v, ReduceOp::Sum).unwrap(),
+                allreduce_f64(fab.as_ref(), rank, &v, ReduceOp::Max).unwrap(),
+                allreduce_u64(fab.as_ref(), rank, &[rank as u64], ReduceOp::Min)
+                    .unwrap(),
+            )
+        });
+        for (sum, max, min) in results {
+            assert_eq!(sum, vec![6.0, 4.0]);
+            assert_eq!(max, vec![3.0, 1.0]);
+            assert_eq!(min, vec![0]);
+        }
+    }
+}

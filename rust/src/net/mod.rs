@@ -1,0 +1,146 @@
+//! The communication layer — the role OpenMPI plays for Cylon (§III-C).
+//!
+//! Everything is built on one rendezvous primitive, [`Fabric::exchange`]
+//! (a synchronous AllToAllv: every rank contributes a byte buffer per
+//! destination and receives one per source), exactly the collective the
+//! paper implements "utilizing the asynchronous send and receive
+//! capabilities of the underlying communication framework". The MPI-like
+//! collectives (barrier / gather / allgather / bcast / allreduce) derive
+//! from it in [`collectives`].
+//!
+//! Two fabrics implement the primitive:
+//! * [`local::LocalFabric`] — real shared-memory rendezvous between rank
+//!   threads (one thread per worker, paper §III-B). Used by every
+//!   correctness test.
+//! * [`sim::SimFabric`] — the same rendezvous *plus* a calibrated BSP
+//!   cost model: per-rank compute is metered with per-thread CPU clocks
+//!   and communication is charged `α·(p−1) + bytes/β`, yielding the
+//!   simulated makespan used for the paper's scaling figures on this
+//!   single-core box (DESIGN.md §3).
+
+pub mod collectives;
+pub mod local;
+pub mod sim;
+pub mod wire;
+
+use std::sync::Arc;
+
+use crate::error::Result;
+
+/// Per-destination byte buffers for one rank's contribution to an
+/// exchange. `msgs[d]` goes to rank `d`; empty buffers are allowed.
+pub type OutBufs = Vec<Vec<u8>>;
+
+/// The communication substrate shared by all ranks of one job.
+///
+/// All methods are called *by rank threads* and block until every rank
+/// of the job has arrived (BSP superstep semantics).
+pub trait Fabric: Send + Sync {
+    /// Number of ranks.
+    fn size(&self) -> usize;
+
+    /// Synchronous AllToAllv: deliver `outgoing[d]` to rank `d`; returns
+    /// `incoming[s]` = the buffer rank `s` addressed to us.
+    fn exchange(&self, rank: usize, outgoing: OutBufs) -> Result<OutBufs>;
+
+    /// Fold the calling rank's compute time accrued since its last
+    /// fabric call into the fabric's cost model (no-op on fabrics
+    /// without a model).
+    fn tick_compute(&self, rank: usize) {
+        let _ = rank;
+    }
+
+    /// Simulated elapsed seconds for `rank` (wall-clock fabrics return
+    /// `None`; callers fall back to real timers).
+    fn model_time(&self, rank: usize) -> Option<f64> {
+        let _ = rank;
+        None
+    }
+}
+
+/// Shared handle to a fabric.
+pub type FabricRef = Arc<dyn Fabric>;
+
+/// Reduction operators for `allreduce`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Min,
+    Max,
+}
+
+impl ReduceOp {
+    pub fn fold(&self, a: f64, b: f64) -> f64 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Min => a.min(b),
+            ReduceOp::Max => a.max(b),
+        }
+    }
+}
+
+/// Cost-model parameters for the simulated fabric, calibrated to the
+/// paper's testbed (40 Gbps Infiniband, OpenMPI, 40 cores/node; §V
+/// "Hardware Setup").
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Per-message latency in seconds (MPI pt2pt over IB ≈ a few µs).
+    pub alpha: f64,
+    /// Cross-node link bandwidth in bytes/second.
+    pub beta: f64,
+    /// Ranks per node (40 in the paper's runs) — ranks on the same node
+    /// exchange through shared memory at `beta_local`.
+    pub ranks_per_node: usize,
+    /// Intra-node bandwidth in bytes/second (shared-memory copies).
+    pub beta_local: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            alpha: 5e-6,           // 5 µs MPI message setup
+            beta: 40e9 / 8.0 * 0.8, // 40 Gbps IB × 80% protocol efficiency
+            ranks_per_node: 40,
+            beta_local: 8e9, // shared-memory copy bandwidth
+        }
+    }
+}
+
+impl CostModel {
+    /// Seconds to move `bytes` between `src` and `dst` ranks.
+    pub fn pt2pt_cost(&self, src: usize, dst: usize, bytes: usize) -> f64 {
+        if src == dst {
+            // Local "send to self" is a buffer move.
+            return bytes as f64 / self.beta_local;
+        }
+        let same_node =
+            src / self.ranks_per_node == dst / self.ranks_per_node;
+        let bw = if same_node { self.beta_local } else { self.beta };
+        self.alpha + bytes as f64 / bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_ops() {
+        assert_eq!(ReduceOp::Sum.fold(1.0, 2.0), 3.0);
+        assert_eq!(ReduceOp::Min.fold(1.0, 2.0), 1.0);
+        assert_eq!(ReduceOp::Max.fold(1.0, 2.0), 2.0);
+    }
+
+    #[test]
+    fn cost_model_shape() {
+        let m = CostModel::default();
+        // Latency dominates tiny messages.
+        assert!(m.pt2pt_cost(0, 100, 8) >= m.alpha);
+        // Same-node transfers are cheaper than cross-node.
+        assert!(
+            m.pt2pt_cost(0, 1, 1_000_000) < m.pt2pt_cost(0, 100, 1_000_000)
+        );
+        // Self-delivery has no latency term.
+        assert_eq!(m.pt2pt_cost(3, 3, 0), 0.0);
+    }
+}

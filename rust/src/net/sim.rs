@@ -1,0 +1,306 @@
+//! The simulated cluster fabric (DESIGN.md §3).
+//!
+//! Same rendezvous semantics as [`crate::net::local::LocalFabric`], plus
+//! a BSP cost model that produces the *simulated makespan* the scaling
+//! figures report:
+//!
+//! * **Compute** is *measured*, not modeled: each rank thread's CPU time
+//!   (`CLOCK_THREAD_CPUTIME_ID`) accrued between fabric calls is folded
+//!   into its simulated clock. Thread CPU time is immune to the
+//!   timesharing distortion of running p ranks on one core, so a rank
+//!   that does n/p rows of real sorting work is charged exactly that
+//!   work.
+//! * **Communication** is modeled with the α-β model of
+//!   [`crate::net::CostModel`], with node topology (ranks_per_node) and
+//!   per-rank uplink serialisation: an exchange charges every rank
+//!   `max(t_send, t_recv)` on top of the BSP synchronisation point
+//!   `max_r(clock_r)`.
+//!
+//! This is the standard BSP treatment; the paper's own plateau argument
+//! (§V-1: "when the parallelism increases, the operation transforms into
+//! a communication-bound operation") is exactly the α-term growing with
+//! p while per-rank bytes shrink.
+
+use std::sync::{Condvar, Mutex};
+
+use crate::error::{Result, RylonError};
+use crate::net::{CostModel, Fabric, OutBufs};
+
+fn thread_cpu_seconds() -> f64 {
+    let mut ts = libc::timespec {
+        tv_sec: 0,
+        tv_nsec: 0,
+    };
+    // SAFETY: ts is a valid out-pointer; the clock id is a constant.
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+struct State {
+    mailbox: Vec<Vec<Option<Vec<u8>>>>,
+    posted: usize,
+    collected: usize,
+    generation: u64,
+    /// Simulated seconds per rank.
+    clock: Vec<f64>,
+    /// Thread-CPU mark per rank (None until the rank's first tick).
+    mark: Vec<Option<f64>>,
+    /// Total modeled wire bytes (metrics).
+    wire_bytes: u64,
+}
+
+/// Deterministic BSP cluster simulator.
+pub struct SimFabric {
+    size: usize,
+    cost: CostModel,
+    state: Mutex<State>,
+    cond: Condvar,
+}
+
+impl SimFabric {
+    pub fn new(size: usize, cost: CostModel) -> SimFabric {
+        assert!(size > 0, "fabric needs at least one rank");
+        SimFabric {
+            size,
+            cost,
+            state: Mutex::new(State {
+                mailbox: vec![vec![None; size]; size],
+                posted: 0,
+                collected: 0,
+                generation: 0,
+                clock: vec![0.0; size],
+                mark: vec![None; size],
+                wire_bytes: 0,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Simulated makespan: max over rank clocks (call after the job).
+    pub fn makespan(&self) -> f64 {
+        let st = self.state.lock().unwrap();
+        st.clock.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Total bytes charged to the modeled wire.
+    pub fn wire_bytes(&self) -> u64 {
+        self.state.lock().unwrap().wire_bytes
+    }
+
+    fn fold_compute(&self, st: &mut State, rank: usize) {
+        let now = thread_cpu_seconds();
+        if let Some(mark) = st.mark[rank] {
+            st.clock[rank] += (now - mark).max(0.0);
+        }
+        st.mark[rank] = Some(now);
+    }
+
+    /// Charge the α-β cost of the posted byte matrix (runs once per
+    /// generation, by the last poster, while holding the lock).
+    fn charge_exchange(&self, st: &mut State) {
+        let p = self.size;
+        // BSP sync point.
+        let start = st.clock.iter().cloned().fold(0.0, f64::max);
+        let bytes = |src: usize, dst: usize| -> usize {
+            st.mailbox[src][dst].as_ref().map_or(0, |b| b.len())
+        };
+        for r in 0..p {
+            let mut t_send = 0.0;
+            let mut t_recv = 0.0;
+            for o in 0..p {
+                let out_b = bytes(r, o);
+                let in_b = bytes(o, r);
+                if out_b > 0 || o == r {
+                    t_send += self.cost.pt2pt_cost(r, o, out_b);
+                }
+                if in_b > 0 && o != r {
+                    t_recv += self.cost.pt2pt_cost(o, r, in_b);
+                }
+                st.wire_bytes += out_b as u64;
+            }
+            st.clock[r] = start + t_send.max(t_recv);
+        }
+    }
+}
+
+impl Fabric for SimFabric {
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn tick_compute(&self, rank: usize) {
+        let mut st = self.state.lock().unwrap();
+        self.fold_compute(&mut st, rank);
+    }
+
+    fn model_time(&self, rank: usize) -> Option<f64> {
+        Some(self.state.lock().unwrap().clock[rank])
+    }
+
+    fn exchange(&self, rank: usize, outgoing: OutBufs) -> Result<OutBufs> {
+        if outgoing.len() != self.size {
+            return Err(RylonError::comm(format!(
+                "exchange from rank {rank}: {} buffers for {} ranks",
+                outgoing.len(),
+                self.size
+            )));
+        }
+        let mut st = self.state.lock().map_err(|_| {
+            RylonError::comm("fabric poisoned (a rank panicked)")
+        })?;
+        // Fold this rank's compute segment before the superstep.
+        self.fold_compute(&mut st, rank);
+
+        let my_gen = st.generation;
+        for (dst, buf) in outgoing.into_iter().enumerate() {
+            debug_assert!(st.mailbox[rank][dst].is_none());
+            st.mailbox[rank][dst] = Some(buf);
+        }
+        st.posted += 1;
+        if st.posted == self.size {
+            // Last poster charges the comm model for everyone.
+            self.charge_exchange(&mut st);
+            self.cond.notify_all();
+        }
+        while st.generation == my_gen && st.posted < self.size {
+            st = self.cond.wait(st).map_err(|_| {
+                RylonError::comm("fabric poisoned (a rank panicked)")
+            })?;
+        }
+
+        let mut incoming: OutBufs = Vec::with_capacity(self.size);
+        for src in 0..self.size {
+            incoming.push(
+                st.mailbox[src][rank]
+                    .take()
+                    .expect("mailbox slot missing"),
+            );
+        }
+        st.collected += 1;
+        if st.collected == self.size {
+            st.posted = 0;
+            st.collected = 0;
+            st.generation += 1;
+            self.cond.notify_all();
+        } else {
+            let gen = st.generation;
+            while st.generation == gen {
+                st = self.cond.wait(st).map_err(|_| {
+                    RylonError::comm("fabric poisoned (a rank panicked)")
+                })?;
+            }
+        }
+        // Restart the compute mark *after* the rendezvous so time spent
+        // blocked on slower ranks is never charged as compute.
+        let now = thread_cpu_seconds();
+        st.mark[rank] = Some(now);
+        Ok(incoming)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn run_ranks<F, T>(fab: Arc<SimFabric>, f: F) -> Vec<T>
+    where
+        F: Fn(usize, Arc<SimFabric>) -> T + Send + Sync + 'static,
+        T: Send + 'static,
+    {
+        let size = fab.size();
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..size)
+            .map(|r| {
+                let fab = Arc::clone(&fab);
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || f(r, fab))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn routes_like_local_fabric() {
+        let fab = Arc::new(SimFabric::new(3, CostModel::default()));
+        let results = run_ranks(Arc::clone(&fab), move |rank, fab| {
+            let out: OutBufs =
+                (0..3).map(|d| vec![rank as u8, d as u8]).collect();
+            fab.exchange(rank, out).unwrap()
+        });
+        for (dst, incoming) in results.iter().enumerate() {
+            for (src, buf) in incoming.iter().enumerate() {
+                assert_eq!(buf, &vec![src as u8, dst as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn comm_cost_scales_with_bytes() {
+        let small = {
+            let fab = Arc::new(SimFabric::new(2, CostModel::default()));
+            run_ranks(Arc::clone(&fab), |rank, fab| {
+                fab.exchange(rank, vec![vec![0u8; 10], vec![0u8; 10]])
+                    .unwrap();
+            });
+            fab.makespan()
+        };
+        let big = {
+            let fab = Arc::new(SimFabric::new(2, CostModel::default()));
+            run_ranks(Arc::clone(&fab), |rank, fab| {
+                fab.exchange(
+                    rank,
+                    vec![vec![0u8; 10_000_000], vec![0u8; 10_000_000]],
+                )
+                .unwrap();
+            });
+            fab.makespan()
+        };
+        assert!(big > small * 10.0, "big={big} small={small}");
+    }
+
+    #[test]
+    fn latency_term_grows_with_ranks() {
+        // Tiny messages: cost ≈ α·(p−1), so 8 ranks ≫ 2 ranks.
+        let t = |p: usize| {
+            let fab = Arc::new(SimFabric::new(p, CostModel::default()));
+            run_ranks(Arc::clone(&fab), move |rank, fab| {
+                fab.exchange(rank, vec![vec![1u8]; p]).unwrap();
+            });
+            fab.makespan()
+        };
+        assert!(t(8) > t(2) * 2.0);
+    }
+
+    #[test]
+    fn compute_is_metered() {
+        let fab = Arc::new(SimFabric::new(2, CostModel::default()));
+        run_ranks(Arc::clone(&fab), |rank, fab| {
+            fab.tick_compute(rank);
+            // Burn real CPU.
+            let mut acc = 0u64;
+            for i in 0..20_000_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+            fab.exchange(rank, vec![vec![], vec![]]).unwrap();
+        });
+        assert!(
+            fab.makespan() > 0.001,
+            "expected metered compute, got {}",
+            fab.makespan()
+        );
+    }
+
+    #[test]
+    fn wire_bytes_accumulate() {
+        let fab = Arc::new(SimFabric::new(2, CostModel::default()));
+        run_ranks(Arc::clone(&fab), |rank, fab| {
+            fab.exchange(rank, vec![vec![0u8; 100], vec![0u8; 100]])
+                .unwrap();
+        });
+        assert_eq!(fab.wire_bytes(), 400);
+    }
+}

@@ -1,0 +1,301 @@
+//! Wire format: (de)serialise a [`Table`] for the shuffle. Columnar and
+//! copy-friendly — fixed-width buffers round-trip as single memcpys, the
+//! exact property the paper credits Arrow's format for (§III-A).
+//!
+//! Layout (little-endian):
+//! ```text
+//! u32 MAGIC | u32 ncols | u64 nrows
+//! per column:
+//!   u8 dtype | u8 has_validity | u16 name_len | name bytes
+//!   [validity words: ceil(nrows/64) × u64]
+//!   values:
+//!     i64/f64: nrows × 8 bytes
+//!     bool:    nrows × 1 byte
+//!     utf8:    (nrows+1) × u64 offsets | u64 nbytes | bytes
+//! ```
+
+use crate::buffer::Bitmap;
+use crate::column::{Column, PrimitiveColumn, StringColumn};
+use crate::error::{Result, RylonError};
+use crate::table::Table;
+use crate::types::{DataType, Field, Schema};
+
+const MAGIC: u32 = 0x52594C4E; // "RYLN"
+
+fn dtype_tag(dt: DataType) -> u8 {
+    match dt {
+        DataType::Int64 => 0,
+        DataType::Float64 => 1,
+        DataType::Utf8 => 2,
+        DataType::Bool => 3,
+    }
+}
+
+fn tag_dtype(tag: u8) -> Result<DataType> {
+    match tag {
+        0 => Ok(DataType::Int64),
+        1 => Ok(DataType::Float64),
+        2 => Ok(DataType::Utf8),
+        3 => Ok(DataType::Bool),
+        _ => Err(RylonError::parse(format!("bad dtype tag {tag}"))),
+    }
+}
+
+/// Serialise a table to a fresh byte buffer.
+pub fn serialize_table(table: &Table) -> Vec<u8> {
+    let mut out = Vec::with_capacity(table.byte_size() + 64);
+    serialize_table_into(table, &mut out);
+    out
+}
+
+/// Serialise appending to `out` (the shuffle reuses send buffers).
+pub fn serialize_table_into(table: &Table, out: &mut Vec<u8>) {
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&(table.num_columns() as u32).to_le_bytes());
+    out.extend_from_slice(&(table.num_rows() as u64).to_le_bytes());
+    for (field, col) in table.schema().fields().iter().zip(table.columns()) {
+        out.push(dtype_tag(field.dtype));
+        let validity = col.validity();
+        out.push(validity.is_some() as u8);
+        let name = field.name.as_bytes();
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name);
+        if let Some(bm) = validity {
+            for w in bm.words() {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        match col {
+            Column::Int64(c) => {
+                for v in c.values() {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Column::Float64(c) => {
+                for v in c.values() {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Column::Bool(c) => {
+                out.extend(c.values().iter().map(|&b| b as u8));
+            }
+            Column::Utf8(c) => {
+                for o in c.offsets() {
+                    out.extend_from_slice(&o.to_le_bytes());
+                }
+                out.extend_from_slice(
+                    &(c.bytes().len() as u64).to_le_bytes(),
+                );
+                out.extend_from_slice(c.bytes());
+            }
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn need(&self, n: usize) -> Result<()> {
+        if self.pos + n > self.buf.len() {
+            Err(RylonError::parse(format!(
+                "wire buffer truncated at byte {} (need {n} more)",
+                self.pos
+            )))
+        } else {
+            Ok(())
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        self.need(1)?;
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        self.need(2)?;
+        let v = u16::from_le_bytes(
+            self.buf[self.pos..self.pos + 2].try_into().unwrap(),
+        );
+        self.pos += 2;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        self.need(4)?;
+        let v = u32::from_le_bytes(
+            self.buf[self.pos..self.pos + 4].try_into().unwrap(),
+        );
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        self.need(8)?;
+        let v = u64::from_le_bytes(
+            self.buf[self.pos..self.pos + 8].try_into().unwrap(),
+        );
+        self.pos += 8;
+        Ok(v)
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.need(n)?;
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+}
+
+/// Deserialise a table from a wire buffer.
+pub fn deserialize_table(buf: &[u8]) -> Result<Table> {
+    let mut r = Reader { buf, pos: 0 };
+    if r.u32()? != MAGIC {
+        return Err(RylonError::parse("bad wire magic"));
+    }
+    let ncols = r.u32()? as usize;
+    let nrows = r.u64()? as usize;
+    let mut fields = Vec::with_capacity(ncols);
+    let mut cols = Vec::with_capacity(ncols);
+    for _ in 0..ncols {
+        let dtype = tag_dtype(r.u8()?)?;
+        let has_validity = r.u8()? != 0;
+        let name_len = r.u16()? as usize;
+        let name =
+            String::from_utf8(r.bytes(name_len)?.to_vec()).map_err(|_| {
+                RylonError::parse("column name is not utf-8")
+            })?;
+        let validity = if has_validity {
+            let words: Result<Vec<u64>> = (0..nrows.div_ceil(64))
+                .map(|_| r.u64())
+                .collect();
+            Some(Bitmap::from_words(words?, nrows))
+        } else {
+            None
+        };
+        let col = match dtype {
+            DataType::Int64 => {
+                let mut values = Vec::with_capacity(nrows);
+                for _ in 0..nrows {
+                    values.push(r.u64()? as i64);
+                }
+                Column::Int64(prim_from_parts(values, validity))
+            }
+            DataType::Float64 => {
+                let mut values = Vec::with_capacity(nrows);
+                for _ in 0..nrows {
+                    values.push(f64::from_bits(r.u64()?));
+                }
+                Column::Float64(prim_from_parts(values, validity))
+            }
+            DataType::Bool => {
+                let raw = r.bytes(nrows)?;
+                let values = raw.iter().map(|&b| b != 0).collect();
+                Column::Bool(prim_from_parts(values, validity))
+            }
+            DataType::Utf8 => {
+                let mut offsets = Vec::with_capacity(nrows + 1);
+                for _ in 0..=nrows {
+                    offsets.push(r.u64()?);
+                }
+                let nbytes = r.u64()? as usize;
+                let bytes = r.bytes(nbytes)?.to_vec();
+                // Validate UTF-8 once on ingest; value() reads unchecked.
+                std::str::from_utf8(&bytes).map_err(|_| {
+                    RylonError::parse("string column is not utf-8")
+                })?;
+                Column::Utf8(StringColumn::from_parts(
+                    offsets, bytes, validity,
+                ))
+            }
+        };
+        fields.push(Field::new(name, dtype));
+        cols.push(col);
+    }
+    Table::try_new(Schema::new(fields), cols)
+}
+
+fn prim_from_parts<T: Copy + Default>(
+    values: Vec<T>,
+    validity: Option<Bitmap>,
+) -> PrimitiveColumn<T> {
+    match validity {
+        None => PrimitiveColumn::from_values(values),
+        Some(bm) => PrimitiveColumn::from_options(
+            values
+                .into_iter()
+                .enumerate()
+                .map(|(i, v)| if bm.get(i) { Some(v) } else { None })
+                .collect(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> Table {
+        Table::from_columns(vec![
+            ("id", Column::from_opt_i64(vec![Some(1), None, Some(-3)])),
+            ("v", Column::from_f64(vec![0.5, f64::NAN, -0.0])),
+            ("s", Column::from_opt_str(&[Some("héllo"), Some(""), None])),
+            ("b", Column::from_bool(vec![true, false, true])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let t = table();
+        let bytes = serialize_table(&t);
+        let back = deserialize_table(&bytes).unwrap();
+        assert_eq!(back.num_rows(), 3);
+        assert_eq!(back.schema(), t.schema());
+        // NaN bits survive (PartialEq on f64 columns compares values, so
+        // check columns pairwise except the NaN cell).
+        assert_eq!(back.column(0), t.column(0));
+        assert_eq!(back.column(2), t.column(2));
+        assert_eq!(back.column(3), t.column(3));
+        assert!(back.column(1).f64_values()[1].is_nan());
+        assert_eq!(back.column(1).f64_values()[0], 0.5);
+    }
+
+    #[test]
+    fn empty_table_roundtrip() {
+        let t = Table::empty(Schema::parse("a:i64,b:str").unwrap());
+        let back = deserialize_table(&serialize_table(&t)).unwrap();
+        assert_eq!(back.num_rows(), 0);
+        assert_eq!(back.schema(), t.schema());
+    }
+
+    #[test]
+    fn truncated_buffer_rejected() {
+        let bytes = serialize_table(&table());
+        for cut in [0, 3, 10, bytes.len() - 1] {
+            assert!(
+                deserialize_table(&bytes[..cut]).is_err(),
+                "cut={cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = serialize_table(&table());
+        bytes[0] ^= 0xFF;
+        assert!(deserialize_table(&bytes).is_err());
+    }
+
+    #[test]
+    fn size_is_close_to_byte_size() {
+        let t = table();
+        let wire = serialize_table(&t).len();
+        // Wire adds only header + names on top of the raw buffers.
+        assert!(wire < t.byte_size() + 128);
+    }
+}

@@ -1,0 +1,301 @@
+//! GroupBy + aggregate — part of PyCylon's DataTable API surface (§IV).
+//! Hash aggregation: group rows by key columns, fold each aggregate's
+//! accumulator per group. The distributed version (dist_groupby) shuffles
+//! by key then runs this locally, and for algebraic aggregates can
+//! instead pre-aggregate locally and merge partials (see `dist`).
+
+use crate::column::{Column, ColumnBuilder};
+use crate::compute::aggregate::{Accumulator, AggKind};
+use crate::compute::hash::{hash_columns, PreHashedMap, CHAIN_END};
+use crate::error::{Result, RylonError};
+use crate::table::Table;
+use crate::types::{Field, Schema};
+
+/// One aggregate: `kind(column) as name`.
+#[derive(Debug, Clone)]
+pub struct Agg {
+    pub kind: AggKind,
+    pub column: String,
+    pub name: String,
+}
+
+impl Agg {
+    pub fn new(kind: AggKind, column: &str) -> Agg {
+        Agg {
+            kind,
+            column: column.to_string(),
+            name: format!("{}_{}", kind.name(), column),
+        }
+    }
+
+    pub fn named(mut self, name: &str) -> Agg {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn sum(column: &str) -> Agg {
+        Agg::new(AggKind::Sum, column)
+    }
+    pub fn min(column: &str) -> Agg {
+        Agg::new(AggKind::Min, column)
+    }
+    pub fn max(column: &str) -> Agg {
+        Agg::new(AggKind::Max, column)
+    }
+    pub fn count(column: &str) -> Agg {
+        Agg::new(AggKind::Count, column)
+    }
+    pub fn mean(column: &str) -> Agg {
+        Agg::new(AggKind::Mean, column)
+    }
+}
+
+/// GroupBy specification.
+#[derive(Debug, Clone)]
+pub struct GroupByOptions {
+    pub keys: Vec<String>,
+    pub aggs: Vec<Agg>,
+}
+
+impl GroupByOptions {
+    pub fn new(keys: &[&str], aggs: Vec<Agg>) -> GroupByOptions {
+        GroupByOptions {
+            keys: keys.iter().map(|s| s.to_string()).collect(),
+            aggs,
+        }
+    }
+}
+
+/// Hash group-by. Output: key columns (first occurrence order) then one
+/// column per aggregate.
+pub fn groupby(table: &Table, opts: &GroupByOptions) -> Result<Table> {
+    if opts.keys.is_empty() {
+        return Err(RylonError::invalid("groupby requires at least one key"));
+    }
+    if opts.aggs.is_empty() {
+        return Err(RylonError::invalid(
+            "groupby requires at least one aggregate",
+        ));
+    }
+    let key_cols: Result<Vec<&Column>> = opts
+        .keys
+        .iter()
+        .map(|k| table.column_by_name(k))
+        .collect();
+    let key_cols = key_cols?;
+    let agg_cols: Result<Vec<&Column>> = opts
+        .aggs
+        .iter()
+        .map(|a| table.column_by_name(&a.column))
+        .collect();
+    let agg_cols = agg_cols?;
+    // Validate output dtypes up front.
+    let out_dtypes: Result<Vec<_>> = opts
+        .aggs
+        .iter()
+        .zip(&agg_cols)
+        .map(|(a, c)| a.kind.output_dtype(c.dtype()))
+        .collect();
+    let out_dtypes = out_dtypes?;
+
+    let mut hashes = Vec::new();
+    hash_columns(&key_cols, table.num_rows(), &mut hashes);
+
+    // group id per distinct key; representative row per group (§Perf:
+    // pre-hashed heads + group chain, no per-bucket Vec allocations).
+    let mut heads: PreHashedMap<u32> = PreHashedMap::with_capacity_and_hasher(
+        table.num_rows(),
+        Default::default(),
+    );
+    // next_group[g] = next group id sharing the same hash bucket.
+    let mut next_group: Vec<u32> = Vec::new();
+    let mut rep_rows: Vec<usize> = Vec::new();
+    let mut accs: Vec<Vec<Accumulator>> = Vec::new();
+
+    for i in 0..table.num_rows() {
+        let h = hashes[i];
+        let head = heads.entry(h).or_insert(CHAIN_END);
+        let mut cur = *head;
+        let mut gid = CHAIN_END;
+        while cur != CHAIN_END {
+            let rep = rep_rows[cur as usize];
+            if key_cols.iter().all(|c| c.eq_rows(rep, c, i)) {
+                gid = cur;
+                break;
+            }
+            cur = next_group[cur as usize];
+        }
+        if gid == CHAIN_END {
+            gid = rep_rows.len() as u32;
+            rep_rows.push(i);
+            next_group.push(*head);
+            *head = gid;
+            accs.push(
+                opts.aggs
+                    .iter()
+                    .zip(&agg_cols)
+                    .map(|(a, c)| {
+                        a.kind.new_acc(
+                            c.dtype() == crate::types::DataType::Int64,
+                        )
+                    })
+                    .collect(),
+            );
+        }
+        for (acc, col) in accs[gid as usize].iter_mut().zip(&agg_cols) {
+            acc.update(col, i);
+        }
+    }
+
+    // Assemble output.
+    let ngroups = rep_rows.len();
+    let mut fields: Vec<Field> = Vec::new();
+    let mut out_cols: Vec<Column> = Vec::new();
+    for (k, kc) in opts.keys.iter().zip(&key_cols) {
+        fields.push(Field::new(k.clone(), kc.dtype()));
+        out_cols.push(kc.take(&rep_rows));
+    }
+    for ((agg, dt), slot) in
+        opts.aggs.iter().zip(out_dtypes).zip(0..opts.aggs.len())
+    {
+        fields.push(Field::new(agg.name.clone(), dt));
+        let mut b = ColumnBuilder::new(dt, ngroups);
+        for acc_row in &accs {
+            b.push_value(&acc_row[slot].finish())?;
+        }
+        out_cols.push(b.finish());
+    }
+    Table::try_new(Schema::new(fields), out_cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Value;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("k", Column::from_str(&["a", "b", "a", "b", "a"])),
+            (
+                "v",
+                Column::from_opt_i64(vec![
+                    Some(1),
+                    Some(10),
+                    Some(2),
+                    None,
+                    Some(3),
+                ]),
+            ),
+        ])
+        .unwrap()
+    }
+
+    fn find_group(g: &Table, key: &str) -> usize {
+        (0..g.num_rows())
+            .find(|&i| g.column(0).value(i) == Value::Utf8(key.into()))
+            .unwrap()
+    }
+
+    #[test]
+    fn sum_count_mean_per_group() {
+        let g = groupby(
+            &t(),
+            &GroupByOptions::new(
+                &["k"],
+                vec![Agg::sum("v"), Agg::count("v"), Agg::mean("v")],
+            ),
+        )
+        .unwrap();
+        assert_eq!(g.num_rows(), 2);
+        let a = find_group(&g, "a");
+        let b = find_group(&g, "b");
+        assert_eq!(g.column(1).value(a), Value::Int64(6));
+        assert_eq!(g.column(2).value(a), Value::Int64(3));
+        assert_eq!(g.column(3).value(a), Value::Float64(2.0));
+        // Group b: one null skipped.
+        assert_eq!(g.column(1).value(b), Value::Int64(10));
+        assert_eq!(g.column(2).value(b), Value::Int64(1));
+    }
+
+    #[test]
+    fn output_schema_names() {
+        let g = groupby(
+            &t(),
+            &GroupByOptions::new(
+                &["k"],
+                vec![Agg::max("v").named("vmax")],
+            ),
+        )
+        .unwrap();
+        assert_eq!(g.schema().field(0).name, "k");
+        assert_eq!(g.schema().field(1).name, "vmax");
+    }
+
+    #[test]
+    fn multi_key_groups() {
+        let t = Table::from_columns(vec![
+            ("a", Column::from_i64(vec![1, 1, 2, 1])),
+            ("b", Column::from_i64(vec![1, 2, 1, 1])),
+            ("v", Column::from_f64(vec![1.0, 2.0, 3.0, 4.0])),
+        ])
+        .unwrap();
+        let g = groupby(
+            &t,
+            &GroupByOptions::new(&["a", "b"], vec![Agg::sum("v")]),
+        )
+        .unwrap();
+        assert_eq!(g.num_rows(), 3);
+        let i = (0..3)
+            .find(|&i| {
+                g.column(0).value(i) == Value::Int64(1)
+                    && g.column(1).value(i) == Value::Int64(1)
+            })
+            .unwrap();
+        assert_eq!(g.column(2).value(i), Value::Float64(5.0));
+    }
+
+    #[test]
+    fn null_keys_form_a_group() {
+        let t = Table::from_columns(vec![
+            ("k", Column::from_opt_i64(vec![None, None, Some(1)])),
+            ("v", Column::from_i64(vec![5, 6, 7])),
+        ])
+        .unwrap();
+        let g = groupby(
+            &t,
+            &GroupByOptions::new(&["k"], vec![Agg::sum("v")]),
+        )
+        .unwrap();
+        assert_eq!(g.num_rows(), 2);
+        let nidx = (0..2).find(|&i| g.column(0).value(i).is_null()).unwrap();
+        assert_eq!(g.column(1).value(nidx), Value::Int64(11));
+    }
+
+    #[test]
+    fn validation() {
+        assert!(groupby(&t(), &GroupByOptions::new(&[], vec![Agg::sum("v")]))
+            .is_err());
+        assert!(groupby(&t(), &GroupByOptions::new(&["k"], vec![])).is_err());
+        assert!(groupby(
+            &t(),
+            &GroupByOptions::new(&["k"], vec![Agg::sum("k")])
+        )
+        .is_err()); // sum over strings
+        assert!(groupby(
+            &t(),
+            &GroupByOptions::new(&["ghost"], vec![Agg::sum("v")])
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn min_max_over_strings() {
+        let g = groupby(
+            &t(),
+            &GroupByOptions::new(&["k"], vec![Agg::min("k"), Agg::max("k")]),
+        )
+        .unwrap();
+        let a = find_group(&g, "a");
+        assert_eq!(g.column(1).value(a), Value::Utf8("a".into()));
+    }
+}

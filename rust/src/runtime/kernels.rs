@@ -1,0 +1,317 @@
+//! Typed entry points over the AOT artifacts: the shuffle hash kernel
+//! and the table→tensor featurizer, each with padding to the artifact
+//! shape and a bit-exact/allclose native fallback.
+
+use std::sync::Arc;
+
+use crate::compute::hash::splitmix64;
+use crate::error::{Result, RylonError};
+use crate::runtime::registry::Runtime;
+
+/// Hash-partition kernel: `pid = splitmix64(key) % nparts` + histogram.
+/// Mirrors `python/compile/kernels/hash_partition.py` exactly.
+pub struct HashKernel<'rt> {
+    runtime: Option<&'rt Runtime>,
+    nparts: usize,
+}
+
+impl<'rt> HashKernel<'rt> {
+    /// Artifact-backed kernel (falls back to native if no artifact of
+    /// this `nparts` exists — the caller can check [`HashKernel::is_aot`]).
+    pub fn new(runtime: &'rt Runtime, nparts: usize) -> HashKernel<'rt> {
+        HashKernel {
+            runtime: Some(runtime),
+            nparts,
+        }
+    }
+
+    /// Pure-native kernel (no artifacts needed).
+    pub fn native(nparts: usize) -> HashKernel<'static> {
+        HashKernel {
+            runtime: None,
+            nparts,
+        }
+    }
+
+    /// Whether an AOT artifact will serve calls of `n` keys.
+    pub fn is_aot(&self, n: usize) -> bool {
+        self.runtime
+            .and_then(|rt| {
+                rt.find("hash_partition", "n", n, &[("nparts", self.nparts)])
+            })
+            .is_some()
+    }
+
+    /// Compute pids + histogram for `keys`.
+    pub fn run(&self, keys: &[i64]) -> Result<(Vec<i32>, Vec<u64>)> {
+        if let Some(rt) = self.runtime {
+            if let Some(meta) = rt.find(
+                "hash_partition",
+                "n",
+                keys.len(),
+                &[("nparts", self.nparts)],
+            ) {
+                return self.run_aot(rt, &meta.name.clone(), keys);
+            }
+        }
+        Ok(self.run_native(keys))
+    }
+
+    /// Native path (bit-exact with the artifact; cross-checked in
+    /// rust/tests/pjrt_artifacts.rs).
+    pub fn run_native(&self, keys: &[i64]) -> (Vec<i32>, Vec<u64>) {
+        let mut hist = vec![0u64; self.nparts];
+        let pids: Vec<i32> = keys
+            .iter()
+            .map(|&k| {
+                let pid =
+                    (splitmix64(k as u64) % self.nparts as u64) as i32;
+                hist[pid as usize] += 1;
+                pid
+            })
+            .collect();
+        (pids, hist)
+    }
+
+    /// AOT path: pad to the artifact batch size, mask padding, execute,
+    /// trim.
+    pub fn run_aot(
+        &self,
+        rt: &Runtime,
+        artifact: &str,
+        keys: &[i64],
+    ) -> Result<(Vec<i32>, Vec<u64>)> {
+        let exe = rt.executable(artifact)?;
+        let meta = rt
+            .artifacts()
+            .iter()
+            .find(|m| m.name == artifact)
+            .unwrap();
+        let n = meta.params["n"];
+        if keys.len() > n {
+            return Err(RylonError::runtime(format!(
+                "batch {} exceeds artifact capacity {n}",
+                keys.len()
+            )));
+        }
+        let mut padded: Vec<u64> = Vec::with_capacity(n);
+        padded.extend(keys.iter().map(|&k| k as u64));
+        padded.resize(n, 0);
+        let mut mask = vec![1.0f32; keys.len()];
+        mask.resize(n, 0.0);
+
+        let key_lit = xla::Literal::vec1(&padded);
+        let mask_lit = xla::Literal::vec1(&mask);
+        let result = exec_tuple(&exe, &[key_lit, mask_lit])?;
+        let (pids_lit, hist_lit) = result.to_tuple2().map_err(|e| {
+            RylonError::runtime(format!("untuple: {e:?}"))
+        })?;
+        let pids_all: Vec<i32> = pids_lit.to_vec().map_err(|e| {
+            RylonError::runtime(format!("pids read: {e:?}"))
+        })?;
+        let hist_f: Vec<f32> = hist_lit.to_vec().map_err(|e| {
+            RylonError::runtime(format!("hist read: {e:?}"))
+        })?;
+        Ok((
+            pids_all[..keys.len()].to_vec(),
+            hist_f.iter().map(|&v| v as u64).collect(),
+        ))
+    }
+}
+
+/// Output of the featurize bridge.
+#[derive(Debug, Clone)]
+pub struct FeaturizeResult {
+    /// Row-major standardized features, `rows × cols`.
+    pub features: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+    pub mean: Vec<f32>,
+    pub inv_std: Vec<f32>,
+}
+
+/// Table→tensor featurizer (paper Fig 1 / §IV bridge). Mirrors
+/// `python/compile/model.py::featurize_model`.
+pub struct FeaturizeKernel<'rt> {
+    runtime: Option<&'rt Runtime>,
+}
+
+impl<'rt> FeaturizeKernel<'rt> {
+    pub fn new(runtime: &'rt Runtime) -> FeaturizeKernel<'rt> {
+        FeaturizeKernel {
+            runtime: Some(runtime),
+        }
+    }
+
+    pub fn native() -> FeaturizeKernel<'static> {
+        FeaturizeKernel { runtime: None }
+    }
+
+    pub fn is_aot(&self, rows: usize, cols: usize) -> bool {
+        self.runtime
+            .and_then(|rt| {
+                rt.find("featurize", "rows", rows, &[("cols", cols)])
+            })
+            .is_some()
+    }
+
+    /// Standardise an `rows × cols` row-major f32 matrix.
+    pub fn run(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+    ) -> Result<FeaturizeResult> {
+        if x.len() != rows * cols {
+            return Err(RylonError::invalid(format!(
+                "featurize: {} values for {rows}x{cols}",
+                x.len()
+            )));
+        }
+        if let Some(rt) = self.runtime {
+            if let Some(meta) =
+                rt.find("featurize", "rows", rows, &[("cols", cols)])
+            {
+                // Padding rows would skew the column statistics, so the
+                // AOT path requires an exact row match; otherwise fall
+                // through to native (same numerics).
+                if meta.params["rows"] == rows {
+                    return self.run_aot(rt, &meta.name.clone(), x, rows, cols);
+                }
+            }
+        }
+        Ok(self.run_native(x, rows, cols))
+    }
+
+    /// Native path — identical math (mean, eps-guarded inv-std,
+    /// standardise) in f32 like the kernel.
+    pub fn run_native(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+    ) -> FeaturizeResult {
+        const EPS: f32 = 1e-6;
+        let mut mean = vec![0.0f32; cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                mean[c] += x[r * cols + c];
+            }
+        }
+        for m in &mut mean {
+            *m /= rows.max(1) as f32;
+        }
+        let mut var = vec![0.0f32; cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let d = x[r * cols + c] - mean[c];
+                var[c] += d * d;
+            }
+        }
+        let inv_std: Vec<f32> = var
+            .iter()
+            .map(|&v| 1.0 / (v / rows.max(1) as f32 + EPS).sqrt())
+            .collect();
+        let mut features = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                features[r * cols + c] =
+                    (x[r * cols + c] - mean[c]) * inv_std[c];
+            }
+        }
+        FeaturizeResult {
+            features,
+            rows,
+            cols,
+            mean,
+            inv_std,
+        }
+    }
+
+    pub fn run_aot(
+        &self,
+        rt: &Runtime,
+        artifact: &str,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+    ) -> Result<FeaturizeResult> {
+        let exe = rt.executable(artifact)?;
+        let x_lit = xla::Literal::vec1(x)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| RylonError::runtime(format!("reshape: {e:?}")))?;
+        let result = exec_tuple(&exe, &[x_lit])?;
+        let (f_lit, mean_lit, istd_lit) =
+            result.to_tuple3().map_err(|e| {
+                RylonError::runtime(format!("untuple: {e:?}"))
+            })?;
+        Ok(FeaturizeResult {
+            features: f_lit.to_vec().map_err(|e| {
+                RylonError::runtime(format!("features read: {e:?}"))
+            })?,
+            rows,
+            cols,
+            mean: mean_lit.to_vec().map_err(|e| {
+                RylonError::runtime(format!("mean read: {e:?}"))
+            })?,
+            inv_std: istd_lit.to_vec().map_err(|e| {
+                RylonError::runtime(format!("inv_std read: {e:?}"))
+            })?,
+        })
+    }
+}
+
+/// Execute and pull the (tupled) first result to host.
+fn exec_tuple(
+    exe: &Arc<xla::PjRtLoadedExecutable>,
+    inputs: &[xla::Literal],
+) -> Result<xla::Literal> {
+    let bufs = exe
+        .execute::<xla::Literal>(inputs)
+        .map_err(|e| RylonError::runtime(format!("execute: {e:?}")))?;
+    bufs[0][0]
+        .to_literal_sync()
+        .map_err(|e| RylonError::runtime(format!("to_literal: {e:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_hash_kernel_formula() {
+        let k = HashKernel::native(16);
+        let keys = vec![0i64, 1, -5, i64::MAX];
+        let (pids, hist) = k.run(&keys).unwrap();
+        for (i, &key) in keys.iter().enumerate() {
+            assert_eq!(pids[i], (splitmix64(key as u64) % 16) as i32);
+        }
+        assert_eq!(hist.iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn native_featurize_standardises() {
+        let k = FeaturizeKernel::native();
+        // 4 rows × 2 cols.
+        let x = vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let r = k.run(&x, 4, 2).unwrap();
+        assert_eq!(r.mean, vec![2.5, 25.0]);
+        // Column means of the output ≈ 0, std ≈ 1.
+        for c in 0..2 {
+            let m: f32 =
+                (0..4).map(|i| r.features[i * 2 + c]).sum::<f32>() / 4.0;
+            assert!(m.abs() < 1e-6);
+            let v: f32 = (0..4)
+                .map(|i| r.features[i * 2 + c].powi(2))
+                .sum::<f32>()
+                / 4.0;
+            assert!((v - 1.0).abs() < 1e-3, "var={v}");
+        }
+    }
+
+    #[test]
+    fn featurize_validates_shape() {
+        let k = FeaturizeKernel::native();
+        assert!(k.run(&[1.0, 2.0], 3, 4).is_err());
+    }
+}

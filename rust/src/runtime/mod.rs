@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them once on the CPU PJRT client,
+//! and execute them from the Rust hot path. Python never runs here.
+//!
+//! Every kernel has a **native fallback** (`compute::hash`,
+//! `bridge`-style featurize) that is bit-exact/allclose with the
+//! artifact — `rust/tests/pjrt_artifacts.rs` cross-checks them — so the
+//! engine works without `artifacts/` and callers can choose the path
+//! per-call (Fig 12's "binding overhead" bench drives all paths).
+
+pub mod registry;
+pub mod kernels;
+
+pub use kernels::{FeaturizeResult, HashKernel, FeaturizeKernel};
+pub use registry::{ArtifactMeta, Runtime};

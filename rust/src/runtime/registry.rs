@@ -1,0 +1,177 @@
+//! Artifact registry: reads `artifacts/manifest.json`, loads HLO text on
+//! demand, compiles with the PJRT CPU client and caches the executables.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Result, RylonError};
+use crate::util::json::Json;
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    /// kind-specific integer params (n, nparts, rows, cols, block…).
+    pub params: HashMap<String, usize>,
+}
+
+/// Lazily-compiling artifact store. One PJRT CPU client per runtime.
+pub struct Runtime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    metas: Vec<ArtifactMeta>,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            RylonError::runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let json = Json::parse(&text)
+            .map_err(|e| RylonError::runtime(format!("bad manifest: {e}")))?;
+        let mut metas = Vec::new();
+        for a in json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| RylonError::runtime("manifest missing artifacts"))?
+        {
+            let get_str = |k: &str| -> Result<String> {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| {
+                        RylonError::runtime(format!("manifest entry missing {k}"))
+                    })
+            };
+            let mut params = HashMap::new();
+            if let Json::Obj(map) = a {
+                for (k, v) in map {
+                    if let Some(n) = v.as_f64() {
+                        params.insert(k.clone(), n as usize);
+                    }
+                }
+            }
+            metas.push(ArtifactMeta {
+                name: get_str("name")?,
+                kind: get_str("kind")?,
+                file: get_str("file")?,
+                params,
+            });
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| {
+            RylonError::runtime(format!("PJRT CPU client: {e:?}"))
+        })?;
+        Ok(Runtime {
+            dir,
+            client,
+            metas,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.metas
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Find the artifact of `kind` with the smallest capacity parameter
+    /// `cap_key` that is ≥ `needed` (padding model), with exact match on
+    /// the other constraints.
+    pub fn find(
+        &self,
+        kind: &str,
+        cap_key: &str,
+        needed: usize,
+        exact: &[(&str, usize)],
+    ) -> Option<&ArtifactMeta> {
+        self.metas
+            .iter()
+            .filter(|m| m.kind == kind)
+            .filter(|m| {
+                exact.iter().all(|(k, v)| m.params.get(*k) == Some(v))
+            })
+            .filter(|m| {
+                m.params.get(cap_key).is_some_and(|&c| c >= needed)
+            })
+            .min_by_key(|m| m.params[cap_key])
+    }
+
+    /// Compile (or fetch the cached executable for) an artifact.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .metas
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                RylonError::runtime(format!("unknown artifact '{name}'"))
+            })?;
+        let path = self.dir.join(&meta.file);
+        // HLO *text*, not serialized protos: jax ≥0.5 emits 64-bit ids
+        // that xla_extension 0.5.1 rejects; the text parser reassigns
+        // them (see DESIGN.md §7).
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+            RylonError::runtime(format!(
+                "parse {}: {e:?}",
+                path.display()
+            ))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| {
+            RylonError::runtime(format!("compile {name}: {e:?}"))
+        })?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Loading real artifacts is covered by rust/tests/pjrt_artifacts.rs
+    // (requires `make artifacts`). Here: manifest parsing paths.
+
+    #[test]
+    fn open_missing_dir_errors_helpfully() {
+        let err = match Runtime::open("/definitely/not/here") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        let dir = std::env::temp_dir().join("rylon_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(Runtime::open(&dir).is_err());
+        std::fs::write(dir.join("manifest.json"), "{\"artifacts\": 3}")
+            .unwrap();
+        assert!(Runtime::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

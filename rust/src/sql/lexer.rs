@@ -1,0 +1,189 @@
+//! SQL tokenizer: keywords (case-insensitive), identifiers, numbers,
+//! quoted strings, operators and punctuation.
+
+use crate::error::{Result, RylonError};
+
+/// One SQL token.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Token {
+    /// Upper-cased keyword (SELECT, FROM, …).
+    Keyword(String),
+    /// Bare identifier (column/table name), original case.
+    Ident(String),
+    /// Numeric literal.
+    Number(f64),
+    /// 'single-quoted' string literal.
+    Str(String),
+    /// Comparison / arithmetic operator.
+    Op(String),
+    Comma,
+    LParen,
+    RParen,
+    Star,
+}
+
+const KEYWORDS: &[&str] = &[
+    "SELECT", "FROM", "WHERE", "GROUP", "BY", "ORDER", "LIMIT", "JOIN",
+    "LEFT", "INNER", "ON", "AS", "AND", "OR", "NOT", "ASC", "DESC",
+    "NULL", "IS",
+];
+
+/// Tokenize a SQL string.
+pub fn tokenize(sql: &str) -> Result<Vec<Token>> {
+    let b: Vec<char> = sql.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            c if c.is_whitespace() => i += 1,
+            ',' => {
+                out.push(Token::Comma);
+                i += 1;
+            }
+            '(' => {
+                out.push(Token::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Token::RParen);
+                i += 1;
+            }
+            '*' => {
+                out.push(Token::Star);
+                i += 1;
+            }
+            '\'' => {
+                let mut s = String::new();
+                i += 1;
+                loop {
+                    match b.get(i) {
+                        None => {
+                            return Err(RylonError::parse(
+                                "unterminated string literal",
+                            ))
+                        }
+                        Some('\'') if b.get(i + 1) == Some(&'\'') => {
+                            s.push('\'');
+                            i += 2;
+                        }
+                        Some('\'') => {
+                            i += 1;
+                            break;
+                        }
+                        Some(&c) => {
+                            s.push(c);
+                            i += 1;
+                        }
+                    }
+                }
+                out.push(Token::Str(s));
+            }
+            '<' | '>' | '=' | '!' => {
+                let mut op = String::from(c);
+                if b.get(i + 1) == Some(&'=') {
+                    op.push('=');
+                    i += 1;
+                }
+                i += 1;
+                if op == "!" {
+                    return Err(RylonError::parse("lone '!' operator"));
+                }
+                out.push(Token::Op(op));
+            }
+            c if c.is_ascii_digit()
+                || (c == '-'
+                    && b.get(i + 1).is_some_and(|d| d.is_ascii_digit())) =>
+            {
+                let start = i;
+                i += 1;
+                while i < b.len()
+                    && (b[i].is_ascii_digit()
+                        || b[i] == '.'
+                        || b[i] == 'e'
+                        || b[i] == 'E'
+                        || ((b[i] == '+' || b[i] == '-')
+                            && matches!(b[i - 1], 'e' | 'E')))
+                {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                let n = text.parse::<f64>().map_err(|_| {
+                    RylonError::parse(format!("bad number '{text}'"))
+                })?;
+                out.push(Token::Number(n));
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_alphanumeric() || b[i] == '_')
+                {
+                    i += 1;
+                }
+                let word: String = b[start..i].iter().collect();
+                let upper = word.to_ascii_uppercase();
+                if KEYWORDS.contains(&upper.as_str()) {
+                    out.push(Token::Keyword(upper));
+                } else {
+                    out.push(Token::Ident(word));
+                }
+            }
+            other => {
+                return Err(RylonError::parse(format!(
+                    "unexpected character '{other}' in SQL"
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keywords_and_idents() {
+        let t = tokenize("select Name FROM tbl").unwrap();
+        assert_eq!(
+            t,
+            vec![
+                Token::Keyword("SELECT".into()),
+                Token::Ident("Name".into()),
+                Token::Keyword("FROM".into()),
+                Token::Ident("tbl".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn numbers_strings_ops() {
+        let t = tokenize("a >= -1.5e3 AND b = 'it''s'").unwrap();
+        assert!(t.contains(&Token::Op(">=".into())));
+        assert!(t.contains(&Token::Number(-1500.0)));
+        assert!(t.contains(&Token::Str("it's".into())));
+    }
+
+    #[test]
+    fn punctuation() {
+        let t = tokenize("SUM(x), *").unwrap();
+        assert_eq!(
+            t,
+            vec![
+                Token::Ident("SUM".into()),
+                Token::LParen,
+                Token::Ident("x".into()),
+                Token::RParen,
+                Token::Comma,
+                Token::Star,
+            ]
+        );
+    }
+
+    #[test]
+    fn errors() {
+        assert!(tokenize("'open").is_err());
+        assert!(tokenize("a ! b").is_err());
+        assert!(tokenize("price > 10; drop").is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! SQL frontend — the paper's §II observation made concrete: "Relational
+//! algebraic operations are a natural fit for processing table data, and
+//! SQL interfaces can further enhance usability."
+//!
+//! A small SELECT dialect compiled onto the [`crate::pipeline::Pipeline`]
+//! stage chain (and therefore runnable locally *or* distributed):
+//!
+//! ```sql
+//! SELECT name, SUM(amount) AS total, COUNT(amount)
+//! FROM orders
+//! JOIN users ON user = user
+//! WHERE amount > 20 AND region != 'eu'
+//! GROUP BY name
+//! ORDER BY total DESC
+//! LIMIT 10
+//! ```
+//!
+//! Supported: projection (`*` or column list), aggregate calls with
+//! optional `AS` aliases, one `FROM` table, any number of
+//! `[LEFT|INNER] JOIN t ON lcol = rcol`, `WHERE` (via the predicate
+//! expression grammar), `GROUP BY`, `ORDER BY col [ASC|DESC]`, `LIMIT`.
+
+mod lexer;
+mod parser;
+mod planner;
+
+pub use lexer::{tokenize, Token};
+pub use parser::{parse_select, JoinClause, OrderClause, SelectItem, SelectStmt};
+pub use planner::{execute_dist, execute_local, plan, CompiledQuery};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::pipeline::Env;
+    use crate::table::Table;
+    use crate::types::Value;
+
+    fn env() -> Env {
+        let mut env = Env::new();
+        env.insert(
+            "orders".to_string(),
+            Table::from_columns(vec![
+                ("oid", Column::from_i64(vec![1, 2, 3, 4, 5])),
+                ("user", Column::from_i64(vec![10, 11, 10, 12, 11])),
+                (
+                    "amount",
+                    Column::from_f64(vec![5.0, 120.0, 33.0, 7.5, 78.0]),
+                ),
+            ])
+            .unwrap(),
+        );
+        env.insert(
+            "users".to_string(),
+            Table::from_columns(vec![
+                ("user", Column::from_i64(vec![10, 11, 13])),
+                ("name", Column::from_str(&["ada", "grace", "edsger"])),
+            ])
+            .unwrap(),
+        );
+        env
+    }
+
+    fn run(sql: &str) -> Table {
+        execute_local(sql, &env()).unwrap()
+    }
+
+    #[test]
+    fn select_star_where() {
+        let t = run("SELECT * FROM orders WHERE amount > 20");
+        assert_eq!(t.num_rows(), 3);
+        assert_eq!(t.num_columns(), 3);
+    }
+
+    #[test]
+    fn projection_subset() {
+        let t = run("SELECT oid, amount FROM orders");
+        assert_eq!(t.num_columns(), 2);
+        assert_eq!(t.schema().field(0).name, "oid");
+    }
+
+    #[test]
+    fn join_where_group_order() {
+        let t = run(
+            "SELECT name, SUM(amount) AS total, COUNT(amount) \
+             FROM orders JOIN users ON user = user \
+             WHERE amount > 10 GROUP BY name ORDER BY total DESC",
+        );
+        assert_eq!(t.num_rows(), 2);
+        // grace: 120 + 78 = 198; ada: 33.
+        assert_eq!(t.row(0)[0], Value::Utf8("grace".into()));
+        assert_eq!(t.row(0)[1], Value::Float64(198.0));
+        assert_eq!(t.row(1)[1], Value::Float64(33.0));
+        assert_eq!(t.schema().field(1).name, "total");
+    }
+
+    #[test]
+    fn left_join_keeps_unmatched() {
+        let t = run(
+            "SELECT oid, name FROM orders LEFT JOIN users ON user = user",
+        );
+        assert_eq!(t.num_rows(), 5);
+        // user 12 has no match → null name.
+        let nulls = (0..5)
+            .filter(|&i| t.row(i)[1].is_null())
+            .count();
+        assert_eq!(nulls, 1);
+    }
+
+    #[test]
+    fn order_and_limit() {
+        let t = run("SELECT oid FROM orders ORDER BY amount DESC LIMIT 2");
+        assert_eq!(t.num_rows(), 2);
+        assert_eq!(t.row(0)[0], Value::Int64(2)); // amount 120
+        assert_eq!(t.row(1)[0], Value::Int64(5)); // amount 78
+    }
+
+    #[test]
+    fn string_literal_predicates() {
+        let t = run("SELECT user FROM users WHERE name = 'grace'");
+        assert_eq!(t.num_rows(), 1);
+        assert_eq!(t.row(0)[0], Value::Int64(11));
+    }
+
+    #[test]
+    fn aggregates_without_group_by_rejected() {
+        // (kept simple: aggregates require GROUP BY in this dialect)
+        assert!(execute_local("SELECT SUM(amount) FROM orders", &env())
+            .is_err());
+    }
+
+    #[test]
+    fn errors_are_helpful() {
+        for bad in [
+            "SELEC * FROM t",
+            "SELECT * FROM",
+            "SELECT * FROM missing_table",
+            "SELECT * FROM orders WHERE",
+            "SELECT nope FROM orders",
+            "SELECT * FROM orders LIMIT abc",
+        ] {
+            assert!(execute_local(bad, &env()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn case_insensitive_keywords() {
+        let t = run("select oid from orders where amount > 100");
+        assert_eq!(t.num_rows(), 1);
+    }
+}

@@ -1,0 +1,428 @@
+//! Recursive-descent parser for the SELECT dialect (see `sql::mod` for
+//! the grammar summary). Produces a [`SelectStmt`] AST; the planner
+//! lowers it onto a pipeline.
+
+use crate::error::{Result, RylonError};
+use crate::ops::select::{CmpOp, Predicate};
+use crate::sql::lexer::{tokenize, Token};
+use crate::types::Value;
+
+/// One item of the projection list.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SelectItem {
+    Star,
+    /// Plain column, optional alias.
+    Column { name: String, alias: Option<String> },
+    /// `AGG(column)`, optional alias.
+    Agg {
+        func: String,
+        column: String,
+        alias: Option<String>,
+    },
+}
+
+/// `[LEFT|INNER] JOIN table ON lcol = rcol`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JoinClause {
+    pub table: String,
+    pub left_on: String,
+    pub right_on: String,
+    pub left: bool,
+}
+
+/// `ORDER BY col [ASC|DESC]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OrderClause {
+    pub column: String,
+    pub descending: bool,
+}
+
+/// The parsed statement.
+#[derive(Debug, Clone)]
+pub struct SelectStmt {
+    pub items: Vec<SelectItem>,
+    pub from: String,
+    pub joins: Vec<JoinClause>,
+    pub where_clause: Option<Predicate>,
+    pub group_by: Vec<String>,
+    pub order_by: Vec<OrderClause>,
+    pub limit: Option<usize>,
+}
+
+struct P {
+    toks: Vec<Token>,
+    i: usize,
+}
+
+impl P {
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.i)
+    }
+
+    fn next(&mut self) -> Option<Token> {
+        let t = self.toks.get(self.i).cloned();
+        if t.is_some() {
+            self.i += 1;
+        }
+        t
+    }
+
+    fn eat_kw(&mut self, kw: &str) -> bool {
+        if matches!(self.peek(), Some(Token::Keyword(k)) if k == kw) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> Result<()> {
+        if self.eat_kw(kw) {
+            Ok(())
+        } else {
+            Err(RylonError::parse(format!(
+                "expected {kw}, found {:?}",
+                self.peek()
+            )))
+        }
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.next() {
+            Some(Token::Ident(s)) => Ok(s),
+            other => Err(RylonError::parse(format!(
+                "expected identifier, found {other:?}"
+            ))),
+        }
+    }
+}
+
+/// Parse one SELECT statement.
+pub fn parse_select(sql: &str) -> Result<SelectStmt> {
+    let mut p = P {
+        toks: tokenize(sql)?,
+        i: 0,
+    };
+    p.expect_kw("SELECT")?;
+    let items = parse_items(&mut p)?;
+    p.expect_kw("FROM")?;
+    let from = p.ident()?;
+
+    let mut joins = Vec::new();
+    loop {
+        let left = if p.eat_kw("LEFT") {
+            p.expect_kw("JOIN")?;
+            true
+        } else if p.eat_kw("INNER") {
+            p.expect_kw("JOIN")?;
+            false
+        } else if p.eat_kw("JOIN") {
+            false
+        } else {
+            break;
+        };
+        let table = p.ident()?;
+        p.expect_kw("ON")?;
+        let lcol = p.ident()?;
+        match p.next() {
+            Some(Token::Op(op)) if op == "=" => {}
+            other => {
+                return Err(RylonError::parse(format!(
+                    "expected '=' in ON clause, found {other:?}"
+                )))
+            }
+        }
+        let rcol = p.ident()?;
+        joins.push(JoinClause {
+            table,
+            left_on: lcol,
+            right_on: rcol,
+            left,
+        });
+    }
+
+    let where_clause = if p.eat_kw("WHERE") {
+        Some(parse_or(&mut p)?)
+    } else {
+        None
+    };
+
+    let mut group_by = Vec::new();
+    if p.eat_kw("GROUP") {
+        p.expect_kw("BY")?;
+        group_by.push(p.ident()?);
+        while matches!(p.peek(), Some(Token::Comma)) {
+            p.next();
+            group_by.push(p.ident()?);
+        }
+    }
+
+    let mut order_by = Vec::new();
+    if p.eat_kw("ORDER") {
+        p.expect_kw("BY")?;
+        loop {
+            let column = p.ident()?;
+            let descending = if p.eat_kw("DESC") {
+                true
+            } else {
+                p.eat_kw("ASC");
+                false
+            };
+            order_by.push(OrderClause {
+                column,
+                descending,
+            });
+            if matches!(p.peek(), Some(Token::Comma)) {
+                p.next();
+            } else {
+                break;
+            }
+        }
+    }
+
+    let limit = if p.eat_kw("LIMIT") {
+        match p.next() {
+            Some(Token::Number(n)) if n >= 0.0 && n.fract() == 0.0 => {
+                Some(n as usize)
+            }
+            other => {
+                return Err(RylonError::parse(format!(
+                    "expected integer LIMIT, found {other:?}"
+                )))
+            }
+        }
+    } else {
+        None
+    };
+
+    if p.peek().is_some() {
+        return Err(RylonError::parse(format!(
+            "trailing tokens after statement: {:?}",
+            p.peek()
+        )));
+    }
+    Ok(SelectStmt {
+        items,
+        from,
+        joins,
+        where_clause,
+        group_by,
+        order_by,
+        limit,
+    })
+}
+
+fn parse_items(p: &mut P) -> Result<Vec<SelectItem>> {
+    let mut items = Vec::new();
+    loop {
+        let item = match p.next() {
+            Some(Token::Star) => SelectItem::Star,
+            Some(Token::Ident(name)) => {
+                if matches!(p.peek(), Some(Token::LParen)) {
+                    p.next(); // (
+                    let column = p.ident()?;
+                    match p.next() {
+                        Some(Token::RParen) => {}
+                        other => {
+                            return Err(RylonError::parse(format!(
+                                "expected ')', found {other:?}"
+                            )))
+                        }
+                    }
+                    SelectItem::Agg {
+                        func: name.to_ascii_lowercase(),
+                        column,
+                        alias: parse_alias(p)?,
+                    }
+                } else {
+                    SelectItem::Column {
+                        name,
+                        alias: parse_alias(p)?,
+                    }
+                }
+            }
+            other => {
+                return Err(RylonError::parse(format!(
+                    "expected projection item, found {other:?}"
+                )))
+            }
+        };
+        items.push(item);
+        if matches!(p.peek(), Some(Token::Comma)) {
+            p.next();
+        } else {
+            break;
+        }
+    }
+    Ok(items)
+}
+
+fn parse_alias(p: &mut P) -> Result<Option<String>> {
+    if p.eat_kw("AS") {
+        Ok(Some(p.ident()?))
+    } else {
+        Ok(None)
+    }
+}
+
+// WHERE expression grammar: OR > AND > NOT > cmp atom.
+fn parse_or(p: &mut P) -> Result<Predicate> {
+    let mut lhs = parse_and(p)?;
+    while p.eat_kw("OR") {
+        let rhs = parse_and(p)?;
+        lhs = lhs.or(rhs);
+    }
+    Ok(lhs)
+}
+
+fn parse_and(p: &mut P) -> Result<Predicate> {
+    let mut lhs = parse_not(p)?;
+    while p.eat_kw("AND") {
+        let rhs = parse_not(p)?;
+        lhs = lhs.and(rhs);
+    }
+    Ok(lhs)
+}
+
+fn parse_not(p: &mut P) -> Result<Predicate> {
+    if p.eat_kw("NOT") {
+        Ok(parse_not(p)?.not())
+    } else {
+        parse_atom(p)
+    }
+}
+
+fn parse_atom(p: &mut P) -> Result<Predicate> {
+    if matches!(p.peek(), Some(Token::LParen)) {
+        p.next();
+        let inner = parse_or(p)?;
+        match p.next() {
+            Some(Token::RParen) => return Ok(inner),
+            other => {
+                return Err(RylonError::parse(format!(
+                    "expected ')', found {other:?}"
+                )))
+            }
+        }
+    }
+    let column = p.ident()?;
+    // `col IS [NOT] NULL`
+    if p.eat_kw("IS") {
+        let negated = p.eat_kw("NOT");
+        p.expect_kw("NULL")?;
+        return Ok(Predicate::IsNull { column, negated });
+    }
+    let op = match p.next() {
+        Some(Token::Op(op)) => match op.as_str() {
+            "=" | "==" => CmpOp::Eq,
+            "!=" => CmpOp::Ne,
+            "<" => CmpOp::Lt,
+            "<=" => CmpOp::Le,
+            ">" => CmpOp::Gt,
+            ">=" => CmpOp::Ge,
+            other => {
+                return Err(RylonError::parse(format!(
+                    "unknown operator '{other}'"
+                )))
+            }
+        },
+        other => {
+            return Err(RylonError::parse(format!(
+                "expected comparison, found {other:?}"
+            )))
+        }
+    };
+    let literal = match p.next() {
+        Some(Token::Number(n)) => {
+            if n.fract() == 0.0 && n.abs() < 9e15 {
+                Value::Int64(n as i64)
+            } else {
+                Value::Float64(n)
+            }
+        }
+        Some(Token::Str(s)) => Value::Utf8(s),
+        Some(Token::Keyword(k)) if k == "NULL" => Value::Null,
+        other => {
+            return Err(RylonError::parse(format!(
+                "expected literal, found {other:?}"
+            )))
+        }
+    };
+    Ok(Predicate::Cmp {
+        column,
+        op,
+        literal,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_statement() {
+        let s = parse_select(
+            "SELECT name, SUM(amount) AS total FROM orders \
+             LEFT JOIN users ON user = uid \
+             WHERE amount > 10 AND NOT region = 'eu' \
+             GROUP BY name ORDER BY total DESC, name LIMIT 5",
+        )
+        .unwrap();
+        assert_eq!(s.items.len(), 2);
+        assert_eq!(
+            s.items[1],
+            SelectItem::Agg {
+                func: "sum".into(),
+                column: "amount".into(),
+                alias: Some("total".into()),
+            }
+        );
+        assert_eq!(s.from, "orders");
+        assert_eq!(s.joins.len(), 1);
+        assert!(s.joins[0].left);
+        assert_eq!(s.joins[0].right_on, "uid");
+        assert!(s.where_clause.is_some());
+        assert_eq!(s.group_by, vec!["name"]);
+        assert_eq!(s.order_by.len(), 2);
+        assert!(s.order_by[0].descending);
+        assert!(!s.order_by[1].descending);
+        assert_eq!(s.limit, Some(5));
+    }
+
+    #[test]
+    fn star_and_minimal() {
+        let s = parse_select("SELECT * FROM t").unwrap();
+        assert_eq!(s.items, vec![SelectItem::Star]);
+        assert!(s.joins.is_empty());
+        assert!(s.where_clause.is_none());
+    }
+
+    #[test]
+    fn parenthesised_where() {
+        let s = parse_select(
+            "SELECT * FROM t WHERE (a = 1 OR b = 2) AND c != 3",
+        )
+        .unwrap();
+        assert!(s.where_clause.is_some());
+    }
+
+    #[test]
+    fn is_null_clauses() {
+        let s =
+            parse_select("SELECT * FROM t WHERE x IS NOT NULL").unwrap();
+        assert!(matches!(
+            s.where_clause,
+            Some(Predicate::IsNull { negated: true, .. })
+        ));
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_select("FROM t").is_err());
+        assert!(parse_select("SELECT * FROM t WHERE a >").is_err());
+        assert!(parse_select("SELECT * FROM t LIMIT 1.5").is_err());
+        assert!(parse_select("SELECT * FROM t extra").is_err());
+        assert!(parse_select("SELECT SUM( FROM t").is_err());
+        assert!(parse_select("SELECT * FROM t JOIN u ON a b").is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! Lower a parsed [`SelectStmt`] onto a [`Pipeline`] + final projection,
+//! executable locally or SPMD (the pipeline stages map 1:1 onto the
+//! distributed operators).
+
+use crate::compute::aggregate::AggKind;
+use crate::error::{Result, RylonError};
+use crate::ops::groupby::{Agg, GroupByOptions};
+use crate::ops::join::{JoinOptions, JoinType};
+use crate::ops::orderby::{SortKey, SortOrder};
+use crate::pipeline::{Env, Pipeline};
+use crate::sql::parser::{parse_select, SelectItem, SelectStmt};
+use crate::table::Table;
+
+/// A compiled query: the stage chain plus the final column projection
+/// (applied after groupby renames settle).
+pub struct CompiledQuery {
+    pub stmt: SelectStmt,
+    pub pipeline: Pipeline,
+    /// Output column names, in order; None = passthrough (`SELECT *`).
+    pub final_columns: Option<Vec<String>>,
+    pub limit: Option<usize>,
+}
+
+/// Compile a SELECT statement.
+pub fn plan(sql: &str) -> Result<CompiledQuery> {
+    let stmt = parse_select(sql)?;
+    let mut pipeline = Pipeline::new();
+
+    // WHERE runs before joins only when it references the base table;
+    // we keep the simple, predictable order: joins → where → group →
+    // order (matching the semantics of the supported dialect).
+    for j in &stmt.joins {
+        let jt = if j.left {
+            JoinType::Left
+        } else {
+            JoinType::Inner
+        };
+        pipeline = pipeline.join(
+            &j.table,
+            JoinOptions::new(jt, &[&j.left_on], &[&j.right_on]),
+        );
+    }
+    if let Some(pred) = &stmt.where_clause {
+        pipeline = pipeline.select_pred(pred.clone());
+    }
+
+    let has_aggs = stmt
+        .items
+        .iter()
+        .any(|i| matches!(i, SelectItem::Agg { .. }));
+    if has_aggs && stmt.group_by.is_empty() {
+        return Err(RylonError::invalid(
+            "aggregates require GROUP BY in this dialect",
+        ));
+    }
+
+    let mut final_columns: Option<Vec<String>> = None;
+    if !stmt.group_by.is_empty() {
+        let mut aggs = Vec::new();
+        let mut out_cols: Vec<String> = stmt.group_by.clone();
+        for item in &stmt.items {
+            match item {
+                SelectItem::Star => {
+                    return Err(RylonError::invalid(
+                        "SELECT * cannot be combined with GROUP BY",
+                    ))
+                }
+                SelectItem::Column { name, alias } => {
+                    if !stmt.group_by.contains(name) {
+                        return Err(RylonError::invalid(format!(
+                            "column '{name}' is neither aggregated nor in GROUP BY"
+                        )));
+                    }
+                    if let Some(a) = alias {
+                        return Err(RylonError::invalid(format!(
+                            "alias '{a}' on a grouping key is not supported"
+                        )));
+                    }
+                }
+                SelectItem::Agg {
+                    func,
+                    column,
+                    alias,
+                } => {
+                    let kind =
+                        AggKind::parse(func).ok_or_else(|| {
+                            RylonError::invalid(format!(
+                                "unknown aggregate '{func}'"
+                            ))
+                        })?;
+                    let mut agg = Agg::new(kind, column);
+                    if let Some(a) = alias {
+                        agg = agg.named(a);
+                    }
+                    out_cols.push(agg.name.clone());
+                    aggs.push(agg);
+                }
+            }
+        }
+        // Keys the user didn't project are still grouped; restrict the
+        // output to the projected order below.
+        let keys: Vec<&str> =
+            stmt.group_by.iter().map(|s| s.as_str()).collect();
+        pipeline = pipeline.groupby(GroupByOptions::new(&keys, aggs));
+        // Projection order: as written in the SELECT list.
+        let projected: Vec<String> = stmt
+            .items
+            .iter()
+            .map(|i| match i {
+                SelectItem::Column { name, .. } => name.clone(),
+                SelectItem::Agg {
+                    func,
+                    column,
+                    alias,
+                } => alias.clone().unwrap_or_else(|| {
+                    format!("{func}_{column}")
+                }),
+                SelectItem::Star => unreachable!(),
+            })
+            .collect();
+        final_columns = Some(projected);
+        let _ = out_cols;
+    } else {
+        // Plain projection (applied after ORDER BY so sort keys not in
+        // the projection still work).
+        let mut cols = Vec::new();
+        let mut star = false;
+        for item in &stmt.items {
+            match item {
+                SelectItem::Star => star = true,
+                SelectItem::Column { name, alias } => {
+                    if alias.is_some() {
+                        return Err(RylonError::invalid(
+                            "column aliases outside GROUP BY are not supported",
+                        ));
+                    }
+                    cols.push(name.clone());
+                }
+                SelectItem::Agg { .. } => unreachable!(),
+            }
+        }
+        if !star {
+            final_columns = Some(cols);
+        }
+    }
+
+    if !stmt.order_by.is_empty() {
+        let keys: Vec<SortKey> = stmt
+            .order_by
+            .iter()
+            .map(|o| SortKey {
+                column: o.column.clone(),
+                order: if o.descending {
+                    SortOrder::Descending
+                } else {
+                    SortOrder::Ascending
+                },
+            })
+            .collect();
+        pipeline = pipeline.orderby(keys);
+    }
+
+    Ok(CompiledQuery {
+        limit: stmt.limit,
+        stmt,
+        pipeline,
+        final_columns,
+    })
+}
+
+impl CompiledQuery {
+    /// Apply the trailing projection + limit to a pipeline result.
+    pub fn finish(&self, table: Table) -> Result<Table> {
+        let projected = match &self.final_columns {
+            None => table,
+            Some(cols) => {
+                let names: Vec<&str> =
+                    cols.iter().map(|s| s.as_str()).collect();
+                crate::ops::project(&table, &names)?
+            }
+        };
+        Ok(match self.limit {
+            Some(n) => projected.head(n),
+            None => projected,
+        })
+    }
+}
+
+/// Parse, plan and execute a query against named tables. The `FROM`
+/// table and all joined tables come from `env`.
+pub fn execute_local(sql: &str, env: &Env) -> Result<Table> {
+    let q = plan(sql)?;
+    let input = env.get(&q.stmt.from).ok_or_else(|| {
+        RylonError::invalid(format!("unknown table '{}'", q.stmt.from))
+    })?;
+    let (out, _phases) = q.pipeline.run_local(input, env)?;
+    q.finish(out)
+}
+
+/// SPMD execution: every rank calls this with its partitions in `env`.
+pub fn execute_dist(
+    ctx: &mut crate::dist::RankCtx,
+    sql: &str,
+    env: &Env,
+) -> Result<Table> {
+    let q = plan(sql)?;
+    let input = env.get(&q.stmt.from).ok_or_else(|| {
+        RylonError::invalid(format!("unknown table '{}'", q.stmt.from))
+    })?;
+    let (out, _phases) = q.pipeline.run_dist(ctx, input, env)?;
+    // LIMIT semantics distributed: each rank holds a range of the
+    // global order after orderby; a global limit needs the first n of
+    // the concatenation — take head(n) per rank and let the caller trim
+    // after gather (documented behaviour).
+    q.finish(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    #[test]
+    fn plan_rejects_bad_shapes() {
+        assert!(plan("SELECT SUM(x) FROM t").is_err());
+        assert!(plan("SELECT * , a FROM t GROUP BY a").is_err());
+        assert!(plan("SELECT b FROM t GROUP BY a").is_err());
+    }
+
+    #[test]
+    fn dist_sql_matches_local() {
+        use crate::dist::{Cluster, DistConfig};
+        let sql = "SELECT grp, SUM(v) AS s FROM t GROUP BY grp ORDER BY grp";
+        let whole = Table::from_columns(vec![
+            (
+                "grp",
+                Column::from_i64((0..60).map(|i| i % 4).collect()),
+            ),
+            (
+                "v",
+                Column::from_f64((0..60).map(|i| i as f64).collect()),
+            ),
+        ])
+        .unwrap();
+        let mut env = Env::new();
+        env.insert("t".to_string(), whole.clone());
+        let local = execute_local(sql, &env).unwrap();
+
+        let cluster = Cluster::new(DistConfig::threads(3)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let n = whole.num_rows();
+                let base = n / ctx.size;
+                let extra = n % ctx.size;
+                let my = base + (ctx.rank < extra) as usize;
+                let off = base * ctx.rank + ctx.rank.min(extra);
+                let mut env = Env::new();
+                env.insert("t".to_string(), whole.slice(off, my));
+                execute_dist(ctx, sql, &env)
+            })
+            .unwrap();
+        let merged = Table::concat_all(outs[0].schema(), &outs).unwrap();
+        let sorted = crate::ops::orderby(
+            &merged,
+            &[crate::ops::orderby::SortKey::asc("grp")],
+        )
+        .unwrap();
+        assert_eq!(sorted, local);
+    }
+}

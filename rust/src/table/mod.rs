@@ -1,0 +1,319 @@
+//! [`Table`] — the paper's central abstraction (§II): an ordered set of
+//! named, typed, nullable columns with equal length, stored column-major.
+//! Columns are behind `Arc`, so structural ops (project, clone, slice of
+//! the schema) are O(columns) not O(rows).
+
+mod pretty;
+
+use std::sync::Arc;
+
+pub use pretty::pretty_table;
+
+use crate::column::Column;
+use crate::error::{Result, RylonError};
+use crate::types::{Schema, Value};
+
+/// An immutable in-memory data table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    schema: Schema,
+    columns: Vec<Arc<Column>>,
+    num_rows: usize,
+}
+
+impl Table {
+    /// Build from a schema and matching columns; validates arity, length
+    /// and dtypes.
+    pub fn try_new(schema: Schema, columns: Vec<Column>) -> Result<Table> {
+        if schema.len() != columns.len() {
+            return Err(RylonError::schema(format!(
+                "schema has {} fields but {} columns given",
+                schema.len(),
+                columns.len()
+            )));
+        }
+        let num_rows = columns.first().map_or(0, |c| c.len());
+        for (f, c) in schema.fields().iter().zip(&columns) {
+            if c.dtype() != f.dtype {
+                return Err(RylonError::schema(format!(
+                    "column '{}' is {} but schema says {}",
+                    f.name,
+                    c.dtype(),
+                    f.dtype
+                )));
+            }
+            if c.len() != num_rows {
+                return Err(RylonError::schema(format!(
+                    "column '{}' has {} rows, expected {}",
+                    f.name,
+                    c.len(),
+                    num_rows
+                )));
+            }
+        }
+        Ok(Table {
+            schema,
+            columns: columns.into_iter().map(Arc::new).collect(),
+            num_rows,
+        })
+    }
+
+    /// Build from `(name, column)` pairs, inferring the schema.
+    pub fn from_columns(cols: Vec<(&str, Column)>) -> Result<Table> {
+        let fields = cols
+            .iter()
+            .map(|(n, c)| crate::types::Field::new(*n, c.dtype()))
+            .collect();
+        Table::try_new(
+            Schema::new(fields),
+            cols.into_iter().map(|(_, c)| c).collect(),
+        )
+    }
+
+    /// Zero-row table with the given schema.
+    pub fn empty(schema: Schema) -> Table {
+        let columns = schema
+            .fields()
+            .iter()
+            .map(|f| {
+                Arc::new(match f.dtype {
+                    crate::types::DataType::Int64 => Column::from_i64(vec![]),
+                    crate::types::DataType::Float64 => Column::from_f64(vec![]),
+                    crate::types::DataType::Utf8 => {
+                        Column::from_str::<&str>(&[])
+                    }
+                    crate::types::DataType::Bool => Column::from_bool(vec![]),
+                })
+            })
+            .collect();
+        Table {
+            schema,
+            columns,
+            num_rows: 0,
+        }
+    }
+
+    /// Internal: assemble from Arc'd columns without re-validating (the
+    /// operators uphold the invariants).
+    pub(crate) fn from_parts(
+        schema: Schema,
+        columns: Vec<Arc<Column>>,
+        num_rows: usize,
+    ) -> Table {
+        debug_assert_eq!(schema.len(), columns.len());
+        debug_assert!(columns.iter().all(|c| c.len() == num_rows));
+        Table {
+            schema,
+            columns,
+            num_rows,
+        }
+    }
+
+    // ---- introspection ---------------------------------------------------
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.num_rows
+    }
+
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.num_rows == 0
+    }
+
+    pub fn column(&self, i: usize) -> &Column {
+        &self.columns[i]
+    }
+
+    pub fn column_arc(&self, i: usize) -> Arc<Column> {
+        Arc::clone(&self.columns[i])
+    }
+
+    pub fn column_by_name(&self, name: &str) -> Result<&Column> {
+        Ok(&self.columns[self.schema.index_of(name)?])
+    }
+
+    pub fn columns(&self) -> impl Iterator<Item = &Column> {
+        self.columns.iter().map(|c| c.as_ref())
+    }
+
+    /// Total buffer bytes (metrics / comm cost model).
+    pub fn byte_size(&self) -> usize {
+        self.columns.iter().map(|c| c.byte_size()).sum()
+    }
+
+    /// Boxed row (off the hot path: debugging, binding layer, row engine).
+    pub fn row(&self, i: usize) -> Vec<Value> {
+        self.columns.iter().map(|c| c.value(i)).collect()
+    }
+
+    // ---- structural ops ----------------------------------------------------
+
+    /// Gather rows by index into a new table.
+    pub fn take(&self, indices: &[usize]) -> Table {
+        let columns = self
+            .columns
+            .iter()
+            .map(|c| Arc::new(c.take(indices)))
+            .collect();
+        Table::from_parts(self.schema.clone(), columns, indices.len())
+    }
+
+    /// Contiguous row range.
+    pub fn slice(&self, offset: usize, len: usize) -> Table {
+        let len = len.min(self.num_rows.saturating_sub(offset));
+        let columns = self
+            .columns
+            .iter()
+            .map(|c| Arc::new(c.slice(offset, len)))
+            .collect();
+        Table::from_parts(self.schema.clone(), columns, len)
+    }
+
+    /// First `n` rows.
+    pub fn head(&self, n: usize) -> Table {
+        self.slice(0, n)
+    }
+
+    /// Vertical concatenation (schemas must type-match).
+    pub fn concat(&self, other: &Table) -> Result<Table> {
+        if !self.schema.types_match(&other.schema) {
+            return Err(RylonError::schema(format!(
+                "concat schema mismatch: [{}] vs [{}]",
+                self.schema, other.schema
+            )));
+        }
+        let columns: Result<Vec<_>> = self
+            .columns
+            .iter()
+            .zip(&other.columns)
+            .map(|(a, b)| a.concat(b).map(Arc::new))
+            .collect();
+        Ok(Table::from_parts(
+            self.schema.clone(),
+            columns?,
+            self.num_rows + other.num_rows,
+        ))
+    }
+
+    /// Concatenate many tables (shuffle receive path).
+    pub fn concat_all(schema: &Schema, parts: &[Table]) -> Result<Table> {
+        let mut it = parts.iter().filter(|t| !t.is_empty());
+        let first = match it.next() {
+            None => return Ok(Table::empty(schema.clone())),
+            Some(t) => t.clone(),
+        };
+        it.try_fold(first, |acc, t| acc.concat(t))
+    }
+
+    /// Render the first `n` rows as an aligned text grid.
+    pub fn pretty(&self, n: usize) -> String {
+        pretty_table(self, n)
+    }
+}
+
+impl PartialEq for Table {
+    /// Value equality: same schema types/names, same rows in order.
+    fn eq(&self, other: &Self) -> bool {
+        self.schema == other.schema
+            && self.num_rows == other.num_rows
+            && self
+                .columns
+                .iter()
+                .zip(&other.columns)
+                .all(|(a, b)| a == b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::DataType;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("id", Column::from_i64(vec![1, 2, 3])),
+            ("v", Column::from_f64(vec![0.5, 1.5, 2.5])),
+            ("tag", Column::from_str(&["a", "b", "c"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn construct_and_introspect() {
+        let t = t();
+        assert_eq!(t.num_rows(), 3);
+        assert_eq!(t.num_columns(), 3);
+        assert_eq!(t.schema().field(1).dtype, DataType::Float64);
+        assert_eq!(
+            t.column_by_name("tag").unwrap().value(2),
+            Value::Utf8("c".into())
+        );
+        assert!(t.column_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_mismatch() {
+        let schema = Schema::parse("a:i64,b:f64").unwrap();
+        // Wrong arity.
+        assert!(Table::try_new(schema.clone(), vec![Column::from_i64(vec![1])])
+            .is_err());
+        // Wrong dtype.
+        assert!(Table::try_new(
+            schema.clone(),
+            vec![Column::from_i64(vec![1]), Column::from_i64(vec![1])]
+        )
+        .is_err());
+        // Ragged lengths.
+        assert!(Table::try_new(
+            schema,
+            vec![Column::from_i64(vec![1]), Column::from_f64(vec![1.0, 2.0])]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn take_slice_head() {
+        let t = t();
+        let g = t.take(&[2, 0]);
+        assert_eq!(g.num_rows(), 2);
+        assert_eq!(g.row(0), vec![3i64.into(), 2.5.into(), "c".into()]);
+        let s = t.slice(1, 5); // clamped
+        assert_eq!(s.num_rows(), 2);
+        assert_eq!(t.head(1).num_rows(), 1);
+    }
+
+    #[test]
+    fn concat_and_equality() {
+        let t = t();
+        let c = t.concat(&t).unwrap();
+        assert_eq!(c.num_rows(), 6);
+        assert_eq!(c.slice(3, 3), t);
+        let all =
+            Table::concat_all(t.schema(), &[t.clone(), t.clone(), t.clone()])
+                .unwrap();
+        assert_eq!(all.num_rows(), 9);
+        let none = Table::concat_all(t.schema(), &[]).unwrap();
+        assert_eq!(none.num_rows(), 0);
+        assert_eq!(none.schema(), t.schema());
+    }
+
+    #[test]
+    fn empty_table_has_typed_columns() {
+        let e = Table::empty(Schema::parse("a:i64,b:str").unwrap());
+        assert_eq!(e.num_rows(), 0);
+        assert_eq!(e.column(1).dtype(), DataType::Utf8);
+    }
+
+    #[test]
+    fn byte_size_sums_columns() {
+        let t = t();
+        assert!(t.byte_size() > 3 * 8 * 2);
+    }
+}

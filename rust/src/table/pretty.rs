@@ -1,0 +1,77 @@
+//! Aligned text rendering of a table head (the `Table::pretty` backend,
+//! mirroring PyCylon's notebook-friendly repr).
+
+use crate::table::Table;
+
+/// Render the first `n` rows as an aligned grid with a header and a
+/// trailing row-count line.
+pub fn pretty_table(table: &Table, n: usize) -> String {
+    let n = n.min(table.num_rows());
+    let ncols = table.num_columns();
+    // Header cells.
+    let mut widths: Vec<usize> = (0..ncols)
+        .map(|c| {
+            let f = table.schema().field(c);
+            f.name.len() + f.dtype.name().len() + 1
+        })
+        .collect();
+    let mut cells: Vec<Vec<String>> = Vec::with_capacity(n);
+    for r in 0..n {
+        let row: Vec<String> = (0..ncols)
+            .map(|c| table.column(c).value(r).render())
+            .collect();
+        for (c, cell) in row.iter().enumerate() {
+            widths[c] = widths[c].max(cell.len());
+        }
+        cells.push(row);
+    }
+
+    let mut out = String::new();
+    for c in 0..ncols {
+        let f = table.schema().field(c);
+        let head = format!("{}:{}", f.name, f.dtype.name());
+        out.push_str(&format!("{:<w$}  ", head, w = widths[c]));
+    }
+    out.push('\n');
+    for c in 0..ncols {
+        out.push_str(&"-".repeat(widths[c]));
+        out.push_str("  ");
+    }
+    out.push('\n');
+    for row in &cells {
+        for (c, cell) in row.iter().enumerate() {
+            out.push_str(&format!("{:<w$}  ", cell, w = widths[c]));
+        }
+        out.push('\n');
+    }
+    if table.num_rows() > n {
+        out.push_str(&format!("… ({} rows total)\n", table.num_rows()));
+    } else {
+        out.push_str(&format!("({} rows)\n", table.num_rows()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    #[test]
+    fn renders_header_rows_and_footer() {
+        let t = Table::from_columns(vec![
+            ("id", Column::from_i64(vec![1, 22, 333])),
+            ("name", Column::from_opt_str(&[Some("x"), None, Some("zzz")])),
+        ])
+        .unwrap();
+        let s = t.pretty(2);
+        assert!(s.contains("id:i64"));
+        assert!(s.contains("name:str"));
+        assert!(s.contains("22"));
+        assert!(!s.contains("333")); // only 2 rows requested
+        assert!(s.contains("… (3 rows total)"));
+        let full = t.pretty(10);
+        assert!(full.contains("333"));
+        assert!(full.contains("(3 rows)"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Logical types: [`DataType`], [`Field`], [`Schema`], and the boxed
+//! [`Value`] cell used by row-oriented paths (the binding layer and the
+//! baseline row engine — the columnar hot path never boxes).
+
+mod schema;
+mod value;
+
+pub use schema::{Field, Schema};
+pub use value::Value;
+
+/// The physical/logical type of a column. Deliberately the small set the
+/// paper's workloads need (Arrow-style: 64-bit ints, doubles, UTF-8,
+/// bools); widening the enum is additive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataType {
+    Int64,
+    Float64,
+    Utf8,
+    Bool,
+}
+
+impl DataType {
+    /// Parse from the names used in configs and CSV schema strings.
+    pub fn parse(s: &str) -> Option<DataType> {
+        match s {
+            "i64" | "int64" | "int" => Some(DataType::Int64),
+            "f64" | "float64" | "double" | "float" => Some(DataType::Float64),
+            "str" | "utf8" | "string" => Some(DataType::Utf8),
+            "bool" | "boolean" => Some(DataType::Bool),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (inverse of [`DataType::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataType::Int64 => "i64",
+            DataType::Float64 => "f64",
+            DataType::Utf8 => "str",
+            DataType::Bool => "bool",
+        }
+    }
+
+    /// Fixed width in bytes of the value buffer element, if fixed-width.
+    pub fn fixed_width(&self) -> Option<usize> {
+        match self {
+            DataType::Int64 => Some(8),
+            DataType::Float64 => Some(8),
+            DataType::Bool => Some(1),
+            DataType::Utf8 => None,
+        }
+    }
+
+    /// Whether the type supports ordering comparisons (all current types do;
+    /// kept explicit so adding e.g. a binary blob type stays honest).
+    pub fn is_orderable(&self) -> bool {
+        true
+    }
+
+    pub fn is_numeric(&self) -> bool {
+        matches!(self, DataType::Int64 | DataType::Float64)
+    }
+}
+
+impl std::fmt::Display for DataType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for dt in [
+            DataType::Int64,
+            DataType::Float64,
+            DataType::Utf8,
+            DataType::Bool,
+        ] {
+            assert_eq!(DataType::parse(dt.name()), Some(dt));
+        }
+        assert_eq!(DataType::parse("int"), Some(DataType::Int64));
+        assert_eq!(DataType::parse("double"), Some(DataType::Float64));
+        assert_eq!(DataType::parse("nope"), None);
+    }
+
+    #[test]
+    fn widths() {
+        assert_eq!(DataType::Int64.fixed_width(), Some(8));
+        assert_eq!(DataType::Utf8.fixed_width(), None);
+        assert!(DataType::Int64.is_numeric());
+        assert!(!DataType::Utf8.is_numeric());
+    }
+}

@@ -1,0 +1,201 @@
+//! [`Field`] (name + type + nullability) and [`Schema`] (ordered fields
+//! with O(1) name lookup).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::error::{Result, RylonError};
+use crate::types::DataType;
+
+/// One column's metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Field {
+    pub name: String,
+    pub dtype: DataType,
+    pub nullable: bool,
+}
+
+impl Field {
+    pub fn new(name: impl Into<String>, dtype: DataType) -> Field {
+        Field {
+            name: name.into(),
+            dtype,
+            nullable: true,
+        }
+    }
+
+    pub fn required(name: impl Into<String>, dtype: DataType) -> Field {
+        Field {
+            name: name.into(),
+            dtype,
+            nullable: false,
+        }
+    }
+}
+
+/// An ordered list of fields. Cheap to clone (used on every table op);
+/// the name index is behind an `Arc` and rebuilt only on construction.
+#[derive(Debug, Clone)]
+pub struct Schema {
+    fields: Arc<Vec<Field>>,
+    index: Arc<HashMap<String, usize>>,
+}
+
+impl PartialEq for Schema {
+    fn eq(&self, other: &Self) -> bool {
+        self.fields == other.fields
+    }
+}
+impl Eq for Schema {}
+
+impl Schema {
+    pub fn new(fields: Vec<Field>) -> Schema {
+        let index = fields
+            .iter()
+            .enumerate()
+            .map(|(i, f)| (f.name.clone(), i))
+            .collect();
+        Schema {
+            fields: Arc::new(fields),
+            index: Arc::new(index),
+        }
+    }
+
+    /// Parse `"id:i64,price:f64,name:str"` — the CLI/config schema syntax.
+    pub fn parse(spec: &str) -> Result<Schema> {
+        let mut fields = Vec::new();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (name, ty) = part.split_once(':').ok_or_else(|| {
+                RylonError::parse(format!("bad field spec '{part}' (want name:type)"))
+            })?;
+            let dtype = DataType::parse(ty.trim()).ok_or_else(|| {
+                RylonError::parse(format!("unknown type '{ty}' in '{part}'"))
+            })?;
+            fields.push(Field::new(name.trim(), dtype));
+        }
+        if fields.is_empty() {
+            return Err(RylonError::parse("empty schema spec"));
+        }
+        Ok(Schema::new(fields))
+    }
+
+    pub fn fields(&self) -> &[Field] {
+        &self.fields
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    pub fn field(&self, i: usize) -> &Field {
+        &self.fields[i]
+    }
+
+    /// Index of a column by name.
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.index
+            .get(name)
+            .copied()
+            .ok_or_else(|| RylonError::ColumnNotFound(name.to_string()))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    /// Schema equality up to column names (for set operators: the paper's
+    /// union/intersect/difference require equal arity and types, §Table I).
+    pub fn types_match(&self, other: &Schema) -> bool {
+        self.len() == other.len()
+            && self
+                .fields
+                .iter()
+                .zip(other.fields.iter())
+                .all(|(a, b)| a.dtype == b.dtype)
+    }
+
+    /// New schema with a subset of columns (project).
+    pub fn project(&self, indices: &[usize]) -> Schema {
+        Schema::new(indices.iter().map(|&i| self.fields[i].clone()).collect())
+    }
+
+    /// Concatenate two schemas, disambiguating duplicate names with a
+    /// suffix (join output convention, mirroring Cylon's `_right`).
+    pub fn join(&self, right: &Schema, suffix: &str) -> Schema {
+        let mut fields: Vec<Field> = self.fields.as_ref().clone();
+        for f in right.fields.iter() {
+            let name = if self.contains(&f.name) {
+                format!("{}{}", f.name, suffix)
+            } else {
+                f.name.clone()
+            };
+            fields.push(Field {
+                name,
+                dtype: f.dtype,
+                nullable: f.nullable,
+            });
+        }
+        Schema::new(fields)
+    }
+}
+
+impl std::fmt::Display for Schema {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, fld) in self.fields.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{}:{}", fld.name, fld.dtype)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_lookup() {
+        let s = Schema::parse("id:i64, price:f64,name:str,ok:bool").unwrap();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.index_of("price").unwrap(), 1);
+        assert_eq!(s.field(2).dtype, DataType::Utf8);
+        assert!(s.index_of("missing").is_err());
+        assert!(Schema::parse("").is_err());
+        assert!(Schema::parse("id").is_err());
+        assert!(Schema::parse("id:what").is_err());
+    }
+
+    #[test]
+    fn types_match_ignores_names() {
+        let a = Schema::parse("x:i64,y:f64").unwrap();
+        let b = Schema::parse("p:i64,q:f64").unwrap();
+        let c = Schema::parse("p:i64,q:str").unwrap();
+        assert!(a.types_match(&b));
+        assert!(!a.types_match(&c));
+    }
+
+    #[test]
+    fn join_suffixes_duplicates() {
+        let a = Schema::parse("id:i64,v:f64").unwrap();
+        let b = Schema::parse("id:i64,w:f64").unwrap();
+        let j = a.join(&b, "_r");
+        assert_eq!(
+            j.fields().iter().map(|f| f.name.as_str()).collect::<Vec<_>>(),
+            vec!["id", "v", "id_r", "w"]
+        );
+    }
+
+    #[test]
+    fn project_keeps_order() {
+        let s = Schema::parse("a:i64,b:f64,c:str").unwrap();
+        let p = s.project(&[2, 0]);
+        assert_eq!(p.field(0).name, "c");
+        assert_eq!(p.field(1).name, "a");
+    }
+}

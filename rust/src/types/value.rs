@@ -1,0 +1,193 @@
+//! [`Value`] — a boxed cell. Used only off the hot path: the dynamic
+//! binding layer (Fig 12 arm b), the baseline row engine (the executed
+//! stand-in for Python-level kernels), row debugging and pretty-printing.
+//! The columnar operators never materialise `Value`s.
+
+use std::cmp::Ordering;
+
+use crate::types::DataType;
+
+/// One dynamically-typed cell.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Int64(i64),
+    Float64(f64),
+    Utf8(String),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn dtype(&self) -> Option<DataType> {
+        match self {
+            Value::Null => None,
+            Value::Int64(_) => Some(DataType::Int64),
+            Value::Float64(_) => Some(DataType::Float64),
+            Value::Utf8(_) => Some(DataType::Utf8),
+            Value::Bool(_) => Some(DataType::Bool),
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float64(v) => Some(*v),
+            Value::Int64(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Utf8(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Total order used by the row engine's sort: nulls first, then by
+    /// type-specific order; f64 uses `total_cmp` (NaN greatest).
+    pub fn total_cmp(&self, other: &Value) -> Ordering {
+        use Value::*;
+        match (self, other) {
+            (Null, Null) => Ordering::Equal,
+            (Null, _) => Ordering::Less,
+            (_, Null) => Ordering::Greater,
+            (Int64(a), Int64(b)) => a.cmp(b),
+            (Float64(a), Float64(b)) => a.total_cmp(b),
+            (Int64(a), Float64(b)) => (*a as f64).total_cmp(b),
+            (Float64(a), Int64(b)) => a.total_cmp(&(*b as f64)),
+            (Utf8(a), Utf8(b)) => a.cmp(b),
+            (Bool(a), Bool(b)) => a.cmp(b),
+            // Cross-type: order by a fixed type rank so sorts are total.
+            (a, b) => type_rank(a).cmp(&type_rank(b)),
+        }
+    }
+
+    /// Render for CSV output / pretty printing (empty string for null —
+    /// the CSV writer's null convention).
+    pub fn render(&self) -> String {
+        match self {
+            Value::Null => String::new(),
+            Value::Int64(v) => v.to_string(),
+            Value::Float64(v) => format_f64(*v),
+            Value::Utf8(s) => s.clone(),
+            Value::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+fn type_rank(v: &Value) -> u8 {
+    match v {
+        Value::Null => 0,
+        Value::Bool(_) => 1,
+        Value::Int64(_) => 2,
+        Value::Float64(_) => 3,
+        Value::Utf8(_) => 4,
+    }
+}
+
+/// Shortest round-trip-safe float rendering (Rust's `{}` is already
+/// shortest-repr; this just pins the behaviour behind a name).
+pub fn format_f64(v: f64) -> String {
+    format!("{v}")
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int64(v)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Float64(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Utf8(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Utf8(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors_and_coercion() {
+        assert_eq!(Value::Int64(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Float64(2.5).as_i64(), None);
+        assert_eq!(Value::from("hi").as_str(), Some("hi"));
+        assert!(Value::Null.is_null());
+        assert_eq!(Value::Null.dtype(), None);
+    }
+
+    #[test]
+    fn ordering_nulls_first() {
+        let mut vs = vec![
+            Value::Int64(2),
+            Value::Null,
+            Value::Int64(-1),
+            Value::Null,
+        ];
+        vs.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(
+            vs,
+            vec![Value::Null, Value::Null, Value::Int64(-1), Value::Int64(2)]
+        );
+    }
+
+    #[test]
+    fn float_total_order_handles_nan() {
+        let a = Value::Float64(f64::NAN);
+        let b = Value::Float64(1.0);
+        assert_eq!(a.total_cmp(&b), Ordering::Greater);
+        assert_eq!(a.total_cmp(&a), Ordering::Equal);
+    }
+
+    #[test]
+    fn render_roundtrip() {
+        assert_eq!(Value::Int64(-7).render(), "-7");
+        assert_eq!(Value::Float64(1.5).render(), "1.5");
+        assert_eq!(Value::Null.render(), "");
+        assert_eq!(Value::Bool(true).render(), "true");
+    }
+
+    #[test]
+    fn mixed_numeric_compare() {
+        assert_eq!(
+            Value::Int64(2).total_cmp(&Value::Float64(2.5)),
+            Ordering::Less
+        );
+        assert_eq!(
+            Value::Float64(3.0).total_cmp(&Value::Int64(3)),
+            Ordering::Equal
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities (the offline registry has no `rand`,
+//! `serde_json` or `humansize`, so these are built in-tree and tested).
+
+pub mod rng;
+pub mod fmt;
+pub mod json;
+
+pub use fmt::{human_bytes, human_duration};
+pub use rng::{SplitMix64, Xoshiro256};

@@ -1,0 +1,241 @@
+//! End-to-end integration over the distributed runtime: CSV → cluster →
+//! dist ops → gather, scaling sanity on the sim fabric, failure
+//! injection, and the full demo pipeline.
+
+use rylon::column::Column;
+use rylon::dist::{dist_join, dist_sort, Cluster, DistConfig};
+use rylon::io::csv::{read_csv, write_csv, CsvOptions};
+use rylon::io::datagen::{gen_partition, gen_table, DataGenSpec};
+use rylon::net::CostModel;
+use rylon::ops::join::{join, JoinOptions};
+use rylon::ops::orderby::SortKey;
+use rylon::table::Table;
+
+#[test]
+fn csv_to_dist_join_to_csv() {
+    let dir = std::env::temp_dir().join("rylon_it_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let lp = dir.join("left.csv");
+    let rp = dir.join("right.csv");
+    let l = gen_table(&DataGenSpec::paper_scaling(2000, 11)).unwrap();
+    let r = gen_table(&DataGenSpec::paper_scaling(2000, 22)).unwrap();
+    write_csv(&l, &lp, &CsvOptions::default()).unwrap();
+    write_csv(&r, &rp, &CsvOptions::default()).unwrap();
+
+    // Local reference on the raw tables.
+    let expect = join(&l, &r, &JoinOptions::inner("id", "id"))
+        .unwrap()
+        .num_rows();
+
+    // Distributed: each rank reads the CSVs and slices its block.
+    let cluster = Cluster::new(DistConfig::threads(4)).unwrap();
+    let outs = cluster
+        .run(|ctx| {
+            let l = read_csv(&lp, &CsvOptions::default())?;
+            let r = read_csv(&rp, &CsvOptions::default())?;
+            let slice = |t: &Table| {
+                let n = t.num_rows();
+                let base = n / ctx.size;
+                let extra = n % ctx.size;
+                let my = base + (ctx.rank < extra) as usize;
+                let off = base * ctx.rank + ctx.rank.min(extra);
+                t.slice(off, my)
+            };
+            dist_join(
+                ctx,
+                &slice(&l),
+                &slice(&r),
+                &JoinOptions::inner("id", "id"),
+            )
+        })
+        .unwrap();
+    let got: usize = outs.iter().map(|t| t.num_rows()).sum();
+    assert_eq!(got, expect);
+
+    // Round-trip the gathered result through CSV.
+    let merged = Table::concat_all(outs[0].schema(), &outs).unwrap();
+    let out_path = dir.join("joined.csv");
+    write_csv(&merged, &out_path, &CsvOptions::default()).unwrap();
+    let back = read_csv(&out_path, &CsvOptions::default()).unwrap();
+    assert_eq!(back.num_rows(), expect);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sim_fabric_strong_scaling_shape() {
+    // The Fig 10 sanity core: makespan must drop substantially from 1
+    // to 8 ranks (compute-bound region), and the speedup must be
+    // sublinear at high rank counts (communication-bound region).
+    let rows = 60_000;
+    let mk = |p: usize| {
+        let cluster =
+            Cluster::new(DistConfig::sim(p, CostModel::default())).unwrap();
+        cluster
+            .run(|ctx| {
+                let l = gen_partition(
+                    &DataGenSpec::paper_scaling(rows, 1),
+                    ctx.rank,
+                    ctx.size,
+                )?;
+                let r = gen_partition(
+                    &DataGenSpec::paper_scaling(rows, 2),
+                    ctx.rank,
+                    ctx.size,
+                )?;
+                dist_join(ctx, &l, &r, &JoinOptions::inner("id", "id"))
+            })
+            .unwrap();
+        cluster.makespan().unwrap()
+    };
+    let t1 = mk(1);
+    let t8 = mk(8);
+    let t64 = mk(64);
+    let s8 = t1 / t8;
+    let s64 = t1 / t64;
+    assert!(s8 > 2.0, "speedup at 8 ranks too low: {s8:.2} (t1={t1:.4})");
+    // Communication term keeps 64-rank speedup well below ideal.
+    assert!(s64 < 64.0, "impossible superlinear speedup {s64:.2}");
+    assert!(
+        s64 > s8 * 0.5,
+        "64-rank run collapsed entirely: s8={s8:.2} s64={s64:.2}"
+    );
+}
+
+#[test]
+fn dist_sort_then_join_pipeline() {
+    // Compose two barrier ops back-to-back on one fabric — exercises
+    // generation handling across many exchanges.
+    let cluster = Cluster::new(DistConfig::threads(3)).unwrap();
+    let outs = cluster
+        .run(|ctx| {
+            let t = gen_partition(
+                &DataGenSpec::paper_scaling(3000, 5),
+                ctx.rank,
+                ctx.size,
+            )?;
+            let sorted = dist_sort(ctx, &t, &[SortKey::asc("id")])?;
+            let joined = dist_join(
+                ctx,
+                &sorted,
+                &sorted,
+                &JoinOptions::inner("id", "id"),
+            )?;
+            Ok((t.num_rows(), joined.num_rows()))
+        })
+        .unwrap();
+    let rows: usize = outs.iter().map(|(n, _)| n).sum();
+    assert_eq!(rows, 3000);
+    let joined: usize = outs.iter().map(|(_, j)| j).sum();
+    // Self-join cardinality ≥ input rows.
+    assert!(joined >= 3000);
+}
+
+#[test]
+fn rank_failure_fails_whole_job() {
+    // A rank erroring *before any collective* aborts the job cleanly.
+    let cluster = Cluster::new(DistConfig::threads(3)).unwrap();
+    let result: rylon::Result<Vec<()>> = cluster.run(|_ctx| {
+        Err(rylon::RylonError::invalid("injected failure"))
+    });
+    assert!(result.is_err());
+}
+
+#[test]
+fn mismatched_schema_errors_surface_from_ranks() {
+    let cluster = Cluster::new(DistConfig::threads(2)).unwrap();
+    let result: rylon::Result<Vec<Table>> = cluster.run(|ctx| {
+        let l = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![ctx.rank as i64]),
+        )])
+        .unwrap();
+        // Key column missing on the right: every rank errors identically
+        // (before any exchange), so the job aborts without deadlock.
+        let r = Table::from_columns(vec![(
+            "other",
+            Column::from_i64(vec![1]),
+        )])
+        .unwrap();
+        dist_join(ctx, &l, &r, &JoinOptions::inner("k", "k"))
+    });
+    assert!(result.is_err());
+}
+
+#[test]
+fn hundred_rank_smoke() {
+    // The paper runs up to 400 ranks; sanity-check a 100-rank job on
+    // the sim fabric end to end (tiny per-rank data).
+    let cluster =
+        Cluster::new(DistConfig::sim(100, CostModel::default())).unwrap();
+    let outs = cluster
+        .run(|ctx| {
+            let l = gen_partition(
+                &DataGenSpec::paper_scaling(5000, 1),
+                ctx.rank,
+                ctx.size,
+            )?;
+            let r = gen_partition(
+                &DataGenSpec::paper_scaling(5000, 2),
+                ctx.rank,
+                ctx.size,
+            )?;
+            dist_join(ctx, &l, &r, &JoinOptions::inner("id", "id"))
+        })
+        .unwrap();
+    assert_eq!(outs.len(), 100);
+    let total: usize = outs.iter().map(|t| t.num_rows()).sum();
+    assert!(total > 0);
+    assert!(cluster.makespan().unwrap() > 0.0);
+}
+
+#[test]
+fn demo_pipeline_matches_single_rank() {
+    use rylon::ops::groupby::{Agg, GroupByOptions};
+    use rylon::pipeline::{Env, Pipeline};
+    let build = || {
+        Pipeline::new()
+            .select("d0 > 0")
+            .unwrap()
+            .groupby(GroupByOptions::new(
+                &["id"],
+                vec![Agg::sum("d1"), Agg::count("d1")],
+            ))
+            .orderby(vec![SortKey::asc("id")])
+    };
+    let run_with = |world: usize| -> Vec<(i64, i64)> {
+        let cluster = Cluster::new(DistConfig::threads(world)).unwrap();
+        // One fixed global table, sliced per rank (gen_partition would
+        // draw different rows for different world sizes).
+        let whole = gen_table(&DataGenSpec::paper_scaling(4000, 77)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let n = whole.num_rows();
+                let base = n / ctx.size;
+                let extra = n % ctx.size;
+                let my = base + (ctx.rank < extra) as usize;
+                let off = base * ctx.rank + ctx.rank.min(extra);
+                let part = whole.slice(off, my);
+                let (out, _) =
+                    build().run_dist(ctx, &part, &Env::new())?;
+                Ok(out)
+            })
+            .unwrap();
+        let merged = Table::concat_all(outs[0].schema(), &outs).unwrap();
+        let mut rows: Vec<(i64, i64)> = (0..merged.num_rows())
+            .map(|i| {
+                (
+                    merged.column(0).value(i).as_i64().unwrap(),
+                    merged
+                        .column_by_name("count_d1")
+                        .unwrap()
+                        .value(i)
+                        .as_i64()
+                        .unwrap(),
+                )
+            })
+            .collect();
+        rows.sort();
+        rows
+    };
+    assert_eq!(run_with(1), run_with(5));
+}

@@ -1,0 +1,286 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state): randomised inputs from the crate's deterministic RNG, with
+//! the failing seed printed — a proptest substitute (proptest is not in
+//! the offline registry; every case logs its seed so failures replay).
+
+use std::collections::HashMap;
+
+use rylon::column::Column;
+use rylon::dist::{Cluster, DistConfig};
+use rylon::net::wire::{deserialize_table, serialize_table};
+use rylon::ops::join::{join, JoinAlgo, JoinOptions, JoinType};
+use rylon::ops::orderby::{orderby, SortKey};
+use rylon::ops::set_ops::{difference, distinct, intersect, subtract, union};
+use rylon::table::Table;
+use rylon::types::Value;
+use rylon::util::rng::Xoshiro256;
+
+const CASES: u64 = 30;
+
+/// Random table: i64 key (with nulls), f64 payload, short string col.
+fn random_table(rng: &mut Xoshiro256, max_rows: u64, key_domain: u64) -> Table {
+    let n = rng.next_below(max_rows + 1) as usize;
+    let keys: Vec<Option<i64>> = (0..n)
+        .map(|_| {
+            if rng.next_below(12) == 0 {
+                None
+            } else {
+                Some(rng.next_below(key_domain) as i64)
+            }
+        })
+        .collect();
+    let vals: Vec<f64> = (0..n).map(|_| rng.next_f64() * 100.0).collect();
+    let strs: Vec<String> = (0..n)
+        .map(|_| format!("s{}", rng.next_below(key_domain)))
+        .collect();
+    Table::from_columns(vec![
+        ("k", Column::from_opt_i64(keys)),
+        ("v", Column::from_f64(vals)),
+        (
+            "s",
+            Column::from_str(&strs.iter().map(|s| s.as_str()).collect::<Vec<_>>()),
+        ),
+    ])
+    .unwrap()
+}
+
+fn row_multiset(t: &Table) -> HashMap<String, usize> {
+    let mut m = HashMap::new();
+    for i in 0..t.num_rows() {
+        let key = t
+            .row(i)
+            .iter()
+            .map(|v| match v {
+                Value::Null => "∅".to_string(),
+                v => v.render(),
+            })
+            .collect::<Vec<_>>()
+            .join("|");
+        *m.entry(key).or_insert(0) += 1;
+    }
+    m
+}
+
+#[test]
+fn prop_wire_roundtrip_preserves_tables() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(1000 + seed);
+        let t = random_table(&mut rng, 200, 30);
+        let back = deserialize_table(&serialize_table(&t))
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(
+            row_multiset(&t),
+            row_multiset(&back),
+            "seed {seed}"
+        );
+        assert_eq!(t.schema(), back.schema(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_join_algorithms_agree_all_types() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(2000 + seed);
+        let a = random_table(&mut rng, 80, 15);
+        let b = random_table(&mut rng, 80, 15);
+        for jt in [
+            JoinType::Inner,
+            JoinType::Left,
+            JoinType::Right,
+            JoinType::FullOuter,
+        ] {
+            let opts = JoinOptions::new(jt, &["k"], &["k"]);
+            let h = join(&a, &b, &opts.clone().with_algo(JoinAlgo::Hash))
+                .unwrap();
+            let s = join(&a, &b, &opts.with_algo(JoinAlgo::Sort)).unwrap();
+            assert_eq!(
+                row_multiset(&h),
+                row_multiset(&s),
+                "seed {seed} {jt:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_inner_join_cardinality_formula() {
+    // |A ⋈ B| = Σ_k count_A(k)·count_B(k) over non-null keys.
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(3000 + seed);
+        let a = random_table(&mut rng, 100, 10);
+        let b = random_table(&mut rng, 100, 10);
+        let count_by_key = |t: &Table| {
+            let mut m: HashMap<i64, usize> = HashMap::new();
+            let c = t.column_by_name("k").unwrap();
+            for i in 0..t.num_rows() {
+                if let Some(k) = c.value(i).as_i64() {
+                    *m.entry(k).or_insert(0) += 1;
+                }
+            }
+            m
+        };
+        let ca = count_by_key(&a);
+        let cb = count_by_key(&b);
+        let expect: usize = ca
+            .iter()
+            .map(|(k, na)| na * cb.get(k).copied().unwrap_or(0))
+            .sum();
+        let j = join(&a, &b, &JoinOptions::inner("k", "k")).unwrap();
+        assert_eq!(j.num_rows(), expect, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_set_op_cardinalities() {
+    // Over distinct multisets: |A∪B| = |dA| + |dB| − |A∩B| and
+    // |AΔB| = |A∪B| − |A∩B|; A∖B and B∖A partition AΔB.
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(4000 + seed);
+        let a = random_table(&mut rng, 60, 8);
+        let b = random_table(&mut rng, 60, 8);
+        let da = distinct(&a).num_rows();
+        let db = distinct(&b).num_rows();
+        let u = union(&a, &b).unwrap().num_rows();
+        let i = intersect(&a, &b).unwrap().num_rows();
+        let d = difference(&a, &b).unwrap().num_rows();
+        let ab = subtract(&a, &b).unwrap().num_rows();
+        let ba = subtract(&b, &a).unwrap().num_rows();
+        assert_eq!(u, da + db - i, "seed {seed} union");
+        assert_eq!(d, u - i, "seed {seed} difference");
+        assert_eq!(d, ab + ba, "seed {seed} partition");
+    }
+}
+
+#[test]
+fn prop_distinct_idempotent_and_subset() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(5000 + seed);
+        let t = random_table(&mut rng, 100, 5);
+        let d1 = distinct(&t);
+        let d2 = distinct(&d1);
+        assert_eq!(row_multiset(&d1), row_multiset(&d2), "seed {seed}");
+        assert!(d1.num_rows() <= t.num_rows());
+        // Every distinct row appears in the original.
+        let orig = row_multiset(&t);
+        for (row, n) in row_multiset(&d1) {
+            assert_eq!(n, 1, "seed {seed} row duplicated");
+            assert!(orig.contains_key(&row), "seed {seed} invented row");
+        }
+    }
+}
+
+#[test]
+fn prop_orderby_is_sorted_permutation() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(6000 + seed);
+        let t = random_table(&mut rng, 150, 20);
+        let s = orderby(&t, &[SortKey::asc("k"), SortKey::desc("v")])
+            .unwrap();
+        assert_eq!(row_multiset(&t), row_multiset(&s), "seed {seed}");
+        let kc = s.column_by_name("k").unwrap();
+        let vc = s.column_by_name("v").unwrap();
+        for i in 1..s.num_rows() {
+            let ord = kc.cmp_rows(i - 1, kc, i);
+            assert!(ord != std::cmp::Ordering::Greater, "seed {seed}");
+            if ord == std::cmp::Ordering::Equal {
+                assert!(
+                    vc.cmp_rows(i - 1, vc, i)
+                        != std::cmp::Ordering::Less,
+                    "seed {seed} tiebreak"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_shuffle_preserves_multiset_and_routes_consistently() {
+    for seed in 0..8 {
+        let world = 1 + (seed as usize % 4);
+        let cluster = Cluster::new(DistConfig::threads(world)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let mut rng = Xoshiro256::new(
+                    7000 + seed * 100 + ctx.rank as u64,
+                );
+                let t = random_table(&mut rng, 120, 25);
+                let shuffled = rylon::dist::shuffle(
+                    ctx,
+                    &t,
+                    &["k".to_string()],
+                )?;
+                Ok((t, shuffled))
+            })
+            .unwrap();
+        // Global multiset preserved.
+        let mut before = HashMap::new();
+        let mut after = HashMap::new();
+        for (t, s) in &outs {
+            for (k, v) in row_multiset(t) {
+                *before.entry(k).or_insert(0) += v;
+            }
+            for (k, v) in row_multiset(s) {
+                *after.entry(k).or_insert(0) += v;
+            }
+        }
+        assert_eq!(before, after, "seed {seed} world {world}");
+        // Same key never lands on two ranks.
+        let mut owner: HashMap<String, usize> = HashMap::new();
+        for (rank, (_, s)) in outs.iter().enumerate() {
+            let kc = s.column_by_name("k").unwrap();
+            for i in 0..s.num_rows() {
+                let key = kc.value(i).render();
+                if let Some(&prev) = owner.get(&key) {
+                    assert_eq!(prev, rank, "key {key} split across ranks");
+                } else {
+                    owner.insert(key, rank);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rebalance_preserves_order_and_evens_sizes() {
+    for seed in 0..8u64 {
+        let world = 2 + (seed as usize % 3);
+        let cluster = Cluster::new(DistConfig::threads(world)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let mut rng =
+                    Xoshiro256::new(8000 + seed * 31 + ctx.rank as u64);
+                // Heavily skewed sizes.
+                let n = if ctx.rank == 0 {
+                    rng.next_below(200) as usize
+                } else {
+                    rng.next_below(10) as usize
+                };
+                let start = (ctx.rank * 1_000_000) as i64;
+                let t = Table::from_columns(vec![(
+                    "v",
+                    Column::from_i64(
+                        (start..start + n as i64).collect(),
+                    ),
+                )])
+                .unwrap();
+                let r = rylon::dist::rebalance(ctx, &t)?;
+                Ok((t.num_rows(), r))
+            })
+            .unwrap();
+        let total: usize = outs.iter().map(|(n, _)| n).sum();
+        let sizes: Vec<usize> =
+            outs.iter().map(|(_, r)| r.num_rows()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), total, "seed {seed}");
+        let max = sizes.iter().max().unwrap();
+        let min = sizes.iter().min().unwrap();
+        assert!(max - min <= 1, "seed {seed}: uneven {sizes:?}");
+        // Global order preserved (values increase rank-major).
+        let all: Vec<i64> = outs
+            .iter()
+            .flat_map(|(_, r)| r.column(0).i64_values().to_vec())
+            .collect();
+        let mut sorted = all.clone();
+        sorted.sort();
+        assert_eq!(all, sorted, "seed {seed} order broken");
+    }
+}
