@@ -1,0 +1,167 @@
+//! Intra-op (morsel) scaling: filter / hash join / groupby / sort on
+//! one rank at 1/2/4/8 worker threads over `io::datagen` tables.
+//! Verifies parallel output is bit-identical to serial, prints the
+//! rows/sec grid, and emits `BENCH_intra_op.json` so the perf
+//! trajectory is tracked from this PR onward.
+//!
+//! Env overrides: INTRA_ROWS (default 1_000_000), INTRA_SAMPLES,
+//! INTRA_MAX_THREADS.
+
+use rylon::bench_harness::{measure, BenchOpts, Report};
+use rylon::exec;
+use rylon::io::datagen::{gen_table, DataGenSpec};
+use rylon::ops::groupby::{groupby, Agg, GroupByOptions};
+use rylon::ops::join::{join, JoinAlgo, JoinOptions};
+use rylon::ops::orderby::{orderby, SortKey};
+use rylon::ops::select::{select, Predicate};
+use rylon::table::Table;
+use rylon::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+struct Workload {
+    name: &'static str,
+    rows: usize,
+    run: Box<dyn Fn() -> Table>,
+}
+
+fn main() {
+    let rows = env_usize("INTRA_ROWS", 1_000_000);
+    let max_threads = env_usize("INTRA_MAX_THREADS", 8);
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        samples: env_usize("INTRA_SAMPLES", 3),
+    };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threads_sweep: Vec<usize> = [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|&t| t <= max_threads)
+        .collect();
+    println!(
+        "intra-op scaling: {rows} rows, {cores} cores, threads {threads_sweep:?}"
+    );
+
+    let a = gen_table(&DataGenSpec::paper_scaling(rows, 1)).unwrap();
+    let b = gen_table(&DataGenSpec::paper_scaling(rows, 2)).unwrap();
+
+    let pred = Predicate::parse("d0 > 0").unwrap();
+    let jopts = JoinOptions::inner("id", "id").with_algo(JoinAlgo::Hash);
+    let gopts =
+        GroupByOptions::new(&["id"], vec![Agg::sum("d1"), Agg::count("d1")]);
+    let sort_keys = vec![SortKey::asc("id")];
+
+    let workloads: Vec<Workload> = vec![
+        Workload {
+            name: "filter",
+            rows,
+            run: {
+                let a = a.clone();
+                let pred = pred.clone();
+                Box::new(move || select(&a, &pred).unwrap())
+            },
+        },
+        Workload {
+            name: "hash_join",
+            rows,
+            run: {
+                let (a, b, jopts) = (a.clone(), b.clone(), jopts.clone());
+                Box::new(move || join(&a, &b, &jopts).unwrap())
+            },
+        },
+        Workload {
+            name: "groupby",
+            rows,
+            run: {
+                let (a, gopts) = (a.clone(), gopts.clone());
+                Box::new(move || groupby(&a, &gopts).unwrap())
+            },
+        },
+        Workload {
+            name: "sort",
+            rows,
+            run: {
+                let (a, sort_keys) = (a.clone(), sort_keys.clone());
+                Box::new(move || orderby(&a, &sort_keys).unwrap())
+            },
+        },
+    ];
+
+    let mut report = Report::new(&format!(
+        "Intra-op morsel scaling, {rows} rows ({cores} cores)"
+    ));
+    let mut samples: Vec<(String, usize, f64, f64)> = Vec::new();
+
+    for w in &workloads {
+        // Serial reference output — every thread count must match it
+        // bit-for-bit before its timing counts.
+        let reference = exec::with_intra_op_threads(1, || (w.run)());
+        let mut base_seconds = f64::NAN;
+        for &t in &threads_sweep {
+            let out = exec::with_intra_op_threads(t, || (w.run)());
+            assert_eq!(
+                out, reference,
+                "{} at {t} threads diverged from serial",
+                w.name
+            );
+            let stats = exec::with_intra_op_threads(t, || {
+                measure(opts, || {
+                    std::hint::black_box((w.run)().num_rows());
+                })
+            });
+            if t == 1 {
+                base_seconds = stats.median;
+            }
+            let rows_per_sec = w.rows as f64 / stats.median.max(1e-12);
+            let speedup = base_seconds / stats.median.max(1e-12);
+            report.add_with(
+                w.name,
+                t as f64,
+                stats.median,
+                vec![
+                    ("rows_per_sec".to_string(), rows_per_sec),
+                    ("speedup_vs_1t".to_string(), speedup),
+                ],
+            );
+            samples.push((w.name.to_string(), t, stats.median, rows_per_sec));
+            println!(
+                "  {:>10} t={t}: {:>10.4}s  {:>14.0} rows/s  ({:.2}x vs 1t)",
+                w.name, stats.median, rows_per_sec, speedup
+            );
+        }
+    }
+
+    println!("{}", report.render());
+    report.save("intra_op_scaling").expect("save report");
+
+    // Headline JSON tracked in-repo style: BENCH_intra_op.json.
+    let json = Json::obj(vec![
+        ("rows", Json::num(rows as f64)),
+        ("cores", Json::num(cores as f64)),
+        (
+            "results",
+            Json::Arr(
+                samples
+                    .iter()
+                    .map(|(name, t, secs, rps)| {
+                        Json::obj(vec![
+                            ("op", Json::str(name.clone())),
+                            ("threads", Json::num(*t as f64)),
+                            ("seconds", Json::num(*secs)),
+                            ("rows_per_sec", Json::num(*rps)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_intra_op.json", json.to_string())
+        .expect("write BENCH_intra_op.json");
+    println!("wrote BENCH_intra_op.json");
+}

@@ -1,7 +1,13 @@
 //! Selection vectors: turn a predicate into row indices and gather.
 //! Select/project and the partition scatter all funnel through here.
+//! Gathers over dense fixed-width columns fan out across the calling
+//! thread's morsel budget (bit-identical to the serial gather).
 
+use std::sync::Arc;
+
+use crate::column::{Column, PrimitiveColumn};
 use crate::error::Result;
+use crate::exec::{self, ExecContext};
 use crate::table::Table;
 use crate::types::Value;
 
@@ -19,6 +25,61 @@ pub fn filter_indices<F: FnMut(usize) -> bool>(nrows: usize, mut pred: F) -> Vec
 /// Gather rows of `table` by `indices`.
 pub fn take_indices(table: &Table, indices: &[usize]) -> Table {
     table.take(indices)
+}
+
+/// Morsel-parallel `Table::take`: dense fixed-width columns gather into
+/// disjoint output ranges concurrently; nullable and string columns use
+/// the serial per-column gather. Output equals `table.take(indices)`.
+pub fn take_parallel(
+    table: &Table,
+    indices: &[usize],
+    exec: ExecContext,
+) -> Table {
+    if !exec.is_parallel() || indices.len() < exec::PAR_ROW_THRESHOLD {
+        return table.take(indices);
+    }
+    let columns: Vec<Arc<Column>> = table
+        .columns()
+        .map(|c| Arc::new(take_column_parallel(c, indices, exec)))
+        .collect();
+    Table::from_parts(table.schema().clone(), columns, indices.len())
+}
+
+/// Morsel-parallel gather of one column (see [`take_parallel`]).
+pub fn take_column_parallel(
+    col: &Column,
+    indices: &[usize],
+    exec: ExecContext,
+) -> Column {
+    if !exec.is_parallel() || indices.len() < exec::PAR_ROW_THRESHOLD {
+        return col.take(indices);
+    }
+    match col {
+        Column::Int64(c) if c.validity().is_none() => Column::Int64(
+            PrimitiveColumn::from_values(exec::par_gather(
+                c.values(),
+                indices,
+                exec,
+            )),
+        ),
+        Column::Float64(c) if c.validity().is_none() => Column::Float64(
+            PrimitiveColumn::from_values(exec::par_gather(
+                c.values(),
+                indices,
+                exec,
+            )),
+        ),
+        Column::Bool(c) if c.validity().is_none() => Column::Bool(
+            PrimitiveColumn::from_values(exec::par_gather(
+                c.values(),
+                indices,
+                exec,
+            )),
+        ),
+        // Validity bitmaps share words across morsel boundaries and
+        // string gathers need byte-offset prefix sums — serial path.
+        other => other.take(indices),
+    }
 }
 
 /// Filter a table with a row-level predicate over boxed values — the
@@ -77,6 +138,37 @@ mod tests {
         let f = filter_table(&t, |row| row[1].as_f64().unwrap() > 0.6).unwrap();
         assert_eq!(f.num_rows(), 2);
         assert_eq!(f.column(0).i64_values(), &[2, 4]);
+    }
+
+    #[test]
+    fn take_parallel_matches_serial() {
+        let n = 20_000usize;
+        let t = Table::from_columns(vec![
+            ("id", Column::from_i64((0..n as i64).collect())),
+            (
+                "v",
+                Column::from_f64((0..n).map(|i| i as f64 * 0.5).collect()),
+            ),
+            (
+                "opt",
+                Column::from_opt_i64(
+                    (0..n)
+                        .map(|i| if i % 3 == 0 { None } else { Some(i as i64) })
+                        .collect(),
+                ),
+            ),
+            (
+                "s",
+                Column::from_str(
+                    &(0..n).map(|i| format!("r{i}")).collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+        .unwrap();
+        let indices: Vec<usize> = (0..n).rev().filter(|i| i % 2 == 0).collect();
+        let serial = t.take(&indices);
+        let par = take_parallel(&t, &indices, ExecContext::new(4));
+        assert_eq!(par, serial);
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::hash::{BuildHasherDefault, Hasher};
 
 use crate::column::Column;
 use crate::error::{Result, RylonError};
+use crate::exec::{self, ExecContext, SendPtr};
 use crate::table::Table;
 
 /// No-op hasher for keys that are already splitmix64-mixed (§Perf:
@@ -70,6 +71,63 @@ impl HashChains {
         HashChains { heads, next }
     }
 
+    /// Parallel build: rows are radix-partitioned by the **top** hash
+    /// bits ([`hash_partition_of`] — independent of the map's low-bit
+    /// bucket indexing), so each worker owns a disjoint slice of the
+    /// hash space and inserts its rows in ascending row order. The
+    /// resulting `next` chains and per-hash bucket contents are
+    /// bit-identical to [`HashChains::build`]; only the (unobservable)
+    /// heads-map memory layout differs.
+    pub fn build_parallel<F>(
+        hashes: &[u64],
+        skip: F,
+        exec: ExecContext,
+    ) -> HashChains
+    where
+        F: Fn(usize) -> bool + Sync,
+    {
+        let nparts = exec.threads();
+        if nparts <= 1 || hashes.len() < exec::PAR_ROW_THRESHOLD {
+            return Self::build(hashes, skip);
+        }
+        let n = hashes.len();
+        // One O(n) morsel-parallel prepass buckets row ids per
+        // partition, so each insert worker touches only its own rows
+        // (no per-worker full rescans of `hashes`).
+        let rows_by_part = partition_rows(hashes, nparts, exec, skip);
+        let mut next = vec![CHAIN_END; n];
+        let ptr = SendPtr(next.as_mut_ptr());
+        let maps = exec::run_partitions(nparts, |p| {
+            let mut heads: PreHashedMap<u32> =
+                PreHashedMap::with_capacity_and_hasher(
+                    n * 2 / nparts + 8,
+                    Default::default(),
+                );
+            for morsel_buckets in &rows_by_part {
+                for &i in &morsel_buckets[p] {
+                    let e =
+                        heads.entry(hashes[i as usize]).or_insert(CHAIN_END);
+                    // SAFETY: row i is written only by the worker owning
+                    // its hash partition; partitions are disjoint.
+                    unsafe {
+                        *ptr.0.add(i as usize) = *e;
+                    }
+                    *e = i;
+                }
+            }
+            heads
+        });
+        let mut heads: PreHashedMap<u32> =
+            PreHashedMap::with_capacity_and_hasher(
+                n * 2,
+                Default::default(),
+            );
+        for m in maps {
+            heads.extend(m);
+        }
+        HashChains { heads, next }
+    }
+
     /// Iterate the rows in the bucket for hash `h` (reverse insertion
     /// order).
     #[inline]
@@ -78,6 +136,97 @@ impl HashChains {
             next: &self.next,
             cur: self.heads.get(&h).copied().unwrap_or(CHAIN_END),
         }
+    }
+}
+
+/// Owner partition of a hash for the parallel builders: the high 32
+/// bits scaled into `[0, nparts)`, so the split never correlates with
+/// the map's low-bit bucket choice.
+#[inline]
+pub fn hash_partition_of(h: u64, nparts: usize) -> usize {
+    (((h >> 32) as usize) * nparts) >> 32
+}
+
+/// Morsel-parallel scatter of row ids by hash partition. Indexed
+/// `[morsel][partition] → ascending row ids`, so iterating morsels in
+/// order yields each partition's rows in ascending row order — the
+/// serial insertion order the bit-identity contract requires. Rows with
+/// `skip(row)` true are dropped.
+pub(crate) fn partition_rows<F>(
+    hashes: &[u64],
+    nparts: usize,
+    exec: ExecContext,
+    skip: F,
+) -> Vec<Vec<Vec<u32>>>
+where
+    F: Fn(usize) -> bool + Sync,
+{
+    exec::for_each_morsel(hashes.len(), exec, |m| {
+        let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); nparts];
+        for i in m.range() {
+            if !skip(i) {
+                buckets[hash_partition_of(hashes[i], nparts)]
+                    .push(i as u32);
+            }
+        }
+        buckets
+    })
+}
+
+/// Distinct-key interner on pre-hashed keys: chained group ids per hash
+/// bucket over a [`PreHashedMap`], first-occurrence group numbering —
+/// the one bucket structure behind both the serial and the parallel
+/// groupby (and the layout sibling of [`HashChains`]).
+pub struct GroupIndex {
+    heads: PreHashedMap<u32>,
+    next_group: Vec<u32>,
+    rep_rows: Vec<usize>,
+}
+
+impl GroupIndex {
+    pub fn with_capacity(capacity: usize) -> GroupIndex {
+        GroupIndex {
+            heads: PreHashedMap::with_capacity_and_hasher(
+                capacity,
+                Default::default(),
+            ),
+            next_group: Vec::new(),
+            rep_rows: Vec::new(),
+        }
+    }
+
+    /// Group id for `row` with hash `h`; `eq(rep, row)` decides key
+    /// equality against a group's representative row. Returns
+    /// `(gid, newly_created)`.
+    #[inline]
+    pub fn intern<EQ: Fn(usize, usize) -> bool>(
+        &mut self,
+        h: u64,
+        row: usize,
+        eq: EQ,
+    ) -> (u32, bool) {
+        let head = self.heads.entry(h).or_insert(CHAIN_END);
+        let mut cur = *head;
+        while cur != CHAIN_END {
+            if eq(self.rep_rows[cur as usize], row) {
+                return (cur, false);
+            }
+            cur = self.next_group[cur as usize];
+        }
+        let gid = self.rep_rows.len() as u32;
+        self.rep_rows.push(row);
+        self.next_group.push(*head);
+        *head = gid;
+        (gid, true)
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.rep_rows.len()
+    }
+
+    /// Representative (first-occurrence) row per group, in group order.
+    pub fn rep_rows(&self) -> &[usize] {
+        &self.rep_rows
     }
 }
 
@@ -158,17 +307,42 @@ pub fn hash_column(col: &Column, out: &mut Vec<u64>) {
 }
 
 /// Combined hash over multiple key columns (boost-style hash_combine on
-/// top of the per-cell finalizer).
+/// top of the per-cell finalizer). Large inputs fan out over the
+/// calling thread's morsel budget; per-row arithmetic is unchanged, so
+/// the output is bit-identical at any thread count.
 pub fn hash_columns(cols: &[&Column], nrows: usize, out: &mut Vec<u64>) {
     out.clear();
     if cols.is_empty() {
         out.resize(nrows, splitmix64(0));
         return;
     }
-    hash_column(cols[0], out);
+    out.resize(nrows, 0);
+    let exec = exec::parallelism_for(nrows);
+    exec::fill_parallel(out.as_mut_slice(), exec, |m, dst| {
+        hash_range_into(cols, m.start, dst);
+    });
+}
+
+/// Hash rows `[start, start + dst.len())` of the key columns into `dst`
+/// — the shared per-morsel kernel of [`hash_columns`].
+fn hash_range_into(cols: &[&Column], start: usize, dst: &mut [u64]) {
+    match cols[0] {
+        // Monomorphic fast path for the common dense i64 key.
+        Column::Int64(c) if c.validity().is_none() => {
+            let vals = &c.values()[start..start + dst.len()];
+            for (d, &v) in dst.iter_mut().zip(vals) {
+                *d = splitmix64(v as u64);
+            }
+        }
+        first => {
+            for (k, d) in dst.iter_mut().enumerate() {
+                *d = hash_cell(first, start + k);
+            }
+        }
+    }
     for col in &cols[1..] {
-        for (i, h) in out.iter_mut().enumerate() {
-            let c = hash_cell(col, i);
+        for (k, h) in dst.iter_mut().enumerate() {
+            let c = hash_cell(col, start + k);
             // hash_combine: h ^= c + golden + (h<<6) + (h>>2)
             *h ^= c
                 .wrapping_add(0x9E37_79B9_7F4A_7C15)
@@ -264,6 +438,71 @@ mod tests {
         let b9: Vec<usize> = chains.bucket(9).collect();
         assert_eq!(b9, vec![4, 1]);
         assert_eq!(chains.bucket(999).count(), 0);
+    }
+
+    #[test]
+    fn parallel_chains_match_serial() {
+        let hashes: Vec<u64> = (0..20_000u64)
+            .map(|i| splitmix64(i % 500))
+            .collect();
+        let skip = |i: usize| i % 17 == 0;
+        let serial = HashChains::build(&hashes, skip);
+        let par = HashChains::build_parallel(
+            &hashes,
+            skip,
+            crate::exec::ExecContext::new(4),
+        );
+        for h in hashes.iter().take(1000) {
+            let a: Vec<usize> = serial.bucket(*h).collect();
+            let b: Vec<usize> = par.bucket(*h).collect();
+            assert_eq!(a, b, "bucket {h:#x}");
+        }
+    }
+
+    #[test]
+    fn parallel_hash_columns_match_serial() {
+        let n = 10_000;
+        let a = Column::from_i64((0..n as i64).collect());
+        let b = Column::from_opt_f64(
+            (0..n)
+                .map(|i| if i % 7 == 0 { None } else { Some(i as f64) })
+                .collect(),
+        );
+        let mut serial = Vec::new();
+        hash_columns(&[&a, &b], n, &mut serial);
+        let mut par = Vec::new();
+        crate::exec::with_intra_op_threads(4, || {
+            hash_columns(&[&a, &b], n, &mut par);
+        });
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn group_index_first_occurrence_order() {
+        let keys = [5u64, 7, 5, 9, 7, 5];
+        let mut gi = GroupIndex::with_capacity(8);
+        let mut gids = Vec::new();
+        for (row, &k) in keys.iter().enumerate() {
+            let (g, _) =
+                gi.intern(splitmix64(k), row, |rep, r| keys[rep] == keys[r]);
+            gids.push(g);
+        }
+        assert_eq!(gids, vec![0, 1, 0, 2, 1, 0]);
+        assert_eq!(gi.num_groups(), 3);
+        assert_eq!(gi.rep_rows(), &[0, 1, 3]);
+    }
+
+    #[test]
+    fn hash_partition_covers_and_bounds() {
+        for nparts in [1usize, 2, 3, 8, 128] {
+            let mut seen = vec![false; nparts];
+            for i in 0..10_000u64 {
+                let p = hash_partition_of(splitmix64(i), nparts);
+                assert!(p < nparts);
+                seen[p] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "nparts={nparts}");
+        }
     }
 
     #[test]

@@ -8,6 +8,6 @@ pub mod filter;
 pub mod aggregate;
 pub mod arithmetic;
 
-pub use filter::{filter_table, take_indices};
+pub use filter::{filter_table, take_indices, take_parallel};
 pub use hash::{hash_column, hash_columns, splitmix64};
 pub use sort::{argsort_by_columns, argsort_i64};

@@ -12,25 +12,39 @@
 use std::cmp::Ordering;
 
 use crate::column::Column;
+use crate::exec::{self, ExecContext};
+
+/// Sign-flip an i64 so its u64 bit pattern sorts numerically.
+#[inline]
+fn flip_i64(k: i64) -> u64 {
+    (k as u64) ^ (1u64 << 63)
+}
 
 /// Argsort of an i64 slice via LSD radix sort; `nulls_first` rows (given
 /// by `validity`) are emitted ahead of all valid rows. Returns the
-/// permutation `perm` such that `keys[perm]` is ascending.
+/// permutation `perm` such that `keys[perm]` is ascending. Large inputs
+/// run as a parallel run-sort + stable k-way (pairwise) merge on the
+/// calling thread's morsel budget — both paths are stable sorts on the
+/// same key, so the permutation is identical at any thread count.
 pub fn argsort_i64(keys: &[i64], validity: Option<&crate::buffer::Bitmap>) -> Vec<usize> {
     let n = keys.len();
+    let exec = exec::parallelism_for(n);
+    if exec.is_parallel() {
+        return argsort_i64_parallel(keys, validity, exec);
+    }
     // Partition nulls up front (rare path).
     let mut nulls: Vec<usize> = Vec::new();
     let mut pairs: Vec<(u64, u32)> = Vec::with_capacity(n);
     match validity {
         None => {
             for (i, &k) in keys.iter().enumerate() {
-                pairs.push(((k as u64) ^ (1u64 << 63), i as u32));
+                pairs.push((flip_i64(k), i as u32));
             }
         }
         Some(bm) => {
             for (i, &k) in keys.iter().enumerate() {
                 if bm.get(i) {
-                    pairs.push(((k as u64) ^ (1u64 << 63), i as u32));
+                    pairs.push((flip_i64(k), i as u32));
                 } else {
                     nulls.push(i);
                 }
@@ -43,6 +57,92 @@ pub fn argsort_i64(keys: &[i64], validity: Option<&crate::buffer::Bitmap>) -> Ve
     let mut out = nulls;
     out.extend(pairs.iter().map(|&(_, i)| i as usize));
     out
+}
+
+/// Parallel run-sort: radix-sort index-contiguous runs concurrently,
+/// then stable-merge adjacent runs pairwise (ties take the left run, so
+/// equal keys keep original index order — exactly the serial radix
+/// sort's stability).
+fn argsort_i64_parallel(
+    keys: &[i64],
+    validity: Option<&crate::buffer::Bitmap>,
+    exec: ExecContext,
+) -> Vec<usize> {
+    let runs_in = exec::split_even(keys.len(), exec.threads());
+    let sorted_runs: Vec<(Vec<usize>, Vec<(u64, u32)>)> =
+        exec::map_parallel(runs_in, |m| {
+            let mut nulls: Vec<usize> = Vec::new();
+            let mut pairs: Vec<(u64, u32)> = Vec::with_capacity(m.len());
+            match validity {
+                None => {
+                    for i in m.range() {
+                        pairs.push((flip_i64(keys[i]), i as u32));
+                    }
+                }
+                Some(bm) => {
+                    for i in m.range() {
+                        if bm.get(i) {
+                            pairs.push((flip_i64(keys[i]), i as u32));
+                        } else {
+                            nulls.push(i);
+                        }
+                    }
+                }
+            }
+            radix_sort_pairs(&mut pairs);
+            (nulls, pairs)
+        });
+    let mut out: Vec<usize> = Vec::with_capacity(keys.len());
+    let mut runs: Vec<Vec<(u64, u32)>> = Vec::with_capacity(sorted_runs.len());
+    for (nulls, pairs) in sorted_runs {
+        out.extend(nulls); // runs are in index order → nulls stay in index order
+        runs.push(pairs);
+    }
+    let merged = merge_runs_stable_by(runs, |b, a| b.0 < a.0);
+    out.extend(merged.iter().map(|&(_, i)| i as usize));
+    out
+}
+
+/// Pairwise stable merge of adjacent sorted runs until one remains;
+/// each level's merges run in parallel. `take_right(b, a)` returns true
+/// only when `b` sorts *strictly* before `a` — on ties the left
+/// (earlier-index) run wins, which is exactly the stability that keeps
+/// parallel permutations bit-identical to the serial stable sorts.
+fn merge_runs_stable_by<T, F>(mut runs: Vec<Vec<T>>, take_right: F) -> Vec<T>
+where
+    T: Copy + Send,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    if runs.is_empty() {
+        return Vec::new();
+    }
+    while runs.len() > 1 {
+        let mut it = runs.into_iter();
+        let mut pairs = Vec::new();
+        while let Some(a) = it.next() {
+            pairs.push((a, it.next()));
+        }
+        runs = exec::map_parallel(pairs, |(a, b)| match b {
+            None => a,
+            Some(b) => {
+                let mut out = Vec::with_capacity(a.len() + b.len());
+                let (mut i, mut j) = (0usize, 0usize);
+                while i < a.len() && j < b.len() {
+                    if take_right(&b[j], &a[i]) {
+                        out.push(b[j]);
+                        j += 1;
+                    } else {
+                        out.push(a[i]);
+                        i += 1;
+                    }
+                }
+                out.extend_from_slice(&a[i..]);
+                out.extend_from_slice(&b[j..]);
+                out
+            }
+        });
+    }
+    runs.pop().unwrap()
 }
 
 /// LSD radix sort of (key, payload) pairs, 8 bits per pass, skipping
@@ -97,15 +197,16 @@ pub fn radix_sort_pairs(pairs: &mut Vec<(u64, u32)>) {
 }
 
 /// Generic argsort over several key columns with per-key direction
-/// (`true` = descending). Stable so ties preserve input order.
+/// (`true` = descending). Stable so ties preserve input order. Large
+/// inputs run as a parallel stable run-sort + stable merge — the same
+/// permutation as the serial stable sort.
 pub fn argsort_by_columns(
     cols: &[&Column],
     descending: &[bool],
     nrows: usize,
 ) -> Vec<usize> {
     debug_assert_eq!(cols.len(), descending.len());
-    let mut idx: Vec<usize> = (0..nrows).collect();
-    idx.sort_by(|&a, &b| {
+    let cmp = |a: usize, b: usize| -> Ordering {
         for (c, &desc) in cols.iter().zip(descending) {
             let ord = c.cmp_rows(a, *c, b);
             let ord = if desc { ord.reverse() } else { ord };
@@ -114,7 +215,21 @@ pub fn argsort_by_columns(
             }
         }
         Ordering::Equal
-    });
+    };
+    let exec = exec::parallelism_for(nrows);
+    if exec.is_parallel() {
+        let runs: Vec<Vec<usize>> =
+            exec::map_parallel(exec::split_even(nrows, exec.threads()), |m| {
+                let mut idx: Vec<usize> = m.range().collect();
+                idx.sort_by(|&a, &b| cmp(a, b));
+                idx
+            });
+        return merge_runs_stable_by(runs, |&b, &a| {
+            cmp(b, a) == Ordering::Less
+        });
+    }
+    let mut idx: Vec<usize> = (0..nrows).collect();
+    idx.sort_by(|&a, &b| cmp(a, b));
     idx
 }
 
@@ -183,5 +298,54 @@ mod tests {
     fn empty_and_single() {
         assert!(argsort_i64(&[], None).is_empty());
         assert_eq!(argsort_i64(&[7], None), vec![0]);
+    }
+
+    #[test]
+    fn parallel_argsort_i64_identical_permutation() {
+        let mut r = Xoshiro256::new(77);
+        // Narrow domain forces heavy ties → stability is observable.
+        let keys: Vec<i64> =
+            (0..50_000).map(|_| (r.next_below(97) as i64) - 48).collect();
+        let serial = argsort_i64(&keys, None);
+        for threads in [2, 3, 4, 8] {
+            let par = crate::exec::with_intra_op_threads(threads, || {
+                argsort_i64(&keys, None)
+            });
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_argsort_i64_nulls_first_in_index_order() {
+        let mut r = Xoshiro256::new(78);
+        let n = 20_000;
+        let keys: Vec<i64> =
+            (0..n).map(|_| r.next_below(1000) as i64).collect();
+        let valid: Vec<bool> = (0..n).map(|i| i % 5 != 0).collect();
+        let bm = Bitmap::from_bools(&valid);
+        let serial = argsort_i64(&keys, Some(&bm));
+        let par = crate::exec::with_intra_op_threads(4, || {
+            argsort_i64(&keys, Some(&bm))
+        });
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn parallel_argsort_by_columns_identical() {
+        let mut r = Xoshiro256::new(79);
+        let n = 20_000usize;
+        let a = Column::from_i64(
+            (0..n).map(|_| r.next_below(50) as i64).collect(),
+        );
+        let strs: Vec<String> =
+            (0..n).map(|_| format!("s{}", r.next_below(20))).collect();
+        let b = Column::from_str(
+            &strs.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        let serial = argsort_by_columns(&[&a, &b], &[false, true], n);
+        let par = crate::exec::with_intra_op_threads(4, || {
+            argsort_by_columns(&[&a, &b], &[false, true], n)
+        });
+        assert_eq!(par, serial);
     }
 }

@@ -144,6 +144,11 @@ pub struct RylonConfig {
     /// `"threads"` or `"sim"`.
     pub fabric: String,
     pub shuffle_chunk_rows: usize,
+    /// Morsel workers per rank for the local compute kernels
+    /// (`[exec] intra_op_threads`). `0` = auto: available cores /
+    /// world, so rank threads × workers never oversubscribe. `1` =
+    /// single-threaded ranks (the paper's §III-B model).
+    pub intra_op_threads: usize,
     pub cost: CostModel,
     /// Directory holding AOT artifacts + manifest.json.
     pub artifacts_dir: String,
@@ -155,6 +160,7 @@ impl Default for RylonConfig {
             world: 4,
             fabric: "threads".to_string(),
             shuffle_chunk_rows: 1 << 16,
+            intra_op_threads: 0,
             cost: CostModel::default(),
             artifacts_dir: "artifacts".to_string(),
         }
@@ -171,6 +177,8 @@ impl RylonConfig {
             fabric: f.str_or("cluster.fabric", &d.fabric),
             shuffle_chunk_rows: f
                 .usize_or("shuffle.chunk_rows", d.shuffle_chunk_rows),
+            intra_op_threads: f
+                .usize_or("exec.intra_op_threads", d.intra_op_threads),
             cost: CostModel {
                 alpha: f.f64_or("cost.alpha", dc.alpha),
                 beta: f.f64_or("cost.beta", dc.beta),
@@ -200,6 +208,9 @@ fabric = "sim"
 [shuffle]
 chunk_rows = 4096
 
+[exec]
+intra_op_threads = 2
+
 [cost]
 alpha = 1e-5
 ranks_per_node = 8
@@ -224,6 +235,7 @@ ranks_per_node = 8
         assert_eq!(c.world, 16);
         assert_eq!(c.fabric, "sim");
         assert_eq!(c.shuffle_chunk_rows, 4096);
+        assert_eq!(c.intra_op_threads, 2);
         assert_eq!(c.cost.alpha, 1e-5);
         assert_eq!(c.cost.ranks_per_node, 8);
         // Untouched keys keep defaults.

@@ -1,0 +1,547 @@
+//! The distributed operators: shuffle + local kernel, per the paper's
+//! §III-C recipe. Every rank calls these SPMD with its own partition;
+//! each function performs the same sequence of collectives on every
+//! rank (validation failures happen identically everywhere, before any
+//! exchange, so jobs abort without deadlock).
+
+use std::cmp::Ordering;
+
+use crate::column::Column;
+use crate::dist::partition::{shuffle, shuffle_all_columns};
+use crate::dist::RankCtx;
+use crate::error::Result;
+use crate::net::collectives::allgather;
+use crate::net::wire::{deserialize_table, serialize_table, serialize_table_into};
+use crate::net::OutBufs;
+use crate::ops;
+use crate::ops::groupby::{Agg, GroupByOptions};
+use crate::ops::join::JoinOptions;
+use crate::ops::orderby::{SortKey, SortOrder};
+use crate::table::Table;
+use crate::types::{DataType, Field, Schema};
+
+/// Distributed join: co-partition both sides by key hash, then join
+/// locally (all four join types compose — null keys co-locate on one
+/// rank and null-extend there exactly once).
+pub fn dist_join(
+    ctx: &mut RankCtx,
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+) -> Result<Table> {
+    let ls = shuffle(ctx, left, &opts.left_on)?;
+    let rs = shuffle(ctx, right, &opts.right_on)?;
+    ops::join(&ls, &rs, opts)
+}
+
+/// Distributed group-by: shuffle rows by key hash so each group lands
+/// whole on one rank, then aggregate locally.
+pub fn dist_groupby(
+    ctx: &mut RankCtx,
+    table: &Table,
+    opts: &GroupByOptions,
+) -> Result<Table> {
+    let shuffled = shuffle(ctx, table, &opts.keys)?;
+    ops::groupby(&shuffled, opts)
+}
+
+/// How one user-facing aggregate decomposes into algebraic partials for
+/// the pre-aggregation strategy.
+enum MergeSpec {
+    /// One partial column, merged with the given aggregate.
+    Direct { merged: String },
+    /// Mean = merged sum / merged count (null when the count is 0).
+    MeanOf { sum: String, cnt: String },
+}
+
+/// Distributed group-by via local pre-aggregation: aggregate locally
+/// first (shrinking rows to distinct local keys), shuffle the partials,
+/// and merge. Algebraically exact for sum/count/min/max; mean is
+/// decomposed into sum+count partials, so it is exact too (up to f64
+/// fold order across ranks).
+pub fn dist_groupby_preagg(
+    ctx: &mut RankCtx,
+    table: &Table,
+    opts: &GroupByOptions,
+) -> Result<Table> {
+    use crate::compute::aggregate::AggKind;
+
+    // 1. Decompose into partial aggregates with reserved names.
+    let mut partial_aggs: Vec<Agg> = Vec::new();
+    let mut specs: Vec<MergeSpec> = Vec::new();
+    for (i, a) in opts.aggs.iter().enumerate() {
+        match a.kind {
+            AggKind::Mean => {
+                let sum_name = format!("__p{i}_msum");
+                let cnt_name = format!("__p{i}_mcnt");
+                partial_aggs
+                    .push(Agg::new(AggKind::Sum, &a.column).named(&sum_name));
+                partial_aggs.push(
+                    Agg::new(AggKind::Count, &a.column).named(&cnt_name),
+                );
+                specs.push(MergeSpec::MeanOf {
+                    sum: sum_name,
+                    cnt: cnt_name,
+                });
+            }
+            kind => {
+                let name = format!("__p{i}_{}", kind.name());
+                partial_aggs.push(Agg::new(kind, &a.column).named(&name));
+                specs.push(MergeSpec::Direct { merged: name });
+            }
+        }
+    }
+    let local = ops::groupby(
+        table,
+        &GroupByOptions {
+            keys: opts.keys.clone(),
+            aggs: partial_aggs.clone(),
+        },
+    )?;
+
+    // 2. Shuffle the (small) partials by key.
+    let shuffled = shuffle(ctx, &local, &opts.keys)?;
+
+    // 3. Merge partials: sums and counts add, min/max fold.
+    let merge_aggs: Vec<Agg> = partial_aggs
+        .iter()
+        .map(|p| {
+            let merge_kind = match p.kind {
+                AggKind::Sum | AggKind::Count => AggKind::Sum,
+                AggKind::Min => AggKind::Min,
+                AggKind::Max => AggKind::Max,
+                AggKind::Mean => unreachable!("mean decomposed above"),
+            };
+            Agg::new(merge_kind, &p.name).named(&p.name)
+        })
+        .collect();
+    let merged = ops::groupby(
+        &shuffled,
+        &GroupByOptions {
+            keys: opts.keys.clone(),
+            aggs: merge_aggs,
+        },
+    )?;
+
+    // 4. Re-assemble the user-facing schema.
+    let mut fields: Vec<Field> = Vec::new();
+    let mut cols: Vec<Column> = Vec::new();
+    for k in &opts.keys {
+        let c = merged.column_by_name(k)?;
+        fields.push(Field::new(k.clone(), c.dtype()));
+        cols.push(c.clone());
+    }
+    for (a, spec) in opts.aggs.iter().zip(&specs) {
+        match spec {
+            MergeSpec::Direct { merged: name } => {
+                let c = merged.column_by_name(name)?;
+                fields.push(Field::new(a.name.clone(), c.dtype()));
+                cols.push(c.clone());
+            }
+            MergeSpec::MeanOf { sum, cnt } => {
+                let s = merged.column_by_name(sum)?;
+                let c = merged.column_by_name(cnt)?;
+                let vals: Vec<Option<f64>> = (0..merged.num_rows())
+                    .map(|r| {
+                        let n = c.value(r).as_i64().unwrap_or(0);
+                        if n == 0 {
+                            None
+                        } else {
+                            s.value(r).as_f64().map(|sv| sv / n as f64)
+                        }
+                    })
+                    .collect();
+                fields.push(Field::new(a.name.clone(), DataType::Float64));
+                cols.push(Column::from_opt_f64(vals));
+            }
+        }
+    }
+    Table::try_new(Schema::new(fields), cols)
+}
+
+/// Distributed sample sort: local sort, regular-sample splitters agreed
+/// through an allgather, range-partition, one exchange, local merge.
+/// Afterwards rank r holds the r-th contiguous range of the global
+/// order (rank-major concatenation is globally sorted).
+pub fn dist_sort(
+    ctx: &mut RankCtx,
+    table: &Table,
+    keys: &[SortKey],
+) -> Result<Table> {
+    let local = ops::orderby(table, keys)?;
+    if ctx.size == 1 || keys.is_empty() {
+        return Ok(local);
+    }
+    let key_names: Vec<&str> =
+        keys.iter().map(|k| k.column.as_str()).collect();
+    let desc: Vec<bool> = keys
+        .iter()
+        .map(|k| k.order == SortOrder::Descending)
+        .collect();
+
+    // Regular samples of the local sorted key columns.
+    let keys_only = ops::project(&local, &key_names)?;
+    let n = local.num_rows();
+    let want = (ctx.size * 4).min(n);
+    let sample_idx: Vec<usize> = (0..want).map(|k| k * n / want.max(1)).collect();
+    let samples = keys_only.take(&sample_idx);
+
+    // Agree on splitters: gather every rank's samples, sort, pick
+    // size-1 regular positions.
+    let all = allgather(ctx.fabric(), ctx.rank, serialize_table(&samples))?;
+    let mut sample_parts = Vec::with_capacity(all.len());
+    for buf in all {
+        sample_parts.push(deserialize_table(&buf)?);
+    }
+    let gathered = Table::concat_all(samples.schema(), &sample_parts)?;
+    let sorted_samples = ops::orderby(&gathered, keys)?;
+    let m = sorted_samples.num_rows();
+    let splitter_idx: Vec<usize> = (1..ctx.size)
+        .map(|d| d * m / ctx.size)
+        .filter(|&i| i < m)
+        .collect();
+    let splitters = sorted_samples.take(&splitter_idx);
+
+    // Range-partition the locally sorted rows against the splitters.
+    let local_keys: Result<Vec<&Column>> = key_names
+        .iter()
+        .map(|name| local.column_by_name(name))
+        .collect();
+    let local_keys = local_keys?;
+    let spl_keys: Vec<&Column> = splitters.columns().collect();
+    let cmp_row_to_splitter = |row: usize, s: usize| -> Ordering {
+        for ((lc, sc), &d) in local_keys.iter().zip(&spl_keys).zip(&desc) {
+            let ord = lc.cmp_rows(row, sc, s);
+            let ord = if d { ord.reverse() } else { ord };
+            if ord != Ordering::Equal {
+                return ord;
+            }
+        }
+        Ordering::Equal
+    };
+    let nspl = splitters.num_rows();
+    let mut bounds: Vec<usize> = Vec::with_capacity(nspl);
+    for s in 0..nspl {
+        // First row not Less than splitter s (rows are sorted, and
+        // splitters ascend, so the search can start at the last bound).
+        let mut lo = bounds.last().copied().unwrap_or(0);
+        let mut hi = n;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if cmp_row_to_splitter(mid, s) == Ordering::Less {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        bounds.push(lo);
+    }
+    let mut out: OutBufs = vec![Vec::new(); ctx.size];
+    let mut start = 0usize;
+    for (dst, buf) in out.iter_mut().enumerate() {
+        let end = if dst < nspl { bounds[dst] } else { n };
+        if end > start {
+            serialize_table_into(&local.slice(start, end - start), buf);
+        }
+        start = end;
+    }
+    let incoming = ctx.fabric().exchange(ctx.rank, out)?;
+    let mut parts = Vec::new();
+    for buf in incoming {
+        if !buf.is_empty() {
+            parts.push(deserialize_table(&buf)?);
+        }
+    }
+    let merged = Table::concat_all(local.schema(), &parts)?;
+    ops::orderby(&merged, keys)
+}
+
+/// Distributed union: whole-row-hash shuffle co-locates equal rows,
+/// then the local distinct-union runs per rank.
+pub fn dist_union(ctx: &mut RankCtx, a: &Table, b: &Table) -> Result<Table> {
+    let sa = shuffle_all_columns(ctx, a)?;
+    let sb = shuffle_all_columns(ctx, b)?;
+    ops::union(&sa, &sb)
+}
+
+/// Distributed intersect (whole-row co-location, local intersect).
+pub fn dist_intersect(
+    ctx: &mut RankCtx,
+    a: &Table,
+    b: &Table,
+) -> Result<Table> {
+    let sa = shuffle_all_columns(ctx, a)?;
+    let sb = shuffle_all_columns(ctx, b)?;
+    ops::intersect(&sa, &sb)
+}
+
+/// Distributed symmetric difference (whole-row co-location, local op).
+pub fn dist_difference(
+    ctx: &mut RankCtx,
+    a: &Table,
+    b: &Table,
+) -> Result<Table> {
+    let sa = shuffle_all_columns(ctx, a)?;
+    let sb = shuffle_all_columns(ctx, b)?;
+    ops::difference(&sa, &sb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Cluster, DistConfig};
+    use crate::io::datagen::{gen_partition, DataGenSpec};
+    use crate::ops::groupby::Agg;
+    use crate::types::Value;
+
+    fn block_slice(t: &Table, rank: usize, size: usize) -> Table {
+        let n = t.num_rows();
+        let base = n / size;
+        let extra = n % size;
+        let my = base + usize::from(rank < extra);
+        let off = base * rank + rank.min(extra);
+        t.slice(off, my)
+    }
+
+    #[test]
+    fn dist_groupby_matches_local() {
+        let whole = crate::io::datagen::gen_table(
+            &DataGenSpec::paper_scaling(3000, 9),
+        )
+        .unwrap();
+        let gopts = GroupByOptions::new(
+            &["id"],
+            vec![Agg::sum("d0"), Agg::count("d0"), Agg::mean("d1")],
+        );
+        let local = ops::groupby(&whole, &gopts).unwrap();
+
+        let cluster = Cluster::new(DistConfig::threads(4)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let part = block_slice(&whole, ctx.rank, ctx.size);
+                dist_groupby(ctx, &part, &gopts)
+            })
+            .unwrap();
+        let merged = Table::concat_all(outs[0].schema(), &outs).unwrap();
+        assert_eq!(merged.num_rows(), local.num_rows());
+        let count = |t: &Table| -> i64 {
+            let c = t.column_by_name("count_d0").unwrap();
+            (0..t.num_rows())
+                .map(|i| c.value(i).as_i64().unwrap())
+                .sum()
+        };
+        assert_eq!(count(&merged), count(&local));
+    }
+
+    #[test]
+    fn preagg_matches_shuffle_all_strategy() {
+        let gopts = GroupByOptions::new(
+            &["id"],
+            vec![
+                Agg::sum("d0"),
+                Agg::count("d0"),
+                Agg::min("d0"),
+                Agg::max("d0"),
+                Agg::mean("d0"),
+            ],
+        );
+        let run = |preagg: bool| -> Vec<(i64, i64)> {
+            let cluster = Cluster::new(DistConfig::threads(3)).unwrap();
+            let outs = cluster
+                .run(|ctx| {
+                    let part = gen_partition(
+                        &DataGenSpec {
+                            rows: 2000,
+                            payload_cols: 1,
+                            key_dist: crate::io::datagen::KeyDist::Uniform {
+                                domain: 50,
+                            },
+                            seed: 4,
+                        },
+                        ctx.rank,
+                        ctx.size,
+                    )?;
+                    if preagg {
+                        dist_groupby_preagg(ctx, &part, &gopts)
+                    } else {
+                        dist_groupby(ctx, &part, &gopts)
+                    }
+                })
+                .unwrap();
+            let merged =
+                Table::concat_all(outs[0].schema(), &outs).unwrap();
+            let mut rows: Vec<(i64, i64)> = (0..merged.num_rows())
+                .map(|i| {
+                    (
+                        merged.column(0).value(i).as_i64().unwrap(),
+                        merged
+                            .column_by_name("count_d0")
+                            .unwrap()
+                            .value(i)
+                            .as_i64()
+                            .unwrap(),
+                    )
+                })
+                .collect();
+            rows.sort();
+            rows
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn preagg_schema_matches_user_aggs() {
+        let gopts = GroupByOptions::new(
+            &["id"],
+            vec![Agg::mean("d0").named("avg0"), Agg::sum("d0")],
+        );
+        let cluster = Cluster::new(DistConfig::threads(2)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let part = gen_partition(
+                    &DataGenSpec::paper_load(500, 8),
+                    ctx.rank,
+                    ctx.size,
+                )?;
+                dist_groupby_preagg(ctx, &part, &gopts)
+            })
+            .unwrap();
+        let names: Vec<String> = outs[0]
+            .schema()
+            .fields()
+            .iter()
+            .map(|f| f.name.clone())
+            .collect();
+        assert_eq!(names, vec!["id", "avg0", "sum_d0"]);
+        assert_eq!(outs[0].schema().field(1).dtype, DataType::Float64);
+    }
+
+    #[test]
+    fn dist_sort_descending_global_order() {
+        let whole = crate::io::datagen::gen_table(
+            &DataGenSpec::paper_scaling(2500, 3),
+        )
+        .unwrap();
+        let keys = vec![SortKey::desc("id")];
+        let cluster = Cluster::new(DistConfig::threads(3)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let part = block_slice(&whole, ctx.rank, ctx.size);
+                dist_sort(ctx, &part, &keys)
+            })
+            .unwrap();
+        // Rank-major concatenation must be globally sorted descending.
+        let merged = Table::concat_all(outs[0].schema(), &outs).unwrap();
+        assert_eq!(merged.num_rows(), whole.num_rows());
+        let ids = merged.column_by_name("id").unwrap();
+        for i in 1..merged.num_rows() {
+            assert!(
+                ids.cmp_rows(i - 1, ids, i) != Ordering::Less,
+                "row {i} out of order"
+            );
+        }
+    }
+
+    #[test]
+    fn dist_set_ops_match_local() {
+        let ta = Table::from_columns(vec![(
+            "x",
+            Column::from_i64((0..40).map(|i| i % 10).collect()),
+        )])
+        .unwrap();
+        let tb = Table::from_columns(vec![(
+            "x",
+            Column::from_i64((5..25).map(|i| i % 15).collect()),
+        )])
+        .unwrap();
+        let local_union = ops::union(&ta, &tb).unwrap().num_rows();
+        let local_intersect = ops::intersect(&ta, &tb).unwrap().num_rows();
+        let local_diff = ops::difference(&ta, &tb).unwrap().num_rows();
+
+        let cluster = Cluster::new(DistConfig::threads(3)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let pa = block_slice(&ta, ctx.rank, ctx.size);
+                let pb = block_slice(&tb, ctx.rank, ctx.size);
+                let u = dist_union(ctx, &pa, &pb)?.num_rows();
+                let i = dist_intersect(ctx, &pa, &pb)?.num_rows();
+                let d = dist_difference(ctx, &pa, &pb)?.num_rows();
+                Ok((u, i, d))
+            })
+            .unwrap();
+        let sum3 = |f: fn(&(usize, usize, usize)) -> usize| -> usize {
+            outs.iter().map(f).sum()
+        };
+        assert_eq!(sum3(|o| o.0), local_union);
+        assert_eq!(sum3(|o| o.1), local_intersect);
+        assert_eq!(sum3(|o| o.2), local_diff);
+    }
+
+    #[test]
+    fn dist_join_outer_counts_match_local() {
+        let whole_l = crate::io::datagen::gen_table(
+            &DataGenSpec::paper_scaling(1200, 21),
+        )
+        .unwrap();
+        let whole_r = crate::io::datagen::gen_table(
+            &DataGenSpec::paper_scaling(1200, 22),
+        )
+        .unwrap();
+        for jt in ["left", "right", "outer"] {
+            let jty = crate::ops::join::JoinType::parse(jt).unwrap();
+            let opts = JoinOptions::new(jty, &["id"], &["id"]);
+            let expect = ops::join(&whole_l, &whole_r, &opts)
+                .unwrap()
+                .num_rows();
+            let cluster = Cluster::new(DistConfig::threads(3)).unwrap();
+            let outs = cluster
+                .run(|ctx| {
+                    dist_join(
+                        ctx,
+                        &block_slice(&whole_l, ctx.rank, ctx.size),
+                        &block_slice(&whole_r, ctx.rank, ctx.size),
+                        &opts,
+                    )
+                })
+                .unwrap();
+            let got: usize = outs.iter().map(|t| t.num_rows()).sum();
+            assert_eq!(got, expect, "{jt}");
+        }
+    }
+
+    #[test]
+    fn preagg_all_null_group_mean_is_null() {
+        let gopts =
+            GroupByOptions::new(&["k"], vec![Agg::mean("v")]);
+        let cluster = Cluster::new(DistConfig::threads(2)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let t = Table::from_columns(vec![
+                    (
+                        "k",
+                        Column::from_i64(vec![1, 2]),
+                    ),
+                    (
+                        "v",
+                        Column::from_opt_f64(vec![None, Some(3.0)]),
+                    ),
+                ])
+                .unwrap();
+                let part = block_slice(&t, ctx.rank, ctx.size);
+                dist_groupby_preagg(ctx, &part, &gopts)
+            })
+            .unwrap();
+        let merged = Table::concat_all(outs[0].schema(), &outs).unwrap();
+        let k = merged.column_by_name("k").unwrap();
+        let m = merged.column_by_name("mean_v").unwrap();
+        for i in 0..merged.num_rows() {
+            match k.value(i) {
+                Value::Int64(1) => assert!(m.value(i).is_null()),
+                Value::Int64(2) => {
+                    assert_eq!(m.value(i), Value::Float64(3.0))
+                }
+                other => panic!("unexpected key {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Partitioning + the chunked AllToAll shuffle — the data-movement core
+//! every distributed operator composes with a local kernel.
+
+use crate::compute::filter::scatter_indices;
+use crate::compute::hash::hash_table_keys;
+use crate::dist::RankCtx;
+use crate::error::{Result, RylonError};
+use crate::net::collectives::{allgather, allreduce_u64};
+use crate::net::wire::{deserialize_table, serialize_table_into};
+use crate::net::{OutBufs, ReduceOp};
+use crate::table::Table;
+
+/// Maps each row of a table to a destination partition.
+pub trait Partitioner: Send + Sync {
+    fn nparts(&self) -> usize;
+
+    /// Fill `out` with one partition id per row (`-1` = drop the row —
+    /// the convention of masked lanes from the AOT kernel path).
+    fn partition(&self, table: &Table, out: &mut Vec<i32>) -> Result<()>;
+}
+
+/// Key-hash partitioner: `pid = splitmix64-combined(key) % nparts` —
+/// bit-identical routing to the L1 `hash_partition` kernel
+/// (`runtime::HashKernel`), cross-checked in `rust/tests/pjrt_artifacts.rs`.
+pub struct HashPartitioner {
+    keys: Vec<String>,
+    nparts: usize,
+}
+
+impl HashPartitioner {
+    pub fn new(keys: &[String], nparts: usize) -> Result<HashPartitioner> {
+        if keys.is_empty() {
+            return Err(RylonError::invalid(
+                "hash partitioner needs at least one key column",
+            ));
+        }
+        if nparts == 0 {
+            return Err(RylonError::invalid("nparts must be ≥ 1"));
+        }
+        Ok(HashPartitioner {
+            keys: keys.to_vec(),
+            nparts,
+        })
+    }
+}
+
+impl Partitioner for HashPartitioner {
+    fn nparts(&self) -> usize {
+        self.nparts
+    }
+
+    fn partition(&self, table: &Table, out: &mut Vec<i32>) -> Result<()> {
+        let mut hashes = Vec::new();
+        hash_table_keys(table, &self.keys, &mut hashes)?;
+        out.clear();
+        out.reserve(hashes.len());
+        let n = self.nparts as u64;
+        out.extend(hashes.iter().map(|&h| (h % n) as i32));
+        Ok(())
+    }
+}
+
+/// Key-based shuffle: route every row to `hash(keys) % world`, so equal
+/// keys land on one rank. Chunked to bound in-flight bytes
+/// ([`RankCtx::shuffle_chunk_rows`]); ranks agree on the round count
+/// through an allreduce, so the exchange sequence stays in lockstep
+/// even with skewed partition sizes.
+pub fn shuffle(ctx: &mut RankCtx, table: &Table, keys: &[String]) -> Result<Table> {
+    let p = HashPartitioner::new(keys, ctx.size)?;
+    shuffle_with(ctx, table, &p)
+}
+
+/// Shuffle by the hash of *all* columns — the routing used by the
+/// distributed set operators and `distinct`, where whole-row equality
+/// decides placement.
+pub fn shuffle_all_columns(ctx: &mut RankCtx, table: &Table) -> Result<Table> {
+    let keys: Vec<String> = table
+        .schema()
+        .fields()
+        .iter()
+        .map(|f| f.name.clone())
+        .collect();
+    shuffle(ctx, table, &keys)
+}
+
+/// Shuffle with an explicit partitioner (must have `nparts == world`).
+pub fn shuffle_with(
+    ctx: &mut RankCtx,
+    table: &Table,
+    partitioner: &dyn Partitioner,
+) -> Result<Table> {
+    if partitioner.nparts() != ctx.size {
+        return Err(RylonError::invalid(format!(
+            "partitioner has {} parts for world {}",
+            partitioner.nparts(),
+            ctx.size
+        )));
+    }
+    let chunk = ctx.shuffle_chunk_rows.max(1);
+    let my_rounds = table.num_rows().div_ceil(chunk) as u64;
+    let rounds = allreduce_u64(
+        ctx.fabric(),
+        ctx.rank,
+        &[my_rounds],
+        ReduceOp::Max,
+    )?[0] as usize;
+
+    let mut received: Vec<Table> = Vec::new();
+    let mut pids: Vec<i32> = Vec::new();
+    for round in 0..rounds {
+        let offset = round * chunk;
+        let mut out: OutBufs = vec![Vec::new(); ctx.size];
+        if offset < table.num_rows() {
+            let slice = table.slice(offset, chunk);
+            partitioner.partition(&slice, &mut pids)?;
+            let parts = scatter_indices(&pids, ctx.size);
+            for (dst, idx) in parts.iter().enumerate() {
+                if !idx.is_empty() {
+                    serialize_table_into(&slice.take(idx), &mut out[dst]);
+                }
+            }
+        }
+        let incoming = ctx.fabric().exchange(ctx.rank, out)?;
+        for buf in incoming {
+            if !buf.is_empty() {
+                received.push(deserialize_table(&buf)?);
+            }
+        }
+    }
+    Table::concat_all(table.schema(), &received)
+}
+
+/// Even out partition sizes across ranks while preserving the global
+/// rank-major row order (sizes end within ±1 of each other).
+pub fn rebalance(ctx: &mut RankCtx, table: &Table) -> Result<Table> {
+    if ctx.size == 1 {
+        return Ok(table.clone());
+    }
+    let counts_bufs = allgather(
+        ctx.fabric(),
+        ctx.rank,
+        (table.num_rows() as u64).to_le_bytes().to_vec(),
+    )?;
+    let counts: Vec<usize> = counts_bufs
+        .iter()
+        .map(|b| {
+            let arr: [u8; 8] = b
+                .get(..8)
+                .and_then(|s| s.try_into().ok())
+                .ok_or_else(|| RylonError::comm("bad rebalance count"))?;
+            Ok(u64::from_le_bytes(arr) as usize)
+        })
+        .collect::<Result<_>>()?;
+    let total: usize = counts.iter().sum();
+    let my_start: usize = counts[..ctx.rank].iter().sum();
+    let base = total / ctx.size;
+    let extra = total % ctx.size;
+    // Global start of dest rank d's target range.
+    let target_start = |d: usize| d * base + d.min(extra);
+
+    let mut out: OutBufs = vec![Vec::new(); ctx.size];
+    for dst in 0..ctx.size {
+        let lo = target_start(dst).max(my_start);
+        let hi = target_start(dst + 1).min(my_start + table.num_rows());
+        if hi > lo {
+            serialize_table_into(
+                &table.slice(lo - my_start, hi - lo),
+                &mut out[dst],
+            );
+        }
+    }
+    let incoming = ctx.fabric().exchange(ctx.rank, out)?;
+    // Sources arrive in rank order and each sent a contiguous ascending
+    // slice, so concatenation preserves the global order.
+    let mut parts = Vec::new();
+    for buf in incoming {
+        if !buf.is_empty() {
+            parts.push(deserialize_table(&buf)?);
+        }
+    }
+    Table::concat_all(table.schema(), &parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::compute::hash::splitmix64;
+    use crate::dist::{Cluster, DistConfig};
+
+    #[test]
+    fn hash_partitioner_matches_kernel_formula() {
+        let keys: Vec<i64> = (0..1000).map(|i| i * 37 - 250).collect();
+        let t = Table::from_columns(vec![(
+            "id",
+            Column::from_i64(keys.clone()),
+        )])
+        .unwrap();
+        let p = HashPartitioner::new(&["id".to_string()], 16).unwrap();
+        let mut pids = Vec::new();
+        p.partition(&t, &mut pids).unwrap();
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(pids[i], (splitmix64(k as u64) % 16) as i32);
+        }
+    }
+
+    #[test]
+    fn partitioner_validation() {
+        assert!(HashPartitioner::new(&[], 4).is_err());
+        assert!(HashPartitioner::new(&["k".to_string()], 0).is_err());
+    }
+
+    #[test]
+    fn chunked_shuffle_handles_skew_without_deadlock() {
+        // Rank 0 holds everything; tiny chunks force many rounds, and
+        // the allreduce keeps empty ranks in lockstep.
+        let mut cfg = DistConfig::threads(3);
+        cfg.shuffle_chunk_rows = 8;
+        let cluster = Cluster::new(cfg).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let t = if ctx.rank == 0 {
+                    Table::from_columns(vec![(
+                        "k",
+                        Column::from_i64((0..100).collect()),
+                    )])
+                    .unwrap()
+                } else {
+                    Table::empty(
+                        crate::types::Schema::parse("k:i64").unwrap(),
+                    )
+                };
+                shuffle(ctx, &t, &["k".to_string()])
+            })
+            .unwrap();
+        let total: usize = outs.iter().map(|t| t.num_rows()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn rebalance_single_rank_is_identity() {
+        let cluster = Cluster::new(DistConfig::threads(1)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let t = Table::from_columns(vec![(
+                    "v",
+                    Column::from_i64(vec![1, 2, 3]),
+                )])
+                .unwrap();
+                rebalance(ctx, &t)
+            })
+            .unwrap();
+        assert_eq!(outs[0].num_rows(), 3);
+    }
+}

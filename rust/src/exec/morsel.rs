@@ -1,0 +1,328 @@
+//! The morsel scheduler: split a row range into cache-sized chunks,
+//! fan them out over scoped worker threads pulling from a shared atomic
+//! cursor, and reassemble results in morsel order so parallel output is
+//! bit-identical to serial output.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::ExecContext;
+
+/// Rows per morsel: small enough that a morsel's working set stays
+/// cache-resident, large enough to amortise scheduling.
+pub const MORSEL_ROWS: usize = 1 << 16;
+
+/// One contiguous row range, numbered in input order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Morsel {
+    pub index: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Morsel {
+    pub fn range(&self) -> Range<usize> {
+        self.start..self.end
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Split `[0, nrows)` into cache-sized morsels — at least `threads`
+/// pieces when the input allows, so every worker has work.
+pub fn split_morsels(nrows: usize, threads: usize) -> Vec<Morsel> {
+    if nrows == 0 {
+        return Vec::new();
+    }
+    let t = threads.max(1);
+    let step = MORSEL_ROWS.min(nrows.div_ceil(t)).max(1);
+    let mut out = Vec::with_capacity(nrows.div_ceil(step));
+    let mut start = 0;
+    let mut index = 0;
+    while start < nrows {
+        let end = (start + step).min(nrows);
+        out.push(Morsel { index, start, end });
+        start = end;
+        index += 1;
+    }
+    out
+}
+
+/// Split `[0, nrows)` into exactly `parts` near-equal ranges (empty
+/// ranges dropped) — used by run-sort, where fewer, larger runs mean
+/// fewer merge levels.
+pub fn split_even(nrows: usize, parts: usize) -> Vec<Morsel> {
+    let p = parts.max(1);
+    let mut out = Vec::with_capacity(p);
+    let base = nrows / p;
+    let extra = nrows % p;
+    let mut start = 0;
+    for i in 0..p {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            continue;
+        }
+        out.push(Morsel {
+            index: out.len(),
+            start,
+            end: start + len,
+        });
+        start += len;
+    }
+    out
+}
+
+/// Raw pointer wrapper for disjoint writes from scoped workers. Every
+/// use site must guarantee non-overlapping write ranges (that contract
+/// is what justifies the Send/Sync claims).
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+
+impl<T> Copy for SendPtr<T> {}
+
+/// Morsel-driven fan-out: `threads` workers pull morsels off a shared
+/// cursor; results come back in morsel order (deterministic merge).
+pub fn for_each_morsel<R, F>(nrows: usize, exec: ExecContext, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(Morsel) -> R + Sync,
+{
+    let morsels = split_morsels(nrows, exec.threads());
+    let n = morsels.len();
+    if !exec.is_parallel() || n <= 1 {
+        return morsels.into_iter().map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let workers = exec.threads().min(n);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let cursor = &cursor;
+                let morsels = &morsels;
+                let f = &f;
+                s.spawn(move || {
+                    let mut done: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= morsels.len() {
+                            break;
+                        }
+                        done.push((i, f(morsels[i])));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("morsel worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("morsel result missing"))
+        .collect()
+}
+
+/// Run owned work items on one scoped thread each, preserving order.
+/// Callers keep the item count near the thread budget (merge levels,
+/// per-run sorts).
+pub fn map_parallel<I, R, F>(items: Vec<I>, f: F) -> Vec<R>
+where
+    I: Send,
+    R: Send,
+    F: Fn(I) -> R + Sync,
+{
+    if items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .into_iter()
+            .map(|item| {
+                let f = &f;
+                s.spawn(move || f(item))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel worker panicked"))
+            .collect()
+    })
+}
+
+/// One worker per partition id `0..nparts` — the radix-partitioned
+/// builders (hash chains, grouping) where each worker owns a disjoint
+/// slice of the hash space.
+pub fn run_partitions<R, F>(nparts: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if nparts <= 1 {
+        return (0..nparts).map(f).collect();
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..nparts)
+            .map(|p| {
+                let f = &f;
+                s.spawn(move || f(p))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("partition worker panicked"))
+            .collect()
+    })
+}
+
+/// Fill `out` by handing each worker the disjoint sub-slice for its
+/// morsel. `f(morsel, slice)` writes `slice[k]` for row `morsel.start+k`.
+pub fn fill_parallel<T, F>(out: &mut [T], exec: ExecContext, f: F)
+where
+    T: Send,
+    F: Fn(Morsel, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if !exec.is_parallel() || n == 0 {
+        for m in split_morsels(n, 1) {
+            let range = m.range();
+            f(m, &mut out[range]);
+        }
+        return;
+    }
+    let morsels = split_morsels(n, exec.threads());
+    let cursor = AtomicUsize::new(0);
+    let workers = exec.threads().min(morsels.len());
+    let ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let cursor = &cursor;
+            let morsels = &morsels;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= morsels.len() {
+                    break;
+                }
+                let m = morsels[i];
+                // SAFETY: morsels are disjoint subranges of `out`, and
+                // `out` is not otherwise touched while the scope runs.
+                let slice = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(m.start), m.len())
+                };
+                f(m, slice);
+            });
+        }
+    });
+}
+
+/// Parallel gather: `out[i] = src[indices[i]]`, chunked across workers.
+/// Bit-identical to the serial gather.
+pub fn par_gather<T>(src: &[T], indices: &[usize], exec: ExecContext) -> Vec<T>
+where
+    T: Copy + Default + Send + Sync,
+{
+    if !exec.is_parallel() || indices.len() < super::PAR_ROW_THRESHOLD {
+        return indices.iter().map(|&i| src[i]).collect();
+    }
+    let mut out = vec![T::default(); indices.len()];
+    fill_parallel(&mut out, exec, |m, dst| {
+        for (k, &idx) in indices[m.range()].iter().enumerate() {
+            dst[k] = src[idx];
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn morsels_cover_range_exactly() {
+        for (nrows, threads) in [(0, 4), (1, 4), (100, 3), (1 << 20, 4)] {
+            let ms = split_morsels(nrows, threads);
+            let total: usize = ms.iter().map(|m| m.len()).sum();
+            assert_eq!(total, nrows);
+            for w in ms.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+                assert_eq!(w[0].index + 1, w[1].index);
+            }
+            if nrows > 0 {
+                assert_eq!(ms[0].start, 0);
+                assert_eq!(ms.last().unwrap().end, nrows);
+            }
+        }
+    }
+
+    #[test]
+    fn even_split_balances() {
+        let ms = split_even(10, 4);
+        let sizes: Vec<usize> = ms.iter().map(|m| m.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        assert!(split_even(0, 4).is_empty());
+        assert_eq!(split_even(2, 4).len(), 2);
+    }
+
+    #[test]
+    fn for_each_morsel_orders_results() {
+        let exec = ExecContext::new(4);
+        let sums = for_each_morsel(1 << 18, exec, |m| {
+            m.range().map(|i| i as u64).sum::<u64>()
+        });
+        let serial = for_each_morsel(1 << 18, ExecContext::serial(), |m| {
+            m.range().map(|i| i as u64).sum::<u64>()
+        });
+        assert_eq!(sums, serial);
+        let n = (1u64 << 18) - 1;
+        assert_eq!(sums.iter().sum::<u64>(), n * (n + 1) / 2);
+    }
+
+    #[test]
+    fn map_parallel_preserves_order() {
+        let out = map_parallel(vec![3, 1, 4, 1, 5], |x| x * 2);
+        assert_eq!(out, vec![6, 2, 8, 2, 10]);
+    }
+
+    #[test]
+    fn run_partitions_indexes() {
+        assert_eq!(run_partitions(4, |p| p * 10), vec![0, 10, 20, 30]);
+        assert!(run_partitions(0, |p| p).is_empty());
+    }
+
+    #[test]
+    fn fill_and_gather_match_serial() {
+        let n = 100_000usize;
+        let src: Vec<u64> = (0..n as u64).map(|v| v.wrapping_mul(31)).collect();
+        let indices: Vec<usize> = (0..n).rev().collect();
+        let par = par_gather(&src, &indices, ExecContext::new(4));
+        let ser: Vec<u64> = indices.iter().map(|&i| src[i]).collect();
+        assert_eq!(par, ser);
+
+        let mut out = vec![0u64; n];
+        fill_parallel(&mut out, ExecContext::new(3), |m, dst| {
+            for (k, d) in dst.iter_mut().enumerate() {
+                *d = (m.start + k) as u64;
+            }
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64));
+    }
+}

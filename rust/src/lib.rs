@@ -8,7 +8,10 @@
 //!   [`table::Table`], the six relational-algebra operators of the paper's
 //!   Table I ([`ops`]), an MPI-like communicator with a non-blocking
 //!   AllToAll shuffle ([`net`]), and data-parallel distributed operators
-//!   ([`dist`]). One worker = one thread (paper §III-B).
+//!   ([`dist`]). Execution is two-level: one thread per rank (paper
+//!   §III-B) × a morsel-driven intra-rank worker pool ([`exec`]) that
+//!   fans the local kernels out across cores, bit-identically to the
+//!   serial path (`DistConfig::intra_op_threads`, 1 = paper behaviour).
 //! * **L2/L1 (build time)** — JAX graphs calling Pallas kernels for the
 //!   numeric hot-spots (hash-partition, table→tensor featurize), AOT
 //!   lowered to HLO text and executed from Rust through PJRT
@@ -39,6 +42,7 @@ pub mod buffer;
 pub mod column;
 pub mod table;
 pub mod io;
+pub mod exec;
 pub mod compute;
 pub mod ops;
 pub mod net;

@@ -46,6 +46,8 @@ COMMANDS
 
 GLOBAL FLAGS
   --config FILE.toml    load defaults from a config file
+  --intra-threads N     morsel workers per rank for local kernels
+                        (0 = auto: cores/world; 1 = serial ranks)
 ";
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -121,6 +123,8 @@ fn make_cluster(
         world,
         fabric: kind,
         shuffle_chunk_rows: cfg.shuffle_chunk_rows,
+        intra_op_threads: args
+            .usize_or("intra-threads", cfg.intra_op_threads),
     })
 }
 

@@ -3,6 +3,7 @@
 //! back exchanges never cross. This is the "real concurrency" fabric —
 //! every correctness test runs on it.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
 use crate::error::{Result, RylonError};
@@ -25,6 +26,7 @@ pub struct LocalFabric {
     size: usize,
     state: Mutex<State>,
     cond: Condvar,
+    bytes: AtomicU64,
 }
 
 impl LocalFabric {
@@ -39,6 +41,7 @@ impl LocalFabric {
                 generation: 0,
             }),
             cond: Condvar::new(),
+            bytes: AtomicU64::new(0),
         }
     }
 }
@@ -46,6 +49,10 @@ impl LocalFabric {
 impl Fabric for LocalFabric {
     fn size(&self) -> usize {
         self.size
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
     }
 
     fn exchange(&self, rank: usize, outgoing: OutBufs) -> Result<OutBufs> {
@@ -56,6 +63,8 @@ impl Fabric for LocalFabric {
                 self.size
             )));
         }
+        let posted_bytes: usize = outgoing.iter().map(|b| b.len()).sum();
+        self.bytes.fetch_add(posted_bytes as u64, Ordering::Relaxed);
         let mut st = self.state.lock().map_err(|_| {
             RylonError::comm("fabric poisoned (a rank panicked)")
         })?;

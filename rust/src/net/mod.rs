@@ -56,6 +56,11 @@ pub trait Fabric: Send + Sync {
         let _ = rank;
         None
     }
+
+    /// Total bytes posted to this fabric across all exchanges (metrics).
+    fn bytes_sent(&self) -> u64 {
+        0
+    }
 }
 
 /// Shared handle to a fabric.

@@ -26,16 +26,47 @@ use std::sync::{Condvar, Mutex};
 use crate::error::{Result, RylonError};
 use crate::net::{CostModel, Fabric, OutBufs};
 
+/// `CLOCK_THREAD_CPUTIME_ID` read through a direct C binding — the
+/// offline registry has no `libc` crate, and the symbol is provided by
+/// glibc/musl and by the Darwin libSystem alike. Thread CPU time is
+/// immune to the timesharing distortion of running many rank threads on
+/// few cores — the property the whole compute-metering model rests on.
+#[cfg(any(target_os = "linux", target_os = "macos"))]
 fn thread_cpu_seconds() -> f64 {
-    let mut ts = libc::timespec {
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+    #[cfg(target_os = "linux")]
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    #[cfg(target_os = "macos")]
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 16;
+    extern "C" {
+        fn clock_gettime(clk_id: i32, tp: *mut Timespec) -> i32;
+    }
+    let mut ts = Timespec {
         tv_sec: 0,
         tv_nsec: 0,
     };
     // SAFETY: ts is a valid out-pointer; the clock id is a constant.
     unsafe {
-        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+        clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts);
     }
     ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Last-resort fallback for platforms without a thread-CPU clock: a
+/// process-wide monotonic clock. Per-rank segments then absorb
+/// scheduler noise and peer compute, so simulated makespans lose their
+/// per-rank meaning — correctness tests still pass, the scaling
+/// *figures* need a thread-CPU platform.
+#[cfg(not(any(target_os = "linux", target_os = "macos")))]
+fn thread_cpu_seconds() -> f64 {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
 struct State {
@@ -128,6 +159,10 @@ impl SimFabric {
 impl Fabric for SimFabric {
     fn size(&self) -> usize {
         self.size
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.wire_bytes()
     }
 
     fn tick_compute(&self, rank: usize) {

@@ -3,11 +3,21 @@
 //! accumulator per group. The distributed version (dist_groupby) shuffles
 //! by key then runs this locally, and for algebraic aggregates can
 //! instead pre-aggregate locally and merge partials (see `dist`).
+//!
+//! Serial and parallel grouping share one bucket structure —
+//! [`crate::compute::hash::GroupIndex`] (a [`PreHashedMap`]-backed
+//! chain, the sibling of `HashChains`). The parallel path partitions
+//! rows by hash prefix so each worker owns disjoint groups and feeds
+//! its per-group [`Accumulator`]s in ascending row order; groups are
+//! then emitted in global first-occurrence order. Output — including
+//! f64 accumulation order and SQL null semantics — is bit-identical to
+//! the serial path at any thread count.
 
 use crate::column::{Column, ColumnBuilder};
 use crate::compute::aggregate::{Accumulator, AggKind};
-use crate::compute::hash::{hash_columns, PreHashedMap, CHAIN_END};
+use crate::compute::hash::{hash_columns, GroupIndex};
 use crate::error::{Result, RylonError};
+use crate::exec;
 use crate::table::Table;
 use crate::types::{Field, Schema};
 
@@ -101,51 +111,98 @@ pub fn groupby(table: &Table, opts: &GroupByOptions) -> Result<Table> {
     let mut hashes = Vec::new();
     hash_columns(&key_cols, table.num_rows(), &mut hashes);
 
-    // group id per distinct key; representative row per group (§Perf:
-    // pre-hashed heads + group chain, no per-bucket Vec allocations).
-    let mut heads: PreHashedMap<u32> = PreHashedMap::with_capacity_and_hasher(
-        table.num_rows(),
-        Default::default(),
-    );
-    // next_group[g] = next group id sharing the same hash bucket.
-    let mut next_group: Vec<u32> = Vec::new();
-    let mut rep_rows: Vec<usize> = Vec::new();
-    let mut accs: Vec<Vec<Accumulator>> = Vec::new();
+    let new_acc_row = || -> Vec<Accumulator> {
+        opts.aggs
+            .iter()
+            .zip(&agg_cols)
+            .map(|(a, c)| {
+                a.kind
+                    .new_acc(c.dtype() == crate::types::DataType::Int64)
+            })
+            .collect()
+    };
+    let keys_eq = |rep: usize, row: usize| -> bool {
+        key_cols.iter().all(|c| c.eq_rows(rep, c, row))
+    };
 
-    for i in 0..table.num_rows() {
-        let h = hashes[i];
-        let head = heads.entry(h).or_insert(CHAIN_END);
-        let mut cur = *head;
-        let mut gid = CHAIN_END;
-        while cur != CHAIN_END {
-            let rep = rep_rows[cur as usize];
-            if key_cols.iter().all(|c| c.eq_rows(rep, c, i)) {
-                gid = cur;
-                break;
-            }
-            cur = next_group[cur as usize];
-        }
-        if gid == CHAIN_END {
-            gid = rep_rows.len() as u32;
-            rep_rows.push(i);
-            next_group.push(*head);
-            *head = gid;
-            accs.push(
-                opts.aggs
-                    .iter()
-                    .zip(&agg_cols)
-                    .map(|(a, c)| {
-                        a.kind.new_acc(
-                            c.dtype() == crate::types::DataType::Int64,
-                        )
-                    })
-                    .collect(),
+    let exec = exec::parallelism_for(table.num_rows());
+    // (rep_row, accumulators) per group, in global first-occurrence
+    // order — identical between the serial and parallel paths.
+    let (rep_rows, accs): (Vec<usize>, Vec<Vec<Accumulator>>) =
+        if exec.is_parallel() {
+            // Radix-partition rows by hash prefix: a group's rows all
+            // share one hash, so each partition owns whole groups and
+            // no cross-partition accumulator merge is needed. A single
+            // O(n) prepass buckets row ids per partition; each worker
+            // then touches only its own rows, in ascending row order
+            // (morsel-major), matching the serial fold order exactly.
+            let nparts = exec.threads();
+            let rows_by_part = crate::compute::hash::partition_rows(
+                &hashes,
+                nparts,
+                exec,
+                |_| false,
             );
-        }
-        for (acc, col) in accs[gid as usize].iter_mut().zip(&agg_cols) {
-            acc.update(col, i);
-        }
-    }
+            let parts = exec::run_partitions(nparts, |p| {
+                let mut gi = GroupIndex::with_capacity(
+                    table.num_rows() / nparts + 8,
+                );
+                let mut part_accs: Vec<Vec<Accumulator>> = Vec::new();
+                for morsel_buckets in &rows_by_part {
+                    for &row in &morsel_buckets[p] {
+                        let i = row as usize;
+                        let (gid, new) = gi.intern(hashes[i], i, keys_eq);
+                        if new {
+                            part_accs.push(new_acc_row());
+                        }
+                        for (acc, col) in
+                            part_accs[gid as usize].iter_mut().zip(&agg_cols)
+                        {
+                            acc.update(col, i);
+                        }
+                    }
+                }
+                (gi, part_accs)
+            });
+            // Serial group ids are assigned at first occurrence, so the
+            // serial group order is ascending representative row —
+            // recover it by sorting the per-partition groups.
+            let mut order: Vec<(usize, usize, usize)> = Vec::new();
+            for (p, (gi, _)) in parts.iter().enumerate() {
+                for (g, &rep) in gi.rep_rows().iter().enumerate() {
+                    order.push((rep, p, g));
+                }
+            }
+            order.sort_unstable();
+            let mut parts_accs: Vec<Vec<Option<Vec<Accumulator>>>> = parts
+                .into_iter()
+                .map(|(_, a)| a.into_iter().map(Some).collect())
+                .collect();
+            let mut rep_rows = Vec::with_capacity(order.len());
+            let mut accs = Vec::with_capacity(order.len());
+            for &(rep, p, g) in &order {
+                rep_rows.push(rep);
+                accs.push(
+                    parts_accs[p][g].take().expect("group consumed twice"),
+                );
+            }
+            (rep_rows, accs)
+        } else {
+            let mut gi = GroupIndex::with_capacity(table.num_rows());
+            let mut accs: Vec<Vec<Accumulator>> = Vec::new();
+            for (i, &h) in hashes.iter().enumerate() {
+                let (gid, new) = gi.intern(h, i, keys_eq);
+                if new {
+                    accs.push(new_acc_row());
+                }
+                for (acc, col) in
+                    accs[gid as usize].iter_mut().zip(&agg_cols)
+                {
+                    acc.update(col, i);
+                }
+            }
+            (gi.rep_rows().to_vec(), accs)
+        };
 
     // Assemble output.
     let ngroups = rep_rows.len();
@@ -286,6 +343,55 @@ mod tests {
             &GroupByOptions::new(&["ghost"], vec![Agg::sum("v")])
         )
         .is_err());
+    }
+
+    #[test]
+    fn parallel_groupby_bit_identical() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(99);
+        let n = 20_000usize;
+        let keys: Vec<Option<i64>> = (0..n)
+            .map(|_| {
+                if rng.next_below(13) == 0 {
+                    None
+                } else {
+                    Some(rng.next_below(500) as i64)
+                }
+            })
+            .collect();
+        let vals: Vec<Option<f64>> = (0..n)
+            .map(|_| {
+                if rng.next_below(9) == 0 {
+                    None
+                } else {
+                    Some(rng.next_f64() * 100.0 - 50.0)
+                }
+            })
+            .collect();
+        let t = Table::from_columns(vec![
+            ("k", Column::from_opt_i64(keys)),
+            ("v", Column::from_opt_f64(vals)),
+        ])
+        .unwrap();
+        let opts = GroupByOptions::new(
+            &["k"],
+            vec![
+                Agg::sum("v"),
+                Agg::count("v"),
+                Agg::mean("v"),
+                Agg::min("v"),
+                Agg::max("v"),
+            ],
+        );
+        let serial = groupby(&t, &opts).unwrap();
+        for threads in [2, 4, 7] {
+            let par = crate::exec::with_intra_op_threads(threads, || {
+                groupby(&t, &opts).unwrap()
+            });
+            // Table equality is value equality — including group order
+            // and f64 bits accumulated in the same fold order.
+            assert_eq!(par, serial, "threads={threads}");
+        }
     }
 
     #[test]

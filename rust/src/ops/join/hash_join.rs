@@ -1,9 +1,20 @@
 //! Hash join: build a key→rows table on the right side, probe with the
 //! left. Bucket hits re-verify actual key equality (hash collisions must
 //! not fabricate matches).
+//!
+//! Both phases are morsel-parallel under the calling thread's intra-op
+//! budget: the build radix-partitions rows by hash prefix so each
+//! worker owns disjoint buckets ([`HashChains::build_parallel`]), and
+//! the probe fans left-row morsels out with per-morsel output vectors
+//! concatenated in morsel order — the emitted (left, right) index pairs
+//! are bit-identical to the serial join at any thread count.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::column::Column;
 use crate::compute::hash::{hash_columns, HashChains};
 use crate::error::Result;
+use crate::exec;
 use crate::ops::join::{key_columns, key_has_null, JoinOptions, JoinType};
 use crate::table::Table;
 
@@ -16,7 +27,7 @@ pub fn hash_join_indices(
     let lk = key_columns(left, &opts.left_on)?;
     let rk = key_columns(right, &opts.right_on)?;
 
-    // Hash both key sets.
+    // Hash both key sets (morsel-parallel inside hash_columns).
     let mut lh = Vec::new();
     let mut rh = Vec::new();
     hash_columns(&lk, left.num_rows(), &mut lh);
@@ -26,62 +37,77 @@ pub fn hash_join_indices(
     // + one chain allocation instead of HashMap<u64, Vec<u32>>).
     // Null-key rows are excluded (they match nothing) but tracked for
     // right/full outer output.
-    let chains = HashChains::build(&rh, |j| key_has_null(&rk, j));
+    let build_exec = exec::parallelism_for(right.num_rows());
+    let chains =
+        HashChains::build_parallel(&rh, |j| key_has_null(&rk, j), build_exec);
 
     let want_left_unmatched =
         matches!(opts.join_type, JoinType::Left | JoinType::FullOuter);
     let want_right_unmatched =
         matches!(opts.join_type, JoinType::Right | JoinType::FullOuter);
 
-    let mut li: Vec<i64> = Vec::with_capacity(left.num_rows());
-    let mut ri: Vec<i64> = Vec::with_capacity(left.num_rows());
-    let mut right_matched = vec![false; right.num_rows()];
-
     // Monomorphic probe fast path for the common single-i64-key join.
     let fast = match (&lk[..], &rk[..]) {
-        ([crate::column::Column::Int64(a)], [crate::column::Column::Int64(b)]) => {
+        ([Column::Int64(a)], [Column::Int64(b)]) => {
             Some((a.values(), b.values()))
         }
         _ => None,
     };
 
-    for (i, &h) in lh.iter().enumerate() {
-        let mut matched = false;
-        if !key_has_null(&lk, i) {
-            match fast {
-                Some((lvals, rvals)) => {
-                    let key = lvals[i];
-                    for j in chains.bucket(h) {
-                        if rvals[j] == key {
-                            li.push(i as i64);
-                            ri.push(j as i64);
-                            matched = true;
-                            right_matched[j] = true;
-                        }
-                    }
-                }
-                None => {
-                    for j in chains.bucket(h) {
-                        // Collision-safe: verify every key cell.
-                        let eq = lk
-                            .iter()
-                            .zip(&rk)
-                            .all(|(a, b)| a.eq_rows(i, b, j));
-                        if eq {
-                            li.push(i as i64);
-                            ri.push(j as i64);
-                            matched = true;
-                            right_matched[j] = true;
-                        }
-                    }
-                }
-            }
+    let probe_exec = exec::parallelism_for(left.num_rows());
+    let (mut li, mut ri, right_matched) = if probe_exec.is_parallel() {
+        // Parallel probe: per-morsel pair vectors, morsel-order concat;
+        // right-side match flags are monotonic so relaxed atomics keep
+        // the exact serial flag set.
+        let flags: Vec<AtomicBool> =
+            (0..right.num_rows()).map(|_| AtomicBool::new(false)).collect();
+        let parts = exec::for_each_morsel(left.num_rows(), probe_exec, |m| {
+            let mut mli: Vec<i64> = Vec::new();
+            let mut mri: Vec<i64> = Vec::new();
+            probe_range(
+                &lk,
+                &rk,
+                &lh,
+                &chains,
+                fast,
+                m.start,
+                m.end,
+                want_left_unmatched,
+                &mut mli,
+                &mut mri,
+                |j| flags[j].store(true, Ordering::Relaxed),
+            );
+            (mli, mri)
+        });
+        let total: usize = parts.iter().map(|(a, _)| a.len()).sum();
+        let mut li = Vec::with_capacity(total);
+        let mut ri = Vec::with_capacity(total);
+        for (a, b) in parts {
+            li.extend(a);
+            ri.extend(b);
         }
-        if !matched && want_left_unmatched {
-            li.push(i as i64);
-            ri.push(-1);
-        }
-    }
+        let matched: Vec<bool> =
+            flags.iter().map(|f| f.load(Ordering::Relaxed)).collect();
+        (li, ri, matched)
+    } else {
+        let mut li: Vec<i64> = Vec::with_capacity(left.num_rows());
+        let mut ri: Vec<i64> = Vec::with_capacity(left.num_rows());
+        let mut matched = vec![false; right.num_rows()];
+        probe_range(
+            &lk,
+            &rk,
+            &lh,
+            &chains,
+            fast,
+            0,
+            left.num_rows(),
+            want_left_unmatched,
+            &mut li,
+            &mut ri,
+            |j| matched[j] = true,
+        );
+        (li, ri, matched)
+    };
 
     if want_right_unmatched {
         for (j, &m) in right_matched.iter().enumerate() {
@@ -93,6 +119,63 @@ pub fn hash_join_indices(
     }
 
     Ok((li, ri))
+}
+
+/// Probe left rows `[start, end)` against the right-side chains,
+/// appending matches (and left-unmatched rows when requested) in left
+/// row order. `mark(j)` records a right-side match.
+#[allow(clippy::too_many_arguments)]
+fn probe_range<FM: FnMut(usize)>(
+    lk: &[&Column],
+    rk: &[&Column],
+    lh: &[u64],
+    chains: &HashChains,
+    fast: Option<(&[i64], &[i64])>,
+    start: usize,
+    end: usize,
+    want_left_unmatched: bool,
+    li: &mut Vec<i64>,
+    ri: &mut Vec<i64>,
+    mut mark: FM,
+) {
+    for i in start..end {
+        let h = lh[i];
+        let mut matched = false;
+        if !key_has_null(lk, i) {
+            match fast {
+                Some((lvals, rvals)) => {
+                    let key = lvals[i];
+                    for j in chains.bucket(h) {
+                        if rvals[j] == key {
+                            li.push(i as i64);
+                            ri.push(j as i64);
+                            matched = true;
+                            mark(j);
+                        }
+                    }
+                }
+                None => {
+                    for j in chains.bucket(h) {
+                        // Collision-safe: verify every key cell.
+                        let eq = lk
+                            .iter()
+                            .zip(rk)
+                            .all(|(a, b)| a.eq_rows(i, b, j));
+                        if eq {
+                            li.push(i as i64);
+                            ri.push(j as i64);
+                            matched = true;
+                            mark(j);
+                        }
+                    }
+                }
+            }
+        }
+        if !matched && want_left_unmatched {
+            li.push(i as i64);
+            ri.push(-1);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -166,5 +249,54 @@ mod tests {
             .filter(|(&a, &b)| a >= 0 && b >= 0)
             .count();
         assert_eq!(both, 1);
+    }
+
+    #[test]
+    fn parallel_probe_identical_index_pairs() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(404);
+        let n = 20_000usize;
+        let lkeys: Vec<Option<i64>> = (0..n)
+            .map(|_| {
+                if rng.next_below(11) == 0 {
+                    None
+                } else {
+                    Some(rng.next_below(300) as i64)
+                }
+            })
+            .collect();
+        let rkeys: Vec<Option<i64>> = (0..n / 2)
+            .map(|_| {
+                if rng.next_below(11) == 0 {
+                    None
+                } else {
+                    Some(rng.next_below(300) as i64)
+                }
+            })
+            .collect();
+        let l = Table::from_columns(vec![(
+            "k",
+            Column::from_opt_i64(lkeys),
+        )])
+        .unwrap();
+        let r = Table::from_columns(vec![(
+            "k",
+            Column::from_opt_i64(rkeys),
+        )])
+        .unwrap();
+        for jt in [
+            JoinType::Inner,
+            JoinType::Left,
+            JoinType::Right,
+            JoinType::FullOuter,
+        ] {
+            let opts = JoinOptions::new(jt, &["k"], &["k"])
+                .with_algo(JoinAlgo::Hash);
+            let serial = hash_join_indices(&l, &r, &opts).unwrap();
+            let par = crate::exec::with_intra_op_threads(4, || {
+                hash_join_indices(&l, &r, &opts).unwrap()
+            });
+            assert_eq!(par, serial, "{jt:?}");
+        }
     }
 }

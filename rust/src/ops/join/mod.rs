@@ -168,11 +168,16 @@ pub(crate) fn assemble(
 }
 
 /// Gather with `-1` → null. Falls back to the dense `take` when no
-/// sentinel is present (inner joins stay on the fast path).
+/// sentinel is present (inner joins stay on the fast path, morsel-
+/// parallel for dense fixed-width columns).
 pub(crate) fn take_opt(col: &Column, idx: &[i64]) -> Column {
     if idx.iter().all(|&i| i >= 0) {
         let dense: Vec<usize> = idx.iter().map(|&i| i as usize).collect();
-        return col.take(&dense);
+        return crate::compute::filter::take_column_parallel(
+            col,
+            &dense,
+            crate::exec::parallelism_for(dense.len()),
+        );
     }
     match col {
         Column::Int64(c) => Column::Int64(take_opt_prim(c, idx)),

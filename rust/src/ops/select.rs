@@ -10,8 +10,9 @@
 //!   the binding-layer/notebook convenience, paying the boxing cost.
 
 use crate::column::Column;
-use crate::compute::filter::{filter_indices, filter_table};
+use crate::compute::filter::{filter_indices, filter_table, take_parallel};
 use crate::error::{Result, RylonError};
+use crate::exec;
 use crate::table::Table;
 use crate::types::Value;
 
@@ -82,9 +83,35 @@ impl Predicate {
         Predicate::Not(Box::new(self))
     }
 
-    /// Evaluate to a per-row boolean mask.
+    /// Evaluate to a per-row boolean mask. Large tables evaluate one
+    /// morsel per worker under the calling thread's intra-op budget;
+    /// results are concatenated in morsel order, so the mask is
+    /// bit-identical to a serial evaluation.
     pub fn eval_mask(&self, table: &Table) -> Result<Vec<bool>> {
         let n = table.num_rows();
+        let exec = exec::parallelism_for(n);
+        if exec.is_parallel() {
+            let parts = exec::map_parallel(
+                exec::split_even(n, exec.threads()),
+                |m| self.eval_mask_range(table, m.start, m.end),
+            );
+            let mut out = Vec::with_capacity(n);
+            for p in parts {
+                out.extend(p?);
+            }
+            return Ok(out);
+        }
+        self.eval_mask_range(table, 0, n)
+    }
+
+    /// Evaluate the predicate over rows `[start, end)`; the returned
+    /// mask is indexed relative to `start`.
+    pub fn eval_mask_range(
+        &self,
+        table: &Table,
+        start: usize,
+        end: usize,
+    ) -> Result<Vec<bool>> {
         match self {
             Predicate::Cmp {
                 column,
@@ -92,27 +119,29 @@ impl Predicate {
                 literal,
             } => {
                 let col = table.column_by_name(column)?;
-                eval_cmp_mask(col, *op, literal, n)
+                eval_cmp_mask_range(col, *op, literal, start, end)
             }
             Predicate::IsNull { column, negated } => {
                 let col = table.column_by_name(column)?;
-                Ok((0..n)
+                Ok((start..end)
                     .map(|i| col.is_valid(i) == *negated)
                     .collect())
             }
             Predicate::And(a, b) => {
-                let ma = a.eval_mask(table)?;
-                let mb = b.eval_mask(table)?;
+                let ma = a.eval_mask_range(table, start, end)?;
+                let mb = b.eval_mask_range(table, start, end)?;
                 Ok(ma.iter().zip(&mb).map(|(x, y)| *x && *y).collect())
             }
             Predicate::Or(a, b) => {
-                let ma = a.eval_mask(table)?;
-                let mb = b.eval_mask(table)?;
+                let ma = a.eval_mask_range(table, start, end)?;
+                let mb = b.eval_mask_range(table, start, end)?;
                 Ok(ma.iter().zip(&mb).map(|(x, y)| *x || *y).collect())
             }
-            Predicate::Not(a) => {
-                Ok(a.eval_mask(table)?.iter().map(|x| !x).collect())
-            }
+            Predicate::Not(a) => Ok(a
+                .eval_mask_range(table, start, end)?
+                .iter()
+                .map(|x| !x)
+                .collect()),
         }
     }
 
@@ -124,24 +153,27 @@ impl Predicate {
     }
 }
 
-/// Columnar comparison without per-row boxing.
-fn eval_cmp_mask(
+/// Columnar comparison without per-row boxing, over rows `[start, end)`.
+fn eval_cmp_mask_range(
     col: &Column,
     op: CmpOp,
     literal: &Value,
-    n: usize,
+    start: usize,
+    end: usize,
 ) -> Result<Vec<bool>> {
-    let mut mask = vec![false; n];
+    let mut mask = vec![false; end - start];
     match (col, literal) {
         (Column::Int64(c), Value::Int64(x)) => {
-            for (i, m) in mask.iter_mut().enumerate() {
+            for (k, m) in mask.iter_mut().enumerate() {
+                let i = start + k;
                 if c.is_valid(i) {
                     *m = op.eval(c.value(i).cmp(x));
                 }
             }
         }
         (Column::Int64(c), Value::Float64(x)) => {
-            for (i, m) in mask.iter_mut().enumerate() {
+            for (k, m) in mask.iter_mut().enumerate() {
+                let i = start + k;
                 if c.is_valid(i) {
                     *m = op.eval((c.value(i) as f64).total_cmp(x));
                 }
@@ -151,21 +183,24 @@ fn eval_cmp_mask(
             let x = lit.as_f64().ok_or_else(|| {
                 RylonError::ty(format!("compare f64 column with {lit:?}"))
             })?;
-            for (i, m) in mask.iter_mut().enumerate() {
+            for (k, m) in mask.iter_mut().enumerate() {
+                let i = start + k;
                 if c.is_valid(i) {
                     *m = op.eval(c.value(i).total_cmp(&x));
                 }
             }
         }
         (Column::Utf8(c), Value::Utf8(s)) => {
-            for (i, m) in mask.iter_mut().enumerate() {
+            for (k, m) in mask.iter_mut().enumerate() {
+                let i = start + k;
                 if c.is_valid(i) {
                     *m = op.eval(c.value(i).cmp(s.as_str()));
                 }
             }
         }
         (Column::Bool(c), Value::Bool(b)) => {
-            for (i, m) in mask.iter_mut().enumerate() {
+            for (k, m) in mask.iter_mut().enumerate() {
+                let i = start + k;
                 if c.is_valid(i) {
                     *m = op.eval(c.value(i).cmp(b));
                 }
@@ -182,11 +217,35 @@ fn eval_cmp_mask(
     Ok(mask)
 }
 
-/// Select rows matching a columnar predicate.
+/// Select rows matching a columnar predicate. Mask evaluation, index
+/// building and the gather all run morsel-parallel under the calling
+/// thread's intra-op budget; output is bit-identical to a serial run.
 pub fn select(table: &Table, pred: &Predicate) -> Result<Table> {
+    let n = table.num_rows();
     let mask = pred.eval_mask(table)?;
-    let idx = filter_indices(table.num_rows(), |i| mask[i]);
-    Ok(table.take(&idx))
+    let exec = exec::parallelism_for(n);
+    let idx: Vec<usize> = if exec.is_parallel() {
+        let parts = exec::map_parallel(
+            exec::split_even(n, exec.threads()),
+            |m| {
+                let mut v = Vec::new();
+                for i in m.range() {
+                    if mask[i] {
+                        v.push(i);
+                    }
+                }
+                v
+            },
+        );
+        let mut idx = Vec::with_capacity(parts.iter().map(Vec::len).sum());
+        for p in parts {
+            idx.extend(p);
+        }
+        idx
+    } else {
+        filter_indices(n, |i| mask[i])
+    };
+    Ok(take_parallel(table, &idx, exec::parallelism_for(idx.len())))
 }
 
 /// Select rows with an arbitrary boxed-row closure (convenience path).

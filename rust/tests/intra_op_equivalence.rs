@@ -1,0 +1,257 @@
+//! Property-style equivalence: every morsel-parallel kernel must
+//! produce a **byte-identical** table to the serial kernel — across
+//! null-heavy, empty, single-row, and skewed-key inputs, at several
+//! thread counts. `Table: PartialEq` compares schemas, values, and
+//! validity, and the f64 aggregates fold in the same order on both
+//! paths, so `assert_eq!` is the bit-identity check.
+
+use rylon::column::Column;
+use rylon::exec;
+use rylon::io::datagen::{gen_table, DataGenSpec, KeyDist};
+use rylon::ops::groupby::{groupby, Agg, GroupByOptions};
+use rylon::ops::join::{join, JoinAlgo, JoinOptions, JoinType};
+use rylon::ops::orderby::{orderby, SortKey};
+use rylon::ops::select::{select, Predicate};
+use rylon::table::Table;
+use rylon::util::rng::Xoshiro256;
+
+const THREADS: [usize; 3] = [2, 4, 7];
+
+/// Random table: optional-i64 key, f64 payload, short string column.
+fn random_table(seed: u64, rows: usize, key_domain: u64, null_every: u64) -> Table {
+    let mut rng = Xoshiro256::new(seed);
+    let keys: Vec<Option<i64>> = (0..rows)
+        .map(|_| {
+            if null_every > 0 && rng.next_below(null_every) == 0 {
+                None
+            } else {
+                Some(rng.next_below(key_domain) as i64)
+            }
+        })
+        .collect();
+    let vals: Vec<Option<f64>> = (0..rows)
+        .map(|_| {
+            if null_every > 0 && rng.next_below(null_every) == 0 {
+                None
+            } else {
+                Some(rng.next_f64() * 200.0 - 100.0)
+            }
+        })
+        .collect();
+    let strs: Vec<String> = (0..rows)
+        .map(|_| format!("s{}", rng.next_below(key_domain.max(1))))
+        .collect();
+    Table::from_columns(vec![
+        ("k", Column::from_opt_i64(keys)),
+        ("v", Column::from_opt_f64(vals)),
+        (
+            "s",
+            Column::from_str(
+                &strs.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+    .unwrap()
+}
+
+/// The scenario battery the issue calls out: null-heavy, empty,
+/// single-row, and skewed-key inputs.
+fn scenarios() -> Vec<(&'static str, Table)> {
+    let skewed = gen_table(&DataGenSpec {
+        rows: 30_000,
+        payload_cols: 1,
+        key_dist: KeyDist::Zipf {
+            domain: 500,
+            s: 1.3,
+        },
+        seed: 1,
+    })
+    .unwrap();
+    // Rename datagen's (id, d0) into the (k, v, s) shape.
+    let skewed = Table::from_columns(vec![
+        (
+            "k",
+            Column::from_i64(
+                skewed.column_by_name("id").unwrap().i64_values().to_vec(),
+            ),
+        ),
+        (
+            "v",
+            Column::from_f64(
+                skewed.column_by_name("d0").unwrap().f64_values().to_vec(),
+            ),
+        ),
+        (
+            "s",
+            Column::from_str(
+                &skewed
+                    .column_by_name("id")
+                    .unwrap()
+                    .i64_values()
+                    .iter()
+                    .map(|k| format!("g{}", k % 50))
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+    .unwrap();
+    vec![
+        ("uniform", random_table(10, 25_000, 800, 0)),
+        ("null_heavy", random_table(11, 25_000, 300, 3)),
+        ("empty", random_table(12, 0, 10, 2)),
+        ("single_row", random_table(13, 1, 10, 0)),
+        ("skewed", skewed),
+    ]
+}
+
+fn assert_equivalent<F: Fn() -> Table>(label: &str, f: F) {
+    let serial = f();
+    for &t in &THREADS {
+        let par = exec::with_intra_op_threads(t, &f);
+        assert_eq!(par, serial, "{label} diverged at {t} threads");
+    }
+}
+
+#[test]
+fn select_bit_identical() {
+    for (name, t) in scenarios() {
+        let pred = Predicate::parse("v > -20 and k < 600").unwrap();
+        assert_equivalent(&format!("select/{name}"), || {
+            select(&t, &pred).unwrap()
+        });
+        let nullpred = Predicate::parse("v is not null").unwrap();
+        assert_equivalent(&format!("select-null/{name}"), || {
+            select(&t, &nullpred).unwrap()
+        });
+    }
+}
+
+#[test]
+fn hash_join_bit_identical() {
+    for (name, l) in scenarios() {
+        let r = random_table(99, 12_000, 400, 5);
+        for jt in [
+            JoinType::Inner,
+            JoinType::Left,
+            JoinType::Right,
+            JoinType::FullOuter,
+        ] {
+            let opts = JoinOptions::new(jt, &["k"], &["k"])
+                .with_algo(JoinAlgo::Hash);
+            assert_equivalent(&format!("hash_join/{name}/{jt:?}"), || {
+                join(&l, &r, &opts).unwrap()
+            });
+        }
+    }
+}
+
+#[test]
+fn sort_join_bit_identical() {
+    for (name, l) in scenarios() {
+        let r = random_table(98, 12_000, 400, 5);
+        let opts = JoinOptions::new(JoinType::Inner, &["k"], &["k"])
+            .with_algo(JoinAlgo::Sort);
+        assert_equivalent(&format!("sort_join/{name}"), || {
+            join(&l, &r, &opts).unwrap()
+        });
+    }
+}
+
+#[test]
+fn groupby_bit_identical() {
+    for (name, t) in scenarios() {
+        let opts = GroupByOptions::new(
+            &["k"],
+            vec![
+                Agg::sum("v"),
+                Agg::count("v"),
+                Agg::mean("v"),
+                Agg::min("v"),
+                Agg::max("s"),
+            ],
+        );
+        assert_equivalent(&format!("groupby/{name}"), || {
+            groupby(&t, &opts).unwrap()
+        });
+        // Multi-key grouping exercises the combined hash path.
+        let multi = GroupByOptions::new(&["k", "s"], vec![Agg::count("v")]);
+        assert_equivalent(&format!("groupby-multi/{name}"), || {
+            groupby(&t, &multi).unwrap()
+        });
+    }
+}
+
+#[test]
+fn orderby_bit_identical() {
+    for (name, t) in scenarios() {
+        assert_equivalent(&format!("orderby-radix/{name}"), || {
+            orderby(&t, &[SortKey::asc("k")]).unwrap()
+        });
+        assert_equivalent(&format!("orderby-multi/{name}"), || {
+            orderby(&t, &[SortKey::desc("s"), SortKey::asc("v")]).unwrap()
+        });
+    }
+}
+
+#[test]
+fn build_parallel_chains_identical_buckets() {
+    use rylon::compute::hash::{hash_columns, HashChains};
+    let t = random_table(55, 40_000, 123, 4);
+    let cols = vec![t.column_by_name("k").unwrap()];
+    let mut hashes = Vec::new();
+    hash_columns(&cols, t.num_rows(), &mut hashes);
+    let skip = |i: usize| !t.column_by_name("k").unwrap().is_valid(i);
+    let serial = HashChains::build(&hashes, skip);
+    for &threads in &THREADS {
+        let par = HashChains::build_parallel(
+            &hashes,
+            skip,
+            exec::ExecContext::new(threads),
+        );
+        for &h in hashes.iter().take(2000) {
+            assert_eq!(
+                serial.bucket(h).collect::<Vec<_>>(),
+                par.bucket(h).collect::<Vec<_>>(),
+                "bucket {h:#x} at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_end_to_end_bit_identical() {
+    // A realistic chain: filter → join → groupby → orderby, all under
+    // one parallel budget vs serial.
+    let fact = gen_table(&DataGenSpec::paper_scaling(20_000, 7)).unwrap();
+    let dim = gen_table(&DataGenSpec {
+        rows: 2_000,
+        payload_cols: 1,
+        key_dist: KeyDist::Sequential,
+        seed: 8,
+    })
+    .unwrap();
+    let run = || {
+        let filtered =
+            select(&fact, &Predicate::parse("d0 > 0").unwrap()).unwrap();
+        let joined = join(
+            &filtered,
+            &dim,
+            &JoinOptions::inner("id", "id").with_algo(JoinAlgo::Hash),
+        )
+        .unwrap();
+        let grouped = groupby(
+            &joined,
+            &GroupByOptions::new(
+                &["id"],
+                vec![Agg::sum("d1"), Agg::count("d1")],
+            ),
+        )
+        .unwrap();
+        orderby(&grouped, &[SortKey::desc("sum_d1")]).unwrap()
+    };
+    let serial = run();
+    for &t in &THREADS {
+        let par = exec::with_intra_op_threads(t, run);
+        assert_eq!(par, serial, "pipeline diverged at {t} threads");
+    }
+}
