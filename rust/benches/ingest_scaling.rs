@@ -1,0 +1,185 @@
+//! Ingest (morsel-parallel parse) scaling: CSV and RYF reads on one
+//! rank at 1/2/4/8 worker threads, over a table with nullable and
+//! string columns so the full gather/builder surface is exercised.
+//! Verifies the parallel parse is bit-identical to serial before any
+//! timing counts, prints the rows/sec grid, and emits
+//! `BENCH_ingest.json` (mirror of `intra_op_scaling.rs` →
+//! `BENCH_intra_op.json`).
+//!
+//! Env overrides: INGEST_ROWS (default 500_000), INGEST_SAMPLES,
+//! INGEST_MAX_THREADS.
+
+use rylon::bench_harness::{measure, BenchOpts, Report};
+use rylon::column::Column;
+use rylon::exec;
+use rylon::io::csv::{read_csv, write_csv, CsvOptions};
+use rylon::io::ryf::{read_ryf, write_ryf};
+use rylon::table::Table;
+use rylon::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// The workload shape the paper loads (§V): an integer key, a numeric
+/// payload (with nulls), and a string column (with empties + quoting).
+fn make_table(rows: usize) -> Table {
+    Table::from_columns(vec![
+        ("id", Column::from_i64((0..rows as i64).collect())),
+        (
+            "v",
+            Column::from_opt_f64(
+                (0..rows)
+                    .map(|i| {
+                        if i % 13 == 0 {
+                            None
+                        } else {
+                            Some(i as f64 * 0.5 - 1000.0)
+                        }
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            // No empty strings here: CSV renders both them and nulls as
+            // empty cells, which would break the roundtrip assert.
+            "s",
+            Column::from_str(
+                &(0..rows)
+                    .map(|i| match i % 7 {
+                        0 => format!("quoted,{i}"),
+                        1 => format!("esc\"{i}"),
+                        _ => format!("name-{i}"),
+                    })
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+    .unwrap()
+}
+
+fn main() {
+    let rows = env_usize("INGEST_ROWS", 500_000);
+    let max_threads = env_usize("INGEST_MAX_THREADS", 8);
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        samples: env_usize("INGEST_SAMPLES", 3),
+    };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threads_sweep: Vec<usize> = [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|&t| t <= max_threads)
+        .collect();
+    println!(
+        "ingest scaling: {rows} rows, {cores} cores, threads {threads_sweep:?}"
+    );
+
+    let table = make_table(rows);
+    let dir = std::env::temp_dir();
+    let csv_path = dir.join("rylon_ingest_scaling.csv");
+    let ryf_path = dir.join("rylon_ingest_scaling.ryf");
+    write_csv(&table, &csv_path, &CsvOptions::default()).expect("write csv");
+    // Enough row groups that an 8-way read never starves.
+    write_ryf(&table, &ryf_path, (rows / 64).max(1)).expect("write ryf");
+
+    type Loader = Box<dyn Fn() -> Table>;
+    let workloads: Vec<(&str, Loader)> = vec![
+        ("csv_parse", {
+            let p = csv_path.clone();
+            Box::new(move || read_csv(&p, &CsvOptions::default()).unwrap())
+        }),
+        ("ryf_read", {
+            let p = ryf_path.clone();
+            Box::new(move || read_ryf(&p).unwrap())
+        }),
+    ];
+
+    let mut report = Report::new(&format!(
+        "Morsel-parallel ingest scaling, {rows} rows ({cores} cores)"
+    ));
+    let mut samples: Vec<(String, usize, f64, f64, f64)> = Vec::new();
+
+    for (name, run) in &workloads {
+        // Serial reference — every thread count must reproduce it
+        // bit-for-bit before its timing counts.
+        let reference = exec::with_intra_op_threads(1, run);
+        assert_eq!(
+            reference, table,
+            "{name} roundtrip must reproduce the generated table"
+        );
+        let mut base_seconds = f64::NAN;
+        for &t in &threads_sweep {
+            let out = exec::with_intra_op_threads(t, run);
+            assert_eq!(
+                out, reference,
+                "{name} at {t} threads diverged from serial"
+            );
+            let stats = exec::with_intra_op_threads(t, || {
+                measure(opts, || {
+                    std::hint::black_box(run().num_rows());
+                })
+            });
+            if t == 1 {
+                base_seconds = stats.median;
+            }
+            let rows_per_sec = rows as f64 / stats.median.max(1e-12);
+            let speedup = base_seconds / stats.median.max(1e-12);
+            report.add_with(
+                name,
+                t as f64,
+                stats.median,
+                vec![
+                    ("rows_per_sec".to_string(), rows_per_sec),
+                    ("speedup_vs_1t".to_string(), speedup),
+                ],
+            );
+            samples.push((
+                name.to_string(),
+                t,
+                stats.median,
+                rows_per_sec,
+                speedup,
+            ));
+            println!(
+                "  {:>10} t={t}: {:>10.4}s  {:>14.0} rows/s  ({:.2}x vs 1t)",
+                name, stats.median, rows_per_sec, speedup
+            );
+        }
+    }
+
+    println!("{}", report.render());
+    report.save("ingest_scaling").expect("save report");
+
+    let json = Json::obj(vec![
+        ("rows", Json::num(rows as f64)),
+        ("cores", Json::num(cores as f64)),
+        (
+            "results",
+            Json::Arr(
+                samples
+                    .iter()
+                    .map(|(name, t, secs, rps, speedup)| {
+                        Json::obj(vec![
+                            ("op", Json::str(name.clone())),
+                            ("threads", Json::num(*t as f64)),
+                            ("seconds", Json::num(*secs)),
+                            ("rows_per_sec", Json::num(*rps)),
+                            ("speedup_vs_1t", Json::num(*speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_ingest.json", json.to_string())
+        .expect("write BENCH_ingest.json");
+    println!("wrote BENCH_ingest.json");
+
+    std::fs::remove_file(&csv_path).ok();
+    std::fs::remove_file(&ryf_path).ok();
+}

@@ -146,6 +146,13 @@ impl Bitmap {
         &self.bits
     }
 
+    /// Mutable word access for the parallel gather kernels, whose
+    /// workers write disjoint word ranges. Bits at or past `len` must
+    /// stay zero (the tail-mask invariant).
+    pub(crate) fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.bits
+    }
+
     /// Rebuild from wire words + logical length.
     pub fn from_words(words: Vec<u64>, len: usize) -> Bitmap {
         assert_eq!(words.len(), len.div_ceil(64));

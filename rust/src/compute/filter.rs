@@ -1,13 +1,15 @@
 //! Selection vectors: turn a predicate into row indices and gather.
 //! Select/project and the partition scatter all funnel through here.
-//! Gathers over dense fixed-width columns fan out across the calling
-//! thread's morsel budget (bit-identical to the serial gather).
+//! Gathers over every column layout — dense fixed-width, nullable
+//! (validity bitmaps), and variable-width strings — fan out across the
+//! calling thread's morsel budget, bit-identical to the serial gather.
 
 use std::sync::Arc;
 
-use crate::column::{Column, PrimitiveColumn};
+use crate::buffer::Bitmap;
+use crate::column::{Column, PrimitiveColumn, StringColumn};
 use crate::error::Result;
-use crate::exec::{self, ExecContext};
+use crate::exec::{self, ExecContext, SendPtr};
 use crate::table::Table;
 use crate::types::Value;
 
@@ -27,15 +29,15 @@ pub fn take_indices(table: &Table, indices: &[usize]) -> Table {
     table.take(indices)
 }
 
-/// Morsel-parallel `Table::take`: dense fixed-width columns gather into
-/// disjoint output ranges concurrently; nullable and string columns use
-/// the serial per-column gather. Output equals `table.take(indices)`.
+/// Morsel-parallel `Table::take`: every column layout gathers into
+/// disjoint output ranges concurrently. Output equals
+/// `table.take(indices)` bit for bit.
 pub fn take_parallel(
     table: &Table,
     indices: &[usize],
     exec: ExecContext,
 ) -> Table {
-    if !exec.is_parallel() || indices.len() < exec::PAR_ROW_THRESHOLD {
+    if !exec.is_parallel() || indices.len() < exec::par_row_threshold() {
         return table.take(indices);
     }
     let columns: Vec<Arc<Column>> = table
@@ -45,40 +47,143 @@ pub fn take_parallel(
     Table::from_parts(table.schema().clone(), columns, indices.len())
 }
 
-/// Morsel-parallel gather of one column (see [`take_parallel`]).
+/// Morsel-parallel gather of one column (see [`take_parallel`]). No
+/// layout falls back to serial above the row threshold: fixed-width
+/// values gather into disjoint output ranges, validity bitmaps gather
+/// word-aligned ranges, and string payloads land via byte-length prefix
+/// sums.
 pub fn take_column_parallel(
     col: &Column,
     indices: &[usize],
     exec: ExecContext,
 ) -> Column {
-    if !exec.is_parallel() || indices.len() < exec::PAR_ROW_THRESHOLD {
+    if !exec.is_parallel() || indices.len() < exec::par_row_threshold() {
         return col.take(indices);
     }
     match col {
-        Column::Int64(c) if c.validity().is_none() => Column::Int64(
-            PrimitiveColumn::from_values(exec::par_gather(
-                c.values(),
-                indices,
-                exec,
-            )),
-        ),
-        Column::Float64(c) if c.validity().is_none() => Column::Float64(
-            PrimitiveColumn::from_values(exec::par_gather(
-                c.values(),
-                indices,
-                exec,
-            )),
-        ),
-        Column::Bool(c) if c.validity().is_none() => Column::Bool(
-            PrimitiveColumn::from_values(exec::par_gather(
-                c.values(),
-                indices,
-                exec,
-            )),
-        ),
-        // Validity bitmaps share words across morsel boundaries and
-        // string gathers need byte-offset prefix sums — serial path.
-        other => other.take(indices),
+        Column::Int64(c) => {
+            Column::Int64(take_primitive_parallel(c, indices, exec))
+        }
+        Column::Float64(c) => {
+            Column::Float64(take_primitive_parallel(c, indices, exec))
+        }
+        Column::Bool(c) => {
+            Column::Bool(take_primitive_parallel(c, indices, exec))
+        }
+        Column::Utf8(c) => {
+            Column::Utf8(take_string_parallel(c, indices, exec))
+        }
+    }
+}
+
+/// Parallel fixed-width gather: values and (when present) validity.
+fn take_primitive_parallel<T>(
+    col: &PrimitiveColumn<T>,
+    indices: &[usize],
+    exec: ExecContext,
+) -> PrimitiveColumn<T>
+where
+    T: Copy + Default + Send + Sync,
+{
+    PrimitiveColumn {
+        values: exec::par_gather(col.values(), indices, exec),
+        validity: col
+            .validity()
+            .map(|b| take_bitmap_parallel(b, indices, exec)),
+    }
+}
+
+/// Parallel validity gather. Workers own **word-aligned** bit ranges of
+/// the output, so no two workers ever touch the same `u64` — the
+/// word-sharing hazard that used to force the serial fallback. Equals
+/// `src.take(indices)` bit for bit (tail bits stay zero).
+fn take_bitmap_parallel(
+    src: &Bitmap,
+    indices: &[usize],
+    exec: ExecContext,
+) -> Bitmap {
+    let n = indices.len();
+    let nwords = n.div_ceil(64);
+    if !exec.is_parallel() || nwords <= 1 {
+        return src.take(indices);
+    }
+    let mut out = Bitmap::zeros(n);
+    let ptr = SendPtr(out.words_mut().as_mut_ptr());
+    let word_ranges = exec::split_even(nwords, exec.threads());
+    exec::map_parallel(word_ranges, |wr| {
+        for w in wr.range() {
+            let lo = w * 64;
+            let hi = (lo + 64).min(n);
+            let mut word = 0u64;
+            for (bit, &idx) in indices[lo..hi].iter().enumerate() {
+                if src.get(idx) {
+                    word |= 1u64 << bit;
+                }
+            }
+            // SAFETY: word ranges are disjoint per worker, and the
+            // fan-out completes before `out` is read.
+            unsafe {
+                *ptr.0.add(w) = word;
+            }
+        }
+    });
+    out
+}
+
+/// Parallel string gather: a morsel-parallel byte-length pass feeds a
+/// prefix sum over output offsets, after which every worker copies its
+/// morsel's payload into a disjoint byte range. Offsets, bytes, and
+/// validity all equal the serial `StringColumn::take`.
+fn take_string_parallel(
+    col: &StringColumn,
+    indices: &[usize],
+    exec: ExecContext,
+) -> StringColumn {
+    let n = indices.len();
+    let src_offsets = col.offsets();
+    let src_bytes = col.bytes();
+    // Pass 1: per-row byte lengths, gathered morsel-parallel into the
+    // offsets buffer (shifted by one)…
+    let mut offsets = vec![0u64; n + 1];
+    exec::fill_parallel(&mut offsets[1..], exec, |m, dst| {
+        for (k, &idx) in indices[m.range()].iter().enumerate() {
+            dst[k] = src_offsets[idx + 1] - src_offsets[idx];
+        }
+    });
+    // …then a serial prefix sum turns lengths into absolute offsets
+    // (O(n) adds — negligible next to the payload copy).
+    for i in 1..=n {
+        offsets[i] += offsets[i - 1];
+    }
+    // Pass 2: payload copy. Morsel m owns output bytes
+    // [offsets[m.start], offsets[m.end]) — disjoint by construction.
+    let mut bytes = vec![0u8; offsets[n] as usize];
+    let bytes_ptr = SendPtr(bytes.as_mut_ptr());
+    let offsets_ref = &offsets;
+    exec::for_each_morsel(n, exec, |m| {
+        let mut pos = offsets_ref[m.start] as usize;
+        for &idx in &indices[m.range()] {
+            let lo = src_offsets[idx] as usize;
+            let hi = src_offsets[idx + 1] as usize;
+            // SAFETY: source and destination never overlap (distinct
+            // allocations) and each morsel's destination range is
+            // disjoint from every other morsel's.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    src_bytes.as_ptr().add(lo),
+                    bytes_ptr.0.add(pos),
+                    hi - lo,
+                );
+            }
+            pos += hi - lo;
+        }
+    });
+    StringColumn {
+        offsets,
+        bytes,
+        validity: col
+            .validity()
+            .map(|b| take_bitmap_parallel(b, indices, exec)),
     }
 }
 

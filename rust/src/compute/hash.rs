@@ -87,7 +87,7 @@ impl HashChains {
         F: Fn(usize) -> bool + Sync,
     {
         let nparts = exec.threads();
-        if nparts <= 1 || hashes.len() < exec::PAR_ROW_THRESHOLD {
+        if nparts <= 1 || hashes.len() < exec::par_row_threshold() {
             return Self::build(hashes, skip);
         }
         let n = hashes.len();
@@ -469,7 +469,9 @@ mod tests {
                 .collect(),
         );
         let mut serial = Vec::new();
-        hash_columns(&[&a, &b], n, &mut serial);
+        crate::exec::with_intra_op_threads(1, || {
+            hash_columns(&[&a, &b], n, &mut serial);
+        });
         let mut par = Vec::new();
         crate::exec::with_intra_op_threads(4, || {
             hash_columns(&[&a, &b], n, &mut par);

@@ -149,6 +149,10 @@ pub struct RylonConfig {
     /// world, so rank threads × workers never oversubscribe. `1` =
     /// single-threaded ranks (the paper's §III-B model).
     pub intra_op_threads: usize,
+    /// Rows below which kernels keep the serial path
+    /// (`[exec] par_row_threshold`) — lower it to force the parallel
+    /// paths on small inputs (benches/tests).
+    pub par_row_threshold: usize,
     pub cost: CostModel,
     /// Directory holding AOT artifacts + manifest.json.
     pub artifacts_dir: String,
@@ -161,6 +165,7 @@ impl Default for RylonConfig {
             fabric: "threads".to_string(),
             shuffle_chunk_rows: 1 << 16,
             intra_op_threads: 0,
+            par_row_threshold: crate::exec::PAR_ROW_THRESHOLD,
             cost: CostModel::default(),
             artifacts_dir: "artifacts".to_string(),
         }
@@ -179,6 +184,8 @@ impl RylonConfig {
                 .usize_or("shuffle.chunk_rows", d.shuffle_chunk_rows),
             intra_op_threads: f
                 .usize_or("exec.intra_op_threads", d.intra_op_threads),
+            par_row_threshold: f
+                .usize_or("exec.par_row_threshold", d.par_row_threshold),
             cost: CostModel {
                 alpha: f.f64_or("cost.alpha", dc.alpha),
                 beta: f.f64_or("cost.beta", dc.beta),
@@ -210,6 +217,7 @@ chunk_rows = 4096
 
 [exec]
 intra_op_threads = 2
+par_row_threshold = 512
 
 [cost]
 alpha = 1e-5
@@ -236,6 +244,7 @@ ranks_per_node = 8
         assert_eq!(c.fabric, "sim");
         assert_eq!(c.shuffle_chunk_rows, 4096);
         assert_eq!(c.intra_op_threads, 2);
+        assert_eq!(c.par_row_threshold, 512);
         assert_eq!(c.cost.alpha, 1e-5);
         assert_eq!(c.cost.ranks_per_node, 8);
         // Untouched keys keep defaults.

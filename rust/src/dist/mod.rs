@@ -56,6 +56,9 @@ pub struct DistConfig {
     /// Morsel workers per rank for the local kernels. `0` = auto
     /// (available cores / world), `1` = serial (the seed behaviour).
     pub intra_op_threads: usize,
+    /// Rows below which kernels stay serial (`[exec]
+    /// par_row_threshold`; default [`crate::exec::PAR_ROW_THRESHOLD`]).
+    pub par_row_threshold: usize,
 }
 
 impl Default for DistConfig {
@@ -65,6 +68,7 @@ impl Default for DistConfig {
             fabric: FabricKind::Threads,
             shuffle_chunk_rows: 1 << 16,
             intra_op_threads: 0,
+            par_row_threshold: crate::exec::PAR_ROW_THRESHOLD,
         }
     }
 }
@@ -93,6 +97,13 @@ impl DistConfig {
         self.intra_op_threads = threads;
         self
     }
+
+    /// Override the parallelism row threshold (rows below it run the
+    /// serial kernel paths).
+    pub fn with_par_row_threshold(mut self, rows: usize) -> DistConfig {
+        self.par_row_threshold = rows;
+        self
+    }
 }
 
 /// Per-rank execution context handed to the SPMD closure.
@@ -113,14 +124,21 @@ impl RankCtx {
     }
 }
 
-/// A job-scoped cluster: spawns one thread per rank, runs the SPMD
-/// closure on each, and gathers the per-rank results in rank order.
+/// A cluster: spawns one thread per rank per [`Cluster::run`], runs the
+/// SPMD closure on each, and gathers the per-rank results in rank
+/// order. The cluster owns one **persistent executor pool per rank**
+/// ([`crate::exec::WorkerPool`]): rank threads install their pool at
+/// the start of every run, so morsel workers park between operators
+/// *and* between runs, and are only joined when the cluster drops.
 pub struct Cluster {
     world: usize,
     shuffle_chunk_rows: usize,
     intra_op_threads: usize,
+    par_row_threshold: usize,
     fabric: FabricRef,
     sim: Option<Arc<SimFabric>>,
+    /// One long-lived morsel-worker pool per rank (lazy threads).
+    pools: Vec<Arc<crate::exec::WorkerPool>>,
 }
 
 impl Cluster {
@@ -149,12 +167,17 @@ impl Cluster {
                 cfg.world,
             ),
         };
+        let pools = (0..cfg.world)
+            .map(|_| Arc::new(crate::exec::WorkerPool::new()))
+            .collect();
         Ok(Cluster {
             world: cfg.world,
             shuffle_chunk_rows: cfg.shuffle_chunk_rows.max(1),
             intra_op_threads,
+            par_row_threshold: cfg.par_row_threshold.max(1),
             fabric,
             sim,
+            pools,
         })
     }
 
@@ -182,10 +205,15 @@ impl Cluster {
                     let fabric = Arc::clone(&self.fabric);
                     let chunk = self.shuffle_chunk_rows;
                     let intra = self.intra_op_threads;
+                    let threshold = self.par_row_threshold;
+                    let pool = Arc::clone(&self.pools[rank]);
                     s.spawn(move || {
                         // The rank thread's intra-op budget: local
-                        // kernels called below fan out over it.
+                        // kernels called below fan out over it, onto
+                        // this rank's long-lived worker pool.
                         crate::exec::set_intra_op_threads(intra);
+                        crate::exec::set_par_row_threshold(threshold);
+                        crate::exec::install_thread_pool(pool);
                         let mut ctx = RankCtx {
                             rank,
                             size: world,
@@ -229,6 +257,17 @@ impl Cluster {
     /// Total bytes posted to the fabric across all exchanges.
     pub fn bytes_sent(&self) -> u64 {
         self.fabric.bytes_sent()
+    }
+}
+
+impl Drop for Cluster {
+    /// Graceful executor shutdown: park-wake every rank's morsel
+    /// workers and join them. Rank threads are scoped per `run`, so no
+    /// job can still be in flight here.
+    fn drop(&mut self) {
+        for pool in &self.pools {
+            pool.shutdown();
+        }
     }
 }
 
@@ -286,5 +325,68 @@ mod tests {
         let r: Result<Vec<()>> =
             cluster.run(|_| Err(RylonError::invalid("boom")));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn rank_pools_persist_across_runs() {
+        let cfg = DistConfig::threads(2).with_intra_op_threads(3);
+        let cluster = Cluster::new(cfg).unwrap();
+        let job = |_ctx: &mut RankCtx| {
+            // Two back-to-back parallel operators on this rank, then
+            // report the rank pool's thread-generation counter.
+            let exec = crate::exec::current();
+            let a = crate::exec::for_each_morsel(1 << 18, exec, |m| m.len());
+            let b = crate::exec::for_each_morsel(1 << 18, exec, |m| m.len());
+            assert_eq!(a, b);
+            Ok(crate::exec::current_pool_spawned_threads())
+        };
+        let first = cluster.run(job).unwrap();
+        let second = cluster.run(job).unwrap();
+        assert!(first.iter().all(|&g| g >= 2), "workers were spawned");
+        // Same generation on the second run ⇒ the cluster-owned pools
+        // (and their worker threads) were reused, not respawned.
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn par_row_threshold_reaches_rank_threads() {
+        let cfg = DistConfig::threads(2)
+            .with_intra_op_threads(2)
+            .with_par_row_threshold(7);
+        let cluster = Cluster::new(cfg).unwrap();
+        let outs = cluster
+            .run(|_| Ok(crate::exec::par_row_threshold()))
+            .unwrap();
+        assert_eq!(outs, vec![7, 7]);
+    }
+
+    #[test]
+    fn rank_panic_maps_to_error_through_pool() {
+        // A panic inside a pooled morsel task resurfaces on the rank
+        // thread and is mapped to a job error — not a process abort.
+        let cfg = DistConfig::threads(2).with_intra_op_threads(2);
+        let cluster = Cluster::new(cfg).unwrap();
+        let r: Result<Vec<usize>> = cluster.run(|ctx| {
+            let rank = ctx.rank;
+            let exec = crate::exec::current();
+            let sums =
+                crate::exec::for_each_morsel(1 << 18, exec, |m| {
+                    if rank == 1 && m.index == 2 {
+                        panic!("poisoned morsel");
+                    }
+                    m.len()
+                });
+            Ok(sums.len())
+        });
+        assert!(r.is_err());
+        // The cluster (and its pools) remain serviceable afterwards.
+        let ok = cluster
+            .run(|_| {
+                let exec = crate::exec::current();
+                Ok(crate::exec::for_each_morsel(1 << 18, exec, |m| m.len())
+                    .len())
+            })
+            .unwrap();
+        assert_eq!(ok.len(), 2);
     }
 }

@@ -6,7 +6,10 @@
 //! Distributed Computing Environments For High Performance Data
 //! Engineering", Perera et al. 2023): inside one rank, local compute
 //! kernels split their row ranges into cache-sized **morsels** and fan
-//! them out over a scoped worker pool (std threads, no dependencies).
+//! them out over a **persistent per-rank worker pool** ([`WorkerPool`],
+//! std threads, no dependencies) that parks between operators, so
+//! back-to-back kernels reuse the same OS threads instead of respawning
+//! them per call.
 //!
 //! Two invariants every parallel kernel in this crate upholds:
 //!
@@ -20,26 +23,40 @@
 //! 2. **No oversubscription.** The thread budget is per rank thread
 //!    (thread-local), so `world × intra_op_threads` is bounded by the
 //!    machine: `dist::Cluster` resolves the `intra_op_threads = 0`
-//!    (auto) knob to `available cores / world`, and worker threads
-//!    themselves default to a serial budget, so nested kernels never
+//!    (auto) knob to `available cores / world`, and pool workers
+//!    themselves run under a serial budget, so nested kernels never
 //!    multiply.
 //!
 //! The knob is `DistConfig::intra_op_threads` for cluster runs, or
 //! [`set_intra_op_threads`] / [`with_intra_op_threads`] for local use;
-//! `1` reproduces the original single-threaded behaviour exactly.
+//! `1` reproduces the original single-threaded behaviour exactly. The
+//! `INTRA_OP_THREADS` env var overrides the serial *default* budget
+//! (CI uses it to exercise every parallel path); explicit setters and
+//! `DistConfig` still win.
 
 mod morsel;
+mod pool;
 
 use std::cell::Cell;
+use std::sync::OnceLock;
 
 pub use self::morsel::{
     fill_parallel, for_each_morsel, map_parallel, par_gather,
     run_partitions, split_even, split_morsels, Morsel, MORSEL_ROWS,
 };
 pub(crate) use self::morsel::SendPtr;
+// Executor plumbing for `dist::Cluster` and the reuse tests — not part
+// of the public API (the knobs above are; the pool is an internal).
+pub(crate) use self::pool::{
+    current_pool_spawned_threads, install_thread_pool, WorkerPool,
+};
 
-/// Kernels fall back to the serial path below this many rows — morsel
-/// startup is not worth it for tiny inputs.
+/// Default parallelism row threshold: kernels fall back to the serial
+/// path below this many rows — morsel startup is not worth it for tiny
+/// inputs. Override per thread with [`set_par_row_threshold`] /
+/// [`with_par_row_threshold`], per cluster with
+/// `DistConfig::par_row_threshold`, or in config via
+/// `[exec] par_row_threshold`.
 pub const PAR_ROW_THRESHOLD: usize = 4096;
 
 /// Immutable per-operation thread budget.
@@ -70,10 +87,29 @@ impl ExecContext {
     }
 }
 
+/// The process-wide default intra-op budget: `INTRA_OP_THREADS` from
+/// the environment (≥ 1), else `1` (serial — the paper's model). Read
+/// once; explicit setters always override it.
+pub fn default_intra_op_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("INTRA_OP_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&v| v >= 1)
+            .unwrap_or(1)
+    })
+}
+
 thread_local! {
     /// Per-thread intra-op budget. Rank threads get theirs from
-    /// `dist::Cluster::run`; everything else defaults to serial.
-    static CURRENT_THREADS: Cell<usize> = Cell::new(1);
+    /// `dist::Cluster::run`; everything else starts at the process
+    /// default (serial unless `INTRA_OP_THREADS` is set). Pool workers
+    /// explicitly pin themselves to serial.
+    static CURRENT_THREADS: Cell<usize> = Cell::new(default_intra_op_threads());
+
+    /// Per-thread parallelism row threshold (see [`PAR_ROW_THRESHOLD`]).
+    static ROW_THRESHOLD: Cell<usize> = const { Cell::new(PAR_ROW_THRESHOLD) };
 }
 
 /// The calling thread's current intra-op budget.
@@ -95,10 +131,31 @@ pub fn with_intra_op_threads<T>(threads: usize, f: impl FnOnce() -> T) -> T {
     out
 }
 
+/// The calling thread's parallelism row threshold.
+pub fn par_row_threshold() -> usize {
+    ROW_THRESHOLD.with(|c| c.get())
+}
+
+/// Set the calling thread's parallelism row threshold (clamped to ≥ 1
+/// so empty inputs never take the parallel path).
+pub fn set_par_row_threshold(rows: usize) {
+    ROW_THRESHOLD.with(|c| c.set(rows.max(1)));
+}
+
+/// Run `f` under a temporary parallelism row threshold, restoring the
+/// previous threshold afterwards — how benches/tests force the parallel
+/// path on small inputs.
+pub fn with_par_row_threshold<T>(rows: usize, f: impl FnOnce() -> T) -> T {
+    let prev = ROW_THRESHOLD.with(|c| c.replace(rows.max(1)));
+    let out = f();
+    ROW_THRESHOLD.with(|c| c.set(prev));
+    out
+}
+
 /// The effective budget for an `nrows`-row kernel: the thread-local
-/// budget, degraded to serial below [`PAR_ROW_THRESHOLD`].
+/// budget, degraded to serial below the thread's row threshold.
 pub fn parallelism_for(nrows: usize) -> ExecContext {
-    if nrows < PAR_ROW_THRESHOLD {
+    if nrows < par_row_threshold() {
         ExecContext::serial()
     } else {
         current()
@@ -107,7 +164,9 @@ pub fn parallelism_for(nrows: usize) -> ExecContext {
 
 /// Resolve a configured knob value: `0` = auto (available cores divided
 /// evenly over `world` rank threads, so the fabric's rank threads and
-/// the morsel workers together never oversubscribe the machine).
+/// the morsel workers together never oversubscribe the machine — the
+/// `INTRA_OP_THREADS` default-budget override deliberately does *not*
+/// apply here, or a leaked env var could break that bound).
 pub fn resolve_intra_op_threads(configured: usize, world: usize) -> usize {
     if configured > 0 {
         return configured;
@@ -123,29 +182,51 @@ mod tests {
     use super::*;
 
     #[test]
-    fn default_budget_is_serial() {
-        assert_eq!(current().threads(), 1);
-        assert!(!current().is_parallel());
+    fn default_budget_matches_env() {
+        // Serial unless the CI matrix exports INTRA_OP_THREADS.
+        assert_eq!(current().threads(), default_intra_op_threads());
+        assert_eq!(
+            current().is_parallel(),
+            default_intra_op_threads() > 1
+        );
     }
 
     #[test]
     fn scoped_budget_restores() {
         let inner = with_intra_op_threads(4, || current().threads());
         assert_eq!(inner, 4);
-        assert_eq!(current().threads(), 1);
+        assert_eq!(current().threads(), default_intra_op_threads());
     }
 
     #[test]
     fn zero_clamps_to_one() {
         set_intra_op_threads(0);
         assert_eq!(current().threads(), 1);
+        set_intra_op_threads(default_intra_op_threads());
     }
 
     #[test]
     fn threshold_degrades_small_inputs() {
         with_intra_op_threads(8, || {
             assert!(!parallelism_for(10).is_parallel());
-            assert!(parallelism_for(PAR_ROW_THRESHOLD).is_parallel());
+            assert!(parallelism_for(par_row_threshold()).is_parallel());
+        });
+    }
+
+    #[test]
+    fn threshold_knob_scopes_and_restores() {
+        let prev = par_row_threshold();
+        with_intra_op_threads(4, || {
+            with_par_row_threshold(8, || {
+                assert_eq!(par_row_threshold(), 8);
+                assert!(parallelism_for(8).is_parallel());
+                assert!(!parallelism_for(7).is_parallel());
+            });
+            assert_eq!(par_row_threshold(), prev);
+        });
+        // Zero clamps so empty inputs stay serial.
+        with_par_row_threshold(0, || {
+            assert!(!parallelism_for(0).is_parallel());
         });
     }
 
@@ -153,17 +234,36 @@ mod tests {
     fn auto_resolution_divides_cores() {
         let one_rank = resolve_intra_op_threads(0, 1);
         assert!(one_rank >= 1);
-        // Explicit values pass through; huge worlds degrade to serial.
+        // Explicit values pass through; huge worlds degrade to serial
+        // (the INTRA_OP_THREADS default never bypasses the division).
         assert_eq!(resolve_intra_op_threads(3, 128), 3);
         assert_eq!(resolve_intra_op_threads(0, 100_000), 1);
     }
 
     #[test]
     fn worker_threads_default_serial() {
-        // Nested kernels inside a morsel worker must not multiply.
+        // Nested kernels inside a pool worker must not multiply.
         with_intra_op_threads(4, || {
             let budgets = map_parallel(vec![(); 3], |_| current().threads());
             assert_eq!(budgets, vec![1, 1, 1]);
+        });
+    }
+
+    #[test]
+    fn back_to_back_operators_reuse_pool_threads() {
+        // The ROADMAP pool-respawn fix, observed through the public
+        // scoped API: two consecutive parallel operators on this thread
+        // leave the thread-generation counter unchanged.
+        with_intra_op_threads(3, || {
+            let exec = current();
+            let a = for_each_morsel(1 << 18, exec, |m| m.len());
+            let gen = current_pool_spawned_threads();
+            assert!(gen >= 2, "first parallel op must spawn workers");
+            let b = for_each_morsel(1 << 18, exec, |m| m.len());
+            assert_eq!(current_pool_spawned_threads(), gen);
+            assert_eq!(a, b);
+            let _ = run_partitions(3, |p| p);
+            assert_eq!(current_pool_spawned_threads(), gen);
         });
     }
 }

@@ -1,12 +1,12 @@
 //! The morsel scheduler: split a row range into cache-sized chunks,
-//! fan them out over scoped worker threads pulling from a shared atomic
-//! cursor, and reassemble results in morsel order so parallel output is
+//! fan them out over the calling thread's persistent worker pool
+//! ([`super::pool`]) pulling from a shared atomic cursor, and
+//! reassemble results in morsel order so parallel output is
 //! bit-identical to serial output.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
 
-use super::ExecContext;
+use super::{pool, ExecContext};
 
 /// Rows per morsel: small enough that a morsel's working set stays
 /// cache-resident, large enough to amortise scheduling.
@@ -94,8 +94,9 @@ impl<T> Clone for SendPtr<T> {
 
 impl<T> Copy for SendPtr<T> {}
 
-/// Morsel-driven fan-out: `threads` workers pull morsels off a shared
-/// cursor; results come back in morsel order (deterministic merge).
+/// Morsel-driven fan-out: up to `exec.threads()` pooled workers pull
+/// morsels off a shared cursor; results come back in morsel order
+/// (deterministic merge).
 pub fn for_each_morsel<R, F>(nrows: usize, exec: ExecContext, f: F) -> Vec<R>
 where
     R: Send,
@@ -106,33 +107,18 @@ where
     if !exec.is_parallel() || n <= 1 {
         return morsels.into_iter().map(f).collect();
     }
-    let cursor = AtomicUsize::new(0);
-    let workers = exec.threads().min(n);
     let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
     slots.resize_with(n, || None);
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                let cursor = &cursor;
-                let morsels = &morsels;
-                let f = &f;
-                s.spawn(move || {
-                    let mut done: Vec<(usize, R)> = Vec::new();
-                    loop {
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= morsels.len() {
-                            break;
-                        }
-                        done.push((i, f(morsels[i])));
-                    }
-                    done
-                })
-            })
-            .collect();
-        for h in handles {
-            for (i, r) in h.join().expect("morsel worker panicked") {
-                slots[i] = Some(r);
-            }
+    let slot_ptr = SendPtr(slots.as_mut_ptr());
+    let morsels = &morsels;
+    let f = &f;
+    pool::run_current(n, exec.threads(), &move |i| {
+        let r = f(morsels[i]);
+        // SAFETY: the pool hands each index to exactly one task, so
+        // slot i is written once, and the pool's completion barrier
+        // sequences the writes before the reads below.
+        unsafe {
+            *slot_ptr.0.add(i) = Some(r);
         }
     });
     slots
@@ -141,34 +127,57 @@ where
         .collect()
 }
 
-/// Run owned work items on one scoped thread each, preserving order.
-/// Callers keep the item count near the thread budget (merge levels,
-/// per-run sorts).
+/// Concurrency cap for the item-count-driven entry points
+/// ([`map_parallel`], [`run_partitions`]): the larger of the calling
+/// thread's budget and the machine's cores. Honours explicit budgets
+/// while keeping a huge item count from growing the (persistent,
+/// never-shrinking) pool past the hardware.
+fn local_concurrency_cap() -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    cores.max(super::current().threads())
+}
+
+/// Run owned work items concurrently on the pool (up to
+/// [`local_concurrency_cap`] at once), preserving item order in the
+/// results. Callers keep the item count near the thread budget (merge
+/// levels, per-run sorts).
 pub fn map_parallel<I, R, F>(items: Vec<I>, f: F) -> Vec<R>
 where
     I: Send,
     R: Send,
     F: Fn(I) -> R + Sync,
 {
-    if items.len() <= 1 {
+    let n = items.len();
+    if n <= 1 {
         return items.into_iter().map(f).collect();
     }
-    std::thread::scope(|s| {
-        let handles: Vec<_> = items
-            .into_iter()
-            .map(|item| {
-                let f = &f;
-                s.spawn(move || f(item))
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("parallel worker panicked"))
-            .collect()
-    })
+    let mut input: Vec<Option<I>> = items.into_iter().map(Some).collect();
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let in_ptr = SendPtr(input.as_mut_ptr());
+    let slot_ptr = SendPtr(slots.as_mut_ptr());
+    let f = &f;
+    pool::run_current(n, n.min(local_concurrency_cap()), &move |i| {
+        // SAFETY: each index is claimed by exactly one task (pool
+        // cursor), so item i is taken once and slot i written once; the
+        // pool's completion barrier sequences these against the caller.
+        let item = unsafe { (*in_ptr.0.add(i)).take().expect("item taken twice") };
+        let r = f(item);
+        unsafe {
+            *slot_ptr.0.add(i) = Some(r);
+        }
+    });
+    drop(input);
+    slots
+        .into_iter()
+        .map(|r| r.expect("map_parallel result missing"))
+        .collect()
 }
 
-/// One worker per partition id `0..nparts` — the radix-partitioned
+/// One task per partition id `0..nparts`, up to
+/// [`local_concurrency_cap`] running at once — the radix-partitioned
 /// builders (hash chains, grouping) where each worker owns a disjoint
 /// slice of the hash space.
 pub fn run_partitions<R, F>(nparts: usize, f: F) -> Vec<R>
@@ -179,18 +188,22 @@ where
     if nparts <= 1 {
         return (0..nparts).map(f).collect();
     }
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..nparts)
-            .map(|p| {
-                let f = &f;
-                s.spawn(move || f(p))
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("partition worker panicked"))
-            .collect()
-    })
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(nparts);
+    slots.resize_with(nparts, || None);
+    let slot_ptr = SendPtr(slots.as_mut_ptr());
+    let f = &f;
+    pool::run_current(nparts, nparts.min(local_concurrency_cap()), &move |p| {
+        let r = f(p);
+        // SAFETY: one task per partition id; writes are disjoint and
+        // sequenced before the reads by the pool's completion barrier.
+        unsafe {
+            *slot_ptr.0.add(p) = Some(r);
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("partition result missing"))
+        .collect()
 }
 
 /// Fill `out` by handing each worker the disjoint sub-slice for its
@@ -209,28 +222,17 @@ where
         return;
     }
     let morsels = split_morsels(n, exec.threads());
-    let cursor = AtomicUsize::new(0);
-    let workers = exec.threads().min(morsels.len());
     let ptr = SendPtr(out.as_mut_ptr());
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            let cursor = &cursor;
-            let morsels = &morsels;
-            let f = &f;
-            s.spawn(move || loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= morsels.len() {
-                    break;
-                }
-                let m = morsels[i];
-                // SAFETY: morsels are disjoint subranges of `out`, and
-                // `out` is not otherwise touched while the scope runs.
-                let slice = unsafe {
-                    std::slice::from_raw_parts_mut(ptr.0.add(m.start), m.len())
-                };
-                f(m, slice);
-            });
-        }
+    let morsels = &morsels;
+    let f = &f;
+    pool::run_current(morsels.len(), exec.threads(), &move |i| {
+        let m = morsels[i];
+        // SAFETY: morsels are disjoint subranges of `out`, and `out` is
+        // not otherwise touched until the pool's completion barrier.
+        let slice = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(m.start), m.len())
+        };
+        f(m, slice);
     });
 }
 
@@ -240,7 +242,7 @@ pub fn par_gather<T>(src: &[T], indices: &[usize], exec: ExecContext) -> Vec<T>
 where
     T: Copy + Default + Send + Sync,
 {
-    if !exec.is_parallel() || indices.len() < super::PAR_ROW_THRESHOLD {
+    if !exec.is_parallel() || indices.len() < super::par_row_threshold() {
         return indices.iter().map(|&i| src[i]).collect();
     }
     let mut out = vec![T::default(); indices.len()];

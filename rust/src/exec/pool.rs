@@ -1,0 +1,422 @@
+//! The persistent per-rank worker pool behind every scoped parallel
+//! API in [`crate::exec`].
+//!
+//! PR 1's scoped pool spawned fresh `std::thread::scope` workers on
+//! every operator call — fine at 64Ki-row morsels, measurable on tiny
+//! ops and antithetical to the long-lived executor of "Supercharging
+//! Distributed Computing Environments For High Performance Data
+//! Engineering" (Perera et al. 2023). This module keeps one
+//! [`WorkerPool`] alive per rank thread (installed by
+//! `dist::Cluster::run`) or lazily per calling thread for local use.
+//! Workers are spawned on first demand, **parked between operators**,
+//! and woken by job submission, so back-to-back operators reuse the
+//! same OS threads.
+//!
+//! Contract with the scoped callers:
+//!
+//! * A job is `ntasks` indexed closures `task(0..ntasks)` pulled off a
+//!   shared atomic cursor by at most `concurrency` workers. The caller
+//!   blocks until every task finished, so `task` may borrow stack data
+//!   (the `'static` transmute below is justified by that barrier).
+//! * Workers run tasks under a **serial** intra-op budget
+//!   ([`crate::exec::set_intra_op_threads`]`(1)`), so nested kernels
+//!   never multiply — identical to the scoped pool's invariant.
+//! * A panicking task poisons nothing: the panic payload is captured,
+//!   remaining tasks still drain, and the payload is re-raised on the
+//!   **calling** thread once the job completes (`dist::Cluster` then
+//!   maps that rank panic to an error). The worker survives for the
+//!   next job.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A borrowed task smuggled across threads as a raw pointer (raw so a
+/// worker still holding its `Arc<Job>` after the job completed keeps
+/// no dangling *reference*, only a pointer it will never dereference).
+/// Safety: the submitting caller blocks in [`WorkerPool::run`] until
+/// the job's last task completed, and workers only dereference while
+/// tasks remain unclaimed, so every dereference sees a live borrow.
+#[derive(Clone, Copy)]
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+/// One in-flight job: an indexed task set with a claim cursor and a
+/// completion latch.
+struct Job {
+    task: TaskRef,
+    ntasks: usize,
+    cursor: AtomicUsize,
+    done: Mutex<JobDone>,
+    done_cv: Condvar,
+}
+
+struct JobDone {
+    pending: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl Job {
+    /// Pull task indices off the cursor until exhausted, recording
+    /// completions (and at most one panic payload) on the latch.
+    fn work(&self) {
+        loop {
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= self.ntasks {
+                return;
+            }
+            // Re-pin the serial worker state before every task: a
+            // previous task may have panicked out of a `with_*` scope
+            // without restoring the thread-locals, and workers survive
+            // panics, so a one-shot pin at thread start is not enough.
+            super::set_intra_op_threads(1);
+            super::set_par_row_threshold(super::PAR_ROW_THRESHOLD);
+            // SAFETY: tasks are only claimed while the submitting
+            // caller blocks in `WorkerPool::run`, so the pointee is a
+            // live borrow for the duration of this call.
+            let task = unsafe { &*self.task.0 };
+            let result = catch_unwind(AssertUnwindSafe(|| task(i)));
+            let mut d = self.done.lock().expect("job latch poisoned");
+            d.pending -= 1;
+            if let Err(payload) = result {
+                d.panic.get_or_insert(payload);
+            }
+            if d.pending == 0 {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.cursor.load(Ordering::Relaxed) >= self.ntasks
+    }
+}
+
+/// A job queued on the pool plus how many more workers may join it.
+struct QueuedJob {
+    job: Arc<Job>,
+    permits: usize,
+}
+
+struct PoolState {
+    queue: Vec<QueuedJob>,
+    handles: Vec<JoinHandle<()>>,
+    /// Total worker threads ever spawned — the thread-generation
+    /// counter: unchanged between two operators ⇔ threads were reused.
+    spawned: usize,
+    shutting_down: bool,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+/// A persistent worker pool. Workers spawn lazily up to the largest
+/// concurrency any job asked for, park on a condvar between jobs, and
+/// exit on [`WorkerPool::shutdown`] (also called on drop).
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkerPool {
+    pub fn new() -> WorkerPool {
+        WorkerPool {
+            inner: Arc::new(PoolInner {
+                state: Mutex::new(PoolState {
+                    queue: Vec::new(),
+                    handles: Vec::new(),
+                    spawned: 0,
+                    shutting_down: false,
+                }),
+                work_cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Run `task(0) … task(ntasks-1)` on up to `concurrency` pooled
+    /// workers; returns when all tasks completed. Serial (inline) when
+    /// the job cannot use a second thread. Re-raises the first task
+    /// panic on the calling thread.
+    pub fn run(&self, ntasks: usize, concurrency: usize, task: &(dyn Fn(usize) + Sync)) {
+        if ntasks == 0 {
+            return;
+        }
+        if ntasks == 1 || concurrency <= 1 {
+            for i in 0..ntasks {
+                task(i);
+            }
+            return;
+        }
+        let workers = concurrency.min(ntasks);
+        // The borrow's lifetime is erased on the way into the raw
+        // pointer (nothing keeps the transmuted reference); see
+        // `TaskRef` for why every dereference stays in-lifetime.
+        let task_ptr: *const (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                &'static (dyn Fn(usize) + Sync),
+            >(task)
+        };
+        let job = Arc::new(Job {
+            task: TaskRef(task_ptr),
+            ntasks,
+            cursor: AtomicUsize::new(0),
+            done: Mutex::new(JobDone {
+                pending: ntasks,
+                panic: None,
+            }),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut st = self.inner.state.lock().expect("pool state poisoned");
+            if st.shutting_down {
+                // A shut-down pool degrades to inline execution rather
+                // than stranding the job (only reachable when a caller
+                // outlives its Cluster — out of contract but safe).
+                drop(st);
+                for i in 0..ntasks {
+                    task(i);
+                }
+                return;
+            }
+            while st.spawned < workers {
+                st.spawned += 1;
+                let inner = Arc::clone(&self.inner);
+                let handle = std::thread::spawn(move || worker_loop(inner));
+                st.handles.push(handle);
+            }
+            st.queue.push(QueuedJob {
+                job: Arc::clone(&job),
+                permits: workers,
+            });
+        }
+        self.inner.work_cv.notify_all();
+
+        // Block until the last task completed, then unqueue and surface
+        // any panic on this (the submitting) thread.
+        let payload = {
+            let mut d = job.done.lock().expect("job latch poisoned");
+            while d.pending > 0 {
+                d = job.done_cv.wait(d).expect("job latch poisoned");
+            }
+            d.panic.take()
+        };
+        {
+            let mut st = self.inner.state.lock().expect("pool state poisoned");
+            st.queue.retain(|qj| !Arc::ptr_eq(&qj.job, &job));
+        }
+        if let Some(payload) = payload {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Total worker threads ever spawned by this pool (the
+    /// thread-generation counter — stable across back-to-back
+    /// operators when threads are being reused).
+    pub fn spawned_threads(&self) -> usize {
+        self.inner.state.lock().expect("pool state poisoned").spawned
+    }
+
+    /// Signal workers to exit once the queue drains and join them.
+    /// Idempotent; also invoked on drop.
+    pub fn shutdown(&self) {
+        let handles = {
+            let mut st = self.inner.state.lock().expect("pool state poisoned");
+            st.shutting_down = true;
+            std::mem::take(&mut st.handles)
+        };
+        self.inner.work_cv.notify_all();
+        for h in handles {
+            // A worker that panicked outside a task already surfaced
+            // the failure via the job latch; ignore its join result.
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Park on the work condvar; claim a permit on any queued job with
+/// unclaimed tasks; drain it; repeat. Exit once shutdown is signalled
+/// and no claimable work remains (in-flight jobs always drain first).
+fn worker_loop(inner: Arc<PoolInner>) {
+    // Nested kernels on a worker stay serial — the oversubscription
+    // invariant of the execution model (overrides any env default).
+    super::set_intra_op_threads(1);
+    loop {
+        let job = {
+            let mut st = inner.state.lock().expect("pool state poisoned");
+            loop {
+                if let Some(qj) = st
+                    .queue
+                    .iter_mut()
+                    .find(|qj| qj.permits > 0 && !qj.job.exhausted())
+                {
+                    qj.permits -= 1;
+                    break Arc::clone(&qj.job);
+                }
+                if st.shutting_down {
+                    return;
+                }
+                st = inner.work_cv.wait(st).expect("pool state poisoned");
+            }
+        };
+        job.work();
+    }
+}
+
+thread_local! {
+    /// The calling thread's executor. Rank threads get theirs installed
+    /// by `dist::Cluster::run` (one pool per rank, owned by the
+    /// `Cluster`); other threads lazily create a private pool on first
+    /// parallel submission, shut down when the thread exits.
+    static THREAD_POOL: RefCell<Option<Arc<WorkerPool>>> = const { RefCell::new(None) };
+}
+
+/// Install `pool` as the calling thread's executor (used by
+/// `dist::Cluster::run` so all ranks share the cluster's long-lived
+/// pools). Replaces any previously installed pool for this thread.
+pub fn install_thread_pool(pool: Arc<WorkerPool>) {
+    THREAD_POOL.with(|p| *p.borrow_mut() = Some(pool));
+}
+
+/// Submit a job to the calling thread's executor, creating a private
+/// persistent pool on first use.
+pub(crate) fn run_current(
+    ntasks: usize,
+    concurrency: usize,
+    task: &(dyn Fn(usize) + Sync),
+) {
+    if ntasks == 0 {
+        return;
+    }
+    if ntasks == 1 || concurrency <= 1 {
+        for i in 0..ntasks {
+            task(i);
+        }
+        return;
+    }
+    let pool = THREAD_POOL.with(|p| {
+        let mut slot = p.borrow_mut();
+        Arc::clone(slot.get_or_insert_with(|| Arc::new(WorkerPool::new())))
+    });
+    pool.run(ntasks, concurrency, task);
+}
+
+/// Thread-generation counter of the calling thread's executor (see
+/// [`WorkerPool::spawned_threads`]).
+pub fn current_pool_spawned_threads() -> usize {
+    THREAD_POOL.with(|p| {
+        p.borrow()
+            .as_ref()
+            .map(|pool| pool.spawned_threads())
+            .unwrap_or(0)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_all_tasks_once() {
+        let pool = WorkerPool::new();
+        let hits: Vec<AtomicUsize> =
+            (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(100, 4, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(pool.spawned_threads(), 4);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn reuses_workers_across_jobs() {
+        // The pool-respawn fix: two back-to-back parallel operators
+        // must run on the same worker threads (generation unchanged).
+        let pool = WorkerPool::new();
+        pool.run(16, 3, &|_| {});
+        let gen_after_first = pool.spawned_threads();
+        pool.run(16, 3, &|_| {});
+        pool.run(16, 2, &|_| {});
+        assert_eq!(pool.spawned_threads(), gen_after_first);
+        assert_eq!(gen_after_first, 3);
+        // A wider job grows the pool, narrower jobs never shrink it.
+        pool.run(16, 5, &|_| {});
+        assert_eq!(pool.spawned_threads(), 5);
+    }
+
+    #[test]
+    fn serial_jobs_stay_inline() {
+        let pool = WorkerPool::new();
+        pool.run(8, 1, &|_| {});
+        pool.run(1, 8, &|_| {});
+        pool.run(0, 8, &|_| {});
+        assert_eq!(pool.spawned_threads(), 0);
+    }
+
+    #[test]
+    fn task_panic_resurfaces_on_caller_and_pool_survives() {
+        let pool = WorkerPool::new();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, 2, &|i| {
+                if i == 3 {
+                    panic!("task 3 exploded");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // The pool is still serviceable after a task panic.
+        let count = AtomicUsize::new(0);
+        pool.run(8, 2, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn workers_run_serial_budget() {
+        let pool = WorkerPool::new();
+        let budgets: Vec<AtomicUsize> =
+            (0..4).map(|_| AtomicUsize::new(0)).collect();
+        crate::exec::with_intra_op_threads(8, || {
+            pool.run(4, 4, &|i| {
+                budgets[i]
+                    .store(crate::exec::current().threads(), Ordering::Relaxed);
+            });
+        });
+        assert!(budgets.iter().all(|b| b.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_drops_clean() {
+        let pool = WorkerPool::new();
+        pool.run(4, 2, &|_| {});
+        pool.shutdown();
+        pool.shutdown();
+        // Post-shutdown jobs degrade to inline execution.
+        let count = AtomicUsize::new(0);
+        pool.run(4, 2, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 4);
+        assert_eq!(pool.spawned_threads(), 2);
+    }
+}

@@ -14,6 +14,7 @@ use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use crate::error::{Result, RylonError};
+use crate::exec;
 use crate::net::wire::{deserialize_table, serialize_table};
 use crate::table::Table;
 
@@ -113,13 +114,37 @@ pub fn read_ryf_group(
     deserialize_table(&buf)
 }
 
-/// Read the whole file.
+/// Fetch and deserialise `metas` row groups under the calling thread's
+/// intra-op budget (each worker opens its own file handle; groups come
+/// back in `metas` order, so the concatenated result is bit-identical
+/// to a serial read at any thread count).
+fn read_groups_parallel(
+    path: &Path,
+    metas: &[GroupMeta],
+) -> Result<Vec<Table>> {
+    let total_rows: u64 = metas.iter().map(|m| m.rows).sum();
+    let exec = exec::parallelism_for(total_rows as usize);
+    if !exec.is_parallel() || metas.len() <= 1 {
+        return metas.iter().map(|m| read_ryf_group(path, m)).collect();
+    }
+    let chunks = exec::split_even(metas.len(), exec.threads());
+    let parts: Vec<Result<Vec<Table>>> = exec::map_parallel(chunks, |c| {
+        metas[c.range()]
+            .iter()
+            .map(|m| read_ryf_group(path, m))
+            .collect()
+    });
+    let mut out = Vec::with_capacity(metas.len());
+    for p in parts {
+        out.extend(p?);
+    }
+    Ok(out)
+}
+
+/// Read the whole file (row groups fetched morsel-parallel).
 pub fn read_ryf(path: impl AsRef<Path>) -> Result<Table> {
     let metas = read_ryf_footer(&path)?;
-    let mut parts = Vec::with_capacity(metas.len());
-    for m in &metas {
-        parts.push(read_ryf_group(&path, m)?);
-    }
+    let parts = read_groups_parallel(path.as_ref(), &metas)?;
     let schema = parts
         .first()
         .map(|t| t.schema().clone())
@@ -128,7 +153,7 @@ pub fn read_ryf(path: impl AsRef<Path>) -> Result<Table> {
 }
 
 /// Read this rank's share of row groups (block distribution over
-/// groups) — the distributed ingest path.
+/// groups, fetched morsel-parallel) — the distributed ingest path.
 pub fn read_ryf_partition(
     path: impl AsRef<Path>,
     rank: usize,
@@ -138,26 +163,24 @@ pub fn read_ryf_partition(
         return Err(RylonError::invalid("bad rank/world"));
     }
     let metas = read_ryf_footer(&path)?;
-    let mut parts = Vec::new();
-    let mut schema = None;
-    for (g, m) in metas.iter().enumerate() {
-        let t = if g % world == rank {
-            read_ryf_group(&path, m)?
-        } else if schema.is_none() {
-            // Read the first group only for its schema.
-            let t = read_ryf_group(&path, m)?;
-            schema = Some(t.schema().clone());
-            continue;
-        } else {
-            continue;
-        };
-        if schema.is_none() {
-            schema = Some(t.schema().clone());
+    let mine: Vec<GroupMeta> = metas
+        .iter()
+        .enumerate()
+        .filter(|(g, _)| g % world == rank)
+        .map(|(_, m)| *m)
+        .collect();
+    let parts = read_groups_parallel(path.as_ref(), &mine)?;
+    let schema = match parts.first() {
+        Some(t) => t.schema().clone(),
+        None => {
+            // This rank owns no groups: read the first group only for
+            // its schema (an empty result still needs one).
+            let first = metas
+                .first()
+                .ok_or_else(|| RylonError::parse("ryf: empty file"))?;
+            read_ryf_group(&path, first)?.schema().clone()
         }
-        parts.push(t);
-    }
-    let schema = schema
-        .ok_or_else(|| RylonError::parse("ryf: empty file"))?;
+    };
     Table::concat_all(&schema, &parts)
 }
 
@@ -241,6 +264,36 @@ mod tests {
         let metas = read_ryf_footer(&path).unwrap();
         let g2 = read_ryf_group(&path, &metas[2]).unwrap();
         assert_eq!(g2.column(0).i64_values()[0], 60);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn parallel_read_is_bit_identical() {
+        let path = tmp("par");
+        let table = t(5000);
+        write_ryf(&table, &path, 256).unwrap(); // 20 groups
+        let serial =
+            crate::exec::with_intra_op_threads(1, || read_ryf(&path).unwrap());
+        assert_eq!(serial, table);
+        let part_serial = crate::exec::with_intra_op_threads(1, || {
+            read_ryf_partition(&path, 1, 3).unwrap()
+        });
+        for threads in [2, 4, 8] {
+            crate::exec::with_intra_op_threads(threads, || {
+                crate::exec::with_par_row_threshold(1, || {
+                    assert_eq!(
+                        read_ryf(&path).unwrap(),
+                        serial,
+                        "ryf read diverged at {threads} threads"
+                    );
+                    assert_eq!(
+                        read_ryf_partition(&path, 1, 3).unwrap(),
+                        part_serial,
+                        "ryf partition read diverged at {threads} threads"
+                    );
+                })
+            });
+        }
         std::fs::remove_file(&path).ok();
     }
 

@@ -48,6 +48,9 @@ GLOBAL FLAGS
   --config FILE.toml    load defaults from a config file
   --intra-threads N     morsel workers per rank for local kernels
                         (0 = auto: cores/world; 1 = serial ranks)
+  --par-threshold N     rows below which kernels stay serial
+                        (default 4096; lower it to force the parallel
+                        paths on small inputs)
 ";
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -125,6 +128,8 @@ fn make_cluster(
         shuffle_chunk_rows: cfg.shuffle_chunk_rows,
         intra_op_threads: args
             .usize_or("intra-threads", cfg.intra_op_threads),
+        par_row_threshold: args
+            .usize_or("par-threshold", cfg.par_row_threshold),
     })
 }
 
@@ -445,6 +450,17 @@ fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv)?;
     let cfg = load_config(&args)?;
+    // Local (single-process) work — CSV/RYF ingest, local SQL, gather
+    // paths in gen/inspect — runs on the main thread: give it the same
+    // executor budget a one-rank cluster would get. Cluster commands
+    // re-resolve per rank in `make_cluster`.
+    rylon::exec::set_intra_op_threads(rylon::exec::resolve_intra_op_threads(
+        args.usize_or("intra-threads", cfg.intra_op_threads),
+        1,
+    ));
+    rylon::exec::set_par_row_threshold(
+        args.usize_or("par-threshold", cfg.par_row_threshold),
+    );
     match args.cmd.as_str() {
         "gen" => cmd_gen(&args),
         "inspect" => cmd_inspect(&args),

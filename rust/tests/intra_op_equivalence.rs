@@ -105,7 +105,9 @@ fn scenarios() -> Vec<(&'static str, Table)> {
 }
 
 fn assert_equivalent<F: Fn() -> Table>(label: &str, f: F) {
-    let serial = f();
+    // An explicit serial budget, so the reference stays serial even
+    // under the CI matrix's INTRA_OP_THREADS override.
+    let serial = exec::with_intra_op_threads(1, &f);
     for &t in &THREADS {
         let par = exec::with_intra_op_threads(t, &f);
         assert_eq!(par, serial, "{label} diverged at {t} threads");
@@ -194,6 +196,253 @@ fn orderby_bit_identical() {
 }
 
 #[test]
+fn gather_nullable_string_bit_identical() {
+    use rylon::compute::filter::{take_column_parallel, take_parallel};
+    use rylon::exec::ExecContext;
+
+    let n = 20_000usize;
+    let mut rng = Xoshiro256::new(77);
+    let columns: Vec<(&str, Column)> = vec![
+        (
+            "null_heavy_i64",
+            Column::from_opt_i64(
+                (0..n)
+                    .map(|i| if i % 3 == 0 { None } else { Some(i as i64) })
+                    .collect(),
+            ),
+        ),
+        (
+            "null_heavy_f64",
+            Column::from_opt_f64(
+                (0..n)
+                    .map(|i| {
+                        if i % 5 == 0 {
+                            None
+                        } else {
+                            Some(i as f64 * 0.25 - 100.0)
+                        }
+                    })
+                    .collect(),
+            ),
+        ),
+        ("all_null", Column::from_opt_i64(vec![None; n])),
+        (
+            "opt_bool",
+            Column::from_opt_bool(
+                (0..n)
+                    .map(|i| match i % 4 {
+                        0 => None,
+                        1 => Some(true),
+                        _ => Some(false),
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "opt_str",
+            Column::from_opt_str(
+                &(0..n)
+                    .map(|i| match i % 6 {
+                        0 => None,
+                        1 => Some(String::new()), // empty string ≠ null
+                        2 => Some(format!("日本語-{i}")),
+                        _ => Some(format!("value-{i}")),
+                    })
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+        (
+            "dense_str",
+            Column::from_str(
+                &(0..n).map(|i| format!("s{i}")).collect::<Vec<_>>(),
+            ),
+        ),
+    ];
+    let index_sets: Vec<(&str, Vec<usize>)> = vec![
+        (
+            "reversed_even",
+            (0..n).rev().filter(|i| i % 2 == 0).collect(),
+        ),
+        (
+            "random_repeats",
+            (0..n)
+                .map(|_| rng.next_below(n as u64) as usize)
+                .collect(),
+        ),
+        ("dense_prefix", (0..n / 2).collect()),
+    ];
+    for (cname, col) in &columns {
+        for (iname, indices) in &index_sets {
+            let serial = col.take(indices);
+            for threads in [1usize, 2, 4, 8] {
+                let par = take_column_parallel(
+                    col,
+                    indices,
+                    ExecContext::new(threads),
+                );
+                assert_eq!(
+                    par, serial,
+                    "gather {cname}/{iname} diverged at {threads} threads"
+                );
+            }
+        }
+    }
+    // Whole-table parallel take over the same column mix.
+    let table = Table::from_columns(columns).unwrap();
+    let indices: Vec<usize> = (0..n).rev().filter(|i| i % 3 != 1).collect();
+    let serial = table.take(&indices);
+    for threads in [1usize, 2, 4, 8] {
+        let par = take_parallel(&table, &indices, ExecContext::new(threads));
+        assert_eq!(par, serial, "table take diverged at {threads} threads");
+    }
+    // Small inputs with the threshold knob forced down still match.
+    exec::with_par_row_threshold(1, || {
+        let small: Vec<usize> = vec![3, 1, 2, 1, 0, 4, 4];
+        for (cname, col) in
+            [("opt", Column::from_opt_i64(vec![Some(1), None, Some(3), None, Some(5)])),
+             ("str", Column::from_opt_str(&[Some("a"), None, Some(""), Some("日本"), Some("e")]))]
+        {
+            let serial = col.take(&small);
+            let par =
+                take_column_parallel(&col, &small, ExecContext::new(4));
+            assert_eq!(par, serial, "forced small gather diverged ({cname})");
+        }
+    });
+}
+
+#[test]
+fn csv_parse_parallel_vs_serial_roundtrip() {
+    use rylon::io::csv::{read_csv_str, write_csv_to, CsvOptions};
+    use rylon::types::Schema;
+
+    // Quoted / multibyte / ragged-null fixture, written by our own
+    // writer so quoting is exercised on both sides.
+    let n = 8_000usize;
+    let t = Table::from_columns(vec![
+        (
+            "k",
+            Column::from_opt_i64(
+                (0..n)
+                    .map(|i| {
+                        if i % 7 == 0 {
+                            None
+                        } else {
+                            Some(i as i64 % 97)
+                        }
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "v",
+            Column::from_opt_f64(
+                (0..n)
+                    .map(|i| {
+                        if i % 11 == 0 {
+                            None
+                        } else {
+                            Some(i as f64 * 0.5 - 1.25)
+                        }
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "s",
+            Column::from_str(
+                &(0..n)
+                    .map(|i| match i % 5 {
+                        0 => format!("comma,{i}"),
+                        1 => format!("quote\"{i}"),
+                        2 => format!("日本語{i}"),
+                        3 => format!("line\nbreak{i}"),
+                        _ => format!("plain{i}"),
+                    })
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+    .unwrap();
+    let mut buf = Vec::new();
+    write_csv_to(&t, &mut buf, &CsvOptions::default()).unwrap();
+    let csv = String::from_utf8(buf).unwrap();
+    let opts = CsvOptions::default()
+        .with_schema(Schema::parse("k:i64,v:f64,s:str").unwrap());
+    let serial = exec::with_intra_op_threads(1, || {
+        read_csv_str(&csv, &opts).unwrap()
+    });
+    assert_eq!(serial, t, "csv roundtrip must reproduce the table");
+    for threads in [1usize, 2, 4, 8] {
+        let par = exec::with_intra_op_threads(threads, || {
+            read_csv_str(&csv, &opts).unwrap()
+        });
+        assert_eq!(par, serial, "csv parse diverged at {threads} threads");
+    }
+    // Inferred schema (no explicit types) must also be thread-invariant.
+    let serial_inferred = exec::with_intra_op_threads(1, || {
+        read_csv_str(&csv, &CsvOptions::default()).unwrap()
+    });
+    for threads in [2usize, 4, 8] {
+        let par = exec::with_intra_op_threads(threads, || {
+            read_csv_str(&csv, &CsvOptions::default()).unwrap()
+        });
+        assert_eq!(
+            par, serial_inferred,
+            "inferred csv parse diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn ryf_read_parallel_vs_serial_roundtrip() {
+    use rylon::io::ryf::{read_ryf, read_ryf_partition, write_ryf};
+
+    let n = 10_000usize;
+    let t = Table::from_columns(vec![
+        ("id", Column::from_i64((0..n as i64).collect())),
+        (
+            "s",
+            Column::from_opt_str(
+                &(0..n)
+                    .map(|i| {
+                        if i % 9 == 0 {
+                            None
+                        } else {
+                            Some(format!("行{i}"))
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+    .unwrap();
+    let path =
+        std::env::temp_dir().join("rylon_intra_op_equivalence_ingest.ryf");
+    write_ryf(&t, &path, 512).unwrap(); // 20 row groups
+    let serial =
+        exec::with_intra_op_threads(1, || read_ryf(&path).unwrap());
+    assert_eq!(serial, t);
+    let part_serial = exec::with_intra_op_threads(1, || {
+        read_ryf_partition(&path, 2, 3).unwrap()
+    });
+    for threads in [1usize, 2, 4, 8] {
+        exec::with_intra_op_threads(threads, || {
+            assert_eq!(
+                read_ryf(&path).unwrap(),
+                serial,
+                "ryf read diverged at {threads} threads"
+            );
+            assert_eq!(
+                read_ryf_partition(&path, 2, 3).unwrap(),
+                part_serial,
+                "ryf partition read diverged at {threads} threads"
+            );
+        });
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn build_parallel_chains_identical_buckets() {
     use rylon::compute::hash::{hash_columns, HashChains};
     let t = random_table(55, 40_000, 123, 4);
@@ -249,7 +498,7 @@ fn pipeline_end_to_end_bit_identical() {
         .unwrap();
         orderby(&grouped, &[SortKey::desc("sum_d1")]).unwrap()
     };
-    let serial = run();
+    let serial = exec::with_intra_op_threads(1, run);
     for &t in &THREADS {
         let par = exec::with_intra_op_threads(t, run);
         assert_eq!(par, serial, "pipeline diverged at {t} threads");
