@@ -1,18 +1,26 @@
-//! Ingest (morsel-parallel parse) scaling: CSV and RYF reads on one
-//! rank at 1/2/4/8 worker threads, over a table with nullable and
-//! string columns so the full gather/builder surface is exercised.
-//! Verifies the parallel parse is bit-identical to serial before any
-//! timing counts, prints the rows/sec grid, and emits
+//! Ingest (streaming morsel-parallel parse) scaling: CSV and RYF reads
+//! on one rank at 1/2/4/8 worker threads, over a table with nullable
+//! and string columns so the full gather/builder surface is exercised,
+//! plus a **chunk-size sweep** (256 KiB → 16 MiB) of the streaming CSV
+//! reader with **peak-RSS** alongside throughput — the bounded-memory
+//! claim made measurable: streamed ingest peaks near
+//! O(chunk × workers) + parsed table, while the whole-buffer reference
+//! additionally holds the entire raw file.
+//!
+//! Verifies the parallel/streamed parses are bit-identical to serial
+//! before any timing counts, prints the rows/sec grid, and emits
 //! `BENCH_ingest.json` (mirror of `intra_op_scaling.rs` →
 //! `BENCH_intra_op.json`).
 //!
 //! Env overrides: INGEST_ROWS (default 500_000), INGEST_SAMPLES,
 //! INGEST_MAX_THREADS.
 
-use rylon::bench_harness::{measure, BenchOpts, Report};
+use rylon::bench_harness::{
+    measure, peak_rss_bytes, reset_peak_rss, BenchOpts, Report,
+};
 use rylon::column::Column;
 use rylon::exec;
-use rylon::io::csv::{read_csv, write_csv, CsvOptions};
+use rylon::io::csv::{read_csv, read_csv_str, write_csv, CsvOptions};
 use rylon::io::ryf::{read_ryf, write_ryf};
 use rylon::table::Table;
 use rylon::util::json::Json;
@@ -61,6 +69,20 @@ fn make_table(rows: usize) -> Table {
     .unwrap()
 }
 
+/// Measure `run` under `opts`, also sampling the phase's peak RSS
+/// (watermark reset before the timed runs where the kernel allows).
+fn measure_with_rss(
+    opts: BenchOpts,
+    run: &dyn Fn() -> Table,
+) -> (f64, f64) {
+    reset_peak_rss();
+    let stats = measure(opts, || {
+        std::hint::black_box(run().num_rows());
+    });
+    let rss = peak_rss_bytes().unwrap_or(0) as f64;
+    (stats.median, rss)
+}
+
 fn main() {
     let rows = env_usize("INGEST_ROWS", 500_000);
     let max_threads = env_usize("INGEST_MAX_THREADS", 8);
@@ -86,6 +108,9 @@ fn main() {
     write_csv(&table, &csv_path, &CsvOptions::default()).expect("write csv");
     // Enough row groups that an 8-way read never starves.
     write_ryf(&table, &ryf_path, (rows / 64).max(1)).expect("write ryf");
+    let file_bytes = std::fs::metadata(&csv_path)
+        .map(|m| m.len())
+        .unwrap_or(0);
 
     type Loader = Box<dyn Fn() -> Table>;
     let workloads: Vec<(&str, Loader)> = vec![
@@ -100,9 +125,9 @@ fn main() {
     ];
 
     let mut report = Report::new(&format!(
-        "Morsel-parallel ingest scaling, {rows} rows ({cores} cores)"
+        "Streaming morsel-parallel ingest scaling, {rows} rows ({cores} cores)"
     ));
-    let mut samples: Vec<(String, usize, f64, f64, f64)> = Vec::new();
+    let mut results: Vec<Json> = Vec::new();
 
     for (name, run) in &workloads {
         // Serial reference — every thread count must reproduce it
@@ -119,37 +144,134 @@ fn main() {
                 out, reference,
                 "{name} at {t} threads diverged from serial"
             );
-            let stats = exec::with_intra_op_threads(t, || {
-                measure(opts, || {
-                    std::hint::black_box(run().num_rows());
-                })
+            let (median, rss) = exec::with_intra_op_threads(t, || {
+                measure_with_rss(opts, run)
             });
             if t == 1 {
-                base_seconds = stats.median;
+                base_seconds = median;
             }
-            let rows_per_sec = rows as f64 / stats.median.max(1e-12);
-            let speedup = base_seconds / stats.median.max(1e-12);
+            let rows_per_sec = rows as f64 / median.max(1e-12);
+            let speedup = base_seconds / median.max(1e-12);
             report.add_with(
                 name,
                 t as f64,
-                stats.median,
+                median,
                 vec![
                     ("rows_per_sec".to_string(), rows_per_sec),
                     ("speedup_vs_1t".to_string(), speedup),
+                    ("peak_rss_bytes".to_string(), rss),
                 ],
             );
-            samples.push((
-                name.to_string(),
-                t,
-                stats.median,
+            results.push(Json::obj(vec![
+                ("op", Json::str(name.to_string())),
+                ("threads", Json::num(t as f64)),
+                ("seconds", Json::num(median)),
+                ("rows_per_sec", Json::num(rows_per_sec)),
+                ("speedup_vs_1t", Json::num(speedup)),
+                ("peak_rss_bytes", Json::num(rss)),
+            ]));
+            println!(
+                "  {:>10} t={t}: {:>10.4}s  {:>14.0} rows/s  ({:.2}x vs 1t)  rss {:>6.1} MiB",
+                name,
+                median,
                 rows_per_sec,
                 speedup,
-            ));
-            println!(
-                "  {:>10} t={t}: {:>10.4}s  {:>14.0} rows/s  ({:.2}x vs 1t)",
-                name, stats.median, rows_per_sec, speedup
+                rss / (1024.0 * 1024.0)
             );
         }
+    }
+
+    // Chunk-size sweep: the streaming reader at 256 KiB → 16 MiB
+    // chunks, plus the whole-buffer reference, all at the same thread
+    // budget — peak RSS alongside throughput makes the memory bound
+    // visible (streamed raw text is O(chunk), whole-buffer is O(file)).
+    let sweep_threads = *threads_sweep.last().unwrap_or(&1);
+    let reference = exec::with_intra_op_threads(1, || {
+        read_csv(&csv_path, &CsvOptions::default()).unwrap()
+    });
+    println!(
+        "chunk sweep ({} B file, t={sweep_threads}):",
+        file_bytes
+    );
+    for chunk in [256 << 10, 1 << 20, 4 << 20, 16 << 20] {
+        let p = csv_path.clone();
+        let run: Loader = Box::new(move || {
+            read_csv(&p, &CsvOptions::default()).unwrap()
+        });
+        let out = exec::with_intra_op_threads(sweep_threads, || {
+            exec::with_ingest_chunk_bytes(chunk, || run())
+        });
+        assert_eq!(
+            out, reference,
+            "streamed parse diverged at chunk {chunk}"
+        );
+        let (median, rss) = exec::with_intra_op_threads(sweep_threads, || {
+            exec::with_ingest_chunk_bytes(chunk, || {
+                measure_with_rss(opts, &run)
+            })
+        });
+        let rows_per_sec = rows as f64 / median.max(1e-12);
+        report.add_with(
+            "csv_stream_chunk",
+            chunk as f64,
+            median,
+            vec![
+                ("rows_per_sec".to_string(), rows_per_sec),
+                ("peak_rss_bytes".to_string(), rss),
+            ],
+        );
+        results.push(Json::obj(vec![
+            ("op", Json::str("csv_stream_chunk".to_string())),
+            ("chunk_bytes", Json::num(chunk as f64)),
+            ("threads", Json::num(sweep_threads as f64)),
+            ("seconds", Json::num(median)),
+            ("rows_per_sec", Json::num(rows_per_sec)),
+            ("peak_rss_bytes", Json::num(rss)),
+        ]));
+        println!(
+            "  chunk {:>9}: {:>10.4}s  {:>14.0} rows/s  rss {:>6.1} MiB",
+            chunk,
+            median,
+            rows_per_sec,
+            rss / (1024.0 * 1024.0)
+        );
+    }
+    // Whole-buffer reference arm: slurps the file, then parses.
+    {
+        let p = csv_path.clone();
+        let run: Loader = Box::new(move || {
+            let text = std::fs::read_to_string(&p).unwrap();
+            read_csv_str(&text, &CsvOptions::default()).unwrap()
+        });
+        let out = exec::with_intra_op_threads(sweep_threads, || run());
+        assert_eq!(out, reference, "whole-buffer parse diverged");
+        let (median, rss) = exec::with_intra_op_threads(sweep_threads, || {
+            measure_with_rss(opts, &run)
+        });
+        let rows_per_sec = rows as f64 / median.max(1e-12);
+        report.add_with(
+            "csv_whole_buffer",
+            file_bytes as f64,
+            median,
+            vec![
+                ("rows_per_sec".to_string(), rows_per_sec),
+                ("peak_rss_bytes".to_string(), rss),
+            ],
+        );
+        results.push(Json::obj(vec![
+            ("op", Json::str("csv_whole_buffer".to_string())),
+            ("chunk_bytes", Json::num(file_bytes as f64)),
+            ("threads", Json::num(sweep_threads as f64)),
+            ("seconds", Json::num(median)),
+            ("rows_per_sec", Json::num(rows_per_sec)),
+            ("peak_rss_bytes", Json::num(rss)),
+        ]));
+        println!(
+            "  whole-buffer: {:>10.4}s  {:>14.0} rows/s  rss {:>6.1} MiB",
+            median,
+            rows_per_sec,
+            rss / (1024.0 * 1024.0)
+        );
     }
 
     println!("{}", report.render());
@@ -158,23 +280,8 @@ fn main() {
     let json = Json::obj(vec![
         ("rows", Json::num(rows as f64)),
         ("cores", Json::num(cores as f64)),
-        (
-            "results",
-            Json::Arr(
-                samples
-                    .iter()
-                    .map(|(name, t, secs, rps, speedup)| {
-                        Json::obj(vec![
-                            ("op", Json::str(name.clone())),
-                            ("threads", Json::num(*t as f64)),
-                            ("seconds", Json::num(*secs)),
-                            ("rows_per_sec", Json::num(*rps)),
-                            ("speedup_vs_1t", Json::num(*speedup)),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ),
+        ("file_bytes", Json::num(file_bytes as f64)),
+        ("results", Json::Arr(results)),
     ]);
     std::fs::write("BENCH_ingest.json", json.to_string())
         .expect("write BENCH_ingest.json");

@@ -55,6 +55,29 @@ pub fn measure<F: FnMut()>(opts: BenchOpts, mut f: F) -> Stats {
     })
 }
 
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`). `None` off Linux or when procfs is absent —
+/// benches report 0 in that case rather than failing.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 =
+                rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Reset the kernel's peak-RSS watermark (write `5` to
+/// `/proc/self/clear_refs`), so a bench can attribute a peak to one
+/// phase instead of the process lifetime. Returns `false` where
+/// unsupported (peaks are then cumulative — still an upper bound).
+pub fn reset_peak_rss() -> bool {
+    std::fs::write("/proc/self/clear_refs", b"5").is_ok()
+}
+
 /// Like [`measure`], but the closure reports its own seconds (used for
 /// simulated-makespan benches where wall time is meaningless).
 pub fn measure_with<F: FnMut() -> f64>(opts: BenchOpts, mut f: F) -> Stats {

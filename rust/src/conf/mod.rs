@@ -153,6 +153,12 @@ pub struct RylonConfig {
     /// (`[exec] par_row_threshold`) — lower it to force the parallel
     /// paths on small inputs (benches/tests).
     pub par_row_threshold: usize,
+    /// Streaming-ingest chunk size in bytes
+    /// (`[exec] ingest_chunk_bytes`). `0` = the process default
+    /// ([`crate::exec::INGEST_CHUNK_BYTES`], overridable via the
+    /// `INGEST_CHUNK_BYTES` env var). CSV ingest holds O(chunk) raw
+    /// text instead of the whole file.
+    pub ingest_chunk_bytes: usize,
     pub cost: CostModel,
     /// Directory holding AOT artifacts + manifest.json.
     pub artifacts_dir: String,
@@ -166,6 +172,7 @@ impl Default for RylonConfig {
             shuffle_chunk_rows: 1 << 16,
             intra_op_threads: 0,
             par_row_threshold: crate::exec::PAR_ROW_THRESHOLD,
+            ingest_chunk_bytes: 0,
             cost: CostModel::default(),
             artifacts_dir: "artifacts".to_string(),
         }
@@ -186,6 +193,8 @@ impl RylonConfig {
                 .usize_or("exec.intra_op_threads", d.intra_op_threads),
             par_row_threshold: f
                 .usize_or("exec.par_row_threshold", d.par_row_threshold),
+            ingest_chunk_bytes: f
+                .usize_or("exec.ingest_chunk_bytes", d.ingest_chunk_bytes),
             cost: CostModel {
                 alpha: f.f64_or("cost.alpha", dc.alpha),
                 beta: f.f64_or("cost.beta", dc.beta),
@@ -218,6 +227,7 @@ chunk_rows = 4096
 [exec]
 intra_op_threads = 2
 par_row_threshold = 512
+ingest_chunk_bytes = 65536
 
 [cost]
 alpha = 1e-5
@@ -245,6 +255,7 @@ ranks_per_node = 8
         assert_eq!(c.shuffle_chunk_rows, 4096);
         assert_eq!(c.intra_op_threads, 2);
         assert_eq!(c.par_row_threshold, 512);
+        assert_eq!(c.ingest_chunk_bytes, 65536);
         assert_eq!(c.cost.alpha, 1e-5);
         assert_eq!(c.cost.ranks_per_node, 8);
         // Untouched keys keep defaults.

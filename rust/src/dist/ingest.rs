@@ -1,0 +1,72 @@
+//! Distributed streaming CSV ingest: every rank streams its **block of
+//! records** out of a shared CSV file with the bounded-memory reader
+//! ([`crate::io::csv::read_csv_records`]), so a world of ranks holds
+//! O(world × chunk + file rows) instead of world × file bytes — the
+//! chunked parallel ingest both Cylon papers treat as a first-class
+//! scaling lever.
+//!
+//! Two streaming passes per rank, no coordination required:
+//!
+//! 1. a boundary-scan-only pass counts the data records
+//!    ([`crate::io::csv::count_csv_records`]), giving every rank the
+//!    same total and therefore the same block partition;
+//! 2. a parse pass materialises only this rank's records (the scan
+//!    still covers the whole file — record boundaries cannot be found
+//!    without it — but foreign records are skipped unparsed and their
+//!    raw text is dropped chunk by chunk).
+//!
+//! The block partition matches `Table::slice`'s rank-major layout, so
+//! concatenating the per-rank tables in rank order reproduces the
+//! whole-file read bit for bit (schema inference included: it always
+//! samples the file's first records, whichever rank reads them).
+
+use std::path::Path;
+
+use super::RankCtx;
+use crate::error::Result;
+use crate::io::csv::{count_csv_records, read_csv_records, CsvOptions};
+use crate::table::Table;
+
+/// The rank-major block `(offset, len)` of `n` records for `rank` of
+/// `world` — base rows each, one extra for the first `n % world` ranks
+/// (the same layout the integration tests slice by hand).
+pub(crate) fn block_range(n: usize, rank: usize, world: usize) -> (usize, usize) {
+    let base = n / world;
+    let extra = n % world;
+    let len = base + usize::from(rank < extra);
+    let off = base * rank + rank.min(extra);
+    (off, len)
+}
+
+/// Stream this rank's block of a CSV file into a table. Rank memory is
+/// bounded by the ingest chunk size plus the rank's own rows; the
+/// per-rank tables concatenate (in rank order) to exactly the
+/// whole-file [`crate::io::csv::read_csv`] result.
+pub fn read_csv_partition(
+    ctx: &RankCtx,
+    path: impl AsRef<Path>,
+    opts: &CsvOptions,
+) -> Result<Table> {
+    let path = path.as_ref();
+    let total = count_csv_records(std::fs::File::open(path)?, opts)?;
+    let (off, len) = block_range(total, ctx.rank, ctx.size);
+    read_csv_records(std::fs::File::open(path)?, opts, off..off + len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_ranges_cover_exactly() {
+        for (n, world) in [(0usize, 3usize), (7, 3), (9, 3), (100, 7)] {
+            let mut next = 0usize;
+            for r in 0..world {
+                let (off, len) = block_range(n, r, world);
+                assert_eq!(off, next, "n={n} world={world} rank={r}");
+                next += len;
+            }
+            assert_eq!(next, n);
+        }
+    }
+}

@@ -17,6 +17,7 @@
 //!   = the paper's serial-per-rank behaviour. Parallel kernels are
 //!   bit-identical to serial ones, so the knob never changes results.
 
+mod ingest;
 mod partition;
 mod ops;
 
@@ -27,6 +28,7 @@ use crate::net::local::LocalFabric;
 use crate::net::sim::SimFabric;
 use crate::net::{CostModel, Fabric, FabricRef};
 
+pub use self::ingest::read_csv_partition;
 pub use self::ops::{
     dist_difference, dist_groupby, dist_groupby_preagg, dist_intersect,
     dist_join, dist_sort, dist_union,
@@ -59,6 +61,12 @@ pub struct DistConfig {
     /// Rows below which kernels stay serial (`[exec]
     /// par_row_threshold`; default [`crate::exec::PAR_ROW_THRESHOLD`]).
     pub par_row_threshold: usize,
+    /// Streaming-ingest chunk size in bytes for each rank's CSV reads
+    /// (`[exec] ingest_chunk_bytes`). `0` = the process default
+    /// ([`crate::exec::INGEST_CHUNK_BYTES`], env-overridable). Bounds a
+    /// rank's raw-text memory during ingest at O(chunk), so a world of
+    /// ranks never holds world × file bytes resident.
+    pub ingest_chunk_bytes: usize,
 }
 
 impl Default for DistConfig {
@@ -69,6 +77,7 @@ impl Default for DistConfig {
             shuffle_chunk_rows: 1 << 16,
             intra_op_threads: 0,
             par_row_threshold: crate::exec::PAR_ROW_THRESHOLD,
+            ingest_chunk_bytes: 0,
         }
     }
 }
@@ -104,6 +113,13 @@ impl DistConfig {
         self.par_row_threshold = rows;
         self
     }
+
+    /// Override the streaming-ingest chunk size (`0` = the process
+    /// default).
+    pub fn with_ingest_chunk_bytes(mut self, bytes: usize) -> DistConfig {
+        self.ingest_chunk_bytes = bytes;
+        self
+    }
 }
 
 /// Per-rank execution context handed to the SPMD closure.
@@ -135,6 +151,7 @@ pub struct Cluster {
     shuffle_chunk_rows: usize,
     intra_op_threads: usize,
     par_row_threshold: usize,
+    ingest_chunk_bytes: usize,
     fabric: FabricRef,
     sim: Option<Arc<SimFabric>>,
     /// One long-lived morsel-worker pool per rank (lazy threads).
@@ -175,6 +192,9 @@ impl Cluster {
             shuffle_chunk_rows: cfg.shuffle_chunk_rows.max(1),
             intra_op_threads,
             par_row_threshold: cfg.par_row_threshold.max(1),
+            ingest_chunk_bytes: crate::exec::resolve_ingest_chunk_bytes(
+                cfg.ingest_chunk_bytes,
+            ),
             fabric,
             sim,
             pools,
@@ -206,6 +226,7 @@ impl Cluster {
                     let chunk = self.shuffle_chunk_rows;
                     let intra = self.intra_op_threads;
                     let threshold = self.par_row_threshold;
+                    let ingest_chunk = self.ingest_chunk_bytes;
                     let pool = Arc::clone(&self.pools[rank]);
                     s.spawn(move || {
                         // The rank thread's intra-op budget: local
@@ -213,6 +234,7 @@ impl Cluster {
                         // this rank's long-lived worker pool.
                         crate::exec::set_intra_op_threads(intra);
                         crate::exec::set_par_row_threshold(threshold);
+                        crate::exec::set_ingest_chunk_bytes(ingest_chunk);
                         crate::exec::install_thread_pool(pool);
                         let mut ctx = RankCtx {
                             rank,
@@ -358,6 +380,24 @@ mod tests {
             .run(|_| Ok(crate::exec::par_row_threshold()))
             .unwrap();
         assert_eq!(outs, vec![7, 7]);
+    }
+
+    #[test]
+    fn ingest_chunk_bytes_reaches_rank_threads() {
+        let cfg = DistConfig::threads(2).with_ingest_chunk_bytes(4096);
+        let cluster = Cluster::new(cfg).unwrap();
+        let outs = cluster
+            .run(|_| Ok(crate::exec::ingest_chunk_bytes()))
+            .unwrap();
+        assert_eq!(outs, vec![4096, 4096]);
+        // 0 resolves to the process default on every rank.
+        let cluster =
+            Cluster::new(DistConfig::threads(2)).unwrap();
+        let outs = cluster
+            .run(|_| Ok(crate::exec::ingest_chunk_bytes()))
+            .unwrap();
+        let d = crate::exec::default_ingest_chunk_bytes();
+        assert_eq!(outs, vec![d, d]);
     }
 
     #[test]

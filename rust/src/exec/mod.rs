@@ -59,6 +59,14 @@ pub(crate) use self::pool::{
 /// `[exec] par_row_threshold`.
 pub const PAR_ROW_THRESHOLD: usize = 4096;
 
+/// Default streaming-ingest chunk size in bytes: CSV readers consume
+/// the source in chunks this large, so peak raw-text memory is
+/// O(chunk + longest record) instead of O(file). Override per thread
+/// with [`set_ingest_chunk_bytes`] / [`with_ingest_chunk_bytes`], per
+/// cluster with `DistConfig::ingest_chunk_bytes`, on the CLI with
+/// `--ingest-chunk`, or in config via `[exec] ingest_chunk_bytes`.
+pub const INGEST_CHUNK_BYTES: usize = 4 << 20;
+
 /// Immutable per-operation thread budget.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecContext {
@@ -101,6 +109,22 @@ pub fn default_intra_op_threads() -> usize {
     })
 }
 
+/// The process-wide default streaming-ingest chunk size:
+/// `INGEST_CHUNK_BYTES` from the environment (≥ 1 byte; the CI
+/// low-memory leg sets a tiny value so chunk-seam paths run in every
+/// test), else [`INGEST_CHUNK_BYTES`]. Read once; explicit setters and
+/// `DistConfig` always override it.
+pub fn default_ingest_chunk_bytes() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("INGEST_CHUNK_BYTES")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&v| v >= 1)
+            .unwrap_or(INGEST_CHUNK_BYTES)
+    })
+}
+
 thread_local! {
     /// Per-thread intra-op budget. Rank threads get theirs from
     /// `dist::Cluster::run`; everything else starts at the process
@@ -110,6 +134,10 @@ thread_local! {
 
     /// Per-thread parallelism row threshold (see [`PAR_ROW_THRESHOLD`]).
     static ROW_THRESHOLD: Cell<usize> = const { Cell::new(PAR_ROW_THRESHOLD) };
+
+    /// Per-thread streaming-ingest chunk size (see
+    /// [`INGEST_CHUNK_BYTES`]).
+    static CHUNK_BYTES: Cell<usize> = Cell::new(default_ingest_chunk_bytes());
 }
 
 /// The calling thread's current intra-op budget.
@@ -150,6 +178,38 @@ pub fn with_par_row_threshold<T>(rows: usize, f: impl FnOnce() -> T) -> T {
     let out = f();
     ROW_THRESHOLD.with(|c| c.set(prev));
     out
+}
+
+/// The calling thread's streaming-ingest chunk size in bytes.
+pub fn ingest_chunk_bytes() -> usize {
+    CHUNK_BYTES.with(|c| c.get())
+}
+
+/// Set the calling thread's streaming-ingest chunk size (clamped to
+/// ≥ 1 byte).
+pub fn set_ingest_chunk_bytes(bytes: usize) {
+    CHUNK_BYTES.with(|c| c.set(bytes.max(1)));
+}
+
+/// Run `f` under a temporary streaming-ingest chunk size, restoring the
+/// previous value afterwards — how tests force many chunk seams on tiny
+/// inputs.
+pub fn with_ingest_chunk_bytes<T>(bytes: usize, f: impl FnOnce() -> T) -> T {
+    let prev = CHUNK_BYTES.with(|c| c.replace(bytes.max(1)));
+    let out = f();
+    CHUNK_BYTES.with(|c| c.set(prev));
+    out
+}
+
+/// Resolve a configured ingest chunk size: `0` = the process default
+/// (env-overridable via `INGEST_CHUNK_BYTES`), anything else passes
+/// through.
+pub fn resolve_ingest_chunk_bytes(configured: usize) -> usize {
+    if configured > 0 {
+        configured
+    } else {
+        default_ingest_chunk_bytes()
+    }
 }
 
 /// The effective budget for an `nrows`-row kernel: the thread-local
@@ -228,6 +288,25 @@ mod tests {
         with_par_row_threshold(0, || {
             assert!(!parallelism_for(0).is_parallel());
         });
+    }
+
+    #[test]
+    fn ingest_chunk_knob_scopes_and_restores() {
+        let prev = ingest_chunk_bytes();
+        with_ingest_chunk_bytes(64, || {
+            assert_eq!(ingest_chunk_bytes(), 64);
+            // Zero clamps so the scanner always makes progress.
+            with_ingest_chunk_bytes(0, || {
+                assert_eq!(ingest_chunk_bytes(), 1);
+            });
+        });
+        assert_eq!(ingest_chunk_bytes(), prev);
+        // 0 = the process default; explicit values pass through.
+        assert_eq!(
+            resolve_ingest_chunk_bytes(0),
+            default_ingest_chunk_bytes()
+        );
+        assert_eq!(resolve_ingest_chunk_bytes(123), 123);
     }
 
     #[test]

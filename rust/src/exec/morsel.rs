@@ -129,13 +129,18 @@ where
 
 /// Concurrency cap for the item-count-driven entry points
 /// ([`map_parallel`], [`run_partitions`]): the larger of the calling
-/// thread's budget and the machine's cores. Honours explicit budgets
-/// while keeping a huge item count from growing the (persistent,
-/// never-shrinking) pool past the hardware.
+/// thread's budget and the machine's cores (read once — these entry
+/// points now run per streamed ingest chunk, so the procfs lookup
+/// behind `available_parallelism` must stay off the hot path). Honours
+/// explicit budgets while keeping a huge item count from growing the
+/// (persistent, never-shrinking) pool past the hardware.
 fn local_concurrency_cap() -> usize {
-    let cores = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
+    static CORES: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    let cores = *CORES.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    });
     cores.max(super::current().threads())
 }
 

@@ -75,6 +75,7 @@ impl Job {
             // panics, so a one-shot pin at thread start is not enough.
             super::set_intra_op_threads(1);
             super::set_par_row_threshold(super::PAR_ROW_THRESHOLD);
+            super::set_ingest_chunk_bytes(super::default_ingest_chunk_bytes());
             // SAFETY: tasks are only claimed while the submitting
             // caller blocks in `WorkerPool::run`, so the pointee is a
             // live borrow for the duration of this call.

@@ -2,17 +2,36 @@
 //! doubled quotes inside — including quoted newlines), optional header,
 //! explicit or inferred schema. Empty cells are nulls.
 //!
-//! Reading is a **two-pass morsel-parallel parse** (cf. "High
-//! Performance Data Engineering Everywhere", Widanage et al. 2020,
-//! which makes parallel table ingest a first-class kernel): a
-//! quote-aware newline scan splits the buffer into row-aligned byte
-//! ranges, worker threads parse runs of whole records into per-chunk
-//! [`ColumnBuilder`]s under the calling thread's intra-op budget, and
-//! the chunks concatenate in file order — so the parsed table is
-//! bit-identical to a serial parse (including schema inference from the
-//! first `infer_rows` records) at any thread count.
+//! Reading is a **streaming, bounded-memory, morsel-parallel parse**
+//! (cf. "High Performance Data Engineering Everywhere", Widanage et al.
+//! 2020, which makes chunked parallel table ingest a first-class
+//! kernel). The source is consumed in fixed-size chunks of
+//! [`crate::exec::ingest_chunk_bytes`] bytes (`[exec]
+//! ingest_chunk_bytes` / `--ingest-chunk`), so raw-text memory is
+//! O(chunk + longest record) instead of O(file):
+//!
+//! 1. **Boundary scan.** Each chunk is scanned for record boundaries by
+//!    a three-state DFA (field start / unquoted / quoted) whose state is
+//!    carried across chunk seams, so quoted newlines, `""` escapes, and
+//!    CRLF pairs may straddle chunks freely. On large chunks the scan is
+//!    **speculative and parallel**: workers scan disjoint sub-ranges
+//!    under *every* possible entry state, then a cheap prefix pass over
+//!    the per-range (exit-state, newline-list) summaries picks the true
+//!    entry state of each sub-range and splices the chosen newline
+//!    lists — bit-identical to the serial scan.
+//! 2. **Record parse.** Each chunk's row-aligned ranges are parsed into
+//!    per-chunk [`ColumnBuilder`]s on the calling thread's worker pool
+//!    and the chunk tables concatenate in file order, so the streamed
+//!    parse is bit-identical to a whole-buffer serial parse (including
+//!    schema inference from the first `infer_rows` records) at any
+//!    thread count and any chunk size.
+//!
+//! Multi-byte (non-ASCII) delimiters fall back to the whole-buffer
+//! serial scan: a multi-byte delimiter could straddle a chunk seam,
+//! which the byte-at-a-time DFA cannot see.
 
 use std::io::{BufReader, BufWriter, Read, Write};
+use std::ops::Range;
 use std::path::Path;
 
 use crate::column::ColumnBuilder;
@@ -56,8 +75,16 @@ impl CsvOptions {
     }
 }
 
-/// Split one CSV record honouring quotes. Returns the cells.
-fn split_record(line: &str, delim: char) -> Result<Vec<String>> {
+/// Split one CSV record honouring quotes. Returns the cells. `pos`
+/// lazily supplies the record's absolute byte offset and 1-based line
+/// number for the unterminated-quote error (the only error this can
+/// raise), so a stray mid-field quote fails fast *and* points at the
+/// offending record instead of an opaque excerpt.
+fn split_record(
+    line: &str,
+    delim: char,
+    pos: impl FnOnce() -> (u64, u64),
+) -> Result<Vec<String>> {
     let mut cells = Vec::new();
     let mut cur = String::new();
     let mut chars = line.chars().peekable();
@@ -87,8 +114,10 @@ fn split_record(line: &str, delim: char) -> Result<Vec<String>> {
         // boundary scan, so the offending "record" can be near
         // file-sized — bound the excerpt in the message.
         let excerpt: String = line.chars().take(80).collect();
+        let (byte, lineno) = pos();
         return Err(RylonError::parse(format!(
-            "unterminated quote in record starting: {excerpt:?}"
+            "unterminated quote in record starting at byte {byte}, \
+             line {lineno}: {excerpt:?}"
         )));
     }
     cells.push(cur);
@@ -121,16 +150,189 @@ fn infer_dtype(samples: &[&str]) -> DataType {
     DataType::Utf8
 }
 
-/// Pass 1: byte ranges of the records in `buf`. A newline splits
-/// records only outside a **quoted field** (so quoted fields may
-/// contain newlines); one trailing `\r` per record is stripped; empty
-/// lines are skipped. A quoted field opens only at field start (RFC
-/// 4180) and `""` inside it is an escaped quote — a stray quote
-/// mid-field never swallows newlines, so malformed rows still fail
-/// fast in `split_record` instead of silently merging. Quote and
-/// newline are ASCII (and a multi-byte delimiter is matched by its
-/// full encoding), so the byte scan is UTF-8 safe.
-fn scan_records(buf: &str, delim: char) -> Vec<(usize, usize)> {
+/// Infer the schema from the header (if any) and the first `infer_rows`
+/// sampled records — shared by the whole-buffer and streamed readers so
+/// both resolve identical types from identical samples.
+fn infer_schema(
+    header: Option<&Vec<String>>,
+    sample_rows: &[Vec<String>],
+) -> Result<Schema> {
+    let width = header
+        .map(|h| h.len())
+        .or_else(|| sample_rows.first().map(|r| r.len()))
+        .ok_or_else(|| RylonError::parse("empty csv"))?;
+    let fields = (0..width)
+        .map(|c| {
+            let name = header
+                .map(|h| h[c].clone())
+                .unwrap_or_else(|| format!("c{c}"));
+            let samples: Vec<&str> = sample_rows
+                .iter()
+                .map(|r| r.get(c).map(|s| s.as_str()).unwrap_or(""))
+                .collect();
+            Field::new(name, infer_dtype(&samples))
+        })
+        .collect();
+    Ok(Schema::new(fields))
+}
+
+fn count_newlines(bytes: &[u8]) -> u64 {
+    bytes.iter().filter(|&&b| b == b'\n').count() as u64
+}
+
+/// Boundary-scan DFA state. Three states suffice: a closing quote
+/// (`"` seen inside a quoted field) behaves exactly like field start —
+/// another `"` re-enters the quoted field (the `""` escape), a
+/// delimiter/newline ends the field/record, anything else continues the
+/// field unquoted — so the close-pending state collapses into
+/// [`ScanState::FieldStart`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ScanState {
+    /// Outside quotes, at the start of a field (a `"` here opens a
+    /// quoted field — RFC 4180) or just after a closing quote (a `"`
+    /// here is the `""` escape).
+    FieldStart,
+    /// Outside quotes, mid-field (a stray `"` here is a literal byte;
+    /// `split_record` rejects the record later).
+    Unquoted,
+    /// Inside a quoted field (newlines and delimiters are data).
+    Quoted,
+}
+
+/// The three possible chunk-entry states, in [`hyp_index`] order.
+const HYPOTHESES: [ScanState; 3] =
+    [ScanState::FieldStart, ScanState::Unquoted, ScanState::Quoted];
+
+fn hyp_index(s: ScanState) -> usize {
+    match s {
+        ScanState::FieldStart => 0,
+        ScanState::Unquoted => 1,
+        ScanState::Quoted => 2,
+    }
+}
+
+/// One DFA transition. A newline is a record boundary iff the current
+/// state is not [`ScanState::Quoted`] (emission is checked by callers).
+#[inline]
+fn step(s: ScanState, b: u8, d: u8) -> ScanState {
+    match s {
+        ScanState::Quoted => {
+            if b == b'"' {
+                ScanState::FieldStart
+            } else {
+                ScanState::Quoted
+            }
+        }
+        ScanState::FieldStart => {
+            if b == b'"' {
+                ScanState::Quoted
+            } else if b == b'\n' || b == d {
+                ScanState::FieldStart
+            } else {
+                ScanState::Unquoted
+            }
+        }
+        ScanState::Unquoted => {
+            if b == b'\n' || b == d {
+                ScanState::FieldStart
+            } else {
+                ScanState::Unquoted
+            }
+        }
+    }
+}
+
+/// Serial DFA scan of `bytes[range]` from a known entry state: newline
+/// boundary offsets (absolute into `bytes`) and the exit state.
+fn scan_range_serial(
+    bytes: &[u8],
+    range: Range<usize>,
+    d: u8,
+    entry: ScanState,
+) -> (Vec<usize>, ScanState) {
+    let mut state = entry;
+    let mut nls = Vec::new();
+    for i in range {
+        let b = bytes[i];
+        if b == b'\n' && state != ScanState::Quoted {
+            nls.push(i);
+        }
+        state = step(state, b, d);
+    }
+    (nls, state)
+}
+
+/// Per-range summary of the speculative scan: for each of the three
+/// possible entry states, the boundaries that range would emit and the
+/// state it would exit in.
+struct ScanSummary {
+    exit: [ScanState; 3],
+    nls: [Vec<usize>; 3],
+}
+
+fn scan_range_speculative(
+    bytes: &[u8],
+    range: Range<usize>,
+    d: u8,
+) -> ScanSummary {
+    let mut cur = HYPOTHESES;
+    let mut nls: [Vec<usize>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for i in range {
+        let b = bytes[i];
+        if b == b'\n' {
+            for (c, nl) in cur.iter_mut().zip(nls.iter_mut()) {
+                if *c != ScanState::Quoted {
+                    nl.push(i);
+                }
+                *c = step(*c, b, d);
+            }
+        } else {
+            for c in cur.iter_mut() {
+                *c = step(*c, b, d);
+            }
+        }
+    }
+    ScanSummary { exit: cur, nls }
+}
+
+/// Record-boundary scan of `bytes` from `entry`: the offsets of every
+/// record-terminating newline, and the scan state after the last byte.
+/// Parallel (speculative) under the calling thread's intra-op budget
+/// when the buffer is at least `par_row_threshold` bytes; bit-identical
+/// to the serial scan either way. `d` must be an ASCII delimiter byte.
+fn scan_boundaries(
+    bytes: &[u8],
+    d: u8,
+    entry: ScanState,
+) -> (Vec<usize>, ScanState) {
+    let exec = exec::parallelism_for(bytes.len());
+    if !exec.is_parallel() || bytes.len() < 2 * exec.threads() {
+        return scan_range_serial(bytes, 0..bytes.len(), d, entry);
+    }
+    let parts = exec::split_even(bytes.len(), exec.threads());
+    let summaries: Vec<ScanSummary> =
+        exec::map_parallel(parts, |m| {
+            scan_range_speculative(bytes, m.range(), d)
+        });
+    // Prefix pass: thread the true entry state through the per-range
+    // summaries, keeping each range's newline list for the state it was
+    // actually entered in.
+    let mut state = entry;
+    let mut out = Vec::new();
+    for s in &summaries {
+        let h = hyp_index(state);
+        out.extend_from_slice(&s.nls[h]);
+        state = s.exit[h];
+    }
+    (out, state)
+}
+
+/// Whole-buffer record scan for a **multi-byte (non-ASCII) delimiter**:
+/// the byte-at-a-time DFA cannot track a delimiter that spans bytes, so
+/// this keeps the legacy field-start-aware loop. A quoted field opens
+/// only at field start and `""` inside it is an escaped quote; one
+/// trailing `\r` per record is stripped; empty lines are skipped.
+fn scan_records_multibyte(buf: &str, delim: char) -> Vec<(usize, usize)> {
     let bytes = buf.as_bytes();
     let mut dbuf = [0u8; 4];
     let d = delim.encode_utf8(&mut dbuf).as_bytes();
@@ -178,6 +380,29 @@ fn scan_records(buf: &str, delim: char) -> Vec<(usize, usize)> {
     out
 }
 
+/// Pass 1: byte ranges of the records in `buf`. A newline splits
+/// records only outside a quoted field (so quoted fields may contain
+/// newlines); one trailing `\r` per record is stripped; empty lines are
+/// skipped. Quote and newline are ASCII, so the byte scan is UTF-8
+/// safe. ASCII delimiters take the (possibly speculative-parallel) DFA
+/// scan; multi-byte delimiters keep the serial legacy loop.
+fn scan_records(buf: &str, delim: char) -> Vec<(usize, usize)> {
+    if !delim.is_ascii() {
+        return scan_records_multibyte(buf, delim);
+    }
+    let bytes = buf.as_bytes();
+    let (nls, _exit) =
+        scan_boundaries(bytes, delim as u8, ScanState::FieldStart);
+    let mut out = Vec::with_capacity(nls.len() + 1);
+    let mut start = 0usize;
+    for &nl in &nls {
+        push_record_range(&mut out, bytes, start, nl);
+        start = nl + 1;
+    }
+    push_record_range(&mut out, bytes, start, bytes.len());
+    out
+}
+
 fn push_record_range(
     out: &mut Vec<(usize, usize)>,
     bytes: &[u8],
@@ -194,13 +419,17 @@ fn push_record_range(
 
 /// Pass 2 worker: parse a run of whole records into columns.
 /// `first_record` is the chunk's absolute record index (for error
-/// messages that match a serial parse).
+/// messages that match a serial parse); `byte_base`/`line_base` locate
+/// `buf[0]` in the underlying file (0 for whole-buffer parses) so
+/// unterminated-quote errors report absolute positions.
 fn parse_records(
     buf: &str,
     ranges: &[(usize, usize)],
     schema: &Schema,
     first_record: usize,
     delim: char,
+    byte_base: u64,
+    line_base: u64,
 ) -> Result<Table> {
     let mut builders: Vec<ColumnBuilder> = schema
         .fields()
@@ -208,7 +437,9 @@ fn parse_records(
         .map(|f| ColumnBuilder::new(f.dtype, ranges.len()))
         .collect();
     for (k, &(s, e)) in ranges.iter().enumerate() {
-        let rec = split_record(&buf[s..e], delim)?;
+        let rec = split_record(&buf[s..e], delim, || {
+            record_pos(buf, s, byte_base, line_base)
+        })?;
         if rec.len() != schema.len() {
             return Err(RylonError::parse(format!(
                 "record {} has {} cells, schema has {}",
@@ -227,22 +458,430 @@ fn parse_records(
     )
 }
 
-/// Read a CSV from any reader.
-pub fn read_csv_from<R: Read>(reader: R, opts: &CsvOptions) -> Result<Table> {
-    let mut buf = String::new();
-    BufReader::new(reader).read_to_string(&mut buf)?;
-    read_csv_str(&buf, opts)
+/// Absolute (byte offset, 1-based line number) of the record starting
+/// at `buf[s]` — computed lazily, only on the error path.
+fn record_pos(buf: &str, s: usize, byte_base: u64, line_base: u64) -> (u64, u64) {
+    (
+        byte_base + s as u64,
+        line_base + count_newlines(&buf.as_bytes()[..s]) + 1,
+    )
 }
 
-/// Parse CSV text already in memory — the core two-pass reader (see the
-/// module docs). Parallel under the calling thread's intra-op budget;
-/// bit-identical to a serial parse at any thread count.
+/// Read a CSV from any reader — **streaming**: the source is consumed
+/// in [`crate::exec::ingest_chunk_bytes`]-sized chunks, so peak
+/// raw-text memory is bounded by the chunk size (plus the longest
+/// single record), not the file size. Bit-identical to
+/// [`read_csv_str`] on the same bytes. Non-ASCII delimiters fall back
+/// to a whole-buffer read (a multi-byte delimiter may straddle a chunk
+/// seam).
+pub fn read_csv_from<R: Read>(reader: R, opts: &CsvOptions) -> Result<Table> {
+    let mut parts: Vec<Table> = Vec::new();
+    let schema = read_csv_chunked(reader, opts, |t| {
+        parts.push(t);
+        Ok(())
+    })?;
+    if parts.is_empty() {
+        return Ok(Table::empty(schema));
+    }
+    Table::concat_all(&schema, &parts)
+}
+
+/// Streaming driver: parse the CSV chunk by chunk and hand each chunk's
+/// table to `sink` in file order, never holding more than one chunk of
+/// raw text (plus the parsed output the sink retains). Returns the
+/// resolved schema, so an empty input still yields one. The backbone of
+/// [`read_csv_from`] and the bounded-memory CSV→RYF conversion.
+pub fn read_csv_chunked<R: Read>(
+    reader: R,
+    opts: &CsvOptions,
+    mut sink: impl FnMut(Table) -> Result<()>,
+) -> Result<Schema> {
+    if !opts.delimiter.is_ascii() {
+        let mut buf = String::new();
+        BufReader::new(reader).read_to_string(&mut buf)?;
+        let t = read_csv_str(&buf, opts)?;
+        let schema = t.schema().clone();
+        if t.num_rows() > 0 {
+            sink(t)?;
+        }
+        return Ok(schema);
+    }
+    stream_csv(reader, opts, None, &mut sink)
+}
+
+/// Count the data records (excluding the header) in a CSV without
+/// parsing cells — a streaming boundary scan only, no record
+/// materialisation (the chunk buffer is the only allocation). Used by
+/// the distributed ingest path to block-partition records across
+/// ranks; must skip exactly the records `push_record_range` skips
+/// (empty lines, lone-`\r` lines) so the count matches the parse.
+pub fn count_csv_records<R: Read>(mut reader: R, opts: &CsvOptions) -> Result<usize> {
+    if !opts.delimiter.is_ascii() {
+        let mut buf = String::new();
+        BufReader::new(reader).read_to_string(&mut buf)?;
+        let n = scan_records(&buf, opts.delimiter).len();
+        return Ok(n.saturating_sub(opts.has_header as usize));
+    }
+    let d = opts.delimiter as u8;
+    let mut scratch = vec![0u8; exec::ingest_chunk_bytes().max(1)];
+    let mut state = ScanState::FieldStart;
+    // Bytes of the current record seen in earlier chunks, and the last
+    // byte seen overall (for the lone-`\r` check when a record's only
+    // byte sits in the previous chunk).
+    let mut pending_len = 0usize;
+    let mut prev_byte = 0u8;
+    let mut n = 0usize;
+    loop {
+        let m = read_full(&mut reader, &mut scratch)?;
+        if m == 0 {
+            break;
+        }
+        let (nls, exit) = scan_boundaries(&scratch[..m], d, state);
+        state = exit;
+        // Record start relative to this chunk (negative while the
+        // record began in an earlier chunk).
+        let mut rec_start = -(pending_len as i64);
+        for &nl in &nls {
+            let len = nl as i64 - rec_start;
+            let only = if nl == 0 { prev_byte } else { scratch[nl - 1] };
+            if !(len == 0 || (len == 1 && only == b'\r')) {
+                n += 1;
+            }
+            rec_start = nl as i64 + 1;
+        }
+        pending_len = (m as i64 - rec_start) as usize;
+        prev_byte = scratch[m - 1];
+    }
+    // Trailing record with no final newline.
+    if pending_len > 0 && !(pending_len == 1 && prev_byte == b'\r') {
+        n += 1;
+    }
+    Ok(n.saturating_sub(opts.has_header as usize))
+}
+
+/// Read only data records with global index in `records` (0-based,
+/// header excluded), streaming the rest past without parsing — the
+/// per-rank partitioned ingest: rank memory is O(chunk + its own
+/// block), never O(file). Schema inference still samples the first
+/// `infer_rows` records of the *file*, so every rank resolves the same
+/// schema as a whole-file read.
+pub fn read_csv_records<R: Read>(
+    reader: R,
+    opts: &CsvOptions,
+    records: Range<usize>,
+) -> Result<Table> {
+    if !opts.delimiter.is_ascii() {
+        let mut buf = String::new();
+        BufReader::new(reader).read_to_string(&mut buf)?;
+        let t = read_csv_str(&buf, opts)?;
+        let lo = records.start.min(t.num_rows());
+        // Clamp inverted ranges to empty, like the streaming path.
+        let hi = records.end.min(t.num_rows()).max(lo);
+        return Ok(t.slice(lo, hi - lo));
+    }
+    let mut parts: Vec<Table> = Vec::new();
+    let schema = stream_csv(reader, opts, Some(records), &mut |t| {
+        parts.push(t);
+        Ok(())
+    })?;
+    if parts.is_empty() {
+        return Ok(Table::empty(schema));
+    }
+    Table::concat_all(&schema, &parts)
+}
+
+/// Fill `buf` from `reader`, retrying short reads; returns the bytes
+/// read (< `buf.len()` only at EOF).
+fn read_full<R: Read>(reader: &mut R, buf: &mut [u8]) -> Result<usize> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(filled)
+}
+
+/// One row-aligned run of complete records cut from the byte stream.
+struct Segment {
+    /// The raw text of the complete records (UTF-8 validated).
+    text: String,
+    /// Record byte ranges within `text` (empty lines already skipped,
+    /// trailing `\r` already stripped).
+    ranges: Vec<(usize, usize)>,
+    /// Absolute ordinal (0-based, header included) of `ranges[0]`.
+    first_record: usize,
+    /// File byte offset of `text[0]`.
+    byte_base: u64,
+    /// Raw `\n` count in the file before `text[0]`.
+    line_base: u64,
+}
+
+/// Chunked boundary scanner: reads fixed-size chunks, carries the DFA
+/// state across seams, and yields row-aligned [`Segment`]s. The bytes
+/// of the trailing partial record are kept (never rescanned — the
+/// carried state already summarises them), so memory is bounded by the
+/// chunk size plus the longest single record.
+struct CsvChunkScanner<R: Read> {
+    reader: R,
+    delim: u8,
+    /// Reusable chunk buffer (allocated once, `ingest_chunk_bytes`
+    /// long).
+    scratch: Vec<u8>,
+    /// Partial trailing record (always starts at a record start).
+    pending: Vec<u8>,
+    /// Scan state after the last byte of `pending`.
+    state: ScanState,
+    byte_base: u64,
+    line_base: u64,
+    records_seen: usize,
+    eof: bool,
+}
+
+impl<R: Read> CsvChunkScanner<R> {
+    fn new(reader: R, delim: u8) -> CsvChunkScanner<R> {
+        CsvChunkScanner {
+            reader,
+            delim,
+            scratch: vec![0u8; exec::ingest_chunk_bytes().max(1)],
+            pending: Vec::new(),
+            state: ScanState::FieldStart,
+            byte_base: 0,
+            line_base: 0,
+            records_seen: 0,
+            eof: false,
+        }
+    }
+
+    fn make_segment(
+        &mut self,
+        text_bytes: Vec<u8>,
+        ranges: Vec<(usize, usize)>,
+    ) -> Result<Segment> {
+        let text = String::from_utf8(text_bytes).map_err(|_| {
+            RylonError::parse(format!(
+                "csv: invalid utf-8 near byte {}",
+                self.byte_base
+            ))
+        })?;
+        let seg = Segment {
+            first_record: self.records_seen,
+            byte_base: self.byte_base,
+            line_base: self.line_base,
+            ranges,
+            text,
+        };
+        self.records_seen += seg.ranges.len();
+        self.byte_base += seg.text.len() as u64;
+        self.line_base += count_newlines(seg.text.as_bytes());
+        Ok(seg)
+    }
+
+    fn next_segment(&mut self) -> Result<Option<Segment>> {
+        loop {
+            if self.eof {
+                if self.pending.is_empty() {
+                    return Ok(None);
+                }
+                // The remainder is one final record (an unterminated
+                // quote reaches here too; `split_record` rejects it).
+                let bytes = std::mem::take(&mut self.pending);
+                let mut ranges = Vec::new();
+                push_record_range(&mut ranges, &bytes, 0, bytes.len());
+                if ranges.is_empty() {
+                    // Lone "\r" or nothing parseable: consume silently,
+                    // exactly like the whole-buffer scan.
+                    return Ok(None);
+                }
+                let seg = self.make_segment(bytes, ranges)?;
+                return Ok(Some(seg));
+            }
+            let mut scratch = std::mem::take(&mut self.scratch);
+            let n = read_full(&mut self.reader, &mut scratch)?;
+            let fresh_start = self.pending.len();
+            self.pending.extend_from_slice(&scratch[..n]);
+            self.scratch = scratch;
+            if n == 0 {
+                self.eof = true;
+                continue;
+            }
+            // Scan only the fresh bytes: the carried state already
+            // covers `pending`, so total scan work stays O(file).
+            let (rel, exit) = {
+                let fresh = &self.pending[fresh_start..];
+                scan_boundaries(fresh, self.delim, self.state)
+            };
+            self.state = exit;
+            if rel.is_empty() {
+                continue; // no complete record yet; keep accumulating
+            }
+            let nls: Vec<usize> =
+                rel.iter().map(|&i| i + fresh_start).collect();
+            let cut = *nls.last().expect("non-empty boundary list") + 1;
+            let mut ranges = Vec::new();
+            let mut start = 0usize;
+            for &nl in &nls {
+                push_record_range(&mut ranges, &self.pending, start, nl);
+                start = nl + 1;
+            }
+            let tail = self.pending[cut..].to_vec();
+            let mut bytes = std::mem::take(&mut self.pending);
+            bytes.truncate(cut);
+            self.pending = tail;
+            if ranges.is_empty() {
+                // Only empty lines in this cut; account for the
+                // consumed bytes and keep reading.
+                self.byte_base += cut as u64;
+                self.line_base += count_newlines(&bytes);
+                continue;
+            }
+            let seg = self.make_segment(bytes, ranges)?;
+            return Ok(Some(seg));
+        }
+    }
+}
+
+/// The streaming core: scan → (header, inference) → chunk-parallel
+/// parse → sink, with chunks held only until the schema is resolved.
+/// `take` restricts parsing to data records with global index in the
+/// range (scan and inference still cover the whole stream).
+fn stream_csv<R: Read>(
+    reader: R,
+    opts: &CsvOptions,
+    take: Option<Range<usize>>,
+    sink: &mut dyn FnMut(Table) -> Result<()>,
+) -> Result<Schema> {
+    let header_rows = opts.has_header as usize;
+    let mut scanner = CsvChunkScanner::new(reader, opts.delimiter as u8);
+    let mut header: Option<Vec<String>> = None;
+    let mut header_pending = opts.has_header;
+    let mut schema: Option<Schema> = opts.schema.clone();
+    let mut samples: Vec<Vec<String>> = Vec::new();
+    let mut held: Vec<Segment> = Vec::new();
+
+    while let Some(mut seg) = scanner.next_segment()? {
+        if header_pending {
+            let (s, e) = seg.ranges[0];
+            header = Some(split_record(
+                &seg.text[s..e],
+                opts.delimiter,
+                || record_pos(&seg.text, s, seg.byte_base, seg.line_base),
+            )?);
+            seg.ranges.remove(0);
+            seg.first_record += 1;
+            header_pending = false;
+            if seg.ranges.is_empty() {
+                continue;
+            }
+        }
+        if schema.is_none() {
+            // Sample the first `infer_rows` data records, exactly like
+            // the whole-buffer reader (so split errors surface in the
+            // same order and inference sees the same cells).
+            for &(s, e) in
+                seg.ranges.iter().take(opts.infer_rows - samples.len())
+            {
+                samples.push(split_record(
+                    &seg.text[s..e],
+                    opts.delimiter,
+                    || record_pos(&seg.text, s, seg.byte_base, seg.line_base),
+                )?);
+            }
+            if samples.len() >= opts.infer_rows {
+                schema = Some(infer_schema(header.as_ref(), &samples)?);
+            } else {
+                held.push(seg);
+                continue;
+            }
+        }
+        let sch = schema.as_ref().expect("schema resolved");
+        for h in held.drain(..) {
+            if let Some(t) =
+                parse_segment(&h, sch, opts, header_rows, take.as_ref())?
+            {
+                sink(t)?;
+            }
+        }
+        if let Some(t) =
+            parse_segment(&seg, sch, opts, header_rows, take.as_ref())?
+        {
+            sink(t)?;
+        }
+    }
+    // EOF with fewer than `infer_rows` records: infer from what we saw.
+    if schema.is_none() {
+        schema = Some(infer_schema(header.as_ref(), &samples)?);
+        let sch = schema.as_ref().expect("schema resolved");
+        for h in held.drain(..) {
+            if let Some(t) =
+                parse_segment(&h, sch, opts, header_rows, take.as_ref())?
+            {
+                sink(t)?;
+            }
+        }
+    }
+    Ok(schema.expect("schema resolved"))
+}
+
+/// Parse one segment's data records (filtered by `take`) on the worker
+/// pool. Returns `None` when the filter selects nothing.
+fn parse_segment(
+    seg: &Segment,
+    schema: &Schema,
+    opts: &CsvOptions,
+    header_rows: usize,
+    take: Option<&Range<usize>>,
+) -> Result<Option<Table>> {
+    // Data index of the segment's first record (the header was removed
+    // before any segment reaches here).
+    let data_first = seg.first_record - header_rows;
+    let (lo, hi) = match take {
+        Some(r) => {
+            let lo = r.start.saturating_sub(data_first).min(seg.ranges.len());
+            let hi = r.end.saturating_sub(data_first).min(seg.ranges.len());
+            (lo, hi.max(lo))
+        }
+        None => (0, seg.ranges.len()),
+    };
+    let ranges = &seg.ranges[lo..hi];
+    if ranges.is_empty() {
+        return Ok(None);
+    }
+    // The absolute ordinal of ranges[0], for error messages that match
+    // a whole-buffer serial parse.
+    let first_ord = seg.first_record + lo;
+    let exec = exec::parallelism_for(ranges.len());
+    let chunks = exec::split_even(ranges.len(), exec.threads());
+    let parts: Vec<Result<Table>> = exec::map_parallel(chunks, |m| {
+        parse_records(
+            &seg.text,
+            &ranges[m.range()],
+            schema,
+            first_ord + m.start,
+            opts.delimiter,
+            seg.byte_base,
+            seg.line_base,
+        )
+    });
+    let tables = parts.into_iter().collect::<Result<Vec<Table>>>()?;
+    Ok(Some(Table::concat_all(schema, &tables)?))
+}
+
+/// Parse CSV text already in memory — the whole-buffer two-pass reader.
+/// Pass 1 (the boundary scan) runs the speculative parallel scan on
+/// large buffers; pass 2 parses row-aligned chunks on the worker pool.
+/// Bit-identical to a serial parse at any thread count.
 pub fn read_csv_str(buf: &str, opts: &CsvOptions) -> Result<Table> {
     let ranges = scan_records(buf, opts.delimiter);
     let has_header = opts.has_header && !ranges.is_empty();
     let header: Option<Vec<String>> = if has_header {
         let (s, e) = ranges[0];
-        Some(split_record(&buf[s..e], opts.delimiter)?)
+        Some(split_record(&buf[s..e], opts.delimiter, || {
+            record_pos(buf, s, 0, 0)
+        })?)
     } else {
         None
     };
@@ -257,37 +896,18 @@ pub fn read_csv_str(buf: &str, opts: &CsvOptions) -> Result<Table> {
             let mut sample_rows: Vec<Vec<String>> =
                 Vec::with_capacity(opts.infer_rows.min(records.len()));
             for &(s, e) in records.iter().take(opts.infer_rows) {
-                sample_rows.push(split_record(&buf[s..e], opts.delimiter)?);
+                sample_rows.push(split_record(
+                    &buf[s..e],
+                    opts.delimiter,
+                    || record_pos(buf, s, 0, 0),
+                )?);
             }
-            let width = header
-                .as_ref()
-                .map(|h| h.len())
-                .or_else(|| sample_rows.first().map(|r| r.len()))
-                .ok_or_else(|| RylonError::parse("empty csv"))?;
-            let fields = (0..width)
-                .map(|c| {
-                    let name = header
-                        .as_ref()
-                        .map(|h| h[c].clone())
-                        .unwrap_or_else(|| format!("c{c}"));
-                    let samples: Vec<&str> = sample_rows
-                        .iter()
-                        .map(|r| r.get(c).map(|s| s.as_str()).unwrap_or(""))
-                        .collect();
-                    Field::new(name, infer_dtype(&samples))
-                })
-                .collect();
-            Schema::new(fields)
+            infer_schema(header.as_ref(), &sample_rows)?
         }
     };
 
     if records.is_empty() {
-        let cols = schema
-            .fields()
-            .iter()
-            .map(|f| ColumnBuilder::new(f.dtype, 0).finish())
-            .collect();
-        return Table::try_new(schema, cols);
+        return Ok(Table::empty(schema));
     }
 
     // Pass 2: chunked parse — each chunk is a run of whole records;
@@ -305,13 +925,15 @@ pub fn read_csv_str(buf: &str, opts: &CsvOptions) -> Result<Table> {
             schema_ref,
             m.start + header_rows,
             delim,
+            0,
+            0,
         )
     });
     let tables = parts.into_iter().collect::<Result<Vec<Table>>>()?;
     Table::concat_all(&schema, &tables)
 }
 
-/// Read a CSV file.
+/// Read a CSV file (streaming — see [`read_csv_from`]).
 pub fn read_csv(path: impl AsRef<Path>, opts: &CsvOptions) -> Result<Table> {
     let f = std::fs::File::open(path)?;
     read_csv_from(f, opts)
@@ -449,6 +1071,38 @@ mod tests {
     }
 
     #[test]
+    fn stray_quote_error_reports_byte_and_line() {
+        // The fast-fail must point at the offending record: absolute
+        // byte offset and 1-based line number, identical from the
+        // whole-buffer and the streamed reader at any chunk size.
+        let data = "a,b\n1,2\"x\n3,4\n";
+        let want = "parse error: unterminated quote in record starting \
+                    at byte 4, line 2: \"1,2\\\"x\"";
+        let whole = read_csv_str(data, &CsvOptions::default()).unwrap_err();
+        assert_eq!(whole.to_string(), want);
+        for chunk in [1usize, 3, 64] {
+            let streamed = crate::exec::with_ingest_chunk_bytes(chunk, || {
+                read_csv_from(data.as_bytes(), &CsvOptions::default())
+                    .unwrap_err()
+            });
+            assert_eq!(streamed.to_string(), want, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn stray_quote_error_counts_quoted_newlines_as_lines() {
+        // A quoted newline in an earlier record still advances the
+        // reported line number (lines are raw `\n`s, not records).
+        let data = "s,v\n\"a\nb\",1\nx,2\"y\n";
+        let err = read_csv_str(data, &CsvOptions::default()).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("at byte 12, line 4"),
+            "unexpected message: {msg}"
+        );
+    }
+
+    #[test]
     fn escaped_quote_before_newline_stays_quoted() {
         // `""` inside a quoted field is an escaped quote, not a close:
         // the newline after it is still part of the field.
@@ -513,6 +1167,135 @@ mod tests {
         assert_eq!(serial.num_rows(), 500);
         assert_eq!(serial.schema().field(2).dtype, DataType::Float64);
         assert_eq!(serial.column(1).null_count(), 125);
+    }
+
+    #[test]
+    fn streamed_parse_matches_whole_buffer_at_tiny_chunks() {
+        // Chunk seams fall inside quoted fields, escaped quotes, CRLF
+        // pairs, and multibyte characters; every chunk size must still
+        // reproduce the whole-buffer parse bit for bit.
+        let mut data = String::from("id,s\n");
+        for i in 0..200 {
+            let s = match i % 5 {
+                0 => format!("\"multi\nline {i}\""),
+                1 => format!("\"esc\"\"aped {i}\""),
+                2 => format!("\"crlf\r\nin {i}\""),
+                3 => format!("日本語{i}"),
+                _ => format!("plain{i}"),
+            };
+            data.push_str(&format!("{i},{s}\r\n"));
+        }
+        let whole = read_csv_str(&data, &CsvOptions::default()).unwrap();
+        for chunk in [1usize, 2, 7, 64, 333, 1 << 20] {
+            let streamed = crate::exec::with_ingest_chunk_bytes(chunk, || {
+                read_csv_from(data.as_bytes(), &CsvOptions::default())
+                    .unwrap()
+            });
+            assert_eq!(streamed, whole, "diverged at chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn speculative_scan_matches_serial_scan() {
+        // Directly pin the parallel boundary scan against the serial
+        // DFA over adversarial quoting, at several thread counts.
+        let mut data = String::new();
+        for i in 0..300 {
+            data.push_str(&match i % 6 {
+                0 => format!("\"q,{i}\nx\",{i}\n"),
+                1 => format!("{i},\"\"\n"),
+                2 => format!("\"\"\"{i}\"\"\",y\n"),
+                3 => format!("plain{i},z\n"),
+                4 => String::from("\n"),
+                _ => format!("a\"b{i},w\r\n"),
+            });
+        }
+        let bytes = data.as_bytes();
+        let (serial, serial_exit) = scan_range_serial(
+            bytes,
+            0..bytes.len(),
+            b',',
+            ScanState::FieldStart,
+        );
+        for threads in [2usize, 3, 8] {
+            let (par, par_exit) = crate::exec::with_intra_op_threads(
+                threads,
+                || {
+                    crate::exec::with_par_row_threshold(1, || {
+                        scan_boundaries(bytes, b',', ScanState::FieldStart)
+                    })
+                },
+            );
+            assert_eq!(par, serial, "scan diverged at {threads} threads");
+            assert_eq!(par_exit, serial_exit);
+        }
+    }
+
+    #[test]
+    fn chunked_sink_streams_in_file_order() {
+        let mut data = String::from("id\n");
+        for i in 0..50 {
+            data.push_str(&format!("{i}\n"));
+        }
+        let mut ids: Vec<i64> = Vec::new();
+        let mut chunks = 0usize;
+        let schema = crate::exec::with_ingest_chunk_bytes(16, || {
+            read_csv_chunked(data.as_bytes(), &CsvOptions::default(), |t| {
+                chunks += 1;
+                ids.extend_from_slice(t.column(0).i64_values());
+                Ok(())
+            })
+            .unwrap()
+        });
+        assert_eq!(schema.field(0).dtype, DataType::Int64);
+        assert!(chunks > 1, "tiny chunks must yield several tables");
+        assert_eq!(ids, (0..50).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn count_and_range_read_partition_the_file() {
+        let mut data = String::from("id,s\n");
+        for i in 0..97 {
+            let s = if i % 7 == 0 {
+                format!("\"x,\n{i}\"")
+            } else {
+                format!("s{i}")
+            };
+            data.push_str(&format!("{i},{s}\n"));
+        }
+        let whole = read_csv_str(&data, &CsvOptions::default()).unwrap();
+        crate::exec::with_ingest_chunk_bytes(32, || {
+            let n = count_csv_records(
+                data.as_bytes(),
+                &CsvOptions::default(),
+            )
+            .unwrap();
+            assert_eq!(n, 97);
+            // Three blocks concatenate back to the whole table.
+            let mut parts = Vec::new();
+            for (lo, hi) in [(0usize, 33usize), (33, 66), (66, 97)] {
+                parts.push(
+                    read_csv_records(
+                        data.as_bytes(),
+                        &CsvOptions::default(),
+                        lo..hi,
+                    )
+                    .unwrap(),
+                );
+            }
+            let merged =
+                Table::concat_all(whole.schema(), &parts).unwrap();
+            assert_eq!(merged, whole);
+            // An empty block still resolves the file's schema.
+            let empty = read_csv_records(
+                data.as_bytes(),
+                &CsvOptions::default(),
+                5..5,
+            )
+            .unwrap();
+            assert_eq!(empty.num_rows(), 0);
+            assert_eq!(empty.schema(), whole.schema());
+        });
     }
 
     #[test]

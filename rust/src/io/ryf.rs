@@ -28,6 +28,73 @@ pub struct GroupMeta {
     pub rows: u64,
 }
 
+/// Incremental RYF writer: append row groups one at a time, then
+/// `finish()` to write the footer (the group count in the header is
+/// back-patched). Lets a bounded-memory producer — e.g. the streaming
+/// CSV reader's chunk tables — convert to RYF without ever holding the
+/// whole table.
+pub struct RyfWriter {
+    f: std::fs::File,
+    metas: Vec<GroupMeta>,
+    offset: u64,
+}
+
+impl RyfWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<RyfWriter> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(MAGIC)?;
+        // Placeholder group count, patched in `finish`.
+        f.write_all(&0u32.to_le_bytes())?;
+        Ok(RyfWriter {
+            f,
+            metas: Vec::new(),
+            offset: (MAGIC.len() + 4) as u64,
+        })
+    }
+
+    /// Append one table as one row group (the caller controls group
+    /// sizing by how it slices).
+    pub fn append(&mut self, group: &Table) -> Result<()> {
+        let bytes = serialize_table(group);
+        self.f.write_all(&bytes)?;
+        self.metas.push(GroupMeta {
+            offset: self.offset,
+            len: bytes.len() as u64,
+            rows: group.num_rows() as u64,
+        });
+        self.offset += bytes.len() as u64;
+        Ok(())
+    }
+
+    pub fn groups(&self) -> usize {
+        self.metas.len()
+    }
+
+    /// Write the footer, patch the header's group count, and flush.
+    /// Returns the group count. At least one group must have been
+    /// appended (append an empty table for a schema-only file).
+    pub fn finish(mut self) -> Result<usize> {
+        if self.metas.is_empty() {
+            return Err(RylonError::invalid(
+                "ryf: no groups appended (append an empty table for a \
+                 schema-only file)",
+            ));
+        }
+        let footer_off = self.offset;
+        for m in &self.metas {
+            self.f.write_all(&m.offset.to_le_bytes())?;
+            self.f.write_all(&m.len.to_le_bytes())?;
+            self.f.write_all(&m.rows.to_le_bytes())?;
+        }
+        self.f.write_all(&footer_off.to_le_bytes())?;
+        self.f.seek(SeekFrom::Start(MAGIC.len() as u64))?;
+        self.f
+            .write_all(&(self.metas.len() as u32).to_le_bytes())?;
+        self.f.flush()?;
+        Ok(self.metas.len())
+    }
+}
+
 /// Write `table` as an RYF file with row groups of `group_rows` rows.
 pub fn write_ryf(
     table: &Table,
@@ -37,35 +104,16 @@ pub fn write_ryf(
     if group_rows == 0 {
         return Err(RylonError::invalid("group_rows must be >= 1"));
     }
-    let mut f = std::fs::File::create(path)?;
     let n_groups = if table.num_rows() == 0 {
         1
     } else {
         table.num_rows().div_ceil(group_rows)
     };
-    f.write_all(MAGIC)?;
-    f.write_all(&(n_groups as u32).to_le_bytes())?;
-    let mut metas: Vec<GroupMeta> = Vec::with_capacity(n_groups);
-    let mut offset = (MAGIC.len() + 4) as u64;
+    let mut w = RyfWriter::create(path)?;
     for g in 0..n_groups {
-        let slice = table.slice(g * group_rows, group_rows);
-        let bytes = serialize_table(&slice);
-        f.write_all(&bytes)?;
-        metas.push(GroupMeta {
-            offset,
-            len: bytes.len() as u64,
-            rows: slice.num_rows() as u64,
-        });
-        offset += bytes.len() as u64;
+        w.append(&table.slice(g * group_rows, group_rows))?;
     }
-    let footer_off = offset;
-    for m in &metas {
-        f.write_all(&m.offset.to_le_bytes())?;
-        f.write_all(&m.len.to_le_bytes())?;
-        f.write_all(&m.rows.to_le_bytes())?;
-    }
-    f.write_all(&footer_off.to_le_bytes())?;
-    f.flush()?;
+    w.finish()?;
     Ok(())
 }
 
@@ -295,6 +343,33 @@ mod tests {
             });
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn incremental_writer_matches_bulk_writer() {
+        // Appending slices one group at a time (the streaming-convert
+        // path) must produce a file the readers see identically to the
+        // bulk writer's.
+        let path = tmp("inc");
+        let bulk_path = tmp("inc_bulk");
+        let table = t(350);
+        let mut w = RyfWriter::create(&path).unwrap();
+        for g in 0..(350usize.div_ceil(100)) {
+            w.append(&table.slice(g * 100, 100)).unwrap();
+        }
+        assert_eq!(w.groups(), 4);
+        assert_eq!(w.finish().unwrap(), 4);
+        write_ryf(&table, &bulk_path, 100).unwrap();
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            std::fs::read(&bulk_path).unwrap(),
+            "incremental and bulk writers must emit identical bytes"
+        );
+        assert_eq!(read_ryf(&path).unwrap(), table);
+        // Zero appends is an error, not a corrupt file.
+        assert!(RyfWriter::create(&path).unwrap().finish().is_err());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&bulk_path).ok();
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //!   join     distributed join of two CSVs (threads or sim fabric)
 //!   etl      run the demo ETL pipeline end-to-end
 //!   bench    regenerate a paper figure (--fig fig10|fig11|fig12|ablations)
+//!   convert  streaming bounded-memory CSV → RYF conversion
 //!
 //! `--config path.toml` loads a [`rylon::conf::RylonConfig`]; flags
 //! override config values. Run `rylon help` for flag details.
@@ -42,6 +43,8 @@ COMMANDS
            [--max-world P] [--artifacts DIR]
   sql      --query 'SELECT …' --tables name=a.csv,name2=b.csv
            [--out FILE.csv]
+  convert  --in FILE.csv --out FILE.ryf [--group-rows N]
+           (streaming, bounded-memory CSV → RYF conversion)
   help
 
 GLOBAL FLAGS
@@ -51,6 +54,9 @@ GLOBAL FLAGS
   --par-threshold N     rows below which kernels stay serial
                         (default 4096; lower it to force the parallel
                         paths on small inputs)
+  --ingest-chunk BYTES  streaming CSV ingest chunk size (0 = default
+                        4 MiB; raw-text memory during ingest is
+                        O(chunk), not O(file))
 ";
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -130,6 +136,8 @@ fn make_cluster(
             .usize_or("intra-threads", cfg.intra_op_threads),
         par_row_threshold: args
             .usize_or("par-threshold", cfg.par_row_threshold),
+        ingest_chunk_bytes: args
+            .usize_or("ingest-chunk", cfg.ingest_chunk_bytes),
     })
 }
 
@@ -446,6 +454,68 @@ fn cmd_sql(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_convert(args: &Args) -> Result<()> {
+    use rylon::io::ryf::RyfWriter;
+    use rylon::table::Table;
+
+    let input = args.req("in")?;
+    let out = args.req("out")?;
+    // 0 = one row group per streamed chunk (group sizes then follow the
+    // ingest chunk size; boundaries reset per chunk, so explicit
+    // --group-rows gives approximate, not exact, group sizes).
+    let group_rows = args.usize_or("group-rows", 0);
+    let timer = rylon::metrics::Timer::start();
+    let f = std::fs::File::open(input)?;
+    // Write to a temp path and rename on success, so a mid-stream parse
+    // error never leaves a truncated footer-less RYF at --out (or
+    // clobbers a previous good conversion).
+    let tmp = format!("{out}.tmp");
+    let mut rows = 0usize;
+    let convert = || -> Result<(rylon::types::Schema, usize)> {
+        let mut w = RyfWriter::create(&tmp)?;
+        // Streaming conversion: each parsed chunk is appended as row
+        // group(s) and dropped, so neither the raw text nor the parsed
+        // table is ever whole in memory.
+        let schema = rylon::io::csv::read_csv_chunked(
+            f,
+            &CsvOptions::default(),
+            |t| {
+                rows += t.num_rows();
+                if group_rows == 0 {
+                    w.append(&t)
+                } else {
+                    let groups = t.num_rows().div_ceil(group_rows).max(1);
+                    for g in 0..groups {
+                        w.append(&t.slice(g * group_rows, group_rows))?;
+                    }
+                    Ok(())
+                }
+            },
+        )?;
+        if w.groups() == 0 {
+            // Schema-only file: one empty group carries the schema.
+            w.append(&Table::empty(schema.clone()))?;
+        }
+        let groups = w.finish()?;
+        std::fs::rename(&tmp, out)?;
+        Ok((schema, groups))
+    };
+    let (schema, groups) = match convert() {
+        Ok(r) => r,
+        Err(e) => {
+            std::fs::remove_file(&tmp).ok();
+            return Err(e);
+        }
+    };
+    println!(
+        "converted {} rows ({}) into {groups} row groups in {:.3}s: {out}",
+        human_count(rows as u64),
+        schema,
+        timer.seconds()
+    );
+    Ok(())
+}
+
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv)?;
@@ -461,6 +531,11 @@ fn run() -> Result<()> {
     rylon::exec::set_par_row_threshold(
         args.usize_or("par-threshold", cfg.par_row_threshold),
     );
+    rylon::exec::set_ingest_chunk_bytes(
+        rylon::exec::resolve_ingest_chunk_bytes(
+            args.usize_or("ingest-chunk", cfg.ingest_chunk_bytes),
+        ),
+    );
     match args.cmd.as_str() {
         "gen" => cmd_gen(&args),
         "inspect" => cmd_inspect(&args),
@@ -468,6 +543,7 @@ fn run() -> Result<()> {
         "etl" => cmd_etl(&args, &cfg),
         "bench" => cmd_bench(&args, &cfg),
         "sql" => cmd_sql(&args),
+        "convert" => cmd_convert(&args),
         "help" | "-h" | "--help" => {
             print!("{HELP}");
             Ok(())

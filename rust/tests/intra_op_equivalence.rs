@@ -394,6 +394,62 @@ fn csv_parse_parallel_vs_serial_roundtrip() {
 }
 
 #[test]
+fn csv_streamed_ingest_matches_whole_buffer_at_all_threads_and_chunks() {
+    use rylon::io::csv::{read_csv_from, read_csv_str, write_csv_to, CsvOptions};
+
+    // Same adversarial shape as the whole-buffer roundtrip above —
+    // quoted commas/newlines, escapes, multibyte — but parsed through
+    // the streaming reader with chunk sizes that put seams inside every
+    // construct, at every thread count (speculative parallel boundary
+    // scan engaged via the forced-down row threshold).
+    let n = 4_000usize;
+    let t = Table::from_columns(vec![
+        ("k", Column::from_i64((0..n as i64).collect())),
+        (
+            "s",
+            Column::from_str(
+                &(0..n)
+                    .map(|i| match i % 5 {
+                        0 => format!("comma,{i}"),
+                        1 => format!("quote\"{i}"),
+                        2 => format!("日本語{i}"),
+                        3 => format!("line\nbreak{i}"),
+                        _ => format!("plain{i}"),
+                    })
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+    .unwrap();
+    let mut buf = Vec::new();
+    write_csv_to(&t, &mut buf, &CsvOptions::default()).unwrap();
+    let csv = String::from_utf8(buf).unwrap();
+    let reference = exec::with_intra_op_threads(1, || {
+        read_csv_str(&csv, &CsvOptions::default()).unwrap()
+    });
+    for threads in [1usize, 2, 4, 8] {
+        for chunk in [64usize, 4096, 1 << 22] {
+            let streamed = exec::with_intra_op_threads(threads, || {
+                exec::with_par_row_threshold(1, || {
+                    exec::with_ingest_chunk_bytes(chunk, || {
+                        read_csv_from(
+                            csv.as_bytes(),
+                            &CsvOptions::default(),
+                        )
+                        .unwrap()
+                    })
+                })
+            });
+            assert_eq!(
+                streamed, reference,
+                "streamed ingest diverged at {threads} threads, \
+                 chunk {chunk}"
+            );
+        }
+    }
+}
+
+#[test]
 fn ryf_read_parallel_vs_serial_roundtrip() {
     use rylon::io::ryf::{read_ryf, read_ryf_partition, write_ryf};
 

@@ -7,6 +7,11 @@ use std::collections::HashMap;
 
 use rylon::column::Column;
 use rylon::dist::{Cluster, DistConfig};
+use rylon::exec;
+use rylon::io::csv::{
+    count_csv_records, read_csv_from, read_csv_records, read_csv_str,
+    write_csv_to, CsvOptions,
+};
 use rylon::net::wire::{deserialize_table, serialize_table};
 use rylon::ops::join::{join, JoinAlgo, JoinOptions, JoinType};
 use rylon::ops::orderby::{orderby, SortKey};
@@ -59,6 +64,228 @@ fn row_multiset(t: &Table) -> HashMap<String, usize> {
         *m.entry(key).or_insert(0) += 1;
     }
     m
+}
+
+/// One random CSV cell's raw (unencoded) content. `kind` fixes the
+/// column's type so schema inference stays stable across the whole
+/// column: mixing ints and strings in one column would make rows past
+/// the inference window fail to parse (equally in every reader, but
+/// the property asserts successful 3-way equality).
+fn random_cell(rng: &mut Xoshiro256, kind: u64) -> String {
+    if rng.next_below(6) == 0 {
+        return String::new(); // null cell
+    }
+    match kind {
+        0 => format!("{}", rng.next_below(2000) as i64 - 1000),
+        // Always a decimal point so the column infers f64, not i64.
+        1 => format!("{}.5", rng.next_below(1000)),
+        2 => match rng.next_below(4) {
+            0 => "true".to_string(),
+            1 => "false".to_string(),
+            2 => "True".to_string(),
+            _ => "False".to_string(),
+        },
+        // Strings always start with a letter so an all-numeric-looking
+        // sample can't flip the inferred type; embedded commas, quotes,
+        // newlines (bare and CRLF), and multibyte text stress the
+        // boundary scan. A `\r` only ever precedes `\n`, so the
+        // line-ending `\r`-strip can't eat cell content on rewrite.
+        _ => match rng.next_below(8) {
+            0 => format!("s,{}", rng.next_below(100)),
+            1 => format!("s\"q{}", rng.next_below(100)),
+            2 => format!("s\n{}", rng.next_below(100)),
+            3 => format!("s\r\nx{}", rng.next_below(100)),
+            4 => format!("s日本語{}", rng.next_below(100)),
+            _ => format!("s{}", rng.next_below(1000)),
+        },
+    }
+}
+
+/// Append `cell` to `out` with RFC 4180 encoding: quoting is forced
+/// when the content requires it and applied gratuitously at random
+/// otherwise (a quoted plain field must parse identically).
+fn encode_cell(out: &mut String, cell: &str, rng: &mut Xoshiro256) {
+    let must_quote =
+        cell.contains(',') || cell.contains('"') || cell.contains('\n');
+    if must_quote || rng.next_below(4) == 0 {
+        out.push('"');
+        out.push_str(&cell.replace('"', "\"\""));
+        out.push('"');
+    } else {
+        out.push_str(cell);
+    }
+}
+
+/// Random RFC 4180 document: random width/height, per-column cell
+/// kinds, random gratuitous quoting, LF/CRLF line endings, interspersed
+/// blank lines, and random trailing-newline presence.
+fn random_csv(rng: &mut Xoshiro256, has_header: bool) -> String {
+    let cols = 2 + rng.next_below(4) as usize;
+    let kinds: Vec<u64> =
+        (0..cols).map(|_| rng.next_below(4)).collect();
+    // Headerless empty documents are rejected ("empty csv") — the
+    // property wants parses that succeed, so keep one row minimum.
+    let min_rows = if has_header { 0 } else { 1 };
+    let rows = min_rows + rng.next_below(60) as usize;
+    let mut out = String::new();
+    if has_header {
+        for c in 0..cols {
+            if c > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("c{c}"));
+        }
+        out.push('\n');
+    }
+    for r in 0..rows {
+        if rng.next_below(8) == 0 {
+            out.push('\n'); // blank line, skipped by every reader
+        }
+        for (c, &kind) in kinds.iter().enumerate() {
+            if c > 0 {
+                out.push(',');
+            }
+            let cell = random_cell(rng, kind);
+            encode_cell(&mut out, &cell, rng);
+        }
+        let last = r + 1 == rows;
+        match (last, rng.next_below(3)) {
+            (true, 0) => {} // no trailing newline
+            (_, 1) => out.push_str("\r\n"),
+            _ => out.push('\n'),
+        }
+    }
+    out
+}
+
+/// The tentpole invariant: streamed parse == whole-buffer parse ==
+/// serial parse, at every thread count and at chunk sizes small enough
+/// to force many chunk seams (including seams inside quoted fields,
+/// escape pairs, CRLF pairs, and multibyte characters).
+fn assert_parse_modes_agree(
+    text: &str,
+    opts: &CsvOptions,
+    label: &str,
+) -> Table {
+    let reference = exec::with_intra_op_threads(1, || {
+        read_csv_str(text, opts)
+            .unwrap_or_else(|e| panic!("{label}: serial parse failed: {e}"))
+    });
+    for threads in [1usize, 2, 4, 8] {
+        exec::with_intra_op_threads(threads, || {
+            exec::with_par_row_threshold(1, || {
+                let whole = read_csv_str(text, opts).unwrap();
+                assert_eq!(
+                    whole, reference,
+                    "{label}: whole-buffer diverged at {threads} threads"
+                );
+                for chunk in [64usize, 257, 8192] {
+                    let streamed = exec::with_ingest_chunk_bytes(chunk, || {
+                        read_csv_from(text.as_bytes(), opts).unwrap()
+                    });
+                    assert_eq!(
+                        streamed, reference,
+                        "{label}: streamed diverged at {threads} \
+                         threads, chunk {chunk}"
+                    );
+                }
+            })
+        });
+    }
+    reference
+}
+
+#[test]
+fn prop_rfc4180_streamed_equals_whole_buffer_equals_serial() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(9000 + seed);
+        let has_header = rng.next_below(2) == 0;
+        let text = random_csv(&mut rng, has_header);
+        let opts = if has_header {
+            CsvOptions::default()
+        } else {
+            CsvOptions::default().no_header()
+        };
+        assert_parse_modes_agree(&text, &opts, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn prop_rfc4180_write_then_reread_roundtrips() {
+    // Random tables with quote/comma/newline strings and nulls survive
+    // write → re-read in every parse mode (the writer's quoting and the
+    // readers' unquoting are inverses).
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(10_000 + seed);
+        let n = 1 + rng.next_below(50) as usize;
+        let keys: Vec<Option<i64>> = (0..n)
+            .map(|_| {
+                if rng.next_below(9) == 0 {
+                    None
+                } else {
+                    Some(rng.next_below(1000) as i64 - 500)
+                }
+            })
+            .collect();
+        let strs: Vec<String> = (0..n)
+            .map(|_| random_cell(&mut rng, 3))
+            .collect();
+        // Empty string renders as an empty cell, which re-reads as
+        // null — keep the roundtrip exact by mapping "" to null here.
+        let strs: Vec<Option<String>> = strs
+            .into_iter()
+            .map(|s| if s.is_empty() { None } else { Some(s) })
+            .collect();
+        let t = Table::from_columns(vec![
+            ("k", Column::from_opt_i64(keys)),
+            ("s", Column::from_opt_str(&strs)),
+        ])
+        .unwrap();
+        let mut buf = Vec::new();
+        write_csv_to(&t, &mut buf, &CsvOptions::default()).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let opts = CsvOptions::default()
+            .with_schema(t.schema().clone());
+        let back =
+            assert_parse_modes_agree(&text, &opts, &format!("seed {seed}"));
+        assert_eq!(back, t, "seed {seed}: roundtrip changed the table");
+    }
+}
+
+#[test]
+fn prop_partitioned_record_reads_reassemble_the_file() {
+    // count + block-ranged streamed reads (the per-rank ingest path)
+    // reassemble the whole-buffer parse exactly, for any world size.
+    for seed in 0..10u64 {
+        let mut rng = Xoshiro256::new(11_000 + seed);
+        let text = random_csv(&mut rng, true);
+        let opts = CsvOptions::default();
+        let whole = read_csv_str(&text, &opts).unwrap();
+        exec::with_ingest_chunk_bytes(64, || {
+            let total =
+                count_csv_records(text.as_bytes(), &opts).unwrap();
+            assert_eq!(total, whole.num_rows(), "seed {seed}");
+            let world = 1 + (seed as usize % 4);
+            let mut parts = Vec::new();
+            let mut off = 0usize;
+            for r in 0..world {
+                let len = total / world
+                    + usize::from(r < total % world);
+                parts.push(
+                    read_csv_records(
+                        text.as_bytes(),
+                        &opts,
+                        off..off + len,
+                    )
+                    .unwrap(),
+                );
+                off += len;
+            }
+            let merged =
+                Table::concat_all(whole.schema(), &parts).unwrap();
+            assert_eq!(merged, whole, "seed {seed} world {world}");
+        });
+    }
 }
 
 #[test]
