@@ -19,6 +19,9 @@ use rylon::bench_harness::{
     measure, peak_rss_bytes, reset_peak_rss, BenchOpts, Report,
 };
 use rylon::column::Column;
+use rylon::dist::{
+    read_csv_partition_with, Cluster, DistConfig, IngestMode, IngestStats,
+};
 use rylon::exec;
 use rylon::io::csv::{read_csv, read_csv_str, write_csv, CsvOptions};
 use rylon::io::ryf::{read_ryf, write_ryf};
@@ -271,6 +274,97 @@ fn main() {
             median,
             rows_per_sec,
             rss / (1024.0 * 1024.0)
+        );
+    }
+
+    // Distributed arm: single-pass byte-range ingest vs the two-pass
+    // count-then-parse oracle. Two-pass reads 2 × world × file bytes
+    // per cluster, single-pass exactly file bytes — the wall-clock gap
+    // is the tentpole's headline number (acceptance: ≥ 1.5× at
+    // world ≥ 2). Bit-identity and the byte counter are asserted
+    // before any timing counts.
+    for world in [2usize, 4] {
+        let cluster =
+            Cluster::new(DistConfig::threads(world)).expect("cluster");
+        let byte_stats = IngestStats::new();
+        let sp = cluster
+            .run(|ctx| {
+                read_csv_partition_with(
+                    ctx,
+                    &csv_path,
+                    &CsvOptions::default(),
+                    IngestMode::SinglePass,
+                    Some(&byte_stats),
+                )
+            })
+            .expect("single-pass ingest");
+        assert_eq!(
+            byte_stats.bytes_read(),
+            file_bytes,
+            "single-pass must read each byte exactly once"
+        );
+        let tp = cluster
+            .run(|ctx| {
+                read_csv_partition_with(
+                    ctx,
+                    &csv_path,
+                    &CsvOptions::default(),
+                    IngestMode::TwoPass,
+                    None,
+                )
+            })
+            .expect("two-pass ingest");
+        assert_eq!(sp, tp, "dist ingest modes diverged at world {world}");
+
+        let time_mode = |mode: IngestMode| {
+            measure(opts, || {
+                let outs = cluster
+                    .run(|ctx| {
+                        read_csv_partition_with(
+                            ctx,
+                            &csv_path,
+                            &CsvOptions::default(),
+                            mode,
+                            None,
+                        )
+                    })
+                    .expect("dist ingest");
+                std::hint::black_box(outs.len());
+            })
+            .median
+        };
+        let sp_med = time_mode(IngestMode::SinglePass);
+        let tp_med = time_mode(IngestMode::TwoPass);
+        let speedup = tp_med / sp_med.max(1e-12);
+        for (op, med) in [
+            ("dist_ingest_single_pass", sp_med),
+            ("dist_ingest_two_pass", tp_med),
+        ] {
+            let rows_per_sec = rows as f64 / med.max(1e-12);
+            report.add_with(
+                op,
+                world as f64,
+                med,
+                vec![
+                    ("rows_per_sec".to_string(), rows_per_sec),
+                    (
+                        "speedup_single_vs_two_pass".to_string(),
+                        speedup,
+                    ),
+                ],
+            );
+            results.push(Json::obj(vec![
+                ("op", Json::str(op.to_string())),
+                ("world", Json::num(world as f64)),
+                ("seconds", Json::num(med)),
+                ("rows_per_sec", Json::num(rows_per_sec)),
+                ("speedup_single_vs_two_pass", Json::num(speedup)),
+            ]));
+        }
+        println!(
+            "  dist world={world}: single-pass {:>8.4}s  two-pass \
+             {:>8.4}s  ({speedup:.2}x)",
+            sp_med, tp_med
         );
     }
 

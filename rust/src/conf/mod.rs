@@ -156,9 +156,17 @@ pub struct RylonConfig {
     /// Streaming-ingest chunk size in bytes
     /// (`[exec] ingest_chunk_bytes`). `0` = the process default
     /// ([`crate::exec::INGEST_CHUNK_BYTES`], overridable via the
-    /// `INGEST_CHUNK_BYTES` env var). CSV ingest holds O(chunk) raw
-    /// text instead of the whole file.
+    /// `INGEST_CHUNK_BYTES` env var). The streaming CSV readers (and
+    /// the two-pass distributed fallback) hold O(chunk) raw text; the
+    /// single-pass distributed scheme holds each rank's own byte range
+    /// instead.
     pub ingest_chunk_bytes: usize,
+    /// Single-pass distributed CSV ingest
+    /// (`[exec] ingest_single_pass`). `None` (key absent) = the
+    /// process default ([`crate::exec::INGEST_SINGLE_PASS`],
+    /// overridable via the `INGEST_SINGLE_PASS` env var); `false`
+    /// forces the two-pass count-then-parse fallback.
+    pub ingest_single_pass: Option<bool>,
     pub cost: CostModel,
     /// Directory holding AOT artifacts + manifest.json.
     pub artifacts_dir: String,
@@ -173,6 +181,7 @@ impl Default for RylonConfig {
             intra_op_threads: 0,
             par_row_threshold: crate::exec::PAR_ROW_THRESHOLD,
             ingest_chunk_bytes: 0,
+            ingest_single_pass: None,
             cost: CostModel::default(),
             artifacts_dir: "artifacts".to_string(),
         }
@@ -195,6 +204,15 @@ impl RylonConfig {
                 .usize_or("exec.par_row_threshold", d.par_row_threshold),
             ingest_chunk_bytes: f
                 .usize_or("exec.ingest_chunk_bytes", d.ingest_chunk_bytes),
+            // Accept 0/1 as well as true/false — every neighbouring
+            // [exec] knob is numeric, and the env var takes 0/1 too.
+            ingest_single_pass: f
+                .get("exec.ingest_single_pass")
+                .and_then(|v| match v {
+                    ConfValue::Bool(b) => Some(*b),
+                    ConfValue::Num(n) => Some(*n != 0.0),
+                    ConfValue::Str(_) => None,
+                }),
             cost: CostModel {
                 alpha: f.f64_or("cost.alpha", dc.alpha),
                 beta: f.f64_or("cost.beta", dc.beta),
@@ -228,6 +246,7 @@ chunk_rows = 4096
 intra_op_threads = 2
 par_row_threshold = 512
 ingest_chunk_bytes = 65536
+ingest_single_pass = false
 
 [cost]
 alpha = 1e-5
@@ -256,6 +275,20 @@ ranks_per_node = 8
         assert_eq!(c.intra_op_threads, 2);
         assert_eq!(c.par_row_threshold, 512);
         assert_eq!(c.ingest_chunk_bytes, 65536);
+        assert_eq!(c.ingest_single_pass, Some(false));
+        // Key absent = defer to the process default.
+        assert_eq!(
+            RylonConfig::from_file(&ConfFile::parse("").unwrap())
+                .ingest_single_pass,
+            None
+        );
+        // Numeric 0/1 spellings work like the env var's.
+        let num = ConfFile::parse("[exec]\ningest_single_pass = 1")
+            .unwrap();
+        assert_eq!(
+            RylonConfig::from_file(&num).ingest_single_pass,
+            Some(true)
+        );
         assert_eq!(c.cost.alpha, 1e-5);
         assert_eq!(c.cost.ranks_per_node, 8);
         // Untouched keys keep defaults.

@@ -1,35 +1,58 @@
-//! Distributed streaming CSV ingest: every rank streams its **block of
-//! records** out of a shared CSV file with the bounded-memory reader
-//! ([`crate::io::csv::read_csv_records`]), so a world of ranks holds
-//! O(world × chunk + file rows) instead of world × file bytes — the
-//! chunked parallel ingest both Cylon papers treat as a first-class
-//! scaling lever.
+//! Distributed CSV ingest: every rank materialises its **block of
+//! records** from one shared CSV file. Two schemes share the entry
+//! point [`read_csv_partition`]:
 //!
-//! Two streaming passes per rank, no coordination required:
+//! * **Single-pass byte-range speculation** (the default,
+//!   [`IngestMode::SinglePass`]) — each rank reads only `file_len /
+//!   world` bytes, **once**: it scans its range through the boundary
+//!   DFA under *all three* possible entry states (it cannot know which
+//!   state the previous rank's bytes leave it in), then the ranks
+//!   exchange tiny per-range summaries (exit state per hypothesis,
+//!   boundary-newline count / first / last, raw newline count) over
+//!   the fabric. A prefix pass over the summaries — the same fix-up
+//!   the intra-rank speculative scan uses, lifted to rank granularity
+//!   — tells every rank its true entry state, so each rank disowns its
+//!   leading partial record to the left neighbour that owns the
+//!   record's start byte (a second, targeted exchange carries those
+//!   fragments), parses exactly the records that **start** in its
+//!   range, and a final [`super::rebalance`] restores the rank-major
+//!   block layout. No byte of the file is read twice by any rank:
+//!   across the cluster the file is read exactly once (asserted
+//!   through [`IngestStats`] in the test suite).
 //!
-//! 1. a boundary-scan-only pass counts the data records
-//!    ([`crate::io::csv::count_csv_records`]), giving every rank the
-//!    same total and therefore the same block partition;
-//! 2. a parse pass materialises only this rank's records (the scan
-//!    still covers the whole file — record boundaries cannot be found
-//!    without it — but foreign records are skipped unparsed and their
-//!    raw text is dropped chunk by chunk).
+//! * **Two-pass count-then-parse** ([`IngestMode::TwoPass`], the
+//!   fallback and bit-identity oracle) — a boundary-scan-only pass
+//!   counts the data records ([`crate::io::csv::count_csv_records`]),
+//!   giving every rank the same block partition, then a parse pass
+//!   streams the file again materialising only this rank's block.
+//!   Needs no coordination, but every rank reads the whole file twice
+//!   (`2 × world × file` bytes per cluster).
 //!
-//! The block partition matches `Table::slice`'s rank-major layout, so
-//! concatenating the per-rank tables in rank order reproduces the
-//! whole-file read bit for bit (schema inference included: it always
-//! samples the file's first records, whichever rank reads them).
+//! Both schemes produce **bit-identical per-rank tables** — schema
+//! inference included, because the single-pass sample exchange ships
+//! the raw text of exactly the records whole-file inference would
+//! sample — so the toggle (`[exec] ingest_single_pass`,
+//! `--ingest-single-pass`, `INGEST_SINGLE_PASS`,
+//! `DistConfig::with_ingest_single_pass`) never changes results, only
+//! I/O cost. See `docs/INGEST.md` for the full protocol walk-through.
 
+use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::RankCtx;
-use crate::error::Result;
-use crate::io::csv::{count_csv_records, read_csv_records, CsvOptions};
+use crate::error::{Result, RylonError};
+use crate::exec;
+use crate::io::csv::{
+    self, count_csv_records, CsvOptions, ScanState,
+};
+use crate::net::OutBufs;
 use crate::table::Table;
 
 /// The rank-major block `(offset, len)` of `n` records for `rank` of
 /// `world` — base rows each, one extra for the first `n % world` ranks
-/// (the same layout the integration tests slice by hand).
+/// (the same layout the integration tests slice by hand). Also used to
+/// split a file's **bytes** across ranks in the single-pass scheme.
 pub(crate) fn block_range(n: usize, rank: usize, world: usize) -> (usize, usize) {
     let base = n / world;
     let extra = n % world;
@@ -38,19 +61,696 @@ pub(crate) fn block_range(n: usize, rank: usize, world: usize) -> (usize, usize)
     (off, len)
 }
 
-/// Stream this rank's block of a CSV file into a table. Rank memory is
-/// bounded by the ingest chunk size plus the rank's own rows; the
-/// per-rank tables concatenate (in rank order) to exactly the
-/// whole-file [`crate::io::csv::read_csv`] result.
+/// Which distributed-ingest scheme [`read_csv_partition_with`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IngestMode {
+    /// Single-pass byte-range speculation: each byte of the file is
+    /// read exactly once across the cluster (see the module docs).
+    SinglePass,
+    /// Count-then-parse: two streaming passes over the whole file per
+    /// rank. The coordination-free fallback and bit-identity oracle.
+    TwoPass,
+}
+
+/// Byte-level I/O accounting for distributed ingest. Share one
+/// instance across the rank closures of a job to observe the
+/// cluster-wide read volume — the single-pass guarantee ("each byte
+/// read exactly once") is asserted against exactly this counter.
+#[derive(Debug, Default)]
+pub struct IngestStats {
+    bytes_read: AtomicU64,
+}
+
+impl IngestStats {
+    /// Fresh zeroed counters.
+    pub fn new() -> IngestStats {
+        IngestStats::default()
+    }
+
+    /// Total bytes read from source files by every ingest call handed
+    /// this instance.
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    fn add(&self, n: u64) {
+        self.bytes_read.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// `Read` adapter that feeds [`IngestStats`] (when present).
+struct CountingReader<'a, R> {
+    inner: R,
+    stats: Option<&'a IngestStats>,
+}
+
+impl<R: Read> Read for CountingReader<'_, R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        if let Some(s) = self.stats {
+            s.add(n as u64);
+        }
+        Ok(n)
+    }
+}
+
+/// Stream this rank's block of a CSV file into a table, using the
+/// scheme selected by the calling thread's `[exec] ingest_single_pass`
+/// knob (single-pass byte-range speculation by default; non-ASCII
+/// delimiters always take the two-pass path, whose whole-buffer
+/// fallback handles them). The per-rank tables concatenate (in rank
+/// order) to exactly the whole-file [`crate::io::csv::read_csv`]
+/// result, whichever scheme runs.
 pub fn read_csv_partition(
-    ctx: &RankCtx,
+    ctx: &mut RankCtx,
     path: impl AsRef<Path>,
     opts: &CsvOptions,
 ) -> Result<Table> {
+    let mode = if exec::ingest_single_pass() && opts.delimiter.is_ascii() {
+        IngestMode::SinglePass
+    } else {
+        IngestMode::TwoPass
+    };
+    read_csv_partition_with(ctx, path, opts, mode, None)
+}
+
+/// [`read_csv_partition`] with an explicit scheme and optional byte
+/// accounting — the instrumented entry point tests and benches use to
+/// pin the two schemes against each other.
+pub fn read_csv_partition_with(
+    ctx: &mut RankCtx,
+    path: impl AsRef<Path>,
+    opts: &CsvOptions,
+    mode: IngestMode,
+    stats: Option<&IngestStats>,
+) -> Result<Table> {
     let path = path.as_ref();
-    let total = count_csv_records(std::fs::File::open(path)?, opts)?;
+    match mode {
+        IngestMode::SinglePass if opts.delimiter.is_ascii() => {
+            single_pass(ctx, path, opts, stats)
+        }
+        _ => two_pass(ctx, path, opts, stats),
+    }
+}
+
+/// The two-pass fallback: count records (pass 1), then stream-parse
+/// only this rank's block (pass 2), both bounded-memory through the
+/// chunked sink. No collectives — every rank derives the same block
+/// partition from the same count.
+fn two_pass(
+    ctx: &RankCtx,
+    path: &Path,
+    opts: &CsvOptions,
+    stats: Option<&IngestStats>,
+) -> Result<Table> {
+    let counter = CountingReader {
+        inner: std::fs::File::open(path)?,
+        stats,
+    };
+    let total = count_csv_records(counter, opts)?;
     let (off, len) = block_range(total, ctx.rank, ctx.size);
-    read_csv_records(std::fs::File::open(path)?, opts, off..off + len)
+    let parser = CountingReader {
+        inner: std::fs::File::open(path)?,
+        stats,
+    };
+    let mut parts: Vec<Table> = Vec::new();
+    let schema =
+        csv::read_csv_records_chunked(parser, opts, off..off + len, |t| {
+            parts.push(t);
+            Ok(())
+        })?;
+    if parts.is_empty() {
+        return Ok(Table::empty(schema));
+    }
+    Table::concat_all(&schema, &parts)
+}
+
+// ---------------------------------------------------------------------
+// Single-pass byte-range speculation
+// ---------------------------------------------------------------------
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let s = buf
+        .get(*pos..*pos + 8)
+        .ok_or_else(|| RylonError::comm("truncated ingest summary"))?;
+    *pos += 8;
+    Ok(u64::from_le_bytes(s.try_into().expect("8-byte slice")))
+}
+
+fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    let s = buf
+        .get(*pos..*pos + 4)
+        .ok_or_else(|| RylonError::comm("truncated ingest summary"))?;
+    *pos += 4;
+    Ok(u32::from_le_bytes(s.try_into().expect("4-byte slice")))
+}
+
+/// Flatten an error for the status byte of a checked exchange.
+fn err_to_wire(e: &RylonError) -> (u8, String) {
+    match e {
+        RylonError::Schema(m) => (0, m.clone()),
+        RylonError::ColumnNotFound(m) => (1, m.clone()),
+        RylonError::Type(m) => (2, m.clone()),
+        RylonError::Parse(m) => (3, m.clone()),
+        RylonError::Invalid(m) => (4, m.clone()),
+        RylonError::Comm(m) => (5, m.clone()),
+        RylonError::Runtime(m) => (6, m.clone()),
+        RylonError::Io(e) => (7, e.to_string()),
+    }
+}
+
+fn err_from_wire(tag: u8, m: String) -> RylonError {
+    match tag {
+        0 => RylonError::Schema(m),
+        1 => RylonError::ColumnNotFound(m),
+        2 => RylonError::Type(m),
+        3 => RylonError::Parse(m),
+        4 => RylonError::Invalid(m),
+        6 => RylonError::Runtime(m),
+        7 => RylonError::Io(std::io::Error::other(m)),
+        _ => RylonError::Comm(m),
+    }
+}
+
+/// Allgather each rank's fallible payload. If any rank failed, **every**
+/// rank returns the lowest-failing-rank's error (so a rank-local
+/// failure — bad UTF-8, a ragged record — can never strand the other
+/// ranks in a later collective: each checked step either proceeds on
+/// all ranks or aborts on all ranks).
+fn allgather_checked(
+    ctx: &RankCtx,
+    local: std::result::Result<Vec<u8>, &RylonError>,
+) -> Result<Vec<Vec<u8>>> {
+    let mut buf = Vec::new();
+    match local {
+        Ok(payload) => {
+            buf.push(1u8);
+            buf.extend_from_slice(&payload);
+        }
+        Err(e) => {
+            let (tag, msg) = err_to_wire(e);
+            buf.push(0u8);
+            buf.push(tag);
+            buf.extend_from_slice(msg.as_bytes());
+        }
+    }
+    let all = ctx.allgather(buf)?;
+    let mut payloads = Vec::with_capacity(all.len());
+    for b in &all {
+        match b.first().copied() {
+            Some(1) => payloads.push(b[1..].to_vec()),
+            Some(0) => {
+                let tag = b.get(1).copied().unwrap_or(5);
+                let msg = String::from_utf8_lossy(b.get(2..).unwrap_or(&[]))
+                    .into_owned();
+                return Err(err_from_wire(tag, msg));
+            }
+            _ => {
+                return Err(RylonError::comm(
+                    "malformed ingest status byte",
+                ))
+            }
+        }
+    }
+    Ok(payloads)
+}
+
+/// Rank-local result of the one read pass: the range's raw bytes plus
+/// its three-way speculative scan.
+struct RangeScan {
+    /// Absolute file offset of `buf[0]`.
+    start: u64,
+    /// The rank's raw byte range (held until boundaries resolve — the
+    /// price of reading each byte once; same order as the parsed rows).
+    buf: Vec<u8>,
+    /// Boundary-newline offsets (relative to `buf`) per entry
+    /// hypothesis.
+    nls: [Vec<usize>; 3],
+    /// Exit state per entry hypothesis.
+    exit: [ScanState; 3],
+    /// Raw `\n` count in `buf` (hypothesis-independent; for absolute
+    /// line numbers in error messages).
+    raw_nls: u64,
+}
+
+/// Read this rank's byte range (exactly once) and scan it under all
+/// three entry states. The scan runs morsel-parallel on the rank's
+/// worker pool.
+fn scan_rank_range(
+    path: &Path,
+    d: u8,
+    rank: usize,
+    world: usize,
+    stats: Option<&IngestStats>,
+) -> Result<RangeScan> {
+    let file_len = std::fs::metadata(path)?.len() as usize;
+    let (off, len) = block_range(file_len, rank, world);
+    let mut f = std::fs::File::open(path)?;
+    f.seek(SeekFrom::Start(off as u64))?;
+    let mut reader = CountingReader {
+        inner: f.take(len as u64),
+        stats,
+    };
+    let mut buf = vec![0u8; len];
+    let n = csv::read_full(&mut reader, &mut buf)?;
+    if n != len {
+        return Err(RylonError::parse(format!(
+            "csv shrank while reading: rank {rank} got {n} of {len} bytes"
+        )));
+    }
+    let (nls, exit) = if off == 0 {
+        // A range starting at byte 0 enters the DFA in a statically
+        // known state (field start — only this rank can hold byte 0),
+        // so the 3-hypothesis scan would triple the DFA work for
+        // nothing: run the known-entry scan into slot 0 and leave the
+        // never-read other slots as identities. The identity exits
+        // also keep empty ranges (0-byte file) threading correctly.
+        let (nl0, exit0) =
+            csv::scan_boundaries(&buf, d, ScanState::FieldStart);
+        (
+            [nl0, Vec::new(), Vec::new()],
+            [exit0, ScanState::Unquoted, ScanState::Quoted],
+        )
+    } else {
+        let summary = csv::scan_summary(&buf, d);
+        (summary.nls, summary.exit)
+    };
+    let raw_nls = csv::count_newlines(&buf);
+    Ok(RangeScan {
+        start: off as u64,
+        buf,
+        nls,
+        exit,
+        raw_nls,
+    })
+}
+
+/// The tiny per-range summary that crosses the fabric: everything the
+/// prefix pass needs, nothing sized by the data.
+struct RankSummary {
+    start: u64,
+    len: u64,
+    raw_nls: u64,
+    /// Exit state per entry hypothesis.
+    exit: [ScanState; 3],
+    /// Boundary-newline count per entry hypothesis.
+    count: [u64; 3],
+    /// Absolute offset of the first/last boundary newline per entry
+    /// hypothesis (`u64::MAX` when there is none).
+    first: [u64; 3],
+    last: [u64; 3],
+}
+
+fn encode_summary(s: &RangeScan) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24 + 3 * 25);
+    put_u64(&mut out, s.start);
+    put_u64(&mut out, s.buf.len() as u64);
+    put_u64(&mut out, s.raw_nls);
+    for h in 0..3 {
+        out.push(csv::hyp_index(s.exit[h]) as u8);
+        put_u64(&mut out, s.nls[h].len() as u64);
+        let first = s.nls[h]
+            .first()
+            .map(|&i| s.start + i as u64)
+            .unwrap_or(u64::MAX);
+        let last = s.nls[h]
+            .last()
+            .map(|&i| s.start + i as u64)
+            .unwrap_or(u64::MAX);
+        put_u64(&mut out, first);
+        put_u64(&mut out, last);
+    }
+    out
+}
+
+fn decode_summary(buf: &[u8]) -> Result<RankSummary> {
+    let mut pos = 0usize;
+    let start = get_u64(buf, &mut pos)?;
+    let len = get_u64(buf, &mut pos)?;
+    let raw_nls = get_u64(buf, &mut pos)?;
+    let mut exit = [ScanState::FieldStart; 3];
+    let mut count = [0u64; 3];
+    let mut first = [u64::MAX; 3];
+    let mut last = [u64::MAX; 3];
+    for h in 0..3 {
+        let tag = *buf
+            .get(pos)
+            .ok_or_else(|| RylonError::comm("truncated ingest summary"))?;
+        pos += 1;
+        exit[h] = csv::state_from_index(tag).ok_or_else(|| {
+            RylonError::comm("bad scan state in ingest summary")
+        })?;
+        count[h] = get_u64(buf, &mut pos)?;
+        first[h] = get_u64(buf, &mut pos)?;
+        last[h] = get_u64(buf, &mut pos)?;
+    }
+    Ok(RankSummary {
+        start,
+        len,
+        raw_nls,
+        exit,
+        count,
+        first,
+        last,
+    })
+}
+
+/// The prefix pass over the allgathered summaries — pure and
+/// deterministic, so every rank derives the identical picture.
+struct Resolved {
+    /// True DFA entry state per rank.
+    entry: Vec<ScanState>,
+    /// Offset (relative to the rank's range) where the records it owns
+    /// begin; everything before it is the leading fragment of a record
+    /// owned further left.
+    owned_from: Vec<usize>,
+    /// Destination rank of each rank's leading fragment (`None` when a
+    /// record starts exactly at the rank's range start, or the rank
+    /// has no bytes).
+    frag_owner: Vec<Option<usize>>,
+    /// Raw `\n` count in the file before each rank's range.
+    raw_before: Vec<u64>,
+}
+
+fn resolve(summaries: &[RankSummary]) -> Resolved {
+    let world = summaries.len();
+    let mut entry = Vec::with_capacity(world);
+    let mut owned_from = Vec::with_capacity(world);
+    let mut frag_owner = vec![None; world];
+    let mut raw_before = Vec::with_capacity(world);
+    let mut state = ScanState::FieldStart;
+    // Largest true boundary newline seen so far (absolute offset).
+    let mut prev_nl: Option<u64> = None;
+    let mut raw_acc = 0u64;
+    for (r, s) in summaries.iter().enumerate() {
+        entry.push(state);
+        raw_before.push(raw_acc);
+        raw_acc += s.raw_nls;
+        let h = csv::hyp_index(state);
+        let starts_record = s.start == 0 || prev_nl == Some(s.start - 1);
+        if s.len == 0 || starts_record {
+            owned_from.push(0);
+        } else {
+            // The leading bytes continue a record that started in the
+            // range containing the byte after the previous true
+            // boundary — disown them to that rank.
+            let of = if s.count[h] > 0 {
+                (s.first[h] - s.start) as usize + 1
+            } else {
+                s.len as usize
+            };
+            owned_from.push(of);
+            let record_start = prev_nl.map(|n| n + 1).unwrap_or(0);
+            frag_owner[r] = Some(rank_of_byte(summaries, record_start));
+        }
+        if s.count[h] > 0 {
+            prev_nl = Some(s.last[h]);
+        }
+        state = s.exit[h];
+    }
+    Resolved {
+        entry,
+        owned_from,
+        frag_owner,
+        raw_before,
+    }
+}
+
+/// The rank whose (non-empty) byte range contains `byte`.
+fn rank_of_byte(summaries: &[RankSummary], byte: u64) -> usize {
+    for (r, s) in summaries.iter().enumerate() {
+        if s.len > 0 && byte >= s.start && byte < s.start + s.len {
+            return r;
+        }
+    }
+    0
+}
+
+/// Rank-local state after fragments arrived: the contiguous text of
+/// every record this rank owns, with record ranges already cut.
+struct Assembled {
+    text: String,
+    /// Record byte ranges within `text` (empty lines skipped, trailing
+    /// `\r` stripped — [`csv::push_record_range`] semantics).
+    ranges: Vec<(usize, usize)>,
+    /// Absolute file offset of `text[0]`.
+    byte_base: u64,
+    /// Raw `\n` count in the file before `text[0]`.
+    line_base: u64,
+}
+
+/// Glue the rank's owned region to the fragments received from the
+/// right, validate UTF-8, and cut record ranges from the resolved
+/// boundary list.
+fn assemble(
+    mut scan: RangeScan,
+    resolved: &Resolved,
+    summaries: &[RankSummary],
+    incoming: &[Vec<u8>],
+    rank: usize,
+) -> Result<Assembled> {
+    let owned_from = resolved.owned_from[rank];
+    let line_base = resolved.raw_before[rank]
+        + csv::count_newlines(&scan.buf[..owned_from]);
+    let byte_base = scan.start + owned_from as u64;
+
+    // My own true boundaries, shifted into owned-text coordinates.
+    let h = csv::hyp_index(resolved.entry[rank]);
+    let mut bounds: Vec<usize> = scan.nls[h]
+        .iter()
+        .filter(|&&i| i >= owned_from)
+        .map(|&i| i - owned_from)
+        .collect();
+
+    let mut text_bytes = scan.buf.split_off(owned_from);
+    // Fragments arrive from consecutive right-hand ranks; the chain is
+    // terminated (ends with a true boundary newline) iff the last
+    // sender saw a true boundary in its own range — a trailing `\n`
+    // byte alone proves nothing (it could sit inside a quoted field).
+    let mut terminated = false;
+    for q in rank + 1..summaries.len() {
+        if resolved.frag_owner[q] == Some(rank) {
+            text_bytes.extend_from_slice(&incoming[q]);
+            let hq = csv::hyp_index(resolved.entry[q]);
+            terminated = summaries[q].count[hq] > 0;
+        }
+    }
+    if terminated {
+        bounds.push(text_bytes.len() - 1);
+    }
+
+    let text = String::from_utf8(text_bytes).map_err(|_| {
+        RylonError::parse(format!(
+            "csv: invalid utf-8 near byte {byte_base}"
+        ))
+    })?;
+    let bytes = text.as_bytes();
+    let mut ranges = Vec::new();
+    let mut start = 0usize;
+    for &nl in &bounds {
+        csv::push_record_range(&mut ranges, bytes, start, nl);
+        start = nl + 1;
+    }
+    csv::push_record_range(&mut ranges, bytes, start, bytes.len());
+    Ok(Assembled {
+        text,
+        ranges,
+        byte_base,
+        line_base,
+    })
+}
+
+/// Encode this rank's record count plus the raw text (and absolute
+/// byte/line position) of its first `min(count, needed)` records — the
+/// sample prefix every rank needs to resolve the header and infer the
+/// schema exactly like a whole-file read.
+fn encode_block_summary(a: &Assembled, needed: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, a.ranges.len() as u64);
+    let n = a.ranges.len().min(needed);
+    put_u32(&mut out, n as u32);
+    for &(s, e) in a.ranges.iter().take(n) {
+        let byte = a.byte_base + s as u64;
+        let line =
+            a.line_base + csv::count_newlines(&a.text.as_bytes()[..s]) + 1;
+        put_u64(&mut out, byte);
+        put_u64(&mut out, line);
+        put_u32(&mut out, (e - s) as u32);
+        out.extend_from_slice(&a.text.as_bytes()[s..e]);
+    }
+    out
+}
+
+/// One sampled record: raw text plus the absolute (byte, 1-based line)
+/// of its start, so split errors report whole-file positions.
+struct Sample {
+    text: String,
+    byte: u64,
+    line: u64,
+}
+
+fn decode_block_summary(
+    buf: &[u8],
+) -> Result<(u64, Vec<Sample>)> {
+    let mut pos = 0usize;
+    let count = get_u64(buf, &mut pos)?;
+    let n = get_u32(buf, &mut pos)? as usize;
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let byte = get_u64(buf, &mut pos)?;
+        let line = get_u64(buf, &mut pos)?;
+        let len = get_u32(buf, &mut pos)? as usize;
+        let raw = buf
+            .get(pos..pos + len)
+            .ok_or_else(|| RylonError::comm("truncated ingest sample"))?;
+        pos += len;
+        let text = String::from_utf8(raw.to_vec()).map_err(|_| {
+            RylonError::comm("non-utf8 ingest sample")
+        })?;
+        samples.push(Sample { text, byte, line });
+    }
+    Ok((count, samples))
+}
+
+/// The single-pass scheme (see the module docs for the protocol). All
+/// fabric steps run on every rank in lockstep; fallible rank-local
+/// stages are wrapped in [`allgather_checked`] so a local failure
+/// aborts the job symmetrically instead of stranding peers in a later
+/// collective.
+fn single_pass(
+    ctx: &mut RankCtx,
+    path: &Path,
+    opts: &CsvOptions,
+    stats: Option<&IngestStats>,
+) -> Result<Table> {
+    let world = ctx.size;
+    let d = opts.delimiter as u8;
+
+    // 1. Read my byte range (the only time any of its bytes are read)
+    //    and scan it under all three entry states.
+    let scan = scan_rank_range(path, d, ctx.rank, world, stats);
+
+    // 2. Summary exchange + prefix pass: every rank learns every
+    //    range's true entry state and boundary picture.
+    let payloads =
+        allgather_checked(ctx, scan.as_ref().map(encode_summary))?;
+    let scan = scan.expect("checked exchange surfaced scan errors");
+    let summaries = payloads
+        .iter()
+        .map(|b| decode_summary(b))
+        .collect::<Result<Vec<RankSummary>>>()?;
+    // The ranges must tile the file each rank observed: if the file
+    // grew or shrank between the per-rank `metadata` calls, ranks hold
+    // inconsistent partitions — abort cleanly (identically on every
+    // rank, since every rank checks the same summaries) rather than
+    // splice a corrupt prefix chain.
+    let mut expect_start = 0u64;
+    for (r, s) in summaries.iter().enumerate() {
+        if s.start != expect_start {
+            return Err(RylonError::parse(format!(
+                "csv changed size during distributed ingest: rank {r}'s \
+                 byte range starts at {} but the previous ranges end at \
+                 {expect_start}",
+                s.start
+            )));
+        }
+        expect_start += s.len;
+    }
+    let resolved = resolve(&summaries);
+
+    // 3. Fragment exchange: disown my leading partial record to the
+    //    rank owning its start; collect the continuations of my own
+    //    trailing record from the right.
+    let mut out: OutBufs = vec![Vec::new(); world];
+    if let Some(owner) = resolved.frag_owner[ctx.rank] {
+        out[owner] = scan.buf[..resolved.owned_from[ctx.rank]].to_vec();
+    }
+    let incoming = ctx.exchange(out)?;
+
+    // 4. Assemble my owned records (fallible: UTF-8), then swap record
+    //    counts + the schema-sample prefix.
+    let assembled =
+        assemble(scan, &resolved, &summaries, &incoming, ctx.rank);
+    let header_rows = opts.has_header as usize;
+    let needed = header_rows
+        + if opts.schema.is_none() {
+            opts.infer_rows
+        } else {
+            0
+        };
+    let payloads = allgather_checked(
+        ctx,
+        assembled.as_ref().map(|a| encode_block_summary(a, needed)),
+    )?;
+    let assembled = assembled.expect("checked exchange surfaced errors");
+    let mut counts = vec![0u64; world];
+    let mut samples: Vec<Sample> = Vec::new();
+    for (r, b) in payloads.iter().enumerate() {
+        let (count, ranks_samples) = decode_block_summary(b)?;
+        counts[r] = count;
+        samples.extend(ranks_samples);
+    }
+    samples.truncate(needed);
+
+    // 5. Resolve header + schema from the global sample prefix —
+    //    identical on every rank, and identical to what a whole-file
+    //    read would split and infer (same records, same order, same
+    //    error positions).
+    let mut header: Option<Vec<String>> = None;
+    if opts.has_header {
+        if let Some(s) = samples.first() {
+            header = Some(csv::split_record(&s.text, opts.delimiter, || {
+                (s.byte, s.line)
+            })?);
+        }
+    }
+    let schema = match &opts.schema {
+        Some(s) => s.clone(),
+        None => {
+            let mut rows = Vec::with_capacity(
+                samples.len().saturating_sub(header_rows),
+            );
+            for s in samples.iter().skip(header_rows) {
+                rows.push(csv::split_record(&s.text, opts.delimiter, || {
+                    (s.byte, s.line)
+                })?);
+            }
+            csv::infer_schema(header.as_ref(), &rows)?
+        }
+    };
+
+    // 6. Parse my owned records (morsel-parallel), dropping the header
+    //    if ordinal 0 is mine.
+    let my_ordinal: u64 = counts[..ctx.rank].iter().sum();
+    let owns_header =
+        opts.has_header && my_ordinal == 0 && !assembled.ranges.is_empty();
+    let data_ranges = &assembled.ranges[owns_header as usize..];
+    let first_record = my_ordinal as usize + owns_header as usize;
+    let parsed = csv::parse_ranges_parallel(
+        &assembled.text,
+        data_ranges,
+        &schema,
+        first_record,
+        opts.delimiter,
+        assembled.byte_base,
+        assembled.line_base,
+    );
+
+    // 7. Status barrier (a ragged record on one rank must not strand
+    //    the others in the rebalance), then restore the rank-major
+    //    block layout — after which the per-rank tables are
+    //    bit-identical to the two-pass partition.
+    allgather_checked(ctx, parsed.as_ref().map(|_| Vec::new()))?;
+    let table = parsed.expect("checked exchange surfaced parse errors");
+    super::rebalance(ctx, &table)
 }
 
 #[cfg(test)]
@@ -67,6 +767,23 @@ mod tests {
                 next += len;
             }
             assert_eq!(next, n);
+        }
+    }
+
+    #[test]
+    fn error_wire_roundtrip_preserves_message() {
+        for e in [
+            RylonError::parse("bad record"),
+            RylonError::invalid("nope"),
+            RylonError::comm("closed"),
+            RylonError::from(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                "gone",
+            )),
+        ] {
+            let msg = e.to_string();
+            let (tag, m) = err_to_wire(&e);
+            assert_eq!(err_from_wire(tag, m).to_string(), msg);
         }
     }
 }

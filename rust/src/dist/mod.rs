@@ -16,6 +16,15 @@
 //!   world, so rank threads × morsel workers never oversubscribe), `1`
 //!   = the paper's serial-per-rank behaviour. Parallel kernels are
 //!   bit-identical to serial ones, so the knob never changes results.
+//!
+//! Ingest is distributed too: [`read_csv_partition`] loads one shared
+//! CSV as per-rank partitions, by default through a **single-pass
+//! byte-range scheme** in which each rank reads only its `file_len /
+//! world` slice of bytes and a summary exchange splices the true
+//! record boundaries across rank seams (`docs/INGEST.md` walks the
+//! protocol).
+
+#![warn(missing_docs)]
 
 mod ingest;
 mod partition;
@@ -26,9 +35,11 @@ use std::sync::Arc;
 use crate::error::{Result, RylonError};
 use crate::net::local::LocalFabric;
 use crate::net::sim::SimFabric;
-use crate::net::{CostModel, Fabric, FabricRef};
+use crate::net::{CostModel, Fabric, FabricRef, OutBufs};
 
-pub use self::ingest::read_csv_partition;
+pub use self::ingest::{
+    read_csv_partition, read_csv_partition_with, IngestMode, IngestStats,
+};
 pub use self::ops::{
     dist_difference, dist_groupby, dist_groupby_preagg, dist_intersect,
     dist_join, dist_sort, dist_union,
@@ -52,6 +63,7 @@ pub enum FabricKind {
 pub struct DistConfig {
     /// World size (number of ranks).
     pub world: usize,
+    /// Communication substrate (real rank threads or the simulator).
     pub fabric: FabricKind,
     /// Rows per shuffle chunk (backpressure: bounds in-flight bytes).
     pub shuffle_chunk_rows: usize,
@@ -63,10 +75,20 @@ pub struct DistConfig {
     pub par_row_threshold: usize,
     /// Streaming-ingest chunk size in bytes for each rank's CSV reads
     /// (`[exec] ingest_chunk_bytes`). `0` = the process default
-    /// ([`crate::exec::INGEST_CHUNK_BYTES`], env-overridable). Bounds a
-    /// rank's raw-text memory during ingest at O(chunk), so a world of
-    /// ranks never holds world × file bytes resident.
+    /// ([`crate::exec::INGEST_CHUNK_BYTES`], env-overridable). Bounds
+    /// raw-text memory at O(chunk) for the streaming readers and the
+    /// two-pass ingest fallback; the single-pass scheme instead holds
+    /// each rank's own byte range (O(file / world) — the same order as
+    /// its parsed partition) until boundaries resolve.
     pub ingest_chunk_bytes: usize,
+    /// Single-pass distributed CSV ingest (`[exec]
+    /// ingest_single_pass`): each rank reads only its byte range of a
+    /// shared CSV, once, and rank seams are spliced through a summary
+    /// exchange. `None` = the process default
+    /// ([`crate::exec::INGEST_SINGLE_PASS`], overridable via the
+    /// `INGEST_SINGLE_PASS` env var); `Some(false)` forces the
+    /// two-pass count-then-parse fallback. Bit-identical either way.
+    pub ingest_single_pass: Option<bool>,
 }
 
 impl Default for DistConfig {
@@ -78,6 +100,7 @@ impl Default for DistConfig {
             intra_op_threads: 0,
             par_row_threshold: crate::exec::PAR_ROW_THRESHOLD,
             ingest_chunk_bytes: 0,
+            ingest_single_pass: None,
         }
     }
 }
@@ -120,11 +143,20 @@ impl DistConfig {
         self.ingest_chunk_bytes = bytes;
         self
     }
+
+    /// Force single-pass distributed ingest on (`true`) or off
+    /// (`false`, the two-pass fallback/oracle).
+    pub fn with_ingest_single_pass(mut self, on: bool) -> DistConfig {
+        self.ingest_single_pass = Some(on);
+        self
+    }
 }
 
 /// Per-rank execution context handed to the SPMD closure.
 pub struct RankCtx {
+    /// This rank's id (`0..size`).
     pub rank: usize,
+    /// World size (number of ranks in the job).
     pub size: usize,
     /// Rows per shuffle chunk (see [`DistConfig::shuffle_chunk_rows`]).
     pub shuffle_chunk_rows: usize,
@@ -137,6 +169,22 @@ impl RankCtx {
     /// The communication substrate (collectives take `&dyn Fabric`).
     pub fn fabric(&self) -> &dyn Fabric {
         self.fabric.as_ref()
+    }
+
+    /// Summary exchange: allgather one small per-rank blob, returned
+    /// indexed by source rank. The building block protocol steps like
+    /// the single-pass ingest's boundary-summary swap are made of —
+    /// every rank must call it (BSP superstep semantics).
+    pub fn allgather(&self, data: Vec<u8>) -> Result<Vec<Vec<u8>>> {
+        crate::net::collectives::allgather(self.fabric(), self.rank, data)
+    }
+
+    /// Raw AllToAllv: deliver `out[d]` to rank `d`, receive one buffer
+    /// per source (empty buffers allowed — how the ingest routes
+    /// record fragments only to the ranks that own them). Every rank
+    /// must call it.
+    pub fn exchange(&self, out: OutBufs) -> Result<OutBufs> {
+        self.fabric().exchange(self.rank, out)
     }
 }
 
@@ -152,6 +200,7 @@ pub struct Cluster {
     intra_op_threads: usize,
     par_row_threshold: usize,
     ingest_chunk_bytes: usize,
+    ingest_single_pass: bool,
     fabric: FabricRef,
     sim: Option<Arc<SimFabric>>,
     /// One long-lived morsel-worker pool per rank (lazy threads).
@@ -159,6 +208,7 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// Build a cluster for `cfg` (fabric, pools, resolved knobs).
     pub fn new(cfg: DistConfig) -> Result<Cluster> {
         if cfg.world == 0 {
             return Err(RylonError::invalid("cluster world must be ≥ 1"));
@@ -195,12 +245,16 @@ impl Cluster {
             ingest_chunk_bytes: crate::exec::resolve_ingest_chunk_bytes(
                 cfg.ingest_chunk_bytes,
             ),
+            ingest_single_pass: crate::exec::resolve_ingest_single_pass(
+                cfg.ingest_single_pass,
+            ),
             fabric,
             sim,
             pools,
         })
     }
 
+    /// Number of ranks.
     pub fn world(&self) -> usize {
         self.world
     }
@@ -227,6 +281,7 @@ impl Cluster {
                     let intra = self.intra_op_threads;
                     let threshold = self.par_row_threshold;
                     let ingest_chunk = self.ingest_chunk_bytes;
+                    let single_pass = self.ingest_single_pass;
                     let pool = Arc::clone(&self.pools[rank]);
                     s.spawn(move || {
                         // The rank thread's intra-op budget: local
@@ -235,6 +290,7 @@ impl Cluster {
                         crate::exec::set_intra_op_threads(intra);
                         crate::exec::set_par_row_threshold(threshold);
                         crate::exec::set_ingest_chunk_bytes(ingest_chunk);
+                        crate::exec::set_ingest_single_pass(single_pass);
                         crate::exec::install_thread_pool(pool);
                         let mut ctx = RankCtx {
                             rank,
@@ -380,6 +436,23 @@ mod tests {
             .run(|_| Ok(crate::exec::par_row_threshold()))
             .unwrap();
         assert_eq!(outs, vec![7, 7]);
+    }
+
+    #[test]
+    fn ingest_single_pass_reaches_rank_threads() {
+        let cfg = DistConfig::threads(2).with_ingest_single_pass(false);
+        let cluster = Cluster::new(cfg).unwrap();
+        let outs = cluster
+            .run(|_| Ok(crate::exec::ingest_single_pass()))
+            .unwrap();
+        assert_eq!(outs, vec![false, false]);
+        // None resolves to the process default on every rank.
+        let cluster = Cluster::new(DistConfig::threads(2)).unwrap();
+        let outs = cluster
+            .run(|_| Ok(crate::exec::ingest_single_pass()))
+            .unwrap();
+        let d = crate::exec::default_ingest_single_pass();
+        assert_eq!(outs, vec![d, d]);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::table::Table;
 
 /// Maps each row of a table to a destination partition.
 pub trait Partitioner: Send + Sync {
+    /// Number of partitions rows are routed into.
     fn nparts(&self) -> usize;
 
     /// Fill `out` with one partition id per row (`-1` = drop the row —
@@ -28,6 +29,8 @@ pub struct HashPartitioner {
 }
 
 impl HashPartitioner {
+    /// Partitioner routing by the combined hash of `keys` into
+    /// `nparts` buckets.
     pub fn new(keys: &[String], nparts: usize) -> Result<HashPartitioner> {
         if keys.is_empty() {
             return Err(RylonError::invalid(

@@ -34,6 +34,8 @@
 //! (CI uses it to exercise every parallel path); explicit setters and
 //! `DistConfig` still win.
 
+#![warn(missing_docs)]
+
 mod morsel;
 mod pool;
 
@@ -67,6 +69,17 @@ pub const PAR_ROW_THRESHOLD: usize = 4096;
 /// `--ingest-chunk`, or in config via `[exec] ingest_chunk_bytes`.
 pub const INGEST_CHUNK_BYTES: usize = 4 << 20;
 
+/// Default for the `[exec] ingest_single_pass` knob: distributed CSV
+/// ingest ([`crate::dist::read_csv_partition`]) uses the single-pass
+/// byte-range scheme (each byte of the file is read exactly once
+/// across the cluster) instead of the two-pass count-then-parse
+/// fallback. Override per thread with [`set_ingest_single_pass`] /
+/// [`with_ingest_single_pass`], per cluster with
+/// `DistConfig::ingest_single_pass`, on the CLI with
+/// `--ingest-single-pass`, in config via `[exec] ingest_single_pass`,
+/// or process-wide with the `INGEST_SINGLE_PASS` env var.
+pub const INGEST_SINGLE_PASS: bool = true;
+
 /// Immutable per-operation thread budget.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecContext {
@@ -86,10 +99,12 @@ impl ExecContext {
         ExecContext { threads: 1 }
     }
 
+    /// The budgeted worker count (≥ 1).
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    /// Whether kernels should take their parallel paths.
     pub fn is_parallel(&self) -> bool {
         self.threads > 1
     }
@@ -125,6 +140,21 @@ pub fn default_ingest_chunk_bytes() -> usize {
     })
 }
 
+/// The process-wide default for single-pass distributed ingest: the
+/// `INGEST_SINGLE_PASS` env var (`0`/`false` disable, `1`/`true`
+/// enable), else [`INGEST_SINGLE_PASS`]. Read once; explicit setters
+/// and `DistConfig` always override it.
+pub fn default_ingest_single_pass() -> bool {
+    static DEFAULT: OnceLock<bool> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        match std::env::var("INGEST_SINGLE_PASS").ok().as_deref() {
+            Some("0") | Some("false") => false,
+            Some("1") | Some("true") => true,
+            _ => INGEST_SINGLE_PASS,
+        }
+    })
+}
+
 thread_local! {
     /// Per-thread intra-op budget. Rank threads get theirs from
     /// `dist::Cluster::run`; everything else starts at the process
@@ -138,6 +168,9 @@ thread_local! {
     /// Per-thread streaming-ingest chunk size (see
     /// [`INGEST_CHUNK_BYTES`]).
     static CHUNK_BYTES: Cell<usize> = Cell::new(default_ingest_chunk_bytes());
+
+    /// Per-thread single-pass-ingest toggle (see [`INGEST_SINGLE_PASS`]).
+    static SINGLE_PASS: Cell<bool> = Cell::new(default_ingest_single_pass());
 }
 
 /// The calling thread's current intra-op budget.
@@ -210,6 +243,34 @@ pub fn resolve_ingest_chunk_bytes(configured: usize) -> usize {
     } else {
         default_ingest_chunk_bytes()
     }
+}
+
+/// Whether the calling thread's distributed CSV ingest takes the
+/// single-pass byte-range path (see
+/// [`crate::dist::read_csv_partition`]).
+pub fn ingest_single_pass() -> bool {
+    SINGLE_PASS.with(|c| c.get())
+}
+
+/// Set the calling thread's single-pass-ingest toggle.
+pub fn set_ingest_single_pass(on: bool) {
+    SINGLE_PASS.with(|c| c.set(on));
+}
+
+/// Run `f` with single-pass distributed ingest forced on or off,
+/// restoring the previous setting afterwards.
+pub fn with_ingest_single_pass<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    let prev = SINGLE_PASS.with(|c| c.replace(on));
+    let out = f();
+    SINGLE_PASS.with(|c| c.set(prev));
+    out
+}
+
+/// Resolve a configured single-pass toggle: `None` = the process
+/// default (env-overridable via `INGEST_SINGLE_PASS`), `Some` passes
+/// through.
+pub fn resolve_ingest_single_pass(configured: Option<bool>) -> bool {
+    configured.unwrap_or_else(default_ingest_single_pass)
 }
 
 /// The effective budget for an `nrows`-row kernel: the thread-local
@@ -307,6 +368,22 @@ mod tests {
             default_ingest_chunk_bytes()
         );
         assert_eq!(resolve_ingest_chunk_bytes(123), 123);
+    }
+
+    #[test]
+    fn single_pass_knob_scopes_and_restores() {
+        let prev = ingest_single_pass();
+        with_ingest_single_pass(!prev, || {
+            assert_eq!(ingest_single_pass(), !prev);
+        });
+        assert_eq!(ingest_single_pass(), prev);
+        // None = the process default; Some passes through.
+        assert_eq!(
+            resolve_ingest_single_pass(None),
+            default_ingest_single_pass()
+        );
+        assert!(resolve_ingest_single_pass(Some(true)));
+        assert!(!resolve_ingest_single_pass(Some(false)));
     }
 
     #[test]

@@ -15,20 +15,27 @@ pub const MORSEL_ROWS: usize = 1 << 16;
 /// One contiguous row range, numbered in input order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Morsel {
+    /// Position of this morsel in the split (results merge in this
+    /// order, which is what makes parallel output bit-identical).
     pub index: usize,
+    /// First row of the range (inclusive).
     pub start: usize,
+    /// One past the last row of the range (exclusive).
     pub end: usize,
 }
 
 impl Morsel {
+    /// The row range as a standard `Range`.
     pub fn range(&self) -> Range<usize> {
         self.start..self.end
     }
 
+    /// Number of rows in the morsel.
     pub fn len(&self) -> usize {
         self.end - self.start
     }
 
+    /// Whether the morsel covers no rows.
     pub fn is_empty(&self) -> bool {
         self.start == self.end
     }

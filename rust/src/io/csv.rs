@@ -29,6 +29,13 @@
 //! Multi-byte (non-ASCII) delimiters fall back to the whole-buffer
 //! serial scan: a multi-byte delimiter could straddle a chunk seam,
 //! which the byte-at-a-time DFA cannot see.
+//!
+//! The same DFA powers the **cross-rank byte-range speculation** of
+//! [`crate::dist::read_csv_partition`]: each rank scans only its own
+//! byte range under all three entry states, and a summary exchange
+//! picks the truth (see `docs/INGEST.md`).
+
+#![warn(missing_docs)]
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::ops::Range;
@@ -43,12 +50,15 @@ use crate::types::{DataType, Field, Schema};
 /// CSV read/write options.
 #[derive(Debug, Clone)]
 pub struct CsvOptions {
+    /// Field delimiter (default `,`). Non-ASCII delimiters disable the
+    /// streaming byte DFA and fall back to whole-buffer reads.
     pub delimiter: char,
     /// First row is a header (read: column names; write: emit header).
     pub has_header: bool,
     /// Explicit schema; when `None` the reader infers types from the
     /// first `infer_rows` records (i64 ⊂ f64 ⊂ str; bool literal set).
     pub schema: Option<Schema>,
+    /// How many leading records inference samples (default 128).
     pub infer_rows: usize,
 }
 
@@ -64,11 +74,13 @@ impl Default for CsvOptions {
 }
 
 impl CsvOptions {
+    /// Use an explicit schema instead of inference.
     pub fn with_schema(mut self, schema: Schema) -> CsvOptions {
         self.schema = Some(schema);
         self
     }
 
+    /// Treat the first row as data, not a header.
     pub fn no_header(mut self) -> CsvOptions {
         self.has_header = false;
         self
@@ -80,7 +92,7 @@ impl CsvOptions {
 /// number for the unterminated-quote error (the only error this can
 /// raise), so a stray mid-field quote fails fast *and* points at the
 /// offending record instead of an opaque excerpt.
-fn split_record(
+pub(crate) fn split_record(
     line: &str,
     delim: char,
     pos: impl FnOnce() -> (u64, u64),
@@ -153,7 +165,7 @@ fn infer_dtype(samples: &[&str]) -> DataType {
 /// Infer the schema from the header (if any) and the first `infer_rows`
 /// sampled records — shared by the whole-buffer and streamed readers so
 /// both resolve identical types from identical samples.
-fn infer_schema(
+pub(crate) fn infer_schema(
     header: Option<&Vec<String>>,
     sample_rows: &[Vec<String>],
 ) -> Result<Schema> {
@@ -176,7 +188,7 @@ fn infer_schema(
     Ok(Schema::new(fields))
 }
 
-fn count_newlines(bytes: &[u8]) -> u64 {
+pub(crate) fn count_newlines(bytes: &[u8]) -> u64 {
     bytes.iter().filter(|&&b| b == b'\n').count() as u64
 }
 
@@ -187,7 +199,7 @@ fn count_newlines(bytes: &[u8]) -> u64 {
 /// field unquoted — so the close-pending state collapses into
 /// [`ScanState::FieldStart`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum ScanState {
+pub(crate) enum ScanState {
     /// Outside quotes, at the start of a field (a `"` here opens a
     /// quoted field — RFC 4180) or just after a closing quote (a `"`
     /// here is the `""` escape).
@@ -200,14 +212,25 @@ enum ScanState {
 }
 
 /// The three possible chunk-entry states, in [`hyp_index`] order.
-const HYPOTHESES: [ScanState; 3] =
+pub(crate) const HYPOTHESES: [ScanState; 3] =
     [ScanState::FieldStart, ScanState::Unquoted, ScanState::Quoted];
 
-fn hyp_index(s: ScanState) -> usize {
+pub(crate) fn hyp_index(s: ScanState) -> usize {
     match s {
         ScanState::FieldStart => 0,
         ScanState::Unquoted => 1,
         ScanState::Quoted => 2,
+    }
+}
+
+/// Inverse of [`hyp_index`] — used to decode scan states off the wire
+/// in the distributed summary exchange.
+pub(crate) fn state_from_index(i: u8) -> Option<ScanState> {
+    match i {
+        0 => Some(ScanState::FieldStart),
+        1 => Some(ScanState::Unquoted),
+        2 => Some(ScanState::Quoted),
+        _ => None,
     }
 }
 
@@ -265,9 +288,12 @@ fn scan_range_serial(
 /// Per-range summary of the speculative scan: for each of the three
 /// possible entry states, the boundaries that range would emit and the
 /// state it would exit in.
-struct ScanSummary {
-    exit: [ScanState; 3],
-    nls: [Vec<usize>; 3],
+pub(crate) struct ScanSummary {
+    /// Exit state per entry hypothesis ([`hyp_index`] order).
+    pub(crate) exit: [ScanState; 3],
+    /// Boundary-newline offsets per entry hypothesis (absolute into the
+    /// scanned buffer).
+    pub(crate) nls: [Vec<usize>; 3],
 }
 
 fn scan_range_speculative(
@@ -295,12 +321,47 @@ fn scan_range_speculative(
     ScanSummary { exit: cur, nls }
 }
 
+/// Full-buffer speculative scan: the boundary newlines and exit state
+/// `bytes` would produce under **each** of the three possible entry
+/// states. Parallel under the calling thread's intra-op budget
+/// (sub-range summaries compose by threading each hypothesis's state
+/// through the pieces); bit-identical to the serial speculative scan.
+/// This is the per-rank half of the distributed byte-range ingest: a
+/// rank that cannot know its entry state yet scans once under all
+/// three and lets the summary exchange pick the truth.
+pub(crate) fn scan_summary(bytes: &[u8], d: u8) -> ScanSummary {
+    let exec = exec::parallelism_for(bytes.len());
+    if !exec.is_parallel() || bytes.len() < 2 * exec.threads() {
+        return scan_range_speculative(bytes, 0..bytes.len(), d);
+    }
+    let parts = exec::split_even(bytes.len(), exec.threads());
+    let summaries: Vec<ScanSummary> = exec::map_parallel(parts, |m| {
+        scan_range_speculative(bytes, m.range(), d)
+    });
+    let mut out = ScanSummary {
+        exit: HYPOTHESES,
+        nls: [Vec::new(), Vec::new(), Vec::new()],
+    };
+    for h in 0..3 {
+        let mut state = HYPOTHESES[h];
+        for s in &summaries {
+            let i = hyp_index(state);
+            out.nls[h].extend_from_slice(&s.nls[i]);
+            state = s.exit[i];
+        }
+        out.exit[h] = state;
+    }
+    out
+}
+
 /// Record-boundary scan of `bytes` from `entry`: the offsets of every
 /// record-terminating newline, and the scan state after the last byte.
 /// Parallel (speculative) under the calling thread's intra-op budget
 /// when the buffer is at least `par_row_threshold` bytes; bit-identical
 /// to the serial scan either way. `d` must be an ASCII delimiter byte.
-fn scan_boundaries(
+/// Also the known-entry fast path of the distributed single-pass scan
+/// (a rank whose range starts at byte 0 needs no hypotheses).
+pub(crate) fn scan_boundaries(
     bytes: &[u8],
     d: u8,
     entry: ScanState,
@@ -403,7 +464,7 @@ fn scan_records(buf: &str, delim: char) -> Vec<(usize, usize)> {
     out
 }
 
-fn push_record_range(
+pub(crate) fn push_record_range(
     out: &mut Vec<(usize, usize)>,
     bytes: &[u8],
     start: usize,
@@ -460,11 +521,51 @@ fn parse_records(
 
 /// Absolute (byte offset, 1-based line number) of the record starting
 /// at `buf[s]` — computed lazily, only on the error path.
-fn record_pos(buf: &str, s: usize, byte_base: u64, line_base: u64) -> (u64, u64) {
+pub(crate) fn record_pos(
+    buf: &str,
+    s: usize,
+    byte_base: u64,
+    line_base: u64,
+) -> (u64, u64) {
     (
         byte_base + s as u64,
         line_base + count_newlines(&buf.as_bytes()[..s]) + 1,
     )
+}
+
+/// Parse a run of whole records morsel-parallel: the ranges are split
+/// into per-worker chunks, each parsed with [`parse_records`], and the
+/// chunk tables concatenate in range order — bit-identical to a serial
+/// parse, with the first error in record order winning.
+/// `first_record` is the absolute ordinal (header included) of
+/// `ranges[0]`; `byte_base`/`line_base` locate `buf[0]` in the file.
+pub(crate) fn parse_ranges_parallel(
+    buf: &str,
+    ranges: &[(usize, usize)],
+    schema: &Schema,
+    first_record: usize,
+    delim: char,
+    byte_base: u64,
+    line_base: u64,
+) -> Result<Table> {
+    if ranges.is_empty() {
+        return Ok(Table::empty(schema.clone()));
+    }
+    let exec = exec::parallelism_for(ranges.len());
+    let chunks = exec::split_even(ranges.len(), exec.threads());
+    let parts: Vec<Result<Table>> = exec::map_parallel(chunks, |m| {
+        parse_records(
+            buf,
+            &ranges[m.range()],
+            schema,
+            first_record + m.start,
+            delim,
+            byte_base,
+            line_base,
+        )
+    });
+    let tables = parts.into_iter().collect::<Result<Vec<Table>>>()?;
+    Table::concat_all(schema, &tables)
 }
 
 /// Read a CSV from any reader — **streaming**: the source is consumed
@@ -570,6 +671,32 @@ pub fn read_csv_records<R: Read>(
     opts: &CsvOptions,
     records: Range<usize>,
 ) -> Result<Table> {
+    let mut parts: Vec<Table> = Vec::new();
+    let schema =
+        read_csv_records_chunked(reader, opts, records, |t| {
+            parts.push(t);
+            Ok(())
+        })?;
+    if parts.is_empty() {
+        return Ok(Table::empty(schema));
+    }
+    Table::concat_all(&schema, &parts)
+}
+
+/// Chunked-sink form of [`read_csv_records`]: the selected block's
+/// records are handed to `sink` one parsed chunk at a time (file
+/// order), so a consumer that forwards or reduces the rows — the
+/// two-pass distributed ingest, a converter — never holds more than
+/// one chunk of parsed output beyond what it retains itself. Returns
+/// the resolved schema (an empty selection still yields one).
+/// Non-ASCII delimiters fall back to a whole-buffer read sunk as one
+/// table.
+pub fn read_csv_records_chunked<R: Read>(
+    reader: R,
+    opts: &CsvOptions,
+    records: Range<usize>,
+    mut sink: impl FnMut(Table) -> Result<()>,
+) -> Result<Schema> {
     if !opts.delimiter.is_ascii() {
         let mut buf = String::new();
         BufReader::new(reader).read_to_string(&mut buf)?;
@@ -577,22 +704,18 @@ pub fn read_csv_records<R: Read>(
         let lo = records.start.min(t.num_rows());
         // Clamp inverted ranges to empty, like the streaming path.
         let hi = records.end.min(t.num_rows()).max(lo);
-        return Ok(t.slice(lo, hi - lo));
+        let schema = t.schema().clone();
+        if hi > lo {
+            sink(t.slice(lo, hi - lo))?;
+        }
+        return Ok(schema);
     }
-    let mut parts: Vec<Table> = Vec::new();
-    let schema = stream_csv(reader, opts, Some(records), &mut |t| {
-        parts.push(t);
-        Ok(())
-    })?;
-    if parts.is_empty() {
-        return Ok(Table::empty(schema));
-    }
-    Table::concat_all(&schema, &parts)
+    stream_csv(reader, opts, Some(records), &mut sink)
 }
 
 /// Fill `buf` from `reader`, retrying short reads; returns the bytes
 /// read (< `buf.len()` only at EOF).
-fn read_full<R: Read>(reader: &mut R, buf: &mut [u8]) -> Result<usize> {
+pub(crate) fn read_full<R: Read>(reader: &mut R, buf: &mut [u8]) -> Result<usize> {
     let mut filled = 0usize;
     while filled < buf.len() {
         match reader.read(&mut buf[filled..]) {
@@ -853,21 +976,15 @@ fn parse_segment(
     // The absolute ordinal of ranges[0], for error messages that match
     // a whole-buffer serial parse.
     let first_ord = seg.first_record + lo;
-    let exec = exec::parallelism_for(ranges.len());
-    let chunks = exec::split_even(ranges.len(), exec.threads());
-    let parts: Vec<Result<Table>> = exec::map_parallel(chunks, |m| {
-        parse_records(
-            &seg.text,
-            &ranges[m.range()],
-            schema,
-            first_ord + m.start,
-            opts.delimiter,
-            seg.byte_base,
-            seg.line_base,
-        )
-    });
-    let tables = parts.into_iter().collect::<Result<Vec<Table>>>()?;
-    Ok(Some(Table::concat_all(schema, &tables)?))
+    Ok(Some(parse_ranges_parallel(
+        &seg.text,
+        ranges,
+        schema,
+        first_ord,
+        opts.delimiter,
+        seg.byte_base,
+        seg.line_base,
+    )?))
 }
 
 /// Parse CSV text already in memory — the whole-buffer two-pass reader.
@@ -913,24 +1030,15 @@ pub fn read_csv_str(buf: &str, opts: &CsvOptions) -> Result<Table> {
     // Pass 2: chunked parse — each chunk is a run of whole records;
     // chunks concatenate in file order. The first error in record
     // order wins, matching a serial scan.
-    let exec = exec::parallelism_for(records.len());
-    let chunks = exec::split_even(records.len(), exec.threads());
-    let header_rows = opts.has_header as usize;
-    let schema_ref = &schema;
-    let delim = opts.delimiter;
-    let parts: Vec<Result<Table>> = exec::map_parallel(chunks, |m| {
-        parse_records(
-            buf,
-            &records[m.range()],
-            schema_ref,
-            m.start + header_rows,
-            delim,
-            0,
-            0,
-        )
-    });
-    let tables = parts.into_iter().collect::<Result<Vec<Table>>>()?;
-    Table::concat_all(&schema, &tables)
+    parse_ranges_parallel(
+        buf,
+        records,
+        &schema,
+        opts.has_header as usize,
+        opts.delimiter,
+        0,
+        0,
+    )
 }
 
 /// Read a CSV file (streaming — see [`read_csv_from`]).
@@ -943,41 +1051,88 @@ fn needs_quoting(s: &str, delim: char) -> bool {
     s.contains(delim) || s.contains('"') || s.contains('\n')
 }
 
+/// Incremental CSV writer: emits the header once on construction, then
+/// appends tables (row groups, streamed chunks) across any number of
+/// [`CsvWriter::append`] calls — the egress mirror of
+/// [`read_csv_chunked`], and what the CLI's streaming RYF→CSV
+/// conversion writes through so the whole table is never resident.
+/// Output is byte-identical to a single [`write_csv_to`] of the
+/// concatenated input.
+pub struct CsvWriter<W: Write> {
+    w: BufWriter<W>,
+    delimiter: char,
+    cell: String,
+}
+
+impl<W: Write> CsvWriter<W> {
+    /// Wrap `writer`, immediately writing `schema`'s header row when
+    /// `opts.has_header`. Header names quote by the same rule as data
+    /// cells, so a column name containing the delimiter, a quote, or a
+    /// newline survives a write → re-read roundtrip.
+    pub fn new(
+        writer: W,
+        schema: &Schema,
+        opts: &CsvOptions,
+    ) -> Result<CsvWriter<W>> {
+        let mut w = BufWriter::new(writer);
+        if opts.has_header {
+            let names: Vec<String> = schema
+                .fields()
+                .iter()
+                .map(|f| {
+                    if needs_quoting(&f.name, opts.delimiter) {
+                        format!("\"{}\"", f.name.replace('"', "\"\""))
+                    } else {
+                        f.name.clone()
+                    }
+                })
+                .collect();
+            writeln!(w, "{}", names.join(&opts.delimiter.to_string()))?;
+        }
+        Ok(CsvWriter {
+            w,
+            delimiter: opts.delimiter,
+            cell: String::new(),
+        })
+    }
+
+    /// Append every row of `table` (no header row is emitted).
+    pub fn append(&mut self, table: &Table) -> Result<()> {
+        let d = self.delimiter;
+        for r in 0..table.num_rows() {
+            for c in 0..table.num_columns() {
+                if c > 0 {
+                    write!(self.w, "{d}")?;
+                }
+                self.cell.clear();
+                self.cell.push_str(&table.column(c).value(r).render());
+                if needs_quoting(&self.cell, d) {
+                    write!(self.w, "\"{}\"", self.cell.replace('"', "\"\""))?;
+                } else {
+                    write!(self.w, "{}", self.cell)?;
+                }
+            }
+            writeln!(self.w)?;
+        }
+        Ok(())
+    }
+
+    /// Flush buffered output to the underlying writer.
+    pub fn finish(mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
 /// Write a table to any writer.
 pub fn write_csv_to<W: Write>(
     table: &Table,
     writer: W,
     opts: &CsvOptions,
 ) -> Result<()> {
-    let mut w = BufWriter::new(writer);
-    let d = opts.delimiter;
-    if opts.has_header {
-        let names: Vec<&str> = table
-            .schema()
-            .fields()
-            .iter()
-            .map(|f| f.name.as_str())
-            .collect();
-        writeln!(w, "{}", names.join(&d.to_string()))?;
-    }
-    let mut cell = String::new();
-    for r in 0..table.num_rows() {
-        for c in 0..table.num_columns() {
-            if c > 0 {
-                write!(w, "{d}")?;
-            }
-            cell.clear();
-            cell.push_str(&table.column(c).value(r).render());
-            if needs_quoting(&cell, d) {
-                write!(w, "\"{}\"", cell.replace('"', "\"\""))?;
-            } else {
-                write!(w, "{cell}")?;
-            }
-        }
-        writeln!(w)?;
-    }
-    w.flush()?;
-    Ok(())
+    let mut w = CsvWriter::new(writer, table.schema(), opts)?;
+    w.append(table)?;
+    w.finish()
 }
 
 /// Write a table to a CSV file.
@@ -1296,6 +1451,24 @@ mod tests {
             assert_eq!(empty.num_rows(), 0);
             assert_eq!(empty.schema(), whole.schema());
         });
+    }
+
+    #[test]
+    fn header_names_needing_quotes_roundtrip() {
+        // A column name containing the delimiter must be quoted on
+        // write, or the re-read sees a different column count.
+        let t = Table::from_columns(vec![
+            ("a,b", Column::from_i64(vec![1, 2])),
+            ("c\"d", Column::from_i64(vec![3, 4])),
+        ])
+        .unwrap();
+        let mut buf = Vec::new();
+        write_csv_to(&t, &mut buf, &CsvOptions::default()).unwrap();
+        let back =
+            read_csv_from(&buf[..], &CsvOptions::default()).unwrap();
+        assert_eq!(back.schema().field(0).name, "a,b");
+        assert_eq!(back.schema().field(1).name, "c\"d");
+        assert_eq!(back.column(0).i64_values(), &[1, 2]);
     }
 
     #[test]

@@ -9,6 +9,15 @@
 //! group 0 bytes (net::wire format) | group 1 bytes | …
 //! footer: n_groups × (u64 offset, u64 len, u64 rows) | u64 footer_off
 //! ```
+//!
+//! Both directions stream: [`RyfWriter`] appends row groups
+//! incrementally (the CSV→RYF conversion never holds the whole
+//! table), and readers fetch groups independently — whole-file
+//! ([`read_ryf`]), per-rank ([`read_ryf_partition`]), or one group at
+//! a time ([`read_ryf_group`], which the CLI's RYF→CSV conversion
+//! walks so the egress side is bounded-memory too).
+
+#![warn(missing_docs)]
 
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
@@ -23,8 +32,11 @@ const MAGIC: &[u8; 4] = b"RYF1";
 /// One row group's footer entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GroupMeta {
+    /// Byte offset of the group's serialized table in the file.
     pub offset: u64,
+    /// Serialized length in bytes.
     pub len: u64,
+    /// Row count of the group.
     pub rows: u64,
 }
 
@@ -40,6 +52,7 @@ pub struct RyfWriter {
 }
 
 impl RyfWriter {
+    /// Create the file and write the (to-be-patched) header.
     pub fn create(path: impl AsRef<Path>) -> Result<RyfWriter> {
         let mut f = std::fs::File::create(path)?;
         f.write_all(MAGIC)?;
@@ -66,6 +79,7 @@ impl RyfWriter {
         Ok(())
     }
 
+    /// Row groups appended so far.
     pub fn groups(&self) -> usize {
         self.metas.len()
     }

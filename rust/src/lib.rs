@@ -32,7 +32,14 @@
 //! with a `dist_` prefix, run inside a [`dist::Cluster`] whose ranks talk
 //! through a pluggable [`net::Fabric`] (threads + channels for real
 //! concurrency, or the calibrated BSP simulator used for the paper's
-//! scaling figures — see DESIGN.md §3).
+//! scaling figures — see DESIGN.md §3). Distributed CSV ingest
+//! ([`dist::read_csv_partition`]) is single-pass by default: each rank
+//! reads only its byte range, once, and rank seams are spliced through
+//! a summary exchange.
+//!
+//! Longer-form docs live in `docs/`: `ARCHITECTURE.md` (the two-level
+//! execution model), `CONFIG.md` (every `[exec]` knob), and
+//! `INGEST.md` (the streaming + distributed ingest pipeline).
 
 pub mod error;
 pub mod util;

@@ -44,7 +44,8 @@ COMMANDS
   sql      --query 'SELECT …' --tables name=a.csv,name2=b.csv
            [--out FILE.csv]
   convert  --in FILE.csv --out FILE.ryf [--group-rows N]
-           (streaming, bounded-memory CSV → RYF conversion)
+           --in FILE.ryf --out FILE.csv   (direction from --in suffix;
+           streaming, bounded-memory both ways)
   help
 
 GLOBAL FLAGS
@@ -57,6 +58,12 @@ GLOBAL FLAGS
   --ingest-chunk BYTES  streaming CSV ingest chunk size (0 = default
                         4 MiB; raw-text memory during ingest is
                         O(chunk), not O(file))
+  --ingest-single-pass true|false
+                        distributed CSV ingest scheme (default true:
+                        byte-range speculation, each byte read once
+                        per cluster; false = two-pass count+parse)
+
+See docs/CONFIG.md for the config-file/env equivalents of every knob.
 ";
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -104,6 +111,18 @@ impl Args {
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
+
+    /// Tri-state boolean flag: absent = `None` (defer to config/env).
+    fn bool_flag(&self, key: &str) -> Result<Option<bool>> {
+        match self.str(key) {
+            None => Ok(None),
+            Some("1") | Some("true") => Ok(Some(true)),
+            Some("0") | Some("false") => Ok(Some(false)),
+            Some(other) => Err(RylonError::invalid(format!(
+                "flag --{key} wants true|false, got '{other}'"
+            ))),
+        }
+    }
 }
 
 fn load_config(args: &Args) -> Result<RylonConfig> {
@@ -138,6 +157,9 @@ fn make_cluster(
             .usize_or("par-threshold", cfg.par_row_threshold),
         ingest_chunk_bytes: args
             .usize_or("ingest-chunk", cfg.ingest_chunk_bytes),
+        ingest_single_pass: args
+            .bool_flag("ingest-single-pass")?
+            .or(cfg.ingest_single_pass),
     })
 }
 
@@ -454,12 +476,75 @@ fn cmd_sql(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// RYF → CSV, group at a time: one parsed row group resident at once,
+/// rows appended through the incremental [`rylon::io::csv::CsvWriter`]
+/// (header once, then data), temp-file + rename like the CSV → RYF
+/// direction so a failed conversion never leaves a truncated --out.
+fn convert_ryf_to_csv(input: &str, out: &str) -> Result<()> {
+    use rylon::io::csv::CsvWriter;
+    use rylon::io::ryf::{read_ryf_footer, read_ryf_group};
+
+    let timer = rylon::metrics::Timer::start();
+    let tmp = format!("{out}.tmp");
+    let mut rows = 0usize;
+    let mut convert = || -> Result<(rylon::types::Schema, usize)> {
+        let metas = read_ryf_footer(input)?;
+        let first_meta = metas
+            .first()
+            .ok_or_else(|| RylonError::parse("ryf: no groups"))?;
+        let first = read_ryf_group(input, first_meta)?;
+        let schema = first.schema().clone();
+        let mut w = CsvWriter::new(
+            std::fs::File::create(&tmp)?,
+            &schema,
+            &CsvOptions::default(),
+        )?;
+        rows += first.num_rows();
+        w.append(&first)?;
+        drop(first);
+        for m in metas.iter().skip(1) {
+            let t = read_ryf_group(input, m)?;
+            if t.schema() != &schema {
+                return Err(RylonError::schema(format!(
+                    "ryf group schema mismatch: {} vs {}",
+                    t.schema(),
+                    schema
+                )));
+            }
+            rows += t.num_rows();
+            w.append(&t)?;
+        }
+        w.finish()?;
+        std::fs::rename(&tmp, out)?;
+        Ok((schema, metas.len()))
+    };
+    let (schema, groups) = match convert() {
+        Ok(r) => r,
+        Err(e) => {
+            std::fs::remove_file(&tmp).ok();
+            return Err(e);
+        }
+    };
+    println!(
+        "converted {} rows ({}) from {groups} row groups in {:.3}s: {out}",
+        human_count(rows as u64),
+        schema,
+        timer.seconds()
+    );
+    Ok(())
+}
+
 fn cmd_convert(args: &Args) -> Result<()> {
     use rylon::io::ryf::RyfWriter;
     use rylon::table::Table;
 
     let input = args.req("in")?;
     let out = args.req("out")?;
+    // Direction from the input suffix: .ryf streams groups back out to
+    // CSV; anything else is the CSV → RYF ingest direction.
+    if input.ends_with(".ryf") {
+        return convert_ryf_to_csv(input, out);
+    }
     // 0 = one row group per streamed chunk (group sizes then follow the
     // ingest chunk size; boundaries reset per chunk, so explicit
     // --group-rows gives approximate, not exact, group sizes).
@@ -534,6 +619,12 @@ fn run() -> Result<()> {
     rylon::exec::set_ingest_chunk_bytes(
         rylon::exec::resolve_ingest_chunk_bytes(
             args.usize_or("ingest-chunk", cfg.ingest_chunk_bytes),
+        ),
+    );
+    rylon::exec::set_ingest_single_pass(
+        rylon::exec::resolve_ingest_single_pass(
+            args.bool_flag("ingest-single-pass")?
+                .or(cfg.ingest_single_pass),
         ),
     );
     match args.cmd.as_str() {

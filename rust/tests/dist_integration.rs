@@ -139,6 +139,209 @@ fn streamed_rank_partitions_match_whole_buffer_ingest() {
 }
 
 #[test]
+fn single_pass_ingest_reads_each_byte_once_and_matches_two_pass() {
+    use rylon::dist::{read_csv_partition_with, IngestMode, IngestStats};
+    // Single-pass must read each file byte exactly once per cluster
+    // (the counter is the acceptance gauge), two-pass reads the whole
+    // file twice per rank, and the two schemes must produce
+    // bit-identical per-rank tables.
+    let dir = std::env::temp_dir().join("rylon_it_single_pass");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sp.csv");
+    let n = 1200usize;
+    let table = Table::from_columns(vec![
+        ("id", Column::from_i64((0..n as i64).collect())),
+        (
+            "s",
+            Column::from_str(
+                &(0..n)
+                    .map(|i| match i % 5 {
+                        0 => format!("multi\nline,{i}"),
+                        1 => format!("esc\"{i}"),
+                        2 => format!("日本語{i}"),
+                        3 => format!("crlf\r\npair{i}"),
+                        _ => format!("plain{i}"),
+                    })
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+    .unwrap();
+    write_csv(&table, &path, &CsvOptions::default()).unwrap();
+    let file_len = std::fs::metadata(&path).unwrap().len();
+    let whole = read_csv(&path, &CsvOptions::default()).unwrap();
+
+    for world in [1usize, 2, 4] {
+        let cfg = DistConfig::threads(world).with_ingest_chunk_bytes(512);
+        let cluster = Cluster::new(cfg).unwrap();
+        let sp_stats = IngestStats::new();
+        let sp = cluster
+            .run(|ctx| {
+                read_csv_partition_with(
+                    ctx,
+                    &path,
+                    &CsvOptions::default(),
+                    IngestMode::SinglePass,
+                    Some(&sp_stats),
+                )
+            })
+            .unwrap();
+        assert_eq!(
+            sp_stats.bytes_read(),
+            file_len,
+            "world {world}: single-pass must read each byte exactly once"
+        );
+        let tp_stats = IngestStats::new();
+        let tp = cluster
+            .run(|ctx| {
+                read_csv_partition_with(
+                    ctx,
+                    &path,
+                    &CsvOptions::default(),
+                    IngestMode::TwoPass,
+                    Some(&tp_stats),
+                )
+            })
+            .unwrap();
+        assert_eq!(
+            tp_stats.bytes_read(),
+            2 * world as u64 * file_len,
+            "world {world}: two-pass reads the whole file twice per rank"
+        );
+        assert_eq!(
+            sp, tp,
+            "world {world}: single-pass diverged from two-pass"
+        );
+        let merged = Table::concat_all(whole.schema(), &sp).unwrap();
+        assert_eq!(merged, whole, "world {world}: reassembly diverged");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn single_pass_ingest_splices_records_straddling_rank_seams() {
+    use rylon::dist::{read_csv_partition_with, IngestMode};
+    // One record whose quoted (newline-bearing) field covers most of
+    // the file: at world 4 it straddles every rank's byte range, so
+    // interior ranks must forward their entire range left as
+    // fragments and end up owning zero records before the rebalance.
+    let dir = std::env::temp_dir().join("rylon_it_seam_records");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("seam.csv");
+    let big = format!("\"x{}\nmid\ny\"", "a".repeat(4000));
+    let data = format!("id,s\n1,{big}\n2,plain\n3,\"q,uoted\"\n");
+    std::fs::write(&path, &data).unwrap();
+    let whole = read_csv(&path, &CsvOptions::default()).unwrap();
+    assert_eq!(whole.num_rows(), 3);
+
+    let cluster = Cluster::new(
+        DistConfig::threads(4).with_ingest_chunk_bytes(256),
+    )
+    .unwrap();
+    let sp = cluster
+        .run(|ctx| {
+            read_csv_partition_with(
+                ctx,
+                &path,
+                &CsvOptions::default(),
+                IngestMode::SinglePass,
+                None,
+            )
+        })
+        .unwrap();
+    let tp = cluster
+        .run(|ctx| {
+            read_csv_partition_with(
+                ctx,
+                &path,
+                &CsvOptions::default(),
+                IngestMode::TwoPass,
+                None,
+            )
+        })
+        .unwrap();
+    assert_eq!(sp, tp, "straddling record broke single/two-pass parity");
+    let merged = Table::concat_all(whole.schema(), &sp).unwrap();
+    assert_eq!(merged, whole);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn single_pass_ingest_handles_files_smaller_than_world() {
+    // Two data records, four ranks: some ranks own zero bytes and zero
+    // records, but still resolve the file's schema and participate in
+    // every collective.
+    let dir = std::env::temp_dir().join("rylon_it_small_file");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tiny.csv");
+    std::fs::write(&path, "id,s\n1,a\n2,b\n").unwrap();
+    let whole = read_csv(&path, &CsvOptions::default()).unwrap();
+
+    let cluster = Cluster::new(DistConfig::threads(4)).unwrap();
+    let outs = cluster
+        .run(|ctx| {
+            rylon::dist::read_csv_partition(
+                ctx,
+                &path,
+                &CsvOptions::default(),
+            )
+        })
+        .unwrap();
+    let sizes: Vec<usize> = outs.iter().map(|t| t.num_rows()).collect();
+    assert_eq!(sizes, vec![1, 1, 0, 0], "block layout with empty ranks");
+    for t in &outs {
+        assert_eq!(t.schema(), whole.schema(), "empty rank lost the schema");
+    }
+    let merged = Table::concat_all(whole.schema(), &outs).unwrap();
+    assert_eq!(merged, whole);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn single_pass_ingest_parse_errors_fail_all_ranks_cleanly() {
+    use rylon::dist::{read_csv_partition_with, IngestMode};
+    // A ragged record in one rank's byte range must abort the whole
+    // job (symmetrically — no rank may hang in a later collective),
+    // and the cluster must stay serviceable afterwards.
+    let dir = std::env::temp_dir().join("rylon_it_sp_errors");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ragged.csv");
+    let mut data = String::from("a,b\n");
+    for i in 0..200 {
+        data.push_str(&format!("{i},{i}\n"));
+    }
+    data.push_str("oops\n"); // 1 cell, schema has 2
+    std::fs::write(&path, &data).unwrap();
+
+    let cluster = Cluster::new(DistConfig::threads(3)).unwrap();
+    let r: rylon::Result<Vec<Table>> = cluster.run(|ctx| {
+        read_csv_partition_with(
+            ctx,
+            &path,
+            &CsvOptions::default(),
+            IngestMode::SinglePass,
+            None,
+        )
+    });
+    assert!(r.is_err(), "ragged record must fail the job");
+    // Same job again in two-pass mode errors too.
+    let r2: rylon::Result<Vec<Table>> = cluster.run(|ctx| {
+        read_csv_partition_with(
+            ctx,
+            &path,
+            &CsvOptions::default(),
+            IngestMode::TwoPass,
+            None,
+        )
+    });
+    assert!(r2.is_err());
+    // The fabric and pools survive the aborted jobs.
+    let ok = cluster.run(|ctx| Ok(ctx.rank)).unwrap();
+    assert_eq!(ok, vec![0, 1, 2]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn sim_fabric_strong_scaling_shape() {
     // The Fig 10 sanity core: makespan must drop substantially from 1
     // to 8 ranks (compute-bound region), and the speedup must be

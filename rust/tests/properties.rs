@@ -289,6 +289,73 @@ fn prop_partitioned_record_reads_reassemble_the_file() {
 }
 
 #[test]
+fn prop_dist_single_pass_equals_two_pass_equals_whole_buffer() {
+    // The PR 4 tentpole invariant: distributed single-pass byte-range
+    // ingest == two-pass count-then-parse == whole-buffer parse, per
+    // rank and bit for bit, over randomized RFC 4180 documents (quoted
+    // newlines, CRLF, escapes, multibyte, blank lines) at several
+    // world sizes and ingest chunk sizes — and the single-pass scheme
+    // reads each file byte exactly once per cluster.
+    use rylon::dist::{read_csv_partition_with, IngestMode, IngestStats};
+    for seed in 0..8u64 {
+        let mut rng = Xoshiro256::new(12_000 + seed);
+        let text = random_csv(&mut rng, true);
+        let path = std::env::temp_dir()
+            .join(format!("rylon_prop_single_pass_{seed}.csv"));
+        std::fs::write(&path, &text).unwrap();
+        let whole = read_csv_str(&text, &CsvOptions::default()).unwrap();
+        for world in [1usize, 2, 4] {
+            for chunk in [64usize, 8192] {
+                let cfg = DistConfig::threads(world)
+                    .with_ingest_chunk_bytes(chunk);
+                let cluster = Cluster::new(cfg).unwrap();
+                let stats = IngestStats::new();
+                let sp = cluster
+                    .run(|ctx| {
+                        read_csv_partition_with(
+                            ctx,
+                            &path,
+                            &CsvOptions::default(),
+                            IngestMode::SinglePass,
+                            Some(&stats),
+                        )
+                    })
+                    .unwrap();
+                assert_eq!(
+                    stats.bytes_read(),
+                    text.len() as u64,
+                    "seed {seed} world {world} chunk {chunk}: \
+                     single-pass byte count"
+                );
+                let tp = cluster
+                    .run(|ctx| {
+                        read_csv_partition_with(
+                            ctx,
+                            &path,
+                            &CsvOptions::default(),
+                            IngestMode::TwoPass,
+                            None,
+                        )
+                    })
+                    .unwrap();
+                assert_eq!(
+                    sp, tp,
+                    "seed {seed} world {world} chunk {chunk}: \
+                     single-pass != two-pass"
+                );
+                let merged =
+                    Table::concat_all(whole.schema(), &sp).unwrap();
+                assert_eq!(
+                    merged, whole,
+                    "seed {seed} world {world} chunk {chunk}: reassembly"
+                );
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
 fn prop_wire_roundtrip_preserves_tables() {
     for seed in 0..CASES {
         let mut rng = Xoshiro256::new(1000 + seed);
