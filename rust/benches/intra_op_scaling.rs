@@ -4,10 +4,19 @@
 //! rows/sec grid, and emits `BENCH_intra_op.json` so the perf
 //! trajectory is tracked from this PR onward.
 //!
+//! A second **skew arm** gives one rank 8× the rows of its siblings
+//! and times the cluster with cross-rank work stealing on vs off
+//! (`speedup_steal_vs_isolated` + per-op steal counts in the JSON),
+//! asserting bit-identical outputs between the two schedulers first.
+//!
 //! Env overrides: INTRA_ROWS (default 1_000_000), INTRA_SAMPLES,
-//! INTRA_MAX_THREADS.
+//! INTRA_MAX_THREADS, INTRA_SKEW_WORLD, INTRA_SKEW_THREADS,
+//! INTRA_SKEW_ROWS.
 
 use rylon::bench_harness::{measure, BenchOpts, Report};
+use rylon::column::Column;
+use rylon::compute::filter::take_parallel;
+use rylon::dist::{Cluster, DistConfig};
 use rylon::exec;
 use rylon::io::datagen::{gen_table, DataGenSpec};
 use rylon::ops::groupby::{groupby, Agg, GroupByOptions};
@@ -28,6 +37,31 @@ struct Workload {
     name: &'static str,
     rows: usize,
     run: Box<dyn Fn() -> Table>,
+}
+
+/// Per-rank table for the skew arm: join-key ids, an f64 payload, and
+/// a string column so the gather (materialisation) half of every
+/// operator moves real payload bytes.
+fn skew_table(rows: usize, seed: u64) -> Table {
+    let base = gen_table(&DataGenSpec::paper_scaling(rows, seed)).unwrap();
+    let id = base.column_by_name("id").unwrap().i64_values().to_vec();
+    let d0 = base.column_by_name("d0").unwrap().f64_values().to_vec();
+    let s: Vec<String> = id
+        .iter()
+        .enumerate()
+        .map(|(i, k)| format!("row-{k}-{i}"))
+        .collect();
+    Table::from_columns(vec![
+        ("id", Column::from_i64(id)),
+        ("d0", Column::from_f64(d0)),
+        (
+            "s",
+            Column::from_str(
+                &s.iter().map(|x| x.as_str()).collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+    .unwrap()
 }
 
 fn main() {
@@ -137,6 +171,118 @@ fn main() {
         }
     }
 
+    // ---- Skew arm: one rank holds 8× the rows of its siblings ----
+    //
+    // With isolated per-rank pools ("steal off"), the hot rank's
+    // morsels can only run on its own workers while every sibling's
+    // workers sit idle once their small partitions drain; with
+    // work stealing on, those idle workers claim the hot rank's
+    // queued morsels. At the default 1 worker per rank the isolated
+    // scheduler is exactly the paper's serial-rank model, so the gap
+    // is pure scheduling, not extra threads.
+    let skew_world = env_usize("INTRA_SKEW_WORLD", 4);
+    let skew_threads = env_usize("INTRA_SKEW_THREADS", 1);
+    let hot_rows = env_usize("INTRA_SKEW_ROWS", rows.min(400_000)).max(8);
+    let base_rows = hot_rows / 8;
+    println!(
+        "skew arm: world {skew_world} × {skew_threads} workers, \
+         rank 0 holds {hot_rows} rows (8× its siblings)"
+    );
+    let tables: Vec<Table> = (0..skew_world)
+        .map(|r| {
+            skew_table(
+                if r == 0 { hot_rows } else { base_rows },
+                100 + r as u64,
+            )
+        })
+        .collect();
+    let indices: Vec<Vec<usize>> = tables
+        .iter()
+        .map(|t| (0..t.num_rows()).rev().collect())
+        .collect();
+    let skew_pred = Predicate::parse("d0 > 0").unwrap();
+    let skew_keys = vec![SortKey::asc("id")];
+    #[allow(clippy::type_complexity)]
+    let skew_ops: Vec<(
+        &str,
+        Box<dyn Fn(&Table, &[usize]) -> Table + Sync + '_>,
+    )> = vec![
+        (
+            "gather",
+            Box::new(|t, idx| take_parallel(t, idx, exec::current())),
+        ),
+        ("filter", Box::new(|t, _| select(t, &skew_pred).unwrap())),
+        ("sort", Box::new(|t, _| orderby(t, &skew_keys).unwrap())),
+    ];
+    let mut skew_samples: Vec<(String, f64, f64, u64)> = Vec::new();
+    let (mut total_on, mut total_off, mut total_steals) = (0.0f64, 0.0f64, 0u64);
+    for (name, op) in &skew_ops {
+        let run_mode = |steal: bool| -> (Vec<Table>, f64, u64) {
+            let cfg = DistConfig::threads(skew_world)
+                .with_intra_op_threads(skew_threads)
+                .with_work_steal(steal);
+            let cluster = Cluster::new(cfg).expect("skew cluster");
+            let run_once = || {
+                cluster
+                    .run(|ctx| Ok(op(&tables[ctx.rank], &indices[ctx.rank])))
+                    .expect("skew run")
+            };
+            // Untimed first run: warms the pools (a steal signal to a
+            // never-spawned sibling pool spawns its thief) and yields
+            // the identity-check payload.
+            let outs = run_once();
+            // Steal gauge per *measured* run, so the JSON number is
+            // comparable whatever INTRA_SAMPLES is.
+            let stolen_before = cluster.stolen_tasks();
+            let stats = measure(opts, || {
+                std::hint::black_box(
+                    run_once().iter().map(|t| t.num_rows()).sum::<usize>(),
+                );
+            });
+            let runs = (opts.warmup_iters + opts.samples).max(1) as u64;
+            let stolen_per_run =
+                (cluster.stolen_tasks() - stolen_before) / runs;
+            (outs, stats.median, stolen_per_run)
+        };
+        let (outs_on, on_med, steals) = run_mode(true);
+        let (outs_off, off_med, off_steals) = run_mode(false);
+        assert_eq!(
+            outs_on, outs_off,
+            "skew/{name}: stealing changed results"
+        );
+        assert_eq!(off_steals, 0, "skew/{name}: isolated pools stole");
+        let speedup = off_med / on_med.max(1e-12);
+        report.add_with(
+            &format!("skew_{name}"),
+            skew_world as f64,
+            on_med,
+            vec![
+                ("seconds_isolated".to_string(), off_med),
+                ("speedup_steal_vs_isolated".to_string(), speedup),
+                ("stolen_tasks_per_run".to_string(), steals as f64),
+            ],
+        );
+        println!(
+            "  skew_{name}: steal {on_med:>8.4}s  isolated {off_med:>8.4}s \
+             ({speedup:.2}x, {steals} tasks stolen/run)"
+        );
+        skew_samples.push((name.to_string(), on_med, off_med, steals));
+        total_on += on_med;
+        total_off += off_med;
+        total_steals += steals;
+    }
+    let total_speedup = total_off / total_on.max(1e-12);
+    println!(
+        "  skew_total: steal {total_on:>8.4}s  isolated {total_off:>8.4}s \
+         ({total_speedup:.2}x, {total_steals} tasks stolen/run)"
+    );
+    skew_samples.push((
+        "total".to_string(),
+        total_on,
+        total_off,
+        total_steals,
+    ));
+
     println!("{}", report.render());
     report.save("intra_op_scaling").expect("save report");
 
@@ -159,6 +305,43 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "skew",
+            Json::obj(vec![
+                ("world", Json::num(skew_world as f64)),
+                ("intra_op_threads", Json::num(skew_threads as f64)),
+                ("hot_rank_rows", Json::num(hot_rows as f64)),
+                ("sibling_rows", Json::num(base_rows as f64)),
+                (
+                    "results",
+                    Json::Arr(
+                        skew_samples
+                            .iter()
+                            .map(|(name, on, off, steals)| {
+                                Json::obj(vec![
+                                    ("op", Json::str(name.clone())),
+                                    ("seconds_steal", Json::num(*on)),
+                                    (
+                                        "seconds_isolated",
+                                        Json::num(*off),
+                                    ),
+                                    (
+                                        "speedup_steal_vs_isolated",
+                                        Json::num(
+                                            *off / on.max(1e-12),
+                                        ),
+                                    ),
+                                    (
+                                        "stolen_tasks_per_run",
+                                        Json::num(*steals as f64),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
         ),
     ]);
     std::fs::write("BENCH_intra_op.json", json.to_string())

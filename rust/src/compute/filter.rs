@@ -37,7 +37,9 @@ pub fn take_parallel(
     indices: &[usize],
     exec: ExecContext,
 ) -> Table {
-    if !exec.is_parallel() || indices.len() < exec::par_row_threshold() {
+    if !exec::morsel_parallel(exec)
+        || indices.len() < exec::par_row_threshold()
+    {
         return table.take(indices);
     }
     let columns: Vec<Arc<Column>> = table
@@ -47,17 +49,22 @@ pub fn take_parallel(
     Table::from_parts(table.schema().clone(), columns, indices.len())
 }
 
-/// Morsel-parallel gather of one column (see [`take_parallel`]). No
-/// layout falls back to serial above the row threshold: fixed-width
-/// values gather into disjoint output ranges, validity bitmaps gather
-/// word-aligned ranges, and string payloads land via byte-length prefix
-/// sums.
+/// Morsel-parallel gather of one column (see [`take_parallel`]). On a
+/// parallel budget no layout falls back to serial above the row
+/// threshold: fixed-width values gather into disjoint output ranges,
+/// validity bitmaps gather word-aligned ranges, and string payloads
+/// land via byte-length prefix sums. (On a serial-budget steal-linked
+/// rank the value/string passes queue steal-eligible morsels while
+/// validity bitmaps — 1/64th of the value bytes — stay inline; see the
+/// ROADMAP note on steal-aware split widths.)
 pub fn take_column_parallel(
     col: &Column,
     indices: &[usize],
     exec: ExecContext,
 ) -> Column {
-    if !exec.is_parallel() || indices.len() < exec::par_row_threshold() {
+    if !exec::morsel_parallel(exec)
+        || indices.len() < exec::par_row_threshold()
+    {
         return col.take(indices);
     }
     match col {

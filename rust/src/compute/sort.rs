@@ -103,14 +103,87 @@ fn argsort_i64_parallel(
     out
 }
 
-/// Pairwise stable merge of adjacent sorted runs until one remains;
-/// each level's merges run in parallel. `take_right(b, a)` returns true
-/// only when `b` sorts *strictly* before `a` — on ties the left
-/// (earlier-index) run wins, which is exactly the stability that keeps
-/// parallel permutations bit-identical to the serial stable sorts.
+/// Elements per merge-path chunk: every merge level is cut into
+/// output-contiguous chunks of about this many elements, so a level is
+/// one wide, evenly sized pool batch instead of one task per pairwise
+/// merge (whose count halves every level, starving workers — local or
+/// stolen — near the top of the tree).
+const MERGE_CHUNK_ELEMS: usize = exec::MORSEL_ROWS;
+
+/// Number of elements of `a` among the first `k` outputs of the stable
+/// merge of sorted runs `a` and `b` (ties take `a` — the left run).
+/// Binary search over the merge path, so any output range of the merge
+/// can be produced independently and exactly.
+fn merge_split<T, F>(a: &[T], b: &[T], k: usize, take_right: &F) -> usize
+where
+    F: Fn(&T, &T) -> bool,
+{
+    let mut lo = k.saturating_sub(b.len());
+    let mut hi = k.min(a.len());
+    while lo < hi {
+        // i < hi ≤ min(k, a.len()) keeps a[i] in bounds and j ≥ 1;
+        // i ≥ lo ≥ k - b.len() keeps b[j-1] in bounds.
+        let i = lo + (hi - lo) / 2;
+        let j = k - i;
+        if !take_right(&b[j - 1], &a[i]) {
+            // a[i] is output before b[j-1]: too few taken from `a`.
+            lo = i + 1;
+        } else {
+            hi = i;
+        }
+    }
+    lo
+}
+
+/// Write output range `[out_lo, out_lo + dst.len())` of the stable
+/// merge of `a` and `b` (ties take `a`) straight into `dst`. Chunks
+/// computed at the same split points tile exactly the full stable
+/// merge, so disjoint `dst` sub-slices of one output buffer need no
+/// post-pass concatenation (each element is written once).
+fn merge_path_chunk_into<T, F>(
+    a: &[T],
+    b: &[T],
+    out_lo: usize,
+    take_right: &F,
+    dst: &mut [T],
+) where
+    T: Copy,
+    F: Fn(&T, &T) -> bool,
+{
+    let out_hi = out_lo + dst.len();
+    let i_lo = merge_split(a, b, out_lo, take_right);
+    let i_hi = merge_split(a, b, out_hi, take_right);
+    let (a, b) = (&a[i_lo..i_hi], &b[out_lo - i_lo..out_hi - i_hi]);
+    let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        if take_right(&b[j], &a[i]) {
+            dst[k] = b[j];
+            j += 1;
+        } else {
+            dst[k] = a[i];
+            i += 1;
+        }
+        k += 1;
+    }
+    dst[k..k + (a.len() - i)].copy_from_slice(&a[i..]);
+    let k = k + (a.len() - i);
+    dst[k..].copy_from_slice(&b[j..]);
+}
+
+/// Pairwise stable merge of adjacent sorted runs until one remains.
+/// Each level is submitted as **one pool batch**: every pair's merge
+/// is cut into output-disjoint merge-path chunks
+/// ([`MERGE_CHUNK_ELEMS`]) and all chunks across all pairs fan out
+/// together, so workers — including sibling ranks' workers stealing
+/// into a skewed rank — see a whole level of uniform work even when
+/// the level has a single pairwise merge left. `take_right(b, a)`
+/// returns true only when `b` sorts *strictly* before `a` — on ties
+/// the left (earlier-index) run wins, which with split points computed
+/// by the same rule keeps parallel permutations bit-identical to the
+/// serial stable sorts at any thread count and any chunk layout.
 fn merge_runs_stable_by<T, F>(mut runs: Vec<Vec<T>>, take_right: F) -> Vec<T>
 where
-    T: Copy + Send,
+    T: Copy + Default + Send + Sync,
     F: Fn(&T, &T) -> bool + Sync,
 {
     if runs.is_empty() {
@@ -118,29 +191,60 @@ where
     }
     while runs.len() > 1 {
         let mut it = runs.into_iter();
-        let mut pairs = Vec::new();
+        let mut pairs: Vec<(Vec<T>, Vec<T>)> = Vec::new();
+        let mut carry: Option<Vec<T>> = None;
         while let Some(a) = it.next() {
-            pairs.push((a, it.next()));
-        }
-        runs = exec::map_parallel(pairs, |(a, b)| match b {
-            None => a,
-            Some(b) => {
-                let mut out = Vec::with_capacity(a.len() + b.len());
-                let (mut i, mut j) = (0usize, 0usize);
-                while i < a.len() && j < b.len() {
-                    if take_right(&b[j], &a[i]) {
-                        out.push(b[j]);
-                        j += 1;
-                    } else {
-                        out.push(a[i]);
-                        i += 1;
-                    }
-                }
-                out.extend_from_slice(&a[i..]);
-                out.extend_from_slice(&b[j..]);
-                out
+            match it.next() {
+                Some(b) => pairs.push((a, b)),
+                None => carry = Some(a),
             }
+        }
+        // The whole level as one batch of near-equal chunks, each
+        // task writing its disjoint sub-slice of the pair's
+        // preallocated output in place (one write per element; the
+        // chunks tile the output exactly, so no post-concatenation).
+        let mut outs: Vec<Vec<T>> = pairs
+            .iter()
+            .map(|(a, b)| vec![T::default(); a.len() + b.len()])
+            .collect();
+        let mut tasks: Vec<(usize, usize, &mut [T])> = Vec::new();
+        for ((p, (a, b)), out) in
+            pairs.iter().enumerate().zip(outs.iter_mut())
+        {
+            let len = a.len() + b.len();
+            // At least two chunks per pair (when the pair has ≥ 2
+            // elements), so the split path runs — and is therefore
+            // equivalence-tested — at every size.
+            let chunks = len
+                .div_ceil(MERGE_CHUNK_ELEMS)
+                .max(if len >= 2 { 2 } else { 1 });
+            let mut pos = 0usize;
+            let mut rest: &mut [T] = out.as_mut_slice();
+            for c in 0..chunks {
+                let hi = len * (c + 1) / chunks;
+                if hi == pos {
+                    continue;
+                }
+                let (head, tail) =
+                    std::mem::take(&mut rest).split_at_mut(hi - pos);
+                rest = tail;
+                tasks.push((p, pos, head));
+                pos = hi;
+            }
+        }
+        let pairs_ref = &pairs;
+        let take_right_ref = &take_right;
+        // Budget-capped submission: the batch is deliberately wider
+        // than the rank's budget so *stealing siblings* can help — it
+        // must not grow the local pool past `exec` (oversubscription).
+        exec::map_parallel_budgeted(tasks, |(p, lo, dst)| {
+            let (a, b) = &pairs_ref[p];
+            merge_path_chunk_into(a, b, lo, take_right_ref, dst);
         });
+        if let Some(c) = carry {
+            outs.push(c);
+        }
+        runs = outs;
     }
     runs.pop().unwrap()
 }
@@ -298,6 +402,60 @@ mod tests {
     fn empty_and_single() {
         assert!(argsort_i64(&[], None).is_empty());
         assert_eq!(argsort_i64(&[7], None), vec![0]);
+    }
+
+    #[test]
+    fn merge_path_chunks_reassemble_the_stable_merge() {
+        // Heavy ties across every chunk boundary: the split points must
+        // reproduce the exact left-wins-on-ties stable merge at any
+        // chunk count.
+        let mut r = Xoshiro256::new(41);
+        let mut a: Vec<(u64, u32)> =
+            (0..1000).map(|i| (r.next_below(7), i)).collect();
+        let mut b: Vec<(u64, u32)> =
+            (0..1300).map(|i| (r.next_below(7), 1000 + i)).collect();
+        a.sort_by_key(|&(k, _)| k);
+        b.sort_by_key(|&(k, _)| k);
+        let take_right =
+            |x: &(u64, u32), y: &(u64, u32)| -> bool { x.0 < y.0 };
+        // Naive reference merge.
+        let mut expect = Vec::new();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            if take_right(&b[j], &a[i]) {
+                expect.push(b[j]);
+                j += 1;
+            } else {
+                expect.push(a[i]);
+                i += 1;
+            }
+        }
+        expect.extend_from_slice(&a[i..]);
+        expect.extend_from_slice(&b[j..]);
+        let len = a.len() + b.len();
+        for chunks in [1usize, 2, 3, 7, 64, len] {
+            let mut got = vec![(0u64, 0u32); len];
+            for c in 0..chunks {
+                let lo = len * c / chunks;
+                let hi = len * (c + 1) / chunks;
+                merge_path_chunk_into(
+                    &a,
+                    &b,
+                    lo,
+                    &take_right,
+                    &mut got[lo..hi],
+                );
+            }
+            assert_eq!(got, expect, "chunks={chunks}");
+        }
+        // Degenerate inputs: one empty run, and an empty output chunk.
+        let mut only_a = vec![(0u64, 0u32); a.len()];
+        merge_path_chunk_into(&a, &[], 0, &take_right, &mut only_a);
+        assert_eq!(only_a, a);
+        let mut only_b = vec![(0u64, 0u32); b.len()];
+        merge_path_chunk_into(&[], &b, 0, &take_right, &mut only_b);
+        assert_eq!(only_b, b);
+        merge_path_chunk_into(&a, &b, 5, &take_right, &mut []);
     }
 
     #[test]

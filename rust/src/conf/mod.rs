@@ -136,6 +136,16 @@ impl ConfFile {
     }
 }
 
+/// Tri-state boolean knob: absent key = `None` (defer to the process
+/// default); bools and numeric 0/1 both accepted.
+fn opt_bool(f: &ConfFile, key: &str) -> Option<bool> {
+    f.get(key).and_then(|v| match v {
+        ConfValue::Bool(b) => Some(*b),
+        ConfValue::Num(n) => Some(*n != 0.0),
+        ConfValue::Str(_) => None,
+    })
+}
+
 /// Typed top-level configuration for the `rylon` launcher.
 #[derive(Debug, Clone)]
 pub struct RylonConfig {
@@ -167,6 +177,11 @@ pub struct RylonConfig {
     /// overridable via the `INGEST_SINGLE_PASS` env var); `false`
     /// forces the two-pass count-then-parse fallback.
     pub ingest_single_pass: Option<bool>,
+    /// Cross-rank work stealing (`[exec] work_steal`). `None` (key
+    /// absent) = the process default ([`crate::exec::WORK_STEAL`],
+    /// overridable via the `WORK_STEAL` env var); `false` keeps the
+    /// isolated per-rank worker pools.
+    pub work_steal: Option<bool>,
     pub cost: CostModel,
     /// Directory holding AOT artifacts + manifest.json.
     pub artifacts_dir: String,
@@ -182,6 +197,7 @@ impl Default for RylonConfig {
             par_row_threshold: crate::exec::PAR_ROW_THRESHOLD,
             ingest_chunk_bytes: 0,
             ingest_single_pass: None,
+            work_steal: None,
             cost: CostModel::default(),
             artifacts_dir: "artifacts".to_string(),
         }
@@ -205,14 +221,9 @@ impl RylonConfig {
             ingest_chunk_bytes: f
                 .usize_or("exec.ingest_chunk_bytes", d.ingest_chunk_bytes),
             // Accept 0/1 as well as true/false — every neighbouring
-            // [exec] knob is numeric, and the env var takes 0/1 too.
-            ingest_single_pass: f
-                .get("exec.ingest_single_pass")
-                .and_then(|v| match v {
-                    ConfValue::Bool(b) => Some(*b),
-                    ConfValue::Num(n) => Some(*n != 0.0),
-                    ConfValue::Str(_) => None,
-                }),
+            // [exec] knob is numeric, and the env vars take 0/1 too.
+            ingest_single_pass: opt_bool(f, "exec.ingest_single_pass"),
+            work_steal: opt_bool(f, "exec.work_steal"),
             cost: CostModel {
                 alpha: f.f64_or("cost.alpha", dc.alpha),
                 beta: f.f64_or("cost.beta", dc.beta),
@@ -247,6 +258,7 @@ intra_op_threads = 2
 par_row_threshold = 512
 ingest_chunk_bytes = 65536
 ingest_single_pass = false
+work_steal = false
 
 [cost]
 alpha = 1e-5
@@ -276,19 +288,19 @@ ranks_per_node = 8
         assert_eq!(c.par_row_threshold, 512);
         assert_eq!(c.ingest_chunk_bytes, 65536);
         assert_eq!(c.ingest_single_pass, Some(false));
-        // Key absent = defer to the process default.
-        assert_eq!(
-            RylonConfig::from_file(&ConfFile::parse("").unwrap())
-                .ingest_single_pass,
-            None
-        );
-        // Numeric 0/1 spellings work like the env var's.
-        let num = ConfFile::parse("[exec]\ningest_single_pass = 1")
-            .unwrap();
-        assert_eq!(
-            RylonConfig::from_file(&num).ingest_single_pass,
-            Some(true)
-        );
+        assert_eq!(c.work_steal, Some(false));
+        // Keys absent = defer to the process defaults.
+        let empty = RylonConfig::from_file(&ConfFile::parse("").unwrap());
+        assert_eq!(empty.ingest_single_pass, None);
+        assert_eq!(empty.work_steal, None);
+        // Numeric 0/1 spellings work like the env vars'.
+        let num = ConfFile::parse(
+            "[exec]\ningest_single_pass = 1\nwork_steal = 1",
+        )
+        .unwrap();
+        let num = RylonConfig::from_file(&num);
+        assert_eq!(num.ingest_single_pass, Some(true));
+        assert_eq!(num.work_steal, Some(true));
         assert_eq!(c.cost.alpha, 1e-5);
         assert_eq!(c.cost.ranks_per_node, 8);
         // Untouched keys keep defaults.

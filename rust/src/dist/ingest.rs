@@ -16,7 +16,10 @@
 //!   record's start byte (a second, targeted exchange carries those
 //!   fragments), parses exactly the records that **start** in its
 //!   range, and a final [`super::rebalance`] restores the rank-major
-//!   block layout. No byte of the file is read twice by any rank:
+//!   block layout — elided entirely when the record counts show byte
+//!   ownership already *is* the block partition (uniform row lengths),
+//!   so such files move zero rows. No byte of the file is read twice
+//!   by any rank:
 //!   across the cluster the file is read exactly once (asserted
 //!   through [`IngestStats`] in the test suite).
 //!
@@ -24,9 +27,12 @@
 //!   fallback and bit-identity oracle) — a boundary-scan-only pass
 //!   counts the data records ([`crate::io::csv::count_csv_records`]),
 //!   giving every rank the same block partition, then a parse pass
-//!   streams the file again materialising only this rank's block.
-//!   Needs no coordination, but every rank reads the whole file twice
-//!   (`2 × world × file` bytes per cluster).
+//!   streams the file again, materialising only this rank's block and
+//!   **stopping at the block's end** rather than scanning to EOF.
+//!   Needs no coordination, but the count pass alone reads `world ×
+//!   file` bytes per cluster and the parse pass adds roughly
+//!   `(world + 1) / 2 × file` more (rank `r` reads up to the end of
+//!   block `r`).
 //!
 //! Both schemes produce **bit-identical per-rank tables** — schema
 //! inference included, because the single-pass sample exchange ships
@@ -79,6 +85,7 @@ pub enum IngestMode {
 #[derive(Debug, Default)]
 pub struct IngestStats {
     bytes_read: AtomicU64,
+    rows_moved: AtomicU64,
 }
 
 impl IngestStats {
@@ -93,8 +100,21 @@ impl IngestStats {
         self.bytes_read.load(Ordering::Relaxed)
     }
 
+    /// Data rows the single-pass scheme's post-parse rebalance shipped
+    /// to a different rank, summed across ranks. `0` when byte
+    /// ownership already matched the rank-major block partition (the
+    /// uniform-row-length case) — the rebalance exchange is then elided
+    /// entirely.
+    pub fn rows_moved(&self) -> u64 {
+        self.rows_moved.load(Ordering::Relaxed)
+    }
+
     fn add(&self, n: u64) {
         self.bytes_read.fetch_add(n, Ordering::Relaxed);
+    }
+
+    fn add_moved(&self, n: u64) {
+        self.rows_moved.fetch_add(n, Ordering::Relaxed);
     }
 }
 
@@ -153,10 +173,11 @@ pub fn read_csv_partition_with(
     }
 }
 
-/// The two-pass fallback: count records (pass 1), then stream-parse
-/// only this rank's block (pass 2), both bounded-memory through the
-/// chunked sink. No collectives — every rank derives the same block
-/// partition from the same count.
+/// The two-pass fallback: count records (pass 1, whole file), then
+/// stream-parse only this rank's block (pass 2, stopping at the
+/// block's end), both bounded-memory through the chunked sink. No
+/// collectives — every rank derives the same block partition from the
+/// same count.
 fn two_pass(
     ctx: &RankCtx,
     path: &Path,
@@ -747,9 +768,42 @@ fn single_pass(
     // 7. Status barrier (a ragged record on one rank must not strand
     //    the others in the rebalance), then restore the rank-major
     //    block layout — after which the per-rank tables are
-    //    bit-identical to the two-pass partition.
+    //    bit-identical to the two-pass partition. When byte ownership
+    //    already matches the block partition (uniform row lengths —
+    //    every rank parsed exactly its block), the rebalance exchange
+    //    is elided: every rank derives the same verdict from the same
+    //    `counts`, so all ranks skip the collective together.
     allgather_checked(ctx, parsed.as_ref().map(|_| Vec::new()))?;
     let table = parsed.expect("checked exchange surfaced parse errors");
+    // Per-rank *data* rows: the header record, owned by the first
+    // non-empty rank, parses to no row.
+    let mut data_counts = counts;
+    if opts.has_header {
+        if let Some(r0) = data_counts.iter().position(|&c| c > 0) {
+            data_counts[r0] -= 1;
+        }
+    }
+    let total: u64 = data_counts.iter().sum();
+    let aligned = (0..world).all(|r| {
+        data_counts[r] == block_range(total as usize, r, world).1 as u64
+    });
+    if aligned {
+        // Byte ownership already is the rank-major block partition
+        // (uniform row lengths): zero rows would move, so skip the
+        // rebalance exchange outright. Every rank derives the same
+        // verdict from the same counts, so all ranks skip together.
+        return Ok(table);
+    }
+    if let Some(st) = stats {
+        // Rows leaving this rank: its parsed span minus the overlap
+        // with its target block.
+        let my_start: u64 = data_counts[..ctx.rank].iter().sum();
+        let (t_off, t_len) = block_range(total as usize, ctx.rank, world);
+        let lo = my_start.max(t_off as u64);
+        let hi = (my_start + data_counts[ctx.rank])
+            .min(t_off as u64 + t_len as u64);
+        st.add_moved(data_counts[ctx.rank] - hi.saturating_sub(lo));
+    }
     super::rebalance(ctx, &table)
 }
 

@@ -16,6 +16,13 @@
 //!   world, so rank threads × morsel workers never oversubscribe), `1`
 //!   = the paper's serial-per-rank behaviour. Parallel kernels are
 //!   bit-identical to serial ones, so the knob never changes results.
+//!   With the `[exec] work_steal` knob on (the default on the threads
+//!   fabric), the per-rank pools are **steal-linked**: a worker that
+//!   drains its own rank's queue claims morsels from sibling ranks'
+//!   queues, so one skewed partition no longer idles the rest of the
+//!   cluster's workers — and since stealing only changes which worker
+//!   runs a morsel, results still never change
+//!   (`docs/ARCHITECTURE.md` has the scheduling walk-through).
 //!
 //! Ingest is distributed too: [`read_csv_partition`] loads one shared
 //! CSV as per-rank partitions, by default through a **single-pass
@@ -89,6 +96,17 @@ pub struct DistConfig {
     /// `INGEST_SINGLE_PASS` env var); `Some(false)` forces the
     /// two-pass count-then-parse fallback. Bit-identical either way.
     pub ingest_single_pass: Option<bool>,
+    /// Cross-rank work stealing (`[exec] work_steal`): morsel workers
+    /// that drain their own rank's queue steal tasks from sibling
+    /// ranks' queues, so one skewed partition no longer idles every
+    /// other rank's workers. `None` = the process default
+    /// ([`crate::exec::WORK_STEAL`], overridable via the `WORK_STEAL`
+    /// env var); `Some(false)` keeps the isolated per-rank pools.
+    /// Stealing changes which worker runs a morsel, never where its
+    /// result lands, so results are bit-identical either way. Forced
+    /// off on the sim fabric, whose cost model meters compute with
+    /// per-rank-thread CPU clocks that cross-rank workers would escape.
+    pub work_steal: Option<bool>,
 }
 
 impl Default for DistConfig {
@@ -101,6 +119,7 @@ impl Default for DistConfig {
             par_row_threshold: crate::exec::PAR_ROW_THRESHOLD,
             ingest_chunk_bytes: 0,
             ingest_single_pass: None,
+            work_steal: None,
         }
     }
 }
@@ -148,6 +167,14 @@ impl DistConfig {
     /// (`false`, the two-pass fallback/oracle).
     pub fn with_ingest_single_pass(mut self, on: bool) -> DistConfig {
         self.ingest_single_pass = Some(on);
+        self
+    }
+
+    /// Force cross-rank work stealing on (`true`) or off (`false`, the
+    /// isolated per-rank pools). The sim fabric ignores `true` (see
+    /// [`DistConfig::work_steal`]).
+    pub fn with_work_steal(mut self, on: bool) -> DistConfig {
+        self.work_steal = Some(on);
         self
     }
 }
@@ -201,9 +228,11 @@ pub struct Cluster {
     par_row_threshold: usize,
     ingest_chunk_bytes: usize,
     ingest_single_pass: bool,
+    work_steal: bool,
     fabric: FabricRef,
     sim: Option<Arc<SimFabric>>,
-    /// One long-lived morsel-worker pool per rank (lazy threads).
+    /// One long-lived morsel-worker pool per rank (lazy threads);
+    /// steal-linked to each other when `work_steal` resolved on.
     pools: Vec<Arc<crate::exec::WorkerPool>>,
 }
 
@@ -234,9 +263,23 @@ impl Cluster {
                 cfg.world,
             ),
         };
-        let pools = (0..cfg.world)
+        let pools: Vec<Arc<crate::exec::WorkerPool>> = (0..cfg.world)
             .map(|_| Arc::new(crate::exec::WorkerPool::new()))
             .collect();
+        // Work stealing runs rank morsels on sibling ranks' workers,
+        // which the sim fabric's per-rank-thread CPU metering cannot
+        // see — so the sim keeps isolated pools whatever the knob says
+        // (mirroring the auto-threads-resolve-to-serial rule above).
+        let work_steal = match cfg.fabric {
+            FabricKind::Sim(_) => false,
+            FabricKind::Threads => {
+                crate::exec::resolve_work_steal(cfg.work_steal)
+                    && cfg.world > 1
+            }
+        };
+        if work_steal {
+            crate::exec::link_steal_group(&pools);
+        }
         Ok(Cluster {
             world: cfg.world,
             shuffle_chunk_rows: cfg.shuffle_chunk_rows.max(1),
@@ -248,6 +291,7 @@ impl Cluster {
             ingest_single_pass: crate::exec::resolve_ingest_single_pass(
                 cfg.ingest_single_pass,
             ),
+            work_steal,
             fabric,
             sim,
             pools,
@@ -262,6 +306,22 @@ impl Cluster {
     /// The resolved per-rank morsel worker budget.
     pub fn intra_op_threads(&self) -> usize {
         self.intra_op_threads
+    }
+
+    /// Whether the rank pools are steal-linked (the resolved
+    /// `[exec] work_steal` knob; always `false` on the sim fabric and
+    /// at world 1).
+    pub fn work_steal(&self) -> bool {
+        self.work_steal
+    }
+
+    /// Total morsel tasks executed by a rank's worker on a **sibling**
+    /// rank's behalf, summed over all pools and runs so far — the
+    /// load-balance gauge the skew bench reports (0 with stealing
+    /// off, or whenever partitions were balanced enough that no worker
+    /// ever went idle while a sibling had queued work).
+    pub fn stolen_tasks(&self) -> u64 {
+        self.pools.iter().map(|p| p.stolen_tasks()).sum()
     }
 
     /// Run the SPMD closure on every rank; returns per-rank results in
@@ -282,6 +342,7 @@ impl Cluster {
                     let threshold = self.par_row_threshold;
                     let ingest_chunk = self.ingest_chunk_bytes;
                     let single_pass = self.ingest_single_pass;
+                    let steal = self.work_steal;
                     let pool = Arc::clone(&self.pools[rank]);
                     s.spawn(move || {
                         // The rank thread's intra-op budget: local
@@ -291,6 +352,7 @@ impl Cluster {
                         crate::exec::set_par_row_threshold(threshold);
                         crate::exec::set_ingest_chunk_bytes(ingest_chunk);
                         crate::exec::set_ingest_single_pass(single_pass);
+                        crate::exec::set_work_steal(steal);
                         crate::exec::install_thread_pool(pool);
                         let mut ctx = RankCtx {
                             rank,
@@ -471,6 +533,99 @@ mod tests {
             .unwrap();
         let d = crate::exec::default_ingest_chunk_bytes();
         assert_eq!(outs, vec![d, d]);
+    }
+
+    #[test]
+    fn work_steal_resolves_and_reaches_rank_threads() {
+        // Explicit off wins; world 1 and the sim fabric force off.
+        let off = Cluster::new(
+            DistConfig::threads(2).with_work_steal(false),
+        )
+        .unwrap();
+        assert!(!off.work_steal());
+        let outs = off.run(|_| Ok(crate::exec::work_steal())).unwrap();
+        assert_eq!(outs, vec![false, false]);
+        let on =
+            Cluster::new(DistConfig::threads(2).with_work_steal(true))
+                .unwrap();
+        assert!(on.work_steal());
+        let outs = on.run(|_| Ok(crate::exec::work_steal())).unwrap();
+        assert_eq!(outs, vec![true, true]);
+        assert_eq!(on.stolen_tasks(), 0, "no work submitted yet");
+        let solo =
+            Cluster::new(DistConfig::threads(1).with_work_steal(true))
+                .unwrap();
+        assert!(!solo.work_steal(), "a lone rank has nobody to steal from");
+        let sim = Cluster::new(
+            DistConfig::sim(3, CostModel::default()).with_work_steal(true),
+        )
+        .unwrap();
+        assert!(!sim.work_steal(), "sim metering excludes stealing");
+    }
+
+    #[test]
+    fn skewed_ranks_steal_and_stay_bit_identical() {
+        // Rank 0 gets 32× the rows of its siblings; after the siblings
+        // drain their own queues their workers must pick up rank 0's
+        // morsels, and the gathered results must match the isolated
+        // scheduler exactly.
+        let run_skew = |steal: bool| -> (Vec<Vec<usize>>, u64) {
+            use std::sync::atomic::{AtomicUsize, Ordering};
+            let cfg = DistConfig::threads(3)
+                .with_intra_op_threads(2)
+                .with_work_steal(steal);
+            let cluster = Cluster::new(cfg).unwrap();
+            // Two gates make the steals-happened assertion robust
+            // rather than a scheduling race: every rank-0 morsel
+            // first waits for both siblings to check in (each does so
+            // before submitting its own job), and — with stealing on
+            // — rank 0's two *first-claimed* morsels then hold their
+            // workers until a steal has actually been observed, so
+            // rank 0's queue stays open (62 unclaimed tasks) until a
+            // thief gets scheduled. The hold is bounded, so a genuine
+            // stealing bug fails the assertion below instead of
+            // hanging the test.
+            let ready = AtomicUsize::new(0);
+            let cluster_ref = &cluster;
+            let outs = cluster_ref
+                .run(|ctx| {
+                    let rank = ctx.rank;
+                    if rank != 0 {
+                        ready.fetch_add(1, Ordering::SeqCst);
+                    }
+                    // Siblings get two morsels — enough to spawn their
+                    // workers — while rank 0 queues 64.
+                    let rows = if rank == 0 { 1 << 22 } else { 1 << 17 };
+                    let exec = crate::exec::current();
+                    Ok(crate::exec::for_each_morsel(rows, exec, |m| {
+                        if rank == 0 {
+                            while ready.load(Ordering::SeqCst) < 2 {
+                                std::thread::yield_now();
+                            }
+                            if steal && m.index < 2 {
+                                let mut spins = 0u32;
+                                while cluster_ref.stolen_tasks() == 0
+                                    && spins < 5_000_000
+                                {
+                                    std::thread::yield_now();
+                                    spins += 1;
+                                }
+                            }
+                        }
+                        m.range().map(|i| i.wrapping_mul(31)).sum::<usize>()
+                    }))
+                })
+                .unwrap();
+            (outs, cluster.stolen_tasks())
+        };
+        let (outs_on, stolen_on) = run_skew(true);
+        let (outs_off, stolen_off) = run_skew(false);
+        assert_eq!(outs_on, outs_off, "stealing changed results");
+        assert_eq!(stolen_off, 0, "isolated pools must not steal");
+        assert!(
+            stolen_on > 0,
+            "skewed partition produced no steals (32× skew, 3 ranks)"
+        );
     }
 
     #[test]

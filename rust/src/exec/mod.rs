@@ -46,11 +46,12 @@ pub use self::morsel::{
     fill_parallel, for_each_morsel, map_parallel, par_gather,
     run_partitions, split_even, split_morsels, Morsel, MORSEL_ROWS,
 };
-pub(crate) use self::morsel::SendPtr;
+pub(crate) use self::morsel::{map_parallel_budgeted, SendPtr};
 // Executor plumbing for `dist::Cluster` and the reuse tests — not part
 // of the public API (the knobs above are; the pool is an internal).
 pub(crate) use self::pool::{
-    current_pool_spawned_threads, install_thread_pool, WorkerPool,
+    current_pool_spawned_threads, current_pool_stealable,
+    install_thread_pool, link_steal_group, WorkerPool,
 };
 
 /// Default parallelism row threshold: kernels fall back to the serial
@@ -79,6 +80,17 @@ pub const INGEST_CHUNK_BYTES: usize = 4 << 20;
 /// `--ingest-single-pass`, in config via `[exec] ingest_single_pass`,
 /// or process-wide with the `INGEST_SINGLE_PASS` env var.
 pub const INGEST_SINGLE_PASS: bool = true;
+
+/// Default for the `[exec] work_steal` knob: morsel workers that drain
+/// their own rank's queue steal tasks from sibling ranks' queues, so a
+/// skewed partition no longer idles every other rank's workers.
+/// Stealing changes *who* runs a morsel, never *where* its result
+/// lands (morsels write to pre-indexed output slots), so results stay
+/// bit-identical either way. Override per cluster with
+/// `DistConfig::with_work_steal`, on the CLI with `--work-steal`, in
+/// config via `[exec] work_steal`, or process-wide with the
+/// `WORK_STEAL` env var.
+pub const WORK_STEAL: bool = true;
 
 /// Immutable per-operation thread budget.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -140,19 +152,33 @@ pub fn default_ingest_chunk_bytes() -> usize {
     })
 }
 
+/// Parse a boolean env toggle: `0`/`false` disable, `1`/`true`
+/// enable, anything else (including unset) keeps `default` — the one
+/// spelling rule every boolean `[exec]` env var shares.
+fn env_bool(var: &str, default: bool) -> bool {
+    match std::env::var(var).ok().as_deref() {
+        Some("0") | Some("false") => false,
+        Some("1") | Some("true") => true,
+        _ => default,
+    }
+}
+
 /// The process-wide default for single-pass distributed ingest: the
 /// `INGEST_SINGLE_PASS` env var (`0`/`false` disable, `1`/`true`
 /// enable), else [`INGEST_SINGLE_PASS`]. Read once; explicit setters
 /// and `DistConfig` always override it.
 pub fn default_ingest_single_pass() -> bool {
     static DEFAULT: OnceLock<bool> = OnceLock::new();
-    *DEFAULT.get_or_init(|| {
-        match std::env::var("INGEST_SINGLE_PASS").ok().as_deref() {
-            Some("0") | Some("false") => false,
-            Some("1") | Some("true") => true,
-            _ => INGEST_SINGLE_PASS,
-        }
-    })
+    *DEFAULT
+        .get_or_init(|| env_bool("INGEST_SINGLE_PASS", INGEST_SINGLE_PASS))
+}
+
+/// The process-wide default for cross-rank work stealing: the
+/// `WORK_STEAL` env var (`0`/`false` disable, `1`/`true` enable), else
+/// [`WORK_STEAL`]. Read once; explicit settings always override it.
+pub fn default_work_steal() -> bool {
+    static DEFAULT: OnceLock<bool> = OnceLock::new();
+    *DEFAULT.get_or_init(|| env_bool("WORK_STEAL", WORK_STEAL))
 }
 
 thread_local! {
@@ -171,6 +197,12 @@ thread_local! {
 
     /// Per-thread single-pass-ingest toggle (see [`INGEST_SINGLE_PASS`]).
     static SINGLE_PASS: Cell<bool> = Cell::new(default_ingest_single_pass());
+
+    /// Per-thread work-stealing toggle (see [`WORK_STEAL`]). Purely a
+    /// mirror for observability: the authoritative wiring is whether
+    /// `dist::Cluster` linked the rank pools' steal handles at
+    /// installation.
+    static STEAL: Cell<bool> = Cell::new(default_work_steal());
 }
 
 /// The calling thread's current intra-op budget.
@@ -273,6 +305,34 @@ pub fn resolve_ingest_single_pass(configured: Option<bool>) -> bool {
     configured.unwrap_or_else(default_ingest_single_pass)
 }
 
+/// Whether cross-rank work stealing is on for the calling thread's
+/// cluster (rank threads mirror the resolved `[exec] work_steal` knob
+/// here; see [`WORK_STEAL`]).
+pub fn work_steal() -> bool {
+    STEAL.with(|c| c.get())
+}
+
+/// Set the calling thread's work-stealing mirror (done by
+/// `dist::Cluster::run` for rank threads; informational elsewhere).
+pub fn set_work_steal(on: bool) {
+    STEAL.with(|c| c.set(on));
+}
+
+/// Run `f` with the work-stealing mirror forced on or off, restoring
+/// the previous setting afterwards.
+pub fn with_work_steal<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    let prev = STEAL.with(|c| c.replace(on));
+    let out = f();
+    STEAL.with(|c| c.set(prev));
+    out
+}
+
+/// Resolve a configured work-steal toggle: `None` = the process
+/// default (env-overridable via `WORK_STEAL`), `Some` passes through.
+pub fn resolve_work_steal(configured: Option<bool>) -> bool {
+    configured.unwrap_or_else(default_work_steal)
+}
+
 /// The effective budget for an `nrows`-row kernel: the thread-local
 /// budget, degraded to serial below the thread's row threshold.
 pub fn parallelism_for(nrows: usize) -> ExecContext {
@@ -281,6 +341,15 @@ pub fn parallelism_for(nrows: usize) -> ExecContext {
     } else {
         current()
     }
+}
+
+/// Whether a morsel fan-out on the calling thread can use more than
+/// one worker: either the thread's own budget is parallel, or its
+/// installed pool is steal-linked to sibling rank pools (so even a
+/// serial-budget rank's queued morsels can run on idle sibling
+/// workers — execution decoupled from static rank ownership).
+pub(crate) fn morsel_parallel(exec: ExecContext) -> bool {
+    exec.is_parallel() || current_pool_stealable()
 }
 
 /// Resolve a configured knob value: `0` = auto (available cores divided
@@ -384,6 +453,25 @@ mod tests {
         );
         assert!(resolve_ingest_single_pass(Some(true)));
         assert!(!resolve_ingest_single_pass(Some(false)));
+    }
+
+    #[test]
+    fn work_steal_knob_scopes_and_restores() {
+        let prev = work_steal();
+        with_work_steal(!prev, || {
+            assert_eq!(work_steal(), !prev);
+        });
+        assert_eq!(work_steal(), prev);
+        // None = the process default; Some passes through.
+        assert_eq!(resolve_work_steal(None), default_work_steal());
+        assert!(resolve_work_steal(Some(true)));
+        assert!(!resolve_work_steal(Some(false)));
+        // A thread with no steal-linked pool never routes serial-budget
+        // work to the pool, whatever the mirror says.
+        with_work_steal(true, || {
+            assert!(!morsel_parallel(ExecContext::serial()));
+            assert!(morsel_parallel(ExecContext::new(2)));
+        });
     }
 
     #[test]

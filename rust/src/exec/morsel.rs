@@ -101,9 +101,11 @@ impl<T> Clone for SendPtr<T> {
 
 impl<T> Copy for SendPtr<T> {}
 
-/// Morsel-driven fan-out: up to `exec.threads()` pooled workers pull
-/// morsels off a shared cursor; results come back in morsel order
-/// (deterministic merge).
+/// Morsel-driven fan-out: up to `exec.threads()` of the rank's own
+/// pooled workers pull morsels off a shared cursor (plus any sibling
+/// ranks' workers stealing into a linked pool — see
+/// `crate::exec::pool`); results come back in morsel order
+/// (deterministic merge), so who runs a morsel never changes output.
 pub fn for_each_morsel<R, F>(nrows: usize, exec: ExecContext, f: F) -> Vec<R>
 where
     R: Send,
@@ -111,7 +113,7 @@ where
 {
     let morsels = split_morsels(nrows, exec.threads());
     let n = morsels.len();
-    if !exec.is_parallel() || n <= 1 {
+    if !super::morsel_parallel(exec) || n <= 1 {
         return morsels.into_iter().map(f).collect();
     }
     let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
@@ -153,9 +155,38 @@ fn local_concurrency_cap() -> usize {
 
 /// Run owned work items concurrently on the pool (up to
 /// [`local_concurrency_cap`] at once), preserving item order in the
-/// results. Callers keep the item count near the thread budget (merge
-/// levels, per-run sorts).
+/// results. Callers keep the item count near the thread budget
+/// (per-run sorts, per-range scans); wide batches meant to overfill
+/// the local budget for stealing siblings go through
+/// [`map_parallel_budgeted`] instead, or the cap would grow the
+/// persistent local pool to machine width.
 pub fn map_parallel<I, R, F>(items: Vec<I>, f: F) -> Vec<R>
+where
+    I: Send,
+    R: Send,
+    F: Fn(I) -> R + Sync,
+{
+    let cap = local_concurrency_cap();
+    map_parallel_with_cap(items, cap, f)
+}
+
+/// Like [`map_parallel`], but capped at the calling thread's intra-op
+/// budget instead of [`local_concurrency_cap`]: for batches that are
+/// deliberately wider than the budget (sort merge levels cut into
+/// merge-path chunks), where the surplus tasks exist so *stealing
+/// sibling* workers can help — never so the local pool outgrows the
+/// rank's budget (the no-oversubscription invariant).
+pub(crate) fn map_parallel_budgeted<I, R, F>(items: Vec<I>, f: F) -> Vec<R>
+where
+    I: Send,
+    R: Send,
+    F: Fn(I) -> R + Sync,
+{
+    let cap = super::current().threads();
+    map_parallel_with_cap(items, cap, f)
+}
+
+fn map_parallel_with_cap<I, R, F>(items: Vec<I>, cap: usize, f: F) -> Vec<R>
 where
     I: Send,
     R: Send,
@@ -171,7 +202,7 @@ where
     let in_ptr = SendPtr(input.as_mut_ptr());
     let slot_ptr = SendPtr(slots.as_mut_ptr());
     let f = &f;
-    pool::run_current(n, n.min(local_concurrency_cap()), &move |i| {
+    pool::run_current(n, n.min(cap), &move |i| {
         // SAFETY: each index is claimed by exactly one task (pool
         // cursor), so item i is taken once and slot i written once; the
         // pool's completion barrier sequences these against the caller.
@@ -226,7 +257,7 @@ where
     F: Fn(Morsel, &mut [T]) + Sync,
 {
     let n = out.len();
-    if !exec.is_parallel() || n == 0 {
+    if !super::morsel_parallel(exec) || n == 0 {
         for m in split_morsels(n, 1) {
             let range = m.range();
             f(m, &mut out[range]);
@@ -254,7 +285,9 @@ pub fn par_gather<T>(src: &[T], indices: &[usize], exec: ExecContext) -> Vec<T>
 where
     T: Copy + Default + Send + Sync,
 {
-    if !exec.is_parallel() || indices.len() < super::par_row_threshold() {
+    if !super::morsel_parallel(exec)
+        || indices.len() < super::par_row_threshold()
+    {
         return indices.iter().map(|&i| src[i]).collect();
     }
     let mut out = vec![T::default(); indices.len()];

@@ -15,9 +15,10 @@
 //! Contract with the scoped callers:
 //!
 //! * A job is `ntasks` indexed closures `task(0..ntasks)` pulled off a
-//!   shared atomic cursor by at most `concurrency` workers. The caller
-//!   blocks until every task finished, so `task` may borrow stack data
-//!   (the `'static` transmute below is justified by that barrier).
+//!   shared atomic cursor by at most `concurrency` of the pool's
+//!   **own** workers. The caller blocks until every task finished, so
+//!   `task` may borrow stack data (the `'static` transmute below is
+//!   justified by that barrier).
 //! * Workers run tasks under a **serial** intra-op budget
 //!   ([`crate::exec::set_intra_op_threads`]`(1)`), so nested kernels
 //!   never multiply — identical to the scoped pool's invariant.
@@ -26,11 +27,44 @@
 //!   **calling** thread once the job completes (`dist::Cluster` then
 //!   maps that rank panic to an error). The worker survives for the
 //!   next job.
+//!
+//! # Cross-rank work stealing
+//!
+//! Pools owned by one `dist::Cluster` can be **steal-linked**
+//! ([`link_steal_group`], wired at pool installation when the `[exec]
+//! work_steal` knob is on): each rank keeps its local queue — local
+//! workers claim from the front, preserving cache affinity and the
+//! per-job `concurrency` permits — but a worker that finds its own
+//! queue drained scans sibling queues **back-to-front** and claims
+//! from any job with unclaimed tasks, ignoring the victim's permits
+//! (idle capacity elsewhere is exactly what permits exist to leave
+//! room for) and taking **one task per steal**, re-checking its own
+//! queue in between, so home work is never stuck behind the remainder
+//! of a sibling's job. Because a job's tasks pull from one shared cursor and write
+//! to pre-indexed output slots, stealing changes *who* runs a morsel,
+//! never *where* its result lands or in what order results merge —
+//! parallel output stays bit-identical — and a stolen task's panic is
+//! recorded on the same job latch, so it still re-raises on the
+//! submitting rank's thread. When a pool is steal-linked, even a
+//! `concurrency == 1` multi-task job is queued (not inlined): the
+//! submitting rank contributes one worker, and sibling ranks' idle
+//! workers supply the rest — execution decoupled from static rank
+//! ownership (Perera et al. 2023). That lone worker is a deliberate
+//! trade-off: the rank thread parks on the latch while its worker
+//! runs (so the per-rank budget still holds), paying one wake/handoff
+//! per job — amortised over the ≥ 2 morsels a queued job always has —
+//! and when *this* rank is the unloaded one, that same parked worker
+//! is exactly the idle capacity that steals a skewed sibling's
+//! morsels (if the submitter ran its own tasks instead, a serial-rank
+//! cluster would have no workers free to steal at all). A steal
+//! signal to a pool that has never spawned a worker spawns its first
+//! one, so a fully idle rank — one that never even submitted a job —
+//! still contributes a thief the moment a sibling queues work.
 
 use std::cell::RefCell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
 use std::thread::JoinHandle;
 
 /// A borrowed task smuggled across threads as a raw pointer (raw so a
@@ -62,12 +96,26 @@ struct JobDone {
 
 impl Job {
     /// Pull task indices off the cursor until exhausted, recording
-    /// completions (and at most one panic payload) on the latch.
-    fn work(&self) {
-        loop {
+    /// completions (and at most one panic payload) on the latch —
+    /// how a pool's own workers drain their local jobs.
+    fn work(&self, stolen: Option<&AtomicU64>) {
+        while self.work_one(stolen) {}
+    }
+
+    /// Claim and run at most one task (`false` = the job was already
+    /// exhausted). The steal path runs jobs one task at a time so a
+    /// thief re-checks its *own* queue between stolen morsels — a
+    /// local job never waits behind the remainder of a sibling's job.
+    /// `stolen` is the stealing pool's task counter when this worker
+    /// joined the job from a sibling queue.
+    fn work_one(&self, stolen: Option<&AtomicU64>) -> bool {
+        {
             let i = self.cursor.fetch_add(1, Ordering::Relaxed);
             if i >= self.ntasks {
-                return;
+                return false;
+            }
+            if let Some(counter) = stolen {
+                counter.fetch_add(1, Ordering::Relaxed);
             }
             // Re-pin the serial worker state before every task: a
             // previous task may have panicked out of a `with_*` scope
@@ -90,6 +138,7 @@ impl Job {
                 self.done_cv.notify_all();
             }
         }
+        true
     }
 
     fn exhausted(&self) -> bool {
@@ -110,11 +159,32 @@ struct PoolState {
     /// counter: unchanged between two operators ⇔ threads were reused.
     spawned: usize,
     shutting_down: bool,
+    /// Bumped (under this pool's lock) whenever a sibling pool queues a
+    /// job. A worker records the value before scanning victims and
+    /// parks only if it is unchanged afterwards, so a submission that
+    /// races with the scan can never be slept through.
+    steal_signal: u64,
 }
 
 struct PoolInner {
     state: Mutex<PoolState>,
     work_cv: Condvar,
+    /// Sibling pools this pool's idle workers may steal from — set once
+    /// at cluster pool installation ([`link_steal_group`]). Weak, so
+    /// mutually linked pools still drop.
+    peers: OnceLock<Vec<Weak<PoolInner>>>,
+    /// Rotating index into `peers` so victim scans don't always rob the
+    /// same sibling first.
+    next_victim: AtomicUsize,
+    /// Tasks this pool's workers claimed from sibling queues.
+    stolen_tasks: AtomicU64,
+}
+
+impl PoolInner {
+    /// Linked steal peers (empty when the pool is isolated).
+    fn peers(&self) -> &[Weak<PoolInner>] {
+        self.peers.get().map(Vec::as_slice).unwrap_or(&[])
+    }
 }
 
 /// A persistent worker pool. Workers spawn lazily up to the largest
@@ -139,27 +209,43 @@ impl WorkerPool {
                     handles: Vec::new(),
                     spawned: 0,
                     shutting_down: false,
+                    steal_signal: 0,
                 }),
                 work_cv: Condvar::new(),
+                peers: OnceLock::new(),
+                next_victim: AtomicUsize::new(0),
+                stolen_tasks: AtomicU64::new(0),
             }),
         }
     }
 
-    /// Run `task(0) … task(ntasks-1)` on up to `concurrency` pooled
-    /// workers; returns when all tasks completed. Serial (inline) when
-    /// the job cannot use a second thread. Re-raises the first task
-    /// panic on the calling thread.
+    /// Whether this pool is steal-linked to sibling pools.
+    pub fn stealable(&self) -> bool {
+        !self.inner.peers().is_empty()
+    }
+
+    /// Tasks this pool's workers claimed from sibling pools' queues.
+    pub fn stolen_tasks(&self) -> u64 {
+        self.inner.stolen_tasks.load(Ordering::Relaxed)
+    }
+
+    /// Run `task(0) … task(ntasks-1)` on up to `concurrency` of this
+    /// pool's workers; returns when all tasks completed. Serial
+    /// (inline) when the job cannot use a second thread — except on a
+    /// steal-linked pool, where a multi-task job is queued even at
+    /// `concurrency == 1` so idle sibling workers can claim the
+    /// surplus. Re-raises the first task panic on the calling thread.
     pub fn run(&self, ntasks: usize, concurrency: usize, task: &(dyn Fn(usize) + Sync)) {
         if ntasks == 0 {
             return;
         }
-        if ntasks == 1 || concurrency <= 1 {
+        if ntasks == 1 || (concurrency <= 1 && !self.stealable()) {
             for i in 0..ntasks {
                 task(i);
             }
             return;
         }
-        let workers = concurrency.min(ntasks);
+        let workers = concurrency.min(ntasks).max(1);
         // The borrow's lifetime is erased on the way into the raw
         // pointer (nothing keeps the transmuted reference); see
         // `TaskRef` for why every dereference stays in-lifetime.
@@ -203,6 +289,43 @@ impl WorkerPool {
             });
         }
         self.inner.work_cv.notify_all();
+        // Wake idle sibling workers so they can steal — but only when
+        // the job has surplus tasks beyond its own (parked-between-
+        // operators, hence available) local workers: a job local
+        // workers swallow whole has nothing worth a cross-rank wake,
+        // and skipping the broadcast keeps balanced clusters free of
+        // per-operator peer-lock chatter. (A worker that is itself off
+        // stealing re-checks its local queue after every stolen task,
+        // so even then a small unsignalled job is picked up within one
+        // morsel.)
+        // The signal bump happens under the *sibling's* lock (see
+        // `steal_signal`), and only one state lock is ever held at a
+        // time, so two pools submitting into each other cannot
+        // deadlock.
+        if ntasks > workers {
+            for peer in self.inner.peers() {
+                let Some(peer) = peer.upgrade() else { continue };
+                {
+                    let mut pst =
+                        peer.state.lock().expect("pool state poisoned");
+                    pst.steal_signal = pst.steal_signal.wrapping_add(1);
+                    // A pool that never ran a job has no worker to wake
+                    // — a fully idle rank would contribute no thief in
+                    // exactly the skewed case stealing targets. Spawn
+                    // its first worker now: this is precisely the
+                    // moment there is work to steal, and a parked
+                    // worker costs nothing afterwards.
+                    if pst.spawned == 0 && !pst.shutting_down {
+                        pst.spawned = 1;
+                        let inner = Arc::clone(&peer);
+                        pst.handles.push(std::thread::spawn(move || {
+                            worker_loop(inner)
+                        }));
+                    }
+                }
+                peer.work_cv.notify_all();
+            }
+        }
 
         // Block until the last task completed, then unqueue and surface
         // any panic on this (the submitting) thread.
@@ -252,32 +375,108 @@ impl Drop for WorkerPool {
     }
 }
 
-/// Park on the work condvar; claim a permit on any queued job with
-/// unclaimed tasks; drain it; repeat. Exit once shutdown is signalled
-/// and no claimable work remains (in-flight jobs always drain first).
+/// Park on the work condvar; claim a permit on any queued local job
+/// with unclaimed tasks (front first — cache affinity); otherwise scan
+/// sibling queues and steal; drain what was claimed; repeat. Exit once
+/// shutdown is signalled and no claimable local work remains
+/// (in-flight jobs always drain first).
 fn worker_loop(inner: Arc<PoolInner>) {
     // Nested kernels on a worker stay serial — the oversubscription
     // invariant of the execution model (overrides any env default).
     super::set_intra_op_threads(1);
     loop {
-        let job = {
+        // One pass under the local lock: claim local work, or exit, or
+        // fall out to the (lock-free-of-self) steal scan with the
+        // current signal recorded so a racing submission is never
+        // slept through.
+        enum Next {
+            Local(Arc<Job>),
+            Scan(u64),
+            Exit,
+        }
+        let next = {
             let mut st = inner.state.lock().expect("pool state poisoned");
-            loop {
-                if let Some(qj) = st
-                    .queue
-                    .iter_mut()
-                    .find(|qj| qj.permits > 0 && !qj.job.exhausted())
-                {
-                    qj.permits -= 1;
-                    break Arc::clone(&qj.job);
-                }
-                if st.shutting_down {
-                    return;
-                }
-                st = inner.work_cv.wait(st).expect("pool state poisoned");
+            if let Some(qj) = st
+                .queue
+                .iter_mut()
+                .find(|qj| qj.permits > 0 && !qj.job.exhausted())
+            {
+                qj.permits -= 1;
+                Next::Local(Arc::clone(&qj.job))
+            } else if st.shutting_down {
+                Next::Exit
+            } else {
+                Next::Scan(st.steal_signal)
             }
         };
-        job.work();
+        match next {
+            Next::Exit => return,
+            Next::Local(job) => job.work(None),
+            Next::Scan(seen) => {
+                if let Some(job) = steal_victim_job(&inner) {
+                    // One task per steal: loop back afterwards, where
+                    // the local queue is checked first, so home work
+                    // never waits behind the rest of a sibling's job.
+                    job.work_one(Some(&inner.stolen_tasks));
+                    continue;
+                }
+                // Nothing local, nothing to steal: park — unless a
+                // local submission, a sibling signal, or shutdown
+                // arrived while the scan ran without the local lock.
+                let st = inner.state.lock().expect("pool state poisoned");
+                let local_work = st
+                    .queue
+                    .iter()
+                    .any(|qj| qj.permits > 0 && !qj.job.exhausted());
+                if !local_work
+                    && !st.shutting_down
+                    && st.steal_signal == seen
+                {
+                    // Re-checked from the top of the loop on wake.
+                    drop(inner.work_cv.wait(st).expect("pool state poisoned"));
+                }
+            }
+        }
+    }
+}
+
+/// Scan sibling pools (rotating start, each queue back-to-front) for a
+/// job with unclaimed tasks. Only one pool's state lock is held at a
+/// time. Returns the first stealable job, if any.
+fn steal_victim_job(inner: &PoolInner) -> Option<Arc<Job>> {
+    let peers = inner.peers();
+    if peers.is_empty() {
+        return None;
+    }
+    let start = inner.next_victim.fetch_add(1, Ordering::Relaxed);
+    for k in 0..peers.len() {
+        let Some(peer) = peers[(start + k) % peers.len()].upgrade() else {
+            continue;
+        };
+        let st = peer.state.lock().expect("pool state poisoned");
+        // Back-to-front: the most recently queued job is the one the
+        // victim's own workers reach last.
+        if let Some(qj) = st.queue.iter().rev().find(|qj| !qj.job.exhausted())
+        {
+            return Some(Arc::clone(&qj.job));
+        }
+    }
+    None
+}
+
+/// Steal-link every pool in `pools` to all the others (each gets Weak
+/// handles to its siblings). Called once per cluster, at pool
+/// installation, when the `[exec] work_steal` knob is on; a second
+/// call on the same pool is a no-op (the handle set is write-once).
+pub(crate) fn link_steal_group(pools: &[Arc<WorkerPool>]) {
+    for (i, pool) in pools.iter().enumerate() {
+        let peers: Vec<Weak<PoolInner>> = pools
+            .iter()
+            .enumerate()
+            .filter(|&(j, _)| j != i)
+            .map(|(_, p)| Arc::downgrade(&p.inner))
+            .collect();
+        let _ = pool.inner.peers.set(peers);
     }
 }
 
@@ -297,7 +496,10 @@ pub fn install_thread_pool(pool: Arc<WorkerPool>) {
 }
 
 /// Submit a job to the calling thread's executor, creating a private
-/// persistent pool on first use.
+/// persistent pool on first use. A serial-concurrency multi-task job
+/// still goes through a steal-linked pool (sibling workers may claim
+/// the surplus); on an isolated executor it runs inline, exactly the
+/// original single-threaded behaviour.
 pub(crate) fn run_current(
     ntasks: usize,
     concurrency: usize,
@@ -306,7 +508,7 @@ pub(crate) fn run_current(
     if ntasks == 0 {
         return;
     }
-    if ntasks == 1 || concurrency <= 1 {
+    if ntasks == 1 || (concurrency <= 1 && !current_pool_stealable()) {
         for i in 0..ntasks {
             task(i);
         }
@@ -317,6 +519,15 @@ pub(crate) fn run_current(
         Arc::clone(slot.get_or_insert_with(|| Arc::new(WorkerPool::new())))
     });
     pool.run(ntasks, concurrency, task);
+}
+
+/// Whether the calling thread's installed executor is steal-linked to
+/// sibling rank pools (false for lazily created private pools and for
+/// threads with no pool yet).
+pub(crate) fn current_pool_stealable() -> bool {
+    THREAD_POOL.with(|p| {
+        p.borrow().as_ref().map(|pool| pool.stealable()).unwrap_or(false)
+    })
 }
 
 /// Thread-generation counter of the calling thread's executor (see
@@ -404,6 +615,98 @@ mod tests {
             });
         });
         assert!(budgets.iter().all(|b| b.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn steal_linked_pools_run_sibling_tasks() {
+        use std::sync::atomic::AtomicBool;
+        let a = Arc::new(WorkerPool::new());
+        let b = Arc::new(WorkerPool::new());
+        link_steal_group(&[Arc::clone(&a), Arc::clone(&b)]);
+        assert!(a.stealable() && b.stealable());
+
+        // Job 1 on A: 4 blocking tasks, local concurrency 2. The steal
+        // signal spawns B's first worker (B never ran a job), so
+        // exactly 3 workers exist to claim the 4 tasks — the gate
+        // below proves A's 2 workers *and* B's thief are all pinned
+        // inside job 1, i.e. at least one task was stolen.
+        let started = AtomicUsize::new(0);
+        let release = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let a1 = Arc::clone(&a);
+            let (started, release) = (&started, &release);
+            let t1 = s.spawn(move || {
+                a1.run(4, 2, &|_| {
+                    started.fetch_add(1, Ordering::SeqCst);
+                    while !release.load(Ordering::SeqCst) {
+                        std::thread::yield_now();
+                    }
+                });
+            });
+            while started.load(Ordering::SeqCst) < 3 {
+                std::thread::yield_now();
+            }
+            assert_eq!(a.spawned_threads(), 2);
+            assert_eq!(
+                b.spawned_threads(),
+                1,
+                "the steal signal spawns an idle pool's first worker"
+            );
+            assert!(
+                b.stolen_tasks() >= 1,
+                "B's thief must have claimed part of job 1"
+            );
+            release.store(true, Ordering::SeqCst);
+            t1.join().unwrap();
+        });
+
+        // A panicking task re-raises on the *submitting* thread
+        // whichever pool's worker ran it.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            a.run(3, 2, &|i| {
+                if i == 1 {
+                    panic!("task exploded");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must surface on submitter");
+
+        // Both pools stay serviceable afterwards, and results/latches
+        // behave identically however tasks were distributed.
+        let count = AtomicUsize::new(0);
+        a.run(8, 2, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 8);
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn steal_linked_pool_queues_serial_concurrency_jobs() {
+        // On an isolated pool a concurrency-1 job runs inline; on a
+        // steal-linked pool it is queued so sibling workers can join.
+        // Wherever each task lands, results and counts are identical,
+        // and the pool's own side spawns exactly one local worker.
+        let a = Arc::new(WorkerPool::new());
+        let b = Arc::new(WorkerPool::new());
+        link_steal_group(&[Arc::clone(&a), Arc::clone(&b)]);
+        let count = AtomicUsize::new(0);
+        a.run(4, 1, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 4);
+        assert_eq!(
+            a.spawned_threads(),
+            1,
+            "a queued concurrency-1 job runs on one local worker"
+        );
+        assert!(
+            b.spawned_threads() <= 1,
+            "the steal signal spawns at most one thief"
+        );
+        a.shutdown();
+        b.shutdown();
     }
 
     #[test]

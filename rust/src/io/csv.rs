@@ -661,11 +661,14 @@ pub fn count_csv_records<R: Read>(mut reader: R, opts: &CsvOptions) -> Result<us
 }
 
 /// Read only data records with global index in `records` (0-based,
-/// header excluded), streaming the rest past without parsing — the
-/// per-rank partitioned ingest: rank memory is O(chunk + its own
-/// block), never O(file). Schema inference still samples the first
-/// `infer_rows` records of the *file*, so every rank resolves the same
-/// schema as a whole-file read.
+/// header excluded), streaming the records before the block past
+/// without parsing and **stopping at the end of the block** (the scan
+/// never runs to EOF once every selected record is out) — the per-rank
+/// partitioned ingest: rank memory is O(chunk + its own block) and
+/// rank I/O ends at its own block, never the whole file. Schema
+/// inference still samples the first `infer_rows` records of the
+/// *file* (reading continues that far even past a shorter block), so
+/// every rank resolves the same schema as a whole-file read.
 pub fn read_csv_records<R: Read>(
     reader: R,
     opts: &CsvOptions,
@@ -870,7 +873,12 @@ impl<R: Read> CsvChunkScanner<R> {
 /// The streaming core: scan → (header, inference) → chunk-parallel
 /// parse → sink, with chunks held only until the schema is resolved.
 /// `take` restricts parsing to data records with global index in the
-/// range (scan and inference still cover the whole stream).
+/// range — and also bounds the *scan*: once every selected record is
+/// out and the schema is resolved, reading stops. Bytes past that
+/// point are never scanned or validated (a malformed record or bad
+/// UTF-8 after the range does not surface), so with `take` the stream
+/// is covered only through the later of the range's end and the
+/// inference sample.
 fn stream_csv<R: Read>(
     reader: R,
     opts: &CsvOptions,
@@ -932,6 +940,18 @@ fn stream_csv<R: Read>(
             parse_segment(&seg, sch, opts, header_rows, take.as_ref())?
         {
             sink(t)?;
+        }
+        if let Some(r) = take.as_ref() {
+            // Every selected record is out (and the schema resolved —
+            // this point is only reached with `schema` set): stop
+            // reading instead of streaming the scan to EOF. A
+            // range-reading rank's bytes end at its own block, not at
+            // the end of the file.
+            let data_seen =
+                seg.first_record + seg.ranges.len() - header_rows;
+            if data_seen >= r.end {
+                return Ok(schema.expect("schema resolved"));
+            }
         }
     }
     // EOF with fewer than `infer_rows` records: infer from what we saw.

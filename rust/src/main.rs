@@ -62,6 +62,11 @@ GLOBAL FLAGS
                         distributed CSV ingest scheme (default true:
                         byte-range speculation, each byte read once
                         per cluster; false = two-pass count+parse)
+  --work-steal true|false
+                        cross-rank work stealing (default true: idle
+                        rank workers run a skewed rank's queued
+                        morsels; false = isolated per-rank pools;
+                        results identical either way)
 
 See docs/CONFIG.md for the config-file/env equivalents of every knob.
 ";
@@ -160,6 +165,7 @@ fn make_cluster(
         ingest_single_pass: args
             .bool_flag("ingest-single-pass")?
             .or(cfg.ingest_single_pass),
+        work_steal: args.bool_flag("work-steal")?.or(cfg.work_steal),
     })
 }
 
@@ -627,6 +633,11 @@ fn run() -> Result<()> {
                 .or(cfg.ingest_single_pass),
         ),
     );
+    // Informational for single-process commands (a lone local pool has
+    // nobody to steal from); cluster commands resolve per rank.
+    rylon::exec::set_work_steal(rylon::exec::resolve_work_steal(
+        args.bool_flag("work-steal")?.or(cfg.work_steal),
+    ));
     match args.cmd.as_str() {
         "gen" => cmd_gen(&args),
         "inspect" => cmd_inspect(&args),

@@ -1,9 +1,11 @@
 //! OrderBy — sort a table by one or more key columns (DataTable API
 //! surface; also the local phase of `dist::dist_sort`'s sample sort).
 
+use crate::compute::filter::take_parallel;
 use crate::compute::sort::{argsort_by_columns, argsort_i64};
 use crate::column::Column;
 use crate::error::Result;
+use crate::exec;
 use crate::table::Table;
 
 /// Sort direction.
@@ -61,7 +63,13 @@ pub fn orderby(table: &Table, keys: &[SortKey]) -> Result<Table> {
     } else {
         argsort_by_columns(&cols, &desc, table.num_rows())
     };
-    Ok(table.take(&perm))
+    // Morsel-parallel (and steal-eligible) materialisation — equals
+    // `table.take(&perm)` bit for bit.
+    Ok(take_parallel(
+        table,
+        &perm,
+        exec::parallelism_for(perm.len()),
+    ))
 }
 
 #[cfg(test)]

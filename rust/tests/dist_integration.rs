@@ -203,11 +203,39 @@ fn single_pass_ingest_reads_each_byte_once_and_matches_two_pass() {
                 )
             })
             .unwrap();
-        assert_eq!(
-            tp_stats.bytes_read(),
-            2 * world as u64 * file_len,
-            "world {world}: two-pass reads the whole file twice per rank"
-        );
+        // Two-pass I/O: the count pass streams the whole file on every
+        // rank (world × file), but the parse pass stops at the end of
+        // each rank's block instead of streaming to EOF — rank r reads
+        // about (r+1)/world of the file, i.e. ~file × (world+1)/2
+        // cluster-wide, plus chunk-granularity rounding (512-byte
+        // chunks here). A lone rank's block is the whole file, so
+        // world 1 still reads exactly 2 × file.
+        let tp_bytes = tp_stats.bytes_read();
+        let count_pass = world as u64 * file_len;
+        if world == 1 {
+            assert_eq!(tp_bytes, 2 * file_len, "world 1 parses everything");
+        } else {
+            let parse_bound: u64 = (1..=world as u64)
+                .map(|r| r * file_len / world as u64)
+                .sum::<u64>()
+                + world as u64 * 4 * 512;
+            assert!(
+                tp_bytes <= count_pass + parse_bound,
+                "world {world}: parse pass must stop at block ends \
+                 ({tp_bytes} read, bound {})",
+                count_pass + parse_bound
+            );
+            assert!(
+                tp_bytes < 2 * world as u64 * file_len,
+                "world {world}: two-pass no longer reads the file twice \
+                 per rank"
+            );
+            assert!(
+                tp_bytes > count_pass + file_len / 2,
+                "world {world}: the tail ranks still stream most of the \
+                 file ({tp_bytes} read)"
+            );
+        }
         assert_eq!(
             sp, tp,
             "world {world}: single-pass diverged from two-pass"
@@ -215,6 +243,91 @@ fn single_pass_ingest_reads_each_byte_once_and_matches_two_pass() {
         let merged = Table::concat_all(whole.schema(), &sp).unwrap();
         assert_eq!(merged, whole, "world {world}: reassembly diverged");
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn single_pass_rebalance_elided_for_uniform_rows() {
+    use rylon::dist::{read_csv_partition_with, IngestMode, IngestStats};
+    use rylon::types::Schema;
+    // Fixed-width records with no header: every rank's byte range
+    // starts exactly at a record boundary and holds exactly its block
+    // of records, so byte ownership *is* the rank-major partition and
+    // the post-parse rebalance must move zero rows (and be elided).
+    let dir = std::env::temp_dir().join("rylon_it_rebalance_elide");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("uniform.csv");
+    let n = 120usize;
+    let mut data = String::new();
+    for i in 0..n {
+        data.push_str(&format!("{:04},abcd\n", i)); // 10 bytes per record
+    }
+    std::fs::write(&path, &data).unwrap();
+    let opts = CsvOptions::default()
+        .no_header()
+        .with_schema(Schema::parse("a:i64,b:str").unwrap());
+    let whole =
+        rylon::io::csv::read_csv_from(data.as_bytes(), &opts).unwrap();
+    let file_len = std::fs::metadata(&path).unwrap().len();
+
+    for world in [2usize, 3, 4] {
+        let cluster = Cluster::new(DistConfig::threads(world)).unwrap();
+        let stats = IngestStats::new();
+        let outs = cluster
+            .run(|ctx| {
+                read_csv_partition_with(
+                    ctx,
+                    &path,
+                    &opts,
+                    IngestMode::SinglePass,
+                    Some(&stats),
+                )
+            })
+            .unwrap();
+        assert_eq!(
+            stats.rows_moved(),
+            0,
+            "world {world}: uniform-row file must move zero rows"
+        );
+        assert_eq!(stats.bytes_read(), file_len);
+        let sizes: Vec<usize> = outs.iter().map(|t| t.num_rows()).collect();
+        assert!(
+            sizes.iter().all(|&s| s == n / world),
+            "world {world}: block layout, got {sizes:?}"
+        );
+        let merged = Table::concat_all(whole.schema(), &outs).unwrap();
+        assert_eq!(merged, whole, "world {world}: reassembly diverged");
+    }
+
+    // Control: skewed row lengths shift record ownership away from the
+    // block partition, so rows must move (and the result still match).
+    let path = dir.join("skewed.csv");
+    let mut data = String::from("a,b\n");
+    for i in 0..200 {
+        let s = if i < 30 { "x".repeat(120) } else { "y".to_string() };
+        data.push_str(&format!("{i},{s}\n"));
+    }
+    std::fs::write(&path, &data).unwrap();
+    let whole = read_csv(&path, &CsvOptions::default()).unwrap();
+    let cluster = Cluster::new(DistConfig::threads(3)).unwrap();
+    let stats = IngestStats::new();
+    let outs = cluster
+        .run(|ctx| {
+            read_csv_partition_with(
+                ctx,
+                &path,
+                &CsvOptions::default(),
+                IngestMode::SinglePass,
+                Some(&stats),
+            )
+        })
+        .unwrap();
+    assert!(
+        stats.rows_moved() > 0,
+        "skewed rows must trigger the rebalance"
+    );
+    let merged = Table::concat_all(whole.schema(), &outs).unwrap();
+    assert_eq!(merged, whole);
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -196,6 +196,95 @@ fn orderby_bit_identical() {
 }
 
 #[test]
+fn skewed_rank_partitions_steal_on_off_serial_identical() {
+    // The work-stealing acceptance gate: with one rank holding 0 rows
+    // and with one rank holding 90% of all rows, every local kernel
+    // must produce bit-identical per-rank results with stealing on,
+    // stealing off, and fully serial — at 1/2/4/8 morsel workers per
+    // rank. Stealing changes which worker runs a morsel, never where
+    // its result lands.
+    use rylon::dist::{Cluster, DistConfig};
+
+    let whole = random_table(21, 40_000, 500, 6);
+    let dim = random_table(22, 3_000, 400, 5);
+    let n = whole.num_rows();
+
+    // Per-rank row counts over 4 ranks (each tiles [0, n) exactly).
+    let third = n / 3;
+    let hot = n * 9 / 10;
+    let rest = n - hot;
+    let layouts: Vec<(&str, Vec<usize>)> = vec![
+        (
+            "zero_row_rank",
+            vec![third, 0, third, n - 2 * third],
+        ),
+        (
+            "hot_rank_90pct",
+            vec![rest / 3, rest / 3, rest - 2 * (rest / 3), hot],
+        ),
+    ];
+
+    let pred = Predicate::parse("v > -20 and k < 600").unwrap();
+    let jopts = JoinOptions::new(JoinType::Inner, &["k"], &["k"])
+        .with_algo(JoinAlgo::Hash);
+    let gopts = GroupByOptions::new(
+        &["k"],
+        vec![Agg::sum("v"), Agg::count("v"), Agg::mean("v")],
+    );
+    let skeys = vec![SortKey::asc("k"), SortKey::desc("s")];
+    let apply = |part: &Table| -> Vec<Table> {
+        vec![
+            select(part, &pred).unwrap(),
+            join(part, &dim, &jopts).unwrap(),
+            groupby(part, &gopts).unwrap(),
+            orderby(part, &skeys).unwrap(),
+        ]
+    };
+
+    for (lname, lens) in &layouts {
+        assert_eq!(lens.iter().sum::<usize>(), n, "layout must tile");
+        let mut off = 0usize;
+        let parts: Vec<Table> = lens
+            .iter()
+            .map(|&len| {
+                let p = whole.slice(off, len);
+                off += len;
+                p
+            })
+            .collect();
+        // Serial reference, computed off-cluster.
+        let reference: Vec<Vec<Table>> = parts
+            .iter()
+            .map(|p| exec::with_intra_op_threads(1, || apply(p)))
+            .collect();
+        for threads in [1usize, 2, 4, 8] {
+            for steal in [true, false] {
+                let cfg = DistConfig::threads(4)
+                    .with_intra_op_threads(threads)
+                    .with_par_row_threshold(64)
+                    .with_work_steal(steal);
+                let cluster = Cluster::new(cfg).unwrap();
+                assert_eq!(cluster.work_steal(), steal);
+                let outs = cluster
+                    .run(|ctx| Ok(apply(&parts[ctx.rank])))
+                    .unwrap();
+                assert_eq!(
+                    outs, reference,
+                    "{lname} diverged at {threads} threads, steal={steal}"
+                );
+                if !steal {
+                    assert_eq!(
+                        cluster.stolen_tasks(),
+                        0,
+                        "isolated pools must never steal"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn gather_nullable_string_bit_identical() {
     use rylon::compute::filter::{take_column_parallel, take_parallel};
     use rylon::exec::ExecContext;
