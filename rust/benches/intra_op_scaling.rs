@@ -9,15 +9,26 @@
 //! (`speedup_steal_vs_isolated` + per-op steal counts in the JSON),
 //! asserting bit-identical outputs between the two schedulers first.
 //!
+//! A third **fault-layer arm** times the same rendezvous storm
+//! through a raw `LocalFabric` and through `CheckedFabric` (the
+//! per-rank Ok/Err verdict every collective now carries, see
+//! `docs/FAULTS.md`), reporting per-exchange µs and the verdict
+//! overhead under a `fault_layer` key in the JSON.
+//!
 //! Env overrides: INTRA_ROWS (default 1_000_000), INTRA_SAMPLES,
 //! INTRA_MAX_THREADS, INTRA_SKEW_WORLD, INTRA_SKEW_THREADS,
-//! INTRA_SKEW_ROWS.
+//! INTRA_SKEW_ROWS, INTRA_FAULT_WORLD, INTRA_FAULT_EXCHANGES.
+
+use std::sync::Arc;
 
 use rylon::bench_harness::{measure, BenchOpts, Report};
 use rylon::column::Column;
 use rylon::compute::filter::take_parallel;
 use rylon::dist::{Cluster, DistConfig};
 use rylon::exec;
+use rylon::net::checked::CheckedFabric;
+use rylon::net::local::LocalFabric;
+use rylon::net::FabricRef;
 use rylon::io::datagen::{gen_table, DataGenSpec};
 use rylon::ops::groupby::{groupby, Agg, GroupByOptions};
 use rylon::ops::join::{join, JoinAlgo, JoinOptions};
@@ -283,6 +294,67 @@ fn main() {
         total_steals,
     ));
 
+    // ---- Fault-layer arm: what does the per-rank verdict cost? ----
+    //
+    // Every collective now carries a trailing Ok/Err verdict byte per
+    // rank so any failure aborts symmetrically instead of deadlocking
+    // (net::checked). Time an identical storm of small exchanges
+    // through the raw fabric and through the checked wrapper; the gap
+    // is the whole price of the fault domain on the happy path.
+    let fl_world = env_usize("INTRA_FAULT_WORLD", 4);
+    let fl_iters = env_usize("INTRA_FAULT_EXCHANGES", 2_000).max(1);
+    let fl_payload = 64usize;
+    println!(
+        "fault-layer arm: world {fl_world}, {fl_iters} exchanges of \
+         {fl_payload}B per peer"
+    );
+    let storm = |fabric: &FabricRef, iters: usize| {
+        std::thread::scope(|s| {
+            for rank in 0..fl_world {
+                let fabric = Arc::clone(fabric);
+                s.spawn(move || {
+                    for i in 0..iters {
+                        let out: Vec<Vec<u8>> = (0..fl_world)
+                            .map(|_| vec![(i % 251) as u8; fl_payload])
+                            .collect();
+                        let got = fabric
+                            .exchange(rank, out)
+                            .expect("fault-layer exchange");
+                        std::hint::black_box(got.len());
+                    }
+                });
+            }
+        });
+    };
+    let time_fabric = |fabric: &FabricRef| -> f64 {
+        storm(fabric, 64); // warm the rendezvous path untimed
+        measure(opts, || storm(fabric, fl_iters)).median
+    };
+    let raw: FabricRef = Arc::new(LocalFabric::new(fl_world));
+    let checked: FabricRef =
+        Arc::new(CheckedFabric::new(Arc::new(LocalFabric::new(fl_world))));
+    let raw_med = time_fabric(&raw);
+    let checked_med = time_fabric(&checked);
+    let per_raw_us = raw_med / fl_iters as f64 * 1e6;
+    let per_checked_us = checked_med / fl_iters as f64 * 1e6;
+    let overhead_pct = (checked_med / raw_med.max(1e-12) - 1.0) * 100.0;
+    report.add_with(
+        "fault_layer",
+        fl_world as f64,
+        checked_med,
+        vec![
+            ("seconds_raw".to_string(), raw_med),
+            ("us_per_exchange_raw".to_string(), per_raw_us),
+            ("us_per_exchange_checked".to_string(), per_checked_us),
+            ("verdict_overhead_pct".to_string(), overhead_pct),
+        ],
+    );
+    println!(
+        "  fault_layer: raw {per_raw_us:>7.2}us/exchange  checked \
+         {per_checked_us:>7.2}us/exchange  ({overhead_pct:+.1}% verdict \
+         overhead)"
+    );
+
     println!("{}", report.render());
     report.save("intra_op_scaling").expect("save report");
 
@@ -341,6 +413,19 @@ fn main() {
                             .collect(),
                     ),
                 ),
+            ]),
+        ),
+        (
+            "fault_layer",
+            Json::obj(vec![
+                ("world", Json::num(fl_world as f64)),
+                ("exchanges", Json::num(fl_iters as f64)),
+                ("payload_bytes", Json::num(fl_payload as f64)),
+                ("seconds_raw", Json::num(raw_med)),
+                ("seconds_checked", Json::num(checked_med)),
+                ("us_per_exchange_raw", Json::num(per_raw_us)),
+                ("us_per_exchange_checked", Json::num(per_checked_us)),
+                ("verdict_overhead_pct", Json::num(overhead_pct)),
             ]),
         ),
     ]);

@@ -182,6 +182,17 @@ pub struct RylonConfig {
     /// overridable via the `WORK_STEAL` env var); `false` keeps the
     /// isolated per-rank worker pools.
     pub work_steal: Option<bool>,
+    /// Deterministic fault-injection plan (`[exec] fault_plan`;
+    /// grammar in [`crate::net::faulty::FaultPlan`], e.g.
+    /// `"error@1:2, panic@0:0"`). `None` (key absent) = the process
+    /// default (empty unless the `FAULT_PLAN` env var is set); `""`
+    /// explicitly disables injection.
+    pub fault_plan: Option<String>,
+    /// Collective timeout in milliseconds
+    /// (`[exec] collective_timeout_ms`). `None` (key absent) = the
+    /// process default (0 unless the `COLLECTIVE_TIMEOUT_MS` env var
+    /// is set); `0` explicitly disables the timeout.
+    pub collective_timeout_ms: Option<u64>,
     pub cost: CostModel,
     /// Directory holding AOT artifacts + manifest.json.
     pub artifacts_dir: String,
@@ -198,6 +209,8 @@ impl Default for RylonConfig {
             ingest_chunk_bytes: 0,
             ingest_single_pass: None,
             work_steal: None,
+            fault_plan: None,
+            collective_timeout_ms: None,
             cost: CostModel::default(),
             artifacts_dir: "artifacts".to_string(),
         }
@@ -224,6 +237,14 @@ impl RylonConfig {
             // [exec] knob is numeric, and the env vars take 0/1 too.
             ingest_single_pass: opt_bool(f, "exec.ingest_single_pass"),
             work_steal: opt_bool(f, "exec.work_steal"),
+            fault_plan: f
+                .get("exec.fault_plan")
+                .and_then(|v| v.as_str())
+                .map(String::from),
+            collective_timeout_ms: f
+                .get("exec.collective_timeout_ms")
+                .and_then(|v| v.as_f64())
+                .map(|n| n as u64),
             cost: CostModel {
                 alpha: f.f64_or("cost.alpha", dc.alpha),
                 beta: f.f64_or("cost.beta", dc.beta),
@@ -259,6 +280,8 @@ par_row_threshold = 512
 ingest_chunk_bytes = 65536
 ingest_single_pass = false
 work_steal = false
+fault_plan = "error@1:2"
+collective_timeout_ms = 30000
 
 [cost]
 alpha = 1e-5
@@ -289,10 +312,14 @@ ranks_per_node = 8
         assert_eq!(c.ingest_chunk_bytes, 65536);
         assert_eq!(c.ingest_single_pass, Some(false));
         assert_eq!(c.work_steal, Some(false));
+        assert_eq!(c.fault_plan.as_deref(), Some("error@1:2"));
+        assert_eq!(c.collective_timeout_ms, Some(30000));
         // Keys absent = defer to the process defaults.
         let empty = RylonConfig::from_file(&ConfFile::parse("").unwrap());
         assert_eq!(empty.ingest_single_pass, None);
         assert_eq!(empty.work_steal, None);
+        assert_eq!(empty.fault_plan, None);
+        assert_eq!(empty.collective_timeout_ms, None);
         // Numeric 0/1 spellings work like the env vars'.
         let num = ConfFile::parse(
             "[exec]\ningest_single_pass = 1\nwork_steal = 1",

@@ -234,76 +234,6 @@ fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
     Ok(u32::from_le_bytes(s.try_into().expect("4-byte slice")))
 }
 
-/// Flatten an error for the status byte of a checked exchange.
-fn err_to_wire(e: &RylonError) -> (u8, String) {
-    match e {
-        RylonError::Schema(m) => (0, m.clone()),
-        RylonError::ColumnNotFound(m) => (1, m.clone()),
-        RylonError::Type(m) => (2, m.clone()),
-        RylonError::Parse(m) => (3, m.clone()),
-        RylonError::Invalid(m) => (4, m.clone()),
-        RylonError::Comm(m) => (5, m.clone()),
-        RylonError::Runtime(m) => (6, m.clone()),
-        RylonError::Io(e) => (7, e.to_string()),
-    }
-}
-
-fn err_from_wire(tag: u8, m: String) -> RylonError {
-    match tag {
-        0 => RylonError::Schema(m),
-        1 => RylonError::ColumnNotFound(m),
-        2 => RylonError::Type(m),
-        3 => RylonError::Parse(m),
-        4 => RylonError::Invalid(m),
-        6 => RylonError::Runtime(m),
-        7 => RylonError::Io(std::io::Error::other(m)),
-        _ => RylonError::Comm(m),
-    }
-}
-
-/// Allgather each rank's fallible payload. If any rank failed, **every**
-/// rank returns the lowest-failing-rank's error (so a rank-local
-/// failure — bad UTF-8, a ragged record — can never strand the other
-/// ranks in a later collective: each checked step either proceeds on
-/// all ranks or aborts on all ranks).
-fn allgather_checked(
-    ctx: &RankCtx,
-    local: std::result::Result<Vec<u8>, &RylonError>,
-) -> Result<Vec<Vec<u8>>> {
-    let mut buf = Vec::new();
-    match local {
-        Ok(payload) => {
-            buf.push(1u8);
-            buf.extend_from_slice(&payload);
-        }
-        Err(e) => {
-            let (tag, msg) = err_to_wire(e);
-            buf.push(0u8);
-            buf.push(tag);
-            buf.extend_from_slice(msg.as_bytes());
-        }
-    }
-    let all = ctx.allgather(buf)?;
-    let mut payloads = Vec::with_capacity(all.len());
-    for b in &all {
-        match b.first().copied() {
-            Some(1) => payloads.push(b[1..].to_vec()),
-            Some(0) => {
-                let tag = b.get(1).copied().unwrap_or(5);
-                let msg = String::from_utf8_lossy(b.get(2..).unwrap_or(&[]))
-                    .into_owned();
-                return Err(err_from_wire(tag, msg));
-            }
-            _ => {
-                return Err(RylonError::comm(
-                    "malformed ingest status byte",
-                ))
-            }
-        }
-    }
-    Ok(payloads)
-}
-
 /// Rank-local result of the one read pass: the range's raw bytes plus
 /// its three-way speculative scan.
 struct RangeScan {
@@ -643,9 +573,10 @@ fn decode_block_summary(
 
 /// The single-pass scheme (see the module docs for the protocol). All
 /// fabric steps run on every rank in lockstep; fallible rank-local
-/// stages are wrapped in [`allgather_checked`] so a local failure
-/// aborts the job symmetrically instead of stranding peers in a later
-/// collective.
+/// stages are wrapped in [`RankCtx::allgather_checked`] — the
+/// fabric-wide verdict layer this ingest protocol pioneered — so a
+/// local failure aborts the job symmetrically instead of stranding
+/// peers in a later collective.
 fn single_pass(
     ctx: &mut RankCtx,
     path: &Path,
@@ -661,8 +592,9 @@ fn single_pass(
 
     // 2. Summary exchange + prefix pass: every rank learns every
     //    range's true entry state and boundary picture.
+    ctx.set_op("ingest.summary");
     let payloads =
-        allgather_checked(ctx, scan.as_ref().map(encode_summary))?;
+        ctx.allgather_checked(scan.as_ref().map(encode_summary))?;
     let scan = scan.expect("checked exchange surfaced scan errors");
     let summaries = payloads
         .iter()
@@ -694,6 +626,7 @@ fn single_pass(
     if let Some(owner) = resolved.frag_owner[ctx.rank] {
         out[owner] = scan.buf[..resolved.owned_from[ctx.rank]].to_vec();
     }
+    ctx.set_op("ingest.fragments");
     let incoming = ctx.exchange(out)?;
 
     // 4. Assemble my owned records (fallible: UTF-8), then swap record
@@ -707,8 +640,8 @@ fn single_pass(
         } else {
             0
         };
-    let payloads = allgather_checked(
-        ctx,
+    ctx.set_op("ingest.samples");
+    let payloads = ctx.allgather_checked(
         assembled.as_ref().map(|a| encode_block_summary(a, needed)),
     )?;
     let assembled = assembled.expect("checked exchange surfaced errors");
@@ -773,7 +706,8 @@ fn single_pass(
     //    every rank parsed exactly its block), the rebalance exchange
     //    is elided: every rank derives the same verdict from the same
     //    `counts`, so all ranks skip the collective together.
-    allgather_checked(ctx, parsed.as_ref().map(|_| Vec::new()))?;
+    ctx.set_op("ingest.barrier");
+    ctx.allgather_checked(parsed.as_ref().map(|_| Vec::new()))?;
     let table = parsed.expect("checked exchange surfaced parse errors");
     // Per-rank *data* rows: the header record, owned by the first
     // non-empty rank, parses to no row.
@@ -826,6 +760,7 @@ mod tests {
 
     #[test]
     fn error_wire_roundtrip_preserves_message() {
+        // The shared fault codec the checked collectives ride on.
         for e in [
             RylonError::parse("bad record"),
             RylonError::invalid("nope"),
@@ -836,8 +771,8 @@ mod tests {
             )),
         ] {
             let msg = e.to_string();
-            let (tag, m) = err_to_wire(&e);
-            assert_eq!(err_from_wire(tag, m).to_string(), msg);
+            let (tag, m) = e.to_wire();
+            assert_eq!(RylonError::from_wire(tag, m).to_string(), msg);
         }
     }
 }

@@ -37,12 +37,16 @@ mod ingest;
 mod partition;
 mod ops;
 
+use std::cell::Cell;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::error::{Result, RylonError};
+use crate::net::checked::CheckedFabric;
+use crate::net::faulty::{FaultPlan, FaultyFabric};
 use crate::net::local::LocalFabric;
 use crate::net::sim::SimFabric;
-use crate::net::{CostModel, Fabric, FabricRef, OutBufs};
+use crate::net::{CostModel, Fabric, FabricRef, Fault, OutBufs};
 
 pub use self::ingest::{
     read_csv_partition, read_csv_partition_with, IngestMode, IngestStats,
@@ -107,6 +111,19 @@ pub struct DistConfig {
     /// off on the sim fabric, whose cost model meters compute with
     /// per-rank-thread CPU clocks that cross-rank workers would escape.
     pub work_steal: Option<bool>,
+    /// Deterministic fault-injection plan (`[exec] fault_plan`;
+    /// grammar in [`crate::net::faulty::FaultPlan`]). `None` = the
+    /// process default (empty unless the `FAULT_PLAN` env var is set);
+    /// a non-empty plan wraps the fabric in a
+    /// [`crate::net::faulty::FaultyFabric`] firing `error`/`panic`/
+    /// `delay` faults at exact `(rank, exchange)` coordinates.
+    pub fault_plan: Option<String>,
+    /// Collective timeout in milliseconds (`[exec]
+    /// collective_timeout_ms`). `None` = the process default
+    /// (0 unless the `COLLECTIVE_TIMEOUT_MS` env var is set); `0` = no
+    /// timeout. Non-zero bounds every fabric collective, turning a
+    /// hung rank into a symmetric rank-attributed comm error.
+    pub collective_timeout_ms: Option<u64>,
 }
 
 impl Default for DistConfig {
@@ -120,6 +137,8 @@ impl Default for DistConfig {
             ingest_chunk_bytes: 0,
             ingest_single_pass: None,
             work_steal: None,
+            fault_plan: None,
+            collective_timeout_ms: None,
         }
     }
 }
@@ -177,6 +196,21 @@ impl DistConfig {
         self.work_steal = Some(on);
         self
     }
+
+    /// Install a deterministic fault-injection plan (empty string =
+    /// explicitly no faults, overriding a `FAULT_PLAN` env default).
+    pub fn with_fault_plan(mut self, plan: impl Into<String>) -> DistConfig {
+        self.fault_plan = Some(plan.into());
+        self
+    }
+
+    /// Bound every fabric collective to `ms` milliseconds (`0` =
+    /// explicitly no timeout, overriding a `COLLECTIVE_TIMEOUT_MS` env
+    /// default).
+    pub fn with_collective_timeout_ms(mut self, ms: u64) -> DistConfig {
+        self.collective_timeout_ms = Some(ms);
+        self
+    }
 }
 
 /// Per-rank execution context handed to the SPMD closure.
@@ -190,12 +224,33 @@ pub struct RankCtx {
     /// Resolved morsel worker budget for this rank's local kernels.
     pub intra_op_threads: usize,
     fabric: FabricRef,
+    /// The checked collective layer (the same object `fabric` points
+    /// at) — kept concretely typed for the verdict-carrying calls.
+    checked: Arc<CheckedFabric>,
+    /// Label of the collective operation this rank is currently
+    /// running, for fault attribution (`docs/FAULTS.md`).
+    op: Cell<&'static str>,
 }
 
 impl RankCtx {
     /// The communication substrate (collectives take `&dyn Fabric`).
+    /// All collectives through it carry per-rank Ok/Err verdicts — it
+    /// is the cluster's [`crate::net::checked::CheckedFabric`].
     pub fn fabric(&self) -> &dyn Fabric {
         self.fabric.as_ref()
+    }
+
+    /// Label the collective operation this rank is about to run
+    /// (`"shuffle"`, `"dist_join"`, `"ingest.summary"`, …). Every
+    /// `dist_*` entry point sets it; a fault surfacing afterwards is
+    /// attributed to this label in [`crate::error::AbortInfo::op`].
+    pub fn set_op(&self, op: &'static str) {
+        self.op.set(op);
+    }
+
+    /// The current fault-attribution label (see [`RankCtx::set_op`]).
+    pub fn current_op(&self) -> &'static str {
+        self.op.get()
     }
 
     /// Summary exchange: allgather one small per-rank blob, returned
@@ -213,6 +268,34 @@ impl RankCtx {
     pub fn exchange(&self, out: OutBufs) -> Result<OutBufs> {
         self.fabric().exchange(self.rank, out)
     }
+
+    /// Allgather each rank's fallible payload. If any rank failed,
+    /// **every** rank returns the lowest-failing-rank's error (so a
+    /// rank-local failure aborts the whole job symmetrically instead
+    /// of stranding peers in a collective). Every rank must call it —
+    /// including failed ranks, which is the point.
+    pub fn allgather_checked(
+        &self,
+        local: std::result::Result<Vec<u8>, &RylonError>,
+    ) -> Result<Vec<Vec<u8>>> {
+        let size = self.size;
+        self.checked.exchange_verdict(
+            self.rank,
+            self.op.get(),
+            local.map(|payload| vec![payload; size]),
+        )
+    }
+
+    /// AllToAllv where each rank contributes either its buffers or its
+    /// rank-local error; any rank's error aborts every rank with the
+    /// same attribution (see [`RankCtx::allgather_checked`]).
+    pub fn exchange_checked(
+        &self,
+        local: std::result::Result<OutBufs, &RylonError>,
+    ) -> Result<OutBufs> {
+        self.checked
+            .exchange_verdict(self.rank, self.op.get(), local)
+    }
 }
 
 /// A cluster: spawns one thread per rank per [`Cluster::run`], runs the
@@ -229,7 +312,15 @@ pub struct Cluster {
     ingest_chunk_bytes: usize,
     ingest_single_pass: bool,
     work_steal: bool,
+    collective_timeout_ms: u64,
+    /// The outermost fabric every collective goes through: the checked
+    /// verdict layer over (optionally) the fault injector over the
+    /// base rendezvous fabric.
     fabric: FabricRef,
+    /// Concretely-typed handle to the same checked layer.
+    checked: Arc<CheckedFabric>,
+    /// The fault injector, when a fault plan is installed.
+    faulty: Option<Arc<FaultyFabric>>,
     sim: Option<Arc<SimFabric>>,
     /// One long-lived morsel-worker pool per rank (lazy threads);
     /// steal-linked to each other when `work_steal` resolved on.
@@ -242,16 +333,44 @@ impl Cluster {
         if cfg.world == 0 {
             return Err(RylonError::invalid("cluster world must be ≥ 1"));
         }
-        let (fabric, sim): (FabricRef, Option<Arc<SimFabric>>) =
+        let collective_timeout_ms =
+            crate::exec::resolve_collective_timeout_ms(
+                cfg.collective_timeout_ms,
+            );
+        let timeout = (collective_timeout_ms > 0)
+            .then(|| Duration::from_millis(collective_timeout_ms));
+        let plan = FaultPlan::parse(&crate::exec::resolve_fault_plan(
+            cfg.fault_plan.as_deref(),
+        ))?;
+        let (base, sim): (FabricRef, Option<Arc<SimFabric>>) =
             match cfg.fabric {
-                FabricKind::Threads => {
-                    (Arc::new(LocalFabric::new(cfg.world)), None)
-                }
+                FabricKind::Threads => (
+                    Arc::new(
+                        LocalFabric::new(cfg.world).with_timeout(timeout),
+                    ),
+                    None,
+                ),
                 FabricKind::Sim(cost) => {
-                    let sim = Arc::new(SimFabric::new(cfg.world, cost));
+                    let sim = Arc::new(
+                        SimFabric::new(cfg.world, cost)
+                            .with_timeout(timeout),
+                    );
                     (sim.clone(), Some(sim))
                 }
             };
+        // Fabric layering: checked verdicts outermost (every collective
+        // carries per-rank Ok/Err), then the fault injector (so
+        // injected faults hit *under* the verdict layer, like real
+        // ones), then the rendezvous fabric.
+        let (faulty, inner): (Option<Arc<FaultyFabric>>, FabricRef) =
+            if plan.is_empty() {
+                (None, base)
+            } else {
+                let f = Arc::new(FaultyFabric::new(base, plan));
+                (Some(Arc::clone(&f)), f)
+            };
+        let checked = Arc::new(CheckedFabric::new(inner));
+        let fabric: FabricRef = Arc::clone(&checked) as FabricRef;
         // The sim fabric meters compute with per-thread CPU clocks, so
         // work done on unmetered morsel workers would corrupt the
         // modeled makespan: auto (0) resolves to serial ranks there.
@@ -292,7 +411,10 @@ impl Cluster {
                 cfg.ingest_single_pass,
             ),
             work_steal,
+            collective_timeout_ms,
             fabric,
+            checked,
+            faulty,
             sim,
             pools,
         })
@@ -326,17 +448,29 @@ impl Cluster {
 
     /// Run the SPMD closure on every rank; returns per-rank results in
     /// rank order, or the first rank error.
+    ///
+    /// Rank failures are symmetric: any rank's error or panic is
+    /// recorded on the fabric as a [`Fault`], waking every peer parked
+    /// in a collective, and **every** rank's closure then returns the
+    /// same rank/op/step-attributed [`RylonError::Aborted`]. The fault
+    /// also poisons the cluster — subsequent `run` calls fail fast
+    /// with it until [`Cluster::clear_fault`] — so no rank can
+    /// rendezvous with a dead peer.
     pub fn run<T, F>(&self, f: F) -> Result<Vec<T>>
     where
         T: Send,
         F: Fn(&mut RankCtx) -> Result<T> + Send + Sync,
     {
+        if let Some(fault) = self.fabric.fault() {
+            return Err(fault.to_error());
+        }
         let world = self.world;
         let results: Vec<Result<T>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..world)
                 .map(|rank| {
                     let f = &f;
                     let fabric = Arc::clone(&self.fabric);
+                    let checked = Arc::clone(&self.checked);
                     let chunk = self.shuffle_chunk_rows;
                     let intra = self.intra_op_threads;
                     let threshold = self.par_row_threshold;
@@ -360,19 +494,40 @@ impl Cluster {
                             shuffle_chunk_rows: chunk,
                             intra_op_threads: intra,
                             fabric,
+                            checked: Arc::clone(&checked),
+                            op: Cell::new("job"),
                         };
-                        // A panicking closure behaves like one returning
-                        // an error (the documented abort contract: rank
-                        // failures before any collective end the job
-                        // cleanly; asymmetric mid-collective failures
-                        // are out of contract on every fabric).
-                        std::panic::catch_unwind(
+                        // A panicking closure behaves like one
+                        // returning an error; either way the failure
+                        // joins the fault domain below. Panics from
+                        // pooled morsel tasks re-raise here too (the
+                        // pool routes them to the submitting rank), so
+                        // they take the same path.
+                        let result = std::panic::catch_unwind(
                             std::panic::AssertUnwindSafe(|| f(&mut ctx)),
                         )
-                        .unwrap_or_else(|_| {
+                        .unwrap_or_else(|payload| {
                             Err(RylonError::comm(format!(
-                                "rank {rank} panicked"
+                                "rank {rank} panicked: {}",
+                                crate::exec::panic_message(
+                                    payload.as_ref()
+                                )
                             )))
+                        });
+                        // Deliver any failure to every peer: record it
+                        // on the fabric (waking parked ranks) and
+                        // return it with rank/op/step attribution. A
+                        // fault received *from* a peer keeps its
+                        // original attribution.
+                        result.map_err(|e| {
+                            let fault = Fault::from_error(
+                                rank,
+                                ctx.op.get(),
+                                checked.step(rank),
+                                &e,
+                            );
+                            checked.abort(fault.clone());
+                            fault.to_error()
                         })
                     })
                 })
@@ -381,7 +536,10 @@ impl Cluster {
                 .into_iter()
                 .map(|h| {
                     h.join().unwrap_or_else(|_| {
-                        Err(RylonError::comm("rank thread panicked"))
+                        Err(RylonError::comm(
+                            "rank thread panicked outside the fault \
+                             domain",
+                        ))
                     })
                 })
                 .collect()
@@ -397,6 +555,47 @@ impl Cluster {
     /// Total bytes posted to the fabric across all exchanges.
     pub fn bytes_sent(&self) -> u64 {
         self.fabric.bytes_sent()
+    }
+
+    /// The fault poisoning the cluster, if a collective has aborted.
+    /// While set, [`Cluster::run`] fails fast with it.
+    pub fn fault(&self) -> Option<Fault> {
+        self.fabric.fault()
+    }
+
+    /// Clear a poisoning fault and reset the fabric's rendezvous state
+    /// so the cluster can run jobs again. Abort counters are *not*
+    /// reset — they are cumulative across clears.
+    pub fn clear_fault(&self) {
+        self.fabric.clear_fault()
+    }
+
+    /// Number of collectives aborted so far (out-of-band faults
+    /// recorded on the fabric: rank aborts, collective timeouts,
+    /// rendezvous corruption). Cumulative across [`Cluster::clear_fault`].
+    pub fn aborted_collectives(&self) -> u64 {
+        self.fabric.aborts()
+    }
+
+    /// Number of faults the configured `[exec] fault_plan` has fired so
+    /// far (0 when no plan is active).
+    pub fn injected_faults(&self) -> u64 {
+        self.faulty.as_ref().map_or(0, |f| f.injected_faults())
+    }
+
+    /// The resolved `[exec] collective_timeout_ms` (0 = no timeout).
+    pub fn collective_timeout_ms(&self) -> u64 {
+        self.collective_timeout_ms
+    }
+
+    /// Snapshot of the fault-domain counters
+    /// ([`crate::metrics::FaultStats`]) — what the CLI and benches fold
+    /// into their JSON breakdowns.
+    pub fn fault_stats(&self) -> crate::metrics::FaultStats {
+        crate::metrics::FaultStats {
+            aborted_collectives: self.aborted_collectives(),
+            injected_faults: self.injected_faults(),
+        }
     }
 }
 
@@ -646,7 +845,19 @@ mod tests {
                 });
             Ok(sums.len())
         });
-        assert!(r.is_err());
+        let e = r.unwrap_err();
+        let info = e.abort_info().expect("panic joins the fault domain");
+        assert_eq!(info.rank, 1, "the panicking rank is attributed");
+        assert!(info.source.to_string().contains("poisoned morsel"));
+        // The failure poisons the cluster: runs fail fast with the
+        // same fault until it is cleared.
+        let fault = cluster.fault().expect("cluster poisoned");
+        assert_eq!(fault.rank, 1);
+        let again: Result<Vec<()>> = cluster.run(|_| Ok(()));
+        assert!(again.is_err(), "poisoned cluster must fail fast");
+        assert_eq!(cluster.aborted_collectives(), 1);
+        cluster.clear_fault();
+        assert!(cluster.fault().is_none());
         // The cluster (and its pools) remain serviceable afterwards.
         let ok = cluster
             .run(|_| {

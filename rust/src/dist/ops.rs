@@ -3,6 +3,11 @@
 //! each function performs the same sequence of collectives on every
 //! rank (validation failures happen identically everywhere, before any
 //! exchange, so jobs abort without deadlock).
+//!
+//! Each entry point labels the rank context ([`RankCtx::set_op`]) for
+//! fault attribution; nested primitives (`shuffle`, `rebalance`)
+//! re-label on entry, so an abort reports the innermost collective
+//! that was actually running.
 
 use std::cmp::Ordering;
 
@@ -29,6 +34,7 @@ pub fn dist_join(
     right: &Table,
     opts: &JoinOptions,
 ) -> Result<Table> {
+    ctx.set_op("dist_join");
     let ls = shuffle(ctx, left, &opts.left_on)?;
     let rs = shuffle(ctx, right, &opts.right_on)?;
     ops::join(&ls, &rs, opts)
@@ -41,6 +47,7 @@ pub fn dist_groupby(
     table: &Table,
     opts: &GroupByOptions,
 ) -> Result<Table> {
+    ctx.set_op("dist_groupby");
     let shuffled = shuffle(ctx, table, &opts.keys)?;
     ops::groupby(&shuffled, opts)
 }
@@ -65,6 +72,8 @@ pub fn dist_groupby_preagg(
     opts: &GroupByOptions,
 ) -> Result<Table> {
     use crate::compute::aggregate::AggKind;
+
+    ctx.set_op("dist_groupby_preagg");
 
     // 1. Decompose into partial aggregates with reserved names.
     let mut partial_aggs: Vec<Agg> = Vec::new();
@@ -172,6 +181,7 @@ pub fn dist_sort(
     if ctx.size == 1 || keys.is_empty() {
         return Ok(local);
     }
+    ctx.set_op("dist_sort");
     let key_names: Vec<&str> =
         keys.iter().map(|k| k.column.as_str()).collect();
     let desc: Vec<bool> = keys
@@ -259,6 +269,7 @@ pub fn dist_sort(
 /// Distributed union: whole-row-hash shuffle co-locates equal rows,
 /// then the local distinct-union runs per rank.
 pub fn dist_union(ctx: &mut RankCtx, a: &Table, b: &Table) -> Result<Table> {
+    ctx.set_op("dist_union");
     let sa = shuffle_all_columns(ctx, a)?;
     let sb = shuffle_all_columns(ctx, b)?;
     ops::union(&sa, &sb)
@@ -270,6 +281,7 @@ pub fn dist_intersect(
     a: &Table,
     b: &Table,
 ) -> Result<Table> {
+    ctx.set_op("dist_intersect");
     let sa = shuffle_all_columns(ctx, a)?;
     let sb = shuffle_all_columns(ctx, b)?;
     ops::intersect(&sa, &sb)
@@ -281,6 +293,7 @@ pub fn dist_difference(
     a: &Table,
     b: &Table,
 ) -> Result<Table> {
+    ctx.set_op("dist_difference");
     let sa = shuffle_all_columns(ctx, a)?;
     let sb = shuffle_all_columns(ctx, b)?;
     ops::difference(&sa, &sb)

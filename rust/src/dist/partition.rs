@@ -99,6 +99,7 @@ pub fn shuffle_with(
             ctx.size
         )));
     }
+    ctx.set_op("shuffle");
     let chunk = ctx.shuffle_chunk_rows.max(1);
     let my_rounds = table.num_rows().div_ceil(chunk) as u64;
     let rounds = allreduce_u64(
@@ -139,6 +140,7 @@ pub fn rebalance(ctx: &mut RankCtx, table: &Table) -> Result<Table> {
     if ctx.size == 1 {
         return Ok(table.clone());
     }
+    ctx.set_op("rebalance");
     let counts_bufs = allgather(
         ctx.fabric(),
         ctx.rank,

@@ -10,6 +10,25 @@ use std::fmt;
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, RylonError>;
 
+/// Rank/op/step attribution attached to a collective abort: which rank
+/// failed, which labelled operation it was running, and the rank's
+/// collective-step count when the fault surfaced. Every rank of an
+/// aborted job receives the *same* attribution (the fault-domain
+/// contract of `net::checked` — see `docs/FAULTS.md`).
+#[derive(Debug)]
+pub struct AbortInfo {
+    /// The rank whose failure aborted the collective.
+    pub rank: usize,
+    /// The labelled operation the failing rank was running (e.g.
+    /// `"shuffle"`, `"ingest.summary"`, `"dist_sort"`).
+    pub op: String,
+    /// The failing rank's completed-collective count when the fault
+    /// surfaced — the BSP superstep the abort was delivered at.
+    pub step: u64,
+    /// The failing rank's underlying error.
+    pub source: Box<RylonError>,
+}
+
 /// All error conditions surfaced by the rylon public API.
 #[derive(Debug)]
 pub enum RylonError {
@@ -29,6 +48,9 @@ pub enum RylonError {
     Runtime(String),
     /// Underlying I/O failure.
     Io(std::io::Error),
+    /// A collective aborted: one rank's failure, delivered symmetrically
+    /// to every rank with rank/op/step attribution.
+    Aborted(AbortInfo),
 }
 
 impl fmt::Display for RylonError {
@@ -42,6 +64,11 @@ impl fmt::Display for RylonError {
             RylonError::Comm(m) => write!(f, "communication error: {m}"),
             RylonError::Runtime(m) => write!(f, "runtime error: {m}"),
             RylonError::Io(e) => write!(f, "io error: {e}"),
+            RylonError::Aborted(i) => write!(
+                f,
+                "collective aborted: rank {} failed in {} at step {}: {}",
+                i.rank, i.op, i.step, i.source
+            ),
         }
     }
 }
@@ -50,6 +77,7 @@ impl std::error::Error for RylonError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             RylonError::Io(e) => Some(e),
+            RylonError::Aborted(i) => Some(i.source.as_ref()),
             _ => None,
         }
     }
@@ -80,6 +108,69 @@ impl RylonError {
     }
     pub fn runtime(msg: impl Into<String>) -> Self {
         RylonError::Runtime(msg.into())
+    }
+    pub fn aborted(
+        rank: usize,
+        op: impl Into<String>,
+        step: u64,
+        source: RylonError,
+    ) -> Self {
+        RylonError::Aborted(AbortInfo {
+            rank,
+            op: op.into(),
+            step,
+            source: Box::new(source),
+        })
+    }
+
+    /// The abort attribution, if this error is a collective abort.
+    pub fn abort_info(&self) -> Option<&AbortInfo> {
+        match self {
+            RylonError::Aborted(i) => Some(i),
+            _ => None,
+        }
+    }
+
+    /// Flatten to a `(tag, message)` pair for the fault-verdict wire
+    /// format (`docs/FAULTS.md`). Lossy for `Io`/`Aborted` (message
+    /// only); the fault frame carries rank/op/step separately.
+    pub fn to_wire(&self) -> (u8, String) {
+        match self {
+            RylonError::Schema(m) => (0, m.clone()),
+            RylonError::ColumnNotFound(m) => (1, m.clone()),
+            RylonError::Type(m) => (2, m.clone()),
+            RylonError::Parse(m) => (3, m.clone()),
+            RylonError::Invalid(m) => (4, m.clone()),
+            RylonError::Comm(m) => (5, m.clone()),
+            RylonError::Runtime(m) => (6, m.clone()),
+            RylonError::Io(e) => (7, e.to_string()),
+            RylonError::Aborted(i) => (8, i.to_string()),
+        }
+    }
+
+    /// Inverse of [`RylonError::to_wire`]; unknown tags decode as `Comm`.
+    pub fn from_wire(tag: u8, msg: String) -> RylonError {
+        match tag {
+            0 => RylonError::Schema(msg),
+            1 => RylonError::ColumnNotFound(msg),
+            2 => RylonError::Type(msg),
+            3 => RylonError::Parse(msg),
+            4 => RylonError::Invalid(msg),
+            5 => RylonError::Comm(msg),
+            6 => RylonError::Runtime(msg),
+            7 => RylonError::Io(std::io::Error::other(msg)),
+            _ => RylonError::Comm(msg),
+        }
+    }
+}
+
+impl fmt::Display for AbortInfo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "rank {} failed in {} at step {}: {}",
+            self.rank, self.op, self.step, self.source
+        )
     }
 }
 

@@ -51,7 +51,7 @@ pub(crate) use self::morsel::{map_parallel_budgeted, SendPtr};
 // of the public API (the knobs above are; the pool is an internal).
 pub(crate) use self::pool::{
     current_pool_spawned_threads, current_pool_stealable,
-    install_thread_pool, link_steal_group, WorkerPool,
+    install_thread_pool, link_steal_group, panic_message, WorkerPool,
 };
 
 /// Default parallelism row threshold: kernels fall back to the serial
@@ -91,6 +91,28 @@ pub const INGEST_SINGLE_PASS: bool = true;
 /// config via `[exec] work_steal`, or process-wide with the
 /// `WORK_STEAL` env var.
 pub const WORK_STEAL: bool = true;
+
+/// Default for the `[exec] fault_plan` knob: no injected faults. A
+/// non-empty plan (grammar in [`crate::net::faulty::FaultPlan`]; e.g.
+/// `error@1:2,delay250@0:5`) makes every `dist::Cluster` wrap its
+/// fabric in a [`crate::net::faulty::FaultyFabric`] firing those
+/// faults deterministically. Override per cluster with
+/// `DistConfig::with_fault_plan`, on the CLI with `--fault-plan`, in
+/// config via `[exec] fault_plan`, or process-wide with the
+/// `FAULT_PLAN` env var (the CI fault-injection leg).
+pub const FAULT_PLAN: &str = "";
+
+/// Default for the `[exec] collective_timeout_ms` knob: `0` = no
+/// timeout (a rank that never arrives at a collective parks its peers
+/// forever — the pre-fault-domain behaviour). A non-zero value bounds
+/// every fabric collective: if any rank fails to arrive in time, every
+/// waiting rank gets the same rank-attributed timeout error
+/// (`docs/FAULTS.md`). Override per cluster with
+/// `DistConfig::with_collective_timeout_ms`, on the CLI with
+/// `--collective-timeout`, in config via
+/// `[exec] collective_timeout_ms`, or process-wide with the
+/// `COLLECTIVE_TIMEOUT_MS` env var (the CI hang-detection leg).
+pub const COLLECTIVE_TIMEOUT_MS: u64 = 0;
 
 /// Immutable per-operation thread budget.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -179,6 +201,45 @@ pub fn default_ingest_single_pass() -> bool {
 pub fn default_work_steal() -> bool {
     static DEFAULT: OnceLock<bool> = OnceLock::new();
     *DEFAULT.get_or_init(|| env_bool("WORK_STEAL", WORK_STEAL))
+}
+
+/// The process-wide default fault-injection plan: the `FAULT_PLAN` env
+/// var, else [`FAULT_PLAN`] (empty — no faults). Read once; explicit
+/// settings always override it. The plan is parsed (and validated) by
+/// `dist::Cluster::new`, not here, so a malformed env plan surfaces as
+/// a cluster-construction error rather than a silent no-op.
+pub fn default_fault_plan() -> &'static str {
+    static DEFAULT: OnceLock<String> = OnceLock::new();
+    DEFAULT.get_or_init(|| {
+        std::env::var("FAULT_PLAN").unwrap_or_else(|_| FAULT_PLAN.into())
+    })
+}
+
+/// The process-wide default collective timeout: the
+/// `COLLECTIVE_TIMEOUT_MS` env var (milliseconds), else
+/// [`COLLECTIVE_TIMEOUT_MS`] (0 = no timeout). Read once; explicit
+/// settings always override it.
+pub fn default_collective_timeout_ms() -> u64 {
+    static DEFAULT: OnceLock<u64> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("COLLECTIVE_TIMEOUT_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(COLLECTIVE_TIMEOUT_MS)
+    })
+}
+
+/// Resolve a configured fault plan: `None` = the process default
+/// (env-overridable via `FAULT_PLAN`), `Some` passes through.
+pub fn resolve_fault_plan(configured: Option<&str>) -> String {
+    configured.unwrap_or_else(default_fault_plan).to_string()
+}
+
+/// Resolve a configured collective timeout: `None` = the process
+/// default (env-overridable via `COLLECTIVE_TIMEOUT_MS`), `Some`
+/// passes through; `0` always means "no timeout".
+pub fn resolve_collective_timeout_ms(configured: Option<u64>) -> u64 {
+    configured.unwrap_or_else(default_collective_timeout_ms)
 }
 
 thread_local! {
@@ -472,6 +533,19 @@ mod tests {
             assert!(!morsel_parallel(ExecContext::serial()));
             assert!(morsel_parallel(ExecContext::new(2)));
         });
+    }
+
+    #[test]
+    fn fault_knobs_resolve() {
+        // None = the process default; Some passes through.
+        assert_eq!(resolve_fault_plan(None), default_fault_plan());
+        assert_eq!(resolve_fault_plan(Some("error@1:2")), "error@1:2");
+        assert_eq!(
+            resolve_collective_timeout_ms(None),
+            default_collective_timeout_ms()
+        );
+        assert_eq!(resolve_collective_timeout_ms(Some(250)), 250);
+        assert_eq!(resolve_collective_timeout_ms(Some(0)), 0);
     }
 
     #[test]

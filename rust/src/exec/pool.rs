@@ -67,6 +67,18 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
 use std::thread::JoinHandle;
 
+/// Best-effort text of a panic payload (`&str` / `String` payloads —
+/// the two `panic!` produces). Used wherever a panic joins the fault
+/// domain: a rank panic becomes a [`crate::net::Fault`] whose message
+/// carries the payload instead of an opaque "a rank panicked".
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
 /// A borrowed task smuggled across threads as a raw pointer (raw so a
 /// worker still holding its `Arc<Job>` after the job completed keeps
 /// no dangling *reference*, only a pointer it will never dereference).

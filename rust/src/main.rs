@@ -67,6 +67,14 @@ GLOBAL FLAGS
                         rank workers run a skewed rank's queued
                         morsels; false = isolated per-rank pools;
                         results identical either way)
+  --fault-plan PLAN     deterministic fault injection for cluster
+                        commands: comma-separated kind@rank:exchange
+                        entries, kind = error|panic|delayMS (e.g.
+                        'error@1:2'); empty = off (docs/FAULTS.md)
+  --collective-timeout MS
+                        abort any collective not completing within MS
+                        milliseconds, blaming the missing rank
+                        (0 = wait forever, the default)
 
 See docs/CONFIG.md for the config-file/env equivalents of every knob.
 ";
@@ -166,6 +174,19 @@ fn make_cluster(
             .bool_flag("ingest-single-pass")?
             .or(cfg.ingest_single_pass),
         work_steal: args.bool_flag("work-steal")?.or(cfg.work_steal),
+        fault_plan: args
+            .str("fault-plan")
+            .map(String::from)
+            .or_else(|| cfg.fault_plan.clone()),
+        collective_timeout_ms: match args.str("collective-timeout") {
+            Some(v) => Some(v.parse().map_err(|_| {
+                RylonError::invalid(format!(
+                    "flag --collective-timeout wants milliseconds, \
+                     got '{v}'"
+                ))
+            })?),
+            None => cfg.collective_timeout_ms,
+        },
     })
 }
 
@@ -311,6 +332,7 @@ fn cmd_etl(args: &Args, cfg: &RylonConfig) -> Result<()> {
     for (_, p) in &outs {
         phases.merge(p);
     }
+    cluster.fault_stats().record(&mut phases);
     println!(
         "pipeline: {} result rows in {:.3}s wall{}",
         human_count(total as u64),

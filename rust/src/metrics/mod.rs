@@ -89,6 +89,40 @@ impl Phases {
     }
 }
 
+/// Fault-domain counters (`docs/FAULTS.md`): how many collectives the
+/// cluster aborted and how many faults the injection plan fired.
+/// Snapshot via `Cluster::fault_stats`; counters are cumulative for
+/// the cluster's lifetime (clearing a fault does not reset them).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Collectives aborted out-of-band: rank aborts (errors/panics
+    /// delivered to parked peers), collective timeouts, rendezvous
+    /// corruption.
+    pub aborted_collectives: u64,
+    /// Faults fired by the configured `[exec] fault_plan` (0 when no
+    /// plan is active).
+    pub injected_faults: u64,
+}
+
+impl FaultStats {
+    /// Fold these counters into a [`Phases`] breakdown (the JSON the
+    /// CLI and benches emit).
+    pub fn record(&self, phases: &mut Phases) {
+        phases.count("aborted_collectives", self.aborted_collectives);
+        phases.count("injected_faults", self.injected_faults);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "aborted_collectives",
+                Json::num(self.aborted_collectives as f64),
+            ),
+            ("injected_faults", Json::num(self.injected_faults as f64)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +152,20 @@ mod tests {
         let j = p.to_json().to_string();
         assert!(j.contains("shuffle"));
         assert!(j.contains("bytes"));
+    }
+
+    #[test]
+    fn fault_stats_fold_and_serialize() {
+        let s = FaultStats {
+            aborted_collectives: 2,
+            injected_faults: 1,
+        };
+        let mut p = Phases::new();
+        s.record(&mut p);
+        assert_eq!(p.counter("aborted_collectives"), 2);
+        assert_eq!(p.counter("injected_faults"), 1);
+        let j = s.to_json().to_string();
+        assert!(j.contains("aborted_collectives"));
+        assert!(j.contains("injected_faults"));
     }
 }

@@ -1,0 +1,293 @@
+//! The checked collective layer — every exchange carries a per-rank
+//! Ok/Err verdict on the wire, generalising single-pass ingest's
+//! checked allgather to *every* collective (`docs/FAULTS.md`).
+//!
+//! [`CheckedFabric`] wraps any inner [`Fabric`] and appends one verdict
+//! byte to every buffer of every exchange:
+//!
+//! ```text
+//! Ok  frame: payload bytes | 0x01
+//! Err frame: Fault frame (net::Fault::encode) | 0x00
+//! ```
+//!
+//! The verdict trails the payload so the happy path never copies:
+//! senders push one byte, receivers pop it, and the payload `Vec` is
+//! handed through untouched. On the Err path the failing rank still
+//! *arrives* at the rendezvous — it posts its encoded [`Fault`] to every
+//! peer — so no rank is left parked. Receivers scan sources in
+//! ascending rank order and return the first fault found, giving every
+//! rank the same lowest-failing-rank attribution (the contract the
+//! ingest layer documented, now fabric-wide).
+//!
+//! What the verdict cannot cover — a rank that fails *between*
+//! collectives and never arrives at the next one — is handled
+//! out-of-band by [`Fabric::abort`] (called by the cluster's rank
+//! wrapper), which this layer delegates to the inner fabric.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Result, RylonError};
+use crate::net::{Fabric, FabricRef, Fault, OutBufs};
+
+/// Verdict byte: the sender's rank-local stage succeeded; the frame
+/// body is the payload.
+pub const VERDICT_OK: u8 = 1;
+/// Verdict byte: the sender failed; the frame body is an encoded
+/// [`Fault`].
+pub const VERDICT_ERR: u8 = 0;
+
+/// Fabric decorator adding per-rank verdicts to every collective step.
+pub struct CheckedFabric {
+    inner: FabricRef,
+    /// Per-rank completed-exchange counters (fault step attribution).
+    steps: Vec<AtomicU64>,
+}
+
+impl CheckedFabric {
+    /// Wrap `inner`; all collectives through `self` carry verdicts.
+    pub fn new(inner: FabricRef) -> CheckedFabric {
+        let steps = (0..inner.size()).map(|_| AtomicU64::new(0)).collect();
+        CheckedFabric { inner, steps }
+    }
+
+    /// The wrapped fabric.
+    pub fn inner(&self) -> &dyn Fabric {
+        self.inner.as_ref()
+    }
+
+    /// `rank`'s completed checked-exchange count — the step index the
+    /// *next* collective (or a between-collectives fault) is attributed
+    /// to.
+    pub fn step(&self, rank: usize) -> u64 {
+        self.steps[rank].load(Ordering::Relaxed)
+    }
+
+    /// The core checked collective: every rank contributes either its
+    /// per-destination buffers or its rank-local error. If any rank
+    /// contributed an error, **every** rank (including the failing one,
+    /// via self-delivery) returns the lowest-failing-rank's fault as a
+    /// rank/op/step-attributed [`RylonError::Aborted`]; otherwise the
+    /// payloads are delivered bit-identically to an unchecked exchange.
+    pub fn exchange_verdict(
+        &self,
+        rank: usize,
+        op: &str,
+        local: std::result::Result<OutBufs, &RylonError>,
+    ) -> Result<OutBufs> {
+        let size = self.inner.size();
+        let step = self.steps[rank].load(Ordering::Relaxed);
+        let wires: OutBufs = match local {
+            Ok(bufs) => {
+                if bufs.len() != size {
+                    return Err(RylonError::comm(format!(
+                        "checked exchange from rank {rank}: {} buffers \
+                         for {size} ranks",
+                        bufs.len()
+                    )));
+                }
+                bufs.into_iter()
+                    .map(|mut b| {
+                        b.push(VERDICT_OK);
+                        b
+                    })
+                    .collect()
+            }
+            Err(e) => {
+                let fault = Fault::from_error(rank, op, step, e);
+                let mut frame = fault.encode();
+                frame.push(VERDICT_ERR);
+                vec![frame; size]
+            }
+        };
+        let incoming = self.inner.exchange(rank, wires)?;
+        let mut out: OutBufs = Vec::with_capacity(size);
+        let mut first_fault: Option<Fault> = None;
+        for (src, mut buf) in incoming.into_iter().enumerate() {
+            match buf.pop() {
+                Some(VERDICT_OK) => out.push(buf),
+                Some(VERDICT_ERR) => {
+                    if first_fault.is_none() {
+                        first_fault =
+                            Some(Fault::decode(&buf).unwrap_or_else(
+                                |_| {
+                                    Fault::comm(
+                                        src,
+                                        op,
+                                        step,
+                                        "malformed fault frame in \
+                                         checked exchange",
+                                    )
+                                },
+                            ));
+                    }
+                    out.push(Vec::new());
+                }
+                _ => {
+                    return Err(RylonError::comm(format!(
+                        "rank {src} sent a frame without a verdict \
+                         byte in checked exchange #{step}"
+                    )))
+                }
+            }
+        }
+        if let Some(fault) = first_fault {
+            return Err(fault.to_error());
+        }
+        self.steps[rank].fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+}
+
+impl Fabric for CheckedFabric {
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn exchange(&self, rank: usize, outgoing: OutBufs) -> Result<OutBufs> {
+        self.exchange_verdict(rank, "collective", Ok(outgoing))
+    }
+
+    fn tick_compute(&self, rank: usize) {
+        self.inner.tick_compute(rank)
+    }
+
+    fn model_time(&self, rank: usize) -> Option<f64> {
+        self.inner.model_time(rank)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent()
+    }
+
+    fn fault(&self) -> Option<Fault> {
+        self.inner.fault()
+    }
+
+    fn abort(&self, fault: Fault) {
+        self.inner.abort(fault)
+    }
+
+    fn clear_fault(&self) {
+        self.inner.clear_fault()
+    }
+
+    fn aborts(&self) -> u64 {
+        self.inner.aborts()
+    }
+
+    fn steps(&self, rank: usize) -> u64 {
+        self.step(rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::local::LocalFabric;
+    use std::sync::Arc;
+
+    fn checked(size: usize) -> Arc<CheckedFabric> {
+        Arc::new(CheckedFabric::new(Arc::new(LocalFabric::new(size))))
+    }
+
+    fn run_ranks<F, T>(fab: Arc<CheckedFabric>, f: F) -> Vec<T>
+    where
+        F: Fn(usize, Arc<CheckedFabric>) -> T + Send + Sync + 'static,
+        T: Send + 'static,
+    {
+        let size = fab.size();
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..size)
+            .map(|r| {
+                let fab = Arc::clone(&fab);
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || f(r, fab))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn happy_path_is_bit_identical_and_counts_steps() {
+        let size = 3;
+        let fab = checked(size);
+        let results = run_ranks(Arc::clone(&fab), move |rank, fab| {
+            let out: OutBufs = (0..size)
+                .map(|d| format!("{rank}->{d}").into_bytes())
+                .collect();
+            fab.exchange(rank, out).unwrap()
+        });
+        for (dst, incoming) in results.iter().enumerate() {
+            for (src, buf) in incoming.iter().enumerate() {
+                assert_eq!(
+                    String::from_utf8_lossy(buf),
+                    format!("{src}->{dst}")
+                );
+            }
+        }
+        for r in 0..size {
+            assert_eq!(fab.step(r), 1);
+        }
+    }
+
+    #[test]
+    fn empty_payloads_survive_the_verdict_byte() {
+        let fab = checked(2);
+        let results = run_ranks(fab, |rank, fab| {
+            fab.exchange(rank, vec![Vec::new(), Vec::new()]).unwrap()
+        });
+        for incoming in results {
+            assert!(incoming.iter().all(|b| b.is_empty()));
+        }
+    }
+
+    #[test]
+    fn one_rank_error_aborts_every_rank_with_attribution() {
+        let size = 3;
+        let fab = checked(size);
+        let results = run_ranks(fab, move |rank, fab| {
+            let err = RylonError::parse("rank-local failure");
+            let local = if rank == 1 {
+                Err(&err)
+            } else {
+                Ok(vec![vec![rank as u8]; size])
+            };
+            fab.exchange_verdict(rank, "unit_op", local)
+        });
+        for res in &results {
+            let e = res.as_ref().unwrap_err();
+            let i = e.abort_info().expect("attributed abort");
+            assert_eq!((i.rank, i.op.as_str(), i.step), (1, "unit_op", 0));
+            assert!(matches!(*i.source, RylonError::Parse(_)));
+        }
+    }
+
+    #[test]
+    fn lowest_failing_rank_wins() {
+        let size = 4;
+        let fab = checked(size);
+        let results = run_ranks(fab, move |rank, fab| {
+            let err = RylonError::invalid(format!("bad rank {rank}"));
+            let local = if rank == 1 || rank == 3 {
+                Err(&err)
+            } else {
+                Ok(vec![Vec::new(); size])
+            };
+            fab.exchange_verdict(rank, "unit_op", local)
+        });
+        for res in &results {
+            let i = res.as_ref().unwrap_err().abort_info().unwrap();
+            assert_eq!(i.rank, 1, "lowest failing rank attributed");
+        }
+    }
+
+    #[test]
+    fn failed_step_does_not_advance_the_counter() {
+        let fab = checked(1);
+        let err = RylonError::comm("boom");
+        assert!(fab.exchange_verdict(0, "op", Err(&err)).is_err());
+        assert_eq!(fab.step(0), 0);
+        assert!(fab.exchange(0, vec![b"ok".to_vec()]).is_ok());
+        assert_eq!(fab.step(0), 1);
+    }
+}

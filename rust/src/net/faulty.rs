@@ -1,0 +1,299 @@
+//! Deterministic fault injection for the cluster fabric
+//! (`docs/FAULTS.md`).
+//!
+//! [`FaultyFabric`] wraps any inner [`Fabric`] and fires the faults of a
+//! [`FaultPlan`] — parsed from the `[exec] fault_plan` knob / the
+//! `FAULT_PLAN` env var — at exact `(rank, exchange)` coordinates:
+//!
+//! ```text
+//! plan      := entry ("," entry)*  |  ""        (empty = no faults)
+//! entry     := kind "@" rank ":" exchange
+//! kind      := "error" | "panic" | "delay" MILLIS
+//! ```
+//!
+//! `error@1:2` makes rank 1's third exchange return a comm error;
+//! `panic@0:0` panics rank 0 on its first exchange; `delay250@2:1`
+//! parks rank 2 for 250 ms before its second exchange (pair with
+//! `[exec] collective_timeout_ms` to turn the hang into a symmetric
+//! abort). Plans are fully explicit — no RNG — so every injection is
+//! reproducible by construction. Entries whose rank is outside the
+//! world size simply never fire, letting one process-wide `FAULT_PLAN`
+//! target a specific world size.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::error::{Result, RylonError};
+use crate::net::{Fabric, FabricRef, Fault, OutBufs};
+
+/// What a fault-plan entry does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The exchange returns a comm error on the injected rank.
+    Error,
+    /// The injected rank panics (exercising the panic→abort route).
+    Panic,
+    /// The injected rank sleeps this many milliseconds, then proceeds.
+    Delay(u64),
+}
+
+/// One injection point: fire `kind` when `rank` makes its
+/// `exchange`-th fabric exchange (0-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPoint {
+    /// Rank the fault fires on.
+    pub rank: usize,
+    /// 0-based exchange index it fires at.
+    pub exchange: u64,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A parsed `[exec] fault_plan`: a fixed set of injection points.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    points: Vec<FaultPoint>,
+}
+
+impl FaultPlan {
+    /// Parse the plan grammar (see module docs). Empty input (or all
+    /// whitespace) is the empty plan.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut points = Vec::new();
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind_s, at) = entry.split_once('@').ok_or_else(|| {
+                RylonError::invalid(format!(
+                    "fault plan entry '{entry}': expected \
+                     kind@rank:exchange"
+                ))
+            })?;
+            let (rank_s, exch_s) = at.split_once(':').ok_or_else(|| {
+                RylonError::invalid(format!(
+                    "fault plan entry '{entry}': expected \
+                     kind@rank:exchange"
+                ))
+            })?;
+            let rank: usize = rank_s.trim().parse().map_err(|_| {
+                RylonError::invalid(format!(
+                    "fault plan entry '{entry}': bad rank '{rank_s}'"
+                ))
+            })?;
+            let exchange: u64 = exch_s.trim().parse().map_err(|_| {
+                RylonError::invalid(format!(
+                    "fault plan entry '{entry}': bad exchange \
+                     '{exch_s}'"
+                ))
+            })?;
+            let kind_s = kind_s.trim();
+            let kind = match kind_s {
+                "error" => FaultKind::Error,
+                "panic" => FaultKind::Panic,
+                _ => match kind_s.strip_prefix("delay") {
+                    Some(ms_s) => {
+                        let ms: u64 = ms_s.parse().map_err(|_| {
+                            RylonError::invalid(format!(
+                                "fault plan entry '{entry}': bad \
+                                 delay millis '{ms_s}'"
+                            ))
+                        })?;
+                        FaultKind::Delay(ms)
+                    }
+                    None => {
+                        return Err(RylonError::invalid(format!(
+                            "fault plan entry '{entry}': unknown kind \
+                             '{kind_s}' (error|panic|delayMS)"
+                        )))
+                    }
+                },
+            };
+            points.push(FaultPoint {
+                rank,
+                exchange,
+                kind,
+            });
+        }
+        Ok(FaultPlan { points })
+    }
+
+    /// True if the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The injection points.
+    pub fn points(&self) -> &[FaultPoint] {
+        &self.points
+    }
+
+    fn hit(&self, rank: usize, exchange: u64) -> Option<FaultPoint> {
+        self.points
+            .iter()
+            .copied()
+            .find(|p| p.rank == rank && p.exchange == exchange)
+    }
+}
+
+/// Fabric decorator firing a [`FaultPlan`] at exact
+/// `(rank, exchange)` coordinates.
+pub struct FaultyFabric {
+    inner: FabricRef,
+    plan: FaultPlan,
+    /// Per-rank exchange counters (the plan's exchange coordinate).
+    counts: Vec<AtomicU64>,
+    injected: AtomicU64,
+}
+
+impl FaultyFabric {
+    /// Wrap `inner`, injecting `plan`.
+    pub fn new(inner: FabricRef, plan: FaultPlan) -> FaultyFabric {
+        let counts =
+            (0..inner.size()).map(|_| AtomicU64::new(0)).collect();
+        FaultyFabric {
+            inner,
+            plan,
+            counts,
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of faults the plan has fired so far.
+    pub fn injected_faults(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+impl Fabric for FaultyFabric {
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn exchange(&self, rank: usize, outgoing: OutBufs) -> Result<OutBufs> {
+        let n = self.counts[rank].fetch_add(1, Ordering::Relaxed);
+        if let Some(p) = self.plan.hit(rank, n) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            match p.kind {
+                FaultKind::Error => {
+                    return Err(RylonError::comm(format!(
+                        "injected fault at rank {rank}, exchange #{n}"
+                    )))
+                }
+                FaultKind::Panic => {
+                    panic!("injected panic at rank {rank}, exchange #{n}")
+                }
+                FaultKind::Delay(ms) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+            }
+        }
+        self.inner.exchange(rank, outgoing)
+    }
+
+    fn tick_compute(&self, rank: usize) {
+        self.inner.tick_compute(rank)
+    }
+
+    fn model_time(&self, rank: usize) -> Option<f64> {
+        self.inner.model_time(rank)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent()
+    }
+
+    fn fault(&self) -> Option<Fault> {
+        self.inner.fault()
+    }
+
+    fn abort(&self, fault: Fault) {
+        self.inner.abort(fault)
+    }
+
+    fn clear_fault(&self) {
+        self.inner.clear_fault()
+    }
+
+    fn aborts(&self) -> u64 {
+        self.inner.aborts()
+    }
+
+    fn steps(&self, rank: usize) -> u64 {
+        self.inner.steps(rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::local::LocalFabric;
+    use std::sync::Arc;
+
+    #[test]
+    fn plan_grammar_parses() {
+        let plan =
+            FaultPlan::parse("error@1:2, panic@0:0,delay250@2:1").unwrap();
+        assert_eq!(
+            plan.points(),
+            &[
+                FaultPoint {
+                    rank: 1,
+                    exchange: 2,
+                    kind: FaultKind::Error
+                },
+                FaultPoint {
+                    rank: 0,
+                    exchange: 0,
+                    kind: FaultKind::Panic
+                },
+                FaultPoint {
+                    rank: 2,
+                    exchange: 1,
+                    kind: FaultKind::Delay(250)
+                },
+            ]
+        );
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn plan_grammar_rejects_garbage() {
+        for bad in [
+            "error",
+            "error@1",
+            "error@x:1",
+            "error@1:y",
+            "explode@1:1",
+            "delay@1:1",
+            "delayxx@1:1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn error_fires_at_exact_coordinates() {
+        let plan = FaultPlan::parse("error@0:1").unwrap();
+        let fab =
+            FaultyFabric::new(Arc::new(LocalFabric::new(1)), plan);
+        assert!(fab.exchange(0, vec![vec![]]).is_ok());
+        assert_eq!(fab.injected_faults(), 0);
+        let e = fab.exchange(0, vec![vec![]]).unwrap_err();
+        assert!(e.to_string().contains("injected fault"));
+        assert_eq!(fab.injected_faults(), 1);
+        // Counter advanced past the point: later exchanges are clean.
+        assert!(fab.exchange(0, vec![vec![]]).is_ok());
+    }
+
+    #[test]
+    fn out_of_range_rank_never_fires() {
+        let plan = FaultPlan::parse("error@5:0").unwrap();
+        let fab =
+            FaultyFabric::new(Arc::new(LocalFabric::new(1)), plan);
+        assert!(fab.exchange(0, vec![vec![]]).is_ok());
+        assert_eq!(fab.injected_faults(), 0);
+    }
+}

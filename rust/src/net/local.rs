@@ -2,12 +2,20 @@
 //! matrix guarded by a mutex + condvar, generation-counted so back-to-
 //! back exchanges never cross. This is the "real concurrency" fabric —
 //! every correctness test runs on it.
+//!
+//! The fabric is one half of the cluster-wide fault domain
+//! (`docs/FAULTS.md`): a recorded [`Fault`] — set by [`Fabric::abort`]
+//! when a rank fails outside an exchange, or internally when a
+//! collective times out — wakes every parked rank and makes every
+//! subsequent exchange fail fast with the same attributed error until
+//! [`Fabric::clear_fault`] resets the rendezvous.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use crate::error::{Result, RylonError};
-use crate::net::{Fabric, OutBufs};
+use crate::net::{Fabric, Fault, OutBufs};
 
 struct State {
     /// `mailbox[src][dst]`: buffer posted by `src` for `dst` in the
@@ -19,6 +27,11 @@ struct State {
     collected: usize,
     /// Exchange generation (collection phase opens when all posted).
     generation: u64,
+    /// Per-rank arrival flags for the current generation (who has
+    /// posted) — names the missing ranks when a collective times out.
+    arrived: Vec<bool>,
+    /// The fault poisoning this fabric, if any. First fault wins.
+    fault: Option<Fault>,
 }
 
 /// In-process fabric for `size` rank threads.
@@ -27,6 +40,10 @@ pub struct LocalFabric {
     state: Mutex<State>,
     cond: Condvar,
     bytes: AtomicU64,
+    aborts: AtomicU64,
+    /// Collective timeout; `None` parks forever (the pre-fault-domain
+    /// behaviour).
+    timeout: Option<Duration>,
 }
 
 impl LocalFabric {
@@ -39,10 +56,104 @@ impl LocalFabric {
                 posted: 0,
                 collected: 0,
                 generation: 0,
+                arrived: vec![false; size],
+                fault: None,
             }),
             cond: Condvar::new(),
             bytes: AtomicU64::new(0),
+            aborts: AtomicU64::new(0),
+            timeout: None,
         }
+    }
+
+    /// Abort any collective that does not complete within `timeout`
+    /// (attributing the lowest rank that never arrived). `None` waits
+    /// forever.
+    pub fn with_timeout(mut self, timeout: Option<Duration>) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    /// Lock the state, converting a poisoned mutex (a rank panicked
+    /// while holding it) into an attributed error rather than a panic.
+    fn lock(&self, rank: usize) -> Result<MutexGuard<'_, State>> {
+        self.state.lock().map_err(|p| {
+            let st = p.into_inner();
+            match &st.fault {
+                Some(f) => f.to_error(),
+                None => RylonError::comm(format!(
+                    "fabric poisoned: a rank panicked inside exchange #{} \
+                     (observed by rank {rank})",
+                    st.generation
+                )),
+            }
+        })
+    }
+
+    /// One condvar wait, bounded by the deadline. Returns the attributed
+    /// timeout error once the deadline passes (recording the fault so
+    /// every other rank aborts identically).
+    fn wait<'a>(
+        &self,
+        st: MutexGuard<'a, State>,
+        rank: usize,
+        deadline: Option<Instant>,
+    ) -> Result<MutexGuard<'a, State>> {
+        let poison = |p: std::sync::PoisonError<MutexGuard<'_, State>>| {
+            let st = p.into_inner();
+            match &st.fault {
+                Some(f) => f.to_error(),
+                None => RylonError::comm(format!(
+                    "fabric poisoned: a rank panicked inside exchange #{} \
+                     (observed by rank {rank})",
+                    st.generation
+                )),
+            }
+        };
+        let Some(dl) = deadline else {
+            return self.cond.wait(st).map_err(poison);
+        };
+        let remaining = dl.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(self.record_timeout(st, rank));
+        }
+        let (st, _) =
+            self.cond.wait_timeout(st, remaining).map_err(poison)?;
+        Ok(st)
+    }
+
+    /// Record a collective-timeout fault (first fault wins), attributing
+    /// the lowest rank that never arrived at the current generation.
+    fn record_timeout(
+        &self,
+        mut st: MutexGuard<'_, State>,
+        rank: usize,
+    ) -> RylonError {
+        if let Some(f) = &st.fault {
+            return f.to_error();
+        }
+        let timeout = self.timeout.unwrap_or_default();
+        let missing: Vec<usize> =
+            (0..self.size).filter(|&r| !st.arrived[r]).collect();
+        let culprit = missing.first().copied().unwrap_or(rank);
+        let msg = if missing.is_empty() {
+            format!(
+                "collective timed out after {timeout:?}: exchange #{} \
+                 never closed (observed by rank {rank})",
+                st.generation
+            )
+        } else {
+            format!(
+                "collective timed out after {timeout:?}: rank(s) \
+                 {missing:?} never arrived at exchange #{}",
+                st.generation
+            )
+        };
+        let fault = Fault::comm(culprit, "exchange", st.generation, msg);
+        st.fault = Some(fault.clone());
+        self.aborts.fetch_add(1, Ordering::Relaxed);
+        self.cond.notify_all();
+        fault.to_error()
     }
 }
 
@@ -55,6 +166,49 @@ impl Fabric for LocalFabric {
         self.bytes.load(Ordering::Relaxed)
     }
 
+    fn fault(&self) -> Option<Fault> {
+        match self.state.lock() {
+            Ok(st) => st.fault.clone(),
+            Err(p) => p.into_inner().fault.clone(),
+        }
+    }
+
+    fn abort(&self, fault: Fault) {
+        // Must deliver even if the mutex is poisoned: the whole point
+        // is waking peers after a rank died mid-collective.
+        let mut st = match self.state.lock() {
+            Ok(st) => st,
+            Err(p) => p.into_inner(),
+        };
+        if st.fault.is_none() {
+            st.fault = Some(fault);
+            self.aborts.fetch_add(1, Ordering::Relaxed);
+        }
+        self.cond.notify_all();
+    }
+
+    fn clear_fault(&self) {
+        let mut st = match self.state.lock() {
+            Ok(st) => st,
+            Err(p) => p.into_inner(),
+        };
+        st.fault = None;
+        st.posted = 0;
+        st.collected = 0;
+        st.generation += 1;
+        st.arrived.fill(false);
+        for row in &mut st.mailbox {
+            for slot in row {
+                *slot = None;
+            }
+        }
+        self.cond.notify_all();
+    }
+
+    fn aborts(&self) -> u64 {
+        self.aborts.load(Ordering::Relaxed)
+    }
+
     fn exchange(&self, rank: usize, outgoing: OutBufs) -> Result<OutBufs> {
         if outgoing.len() != self.size {
             return Err(RylonError::comm(format!(
@@ -65,9 +219,11 @@ impl Fabric for LocalFabric {
         }
         let posted_bytes: usize = outgoing.iter().map(|b| b.len()).sum();
         self.bytes.fetch_add(posted_bytes as u64, Ordering::Relaxed);
-        let mut st = self.state.lock().map_err(|_| {
-            RylonError::comm("fabric poisoned (a rank panicked)")
-        })?;
+        let deadline = self.timeout.map(|t| Instant::now() + t);
+        let mut st = self.lock(rank)?;
+        if let Some(f) = &st.fault {
+            return Err(f.to_error());
+        }
         let my_gen = st.generation;
 
         // Post.
@@ -76,24 +232,42 @@ impl Fabric for LocalFabric {
             st.mailbox[rank][dst] = Some(buf);
         }
         st.posted += 1;
+        st.arrived[rank] = true;
         if st.posted == self.size {
             self.cond.notify_all();
         }
         // Wait for everyone to post this generation.
         while st.generation == my_gen && st.posted < self.size {
-            st = self.cond.wait(st).map_err(|_| {
-                RylonError::comm("fabric poisoned (a rank panicked)")
-            })?;
+            st = self.wait(st, rank, deadline)?;
+            if let Some(f) = &st.fault {
+                return Err(f.to_error());
+            }
         }
 
         // Collect column `rank`.
         let mut incoming: OutBufs = Vec::with_capacity(self.size);
         for src in 0..self.size {
-            incoming.push(
-                st.mailbox[src][rank]
-                    .take()
-                    .expect("mailbox slot missing"),
-            );
+            match st.mailbox[src][rank].take() {
+                Some(buf) => incoming.push(buf),
+                None => {
+                    let fault = Fault::comm(
+                        src,
+                        "exchange",
+                        st.generation,
+                        format!(
+                            "mailbox slot empty: rank {src} never \
+                             delivered to rank {rank} in exchange #{}",
+                            st.generation
+                        ),
+                    );
+                    if st.fault.is_none() {
+                        st.fault = Some(fault.clone());
+                        self.aborts.fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.cond.notify_all();
+                    return Err(fault.to_error());
+                }
+            }
         }
         st.collected += 1;
         if st.collected == self.size {
@@ -101,15 +275,17 @@ impl Fabric for LocalFabric {
             st.posted = 0;
             st.collected = 0;
             st.generation += 1;
+            st.arrived.fill(false);
             self.cond.notify_all();
         } else {
             // Wait until the generation closes so a fast rank can't
             // lap the slowest and double-post into the same slots.
             let gen = st.generation;
             while st.generation == gen {
-                st = self.cond.wait(st).map_err(|_| {
-                    RylonError::comm("fabric poisoned (a rank panicked)")
-                })?;
+                st = self.wait(st, rank, deadline)?;
+                if let Some(f) = &st.fault {
+                    return Err(f.to_error());
+                }
             }
         }
         Ok(incoming)
@@ -126,7 +302,15 @@ mod tests {
         F: Fn(usize, Arc<LocalFabric>) -> T + Send + Sync + 'static,
         T: Send + 'static,
     {
-        let fabric = Arc::new(LocalFabric::new(size));
+        run_ranks_on(Arc::new(LocalFabric::new(size)), f)
+    }
+
+    fn run_ranks_on<F, T>(fabric: Arc<LocalFabric>, f: F) -> Vec<T>
+    where
+        F: Fn(usize, Arc<LocalFabric>) -> T + Send + Sync + 'static,
+        T: Send + 'static,
+    {
+        let size = fabric.size();
         let f = Arc::new(f);
         let handles: Vec<_> = (0..size)
             .map(|r| {
@@ -188,5 +372,56 @@ mod tests {
         let fab = LocalFabric::new(1);
         let inc = fab.exchange(0, vec![b"self".to_vec()]).unwrap();
         assert_eq!(inc[0], b"self");
+    }
+
+    #[test]
+    fn abort_wakes_parked_ranks_with_the_fault() {
+        let fabric = Arc::new(LocalFabric::new(2));
+        let results = run_ranks_on(fabric, |rank, fab| {
+            if rank == 1 {
+                // Rank 1 dies before posting; rank 0 parks until the
+                // abort arrives.
+                fab.abort(Fault::comm(1, "unit", 0, "rank 1 gave up"));
+                return Err(RylonError::comm("local failure"));
+            }
+            fab.exchange(0, vec![vec![]; 2]).map(drop)
+        });
+        let e = results[0].as_ref().unwrap_err();
+        let i = e.abort_info().expect("attributed abort");
+        assert_eq!(i.rank, 1);
+        assert!(e.to_string().contains("rank 1 gave up"));
+    }
+
+    #[test]
+    fn fault_makes_exchange_fail_fast_until_cleared() {
+        let fab = LocalFabric::new(1);
+        fab.abort(Fault::comm(0, "unit", 3, "boom"));
+        assert_eq!(fab.aborts(), 1);
+        let e = fab.exchange(0, vec![vec![]]).unwrap_err();
+        assert_eq!(e.abort_info().unwrap().step, 3);
+        fab.clear_fault();
+        assert!(fab.fault().is_none());
+        assert!(fab.exchange(0, vec![b"ok".to_vec()]).is_ok());
+        // The abort count is cumulative across clears.
+        assert_eq!(fab.aborts(), 1);
+    }
+
+    #[test]
+    fn timeout_attributes_the_missing_rank() {
+        let fabric = Arc::new(
+            LocalFabric::new(2)
+                .with_timeout(Some(Duration::from_millis(50))),
+        );
+        let results = run_ranks_on(fabric, |rank, fab| {
+            if rank == 1 {
+                // Never shows up.
+                return Err(RylonError::comm("absent"));
+            }
+            fab.exchange(0, vec![vec![]; 2]).map(drop)
+        });
+        let e = results[0].as_ref().unwrap_err();
+        let i = e.abort_info().expect("attributed timeout");
+        assert_eq!(i.rank, 1, "lowest non-arrived rank blamed");
+        assert!(e.to_string().contains("timed out"));
     }
 }

@@ -18,18 +18,131 @@
 //!   simulated makespan used for the paper's scaling figures on this
 //!   single-core box (DESIGN.md §3).
 
+pub mod checked;
 pub mod collectives;
+pub mod faulty;
 pub mod local;
 pub mod sim;
 pub mod wire;
 
 use std::sync::Arc;
 
-use crate::error::Result;
+use crate::error::{Result, RylonError};
 
 /// Per-destination byte buffers for one rank's contribution to an
 /// exchange. `msgs[d]` goes to rank `d`; empty buffers are allowed.
 pub type OutBufs = Vec<Vec<u8>>;
+
+/// The single fault currency of the cluster-wide fault domain: one
+/// rank's failure, attributed to `(rank, op, step)`, in a form every
+/// other rank can receive — on the wire as a verdict frame
+/// ([`checked::CheckedFabric`]) or out-of-band via [`Fabric::abort`].
+///
+/// `kind`/`msg` are the [`RylonError::to_wire`] flattening of the
+/// underlying error; [`Fault::to_error`] reconstitutes the whole thing
+/// as [`RylonError::Aborted`] with identical attribution on every rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fault {
+    /// The rank whose failure aborted the collective.
+    pub rank: usize,
+    /// The labelled operation the failing rank was running.
+    pub op: String,
+    /// The failing rank's collective-step count at the fault point.
+    pub step: u64,
+    /// [`RylonError::to_wire`] tag of the underlying error.
+    pub kind: u8,
+    /// Flattened message of the underlying error.
+    pub msg: String,
+}
+
+impl Fault {
+    /// Attribute `err` to `(rank, op, step)`. If `err` is already a
+    /// collective abort, its original attribution is preserved so
+    /// faults keep their identity as they propagate between ranks.
+    pub fn from_error(
+        rank: usize,
+        op: &str,
+        step: u64,
+        err: &RylonError,
+    ) -> Fault {
+        if let Some(i) = err.abort_info() {
+            let (kind, msg) = i.source.to_wire();
+            return Fault {
+                rank: i.rank,
+                op: i.op.clone(),
+                step: i.step,
+                kind,
+                msg,
+            };
+        }
+        let (kind, msg) = err.to_wire();
+        Fault {
+            rank,
+            op: op.to_string(),
+            step,
+            kind,
+            msg,
+        }
+    }
+
+    /// Shorthand for a communication-layer fault.
+    pub fn comm(
+        rank: usize,
+        op: &str,
+        step: u64,
+        msg: impl Into<String>,
+    ) -> Fault {
+        Fault::from_error(rank, op, step, &RylonError::comm(msg))
+    }
+
+    /// Reconstitute as the rank-attributed error every rank returns.
+    pub fn to_error(&self) -> RylonError {
+        RylonError::aborted(
+            self.rank,
+            self.op.clone(),
+            self.step,
+            RylonError::from_wire(self.kind, self.msg.clone()),
+        )
+    }
+
+    /// Encode as a little-endian fault frame (the `Err` payload of a
+    /// checked-exchange verdict; layout in `docs/FAULTS.md`):
+    /// `u32 rank | u64 step | u8 kind | u16 op_len | op | u32 msg_len | msg`.
+    pub fn encode(&self) -> Vec<u8> {
+        let op = self.op.as_bytes();
+        let msg = self.msg.as_bytes();
+        let op_len = op.len().min(u16::MAX as usize);
+        let msg_len = msg.len().min(u32::MAX as usize);
+        let mut out = Vec::with_capacity(19 + op_len + msg_len);
+        out.extend_from_slice(&(self.rank as u32).to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.push(self.kind);
+        out.extend_from_slice(&(op_len as u16).to_le_bytes());
+        out.extend_from_slice(&op[..op_len]);
+        out.extend_from_slice(&(msg_len as u32).to_le_bytes());
+        out.extend_from_slice(&msg[..msg_len]);
+        out
+    }
+
+    /// Decode a fault frame produced by [`Fault::encode`].
+    pub fn decode(buf: &[u8]) -> Result<Fault> {
+        let mut r = wire::Reader::new(buf);
+        let rank = r.u32()? as usize;
+        let step = r.u64()?;
+        let kind = r.u8()?;
+        let op_len = r.u16()? as usize;
+        let op = String::from_utf8_lossy(r.bytes(op_len)?).into_owned();
+        let msg_len = r.u32()? as usize;
+        let msg = String::from_utf8_lossy(r.bytes(msg_len)?).into_owned();
+        Ok(Fault {
+            rank,
+            op,
+            step,
+            kind,
+            msg,
+        })
+    }
+}
 
 /// The communication substrate shared by all ranks of one job.
 ///
@@ -59,6 +172,36 @@ pub trait Fabric: Send + Sync {
 
     /// Total bytes posted to this fabric across all exchanges (metrics).
     fn bytes_sent(&self) -> u64 {
+        0
+    }
+
+    /// The fault currently poisoning this fabric, if any. While set,
+    /// every `exchange` fails fast with the same attributed error.
+    fn fault(&self) -> Option<Fault> {
+        None
+    }
+
+    /// Record `fault` and wake every rank parked in a collective so the
+    /// abort is delivered symmetrically. First fault wins; later calls
+    /// are no-ops. Must succeed even if a rank panicked mid-exchange.
+    fn abort(&self, fault: Fault) {
+        let _ = fault;
+    }
+
+    /// Clear a recorded fault and reset the rendezvous state. Only safe
+    /// between jobs, when no rank thread is inside an exchange.
+    fn clear_fault(&self) {}
+
+    /// Cumulative count of faults recorded on this fabric (one per
+    /// aborted collective; survives [`Fabric::clear_fault`]).
+    fn aborts(&self) -> u64 {
+        0
+    }
+
+    /// `rank`'s completed-collective count (step attribution for
+    /// faults). Fabrics without per-rank counters return 0.
+    fn steps(&self, rank: usize) -> u64 {
+        let _ = rank;
         0
     }
 }
@@ -134,6 +277,40 @@ mod tests {
         assert_eq!(ReduceOp::Sum.fold(1.0, 2.0), 3.0);
         assert_eq!(ReduceOp::Min.fold(1.0, 2.0), 1.0);
         assert_eq!(ReduceOp::Max.fold(1.0, 2.0), 2.0);
+    }
+
+    #[test]
+    fn fault_frame_roundtrip() {
+        let f = Fault::from_error(
+            3,
+            "dist_sort",
+            17,
+            &RylonError::parse("bad float \"x\""),
+        );
+        let back = Fault::decode(&f.encode()).unwrap();
+        assert_eq!(back, f);
+        let e = back.to_error();
+        let i = e.abort_info().unwrap();
+        assert_eq!((i.rank, i.op.as_str(), i.step), (3, "dist_sort", 17));
+        assert!(matches!(*i.source, RylonError::Parse(_)));
+        assert!(e.to_string().contains("bad float"));
+    }
+
+    #[test]
+    fn fault_from_aborted_error_preserves_attribution() {
+        let original = Fault::comm(1, "shuffle", 4, "injected");
+        // A peer wrapping the received abort must not re-attribute it.
+        let rewrapped =
+            Fault::from_error(2, "job", 9, &original.to_error());
+        assert_eq!(rewrapped, original);
+    }
+
+    #[test]
+    fn fault_decode_rejects_truncation() {
+        let enc = Fault::comm(0, "op", 1, "message text").encode();
+        for cut in [0, 4, 12, enc.len() - 1] {
+            assert!(Fault::decode(&enc[..cut]).is_err(), "cut={cut}");
+        }
     }
 
     #[test]

@@ -20,11 +20,19 @@
 //! (§V-1: "when the parallelism increases, the operation transforms into
 //! a communication-bound operation") is exactly the α-term growing with
 //! p while per-rank bytes shrink.
+//!
+//! Fault-domain semantics (recorded [`Fault`], [`Fabric::abort`],
+//! collective timeout) mirror [`crate::net::local::LocalFabric`] — see
+//! `docs/FAULTS.md`. Timeouts are wall-clock and therefore outside the
+//! simulated cost model; they exist so a hung rank still aborts
+//! symmetrically under `--fabric sim`.
 
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use crate::error::{Result, RylonError};
-use crate::net::{CostModel, Fabric, OutBufs};
+use crate::net::{CostModel, Fabric, Fault, OutBufs};
 
 /// `CLOCK_THREAD_CPUTIME_ID` read through a direct C binding — the
 /// offline registry has no `libc` crate, and the symbol is provided by
@@ -80,6 +88,10 @@ struct State {
     mark: Vec<Option<f64>>,
     /// Total modeled wire bytes (metrics).
     wire_bytes: u64,
+    /// Per-rank arrival flags for the current generation.
+    arrived: Vec<bool>,
+    /// The fault poisoning this fabric, if any. First fault wins.
+    fault: Option<Fault>,
 }
 
 /// Deterministic BSP cluster simulator.
@@ -88,6 +100,9 @@ pub struct SimFabric {
     cost: CostModel,
     state: Mutex<State>,
     cond: Condvar,
+    aborts: AtomicU64,
+    /// Collective timeout (wall-clock); `None` parks forever.
+    timeout: Option<Duration>,
 }
 
 impl SimFabric {
@@ -104,20 +119,121 @@ impl SimFabric {
                 clock: vec![0.0; size],
                 mark: vec![None; size],
                 wire_bytes: 0,
+                arrived: vec![false; size],
+                fault: None,
             }),
             cond: Condvar::new(),
+            aborts: AtomicU64::new(0),
+            timeout: None,
         }
+    }
+
+    /// Abort any collective that does not complete within `timeout`
+    /// (wall-clock; attributes the lowest rank that never arrived).
+    pub fn with_timeout(mut self, timeout: Option<Duration>) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    /// Poison-tolerant lock: metric readers and the fault path must work
+    /// even after a rank panicked while holding the state.
+    fn lock_tolerant(&self) -> MutexGuard<'_, State> {
+        match self.state.lock() {
+            Ok(st) => st,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Lock for the exchange path, converting a poisoned mutex into an
+    /// attributed error rather than a panic.
+    fn lock(&self, rank: usize) -> Result<MutexGuard<'_, State>> {
+        self.state.lock().map_err(|p| {
+            let st = p.into_inner();
+            match &st.fault {
+                Some(f) => f.to_error(),
+                None => RylonError::comm(format!(
+                    "fabric poisoned: a rank panicked inside exchange #{} \
+                     (observed by rank {rank})",
+                    st.generation
+                )),
+            }
+        })
+    }
+
+    /// One condvar wait, bounded by the deadline (see
+    /// `LocalFabric::wait` — identical semantics).
+    fn wait<'a>(
+        &self,
+        st: MutexGuard<'a, State>,
+        rank: usize,
+        deadline: Option<Instant>,
+    ) -> Result<MutexGuard<'a, State>> {
+        let poison = |p: std::sync::PoisonError<MutexGuard<'_, State>>| {
+            let st = p.into_inner();
+            match &st.fault {
+                Some(f) => f.to_error(),
+                None => RylonError::comm(format!(
+                    "fabric poisoned: a rank panicked inside exchange #{} \
+                     (observed by rank {rank})",
+                    st.generation
+                )),
+            }
+        };
+        let Some(dl) = deadline else {
+            return self.cond.wait(st).map_err(poison);
+        };
+        let remaining = dl.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(self.record_timeout(st, rank));
+        }
+        let (st, _) =
+            self.cond.wait_timeout(st, remaining).map_err(poison)?;
+        Ok(st)
+    }
+
+    /// Record a collective-timeout fault, attributing the lowest rank
+    /// that never arrived at the current generation.
+    fn record_timeout(
+        &self,
+        mut st: MutexGuard<'_, State>,
+        rank: usize,
+    ) -> RylonError {
+        if let Some(f) = &st.fault {
+            return f.to_error();
+        }
+        let timeout = self.timeout.unwrap_or_default();
+        let missing: Vec<usize> =
+            (0..self.size).filter(|&r| !st.arrived[r]).collect();
+        let culprit = missing.first().copied().unwrap_or(rank);
+        let msg = if missing.is_empty() {
+            format!(
+                "collective timed out after {timeout:?}: exchange #{} \
+                 never closed (observed by rank {rank})",
+                st.generation
+            )
+        } else {
+            format!(
+                "collective timed out after {timeout:?}: rank(s) \
+                 {missing:?} never arrived at exchange #{}",
+                st.generation
+            )
+        };
+        let fault = Fault::comm(culprit, "exchange", st.generation, msg);
+        st.fault = Some(fault.clone());
+        self.aborts.fetch_add(1, Ordering::Relaxed);
+        self.cond.notify_all();
+        fault.to_error()
     }
 
     /// Simulated makespan: max over rank clocks (call after the job).
     pub fn makespan(&self) -> f64 {
-        let st = self.state.lock().unwrap();
+        let st = self.lock_tolerant();
         st.clock.iter().cloned().fold(0.0, f64::max)
     }
 
     /// Total bytes charged to the modeled wire.
     pub fn wire_bytes(&self) -> u64 {
-        self.state.lock().unwrap().wire_bytes
+        self.lock_tolerant().wire_bytes
     }
 
     fn fold_compute(&self, st: &mut State, rank: usize) {
@@ -166,12 +282,44 @@ impl Fabric for SimFabric {
     }
 
     fn tick_compute(&self, rank: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_tolerant();
         self.fold_compute(&mut st, rank);
     }
 
     fn model_time(&self, rank: usize) -> Option<f64> {
-        Some(self.state.lock().unwrap().clock[rank])
+        Some(self.lock_tolerant().clock[rank])
+    }
+
+    fn fault(&self) -> Option<Fault> {
+        self.lock_tolerant().fault.clone()
+    }
+
+    fn abort(&self, fault: Fault) {
+        let mut st = self.lock_tolerant();
+        if st.fault.is_none() {
+            st.fault = Some(fault);
+            self.aborts.fetch_add(1, Ordering::Relaxed);
+        }
+        self.cond.notify_all();
+    }
+
+    fn clear_fault(&self) {
+        let mut st = self.lock_tolerant();
+        st.fault = None;
+        st.posted = 0;
+        st.collected = 0;
+        st.generation += 1;
+        st.arrived.fill(false);
+        for row in &mut st.mailbox {
+            for slot in row {
+                *slot = None;
+            }
+        }
+        self.cond.notify_all();
+    }
+
+    fn aborts(&self) -> u64 {
+        self.aborts.load(Ordering::Relaxed)
     }
 
     fn exchange(&self, rank: usize, outgoing: OutBufs) -> Result<OutBufs> {
@@ -182,9 +330,11 @@ impl Fabric for SimFabric {
                 self.size
             )));
         }
-        let mut st = self.state.lock().map_err(|_| {
-            RylonError::comm("fabric poisoned (a rank panicked)")
-        })?;
+        let deadline = self.timeout.map(|t| Instant::now() + t);
+        let mut st = self.lock(rank)?;
+        if let Some(f) = &st.fault {
+            return Err(f.to_error());
+        }
         // Fold this rank's compute segment before the superstep.
         self.fold_compute(&mut st, rank);
 
@@ -194,37 +344,57 @@ impl Fabric for SimFabric {
             st.mailbox[rank][dst] = Some(buf);
         }
         st.posted += 1;
+        st.arrived[rank] = true;
         if st.posted == self.size {
             // Last poster charges the comm model for everyone.
             self.charge_exchange(&mut st);
             self.cond.notify_all();
         }
         while st.generation == my_gen && st.posted < self.size {
-            st = self.cond.wait(st).map_err(|_| {
-                RylonError::comm("fabric poisoned (a rank panicked)")
-            })?;
+            st = self.wait(st, rank, deadline)?;
+            if let Some(f) = &st.fault {
+                return Err(f.to_error());
+            }
         }
 
         let mut incoming: OutBufs = Vec::with_capacity(self.size);
         for src in 0..self.size {
-            incoming.push(
-                st.mailbox[src][rank]
-                    .take()
-                    .expect("mailbox slot missing"),
-            );
+            match st.mailbox[src][rank].take() {
+                Some(buf) => incoming.push(buf),
+                None => {
+                    let fault = Fault::comm(
+                        src,
+                        "exchange",
+                        st.generation,
+                        format!(
+                            "mailbox slot empty: rank {src} never \
+                             delivered to rank {rank} in exchange #{}",
+                            st.generation
+                        ),
+                    );
+                    if st.fault.is_none() {
+                        st.fault = Some(fault.clone());
+                        self.aborts.fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.cond.notify_all();
+                    return Err(fault.to_error());
+                }
+            }
         }
         st.collected += 1;
         if st.collected == self.size {
             st.posted = 0;
             st.collected = 0;
             st.generation += 1;
+            st.arrived.fill(false);
             self.cond.notify_all();
         } else {
             let gen = st.generation;
             while st.generation == gen {
-                st = self.cond.wait(st).map_err(|_| {
-                    RylonError::comm("fabric poisoned (a rank panicked)")
-                })?;
+                st = self.wait(st, rank, deadline)?;
+                if let Some(f) = &st.fault {
+                    return Err(f.to_error());
+                }
             }
         }
         // Restart the compute mark *after* the rendezvous so time spent

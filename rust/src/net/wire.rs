@@ -92,12 +92,18 @@ pub fn serialize_table_into(table: &Table, out: &mut Vec<u8>) {
     }
 }
 
-struct Reader<'a> {
+/// Little-endian cursor over a wire buffer. Shared with the fault-frame
+/// codec in [`crate::net::checked`] so both layers decode one way.
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
     fn need(&self, n: usize) -> Result<()> {
         if self.pos + n > self.buf.len() {
             Err(RylonError::parse(format!(
@@ -109,14 +115,14 @@ impl<'a> Reader<'a> {
         }
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         self.need(1)?;
         let v = self.buf[self.pos];
         self.pos += 1;
         Ok(v)
     }
 
-    fn u16(&mut self) -> Result<u16> {
+    pub(crate) fn u16(&mut self) -> Result<u16> {
         self.need(2)?;
         let v = u16::from_le_bytes(
             self.buf[self.pos..self.pos + 2].try_into().unwrap(),
@@ -125,7 +131,7 @@ impl<'a> Reader<'a> {
         Ok(v)
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         self.need(4)?;
         let v = u32::from_le_bytes(
             self.buf[self.pos..self.pos + 4].try_into().unwrap(),
@@ -134,7 +140,7 @@ impl<'a> Reader<'a> {
         Ok(v)
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         self.need(8)?;
         let v = u64::from_le_bytes(
             self.buf[self.pos..self.pos + 8].try_into().unwrap(),
@@ -143,7 +149,7 @@ impl<'a> Reader<'a> {
         Ok(v)
     }
 
-    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
         self.need(n)?;
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
@@ -153,7 +159,7 @@ impl<'a> Reader<'a> {
 
 /// Deserialise a table from a wire buffer.
 pub fn deserialize_table(buf: &[u8]) -> Result<Table> {
-    let mut r = Reader { buf, pos: 0 };
+    let mut r = Reader::new(buf);
     if r.u32()? != MAGIC {
         return Err(RylonError::parse("bad wire magic"));
     }

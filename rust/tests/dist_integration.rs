@@ -437,6 +437,10 @@ fn single_pass_ingest_parse_errors_fail_all_ranks_cleanly() {
         )
     });
     assert!(r.is_err(), "ragged record must fail the job");
+    // The failure poisons the cluster (docs/FAULTS.md); clear it to
+    // run the next job.
+    assert!(cluster.fault().is_some());
+    cluster.clear_fault();
     // Same job again in two-pass mode errors too.
     let r2: rylon::Result<Vec<Table>> = cluster.run(|ctx| {
         read_csv_partition_with(
@@ -448,6 +452,7 @@ fn single_pass_ingest_parse_errors_fail_all_ranks_cleanly() {
         )
     });
     assert!(r2.is_err());
+    cluster.clear_fault();
     // The fabric and pools survive the aborted jobs.
     let ok = cluster.run(|ctx| Ok(ctx.rank)).unwrap();
     assert_eq!(ok, vec![0, 1, 2]);

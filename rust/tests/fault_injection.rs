@@ -1,0 +1,398 @@
+//! The fault-domain matrix (`docs/FAULTS.md`): inject `error` / `panic`
+//! faults at exact `(rank, exchange)` coordinates under every `dist_*`
+//! collective and assert the cluster-wide abort contract —
+//!
+//! * **symmetry**: every rank's job returns `Err`, and every rank that
+//!   observes an attributed abort names the *same* (rank, op, step);
+//! * **no deadlocks**: every run is bounded by a collective timeout, so
+//!   a stranded rank fails the test instead of hanging it;
+//! * **poisoning**: after an abort the cluster fails fast until
+//!   `clear_fault`, then runs jobs again;
+//! * **transparency**: with no fault plan (or one that never fires) the
+//!   checked layer changes nothing — results are bit-identical and the
+//!   abort counters stay zero.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::sync::Once;
+
+use rylon::dist::{
+    dist_groupby, dist_join, dist_sort, read_csv_partition_with,
+    rebalance, shuffle, Cluster, DistConfig, IngestMode, RankCtx,
+};
+use rylon::io::csv::CsvOptions;
+use rylon::io::datagen::{gen_partition, DataGenSpec};
+use rylon::net::CostModel;
+use rylon::ops::groupby::{Agg, GroupByOptions};
+use rylon::ops::join::JoinOptions;
+use rylon::ops::orderby::SortKey;
+
+/// Generous deadlock bound: no healthy run here takes seconds, so a
+/// rank parked forever fails its test instead of hanging CI.
+const TIMEOUT_MS: u64 = 20_000;
+
+/// Silence the default panic-hook backtrace for panics the plan
+/// injects on purpose (they are caught and routed into the fault
+/// domain); everything else keeps the normal hook.
+fn quiet_injected_panics() {
+    static INIT: Once = Once::new();
+    INIT.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<&'static str>()
+                .copied()
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<String>()
+                        .map(String::as_str)
+                })
+                .unwrap_or("");
+            if !msg.starts_with("injected panic") {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// One CSV all ingest legs share.
+fn csv_fixture(dir_name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(dir_name);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("data.csv");
+    let mut data = String::from("id,v\n");
+    for i in 0..120 {
+        data.push_str(&format!("{i},{}\n", i * 3));
+    }
+    std::fs::write(&path, data).unwrap();
+    path
+}
+
+#[derive(Clone, Copy)]
+enum Op {
+    Shuffle,
+    Rebalance,
+    Join,
+    Sort,
+    GroupBy,
+    Ingest,
+}
+
+const OPS: [(Op, &str); 6] = [
+    (Op::Shuffle, "shuffle"),
+    (Op::Rebalance, "rebalance"),
+    (Op::Join, "dist_join"),
+    (Op::Sort, "dist_sort"),
+    (Op::GroupBy, "dist_groupby"),
+    (Op::Ingest, "ingest"),
+];
+
+/// Run one collective-bearing job on this rank.
+fn exercise(op: Op, ctx: &mut RankCtx, csv: &Path) -> rylon::Result<()> {
+    let spec = DataGenSpec::paper_scaling(240, 7);
+    match op {
+        Op::Shuffle => {
+            let t = gen_partition(&spec, ctx.rank, ctx.size)?;
+            shuffle(ctx, &t, &["id".to_string()])?;
+        }
+        Op::Rebalance => {
+            let t = gen_partition(&spec, ctx.rank, ctx.size)?;
+            // Skew the partition so rows actually move.
+            let t = t.slice(0, if ctx.rank == 0 { t.num_rows() } else { 5 });
+            rebalance(ctx, &t)?;
+        }
+        Op::Join => {
+            let l = gen_partition(&spec, ctx.rank, ctx.size)?;
+            let r = gen_partition(
+                &DataGenSpec::paper_scaling(240, 8),
+                ctx.rank,
+                ctx.size,
+            )?;
+            dist_join(ctx, &l, &r, &JoinOptions::inner("id", "id"))?;
+        }
+        Op::Sort => {
+            let t = gen_partition(&spec, ctx.rank, ctx.size)?;
+            dist_sort(ctx, &t, &[SortKey::asc("id")])?;
+        }
+        Op::GroupBy => {
+            let t = gen_partition(&spec, ctx.rank, ctx.size)?;
+            dist_groupby(
+                ctx,
+                &t,
+                &GroupByOptions::new(&["id"], vec![Agg::sum("d0")]),
+            )?;
+        }
+        Op::Ingest => {
+            read_csv_partition_with(
+                ctx,
+                csv,
+                &CsvOptions::default(),
+                IngestMode::SinglePass,
+                None,
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// What one rank observed when its job failed.
+#[derive(Clone)]
+struct Obs {
+    /// `(rank, op, step)` when the error carried abort attribution.
+    attr: Option<(usize, String, u64)>,
+    msg: String,
+}
+
+/// The matrix: `kind` × op × world × rank × injection exchange. Every
+/// firing injection must abort every rank with identical attribution;
+/// coordinates the job never reaches must leave it untouched.
+fn fault_matrix(kind: &str) {
+    quiet_injected_panics();
+    let csv = csv_fixture(&format!("rylon_fault_matrix_{kind}"));
+    for &(op, name) in &OPS {
+        for world in [2usize, 4] {
+            for inj_rank in [0, world - 1] {
+                for exchange in 0..3u64 {
+                    let plan = format!("{kind}@{inj_rank}:{exchange}");
+                    let label =
+                        format!("{name} world={world} plan={plan}");
+                    let cluster = Cluster::new(
+                        DistConfig::threads(world)
+                            .with_intra_op_threads(1)
+                            .with_fault_plan(plan.as_str())
+                            .with_collective_timeout_ms(TIMEOUT_MS),
+                    )
+                    .unwrap();
+                    let slots: Vec<Mutex<Option<Obs>>> =
+                        (0..world).map(|_| Mutex::new(None)).collect();
+                    let r = cluster.run(|ctx| {
+                        let out = exercise(op, ctx, &csv);
+                        if let Err(e) = &out {
+                            *slots[ctx.rank].lock().unwrap() = Some(Obs {
+                                attr: e.abort_info().map(|i| {
+                                    (i.rank, i.op.clone(), i.step)
+                                }),
+                                msg: e.to_string(),
+                            });
+                        }
+                        out
+                    });
+                    if cluster.injected_faults() == 0 {
+                        // The job finished before reaching the injection
+                        // coordinates — it must have run clean.
+                        assert!(
+                            r.is_ok(),
+                            "{label}: plan never fired yet job failed: {}",
+                            r.err().map(|e| e.to_string()).unwrap_or_default()
+                        );
+                        assert_eq!(
+                            cluster.aborted_collectives(),
+                            0,
+                            "{label}: aborts counted without a fault"
+                        );
+                        continue;
+                    }
+                    // The injection fired: symmetric, attributed abort.
+                    let e = r.expect_err(&format!(
+                        "{label}: fault fired but the job succeeded"
+                    ));
+                    let info = e.abort_info().unwrap_or_else(|| {
+                        panic!("{label}: unattributed job error: {e}")
+                    });
+                    assert_eq!(
+                        info.rank, inj_rank,
+                        "{label}: wrong rank attributed ({e})"
+                    );
+                    let observed: Vec<Obs> = slots
+                        .iter()
+                        .filter_map(|s| s.lock().unwrap().clone())
+                        .collect();
+                    // A rank may observe the raw injected error (the
+                    // injected rank itself, before its wrapper re-wraps
+                    // it); everyone else must see the attributed abort.
+                    for o in &observed {
+                        if o.attr.is_none() {
+                            assert!(
+                                o.msg.contains("injected"),
+                                "{label}: unattributed non-injection \
+                                 error: {}",
+                                o.msg
+                            );
+                        }
+                    }
+                    let attrs: Vec<(usize, String, u64)> = observed
+                        .into_iter()
+                        .filter_map(|o| o.attr)
+                        .collect();
+                    for a in &attrs {
+                        assert_eq!(
+                            a,
+                            &attrs[0],
+                            "{label}: ranks disagree on attribution"
+                        );
+                        assert_eq!(a.0, inj_rank, "{label}");
+                    }
+                    // The fault poisons the cluster: fail fast, then
+                    // clear and run again.
+                    let fault = cluster
+                        .fault()
+                        .unwrap_or_else(|| panic!("{label}: not poisoned"));
+                    assert_eq!(fault.rank, inj_rank, "{label}");
+                    let again: rylon::Result<Vec<()>> =
+                        cluster.run(|_| Ok(()));
+                    assert!(
+                        again.is_err(),
+                        "{label}: poisoned cluster ran a job"
+                    );
+                    assert!(
+                        cluster.aborted_collectives() >= 1,
+                        "{label}: abort not counted"
+                    );
+                    cluster.clear_fault();
+                    assert!(cluster.fault().is_none(), "{label}");
+                    let ok = cluster.run(|ctx| {
+                        ctx.allgather(vec![ctx.rank as u8]).map(drop)
+                    });
+                    assert!(
+                        ok.is_ok(),
+                        "{label}: cluster unserviceable after clear_fault"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn error_injection_matrix() {
+    fault_matrix("error");
+}
+
+#[test]
+fn panic_injection_matrix() {
+    fault_matrix("panic");
+}
+
+#[test]
+fn delay_plus_timeout_attributes_the_laggard() {
+    // Rank 1 stalls 400 ms before its second exchange; the 60 ms
+    // collective timeout must convert rank 0's eternal park into a
+    // symmetric abort blaming rank 1.
+    let cluster = Cluster::new(
+        DistConfig::threads(2)
+            .with_intra_op_threads(1)
+            .with_fault_plan("delay400@1:1")
+            .with_collective_timeout_ms(60),
+    )
+    .unwrap();
+    let r: rylon::Result<Vec<()>> = cluster.run(|ctx| {
+        for _ in 0..3 {
+            ctx.allgather(vec![ctx.rank as u8])?;
+        }
+        Ok(())
+    });
+    let e = r.unwrap_err();
+    let info = e.abort_info().expect("attributed timeout");
+    assert_eq!(info.rank, 1, "laggard rank blamed: {e}");
+    assert!(e.to_string().contains("timed out"), "{e}");
+    assert_eq!(cluster.injected_faults(), 1);
+    assert!(cluster.aborted_collectives() >= 1);
+}
+
+#[test]
+fn sim_fabric_joins_the_fault_domain() {
+    // Injection and symmetric abort work identically over the BSP
+    // simulator fabric.
+    let cluster = Cluster::new(
+        DistConfig::sim(3, CostModel::default())
+            .with_fault_plan("error@2:0")
+            .with_collective_timeout_ms(TIMEOUT_MS),
+    )
+    .unwrap();
+    let r: rylon::Result<Vec<()>> =
+        cluster.run(|ctx| ctx.allgather(vec![1]).map(drop));
+    let e = r.unwrap_err();
+    let info = e.abort_info().expect("attributed abort on sim fabric");
+    assert_eq!(info.rank, 2);
+    assert_eq!(cluster.injected_faults(), 1);
+    cluster.clear_fault();
+    let ok: rylon::Result<Vec<()>> =
+        cluster.run(|ctx| ctx.allgather(vec![2]).map(drop));
+    assert!(ok.is_ok(), "sim cluster unserviceable after clear");
+}
+
+#[test]
+fn no_fault_plan_is_bit_identical_through_the_checked_layer() {
+    // The verdict layer is always on; with no firing plan it must be
+    // invisible: same results, zero aborts, zero injections. The
+    // explicit empty plan also overrides any FAULT_PLAN env default, so
+    // this leg is stable under the CI fault matrix.
+    let run_sort = |plan: &str| {
+        let cluster = Cluster::new(
+            DistConfig::threads(3)
+                .with_intra_op_threads(1)
+                .with_fault_plan(plan)
+                .with_collective_timeout_ms(TIMEOUT_MS),
+        )
+        .unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let t = gen_partition(
+                    &DataGenSpec::paper_scaling(300, 11),
+                    ctx.rank,
+                    ctx.size,
+                )?;
+                dist_sort(ctx, &t, &[SortKey::asc("id")])
+            })
+            .unwrap();
+        assert_eq!(cluster.aborted_collectives(), 0);
+        assert_eq!(cluster.injected_faults(), 0);
+        outs
+    };
+    let baseline = run_sort("");
+    // A plan whose rank is outside the world never fires.
+    let shadowed = run_sort("error@7:0");
+    assert_eq!(baseline.len(), shadowed.len());
+    for (a, b) in baseline.iter().zip(&shadowed) {
+        assert_eq!(a, b, "never-firing plan changed results");
+    }
+}
+
+#[test]
+fn bad_fault_plans_are_rejected_at_cluster_build() {
+    for bad in ["explode@1:1", "error@x:1", "delay@0:0"] {
+        let r = Cluster::new(
+            DistConfig::threads(2).with_fault_plan(bad),
+        );
+        assert!(r.is_err(), "accepted malformed plan '{bad}'");
+    }
+}
+
+#[test]
+fn env_fault_plan_reaches_default_clusters() {
+    // Under the CI fault leg (FAULT_PLAN set), a cluster built with no
+    // explicit plan inherits the env plan; without the env var the
+    // default cluster must be fault-free. Either way: no deadlocks.
+    quiet_injected_panics();
+    let plan = rylon::exec::default_fault_plan();
+    let cluster = Cluster::new(
+        DistConfig::threads(2)
+            .with_intra_op_threads(1)
+            .with_collective_timeout_ms(TIMEOUT_MS),
+    )
+    .unwrap();
+    let r: rylon::Result<Vec<()>> = cluster.run(|ctx| {
+        for _ in 0..4 {
+            ctx.allgather(vec![ctx.rank as u8])?;
+        }
+        Ok(())
+    });
+    if plan.is_empty() || cluster.injected_faults() == 0 {
+        assert!(r.is_ok(), "no fault fired yet the job failed");
+        assert_eq!(cluster.aborted_collectives(), 0);
+    } else {
+        let e = r.expect_err("env plan fired but the job succeeded");
+        assert!(e.abort_info().is_some(), "unattributed env fault: {e}");
+    }
+}
