@@ -9,7 +9,16 @@
 //! (`speedup_steal_vs_isolated` + per-op steal counts in the JSON),
 //! asserting bit-identical outputs between the two schedulers first.
 //!
-//! A third **fault-layer arm** times the same rendezvous storm
+//! A third **fused-pipeline arm** runs one select→project→probe→
+//! partial-agg chain through the fused morsel executor and through
+//! the operator-at-a-time executor (`[exec] pipeline_fuse` on/off,
+//! see `docs/PIPELINE.md`), asserts the outputs bit-identical, and
+//! reports `speedup_fused_vs_materialized` per thread count plus the
+//! intermediate `Table` bytes fusion never allocates
+//! (`intermediate_bytes_avoided`) under a `fused_pipeline` JSON key.
+//! Target: ≥1.2× at 4 threads.
+//!
+//! A fourth **fault-layer arm** times the same rendezvous storm
 //! through a raw `LocalFabric` and through `CheckedFabric` (the
 //! per-rank Ok/Err verdict every collective now carries, see
 //! `docs/FAULTS.md`), reporting per-exchange µs and the verdict
@@ -29,7 +38,7 @@ use rylon::exec;
 use rylon::net::checked::CheckedFabric;
 use rylon::net::local::LocalFabric;
 use rylon::net::FabricRef;
-use rylon::io::datagen::{gen_table, DataGenSpec};
+use rylon::io::datagen::{gen_table, DataGenSpec, KeyDist};
 use rylon::ops::groupby::{groupby, Agg, GroupByOptions};
 use rylon::ops::join::{join, JoinAlgo, JoinOptions};
 use rylon::ops::orderby::{orderby, SortKey};
@@ -294,6 +303,121 @@ fn main() {
         total_steals,
     ));
 
+    // ---- Fused-pipeline arm: one pass per morsel vs a Table per op ----
+    //
+    // The same chain (filter → project → hash probe → partial agg) run
+    // by the fused executor — every morsel flows through the whole
+    // segment in one pass, no intermediate `Table` between stages —
+    // and by the operator-at-a-time oracle. The outputs must be
+    // bit-identical before either timing counts; the bytes the oracle
+    // spends on intermediates are what fusion never allocates.
+    use std::collections::HashMap;
+    use rylon::pipeline::Pipeline;
+
+    let dim_rows = (rows / 8).max(1);
+    let dim_base = gen_table(&DataGenSpec {
+        rows: dim_rows,
+        payload_cols: 1,
+        key_dist: KeyDist::Sequential,
+        seed: 9,
+    })
+    .unwrap();
+    let dim = Table::from_columns(vec![
+        (
+            "id",
+            Column::from_i64(
+                dim_base.column_by_name("id").unwrap().i64_values().to_vec(),
+            ),
+        ),
+        (
+            "w",
+            Column::from_f64(
+                dim_base.column_by_name("d0").unwrap().f64_values().to_vec(),
+            ),
+        ),
+    ])
+    .unwrap();
+    let fuse_jopts = JoinOptions::inner("id", "id").with_algo(JoinAlgo::Hash);
+    let fuse_pipe = Pipeline::new()
+        .select("d0 > 0")
+        .unwrap()
+        .project(&["id", "d1"])
+        .join("dim", fuse_jopts.clone())
+        .groupby(GroupByOptions::new(
+            &["id"],
+            vec![Agg::sum("d1"), Agg::mean("w"), Agg::count("d1")],
+        ));
+    let mut fuse_env: HashMap<String, Table> = HashMap::new();
+    fuse_env.insert("dim".to_string(), dim.clone());
+    // Intermediate tables the materialized path allocates and fusion
+    // skips (sizes are thread-invariant, so measured once, serially).
+    let intermediate_bytes = exec::with_intra_op_threads(1, || {
+        let sel = select(&a, &pred).unwrap();
+        let proj = rylon::ops::project(&sel, &["id", "d1"]).unwrap();
+        let joined = join(&proj, &dim, &fuse_jopts).unwrap();
+        sel.byte_size() + proj.byte_size() + joined.byte_size()
+    });
+    println!(
+        "fused-pipeline arm: {rows}×{dim_rows} rows, {:.1} MiB of \
+         intermediates fused away",
+        intermediate_bytes as f64 / (1024.0 * 1024.0)
+    );
+    let fuse_reference = exec::with_intra_op_threads(1, || {
+        exec::with_pipeline_fuse(false, || {
+            fuse_pipe.run_local(&a, &fuse_env).unwrap().0
+        })
+    });
+    let mut fuse_samples: Vec<(usize, f64, f64)> = Vec::new();
+    for &t in &threads_sweep {
+        let run_mode = |fuse: bool| -> (Table, f64) {
+            let out = exec::with_intra_op_threads(t, || {
+                exec::with_pipeline_fuse(fuse, || {
+                    fuse_pipe.run_local(&a, &fuse_env).unwrap().0
+                })
+            });
+            let stats = exec::with_intra_op_threads(t, || {
+                exec::with_pipeline_fuse(fuse, || {
+                    measure(opts, || {
+                        std::hint::black_box(
+                            fuse_pipe
+                                .run_local(&a, &fuse_env)
+                                .unwrap()
+                                .0
+                                .num_rows(),
+                        );
+                    })
+                })
+            });
+            (out, stats.median)
+        };
+        let (fused_out, fused_med) = run_mode(true);
+        let (mat_out, mat_med) = run_mode(false);
+        assert_eq!(
+            fused_out, fuse_reference,
+            "fused pipeline diverged from serial oracle at {t} threads"
+        );
+        assert_eq!(
+            mat_out, fuse_reference,
+            "materialized pipeline diverged from serial at {t} threads"
+        );
+        let speedup = mat_med / fused_med.max(1e-12);
+        report.add_with(
+            "fused_pipeline",
+            t as f64,
+            fused_med,
+            vec![
+                ("seconds_materialized".to_string(), mat_med),
+                ("speedup_fused_vs_materialized".to_string(), speedup),
+            ],
+        );
+        let target = if t == 4 { "  [target ≥1.20x]" } else { "" };
+        println!(
+            "  fused_pipeline t={t}: fused {fused_med:>8.4}s  \
+             materialized {mat_med:>8.4}s  ({speedup:.2}x){target}"
+        );
+        fuse_samples.push((t, fused_med, mat_med));
+    }
+
     // ---- Fault-layer arm: what does the per-rank verdict cost? ----
     //
     // Every collective now carries a trailing Ok/Err verdict byte per
@@ -407,6 +531,41 @@ fn main() {
                                     (
                                         "stolen_tasks_per_run",
                                         Json::num(*steals as f64),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "fused_pipeline",
+            Json::obj(vec![
+                ("fact_rows", Json::num(rows as f64)),
+                ("dim_rows", Json::num(dim_rows as f64)),
+                (
+                    "intermediate_bytes_avoided",
+                    Json::num(intermediate_bytes as f64),
+                ),
+                (
+                    "results",
+                    Json::Arr(
+                        fuse_samples
+                            .iter()
+                            .map(|(t, fused, mat)| {
+                                Json::obj(vec![
+                                    ("threads", Json::num(*t as f64)),
+                                    ("seconds_fused", Json::num(*fused)),
+                                    (
+                                        "seconds_materialized",
+                                        Json::num(*mat),
+                                    ),
+                                    (
+                                        "speedup_fused_vs_materialized",
+                                        Json::num(
+                                            *mat / fused.max(1e-12),
+                                        ),
                                     ),
                                 ])
                             })

@@ -53,10 +53,10 @@ pub fn take_parallel(
 /// parallel budget no layout falls back to serial above the row
 /// threshold: fixed-width values gather into disjoint output ranges,
 /// validity bitmaps gather word-aligned ranges, and string payloads
-/// land via byte-length prefix sums. (On a serial-budget steal-linked
-/// rank the value/string passes queue steal-eligible morsels while
-/// validity bitmaps — 1/64th of the value bytes — stay inline; see the
-/// ROADMAP note on steal-aware split widths.)
+/// land via byte-length prefix sums. All passes split
+/// [`exec::split_width`]-wide, so a serial-budget steal-linked rank
+/// queues claimable ranges (including the bitmap pass) instead of
+/// running one serial slab.
 pub fn take_column_parallel(
     col: &Column,
     indices: &[usize],
@@ -111,13 +111,14 @@ fn take_bitmap_parallel(
 ) -> Bitmap {
     let n = indices.len();
     let nwords = n.div_ceil(64);
-    if !exec.is_parallel() || nwords <= 1 {
+    let width = exec::split_width(exec);
+    if !exec::morsel_parallel(exec) || width <= 1 || nwords <= 1 {
         return src.take(indices);
     }
     let mut out = Bitmap::zeros(n);
     let ptr = SendPtr(out.words_mut().as_mut_ptr());
-    let word_ranges = exec::split_even(nwords, exec.threads());
-    exec::map_parallel(word_ranges, |wr| {
+    let word_ranges = exec::split_even(nwords, width);
+    exec::map_parallel_budgeted(word_ranges, |wr| {
         for w in wr.range() {
             let lo = w * 64;
             let hi = (lo + 64).min(n);

@@ -78,6 +78,12 @@ impl HashChains {
     /// resulting `next` chains and per-hash bucket contents are
     /// bit-identical to [`HashChains::build`]; only the (unobservable)
     /// heads-map memory layout differs.
+    ///
+    /// The partition count is sized by [`exec::split_width`] — the
+    /// steal group's capacity, not just the local budget — so a rank
+    /// with `intra_op_threads = 1` whose pool is steal-linked to idle
+    /// siblings still cuts the build into widths they can help with
+    /// (partition count never changes the chains, so this is free).
     pub fn build_parallel<F>(
         hashes: &[u64],
         skip: F,
@@ -86,7 +92,7 @@ impl HashChains {
     where
         F: Fn(usize) -> bool + Sync,
     {
-        let nparts = exec.threads();
+        let nparts = exec::split_width(exec);
         if nparts <= 1 || hashes.len() < exec::par_row_threshold() {
             return Self::build(hashes, skip);
         }
@@ -273,6 +279,25 @@ pub fn hash_bytes(bytes: &[u8]) -> u64 {
 
 const NULL_SENTINEL: u64 = 0x6E75_6C6C_6E75_6C6C; // "nullnull"
 
+/// The hash of a null cell — what [`hash_cell`] returns for an invalid
+/// row. Exposed so the fused pipeline can hash the null-extended cells
+/// of a left join (right row id `-1`) without materializing them.
+#[inline]
+pub(crate) fn hash_null() -> u64 {
+    splitmix64(NULL_SENTINEL)
+}
+
+/// boost-style hash_combine — the multi-key fold step shared by
+/// [`hash_columns`], [`hash_rows`] and the fused pipeline's entry
+/// hashing (all three must agree bit-for-bit).
+#[inline]
+pub(crate) fn hash_combine(h: u64, c: u64) -> u64 {
+    h ^ c
+        .wrapping_add(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(h << 6)
+        .wrapping_add(h >> 2)
+}
+
 /// Hash one row of one column.
 #[inline]
 pub fn hash_cell(col: &Column, row: usize) -> u64 {
@@ -342,12 +367,31 @@ fn hash_range_into(cols: &[&Column], start: usize, dst: &mut [u64]) {
     }
     for col in &cols[1..] {
         for (k, h) in dst.iter_mut().enumerate() {
-            let c = hash_cell(col, start + k);
-            // hash_combine: h ^= c + golden + (h<<6) + (h>>2)
-            *h ^= c
-                .wrapping_add(0x9E37_79B9_7F4A_7C15)
-                .wrapping_add(*h << 6)
-                .wrapping_add(*h >> 2);
+            *h = hash_combine(*h, hash_cell(col, start + k));
+        }
+    }
+}
+
+/// Combined hash ([`hash_columns`] arithmetic) over an explicit row
+/// list: `out[k]` is the key hash of row `rows[k]`, cell-identical to
+/// what [`hash_columns`] puts at that row — so a fused probe that
+/// hashes only the rows surviving earlier stages sees exactly the
+/// hashes the materialized path would have computed after a gather.
+pub(crate) fn hash_rows(
+    cols: &[&Column],
+    rows: &[usize],
+    out: &mut Vec<u64>,
+) {
+    out.clear();
+    if cols.is_empty() {
+        out.resize(rows.len(), splitmix64(0));
+        return;
+    }
+    out.reserve(rows.len());
+    out.extend(rows.iter().map(|&r| hash_cell(cols[0], r)));
+    for col in &cols[1..] {
+        for (h, &r) in out.iter_mut().zip(rows) {
+            *h = hash_combine(*h, hash_cell(col, r));
         }
     }
 }
@@ -505,6 +549,31 @@ mod tests {
             }
             assert!(seen.iter().all(|&s| s), "nparts={nparts}");
         }
+    }
+
+    #[test]
+    fn hash_rows_matches_hash_columns_gather() {
+        let n = 257;
+        let a = Column::from_opt_i64(
+            (0..n as i64)
+                .map(|i| if i % 11 == 0 { None } else { Some(i % 37) })
+                .collect(),
+        );
+        let strings: Vec<String> =
+            (0..n).map(|i| format!("s{}", i % 13)).collect();
+        let refs: Vec<&str> = strings.iter().map(String::as_str).collect();
+        let b = Column::from_str(&refs);
+        let mut full = Vec::new();
+        hash_columns(&[&a, &b], n, &mut full);
+        let rows: Vec<usize> = (0..n).filter(|i| i % 3 != 0).collect();
+        let mut sub = Vec::new();
+        hash_rows(&[&a, &b], &rows, &mut sub);
+        let expect: Vec<u64> = rows.iter().map(|&r| full[r]).collect();
+        assert_eq!(sub, expect);
+        // Empty key list mirrors hash_columns' constant fill.
+        hash_rows(&[], &rows, &mut sub);
+        assert!(sub.iter().all(|&h| h == splitmix64(0)));
+        assert_eq!(sub.len(), rows.len());
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //!   comparator), used for strings/mixed keys and orderby.
 
 use std::cmp::Ordering;
+use std::mem::{ManuallyDrop, MaybeUninit};
 
 use crate::column::Column;
 use crate::exec::{self, ExecContext};
@@ -139,13 +140,16 @@ where
 /// merge of `a` and `b` (ties take `a`) straight into `dst`. Chunks
 /// computed at the same split points tile exactly the full stable
 /// merge, so disjoint `dst` sub-slices of one output buffer need no
-/// post-pass concatenation (each element is written once).
+/// post-pass concatenation (each element is written once). `dst` is
+/// uninitialized storage — this function writes every element of it
+/// and reads none (the contract [`merge_runs_stable_by`]'s
+/// `assume_init` step relies on).
 fn merge_path_chunk_into<T, F>(
     a: &[T],
     b: &[T],
     out_lo: usize,
     take_right: &F,
-    dst: &mut [T],
+    dst: &mut [MaybeUninit<T>],
 ) where
     T: Copy,
     F: Fn(&T, &T) -> bool,
@@ -157,17 +161,36 @@ fn merge_path_chunk_into<T, F>(
     let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
     while i < a.len() && j < b.len() {
         if take_right(&b[j], &a[i]) {
-            dst[k] = b[j];
+            dst[k] = MaybeUninit::new(b[j]);
             j += 1;
         } else {
-            dst[k] = a[i];
+            dst[k] = MaybeUninit::new(a[i]);
             i += 1;
         }
         k += 1;
     }
-    dst[k..k + (a.len() - i)].copy_from_slice(&a[i..]);
-    let k = k + (a.len() - i);
-    dst[k..].copy_from_slice(&b[j..]);
+    for &x in &a[i..] {
+        dst[k] = MaybeUninit::new(x);
+        k += 1;
+    }
+    for &x in &b[j..] {
+        dst[k] = MaybeUninit::new(x);
+        k += 1;
+    }
+}
+
+/// Reinterpret a fully initialized `Vec<MaybeUninit<T>>` as `Vec<T>`.
+///
+/// # Safety
+///
+/// Every element must have been initialized. `MaybeUninit<T>` has the
+/// same size and alignment as `T`, so the raw parts carry over as-is.
+unsafe fn assume_init_vec<T>(v: Vec<MaybeUninit<T>>) -> Vec<T> {
+    let mut v = ManuallyDrop::new(v);
+    let (ptr, len, cap) = (v.as_mut_ptr(), v.len(), v.capacity());
+    // SAFETY: same allocation, same layout, all elements initialized
+    // (caller contract).
+    unsafe { Vec::from_raw_parts(ptr as *mut T, len, cap) }
 }
 
 /// Pairwise stable merge of adjacent sorted runs until one remains.
@@ -183,7 +206,7 @@ fn merge_path_chunk_into<T, F>(
 /// serial stable sorts at any thread count and any chunk layout.
 fn merge_runs_stable_by<T, F>(mut runs: Vec<Vec<T>>, take_right: F) -> Vec<T>
 where
-    T: Copy + Default + Send + Sync,
+    T: Copy + Send + Sync,
     F: Fn(&T, &T) -> bool + Sync,
 {
     if runs.is_empty() {
@@ -199,15 +222,21 @@ where
                 None => carry = Some(a),
             }
         }
-        // The whole level as one batch of near-equal chunks, each
-        // task writing its disjoint sub-slice of the pair's
-        // preallocated output in place (one write per element; the
-        // chunks tile the output exactly, so no post-concatenation).
-        let mut outs: Vec<Vec<T>> = pairs
+        // The whole level as one batch of near-equal chunks, each task
+        // writing its disjoint sub-slice of the pair's preallocated
+        // output in place. Buffers stay **uninitialized** — a merge
+        // level's output is all fresh writes, so the old `T::default()`
+        // fill was a full O(n) memset per level of pure overhead. The
+        // chunks tile each output exactly and every task writes every
+        // element of its sub-slice ([`merge_path_chunk_into`]'s
+        // contract), which is what makes the `assume_init_vec` below
+        // sound; the miri CI leg runs these merges to hold that claim.
+        let mut outs: Vec<Vec<MaybeUninit<T>>> = pairs
             .iter()
-            .map(|(a, b)| vec![T::default(); a.len() + b.len()])
+            .map(|(a, b)| vec![MaybeUninit::uninit(); a.len() + b.len()])
             .collect();
-        let mut tasks: Vec<(usize, usize, &mut [T])> = Vec::new();
+        let mut tasks: Vec<(usize, usize, &mut [MaybeUninit<T>])> =
+            Vec::new();
         for ((p, (a, b)), out) in
             pairs.iter().enumerate().zip(outs.iter_mut())
         {
@@ -219,7 +248,7 @@ where
                 .div_ceil(MERGE_CHUNK_ELEMS)
                 .max(if len >= 2 { 2 } else { 1 });
             let mut pos = 0usize;
-            let mut rest: &mut [T] = out.as_mut_slice();
+            let mut rest: &mut [MaybeUninit<T>] = out.as_mut_slice();
             for c in 0..chunks {
                 let hi = len * (c + 1) / chunks;
                 if hi == pos {
@@ -241,10 +270,18 @@ where
             let (a, b) = &pairs_ref[p];
             merge_path_chunk_into(a, b, lo, take_right_ref, dst);
         });
+        let mut next: Vec<Vec<T>> = outs
+            .into_iter()
+            // SAFETY: the chunk tasks tiled `[0, len)` exactly (the
+            // split loop advances `pos` to `len`) and the pool's
+            // completion barrier sequences their writes before this
+            // read, so every element is initialized.
+            .map(|out| unsafe { assume_init_vec(out) })
+            .collect();
         if let Some(c) = carry {
-            outs.push(c);
+            next.push(c);
         }
-        runs = outs;
+        runs = next;
     }
     runs.pop().unwrap()
 }
@@ -434,7 +471,8 @@ mod tests {
         expect.extend_from_slice(&b[j..]);
         let len = a.len() + b.len();
         for chunks in [1usize, 2, 3, 7, 64, len] {
-            let mut got = vec![(0u64, 0u32); len];
+            let mut got: Vec<MaybeUninit<(u64, u32)>> =
+                vec![MaybeUninit::uninit(); len];
             for c in 0..chunks {
                 let lo = len * c / chunks;
                 let hi = len * (c + 1) / chunks;
@@ -446,15 +484,22 @@ mod tests {
                     &mut got[lo..hi],
                 );
             }
+            // SAFETY: the chunk ranges tile [0, len) exactly, so every
+            // element was written above.
+            let got = unsafe { assume_init_vec(got) };
             assert_eq!(got, expect, "chunks={chunks}");
         }
         // Degenerate inputs: one empty run, and an empty output chunk.
-        let mut only_a = vec![(0u64, 0u32); a.len()];
+        let mut only_a: Vec<MaybeUninit<(u64, u32)>> =
+            vec![MaybeUninit::uninit(); a.len()];
         merge_path_chunk_into(&a, &[], 0, &take_right, &mut only_a);
-        assert_eq!(only_a, a);
-        let mut only_b = vec![(0u64, 0u32); b.len()];
+        // SAFETY: the full-range chunk writes every element.
+        assert_eq!(unsafe { assume_init_vec(only_a) }, a);
+        let mut only_b: Vec<MaybeUninit<(u64, u32)>> =
+            vec![MaybeUninit::uninit(); b.len()];
         merge_path_chunk_into(&[], &b, 0, &take_right, &mut only_b);
-        assert_eq!(only_b, b);
+        // SAFETY: the full-range chunk writes every element.
+        assert_eq!(unsafe { assume_init_vec(only_b) }, b);
         merge_path_chunk_into(&a, &b, 5, &take_right, &mut []);
     }
 

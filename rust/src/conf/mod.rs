@@ -182,6 +182,12 @@ pub struct RylonConfig {
     /// overridable via the `WORK_STEAL` env var); `false` keeps the
     /// isolated per-rank worker pools.
     pub work_steal: Option<bool>,
+    /// Fused pipeline execution (`[exec] pipeline_fuse`). `None` (key
+    /// absent) = the process default ([`crate::exec::PIPELINE_FUSE`],
+    /// overridable via the `PIPELINE_FUSE` env var); `false` forces
+    /// the operator-at-a-time executor (the CI oracle) that
+    /// materializes a full `Table` between every pipeline stage.
+    pub pipeline_fuse: Option<bool>,
     /// Deterministic fault-injection plan (`[exec] fault_plan`;
     /// grammar in [`crate::net::faulty::FaultPlan`], e.g.
     /// `"error@1:2, panic@0:0"`). `None` (key absent) = the process
@@ -209,6 +215,7 @@ impl Default for RylonConfig {
             ingest_chunk_bytes: 0,
             ingest_single_pass: None,
             work_steal: None,
+            pipeline_fuse: None,
             fault_plan: None,
             collective_timeout_ms: None,
             cost: CostModel::default(),
@@ -237,6 +244,7 @@ impl RylonConfig {
             // [exec] knob is numeric, and the env vars take 0/1 too.
             ingest_single_pass: opt_bool(f, "exec.ingest_single_pass"),
             work_steal: opt_bool(f, "exec.work_steal"),
+            pipeline_fuse: opt_bool(f, "exec.pipeline_fuse"),
             fault_plan: f
                 .get("exec.fault_plan")
                 .and_then(|v| v.as_str())
@@ -280,6 +288,7 @@ par_row_threshold = 512
 ingest_chunk_bytes = 65536
 ingest_single_pass = false
 work_steal = false
+pipeline_fuse = false
 fault_plan = "error@1:2"
 collective_timeout_ms = 30000
 
@@ -312,22 +321,26 @@ ranks_per_node = 8
         assert_eq!(c.ingest_chunk_bytes, 65536);
         assert_eq!(c.ingest_single_pass, Some(false));
         assert_eq!(c.work_steal, Some(false));
+        assert_eq!(c.pipeline_fuse, Some(false));
         assert_eq!(c.fault_plan.as_deref(), Some("error@1:2"));
         assert_eq!(c.collective_timeout_ms, Some(30000));
         // Keys absent = defer to the process defaults.
         let empty = RylonConfig::from_file(&ConfFile::parse("").unwrap());
         assert_eq!(empty.ingest_single_pass, None);
         assert_eq!(empty.work_steal, None);
+        assert_eq!(empty.pipeline_fuse, None);
         assert_eq!(empty.fault_plan, None);
         assert_eq!(empty.collective_timeout_ms, None);
         // Numeric 0/1 spellings work like the env vars'.
         let num = ConfFile::parse(
-            "[exec]\ningest_single_pass = 1\nwork_steal = 1",
+            "[exec]\ningest_single_pass = 1\nwork_steal = 1\n\
+             pipeline_fuse = 0",
         )
         .unwrap();
         let num = RylonConfig::from_file(&num);
         assert_eq!(num.ingest_single_pass, Some(true));
         assert_eq!(num.work_steal, Some(true));
+        assert_eq!(num.pipeline_fuse, Some(false));
         assert_eq!(c.cost.alpha, 1e-5);
         assert_eq!(c.cost.ranks_per_node, 8);
         // Untouched keys keep defaults.

@@ -111,6 +111,16 @@ pub struct DistConfig {
     /// off on the sim fabric, whose cost model meters compute with
     /// per-rank-thread CPU clocks that cross-rank workers would escape.
     pub work_steal: Option<bool>,
+    /// Fused pipeline execution (`[exec] pipeline_fuse`): rank-local
+    /// stage chains in [`crate::pipeline::Pipeline::run_dist`] run as
+    /// fused segments (one pass per morsel, no intermediate `Table`
+    /// between fused stages) instead of operator-at-a-time. `None` =
+    /// the process default ([`crate::exec::PIPELINE_FUSE`], overridable
+    /// via the `PIPELINE_FUSE` env var); `Some(false)` forces the
+    /// materializing executor. Bit-identical either way — fusion moves
+    /// work between morsels, never changes per-row arithmetic or merge
+    /// order.
+    pub pipeline_fuse: Option<bool>,
     /// Deterministic fault-injection plan (`[exec] fault_plan`;
     /// grammar in [`crate::net::faulty::FaultPlan`]). `None` = the
     /// process default (empty unless the `FAULT_PLAN` env var is set);
@@ -137,6 +147,7 @@ impl Default for DistConfig {
             ingest_chunk_bytes: 0,
             ingest_single_pass: None,
             work_steal: None,
+            pipeline_fuse: None,
             fault_plan: None,
             collective_timeout_ms: None,
         }
@@ -194,6 +205,13 @@ impl DistConfig {
     /// [`DistConfig::work_steal`]).
     pub fn with_work_steal(mut self, on: bool) -> DistConfig {
         self.work_steal = Some(on);
+        self
+    }
+
+    /// Force fused pipeline execution on (`true`) or off (`false`, the
+    /// operator-at-a-time oracle).
+    pub fn with_pipeline_fuse(mut self, on: bool) -> DistConfig {
+        self.pipeline_fuse = Some(on);
         self
     }
 
@@ -312,6 +330,7 @@ pub struct Cluster {
     ingest_chunk_bytes: usize,
     ingest_single_pass: bool,
     work_steal: bool,
+    pipeline_fuse: bool,
     collective_timeout_ms: u64,
     /// The outermost fabric every collective goes through: the checked
     /// verdict layer over (optionally) the fault injector over the
@@ -411,6 +430,9 @@ impl Cluster {
                 cfg.ingest_single_pass,
             ),
             work_steal,
+            pipeline_fuse: crate::exec::resolve_pipeline_fuse(
+                cfg.pipeline_fuse,
+            ),
             collective_timeout_ms,
             fabric,
             checked,
@@ -435,6 +457,12 @@ impl Cluster {
     /// at world 1).
     pub fn work_steal(&self) -> bool {
         self.work_steal
+    }
+
+    /// Whether rank-local pipeline chains run fused segments (the
+    /// resolved `[exec] pipeline_fuse` knob).
+    pub fn pipeline_fuse(&self) -> bool {
+        self.pipeline_fuse
     }
 
     /// Total morsel tasks executed by a rank's worker on a **sibling**
@@ -477,6 +505,7 @@ impl Cluster {
                     let ingest_chunk = self.ingest_chunk_bytes;
                     let single_pass = self.ingest_single_pass;
                     let steal = self.work_steal;
+                    let fuse = self.pipeline_fuse;
                     let pool = Arc::clone(&self.pools[rank]);
                     s.spawn(move || {
                         // The rank thread's intra-op budget: local
@@ -487,6 +516,7 @@ impl Cluster {
                         crate::exec::set_ingest_chunk_bytes(ingest_chunk);
                         crate::exec::set_ingest_single_pass(single_pass);
                         crate::exec::set_work_steal(steal);
+                        crate::exec::set_pipeline_fuse(fuse);
                         crate::exec::install_thread_pool(pool);
                         let mut ctx = RankCtx {
                             rank,
@@ -760,6 +790,56 @@ mod tests {
         )
         .unwrap();
         assert!(!sim.work_steal(), "sim metering excludes stealing");
+    }
+
+    #[test]
+    fn pipeline_fuse_resolves_and_reaches_rank_threads() {
+        let off = Cluster::new(
+            DistConfig::threads(2).with_pipeline_fuse(false),
+        )
+        .unwrap();
+        assert!(!off.pipeline_fuse());
+        let outs = off.run(|_| Ok(crate::exec::pipeline_fuse())).unwrap();
+        assert_eq!(outs, vec![false, false]);
+        let on = Cluster::new(
+            DistConfig::threads(2).with_pipeline_fuse(true),
+        )
+        .unwrap();
+        assert!(on.pipeline_fuse());
+        let outs = on.run(|_| Ok(crate::exec::pipeline_fuse())).unwrap();
+        assert_eq!(outs, vec![true, true]);
+        // None resolves to the process default on every rank.
+        let def = Cluster::new(DistConfig::threads(2)).unwrap();
+        let outs = def.run(|_| Ok(crate::exec::pipeline_fuse())).unwrap();
+        let d = crate::exec::default_pipeline_fuse();
+        assert_eq!(outs, vec![d, d]);
+    }
+
+    #[test]
+    fn steal_group_widens_split_width_on_serial_ranks() {
+        // An intra_op_threads=1 rank in a 3-pool steal group splits
+        // wide enough for the two sibling pools to claim a share.
+        let linked = Cluster::new(
+            DistConfig::threads(3)
+                .with_intra_op_threads(1)
+                .with_work_steal(true),
+        )
+        .unwrap();
+        let outs = linked
+            .run(|_| Ok(crate::exec::split_width(crate::exec::current())))
+            .unwrap();
+        assert_eq!(outs, vec![3, 3, 3]);
+        // Isolated pools keep the serial width.
+        let isolated = Cluster::new(
+            DistConfig::threads(3)
+                .with_intra_op_threads(1)
+                .with_work_steal(false),
+        )
+        .unwrap();
+        let outs = isolated
+            .run(|_| Ok(crate::exec::split_width(crate::exec::current())))
+            .unwrap();
+        assert_eq!(outs, vec![1, 1, 1]);
     }
 
     #[test]

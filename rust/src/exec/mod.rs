@@ -50,8 +50,9 @@ pub(crate) use self::morsel::{map_parallel_budgeted, SendPtr};
 // Executor plumbing for `dist::Cluster` and the reuse tests — not part
 // of the public API (the knobs above are; the pool is an internal).
 pub(crate) use self::pool::{
-    current_pool_spawned_threads, current_pool_stealable,
-    install_thread_pool, link_steal_group, panic_message, WorkerPool,
+    current_pool_spawned_threads, current_pool_steal_group,
+    current_pool_stealable, install_thread_pool, link_steal_group,
+    panic_message, WorkerPool,
 };
 
 /// Default parallelism row threshold: kernels fall back to the serial
@@ -91,6 +92,20 @@ pub const INGEST_SINGLE_PASS: bool = true;
 /// config via `[exec] work_steal`, or process-wide with the
 /// `WORK_STEAL` env var.
 pub const WORK_STEAL: bool = true;
+
+/// Default for the `[exec] pipeline_fuse` knob: the pipeline executor
+/// ([`crate::pipeline::Pipeline`]) compiles stage chains into fused
+/// segments — select → project → join-probe → partial-agg run as one
+/// pass per morsel with no intermediate `Table` between fused stages,
+/// breakers (join build sides, groupby merges, sorts, shuffles) being
+/// the only materialization points. Fusion changes *when* a row is
+/// touched, never the per-row arithmetic or the merge order, so
+/// results stay bit-identical to the operator-at-a-time path (the CI
+/// oracle, `PIPELINE_FUSE=0`). Override per cluster with
+/// `DistConfig::with_pipeline_fuse`, on the CLI with
+/// `--pipeline-fuse`, in config via `[exec] pipeline_fuse`, or
+/// process-wide with the `PIPELINE_FUSE` env var.
+pub const PIPELINE_FUSE: bool = true;
 
 /// Default for the `[exec] fault_plan` knob: no injected faults. A
 /// non-empty plan (grammar in [`crate::net::faulty::FaultPlan`]; e.g.
@@ -203,6 +218,15 @@ pub fn default_work_steal() -> bool {
     *DEFAULT.get_or_init(|| env_bool("WORK_STEAL", WORK_STEAL))
 }
 
+/// The process-wide default for fused pipeline execution: the
+/// `PIPELINE_FUSE` env var (`0`/`false` disable, `1`/`true` enable),
+/// else [`PIPELINE_FUSE`]. Read once; explicit settings always
+/// override it.
+pub fn default_pipeline_fuse() -> bool {
+    static DEFAULT: OnceLock<bool> = OnceLock::new();
+    *DEFAULT.get_or_init(|| env_bool("PIPELINE_FUSE", PIPELINE_FUSE))
+}
+
 /// The process-wide default fault-injection plan: the `FAULT_PLAN` env
 /// var, else [`FAULT_PLAN`] (empty — no faults). Read once; explicit
 /// settings always override it. The plan is parsed (and validated) by
@@ -264,6 +288,11 @@ thread_local! {
     /// `dist::Cluster` linked the rank pools' steal handles at
     /// installation.
     static STEAL: Cell<bool> = Cell::new(default_work_steal());
+
+    /// Per-thread fused-pipeline toggle (see [`PIPELINE_FUSE`]). Read
+    /// by `pipeline::Pipeline::{run_local,run_dist}` at entry to pick
+    /// the fused or operator-at-a-time executor.
+    static FUSE: Cell<bool> = Cell::new(default_pipeline_fuse());
 }
 
 /// The calling thread's current intra-op budget.
@@ -394,6 +423,36 @@ pub fn resolve_work_steal(configured: Option<bool>) -> bool {
     configured.unwrap_or_else(default_work_steal)
 }
 
+/// Whether the calling thread's pipelines run fused segments (see
+/// [`PIPELINE_FUSE`]).
+pub fn pipeline_fuse() -> bool {
+    FUSE.with(|c| c.get())
+}
+
+/// Set the calling thread's fused-pipeline toggle (done by
+/// `dist::Cluster::run` for rank threads and by the CLI for local
+/// commands).
+pub fn set_pipeline_fuse(on: bool) {
+    FUSE.with(|c| c.set(on));
+}
+
+/// Run `f` with fused pipeline execution forced on or off, restoring
+/// the previous setting afterwards — how the equivalence matrix and
+/// the fused-vs-materialized bench arm flip executors in-process.
+pub fn with_pipeline_fuse<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    let prev = FUSE.with(|c| c.replace(on));
+    let out = f();
+    FUSE.with(|c| c.set(prev));
+    out
+}
+
+/// Resolve a configured fused-pipeline toggle: `None` = the process
+/// default (env-overridable via `PIPELINE_FUSE`), `Some` passes
+/// through.
+pub fn resolve_pipeline_fuse(configured: Option<bool>) -> bool {
+    configured.unwrap_or_else(default_pipeline_fuse)
+}
+
 /// The effective budget for an `nrows`-row kernel: the thread-local
 /// budget, degraded to serial below the thread's row threshold.
 pub fn parallelism_for(nrows: usize) -> ExecContext {
@@ -411,6 +470,19 @@ pub fn parallelism_for(nrows: usize) -> ExecContext {
 /// workers — execution decoupled from static rank ownership).
 pub(crate) fn morsel_parallel(exec: ExecContext) -> bool {
     exec.is_parallel() || current_pool_stealable()
+}
+
+/// Split width for kernels that carve one batch of near-equal parts
+/// (select's predicate pass and index build, bitmap gathers, hash-build
+/// partitioning): the thread budget, widened to the steal group's pool
+/// count when the calling thread's executor is steal-linked. An
+/// `intra_op_threads = 1` rank in a linked group then produces one part
+/// per group pool instead of a single serial slab, so idle sibling
+/// workers can claim a share. Part counts never change kernel results
+/// (parts are concatenated or prefix-summed in order), so this is
+/// purely a scheduling width.
+pub(crate) fn split_width(exec: ExecContext) -> usize {
+    exec.threads().max(current_pool_steal_group())
 }
 
 /// Resolve a configured knob value: `0` = auto (available cores divided
@@ -532,6 +604,32 @@ mod tests {
         with_work_steal(true, || {
             assert!(!morsel_parallel(ExecContext::serial()));
             assert!(morsel_parallel(ExecContext::new(2)));
+        });
+    }
+
+    #[test]
+    fn pipeline_fuse_knob_scopes_and_restores() {
+        let prev = pipeline_fuse();
+        with_pipeline_fuse(!prev, || {
+            assert_eq!(pipeline_fuse(), !prev);
+        });
+        assert_eq!(pipeline_fuse(), prev);
+        // None = the process default; Some passes through.
+        assert_eq!(resolve_pipeline_fuse(None), default_pipeline_fuse());
+        assert!(resolve_pipeline_fuse(Some(true)));
+        assert!(!resolve_pipeline_fuse(Some(false)));
+    }
+
+    #[test]
+    fn split_width_matches_budget_off_a_steal_group() {
+        // A thread with no steal-linked pool splits by its own budget;
+        // the steal-group widening is covered from `dist` (where linked
+        // pools exist).
+        with_intra_op_threads(3, || {
+            assert_eq!(split_width(current()), 3);
+        });
+        with_intra_op_threads(1, || {
+            assert_eq!(split_width(current()), 1);
         });
     }
 

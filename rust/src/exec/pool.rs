@@ -542,6 +542,22 @@ pub(crate) fn current_pool_stealable() -> bool {
     })
 }
 
+/// Number of pools in the calling thread's steal group, counting its
+/// own (`1` for isolated or absent pools). Kernels that size their
+/// split widths use this as the group's worker *capacity*: each linked
+/// sibling pool can contribute at least one thief, so a
+/// `intra_op_threads = 1` rank still splits wide enough for idle
+/// siblings to claim a share instead of watching one worker run the
+/// whole range ([`crate::exec::split_width`]).
+pub(crate) fn current_pool_steal_group() -> usize {
+    THREAD_POOL.with(|p| {
+        p.borrow()
+            .as_ref()
+            .map(|pool| pool.inner.peers().len() + 1)
+            .unwrap_or(1)
+    })
+}
+
 /// Thread-generation counter of the calling thread's executor (see
 /// [`WorkerPool::spawned_threads`]).
 pub fn current_pool_spawned_threads() -> usize {

@@ -67,6 +67,13 @@ GLOBAL FLAGS
                         rank workers run a skewed rank's queued
                         morsels; false = isolated per-rank pools;
                         results identical either way)
+  --pipeline-fuse true|false
+                        fused pipeline execution (default true:
+                        select/project/join-probe/partial-agg run as
+                        one pass per morsel with no intermediate
+                        table; false = operator-at-a-time with a full
+                        table between stages; results identical
+                        either way — docs/PIPELINE.md)
   --fault-plan PLAN     deterministic fault injection for cluster
                         commands: comma-separated kind@rank:exchange
                         entries, kind = error|panic|delayMS (e.g.
@@ -174,6 +181,9 @@ fn make_cluster(
             .bool_flag("ingest-single-pass")?
             .or(cfg.ingest_single_pass),
         work_steal: args.bool_flag("work-steal")?.or(cfg.work_steal),
+        pipeline_fuse: args
+            .bool_flag("pipeline-fuse")?
+            .or(cfg.pipeline_fuse),
         fault_plan: args
             .str("fault-plan")
             .map(String::from)
@@ -659,6 +669,9 @@ fn run() -> Result<()> {
     // nobody to steal from); cluster commands resolve per rank.
     rylon::exec::set_work_steal(rylon::exec::resolve_work_steal(
         args.bool_flag("work-steal")?.or(cfg.work_steal),
+    ));
+    rylon::exec::set_pipeline_fuse(rylon::exec::resolve_pipeline_fuse(
+        args.bool_flag("pipeline-fuse")?.or(cfg.pipeline_fuse),
     ));
     match args.cmd.as_str() {
         "gen" => cmd_gen(&args),

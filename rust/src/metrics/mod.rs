@@ -89,6 +89,81 @@ impl Phases {
     }
 }
 
+/// Per-stage attribution for a fused pipeline segment
+/// (`docs/PIPELINE.md`): when select→project→join-probe→partial-agg
+/// run as one pass per morsel, each worker charges the seconds and
+/// output rows of every fused stage to that stage's slot, and the
+/// per-morsel clocks fold back into the segment clock in morsel order.
+/// `commit` then books the totals into a [`Phases`] breakdown under
+/// the same phase names the operator-at-a-time path uses, so fusion
+/// never loses the per-stage timing surface.
+#[derive(Debug, Clone)]
+pub struct StageClock {
+    names: Vec<String>,
+    secs: Vec<f64>,
+    rows: Vec<u64>,
+}
+
+impl StageClock {
+    /// One slot per fused stage, labelled with the stage's phase name
+    /// (names may repeat, e.g. two selects in one segment).
+    pub fn new(names: Vec<String>) -> StageClock {
+        let n = names.len();
+        StageClock {
+            names,
+            secs: vec![0.0; n],
+            rows: vec![0; n],
+        }
+    }
+
+    /// Number of stage slots.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Whether the clock has no stage slots.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Charge wall-clock seconds to stage slot `stage`.
+    pub fn add_seconds(&mut self, stage: usize, secs: f64) {
+        self.secs[stage] += secs;
+    }
+
+    /// Charge output rows to stage slot `stage`.
+    pub fn add_rows(&mut self, stage: usize, n: u64) {
+        self.rows[stage] += n;
+    }
+
+    /// Fold another clock's charges into this one slot-by-slot (the
+    /// per-morsel clocks folding into the segment clock). Slot counts
+    /// must match; fold order does not change the row totals, and the
+    /// second totals are only reported, never compared bit-for-bit.
+    pub fn absorb(&mut self, other: &StageClock) {
+        debug_assert_eq!(self.names.len(), other.names.len());
+        for (s, o) in self.secs.iter_mut().zip(&other.secs) {
+            *s += o;
+        }
+        for (r, o) in self.rows.iter_mut().zip(&other.rows) {
+            *r += o;
+        }
+    }
+
+    /// Book the totals into a [`Phases`] breakdown: each slot's seconds
+    /// under its phase name, and every slot's rows under the shared
+    /// `rows_out` counter — the same accounting the operator-at-a-time
+    /// path produces one stage at a time.
+    pub fn commit(self, phases: &mut Phases) {
+        for ((name, secs), rows) in
+            self.names.iter().zip(&self.secs).zip(&self.rows)
+        {
+            phases.add_seconds(name, *secs);
+            phases.count("rows_out", *rows);
+        }
+    }
+}
+
 /// Fault-domain counters (`docs/FAULTS.md`): how many collectives the
 /// cluster aborted and how many faults the injection plan fired.
 /// Snapshot via `Cluster::fault_stats`; counters are cumulative for
@@ -152,6 +227,33 @@ mod tests {
         let j = p.to_json().to_string();
         assert!(j.contains("shuffle"));
         assert!(j.contains("bytes"));
+    }
+
+    #[test]
+    fn stage_clock_absorbs_and_commits() {
+        let mut seg =
+            StageClock::new(vec!["select".into(), "join".into(), "select".into()]);
+        assert_eq!(seg.len(), 3);
+        assert!(!seg.is_empty());
+        let mut morsel = StageClock::new(vec![
+            "select".into(),
+            "join".into(),
+            "select".into(),
+        ]);
+        morsel.add_seconds(0, 0.25);
+        morsel.add_rows(0, 10);
+        morsel.add_seconds(1, 1.0);
+        morsel.add_rows(1, 30);
+        morsel.add_seconds(2, 0.5);
+        morsel.add_rows(2, 7);
+        seg.absorb(&morsel);
+        seg.absorb(&morsel);
+        let mut p = Phases::new();
+        seg.commit(&mut p);
+        // The two select slots pool under one phase name.
+        assert!((p.seconds("select") - 1.5).abs() < 1e-12);
+        assert!((p.seconds("join") - 2.0).abs() < 1e-12);
+        assert_eq!(p.counter("rows_out"), 2 * (10 + 30 + 7));
     }
 
     #[test]

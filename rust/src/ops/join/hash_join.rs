@@ -178,6 +178,64 @@ fn probe_range<FM: FnMut(usize)>(
     }
 }
 
+/// Probe an explicit ascending list of left rows against pre-built
+/// right-side chains — the fused-segment twin of [`probe_range`]: same
+/// bucket walk, same collision re-verification, same emission order, so
+/// the pairs emitted for `rows` are exactly the pairs [`probe_range`]
+/// emits for those rows (with `li` holding the caller's global row
+/// ids). `rh[k]` is the key hash of `rows[k]`
+/// ([`crate::compute::hash::hash_rows`]); only Inner/Left probes fuse,
+/// so no right-side match marking is needed here.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn probe_rows(
+    lk: &[&Column],
+    rk: &[&Column],
+    rows: &[usize],
+    rh: &[u64],
+    chains: &HashChains,
+    fast: Option<(&[i64], &[i64])>,
+    want_left_unmatched: bool,
+    li: &mut Vec<i64>,
+    ri: &mut Vec<i64>,
+) {
+    for (k, &i) in rows.iter().enumerate() {
+        let h = rh[k];
+        let mut matched = false;
+        if !key_has_null(lk, i) {
+            match fast {
+                Some((lvals, rvals)) => {
+                    let key = lvals[i];
+                    for j in chains.bucket(h) {
+                        if rvals[j] == key {
+                            li.push(i as i64);
+                            ri.push(j as i64);
+                            matched = true;
+                        }
+                    }
+                }
+                None => {
+                    for j in chains.bucket(h) {
+                        // Collision-safe: verify every key cell.
+                        let eq = lk
+                            .iter()
+                            .zip(rk)
+                            .all(|(a, b)| a.eq_rows(i, b, j));
+                        if eq {
+                            li.push(i as i64);
+                            ri.push(j as i64);
+                            matched = true;
+                        }
+                    }
+                }
+            }
+        }
+        if !matched && want_left_unmatched {
+            li.push(i as i64);
+            ri.push(-1);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

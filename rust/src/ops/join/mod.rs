@@ -24,6 +24,7 @@ use crate::error::{Result, RylonError};
 use crate::table::Table;
 
 pub use hash_join::hash_join_indices;
+pub(crate) use hash_join::probe_rows;
 pub use sort_join::sort_join_indices;
 
 /// Join semantics (Table I).
@@ -116,7 +117,14 @@ pub(crate) fn key_columns<'t>(
     names.iter().map(|n| table.column_by_name(n)).collect()
 }
 
-fn validate(left: &Table, right: &Table, opts: &JoinOptions) -> Result<()> {
+/// Check key arity and dtype compatibility — shared by [`join`] and the
+/// fused pipeline planner (`crate::pipeline::fuse`), so a fused join
+/// fails with exactly the errors the materialized join raises.
+pub(crate) fn validate(
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+) -> Result<()> {
     if opts.left_on.is_empty() || opts.left_on.len() != opts.right_on.len() {
         return Err(RylonError::invalid(
             "join requires equal, non-empty key lists",
@@ -187,7 +195,10 @@ pub(crate) fn take_opt(col: &Column, idx: &[i64]) -> Column {
     }
 }
 
-fn take_opt_prim<T: Copy + Default>(
+/// Serial `-1`-aware gather for one primitive column — also the
+/// per-morsel gather of the fused pipeline (`crate::pipeline::fuse`),
+/// which must not nest parallel kernels inside a morsel closure.
+pub(crate) fn take_opt_prim<T: Copy + Default>(
     c: &PrimitiveColumn<T>,
     idx: &[i64],
 ) -> PrimitiveColumn<T> {
@@ -210,7 +221,9 @@ fn take_opt_prim<T: Copy + Default>(
     )
 }
 
-fn take_opt_str(c: &StringColumn, idx: &[i64]) -> StringColumn {
+/// Serial `-1`-aware gather for one string column (see
+/// [`take_opt_prim`] on fused-pipeline use).
+pub(crate) fn take_opt_str(c: &StringColumn, idx: &[i64]) -> StringColumn {
     let vals: Vec<Option<&str>> = idx
         .iter()
         .map(|&i| {

@@ -84,15 +84,21 @@ impl Predicate {
     }
 
     /// Evaluate to a per-row boolean mask. Large tables evaluate one
-    /// morsel per worker under the calling thread's intra-op budget;
-    /// results are concatenated in morsel order, so the mask is
-    /// bit-identical to a serial evaluation.
+    /// range per worker, split [`exec::split_width`]-wide — the steal
+    /// group's capacity, not just the local budget, so a serial-budget
+    /// rank's ranges are still claimable by idle sibling workers.
+    /// Results are concatenated in range order, so the mask is
+    /// bit-identical to a serial evaluation at any width.
     pub fn eval_mask(&self, table: &Table) -> Result<Vec<bool>> {
         let n = table.num_rows();
         let exec = exec::parallelism_for(n);
-        if exec.is_parallel() {
-            let parts = exec::map_parallel(
-                exec::split_even(n, exec.threads()),
+        let width = exec::split_width(exec);
+        if n >= exec::par_row_threshold()
+            && exec::morsel_parallel(exec)
+            && width > 1
+        {
+            let parts = exec::map_parallel_budgeted(
+                exec::split_even(n, width),
                 |m| self.eval_mask_range(table, m.start, m.end),
             );
             let mut out = Vec::with_capacity(n);
@@ -218,15 +224,21 @@ fn eval_cmp_mask_range(
 }
 
 /// Select rows matching a columnar predicate. Mask evaluation, index
-/// building and the gather all run morsel-parallel under the calling
-/// thread's intra-op budget; output is bit-identical to a serial run.
+/// building and the gather all run morsel-parallel; the mask and index
+/// passes split [`exec::split_width`]-wide so steal-linked sibling
+/// workers can claim ranges off a serial-budget rank. Output is
+/// bit-identical to a serial run.
 pub fn select(table: &Table, pred: &Predicate) -> Result<Table> {
     let n = table.num_rows();
     let mask = pred.eval_mask(table)?;
     let exec = exec::parallelism_for(n);
-    let idx: Vec<usize> = if exec.is_parallel() {
-        let parts = exec::map_parallel(
-            exec::split_even(n, exec.threads()),
+    let width = exec::split_width(exec);
+    let idx: Vec<usize> = if n >= exec::par_row_threshold()
+        && exec::morsel_parallel(exec)
+        && width > 1
+    {
+        let parts = exec::map_parallel_budgeted(
+            exec::split_even(n, width),
             |m| {
                 let mut v = Vec::new();
                 for i in m.range() {

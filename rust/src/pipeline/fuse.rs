@@ -1,0 +1,1081 @@
+//! Fused morsel pipelines: compile a [`Pipeline`]'s stage chain into
+//! segments separated only by true pipeline breakers, then run each
+//! segment as one job where every morsel flows through
+//! select → project → join-probe → partial-agg in a single pass, with
+//! no intermediate [`Table`] materialised between fused stages
+//! (`docs/PIPELINE.md`).
+//!
+//! Fusable stages: `Select` and `Project` always; a `Join` when it is a
+//! hash inner/left join (the probe is per-row once the build side
+//! exists); a terminal `GroupBy` in local runs (per-worker partial
+//! aggregation with a deterministic merge). Everything else — sort
+//! joins, set ops, `OrderBy`, `Rebalance`, `Distinct`, and every
+//! distributed exchange — is a breaker executed operator-at-a-time.
+//!
+//! The contract is *bit-identity*: a fused run produces exactly the
+//! bytes of the operator-at-a-time path — f64 accumulation order,
+//! splitmix64 bucket placement, SQL null semantics, and validity-bitmap
+//! representation all included — at any thread count, steal setting, or
+//! batch size. The `[exec] pipeline_fuse` knob flips executors so CI
+//! can hold the two paths against each other as oracles.
+
+use std::sync::Arc;
+
+use crate::buffer::Bitmap;
+use crate::column::{Column, ColumnBuilder};
+use crate::compute::aggregate::Accumulator;
+use crate::compute::filter::take_parallel;
+use crate::compute::hash::{self, GroupIndex, HashChains};
+use crate::dist::{shuffle, RankCtx};
+use crate::error::{Result, RylonError};
+use crate::exec;
+use crate::metrics::{Phases, StageClock, Timer};
+use crate::ops;
+use crate::ops::groupby::GroupByOptions;
+use crate::ops::join::{
+    key_columns, key_has_null, probe_rows, take_opt, take_opt_prim,
+    take_opt_str, validate, JoinAlgo, JoinOptions, JoinType,
+};
+use crate::ops::select::Predicate;
+use crate::pipeline::{Env, Pipeline, Stage};
+use crate::table::Table;
+use crate::types::{DataType, Field, Schema};
+
+// ---- segment planner -------------------------------------------------------
+
+/// One unit of the compiled plan: a fused run of stages, or a breaker.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum Segment {
+    /// A maximal run of fusable stages executed as one morsel pass.
+    Fused(FusedSegment),
+    /// A stage that must materialise its input (pipeline breaker),
+    /// executed by the operator-at-a-time stage runner.
+    Breaker(usize),
+}
+
+/// Stage-index span of one fused segment (`end` exclusive).
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) struct FusedSegment {
+    pub start: usize,
+    pub end: usize,
+    /// Position of the segment's hash-join probe, if any.
+    pub join_at: Option<usize>,
+    /// Position of the segment's terminal partial-agg, if any
+    /// (always `end - 1`).
+    pub group_at: Option<usize>,
+}
+
+/// True for joins whose probe side can stream per-morsel: hash algo,
+/// inner or left semantics (right/full-outer need global right-side
+/// match flags, which is a barrier over all probes).
+fn fusable_join(opts: &JoinOptions) -> bool {
+    opts.algo == JoinAlgo::Hash
+        && matches!(opts.join_type, JoinType::Inner | JoinType::Left)
+}
+
+/// Compile the stage chain into fused segments and breakers. In
+/// distributed plans a fusable join still starts its own segment (the
+/// key shuffle is an exchange, so stages before it flush first) and
+/// `GroupBy` is always a breaker (`dist_groupby` shuffles by key).
+pub(crate) fn plan(stages: &[Stage], dist: bool) -> Vec<Segment> {
+    fn flush(
+        segs: &mut Vec<Segment>,
+        run: &mut Option<(usize, Option<usize>)>,
+        end: usize,
+        group_at: Option<usize>,
+    ) {
+        if let Some((start, join_at)) = run.take() {
+            segs.push(Segment::Fused(FusedSegment {
+                start,
+                end,
+                join_at,
+                group_at,
+            }));
+        }
+    }
+
+    let mut segs: Vec<Segment> = Vec::new();
+    // (start, probe position) of the open fused run, if any.
+    let mut run: Option<(usize, Option<usize>)> = None;
+    for (i, stage) in stages.iter().enumerate() {
+        match stage {
+            Stage::Select(_) | Stage::Project(_) => {
+                if run.is_none() {
+                    run = Some((i, None));
+                }
+            }
+            Stage::Join { opts, .. } if fusable_join(opts) => {
+                let occupied = matches!(run, Some((_, Some(_))));
+                if occupied || dist {
+                    flush(&mut segs, &mut run, i, None);
+                }
+                match &mut run {
+                    Some((_, j)) => *j = Some(i),
+                    None => run = Some((i, Some(i))),
+                }
+            }
+            Stage::GroupBy(_) if !dist => {
+                if run.is_none() {
+                    run = Some((i, None));
+                }
+                flush(&mut segs, &mut run, i + 1, Some(i));
+            }
+            _ => {
+                flush(&mut segs, &mut run, i, None);
+                segs.push(Segment::Breaker(i));
+            }
+        }
+    }
+    flush(&mut segs, &mut run, stages.len(), None);
+    segs
+}
+
+// ---- per-morsel operator descriptors ---------------------------------------
+
+/// Which input table a fused output column reads from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Side {
+    L,
+    R,
+}
+
+/// One fused stage as seen by the morsel pass, aligned 1:1 with the
+/// segment's stage slots (for per-stage clock attribution).
+enum SegOp<'p> {
+    /// Pre-join row filter. `snap` is the zero-copy view at this stage
+    /// (so dropped-column errors and name resolution match the
+    /// materialised path); `cols`/`fields` are the predicate's resolved
+    /// columns for the sparse re-filter path.
+    PreFilter {
+        pred: &'p Predicate,
+        snap: Table,
+        cols: Vec<usize>,
+        fields: Vec<Field>,
+    },
+    /// Pre-join projection marker: the projection is applied to the
+    /// view once at plan time (zero-copy); per morsel it only counts
+    /// rows flowing through.
+    PreMark,
+    /// The fused hash-join probe.
+    Probe,
+    /// Post-join pair filter over the predicate's gathered columns.
+    PostFilter {
+        pred: &'p Predicate,
+        cols: Vec<(Side, usize)>,
+        fields: Vec<Field>,
+    },
+    /// Post-join projection marker (output-column remap at plan time).
+    PostMark,
+    /// Terminal partial-agg marker; runs in the segment epilogue.
+    GroupMark,
+}
+
+/// Pre-built probe state shared by every morsel: resolved key columns,
+/// the build-side chains, and the monomorphic i64 fast path.
+struct ProbeCtx<'t> {
+    lk: Vec<&'t Column>,
+    rk: Vec<&'t Column>,
+    chains: HashChains,
+    fast: Option<(&'t [i64], &'t [i64])>,
+    want_left_unmatched: bool,
+}
+
+/// Resolved groupby plan: each key/agg source as (side, column index)
+/// into the left view / right table.
+struct GroupPlan<'p> {
+    opts: &'p GroupByOptions,
+    key_srcs: Vec<(Side, usize)>,
+    agg_srcs: Vec<(Side, usize)>,
+    out_dtypes: Vec<DataType>,
+}
+
+/// One morsel's contribution: surviving rows (no-join segments) or
+/// surviving index pairs (join segments), the unmatched-probe flag for
+/// the morsel's full pair list, and the per-stage clock.
+struct MorselOut {
+    rows: Vec<usize>,
+    li: Vec<i64>,
+    ri: Vec<i64>,
+    saw: bool,
+    clock: StageClock,
+}
+
+/// Collect the column names a predicate references, deduplicated in
+/// first-reference order.
+fn pred_columns(p: &Predicate, out: &mut Vec<String>) {
+    match p {
+        Predicate::Cmp { column, .. } | Predicate::IsNull { column, .. } => {
+            if !out.iter().any(|c| c == column) {
+                out.push(column.clone());
+            }
+        }
+        Predicate::And(a, b) | Predicate::Or(a, b) => {
+            pred_columns(a, out);
+            pred_columns(b, out);
+        }
+        Predicate::Not(a) => pred_columns(a, out),
+    }
+}
+
+/// Serial `-1`-aware gather (the per-morsel twin of `take_opt`, which
+/// must not be called inside a morsel closure: its dense fast path
+/// nests a parallel kernel).
+fn serial_take_opt(col: &Column, idx: &[i64]) -> Column {
+    match col {
+        Column::Int64(c) => Column::Int64(take_opt_prim(c, idx)),
+        Column::Float64(c) => Column::Float64(take_opt_prim(c, idx)),
+        Column::Bool(c) => Column::Bool(take_opt_prim(c, idx)),
+        Column::Utf8(c) => Column::Utf8(take_opt_str(c, idx)),
+    }
+}
+
+/// Attach an all-true validity bitmap when a gather's dense fast path
+/// dropped it. The materialised path decides a right-side column's
+/// bitmap *presence* from the join's full pair list (any `-1` routes it
+/// through the null-aware gather, which keeps a bitmap), while the
+/// fused path gathers only the rows surviving later stages — which may
+/// all be matches. Forcing the bitmap back on whenever the full list
+/// had an unmatched row keeps the representation bit-identical
+/// (`Bitmap::ones` masks tail bits, so it equals a set-all-true map).
+fn force_valid(col: Column) -> Column {
+    let n = col.len();
+    match col {
+        Column::Int64(mut c) => {
+            if c.validity.is_none() {
+                c.validity = Some(Bitmap::ones(n));
+            }
+            Column::Int64(c)
+        }
+        Column::Float64(mut c) => {
+            if c.validity.is_none() {
+                c.validity = Some(Bitmap::ones(n));
+            }
+            Column::Float64(c)
+        }
+        Column::Bool(mut c) => {
+            if c.validity.is_none() {
+                c.validity = Some(Bitmap::ones(n));
+            }
+            Column::Bool(c)
+        }
+        Column::Utf8(mut c) => {
+            if c.validity.is_none() {
+                c.validity = Some(Bitmap::ones(n));
+            }
+            Column::Utf8(c)
+        }
+    }
+}
+
+/// Gather a predicate's columns at `rows` into a small eval table
+/// (serial — runs inside a morsel closure).
+fn gather_rows_table(
+    snap: &Table,
+    cols: &[usize],
+    fields: &[Field],
+    rows: &[usize],
+) -> Table {
+    let gathered: Vec<Arc<Column>> = cols
+        .iter()
+        .map(|&i| Arc::new(snap.column(i).take(rows)))
+        .collect();
+    Table::from_parts(Schema::new(fields.to_vec()), gathered, rows.len())
+}
+
+/// Gather a post-join predicate's columns at the morsel's current pair
+/// list (serial — runs inside a morsel closure).
+fn gather_pairs_table(
+    view: &Table,
+    right: Option<&Table>,
+    cols: &[(Side, usize)],
+    fields: &[Field],
+    li: &[i64],
+    ri: &[i64],
+) -> Table {
+    let mut lrows: Option<Vec<usize>> = None;
+    let gathered: Vec<Arc<Column>> = cols
+        .iter()
+        .map(|&(s, i)| {
+            let c = match s {
+                Side::L => {
+                    let lr = lrows.get_or_insert_with(|| {
+                        li.iter().map(|&x| x as usize).collect()
+                    });
+                    view.column(i).take(lr)
+                }
+                Side::R => serial_take_opt(
+                    right.expect("post-join gather without right side")
+                        .column(i),
+                    ri,
+                ),
+            };
+            Arc::new(c)
+        })
+        .collect();
+    Table::from_parts(Schema::new(fields.to_vec()), gathered, li.len())
+}
+
+// ---- fused segment executor ------------------------------------------------
+
+/// Run one fused segment: validate every stage in chain order (so a
+/// fused plan fails with exactly the materialised path's first error),
+/// build the probe state, stream every morsel through the fused ops,
+/// then finish with the partial-agg merge or the single output gather.
+/// `pre_joined` carries a distributed probe's already-shuffled right
+/// side and the shuffle seconds to book under the join's stage slot.
+fn run_segment(
+    pipe: &Pipeline,
+    seg: &FusedSegment,
+    input: &Table,
+    env: &Env,
+    phases: &mut Phases,
+    pre_joined: Option<(&Table, f64)>,
+) -> Result<Table> {
+    let stages = &pipe.stages[seg.start..seg.end];
+    let names: Vec<String> =
+        stages.iter().map(|s| s.name().to_string()).collect();
+    let mut seg_clock = StageClock::new(names.clone());
+
+    // ---- plan walk: validate in stage order, build per-morsel ops ----
+    let mut view = input.clone();
+    let mut mops: Vec<SegOp> = Vec::with_capacity(stages.len());
+    let mut join_info: Option<(&Table, &JoinOptions)> = None;
+    // Post-join logical schema and its (side, source) column mapping.
+    let mut cur_schema: Option<Schema> = None;
+    let mut out_cols: Vec<(Side, usize)> = Vec::new();
+    let mut group_plan: Option<GroupPlan> = None;
+
+    for (k, stage) in stages.iter().enumerate() {
+        match stage {
+            Stage::Select(pred) => {
+                if join_info.is_none() {
+                    // Zero-row eval surfaces missing-column and type
+                    // errors in exact evaluation order.
+                    pred.eval_mask_range(&view, 0, 0)?;
+                    let mut names_v = Vec::new();
+                    pred_columns(pred, &mut names_v);
+                    let mut cols = Vec::new();
+                    let mut fields = Vec::new();
+                    for nm in &names_v {
+                        let i = view.schema().index_of(nm)?;
+                        cols.push(i);
+                        fields.push(view.schema().fields()[i].clone());
+                    }
+                    mops.push(SegOp::PreFilter {
+                        pred,
+                        snap: view.clone(),
+                        cols,
+                        fields,
+                    });
+                } else {
+                    let schema = cur_schema.as_ref().expect("joined schema");
+                    let mut names_v = Vec::new();
+                    pred_columns(pred, &mut names_v);
+                    let mut cols = Vec::new();
+                    let mut fields = Vec::new();
+                    for nm in &names_v {
+                        // Permissive: unresolvable names are left out so
+                        // the zero-row eval below reports them (or an
+                        // earlier type error) in evaluation order.
+                        if let Ok(i) = schema.index_of(nm) {
+                            cols.push(out_cols[i]);
+                            fields.push(schema.fields()[i].clone());
+                        }
+                    }
+                    let t0 = Table::empty(Schema::new(fields.clone()));
+                    pred.eval_mask_range(&t0, 0, 0)?;
+                    mops.push(SegOp::PostFilter { pred, cols, fields });
+                }
+            }
+            Stage::Project(cols) => {
+                if join_info.is_none() {
+                    let t = Timer::start();
+                    let names_p: Vec<&str> =
+                        cols.iter().map(|s| s.as_str()).collect();
+                    view = ops::project(&view, &names_p)?;
+                    seg_clock.add_seconds(k, t.seconds());
+                    mops.push(SegOp::PreMark);
+                } else {
+                    let schema = cur_schema.as_mut().expect("joined schema");
+                    let idxs: Vec<usize> = cols
+                        .iter()
+                        .map(|nm| schema.index_of(nm))
+                        .collect::<Result<Vec<_>>>()?;
+                    out_cols = idxs.iter().map(|&i| out_cols[i]).collect();
+                    *schema = schema.project(&idxs);
+                    mops.push(SegOp::PostMark);
+                }
+            }
+            Stage::Join { right, opts } => {
+                let rt: &Table = match pre_joined {
+                    Some((t, _)) => t,
+                    None => Pipeline::side(env, right)?,
+                };
+                validate(&view, rt, opts)?;
+                cur_schema =
+                    Some(view.schema().join(rt.schema(), &opts.suffix));
+                out_cols = (0..view.num_columns())
+                    .map(|i| (Side::L, i))
+                    .chain((0..rt.num_columns()).map(|j| (Side::R, j)))
+                    .collect();
+                join_info = Some((rt, opts));
+                mops.push(SegOp::Probe);
+            }
+            Stage::GroupBy(gopts) => {
+                // Mirror ops::groupby's validation order exactly.
+                if gopts.keys.is_empty() {
+                    return Err(RylonError::invalid(
+                        "groupby requires at least one key",
+                    ));
+                }
+                if gopts.aggs.is_empty() {
+                    return Err(RylonError::invalid(
+                        "groupby requires at least one aggregate",
+                    ));
+                }
+                let joined = join_info.is_some();
+                let schema_ref: &Schema = match &cur_schema {
+                    Some(s) => s,
+                    None => view.schema(),
+                };
+                let src_of = |i: usize| -> (Side, usize) {
+                    if joined {
+                        out_cols[i]
+                    } else {
+                        (Side::L, i)
+                    }
+                };
+                let mut key_srcs = Vec::new();
+                for kk in &gopts.keys {
+                    let i = schema_ref.index_of(kk)?;
+                    key_srcs.push(src_of(i));
+                }
+                let mut agg_srcs = Vec::new();
+                let mut agg_dts = Vec::new();
+                for a in &gopts.aggs {
+                    let i = schema_ref.index_of(&a.column)?;
+                    agg_srcs.push(src_of(i));
+                    agg_dts.push(schema_ref.fields()[i].dtype);
+                }
+                let mut out_dtypes = Vec::new();
+                for (a, dt) in gopts.aggs.iter().zip(&agg_dts) {
+                    out_dtypes.push(a.kind.output_dtype(*dt)?);
+                }
+                group_plan = Some(GroupPlan {
+                    opts: gopts,
+                    key_srcs,
+                    agg_srcs,
+                    out_dtypes,
+                });
+                mops.push(SegOp::GroupMark);
+            }
+            _ => unreachable!("non-fusable stage in fused segment"),
+        }
+    }
+
+    // ---- join prologue: build-side chains (the view is final now) ----
+    let probe_ctx: Option<ProbeCtx> = match join_info {
+        Some((rt, opts)) => {
+            let t = Timer::start();
+            let lk = key_columns(&view, &opts.left_on)?;
+            let rk = key_columns(rt, &opts.right_on)?;
+            let mut rh = Vec::new();
+            hash::hash_columns(&rk, rt.num_rows(), &mut rh);
+            let chains = HashChains::build_parallel(
+                &rh,
+                |j| key_has_null(&rk, j),
+                exec::parallelism_for(rt.num_rows()),
+            );
+            let fast = match (&lk[..], &rk[..]) {
+                ([Column::Int64(a)], [Column::Int64(b)]) => {
+                    Some((a.values(), b.values()))
+                }
+                _ => None,
+            };
+            let join_slot = seg.join_at.expect("probe without join_at")
+                - seg.start;
+            let shuffle_secs = pre_joined.map(|(_, s)| s).unwrap_or(0.0);
+            seg_clock.add_seconds(join_slot, t.seconds() + shuffle_secs);
+            Some(ProbeCtx {
+                lk,
+                rk,
+                chains,
+                fast,
+                want_left_unmatched: opts.join_type == JoinType::Left,
+            })
+        }
+        None => None,
+    };
+    let right_tbl: Option<&Table> = join_info.map(|(t, _)| t);
+
+    // ---- the fused morsel pass ----
+    let n = view.num_rows();
+    let mexec = exec::parallelism_for(n);
+    let has_join = probe_ctx.is_some();
+    // A groupby over an unfiltered view still needs explicit entry ids.
+    let force_rows = group_plan.is_some() && !has_join;
+    let outs = exec::for_each_morsel(n, mexec, |m| -> Result<MorselOut> {
+        let mut clock = StageClock::new(names.clone());
+        let mut rows: Vec<usize> = Vec::new();
+        // While `dense`, the surviving rows are exactly `m.range()`.
+        let mut dense = true;
+        let mut li: Vec<i64> = Vec::new();
+        let mut ri: Vec<i64> = Vec::new();
+        let mut saw = false;
+        let mut hbuf: Vec<u64> = Vec::new();
+        for (k, op) in mops.iter().enumerate() {
+            let t = Timer::start();
+            match op {
+                SegOp::PreFilter {
+                    pred,
+                    snap,
+                    cols,
+                    fields,
+                } => {
+                    if dense {
+                        let mask =
+                            pred.eval_mask_range(snap, m.start, m.end)?;
+                        rows = m
+                            .range()
+                            .zip(mask)
+                            .filter_map(|(i, keep)| keep.then_some(i))
+                            .collect();
+                        dense = false;
+                    } else {
+                        let t0 =
+                            gather_rows_table(snap, cols, fields, &rows);
+                        let mask =
+                            pred.eval_mask_range(&t0, 0, rows.len())?;
+                        let mut it = mask.iter();
+                        rows.retain(|_| *it.next().expect("mask len"));
+                    }
+                    clock.add_seconds(k, t.seconds());
+                    clock.add_rows(k, rows.len() as u64);
+                }
+                SegOp::PreMark => {
+                    let flowing =
+                        if dense { m.len() } else { rows.len() };
+                    clock.add_seconds(k, t.seconds());
+                    clock.add_rows(k, flowing as u64);
+                }
+                SegOp::Probe => {
+                    let p = probe_ctx.as_ref().expect("probe ctx");
+                    if dense {
+                        rows = m.range().collect();
+                        dense = false;
+                    }
+                    hash::hash_rows(&p.lk, &rows, &mut hbuf);
+                    probe_rows(
+                        &p.lk,
+                        &p.rk,
+                        &rows,
+                        &hbuf,
+                        &p.chains,
+                        p.fast,
+                        p.want_left_unmatched,
+                        &mut li,
+                        &mut ri,
+                    );
+                    // Unmatched flag over the morsel's *full* pair list,
+                    // before any post-join filter trims it.
+                    saw = ri.iter().any(|&r| r < 0);
+                    clock.add_seconds(k, t.seconds());
+                    clock.add_rows(k, li.len() as u64);
+                }
+                SegOp::PostFilter { pred, cols, fields } => {
+                    let t0 = gather_pairs_table(
+                        &view, right_tbl, cols, fields, &li, &ri,
+                    );
+                    let mask = pred.eval_mask_range(&t0, 0, li.len())?;
+                    let mut ia = mask.iter();
+                    li.retain(|_| *ia.next().expect("mask len"));
+                    let mut ib = mask.iter();
+                    ri.retain(|_| *ib.next().expect("mask len"));
+                    clock.add_seconds(k, t.seconds());
+                    clock.add_rows(k, li.len() as u64);
+                }
+                SegOp::PostMark => {
+                    clock.add_seconds(k, t.seconds());
+                    clock.add_rows(k, li.len() as u64);
+                }
+                SegOp::GroupMark => {}
+            }
+        }
+        if dense && force_rows {
+            rows = m.range().collect();
+        }
+        Ok(MorselOut {
+            rows,
+            li,
+            ri,
+            saw,
+            clock,
+        })
+    });
+
+    // ---- fold morsel outputs in morsel order ----
+    let mut all_rows: Vec<usize> = Vec::new();
+    let mut all_li: Vec<i64> = Vec::new();
+    let mut all_ri: Vec<i64> = Vec::new();
+    let mut saw = false;
+    for o in outs {
+        let o = o?;
+        seg_clock.absorb(&o.clock);
+        if has_join {
+            all_li.extend(o.li);
+            all_ri.extend(o.ri);
+            saw |= o.saw;
+        } else {
+            all_rows.extend(o.rows);
+        }
+    }
+
+    // ---- segment epilogue: partial-agg merge or one output gather ----
+    let last = mops.len() - 1;
+    let out = if let Some(gp) = &group_plan {
+        let t = Timer::start();
+        let li_owned;
+        let (li, ri): (&[i64], &[i64]) = if has_join {
+            (&all_li, &all_ri)
+        } else {
+            li_owned = all_rows
+                .iter()
+                .map(|&r| r as i64)
+                .collect::<Vec<i64>>();
+            (&li_owned, &[])
+        };
+        let g = group_epilogue(gp, &view, right_tbl, li, ri, saw)?;
+        seg_clock.add_seconds(last, t.seconds());
+        seg_clock.add_rows(last, g.num_rows() as u64);
+        g
+    } else if has_join {
+        let t = Timer::start();
+        let schema = cur_schema.clone().expect("joined schema");
+        let cols: Vec<Arc<Column>> = out_cols
+            .iter()
+            .map(|&(s, i)| {
+                let src = match s {
+                    Side::L => view.column(i),
+                    Side::R => {
+                        right_tbl.expect("right side").column(i)
+                    }
+                };
+                let idx = match s {
+                    Side::L => &all_li,
+                    Side::R => &all_ri,
+                };
+                let mut c = take_opt(src, idx);
+                if s == Side::R && saw {
+                    c = force_valid(c);
+                }
+                Arc::new(c)
+            })
+            .collect();
+        let joined = Table::from_parts(schema, cols, all_li.len());
+        seg_clock.add_seconds(last, t.seconds());
+        joined
+    } else if mops
+        .iter()
+        .any(|o| matches!(o, SegOp::PreFilter { .. }))
+    {
+        let t = Timer::start();
+        let taken = take_parallel(
+            &view,
+            &all_rows,
+            exec::parallelism_for(all_rows.len()),
+        );
+        seg_clock.add_seconds(last, t.seconds());
+        taken
+    } else {
+        // Projection-only segment: the view *is* the output (zero-copy).
+        view
+    };
+    seg_clock.commit(phases);
+    Ok(out)
+}
+
+/// The fused partial-agg: group the surviving (left, right) entries and
+/// fold each aggregate without materialising the joined table. Hashing,
+/// partitioning, intern order, accumulator fold order and group-order
+/// recovery all mirror `ops::groupby` exactly, so the output is
+/// bit-identical to grouping the materialised table.
+fn group_epilogue(
+    gp: &GroupPlan,
+    view: &Table,
+    right: Option<&Table>,
+    li: &[i64],
+    ri: &[i64],
+    saw_unmatched: bool,
+) -> Result<Table> {
+    let n = li.len();
+    let col_of = |s: Side, i: usize| -> &Column {
+        match s {
+            Side::L => view.column(i),
+            Side::R => right.expect("grouped right side").column(i),
+        }
+    };
+    let row_of = |s: Side, e: usize| -> i64 {
+        match s {
+            Side::L => li[e],
+            Side::R => ri[e],
+        }
+    };
+    // Hash of one entry's key cell — equals hash_cell on the cell the
+    // materialised gather would have produced (`-1` gathers a null).
+    let cell_hash = |src: (Side, usize), e: usize| -> u64 {
+        let r = row_of(src.0, e);
+        if r < 0 {
+            hash::hash_null()
+        } else {
+            hash::hash_cell(col_of(src.0, src.1), r as usize)
+        }
+    };
+    // hash_columns' fold: first column's cell hash, then hash_combine.
+    let entry_hash = |e: usize| -> u64 {
+        let mut h = cell_hash(gp.key_srcs[0], e);
+        for &src in &gp.key_srcs[1..] {
+            h = hash::hash_combine(h, cell_hash(src, e));
+        }
+        h
+    };
+    let mut ehash = vec![0u64; n];
+    let hexec = exec::parallelism_for(n);
+    exec::fill_parallel(ehash.as_mut_slice(), hexec, |m, dst| {
+        for (k, d) in dst.iter_mut().enumerate() {
+            *d = entry_hash(m.start + k);
+        }
+    });
+
+    // Key equality on materialised-cell semantics: both-null cells are
+    // equal (one group), null vs value are not.
+    let cell_eq = |src: (Side, usize), a: usize, b: usize| -> bool {
+        let c = col_of(src.0, src.1);
+        let ra = row_of(src.0, a);
+        let rb = row_of(src.0, b);
+        let va = ra >= 0 && c.is_valid(ra as usize);
+        let vb = rb >= 0 && c.is_valid(rb as usize);
+        match (va, vb) {
+            (true, true) => c.eq_rows(ra as usize, c, rb as usize),
+            (false, false) => true,
+            _ => false,
+        }
+    };
+    let entry_eq = |a: usize, b: usize| -> bool {
+        gp.key_srcs.iter().all(|&src| cell_eq(src, a, b))
+    };
+    let new_acc_row = || -> Vec<Accumulator> {
+        gp.opts
+            .aggs
+            .iter()
+            .zip(&gp.agg_srcs)
+            .map(|(a, &(s, i))| {
+                a.kind.new_acc(col_of(s, i).dtype() == DataType::Int64)
+            })
+            .collect()
+    };
+    let update_row = |accs: &mut Vec<Accumulator>, e: usize| {
+        for (acc, &(s, i)) in accs.iter_mut().zip(&gp.agg_srcs) {
+            let r = row_of(s, e);
+            if r >= 0 {
+                // A null-extended entry is a null cell: skipped, just
+                // like Accumulator::update skips invalid source cells.
+                acc.update(col_of(s, i), r as usize);
+            }
+        }
+    };
+
+    let gexec = exec::parallelism_for(n);
+    let (rep_entries, accs): (Vec<usize>, Vec<Vec<Accumulator>>) =
+        if gexec.is_parallel() {
+            let nparts = gexec.threads();
+            let rows_by_part =
+                hash::partition_rows(&ehash, nparts, gexec, |_| false);
+            let parts = exec::run_partitions(nparts, |p| {
+                let mut gi = GroupIndex::with_capacity(n / nparts + 8);
+                let mut part_accs: Vec<Vec<Accumulator>> = Vec::new();
+                for morsel_buckets in &rows_by_part {
+                    for &row in &morsel_buckets[p] {
+                        let e = row as usize;
+                        let (gid, new) =
+                            gi.intern(ehash[e], e, entry_eq);
+                        if new {
+                            part_accs.push(new_acc_row());
+                        }
+                        update_row(&mut part_accs[gid as usize], e);
+                    }
+                }
+                (gi, part_accs)
+            });
+            let mut order: Vec<(usize, usize, usize)> = Vec::new();
+            for (p, (gi, _)) in parts.iter().enumerate() {
+                for (g, &rep) in gi.rep_rows().iter().enumerate() {
+                    order.push((rep, p, g));
+                }
+            }
+            order.sort_unstable();
+            let mut parts_accs: Vec<Vec<Option<Vec<Accumulator>>>> = parts
+                .into_iter()
+                .map(|(_, a)| a.into_iter().map(Some).collect())
+                .collect();
+            let mut rep_entries = Vec::with_capacity(order.len());
+            let mut accs = Vec::with_capacity(order.len());
+            for &(rep, p, g) in &order {
+                rep_entries.push(rep);
+                accs.push(
+                    parts_accs[p][g].take().expect("group consumed twice"),
+                );
+            }
+            (rep_entries, accs)
+        } else {
+            let mut gi = GroupIndex::with_capacity(n);
+            let mut accs: Vec<Vec<Accumulator>> = Vec::new();
+            for e in 0..n {
+                let (gid, new) = gi.intern(ehash[e], e, entry_eq);
+                if new {
+                    accs.push(new_acc_row());
+                }
+                update_row(&mut accs[gid as usize], e);
+            }
+            (gi.rep_rows().to_vec(), accs)
+        };
+
+    // Assemble: key columns gathered at the representative entries,
+    // then one column per aggregate.
+    let ngroups = rep_entries.len();
+    let mut fields: Vec<Field> = Vec::new();
+    let mut out: Vec<Column> = Vec::new();
+    for (k, &(s, i)) in gp.opts.keys.iter().zip(&gp.key_srcs) {
+        let src = col_of(s, i);
+        let idx: Vec<i64> =
+            rep_entries.iter().map(|&e| row_of(s, e)).collect();
+        let mut kc = take_opt(src, &idx);
+        if s == Side::R && saw_unmatched {
+            kc = force_valid(kc);
+        }
+        fields.push(Field::new(k.clone(), src.dtype()));
+        out.push(kc);
+    }
+    for ((agg, &dt), slot) in gp
+        .opts
+        .aggs
+        .iter()
+        .zip(&gp.out_dtypes)
+        .zip(0..gp.opts.aggs.len())
+    {
+        fields.push(Field::new(agg.name.clone(), dt));
+        let mut b = ColumnBuilder::new(dt, ngroups);
+        for acc_row in &accs {
+            b.push_value(&acc_row[slot].finish())?;
+        }
+        out.push(b.finish());
+    }
+    Table::try_new(Schema::new(fields), out)
+}
+
+// ---- fused pipeline drivers ------------------------------------------------
+
+/// Fused local executor: breakers run operator-at-a-time through the
+/// shared stage runner, fused segments stream. The streaming prefix is
+/// subsumed — morsels already bound the working set, so `batch_rows`
+/// changes nothing under fusion.
+pub(crate) fn run_local(
+    pipe: &Pipeline,
+    input: &Table,
+    env: &Env,
+) -> Result<(Table, Phases)> {
+    let mut phases = Phases::new();
+    let mut cur = input.clone();
+    for seg in plan(&pipe.stages, false) {
+        match seg {
+            Segment::Breaker(i) => {
+                let stage = &pipe.stages[i];
+                cur = phases.time(stage.name(), || {
+                    Pipeline::run_stage_local(stage, &cur, env)
+                })?;
+                phases.count("rows_out", cur.num_rows() as u64);
+            }
+            Segment::Fused(fseg) => {
+                cur = run_segment(pipe, &fseg, &cur, env, &mut phases, None)?;
+            }
+        }
+    }
+    Ok((cur, phases))
+}
+
+/// Fused SPMD executor: exchanges stay breakers; a fused probe segment
+/// shuffles both sides by key (the same `dist_join` exchange and fault
+/// label) and then streams the local probe.
+pub(crate) fn run_dist(
+    pipe: &Pipeline,
+    ctx: &mut RankCtx,
+    input: &Table,
+    env: &Env,
+) -> Result<(Table, Phases)> {
+    let mut phases = Phases::new();
+    let mut cur = input.clone();
+    for seg in plan(&pipe.stages, true) {
+        match seg {
+            Segment::Breaker(i) => {
+                let stage = &pipe.stages[i];
+                let t = Timer::start();
+                cur = Pipeline::run_stage_dist(ctx, stage, &cur, env)?;
+                phases.add_seconds(stage.name(), t.seconds());
+                phases.count("rows_out", cur.num_rows() as u64);
+            }
+            Segment::Fused(fseg) => {
+                cur = match fseg.join_at {
+                    Some(j) => {
+                        let (right, opts) = match &pipe.stages[j] {
+                            Stage::Join { right, opts } => (right, opts),
+                            _ => unreachable!("join_at points at a join"),
+                        };
+                        let right_tbl = Pipeline::side(env, right)?;
+                        let t = Timer::start();
+                        ctx.set_op("dist_join");
+                        let ls = shuffle(ctx, &cur, &opts.left_on)?;
+                        let rs = shuffle(ctx, right_tbl, &opts.right_on)?;
+                        let secs = t.seconds();
+                        run_segment(
+                            pipe,
+                            &fseg,
+                            &ls,
+                            env,
+                            &mut phases,
+                            Some((&rs, secs)),
+                        )?
+                    }
+                    None => run_segment(
+                        pipe, &fseg, &cur, env, &mut phases, None,
+                    )?,
+                };
+            }
+        }
+    }
+    Ok((cur, phases))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::groupby::{Agg, GroupByOptions};
+    use crate::ops::orderby::SortKey;
+
+    fn stages_of(p: &Pipeline) -> &[Stage] {
+        p.stages()
+    }
+
+    #[test]
+    fn plan_fuses_select_project_hash_join_groupby() {
+        let p = Pipeline::new()
+            .select("v >= 10")
+            .unwrap()
+            .project(&["grp", "v"])
+            .join(
+                "dim",
+                JoinOptions::inner("grp", "grp").with_algo(JoinAlgo::Hash),
+            )
+            .select("v < 90")
+            .unwrap()
+            .groupby(GroupByOptions::new(&["name"], vec![Agg::sum("v")]));
+        let segs = plan(stages_of(&p), false);
+        assert_eq!(
+            segs,
+            vec![Segment::Fused(FusedSegment {
+                start: 0,
+                end: 5,
+                join_at: Some(2),
+                group_at: Some(4),
+            })]
+        );
+    }
+
+    #[test]
+    fn plan_breaks_on_sort_join_and_orderby() {
+        let p = Pipeline::new()
+            .select("v >= 10")
+            .unwrap()
+            .join("dim", JoinOptions::inner("grp", "grp")) // Sort algo
+            .groupby(GroupByOptions::new(&["name"], vec![Agg::sum("v")]))
+            .orderby(vec![SortKey::asc("name")]);
+        let segs = plan(stages_of(&p), false);
+        assert_eq!(
+            segs,
+            vec![
+                Segment::Fused(FusedSegment {
+                    start: 0,
+                    end: 1,
+                    join_at: None,
+                    group_at: None,
+                }),
+                Segment::Breaker(1),
+                Segment::Fused(FusedSegment {
+                    start: 2,
+                    end: 3,
+                    join_at: None,
+                    group_at: Some(2),
+                }),
+                Segment::Breaker(3),
+            ]
+        );
+    }
+
+    #[test]
+    fn plan_splits_two_probes_and_dist_groupby() {
+        let hash = |l: &str, r: &str| {
+            JoinOptions::inner(l, r).with_algo(JoinAlgo::Hash)
+        };
+        let p = Pipeline::new()
+            .select("v >= 10")
+            .unwrap()
+            .join("a", hash("k", "k"))
+            .join("b", hash("k2", "k2"))
+            .groupby(GroupByOptions::new(&["k"], vec![Agg::sum("v")]));
+        // Local: one probe per segment; the second segment absorbs the
+        // terminal groupby.
+        let segs = plan(stages_of(&p), false);
+        assert_eq!(
+            segs,
+            vec![
+                Segment::Fused(FusedSegment {
+                    start: 0,
+                    end: 2,
+                    join_at: Some(1),
+                    group_at: None,
+                }),
+                Segment::Fused(FusedSegment {
+                    start: 2,
+                    end: 4,
+                    join_at: Some(2),
+                    group_at: Some(3),
+                }),
+            ]
+        );
+        // Distributed: probes start their own segments (shuffle is an
+        // exchange) and groupby is a breaker.
+        let dsegs = plan(stages_of(&p), true);
+        assert_eq!(
+            dsegs,
+            vec![
+                Segment::Fused(FusedSegment {
+                    start: 0,
+                    end: 1,
+                    join_at: None,
+                    group_at: None,
+                }),
+                Segment::Fused(FusedSegment {
+                    start: 1,
+                    end: 2,
+                    join_at: Some(1),
+                    group_at: None,
+                }),
+                Segment::Fused(FusedSegment {
+                    start: 2,
+                    end: 3,
+                    join_at: Some(2),
+                    group_at: None,
+                }),
+                Segment::Breaker(3),
+            ]
+        );
+    }
+}

@@ -5,6 +5,8 @@
 //! allow it, and the chunked shuffle bounds in-flight bytes for the
 //! stages that don't (backpressure end to end).
 
+mod fuse;
+
 use std::collections::HashMap;
 
 use crate::dist::{
@@ -164,40 +166,96 @@ impl Pipeline {
         })
     }
 
-    /// Execute locally (single partition).
+    /// Run one stage operator-at-a-time, locally. Shared by the
+    /// materialized executor below and the fused executor's breaker
+    /// path ([`fuse`]), so both paths run the exact same operator for
+    /// any stage that materialises.
+    fn run_stage_local(
+        stage: &Stage,
+        cur: &Table,
+        env: &Env,
+    ) -> Result<Table> {
+        match stage {
+            Stage::Select(p) => ops::select(cur, p),
+            Stage::Project(cols) => {
+                let names: Vec<&str> =
+                    cols.iter().map(|s| s.as_str()).collect();
+                ops::project(cur, &names)
+            }
+            Stage::Join { right, opts } => {
+                ops::join(cur, Self::side(env, right)?, opts)
+            }
+            Stage::Union { other } => {
+                ops::union(cur, Self::side(env, other)?)
+            }
+            Stage::Intersect { other } => {
+                ops::intersect(cur, Self::side(env, other)?)
+            }
+            Stage::Difference { other } => {
+                ops::difference(cur, Self::side(env, other)?)
+            }
+            Stage::GroupBy(opts) => ops::groupby(cur, opts),
+            Stage::OrderBy(keys) => ops::orderby(cur, keys),
+            Stage::Rebalance => Ok(cur.clone()),
+            Stage::Distinct => Ok(ops::distinct(cur)),
+        }
+    }
+
+    /// Run one stage SPMD on a rank (distributed operators for the
+    /// barrier stages, local operators for the element-wise ones) —
+    /// shared by the materialized executor and the fused breaker path.
+    fn run_stage_dist(
+        ctx: &mut RankCtx,
+        stage: &Stage,
+        cur: &Table,
+        env: &Env,
+    ) -> Result<Table> {
+        match stage {
+            Stage::Select(p) => ops::select(cur, p),
+            Stage::Project(cols) => {
+                let names: Vec<&str> =
+                    cols.iter().map(|s| s.as_str()).collect();
+                ops::project(cur, &names)
+            }
+            Stage::Join { right, opts } => {
+                dist_join(ctx, cur, Self::side(env, right)?, opts)
+            }
+            Stage::Union { other } => {
+                dist_union(ctx, cur, Self::side(env, other)?)
+            }
+            Stage::Intersect { other } => {
+                dist_intersect(ctx, cur, Self::side(env, other)?)
+            }
+            Stage::Difference { other } => {
+                dist_difference(ctx, cur, Self::side(env, other)?)
+            }
+            Stage::GroupBy(opts) => dist_groupby(ctx, cur, opts),
+            Stage::OrderBy(keys) => dist_sort(ctx, cur, keys),
+            Stage::Rebalance => rebalance(ctx, cur),
+            Stage::Distinct => {
+                let local = crate::dist::shuffle_all_columns(ctx, cur)?;
+                Ok(ops::distinct(&local))
+            }
+        }
+    }
+
+    /// Execute locally (single partition). With `[exec] pipeline_fuse`
+    /// on (the default), the stage chain is compiled into fused morsel
+    /// segments ([`fuse`], `docs/PIPELINE.md`); the operator-at-a-time
+    /// path below is the bit-identity oracle it is checked against.
     pub fn run_local(
         &self,
         input: &Table,
         env: &Env,
     ) -> Result<(Table, Phases)> {
+        if crate::exec::pipeline_fuse() {
+            return fuse::run_local(self, input, env);
+        }
         let mut phases = Phases::new();
         let mut cur = self.run_stream_prefix_local(input, &mut phases)?;
         for stage in self.stages.iter().skip(self.stream_prefix_len()) {
-            cur = phases.time(stage.name(), || -> Result<Table> {
-                match stage {
-                    Stage::Select(p) => ops::select(&cur, p),
-                    Stage::Project(cols) => {
-                        let names: Vec<&str> =
-                            cols.iter().map(|s| s.as_str()).collect();
-                        ops::project(&cur, &names)
-                    }
-                    Stage::Join { right, opts } => {
-                        ops::join(&cur, Self::side(env, right)?, opts)
-                    }
-                    Stage::Union { other } => {
-                        ops::union(&cur, Self::side(env, other)?)
-                    }
-                    Stage::Intersect { other } => {
-                        ops::intersect(&cur, Self::side(env, other)?)
-                    }
-                    Stage::Difference { other } => {
-                        ops::difference(&cur, Self::side(env, other)?)
-                    }
-                    Stage::GroupBy(opts) => ops::groupby(&cur, opts),
-                    Stage::OrderBy(keys) => ops::orderby(&cur, keys),
-                    Stage::Rebalance => Ok(cur.clone()),
-                    Stage::Distinct => Ok(ops::distinct(&cur)),
-                }
+            cur = phases.time(stage.name(), || {
+                Self::run_stage_local(stage, &cur, env)
             })?;
             phases.count("rows_out", cur.num_rows() as u64);
         }
@@ -205,45 +263,22 @@ impl Pipeline {
     }
 
     /// Execute SPMD on a rank (distributed operators for the barrier
-    /// stages, local operators for the element-wise ones).
+    /// stages, local operators for the element-wise ones). Honours the
+    /// `[exec] pipeline_fuse` knob exactly like [`Pipeline::run_local`].
     pub fn run_dist(
         &self,
         ctx: &mut RankCtx,
         input: &Table,
         env: &Env,
     ) -> Result<(Table, Phases)> {
+        if crate::exec::pipeline_fuse() {
+            return fuse::run_dist(self, ctx, input, env);
+        }
         let mut phases = Phases::new();
         let mut cur = self.run_stream_prefix_local(input, &mut phases)?;
         for stage in self.stages.iter().skip(self.stream_prefix_len()) {
             let t = crate::metrics::Timer::start();
-            cur = match stage {
-                Stage::Select(p) => ops::select(&cur, p)?,
-                Stage::Project(cols) => {
-                    let names: Vec<&str> =
-                        cols.iter().map(|s| s.as_str()).collect();
-                    ops::project(&cur, &names)?
-                }
-                Stage::Join { right, opts } => {
-                    dist_join(ctx, &cur, Self::side(env, right)?, opts)?
-                }
-                Stage::Union { other } => {
-                    dist_union(ctx, &cur, Self::side(env, other)?)?
-                }
-                Stage::Intersect { other } => {
-                    dist_intersect(ctx, &cur, Self::side(env, other)?)?
-                }
-                Stage::Difference { other } => {
-                    dist_difference(ctx, &cur, Self::side(env, other)?)?
-                }
-                Stage::GroupBy(opts) => dist_groupby(ctx, &cur, opts)?,
-                Stage::OrderBy(keys) => dist_sort(ctx, &cur, keys)?,
-                Stage::Rebalance => rebalance(ctx, &cur)?,
-                Stage::Distinct => {
-                    let local =
-                        crate::dist::shuffle_all_columns(ctx, &cur)?;
-                    ops::distinct(&local)
-                }
-            };
+            cur = Self::run_stage_dist(ctx, stage, &cur, env)?;
             phases.add_seconds(stage.name(), t.seconds());
             phases.count("rows_out", cur.num_rows() as u64);
         }
@@ -426,6 +461,116 @@ mod tests {
             rows
         };
         assert_eq!(sort(&gathered), sort(&local));
+    }
+
+    #[test]
+    fn fused_matches_materialized_local() {
+        use crate::ops::join::JoinAlgo;
+        let build = || {
+            Pipeline::new()
+                .select("v >= 10")
+                .unwrap()
+                .project(&["grp", "v"])
+                .join(
+                    "dim",
+                    JoinOptions::inner("grp", "grp")
+                        .with_algo(JoinAlgo::Hash),
+                )
+                .select("v < 90")
+                .unwrap()
+                .groupby(GroupByOptions::new(
+                    &["name"],
+                    vec![Agg::sum("v"), Agg::mean("v"), Agg::count("v")],
+                ))
+        };
+        let mut env = Env::new();
+        env.insert("dim".to_string(), dim());
+        let (fused, fp) = crate::exec::with_pipeline_fuse(true, || {
+            build().run_local(&input(), &env)
+        })
+        .unwrap();
+        let (mat, mp) = crate::exec::with_pipeline_fuse(false, || {
+            build().run_local(&input(), &env)
+        })
+        .unwrap();
+        // Bit-identity: schema, row order, values, validity bitmaps.
+        assert_eq!(fused, mat);
+        // Per-stage accounting survives fusion: same phase names, same
+        // cumulative rows_out.
+        assert_eq!(fp.counter("rows_out"), mp.counter("rows_out"));
+        for phase in ["select", "project", "join", "groupby"] {
+            assert!(fp.seconds(phase) >= 0.0, "{phase} slot missing");
+        }
+    }
+
+    #[test]
+    fn fused_left_join_matches_materialized() {
+        use crate::ops::join::{JoinAlgo, JoinType};
+        // dim covers only grp 0..3 → unmatched probe rows null-extend
+        // the right side (exercises the validity force rule).
+        let dim_small = Table::from_columns(vec![
+            ("grp", Column::from_i64((0..3).collect())),
+            ("name", Column::from_str(&["a", "b", "c"])),
+        ])
+        .unwrap();
+        let build = || {
+            Pipeline::new()
+                .join(
+                    "dim",
+                    JoinOptions::new(JoinType::Left, &["grp"], &["grp"])
+                        .with_algo(JoinAlgo::Hash),
+                )
+                .select("v < 50")
+                .unwrap()
+        };
+        let mut env = Env::new();
+        env.insert("dim".to_string(), dim_small);
+        let (fused, _) = crate::exec::with_pipeline_fuse(true, || {
+            build().run_local(&input(), &env)
+        })
+        .unwrap();
+        let (mat, _) = crate::exec::with_pipeline_fuse(false, || {
+            build().run_local(&input(), &env)
+        })
+        .unwrap();
+        assert_eq!(fused, mat);
+        // The surviving filter range keeps some unmatched rows, so the
+        // right-side columns must carry a validity bitmap either way.
+        assert!(fused
+            .column_by_name("name")
+            .unwrap()
+            .validity()
+            .is_some());
+    }
+
+    #[test]
+    fn fused_errors_match_materialized() {
+        use crate::ops::join::JoinAlgo;
+        // Post-join select over a column that exists in neither input:
+        // the fused plan walk must surface the materialized path's
+        // error, not a different one from a later stage.
+        let build = || {
+            Pipeline::new()
+                .join(
+                    "dim",
+                    JoinOptions::inner("grp", "grp")
+                        .with_algo(JoinAlgo::Hash),
+                )
+                .select("ghost >= 1")
+                .unwrap()
+                .groupby(GroupByOptions::new(&[], vec![]))
+        };
+        let mut env = Env::new();
+        env.insert("dim".to_string(), dim());
+        let fe = crate::exec::with_pipeline_fuse(true, || {
+            build().run_local(&input(), &env)
+        })
+        .unwrap_err();
+        let me = crate::exec::with_pipeline_fuse(false, || {
+            build().run_local(&input(), &env)
+        })
+        .unwrap_err();
+        assert_eq!(format!("{fe:?}"), format!("{me:?}"));
     }
 
     #[test]

@@ -275,6 +275,112 @@ fn panic_injection_matrix() {
 }
 
 #[test]
+fn fused_segment_fault_aborts_symmetrically_with_innermost_label() {
+    // A fault injected mid-pipeline — during the shuffles inside a
+    // *fused* select→probe→select segment — must produce the same
+    // symmetric, attributed abort as the materialized executor: every
+    // rank's job fails, every observed attribution names the injected
+    // rank, and the op label is the innermost collective operator
+    // ("dist_join"), not a fused-segment pseudo-op.
+    use std::collections::HashMap;
+
+    use rylon::ops::join::JoinAlgo;
+    use rylon::pipeline::Pipeline;
+    use rylon::table::Table;
+
+    quiet_injected_panics();
+    let world = 2usize;
+    let mut fired = 0u32;
+    for kind in ["error", "panic"] {
+        for exchange in 0..3u64 {
+            let plan = format!("{kind}@1:{exchange}");
+            let label = format!("fused pipeline plan={plan}");
+            let cluster = Cluster::new(
+                DistConfig::threads(world)
+                    .with_intra_op_threads(1)
+                    .with_fault_plan(plan.as_str())
+                    .with_pipeline_fuse(true)
+                    .with_collective_timeout_ms(TIMEOUT_MS),
+            )
+            .unwrap();
+            let slots: Vec<Mutex<Option<(usize, String, u64)>>> =
+                (0..world).map(|_| Mutex::new(None)).collect();
+            let r: rylon::Result<Vec<Table>> = cluster.run(|ctx| {
+                let fact = gen_partition(
+                    &DataGenSpec::paper_scaling(400, 7),
+                    ctx.rank,
+                    ctx.size,
+                )?;
+                let dim = gen_partition(
+                    &DataGenSpec::paper_scaling(160, 8),
+                    ctx.rank,
+                    ctx.size,
+                )?;
+                let mut env: HashMap<String, Table> = HashMap::new();
+                env.insert("dim".to_string(), dim);
+                let pipe = Pipeline::new()
+                    .select("id >= 0")?
+                    .join(
+                        "dim",
+                        JoinOptions::inner("id", "id")
+                            .with_algo(JoinAlgo::Hash),
+                    )
+                    .select("id >= 0")?;
+                let out = pipe.run_dist(ctx, &fact, &env).map(|(t, _)| t);
+                if let Err(e) = &out {
+                    if let Some(i) = e.abort_info() {
+                        *slots[ctx.rank].lock().unwrap() =
+                            Some((i.rank, i.op.clone(), i.step));
+                    }
+                }
+                out
+            });
+            if cluster.injected_faults() == 0 {
+                // These coordinates sit past the job's last exchange —
+                // it must have run clean.
+                assert!(
+                    r.is_ok(),
+                    "{label}: plan never fired yet the job failed: {}",
+                    r.err().map(|e| e.to_string()).unwrap_or_default()
+                );
+                continue;
+            }
+            fired += 1;
+            let e = r.expect_err(&format!(
+                "{label}: fault fired but the job succeeded"
+            ));
+            let info = e.abort_info().unwrap_or_else(|| {
+                panic!("{label}: unattributed job error: {e}")
+            });
+            assert_eq!(info.rank, 1, "{label}: wrong rank blamed ({e})");
+            assert_eq!(
+                info.op, "dist_join",
+                "{label}: fused segment must attribute the innermost \
+                 operator"
+            );
+            let attrs: Vec<(usize, String, u64)> = slots
+                .iter()
+                .filter_map(|s| s.lock().unwrap().clone())
+                .collect();
+            assert!(!attrs.is_empty(), "{label}: no rank saw the abort");
+            for a in &attrs {
+                assert_eq!(
+                    a,
+                    &attrs[0],
+                    "{label}: ranks disagree on attribution"
+                );
+                assert_eq!(a.1, "dist_join", "{label}");
+            }
+            cluster.clear_fault();
+        }
+    }
+    assert!(
+        fired > 0,
+        "no injection coordinate fired inside the fused segment"
+    );
+}
+
+#[test]
 fn delay_plus_timeout_attributes_the_laggard() {
     // Rank 1 stalls 400 ms before its second exchange; the 60 ms
     // collective timeout must convert rank 0's eternal park into a

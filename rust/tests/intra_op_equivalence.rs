@@ -613,6 +613,162 @@ fn build_parallel_chains_identical_buckets() {
 }
 
 #[test]
+fn fused_pipeline_bit_identical_matrix() {
+    // The fused-executor acceptance gate: every fusable stage chain
+    // must produce a **bit-identical** table — and the same `rows_out`
+    // total — whether the chain runs operator-at-a-time (each stage
+    // materialises a `Table`) or as fused morsel segments (one pass
+    // per morsel, no intermediates). The matrix crosses chains ×
+    // 1/2/4/8 morsel workers × steal on/off × batch_rows, so fusion
+    // is checked against every scheduler the executor has.
+    use std::collections::HashMap;
+    use rylon::pipeline::Pipeline;
+
+    let fact = random_table(31, 30_000, 600, 6);
+    let mut rng = Xoshiro256::new(32);
+    let dim_rows = 2_000usize;
+    let dkeys: Vec<i64> =
+        (0..dim_rows).map(|_| rng.next_below(500) as i64).collect();
+    let dim = Table::from_columns(vec![
+        ("k", Column::from_i64(dkeys.clone())),
+        (
+            "w",
+            Column::from_f64(
+                (0..dim_rows).map(|_| rng.next_f64() * 10.0).collect(),
+            ),
+        ),
+        (
+            "name",
+            Column::from_str(
+                &dkeys
+                    .iter()
+                    .map(|k| format!("n{}", k % 20))
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+    .unwrap();
+    let mut env: HashMap<String, Table> = HashMap::new();
+    env.insert("dim".to_string(), dim);
+
+    let inner = || {
+        JoinOptions::new(JoinType::Inner, &["k"], &["k"])
+            .with_algo(JoinAlgo::Hash)
+    };
+    let left = || {
+        JoinOptions::new(JoinType::Left, &["k"], &["k"])
+            .with_algo(JoinAlgo::Hash)
+    };
+    let aggs = || {
+        vec![Agg::sum("v"), Agg::count("v"), Agg::mean("w")]
+    };
+    // Each chain ends a different way through the planner: pure
+    // streamable run, probe-terminated segment, left-join fold with a
+    // nullable probe side, the full select→project→probe→select→
+    // partial-agg pass, and a breaker (orderby) splitting two fused
+    // segments.
+    let chains: Vec<(&str, Box<dyn Fn() -> Pipeline>)> = vec![
+        (
+            "select_project",
+            Box::new(|| {
+                Pipeline::new()
+                    .select("v > -20 and k < 600")
+                    .unwrap()
+                    .project(&["k", "v"])
+            }),
+        ),
+        (
+            "select_project_probe_select",
+            Box::new(move || {
+                Pipeline::new()
+                    .select("v > -60")
+                    .unwrap()
+                    .project(&["k", "v"])
+                    .join("dim", inner())
+                    .select("w < 8")
+                    .unwrap()
+            }),
+        ),
+        (
+            "left_probe_groupby",
+            Box::new(move || {
+                Pipeline::new()
+                    .select("k is not null")
+                    .unwrap()
+                    .join("dim", left())
+                    .groupby(GroupByOptions::new(&["name"], aggs()))
+            }),
+        ),
+        (
+            "full_fused_pass",
+            Box::new(move || {
+                Pipeline::new()
+                    .select("v > -60 and k < 550")
+                    .unwrap()
+                    .project(&["k", "v"])
+                    .join("dim", inner())
+                    .select("w < 9")
+                    .unwrap()
+                    .groupby(GroupByOptions::new(&["k"], aggs()))
+            }),
+        ),
+        (
+            "segments_split_by_orderby",
+            Box::new(move || {
+                Pipeline::new()
+                    .select("v > -60")
+                    .unwrap()
+                    .join("dim", inner())
+                    .orderby(vec![SortKey::asc("k"), SortKey::desc("name")])
+                    .groupby(GroupByOptions::new(&["name"], aggs()))
+            }),
+        ),
+    ];
+
+    for (cname, chain) in &chains {
+        // The `rows_out` oracle comes from the *unbatched* materialized
+        // run: the batched streaming prefix times its stages but books
+        // no row counts, while the fused executor (which ignores
+        // batching — fusion already bounds intermediates) books every
+        // stage at any batch_rows.
+        let (_, oracle_phases) = exec::with_intra_op_threads(1, || {
+            exec::with_pipeline_fuse(false, || {
+                chain().run_local(&fact, &env).unwrap()
+            })
+        });
+        for batch_rows in [0usize, 1024] {
+            let pipe = chain().with_batch_rows(batch_rows);
+            let run = || pipe.run_local(&fact, &env).unwrap();
+            // Serial operator-at-a-time output is the oracle.
+            let (mat, _) = exec::with_intra_op_threads(1, || {
+                exec::with_pipeline_fuse(false, run)
+            });
+            for threads in [1usize, 2, 4, 8] {
+                for steal in [true, false] {
+                    let (fused, phases) =
+                        exec::with_intra_op_threads(threads, || {
+                            exec::with_work_steal(steal, || {
+                                exec::with_pipeline_fuse(true, run)
+                            })
+                        });
+                    assert_eq!(
+                        fused, mat,
+                        "{cname} fused diverged at {threads} threads, \
+                         steal={steal}, batch_rows={batch_rows}"
+                    );
+                    assert_eq!(
+                        phases.counter("rows_out"),
+                        oracle_phases.counter("rows_out"),
+                        "{cname} rows_out diverged at {threads} threads, \
+                         steal={steal}, batch_rows={batch_rows}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn pipeline_end_to_end_bit_identical() {
     // A realistic chain: filter → join → groupby → orderby, all under
     // one parallel budget vs serial.
