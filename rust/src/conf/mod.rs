@@ -151,8 +151,16 @@ fn opt_bool(f: &ConfFile, key: &str) -> Option<bool> {
 pub struct RylonConfig {
     /// World size (ranks).
     pub world: usize,
-    /// `"threads"` or `"sim"`.
+    /// `"threads"`, `"sim"`, or `"tcp"` (`[cluster] fabric`; default
+    /// [`crate::exec::FABRIC`], overridable via the `RYLON_FABRIC` env
+    /// var). `"tcp"` runs one OS process per rank, meeting at
+    /// [`RylonConfig::rendezvous`] (`docs/NET.md`).
     pub fabric: String,
+    /// TCP rendezvous address, `host:port` (`[cluster] rendezvous`;
+    /// default [`crate::exec::RENDEZVOUS`], overridable via the
+    /// `RYLON_RENDEZVOUS` env var). Rank 0 listens there; every other
+    /// rank dials it. Ignored by the in-process fabrics.
+    pub rendezvous: String,
     pub shuffle_chunk_rows: usize,
     /// Morsel workers per rank for the local compute kernels
     /// (`[exec] intra_op_threads`). `0` = auto: available cores /
@@ -208,7 +216,8 @@ impl Default for RylonConfig {
     fn default() -> Self {
         RylonConfig {
             world: 4,
-            fabric: "threads".to_string(),
+            fabric: crate::exec::default_fabric().to_string(),
+            rendezvous: crate::exec::default_rendezvous().to_string(),
             shuffle_chunk_rows: 1 << 16,
             intra_op_threads: 0,
             par_row_threshold: crate::exec::PAR_ROW_THRESHOLD,
@@ -232,6 +241,7 @@ impl RylonConfig {
         RylonConfig {
             world: f.usize_or("cluster.world", d.world),
             fabric: f.str_or("cluster.fabric", &d.fabric),
+            rendezvous: f.str_or("cluster.rendezvous", &d.rendezvous),
             shuffle_chunk_rows: f
                 .usize_or("shuffle.chunk_rows", d.shuffle_chunk_rows),
             intra_op_threads: f
@@ -346,6 +356,19 @@ ranks_per_node = 8
         // Untouched keys keep defaults.
         assert_eq!(c.artifacts_dir, "artifacts");
         assert_eq!(c.cost.beta, CostModel::default().beta);
+        assert_eq!(c.rendezvous, crate::exec::default_rendezvous());
+    }
+
+    #[test]
+    fn tcp_fabric_keys() {
+        let f = ConfFile::parse(
+            "[cluster]\nfabric = \"tcp\"\n\
+             rendezvous = \"10.0.0.7:4040\"",
+        )
+        .unwrap();
+        let c = RylonConfig::from_file(&f);
+        assert_eq!(c.fabric, "tcp");
+        assert_eq!(c.rendezvous, "10.0.0.7:4040");
     }
 
     #[test]

@@ -125,13 +125,22 @@ pub fn shuffle_with(
             }
         }
         let incoming = ctx.fabric().exchange(ctx.rank, out)?;
-        for buf in incoming {
+        for (src, buf) in incoming.iter().enumerate() {
             if !buf.is_empty() {
-                received.push(deserialize_table(&buf)?);
+                received.push(deserialize_from_rank(buf, src)?);
             }
         }
     }
     Table::concat_all(table.schema(), &received)
+}
+
+/// Decode one peer's shuffle frame, attributing a malformed frame to
+/// the rank that sent it (the wire hardening of `net::wire` rejects
+/// corrupt counts/offsets; this names the culprit).
+fn deserialize_from_rank(buf: &[u8], src: usize) -> Result<Table> {
+    deserialize_table(buf).map_err(|e| {
+        RylonError::comm(format!("malformed frame from rank {src}: {e}"))
+    })
 }
 
 /// Even out partition sizes across ranks while preserving the global
@@ -178,9 +187,9 @@ pub fn rebalance(ctx: &mut RankCtx, table: &Table) -> Result<Table> {
     // Sources arrive in rank order and each sent a contiguous ascending
     // slice, so concatenation preserves the global order.
     let mut parts = Vec::new();
-    for buf in incoming {
+    for (src, buf) in incoming.iter().enumerate() {
         if !buf.is_empty() {
-            parts.push(deserialize_table(&buf)?);
+            parts.push(deserialize_from_rank(buf, src)?);
         }
     }
     Table::concat_all(table.schema(), &parts)

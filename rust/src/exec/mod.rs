@@ -117,6 +117,22 @@ pub const PIPELINE_FUSE: bool = true;
 /// `FAULT_PLAN` env var (the CI fault-injection leg).
 pub const FAULT_PLAN: &str = "";
 
+/// Default for the `[cluster] fabric` knob: real rank threads in one
+/// process. `sim` is the calibrated BSP simulator; `tcp` runs one OS
+/// process per rank over sockets (`docs/NET.md`), rendezvousing at
+/// [`RENDEZVOUS`]. Override per run on the CLI with `--fabric`, in
+/// config via `[cluster] fabric`, or process-wide with the
+/// `RYLON_FABRIC` env var; library code picks a fabric explicitly via
+/// `DistConfig`.
+pub const FABRIC: &str = "threads";
+
+/// Default for the `[cluster] rendezvous` knob: where a TCP job's
+/// ranks meet (`host:port`; rank 0 listens there, every other rank
+/// dials it — `docs/NET.md`). Override per run on the CLI with
+/// `--rendezvous`, in config via `[cluster] rendezvous`, or
+/// process-wide with the `RYLON_RENDEZVOUS` env var.
+pub const RENDEZVOUS: &str = "127.0.0.1:29400";
+
 /// Default for the `[exec] collective_timeout_ms` knob: `0` = no
 /// timeout (a rank that never arrives at a collective parks its peers
 /// forever — the pre-fault-domain behaviour). A non-zero value bounds
@@ -250,6 +266,29 @@ pub fn default_collective_timeout_ms() -> u64 {
             .ok()
             .and_then(|v| v.parse::<u64>().ok())
             .unwrap_or(COLLECTIVE_TIMEOUT_MS)
+    })
+}
+
+/// The process-wide default fabric name: the `RYLON_FABRIC` env var,
+/// else [`FABRIC`] (`threads`). Read once. Flows into configuration
+/// defaults (`conf::RylonConfig`, the CLI) — *not* into
+/// `DistConfig::default()`, so library callers always get the fabric
+/// they name.
+pub fn default_fabric() -> &'static str {
+    static DEFAULT: OnceLock<String> = OnceLock::new();
+    DEFAULT.get_or_init(|| {
+        std::env::var("RYLON_FABRIC").unwrap_or_else(|_| FABRIC.into())
+    })
+}
+
+/// The process-wide default rendezvous address: the `RYLON_RENDEZVOUS`
+/// env var, else [`RENDEZVOUS`]. Read once; flows into configuration
+/// defaults like [`default_fabric`].
+pub fn default_rendezvous() -> &'static str {
+    static DEFAULT: OnceLock<String> = OnceLock::new();
+    DEFAULT.get_or_init(|| {
+        std::env::var("RYLON_RENDEZVOUS")
+            .unwrap_or_else(|_| RENDEZVOUS.into())
     })
 }
 

@@ -19,6 +19,7 @@ use rylon::dist::{Cluster, DistConfig, FabricKind};
 use rylon::error::{Result, RylonError};
 use rylon::io::csv::{read_csv, write_csv, CsvOptions};
 use rylon::io::datagen::{gen_table, DataGenSpec, KeyDist};
+use rylon::net::tcp::TcpOpts;
 use rylon::ops::groupby::{Agg, GroupByOptions};
 use rylon::ops::join::JoinOptions;
 use rylon::pipeline::{Env, Pipeline};
@@ -36,8 +37,9 @@ COMMANDS
            [--seed S] --out FILE.csv
   inspect  --in FILE.csv [--rows N]
   join     --left L.csv --right R.csv --on KEY [--how inner|left|right|outer]
-           [--algo sort|hash] [--world P] [--fabric threads|sim] [--out F.csv]
-  etl      [--rows N] [--world P] [--fabric threads|sim]
+           [--algo sort|hash] [--world P] [--fabric threads|sim|tcp]
+           [--out F.csv]
+  etl      [--rows N] [--world P] [--fabric threads|sim|tcp]
            [--artifacts DIR]   (end-to-end demo pipeline + tensor bridge)
   bench    --fig fig10|fig11|fig12|ablations [--rows N] [--samples K]
            [--max-world P] [--artifacts DIR]
@@ -50,6 +52,15 @@ COMMANDS
 
 GLOBAL FLAGS
   --config FILE.toml    load defaults from a config file
+  --fabric KIND         communication substrate for cluster commands:
+                        threads (rank threads, default), sim (BSP cost
+                        model), tcp (one OS process per rank over
+                        loopback/LAN sockets — docs/NET.md)
+  --rendezvous ADDR     host:port where tcp ranks meet (default
+                        127.0.0.1:29400; rank 0 listens, peers dial)
+  --rank R              join an already-launched tcp job as rank R;
+                        without it, join/etl under --fabric tcp
+                        self-launch all world rank processes and wait
   --intra-threads N     morsel workers per rank for local kernels
                         (0 = auto: cores/world; 1 = serial ranks)
   --par-threshold N     rows below which kernels stay serial
@@ -76,8 +87,9 @@ GLOBAL FLAGS
                         either way — docs/PIPELINE.md)
   --fault-plan PLAN     deterministic fault injection for cluster
                         commands: comma-separated kind@rank:exchange
-                        entries, kind = error|panic|delayMS (e.g.
-                        'error@1:2'); empty = off (docs/FAULTS.md)
+                        entries, kind = error|panic|exit|delayMS (e.g.
+                        'error@1:2'; exit kills the whole rank process
+                        — tcp fabric only); empty = off (docs/FAULTS.md)
   --collective-timeout MS
                         abort any collective not completing within MS
                         milliseconds, blaming the missing rank
@@ -161,9 +173,30 @@ fn make_cluster(
     let kind = match fabric.as_str() {
         "threads" => FabricKind::Threads,
         "sim" => FabricKind::Sim(cfg.cost),
+        "tcp" => {
+            let rank = match args.str("rank") {
+                Some(v) => v.parse::<usize>().map_err(|_| {
+                    RylonError::invalid(format!(
+                        "flag --rank wants a rank number, got '{v}'"
+                    ))
+                })?,
+                None => {
+                    return Err(RylonError::invalid(
+                        "tcp fabric needs --rank R (join/etl launch \
+                         rank processes automatically when --rank is \
+                         omitted)",
+                    ))
+                }
+            };
+            let rendezvous = args
+                .str("rendezvous")
+                .unwrap_or(&cfg.rendezvous)
+                .to_string();
+            FabricKind::Tcp(TcpOpts::new(rank, rendezvous))
+        }
         other => {
             return Err(RylonError::invalid(format!(
-                "unknown fabric '{other}' (threads|sim)"
+                "unknown fabric '{other}' (threads|sim|tcp)"
             )))
         }
     };
@@ -198,6 +231,79 @@ fn make_cluster(
             None => cfg.collective_timeout_ms,
         },
     })
+}
+
+/// Whether this invocation should act as the TCP *launcher*: the user
+/// picked the tcp fabric for a cluster command but gave no `--rank`,
+/// so this process spawns all `world` rank processes (each re-running
+/// the same command line plus `--rank R`) and waits for them.
+fn tcp_launcher_selected(args: &Args, cfg: &RylonConfig) -> bool {
+    args.str("fabric").unwrap_or(&cfg.fabric) == "tcp"
+        && args.str("rank").is_none()
+}
+
+/// Spawn one rank process per rank of a TCP job and wait for all of
+/// them, reporting every rank that exited with failure. The children
+/// re-run this binary with the original command line plus explicit
+/// `--fabric tcp --world W --rendezvous ADDR --rank R` (the flag
+/// parser is last-wins, so replaying the original argv first is safe).
+fn launch_tcp_ranks(
+    argv: &[String],
+    args: &Args,
+    cfg: &RylonConfig,
+) -> Result<()> {
+    let world = args.usize_or("world", cfg.world);
+    let rendezvous = args
+        .str("rendezvous")
+        .unwrap_or(&cfg.rendezvous)
+        .to_string();
+    let exe = std::env::current_exe().map_err(|e| {
+        RylonError::invalid(format!(
+            "tcp launch: cannot locate this executable: {e}"
+        ))
+    })?;
+    println!(
+        "== rylon tcp launch: {world} rank processes, rendezvous \
+         {rendezvous} =="
+    );
+    let mut children = Vec::with_capacity(world);
+    for rank in 0..world {
+        let child = std::process::Command::new(&exe)
+            .args(argv)
+            .arg("--fabric")
+            .arg("tcp")
+            .arg("--world")
+            .arg(world.to_string())
+            .arg("--rendezvous")
+            .arg(&rendezvous)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .spawn()
+            .map_err(|e| {
+                // Reap what already launched; their handshake will
+                // fail without the missing sibling anyway.
+                RylonError::invalid(format!(
+                    "tcp launch: cannot spawn rank {rank}: {e}"
+                ))
+            })?;
+        children.push((rank, child));
+    }
+    let mut failed: Vec<usize> = Vec::new();
+    for (rank, mut child) in children {
+        let ok = child.wait().map(|s| s.success()).unwrap_or(false);
+        if !ok {
+            failed.push(rank);
+        }
+    }
+    if failed.is_empty() {
+        println!("== all {world} ranks completed ==");
+        Ok(())
+    } else {
+        Err(RylonError::comm(format!(
+            "tcp launch: rank(s) {failed:?} exited with failure (see \
+             their stderr above)"
+        )))
+    }
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
@@ -287,11 +393,17 @@ fn cmd_join(args: &Args, cfg: &RylonConfig) -> Result<()> {
             .map(|m| format!(" (simulated makespan {m:.4}s)"))
             .unwrap_or_default()
     );
+    // On the tcp fabric each process holds only its own rank's
+    // partition; only rank 0's process writes, and what it writes is
+    // its local partition (docs/NET.md) — in-process fabrics still
+    // merge all ranks.
     if let Some(out) = args.str("out") {
-        let merged =
-            rylon::table::Table::concat_all(outs[0].schema(), &outs)?;
-        write_csv(&merged, out, &CsvOptions::default())?;
-        println!("wrote {out}");
+        if cluster.local_ranks().contains(&0) {
+            let merged =
+                rylon::table::Table::concat_all(outs[0].schema(), &outs)?;
+            write_csv(&merged, out, &CsvOptions::default())?;
+            println!("wrote {out}");
+        }
     }
     Ok(())
 }
@@ -676,6 +788,11 @@ fn run() -> Result<()> {
     match args.cmd.as_str() {
         "gen" => cmd_gen(&args),
         "inspect" => cmd_inspect(&args),
+        // Cluster commands on the tcp fabric with no --rank: this
+        // process is the launcher, not a rank.
+        "join" | "etl" if tcp_launcher_selected(&args, &cfg) => {
+            launch_tcp_ranks(&argv, &args, &cfg)
+        }
         "join" => cmd_join(&args, &cfg),
         "etl" => cmd_etl(&args, &cfg),
         "bench" => cmd_bench(&args, &cfg),

@@ -4,8 +4,26 @@
 //! user-facing API never sees them (paper §IV: "We do not expose the
 //! communication API to the data scientist").
 
-use crate::error::Result;
+use crate::error::{Result, RylonError};
 use crate::net::{Fabric, OutBufs, ReduceOp};
+
+/// Validate a peer's allreduce contribution: every rank must send
+/// exactly `n` little-endian 8-byte words. A short, long, or ragged
+/// buffer used to be silently truncated by `chunks_exact` (or to panic
+/// on the accumulator index) — now it is the symmetric, rank-attributed
+/// comm error the fault domain promises (`docs/FAULTS.md`).
+fn check_allreduce_buf(src: usize, buf: &[u8], n: usize) -> Result<()> {
+    if buf.len() == n * 8 {
+        Ok(())
+    } else {
+        Err(RylonError::comm(format!(
+            "allreduce: rank {src} sent {} bytes, expected {} \
+             ({n} × 8-byte words)",
+            buf.len(),
+            n * 8
+        )))
+    }
+}
 
 /// Synchronise all ranks.
 pub fn barrier(fabric: &dyn Fabric, rank: usize) -> Result<()> {
@@ -76,6 +94,7 @@ pub fn allreduce_f64(
         if src == rank {
             continue;
         }
+        check_allreduce_buf(src, buf, vals.len())?;
         for (i, chunk) in buf.chunks_exact(8).enumerate() {
             let v = f64::from_le_bytes(chunk.try_into().unwrap());
             acc[i] = op.fold(acc[i], v);
@@ -99,6 +118,7 @@ pub fn allreduce_u64(
         if src == rank {
             continue;
         }
+        check_allreduce_buf(src, buf, vals.len())?;
         for (i, chunk) in buf.chunks_exact(8).enumerate() {
             let v = u64::from_le_bytes(chunk.try_into().unwrap());
             acc[i] = match op {
@@ -182,6 +202,63 @@ mod tests {
         for r in results {
             assert_eq!(r, b"hello");
         }
+    }
+
+    /// One-rank fabric that hands back attacker-controlled "peer"
+    /// buffers: incoming[0] is the rank's own (valid) contribution,
+    /// incoming[1] the canned ragged one.
+    struct RaggedFabric {
+        peer_buf: Vec<u8>,
+    }
+
+    impl Fabric for RaggedFabric {
+        fn size(&self) -> usize {
+            2
+        }
+
+        fn exchange(
+            &self,
+            _rank: usize,
+            outgoing: OutBufs,
+        ) -> Result<OutBufs> {
+            let own = outgoing.into_iter().next().unwrap();
+            Ok(vec![own, self.peer_buf.clone()])
+        }
+    }
+
+    #[test]
+    fn allreduce_rejects_short_ragged_and_long_peer_buffers() {
+        for bad_len in [0usize, 7, 8, 9, 24] {
+            let fab = RaggedFabric {
+                peer_buf: vec![0u8; bad_len],
+            };
+            let vals = [1.0f64, 2.0];
+            let e = allreduce_f64(&fab, 0, &vals, ReduceOp::Sum)
+                .unwrap_err();
+            assert!(
+                e.to_string().contains("rank 1 sent"),
+                "len={bad_len}: {e}"
+            );
+            let e = allreduce_u64(&fab, 0, &[1, 2], ReduceOp::Max)
+                .unwrap_err();
+            assert!(
+                e.to_string().contains("expected 16"),
+                "len={bad_len}: {e}"
+            );
+        }
+        // Exact length still reduces.
+        let fab = RaggedFabric {
+            peer_buf: 5u64
+                .to_le_bytes()
+                .iter()
+                .chain(&7u64.to_le_bytes())
+                .copied()
+                .collect(),
+        };
+        assert_eq!(
+            allreduce_u64(&fab, 0, &[1, 2], ReduceOp::Sum).unwrap(),
+            vec![6, 9]
+        );
     }
 
     #[test]

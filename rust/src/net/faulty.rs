@@ -8,17 +8,23 @@
 //! ```text
 //! plan      := entry ("," entry)*  |  ""        (empty = no faults)
 //! entry     := kind "@" rank ":" exchange
-//! kind      := "error" | "panic" | "delay" MILLIS
+//! kind      := "error" | "panic" | "exit" | "delay" MILLIS
 //! ```
 //!
 //! `error@1:2` makes rank 1's third exchange return a comm error;
 //! `panic@0:0` panics rank 0 on its first exchange; `delay250@2:1`
 //! parks rank 2 for 250 ms before its second exchange (pair with
 //! `[exec] collective_timeout_ms` to turn the hang into a symmetric
-//! abort). Plans are fully explicit — no RNG — so every injection is
-//! reproducible by construction. Entries whose rank is outside the
-//! world size simply never fire, letting one process-wide `FAULT_PLAN`
-//! target a specific world size.
+//! abort); `exit@1:3` kills rank 1's **whole OS process**
+//! (`std::process::exit`, no unwinding, no goodbye) at its fourth
+//! exchange — the deterministic stand-in for SIGKILL that the TCP
+//! fabric's peer-death tests are built on (meaningless on the
+//! in-process fabrics, where it would take every rank down; the CI
+//! kill-a-rank leg uses it only under `--fabric tcp`). Plans are fully
+//! explicit — no RNG — so every injection is reproducible by
+//! construction. Entries whose rank is outside the world size simply
+//! never fire, letting one process-wide `FAULT_PLAN` target a specific
+//! world size.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -33,9 +39,18 @@ pub enum FaultKind {
     Error,
     /// The injected rank panics (exercising the panic→abort route).
     Panic,
+    /// The injected rank's whole process exits immediately (code
+    /// [`EXIT_CODE`], no unwinding) — deterministic peer death for the
+    /// multi-process TCP fabric's survivor tests.
+    Exit,
     /// The injected rank sleeps this many milliseconds, then proceeds.
     Delay(u64),
 }
+
+/// Exit code of an `exit@rank:exchange` injection, distinct from the
+/// CLI's generic failure code 1 so the launcher's report shows *which*
+/// failure mode a dead rank took.
+pub const EXIT_CODE: i32 = 86;
 
 /// One injection point: fire `kind` when `rank` makes its
 /// `exchange`-th fabric exchange (0-based).
@@ -92,6 +107,7 @@ impl FaultPlan {
             let kind = match kind_s {
                 "error" => FaultKind::Error,
                 "panic" => FaultKind::Panic,
+                "exit" => FaultKind::Exit,
                 _ => match kind_s.strip_prefix("delay") {
                     Some(ms_s) => {
                         let ms: u64 = ms_s.parse().map_err(|_| {
@@ -105,7 +121,7 @@ impl FaultPlan {
                     None => {
                         return Err(RylonError::invalid(format!(
                             "fault plan entry '{entry}': unknown kind \
-                             '{kind_s}' (error|panic|delayMS)"
+                             '{kind_s}' (error|panic|exit|delayMS)"
                         )))
                     }
                 },
@@ -184,6 +200,15 @@ impl Fabric for FaultyFabric {
                 FaultKind::Panic => {
                     panic!("injected panic at rank {rank}, exchange #{n}")
                 }
+                FaultKind::Exit => {
+                    // Deterministic SIGKILL stand-in: no unwinding, no
+                    // Drop impls, no goodbye frames. Peers must detect
+                    // the death through the fabric (EOF on TCP).
+                    eprintln!(
+                        "injected exit at rank {rank}, exchange #{n}"
+                    );
+                    std::process::exit(EXIT_CODE);
+                }
                 FaultKind::Delay(ms) => {
                     std::thread::sleep(Duration::from_millis(ms));
                 }
@@ -233,8 +258,10 @@ mod tests {
 
     #[test]
     fn plan_grammar_parses() {
-        let plan =
-            FaultPlan::parse("error@1:2, panic@0:0,delay250@2:1").unwrap();
+        let plan = FaultPlan::parse(
+            "error@1:2, panic@0:0,delay250@2:1, exit@3:4",
+        )
+        .unwrap();
         assert_eq!(
             plan.points(),
             &[
@@ -252,6 +279,11 @@ mod tests {
                     rank: 2,
                     exchange: 1,
                     kind: FaultKind::Delay(250)
+                },
+                FaultPoint {
+                    rank: 3,
+                    exchange: 4,
+                    kind: FaultKind::Exit
                 },
             ]
         );

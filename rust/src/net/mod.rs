@@ -8,7 +8,7 @@
 //! collectives (barrier / gather / allgather / bcast / allreduce) derive
 //! from it in [`collectives`].
 //!
-//! Two fabrics implement the primitive:
+//! Three fabrics implement the primitive:
 //! * [`local::LocalFabric`] — real shared-memory rendezvous between rank
 //!   threads (one thread per worker, paper §III-B). Used by every
 //!   correctness test.
@@ -17,12 +17,16 @@
 //!   and communication is charged `α·(p−1) + bytes/β`, yielding the
 //!   simulated makespan used for the paper's scaling figures on this
 //!   single-core box (DESIGN.md §3).
+//! * [`tcp::TcpFabric`] — one OS process per rank over TCP sockets
+//!   (rendezvous handshake, framed exchange, peer-death detection):
+//!   the paper's actual MPI-style deployment model (`docs/NET.md`).
 
 pub mod checked;
 pub mod collectives;
 pub mod faulty;
 pub mod local;
 pub mod sim;
+pub mod tcp;
 pub mod wire;
 
 use std::sync::Arc;

@@ -1,0 +1,1171 @@
+//! Multi-process fabric: one OS process per rank, framed over TCP —
+//! the paper's actual deployment model (one MPI process per worker)
+//! rather than the in-process rank threads of [`crate::net::local`].
+//!
+//! ## Rendezvous
+//!
+//! Rank 0 listens at the rendezvous address (`[cluster] rendezvous`,
+//! `RYLON_RENDEZVOUS`, `--rendezvous`); every other rank connects to it
+//! (retrying until `TcpOpts::connect_timeout_ms`) and sends a
+//! versioned HELLO carrying its rank and the port of its own data
+//! listener. Rank 0 validates version / world size / rank uniqueness
+//! and answers with a WELCOME carrying the full address table; the
+//! rendezvous connections then *become* the rank-0 data edges, and the
+//! remaining mesh edges are built deterministically — rank `j`
+//! connects to every rank `i` with `0 < i < j` and identifies itself
+//! with the same HELLO frame. The result is a full mesh: one duplex
+//! TCP stream per rank pair.
+//!
+//! ## Framing
+//!
+//! Every message is `u32 magic | u8 type | u64 seq | u64 len | payload`
+//! with three frame types: `DATA` (one exchange contribution, payload
+//! encoded by the caller — the shuffle uses [`crate::net::wire`]),
+//! `ABORT` (an encoded [`Fault`], the out-of-band half of the fault
+//! domain), and `BYE` (graceful departure, sent on drop). Payloads are
+//! read in bounded slabs, so a corrupt length field cannot make a rank
+//! allocate the claimed size up front.
+//!
+//! ## Peer death and the fault domain
+//!
+//! A per-peer reader thread drains frames into a sequence-keyed inbox.
+//! EOF or a socket error *without* a preceding `BYE` is a dead peer:
+//! the reader synthesizes a rank-attributed [`Fault`] and wakes every
+//! waiter, so survivors abort symmetrically instead of hanging — and
+//! [`Fabric::abort`] broadcasts `ABORT` frames so error-path failures
+//! propagate before the socket even closes. A non-zero collective
+//! timeout ([`crate::exec::COLLECTIVE_TIMEOUT_MS`]) bounds the wait
+//! for silent hangs, blaming the lowest rank that never delivered.
+//! Wrapped in [`crate::net::checked::CheckedFabric`] by
+//! `dist::Cluster` (like every fabric), in-band verdicts work
+//! unchanged, so the TCP transport joins the PR 6 fault domain by
+//! construction.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Result, RylonError};
+use crate::net::{Fabric, Fault, OutBufs};
+
+/// Handshake/framing protocol version; bumped on any wire change. A
+/// peer with a different version is rejected at rendezvous, not
+/// mid-shuffle.
+pub const WIRE_VERSION: u16 = 1;
+
+/// `"RYLH"` — hello/welcome handshake frames.
+const HELLO_MAGIC: u32 = 0x524C_594C;
+/// `"RYLT"` — data/abort/bye frames after the handshake.
+const FRAME_MAGIC: u32 = 0x544C_594C;
+/// Frame header: magic u32 | type u8 | seq u64 | len u64.
+const FRAME_HEADER: usize = 21;
+const FRAME_DATA: u8 = 1;
+const FRAME_ABORT: u8 = 2;
+const FRAME_BYE: u8 = 3;
+/// Payloads are pulled in slabs this large, so a frame header lying
+/// about its length can never make a rank allocate the claimed size
+/// up front — it just hits EOF and becomes a dead-peer fault.
+const READ_SLAB: usize = 4 << 20;
+
+/// Per-process options for joining a TCP job: which rank this process
+/// is, and where to meet the others.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TcpOpts {
+    /// This process's rank (`0..world`). Rank 0 hosts the rendezvous.
+    pub rank: usize,
+    /// Rendezvous address (`host:port`). Rank 0 binds it; every other
+    /// rank connects to it.
+    pub rendezvous: String,
+    /// Handshake budget in milliseconds: connect retries, hello
+    /// exchange, and mesh construction must all finish within it.
+    pub connect_timeout_ms: u64,
+}
+
+impl TcpOpts {
+    /// Options for `rank` meeting its peers at `rendezvous`, with the
+    /// default 20 s handshake budget.
+    pub fn new(rank: usize, rendezvous: impl Into<String>) -> TcpOpts {
+        TcpOpts {
+            rank,
+            rendezvous: rendezvous.into(),
+            connect_timeout_ms: 20_000,
+        }
+    }
+
+    /// Override the handshake budget.
+    pub fn with_connect_timeout_ms(mut self, ms: u64) -> TcpOpts {
+        self.connect_timeout_ms = ms;
+        self
+    }
+}
+
+/// Receiver-side state shared between the rank thread and the per-peer
+/// reader threads.
+struct RecvState {
+    /// `inbox[seq][src]`: contributions to exchange `seq`. Peers can
+    /// run at most one exchange ahead (they block on *our* frame to
+    /// finish theirs), so this holds at most two live generations.
+    inbox: HashMap<u64, Vec<Option<Vec<u8>>>>,
+    /// The fault poisoning this fabric, if any. First fault wins.
+    fault: Option<Fault>,
+    /// Peers that sent `BYE`: their EOF is a clean departure, and any
+    /// exchange still expecting them faults immediately.
+    departed: Vec<bool>,
+    /// Set by drop/[`TcpFabric::sever`]: our own readers' EOFs are
+    /// teardown, not peer death.
+    shutdown: bool,
+}
+
+struct Shared {
+    size: usize,
+    rank: usize,
+    /// The sequence number of the exchange the rank thread is in (for
+    /// step attribution of reader-thread faults).
+    cur_seq: AtomicU64,
+    state: Mutex<RecvState>,
+    cond: Condvar,
+    aborts: AtomicU64,
+}
+
+impl Shared {
+    /// Reader threads never panic while holding the lock, but a rank
+    /// thread interrupted mid-exchange can poison it; the state stays
+    /// consistent either way.
+    fn lock_state(&self) -> MutexGuard<'_, RecvState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn deliver(&self, src: usize, seq: u64, payload: Vec<u8>) {
+        let size = self.size;
+        let mut st = self.lock_state();
+        let slots = st.inbox.entry(seq).or_insert_with(|| vec![None; size]);
+        slots[src] = Some(payload);
+        self.cond.notify_all();
+    }
+
+    fn record_fault(&self, fault: Fault) {
+        let mut st = self.lock_state();
+        if st.fault.is_none() {
+            st.fault = Some(fault);
+            self.aborts.fetch_add(1, Ordering::Relaxed);
+        }
+        self.cond.notify_all();
+    }
+
+    fn mark_departed(&self, src: usize) {
+        let mut st = self.lock_state();
+        st.departed[src] = true;
+        self.cond.notify_all();
+    }
+
+    /// A peer's stream closed. After a `BYE` (or during our own
+    /// teardown) that is expected; otherwise the peer died and the
+    /// survivors must abort symmetrically.
+    fn on_disconnect(&self, src: usize, cause: &str) {
+        let step = self.cur_seq.load(Ordering::Relaxed);
+        let mut st = self.lock_state();
+        if st.shutdown || st.departed[src] || st.fault.is_some() {
+            self.cond.notify_all();
+            return;
+        }
+        let fault = Fault::comm(
+            src,
+            "exchange",
+            step,
+            format!(
+                "rank {src} died: {cause} with no goodbye (observed by \
+                 rank {} around exchange #{step})",
+                self.rank
+            ),
+        );
+        st.fault = Some(fault);
+        self.aborts.fetch_add(1, Ordering::Relaxed);
+        self.cond.notify_all();
+    }
+}
+
+/// One rank's endpoint of a TCP job: a full mesh of duplex streams,
+/// per-peer reader threads, and the sequence-keyed inbox `exchange`
+/// rendezvouses on. Build one per process with [`TcpFabric::connect`]
+/// (or let `dist::Cluster::new` do it from a
+/// `FabricKind::Tcp`).
+pub struct TcpFabric {
+    shared: Arc<Shared>,
+    /// Write halves of the mesh, indexed by peer rank (`None` at our
+    /// own slot). A mutex per peer keeps concurrent frame writes (the
+    /// rank thread's DATA vs an abort broadcast) from interleaving.
+    writers: Vec<Option<Mutex<TcpStream>>>,
+    readers: Mutex<Vec<JoinHandle<()>>>,
+    /// Completed-exchange counter; doubles as the next DATA seq.
+    seq: AtomicU64,
+    bytes: AtomicU64,
+    timeout: Option<Duration>,
+}
+
+impl TcpFabric {
+    /// Join a `world`-rank job as `opts.rank`: rendezvous, handshake,
+    /// build the mesh, and spawn the reader threads. Blocks until
+    /// every rank has joined or the handshake budget runs out.
+    pub fn connect(
+        world: usize,
+        opts: &TcpOpts,
+        timeout: Option<Duration>,
+    ) -> Result<TcpFabric> {
+        if world == 0 {
+            return Err(RylonError::invalid("tcp fabric needs world ≥ 1"));
+        }
+        if opts.rank >= world {
+            return Err(RylonError::invalid(format!(
+                "tcp fabric: rank {} outside world {world}",
+                opts.rank
+            )));
+        }
+        let deadline = Instant::now()
+            + Duration::from_millis(opts.connect_timeout_ms.max(1));
+        // World 1 has nobody to meet: the rendezvous address is never
+        // touched and every exchange is pure self-delivery.
+        let streams = if world == 1 {
+            vec![None]
+        } else if opts.rank == 0 {
+            rendezvous_rank0(world, &opts.rendezvous, deadline)?
+        } else {
+            rendezvous_peer(world, opts.rank, &opts.rendezvous, deadline)?
+        };
+        let shared = Arc::new(Shared {
+            size: world,
+            rank: opts.rank,
+            cur_seq: AtomicU64::new(0),
+            state: Mutex::new(RecvState {
+                inbox: HashMap::new(),
+                fault: None,
+                departed: vec![false; world],
+                shutdown: false,
+            }),
+            cond: Condvar::new(),
+            aborts: AtomicU64::new(0),
+        });
+        let mut writers: Vec<Option<Mutex<TcpStream>>> =
+            Vec::with_capacity(world);
+        let mut readers = Vec::new();
+        for (peer, slot) in streams.into_iter().enumerate() {
+            let Some(stream) = slot else {
+                writers.push(None);
+                continue;
+            };
+            let read_half = stream.try_clone().map_err(|e| {
+                RylonError::comm(format!(
+                    "tcp rank {}: cannot clone the rank-{peer} stream: {e}",
+                    opts.rank
+                ))
+            })?;
+            let sh = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("rylon-tcp-rx{peer}"))
+                .spawn(move || reader_loop(sh, peer, read_half))
+                .map_err(|e| {
+                    RylonError::comm(format!(
+                        "tcp rank {}: cannot spawn the rank-{peer} \
+                         reader thread: {e}",
+                        opts.rank
+                    ))
+                })?;
+            readers.push(handle);
+            writers.push(Some(Mutex::new(stream)));
+        }
+        Ok(TcpFabric {
+            shared,
+            writers,
+            readers: Mutex::new(readers),
+            seq: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            timeout,
+        })
+    }
+
+    /// This process's rank.
+    pub fn rank(&self) -> usize {
+        self.shared.rank
+    }
+
+    /// Write one frame to `dst` (no-op at our own slot — self
+    /// contributions are delivered straight to the inbox).
+    fn send_frame(
+        &self,
+        dst: usize,
+        kind: u8,
+        seq: u64,
+        payload: &[u8],
+    ) -> std::io::Result<()> {
+        let Some(writer) = self.writers[dst].as_ref() else {
+            return Ok(());
+        };
+        let mut header = [0u8; FRAME_HEADER];
+        header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        header[4] = kind;
+        header[5..13].copy_from_slice(&seq.to_le_bytes());
+        header[13..21]
+            .copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        let mut s = writer.lock().unwrap_or_else(PoisonError::into_inner);
+        s.write_all(&header)?;
+        s.write_all(payload)?;
+        s.flush()
+    }
+
+    /// Best-effort `ABORT` broadcast so peers learn of a failure even
+    /// before this process's sockets close.
+    fn broadcast_abort(&self, fault: &Fault) {
+        let payload = fault.encode();
+        let seq = self.shared.cur_seq.load(Ordering::Relaxed);
+        for peer in 0..self.writers.len() {
+            let _ = self.send_frame(peer, FRAME_ABORT, seq, &payload);
+        }
+    }
+
+    /// Record `fault`, broadcast it, and return it as the attributed
+    /// error — the single failure path of `exchange`.
+    fn fail_exchange(&self, fault: Fault) -> RylonError {
+        self.shared.record_fault(fault.clone());
+        self.broadcast_abort(&fault);
+        fault.to_error()
+    }
+
+    /// Test hook: hard-close every stream *without* a goodbye,
+    /// simulating this process dying (`SIGKILL`). Peers observe raw
+    /// EOF and must abort symmetrically with this rank attributed.
+    #[doc(hidden)]
+    pub fn sever(&self) {
+        {
+            let mut st = self.shared.lock_state();
+            st.shutdown = true;
+        }
+        self.shared.cond.notify_all();
+        for writer in self.writers.iter().flatten() {
+            let s = writer.lock().unwrap_or_else(PoisonError::into_inner);
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+impl Fabric for TcpFabric {
+    fn size(&self) -> usize {
+        self.shared.size
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn exchange(&self, rank: usize, outgoing: OutBufs) -> Result<OutBufs> {
+        let size = self.shared.size;
+        let me = self.shared.rank;
+        if rank != me {
+            return Err(RylonError::comm(format!(
+                "tcp fabric: exchange as rank {rank}, but this process \
+                 is rank {me}"
+            )));
+        }
+        if outgoing.len() != size {
+            return Err(RylonError::comm(format!(
+                "exchange from rank {rank}: {} buffers for {size} ranks",
+                outgoing.len()
+            )));
+        }
+        {
+            let st = self.shared.lock_state();
+            if let Some(f) = &st.fault {
+                return Err(f.to_error());
+            }
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.shared.cur_seq.store(seq, Ordering::Relaxed);
+        // Meter posted bytes exactly like the in-process fabrics (the
+        // sum over all destinations, self included) so the sim
+        // fabric's `bytes_sent` is a valid cross-check oracle.
+        let posted: usize = outgoing.iter().map(|b| b.len()).sum();
+        self.bytes.fetch_add(posted as u64, Ordering::Relaxed);
+        let deadline = self.timeout.map(|t| Instant::now() + t);
+
+        // Post: frames to every peer, direct delivery to ourselves.
+        for (dst, buf) in outgoing.into_iter().enumerate() {
+            if dst == rank {
+                self.shared.deliver(rank, seq, buf);
+                continue;
+            }
+            if let Err(e) = self.send_frame(dst, FRAME_DATA, seq, &buf) {
+                return Err(self.fail_exchange(Fault::comm(
+                    dst,
+                    "exchange",
+                    seq,
+                    format!(
+                        "rank {dst} unreachable in exchange #{seq}: {e}"
+                    ),
+                )));
+            }
+        }
+
+        // Collect: wait until every rank's contribution has arrived.
+        let mut st = self.shared.lock_state();
+        loop {
+            if let Some(f) = &st.fault {
+                return Err(f.to_error());
+            }
+            let mut complete = true;
+            let mut dead: Option<usize> = None;
+            {
+                let slots = st.inbox.get(&seq);
+                for src in 0..size {
+                    let filled =
+                        slots.is_some_and(|sl| sl[src].is_some());
+                    if !filled {
+                        complete = false;
+                        if st.departed[src] {
+                            dead = Some(src);
+                            break;
+                        }
+                    }
+                }
+            }
+            if let Some(src) = dead {
+                drop(st);
+                return Err(self.fail_exchange(Fault::comm(
+                    src,
+                    "exchange",
+                    seq,
+                    format!(
+                        "rank {src} left the job before exchange #{seq} \
+                         completed"
+                    ),
+                )));
+            }
+            if complete {
+                break;
+            }
+            match deadline {
+                None => {
+                    st = self
+                        .shared
+                        .cond
+                        .wait(st)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        let missing: Vec<usize> = match st.inbox.get(&seq)
+                        {
+                            Some(sl) => (0..size)
+                                .filter(|&s| sl[s].is_none())
+                                .collect(),
+                            None => (0..size).collect(),
+                        };
+                        let culprit =
+                            missing.first().copied().unwrap_or(rank);
+                        let timeout = self.timeout.unwrap_or_default();
+                        drop(st);
+                        return Err(self.fail_exchange(Fault::comm(
+                            culprit,
+                            "exchange",
+                            seq,
+                            format!(
+                                "collective timed out after {timeout:?}: \
+                                 rank(s) {missing:?} never delivered to \
+                                 rank {rank} in exchange #{seq}"
+                            ),
+                        )));
+                    }
+                    let (guard, _) = self
+                        .shared
+                        .cond
+                        .wait_timeout(st, dl - now)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    st = guard;
+                }
+            }
+        }
+        let slots = st.inbox.remove(&seq).unwrap_or_default();
+        drop(st);
+        Ok(slots.into_iter().map(|b| b.unwrap_or_default()).collect())
+    }
+
+    fn fault(&self) -> Option<Fault> {
+        self.shared.lock_state().fault.clone()
+    }
+
+    fn abort(&self, fault: Fault) {
+        self.broadcast_abort(&fault);
+        self.shared.record_fault(fault);
+    }
+
+    /// Local-only: clears this process's recorded fault and drops any
+    /// half-collected generations. Peers clear their own ends — after
+    /// a real peer death the job cannot continue (the mesh has a hole)
+    /// and the process should be relaunched; clearing mainly serves
+    /// world-1 jobs and in-process test harnesses.
+    fn clear_fault(&self) {
+        let mut st = self.shared.lock_state();
+        st.fault = None;
+        st.inbox.clear();
+        self.shared.cond.notify_all();
+    }
+
+    fn aborts(&self) -> u64 {
+        self.shared.aborts.load(Ordering::Relaxed)
+    }
+
+    fn steps(&self, rank: usize) -> u64 {
+        if rank == self.shared.rank {
+            self.seq.load(Ordering::Relaxed)
+        } else {
+            0
+        }
+    }
+}
+
+impl Drop for TcpFabric {
+    /// Graceful teardown: tell every peer goodbye (so our EOF is a
+    /// departure, not a death), close the sockets, and join the reader
+    /// threads.
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock_state();
+            st.shutdown = true;
+        }
+        let seq = self.seq.load(Ordering::Relaxed);
+        for peer in 0..self.writers.len() {
+            let _ = self.send_frame(peer, FRAME_BYE, seq, &[]);
+        }
+        for writer in self.writers.iter().flatten() {
+            let s = writer.lock().unwrap_or_else(PoisonError::into_inner);
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        let handles = std::mem::take(
+            &mut *self.readers.lock().unwrap_or_else(PoisonError::into_inner),
+        );
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Drain frames from one peer into the shared inbox until the stream
+/// closes. Runs on a dedicated thread per peer.
+fn reader_loop(shared: Arc<Shared>, src: usize, mut stream: TcpStream) {
+    let mut header = [0u8; FRAME_HEADER];
+    loop {
+        if let Err(e) = stream.read_exact(&mut header) {
+            shared.on_disconnect(src, &format!("connection closed ({e})"));
+            return;
+        }
+        let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        let kind = header[4];
+        let seq = u64::from_le_bytes(header[5..13].try_into().unwrap());
+        let len =
+            u64::from_le_bytes(header[13..21].try_into().unwrap()) as usize;
+        if magic != FRAME_MAGIC {
+            // The stream is desynchronized — nothing after this point
+            // can be trusted, so treat it like a dead peer with a
+            // more precise cause.
+            shared.record_fault(Fault::comm(
+                src,
+                "exchange",
+                seq,
+                format!(
+                    "rank {src} sent a frame with bad magic {magic:#010x} \
+                     (stream desynchronized)"
+                ),
+            ));
+            return;
+        }
+        // Pull the payload in bounded slabs: a lying length field
+        // costs at most one slab of memory before EOF surfaces.
+        let mut payload = Vec::new();
+        let mut left = len;
+        let mut truncated = false;
+        while left > 0 {
+            let take = left.min(READ_SLAB);
+            let start = payload.len();
+            payload.resize(start + take, 0);
+            if stream.read_exact(&mut payload[start..]).is_err() {
+                truncated = true;
+                break;
+            }
+            left -= take;
+        }
+        if truncated {
+            shared.on_disconnect(
+                src,
+                &format!("stream ended inside a {len}-byte frame"),
+            );
+            return;
+        }
+        match kind {
+            FRAME_DATA => shared.deliver(src, seq, payload),
+            FRAME_ABORT => {
+                let fault = Fault::decode(&payload).unwrap_or_else(|_| {
+                    Fault::comm(
+                        src,
+                        "exchange",
+                        seq,
+                        format!("rank {src} sent a malformed abort frame"),
+                    )
+                });
+                shared.record_fault(fault);
+            }
+            FRAME_BYE => shared.mark_departed(src),
+            other => {
+                shared.record_fault(Fault::comm(
+                    src,
+                    "exchange",
+                    seq,
+                    format!(
+                        "rank {src} sent unknown frame type {other} \
+                         (stream desynchronized)"
+                    ),
+                ));
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rendezvous / handshake
+// ---------------------------------------------------------------------
+
+fn hello_frame(world: usize, rank: usize, data_port: u16) -> [u8; 16] {
+    let mut b = [0u8; 16];
+    b[0..4].copy_from_slice(&HELLO_MAGIC.to_le_bytes());
+    b[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    b[6..10].copy_from_slice(&(world as u32).to_le_bytes());
+    b[10..14].copy_from_slice(&(rank as u32).to_le_bytes());
+    b[14..16].copy_from_slice(&data_port.to_le_bytes());
+    b
+}
+
+/// Validate a HELLO/ID frame against our own version and world size;
+/// returns the peer's `(rank, data_port)`.
+fn parse_hello(
+    b: &[u8; 16],
+    world: usize,
+    what: &str,
+) -> Result<(usize, u16)> {
+    let magic = u32::from_le_bytes(b[0..4].try_into().unwrap());
+    if magic != HELLO_MAGIC {
+        return Err(RylonError::comm(format!(
+            "tcp {what}: bad hello magic {magic:#010x} (expected \
+             {HELLO_MAGIC:#010x})"
+        )));
+    }
+    let version = u16::from_le_bytes(b[4..6].try_into().unwrap());
+    if version != WIRE_VERSION {
+        return Err(RylonError::comm(format!(
+            "tcp {what}: peer speaks wire version {version}, this \
+             process speaks {WIRE_VERSION}"
+        )));
+    }
+    let peer_world = u32::from_le_bytes(b[6..10].try_into().unwrap());
+    if peer_world as usize != world {
+        return Err(RylonError::comm(format!(
+            "tcp {what}: peer expects world {peer_world}, this process \
+             expects {world}"
+        )));
+    }
+    let rank = u32::from_le_bytes(b[10..14].try_into().unwrap()) as usize;
+    if rank >= world {
+        return Err(RylonError::comm(format!(
+            "tcp {what}: peer claims rank {rank} outside world {world}"
+        )));
+    }
+    let port = u16::from_le_bytes(b[14..16].try_into().unwrap());
+    Ok((rank, port))
+}
+
+/// Accept one connection before `deadline` (polling, since
+/// `TcpListener` has no native accept timeout).
+fn accept_deadline(
+    listener: &TcpListener,
+    deadline: Instant,
+    what: &str,
+) -> Result<(TcpStream, SocketAddr)> {
+    listener.set_nonblocking(true).map_err(|e| {
+        RylonError::comm(format!("tcp {what}: cannot poll the listener: {e}"))
+    })?;
+    loop {
+        match listener.accept() {
+            Ok((s, peer)) => {
+                s.set_nonblocking(false).map_err(|e| {
+                    RylonError::comm(format!(
+                        "tcp {what}: cannot restore blocking mode: {e}"
+                    ))
+                })?;
+                return Ok((s, peer));
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                if Instant::now() >= deadline {
+                    return Err(RylonError::comm(format!(
+                        "tcp {what}: not every rank connected before \
+                         the handshake deadline"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                return Err(RylonError::comm(format!(
+                    "tcp {what}: accept failed: {e}"
+                )))
+            }
+        }
+    }
+}
+
+/// Bound handshake reads so one stuck peer cannot park the whole
+/// rendezvous past its deadline.
+fn arm_handshake(s: &TcpStream, deadline: Instant) {
+    s.set_nodelay(true).ok();
+    let left = deadline
+        .saturating_duration_since(Instant::now())
+        .max(Duration::from_millis(10));
+    s.set_read_timeout(Some(left)).ok();
+}
+
+/// Rank 0: host the rendezvous, collect every peer's HELLO, answer
+/// with the address table; the rendezvous connections become the
+/// rank-0 data edges. Returns the mesh indexed by peer rank (`None`
+/// at slot 0, our own).
+fn rendezvous_rank0(
+    world: usize,
+    addr: &str,
+    deadline: Instant,
+) -> Result<Vec<Option<TcpStream>>> {
+    let listener = TcpListener::bind(addr).map_err(|e| {
+        RylonError::comm(format!(
+            "tcp rendezvous: rank 0 cannot listen on {addr}: {e}"
+        ))
+    })?;
+    let mut conns: Vec<Option<(TcpStream, String)>> =
+        (0..world).map(|_| None).collect();
+    for _ in 1..world {
+        let (mut s, peer) =
+            accept_deadline(&listener, deadline, "rendezvous")?;
+        arm_handshake(&s, deadline);
+        let mut hello = [0u8; 16];
+        s.read_exact(&mut hello).map_err(|e| {
+            RylonError::comm(format!(
+                "tcp rendezvous: hello from {peer} failed: {e}"
+            ))
+        })?;
+        let (rank, data_port) = parse_hello(&hello, world, "rendezvous")?;
+        if rank == 0 {
+            return Err(RylonError::comm(
+                "tcp rendezvous: a peer claimed rank 0 (rank 0 hosts \
+                 the rendezvous)",
+            ));
+        }
+        if conns[rank].is_some() {
+            return Err(RylonError::comm(format!(
+                "tcp rendezvous: two peers claimed rank {rank}"
+            )));
+        }
+        let data_addr = SocketAddr::new(peer.ip(), data_port).to_string();
+        conns[rank] = Some((s, data_addr));
+    }
+    // WELCOME: header + the data address of every rank 1..world, in
+    // rank order, so peers can finish the mesh among themselves.
+    let mut welcome = Vec::new();
+    welcome.extend_from_slice(&HELLO_MAGIC.to_le_bytes());
+    welcome.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    welcome.extend_from_slice(&(world as u32).to_le_bytes());
+    for slot in conns.iter().skip(1) {
+        let addr = slot.as_ref().map(|(_, a)| a.as_str()).unwrap_or("");
+        welcome.extend_from_slice(&(addr.len() as u16).to_le_bytes());
+        welcome.extend_from_slice(addr.as_bytes());
+    }
+    let mut streams: Vec<Option<TcpStream>> =
+        (0..world).map(|_| None).collect();
+    for (rank, slot) in conns.into_iter().enumerate() {
+        let Some((mut s, _)) = slot else { continue };
+        s.write_all(&welcome).and_then(|_| s.flush()).map_err(|e| {
+            RylonError::comm(format!(
+                "tcp rendezvous: welcome to rank {rank} failed: {e}"
+            ))
+        })?;
+        s.set_read_timeout(None).ok();
+        streams[rank] = Some(s);
+    }
+    Ok(streams)
+}
+
+/// Rank ≥ 1: bind a data listener, register with rank 0, then build
+/// the remaining mesh edges — connect to every lower rank, accept
+/// from every higher one.
+fn rendezvous_peer(
+    world: usize,
+    rank: usize,
+    rendezvous: &str,
+    deadline: Instant,
+) -> Result<Vec<Option<TcpStream>>> {
+    // The data listener comes first so lower-rank peers can connect
+    // the moment the WELCOME tells them the address.
+    let listener = TcpListener::bind("0.0.0.0:0").map_err(|e| {
+        RylonError::comm(format!(
+            "tcp rank {rank}: cannot bind a data listener: {e}"
+        ))
+    })?;
+    let data_port = listener
+        .local_addr()
+        .map_err(|e| {
+            RylonError::comm(format!(
+                "tcp rank {rank}: no local address: {e}"
+            ))
+        })?
+        .port();
+    // Rank 0 may not be up yet: retry the rendezvous connect until
+    // the handshake deadline.
+    let mut s = loop {
+        match TcpStream::connect(rendezvous) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(RylonError::comm(format!(
+                        "tcp rank {rank}: rendezvous {rendezvous} \
+                         unreachable before the handshake deadline: {e}"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    };
+    arm_handshake(&s, deadline);
+    s.write_all(&hello_frame(world, rank, data_port))
+        .and_then(|_| s.flush())
+        .map_err(|e| {
+            RylonError::comm(format!(
+                "tcp rank {rank}: hello to the rendezvous failed: {e}"
+            ))
+        })?;
+    let mut head = [0u8; 10];
+    s.read_exact(&mut head).map_err(|e| {
+        RylonError::comm(format!(
+            "tcp rank {rank}: no welcome from the rendezvous: {e}"
+        ))
+    })?;
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    let version = u16::from_le_bytes(head[4..6].try_into().unwrap());
+    let w = u32::from_le_bytes(head[6..10].try_into().unwrap());
+    if magic != HELLO_MAGIC || version != WIRE_VERSION {
+        return Err(RylonError::comm(format!(
+            "tcp rank {rank}: malformed welcome (magic {magic:#010x}, \
+             version {version})"
+        )));
+    }
+    if w as usize != world {
+        return Err(RylonError::comm(format!(
+            "tcp rank {rank}: rendezvous runs world {w}, this process \
+             expects {world}"
+        )));
+    }
+    let mut addrs: Vec<String> = vec![String::new(); world];
+    for (peer, slot) in addrs.iter_mut().enumerate().skip(1) {
+        let mut lb = [0u8; 2];
+        s.read_exact(&mut lb).map_err(|e| {
+            RylonError::comm(format!(
+                "tcp rank {rank}: welcome truncated at rank {peer}: {e}"
+            ))
+        })?;
+        let len = u16::from_le_bytes(lb) as usize;
+        if len > 300 {
+            return Err(RylonError::comm(format!(
+                "tcp rank {rank}: welcome advertises a {len}-byte \
+                 address for rank {peer} (malformed)"
+            )));
+        }
+        let mut ab = vec![0u8; len];
+        s.read_exact(&mut ab).map_err(|e| {
+            RylonError::comm(format!(
+                "tcp rank {rank}: welcome truncated at rank {peer}: {e}"
+            ))
+        })?;
+        *slot = String::from_utf8_lossy(&ab).into_owned();
+    }
+    let mut streams: Vec<Option<TcpStream>> =
+        (0..world).map(|_| None).collect();
+    s.set_read_timeout(None).ok();
+    streams[0] = Some(s);
+    // Deterministic mesh completion: connect downward…
+    for (peer, addr) in addrs.iter().enumerate().take(rank).skip(1) {
+        let mut c = TcpStream::connect(addr.as_str()).map_err(|e| {
+            RylonError::comm(format!(
+                "tcp rank {rank}: cannot reach rank {peer} at {addr}: {e}"
+            ))
+        })?;
+        c.set_nodelay(true).ok();
+        c.write_all(&hello_frame(world, rank, 0))
+            .and_then(|_| c.flush())
+            .map_err(|e| {
+                RylonError::comm(format!(
+                    "tcp rank {rank}: hello to rank {peer} failed: {e}"
+                ))
+            })?;
+        streams[peer] = Some(c);
+    }
+    // …and accept from above.
+    for _ in rank + 1..world {
+        let (mut c, peer_addr) =
+            accept_deadline(&listener, deadline, "mesh")?;
+        arm_handshake(&c, deadline);
+        let mut id = [0u8; 16];
+        c.read_exact(&mut id).map_err(|e| {
+            RylonError::comm(format!(
+                "tcp rank {rank}: id from {peer_addr} failed: {e}"
+            ))
+        })?;
+        let (peer_rank, _) = parse_hello(&id, world, "mesh")?;
+        if peer_rank <= rank {
+            return Err(RylonError::comm(format!(
+                "tcp rank {rank}: rank {peer_rank} connected against \
+                 the mesh order (higher ranks dial lower ones)"
+            )));
+        }
+        if streams[peer_rank].is_some() {
+            return Err(RylonError::comm(format!(
+                "tcp rank {rank}: two peers claimed rank {peer_rank}"
+            )));
+        }
+        c.set_read_timeout(None).ok();
+        streams[peer_rank] = Some(c);
+    }
+    Ok(streams)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reserve a loopback address for a test rendezvous. The listener
+    /// is dropped before use — a benign race, since nothing else on
+    /// the host grabs the port in the microseconds before rank 0
+    /// rebinds it.
+    fn free_rendezvous() -> String {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    }
+
+    /// Run `world` ranks as threads, each with its own `TcpFabric`
+    /// over real loopback sockets.
+    fn run_tcp_world<F, T>(world: usize, f: F) -> Vec<T>
+    where
+        F: Fn(usize, TcpFabric) -> T + Send + Sync,
+        T: Send,
+    {
+        let rendezvous = free_rendezvous();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..world)
+                .map(|rank| {
+                    let rendezvous = rendezvous.clone();
+                    let f = &f;
+                    s.spawn(move || {
+                        let opts = TcpOpts::new(rank, rendezvous);
+                        let fab =
+                            TcpFabric::connect(world, &opts, None).unwrap();
+                        f(rank, fab)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn hello_frame_roundtrip() {
+        let b = hello_frame(4, 3, 51234);
+        let (rank, port) = parse_hello(&b, 4, "test").unwrap();
+        assert_eq!((rank, port), (3, 51234));
+        // Wrong world, wrong magic, wrong version all rejected.
+        assert!(parse_hello(&b, 5, "test").is_err());
+        let mut bad = b;
+        bad[0] ^= 0xFF;
+        assert!(parse_hello(&bad, 4, "test").is_err());
+        let mut bad = b;
+        bad[4] ^= 0xFF;
+        assert!(parse_hello(&bad, 4, "test").is_err());
+    }
+
+    #[test]
+    fn world_one_self_delivery() {
+        let opts = TcpOpts::new(0, "127.0.0.1:1"); // never dialed
+        let fab = TcpFabric::connect(1, &opts, None).unwrap();
+        let inc = fab.exchange(0, vec![b"self".to_vec()]).unwrap();
+        assert_eq!(inc[0], b"self");
+        assert_eq!(fab.bytes_sent(), 4);
+    }
+
+    #[test]
+    fn exchange_routes_point_to_point_over_sockets() {
+        let world = 3;
+        let results = run_tcp_world(world, |rank, fab| {
+            let mut got = Vec::new();
+            for round in 0..5u8 {
+                let out: OutBufs = (0..world)
+                    .map(|d| vec![round, rank as u8, d as u8])
+                    .collect();
+                let inc = fab.exchange(rank, out).unwrap();
+                for (src, buf) in inc.iter().enumerate() {
+                    assert_eq!(
+                        buf,
+                        &vec![round, src as u8, rank as u8],
+                        "round {round}: rank {rank} from {src}"
+                    );
+                }
+                got.push(inc.len());
+            }
+            got
+        });
+        assert!(results.iter().all(|r| r.iter().all(|&n| n == world)));
+    }
+
+    #[test]
+    fn wrong_rank_and_wrong_buffer_count_rejected() {
+        let opts = TcpOpts::new(0, "127.0.0.1:1");
+        let fab = TcpFabric::connect(1, &opts, None).unwrap();
+        assert!(fab.exchange(1, vec![vec![]]).is_err());
+        assert!(fab.exchange(0, vec![]).is_err());
+    }
+
+    #[test]
+    fn severed_peer_faults_survivors_with_attribution() {
+        let world = 3;
+        let results = run_tcp_world(world, |rank, fab| {
+            // One clean round first, so the mesh is known-good.
+            fab.exchange(rank, vec![vec![7u8]; world]).unwrap();
+            if rank == 1 {
+                // Simulated SIGKILL: close every stream, no goodbye.
+                fab.sever();
+                return Ok(());
+            }
+            // Survivors park in the next exchange until the EOF
+            // surfaces as a synthesized fault.
+            fab.exchange(rank, vec![vec![8u8]; world]).map(drop)
+        });
+        for (rank, r) in results.iter().enumerate() {
+            if rank == 1 {
+                assert!(r.is_ok());
+            } else {
+                let e = r.as_ref().unwrap_err();
+                let i = e.abort_info().expect("attributed abort");
+                assert_eq!(i.rank, 1, "rank {rank} blamed {}", i.rank);
+                assert!(
+                    e.to_string().contains("rank 1"),
+                    "rank {rank} saw: {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn graceful_drop_is_not_a_fault() {
+        let world = 2;
+        let results = run_tcp_world(world, |rank, fab| {
+            fab.exchange(rank, vec![vec![1u8]; world]).unwrap();
+            // Both fabrics drop at scope exit: BYE frames make the
+            // teardown clean on both sides.
+            fab.fault()
+        });
+        assert!(results.iter().all(|f| f.is_none()));
+    }
+
+    #[test]
+    fn abort_broadcast_reaches_peers() {
+        let world = 2;
+        let results = run_tcp_world(world, |rank, fab| {
+            fab.exchange(rank, vec![vec![0u8]; world]).unwrap();
+            if rank == 0 {
+                fab.abort(Fault::comm(0, "unit", 1, "rank 0 gave up"));
+                return fab.fault().map(|f| f.rank);
+            }
+            // Rank 1 parks in an exchange rank 0 never joins; the
+            // ABORT frame must wake it with rank 0 attributed.
+            let e = fab
+                .exchange(rank, vec![vec![9u8]; world])
+                .expect_err("abort must surface");
+            e.abort_info().map(|i| i.rank)
+        });
+        assert_eq!(results, vec![Some(0), Some(0)]);
+    }
+
+    #[test]
+    fn collective_timeout_blames_the_silent_rank() {
+        let world = 2;
+        let timeout = Some(Duration::from_millis(200));
+        let rendezvous = free_rendezvous();
+        let results: Vec<Option<usize>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..world)
+                .map(|rank| {
+                    let rendezvous = rendezvous.clone();
+                    s.spawn(move || {
+                        let opts = TcpOpts::new(rank, rendezvous);
+                        let fab =
+                            TcpFabric::connect(world, &opts, timeout)
+                                .unwrap();
+                        if rank == 1 {
+                            // Silent: alive (socket open) but never
+                            // joins the collective.
+                            std::thread::sleep(Duration::from_millis(
+                                600,
+                            ));
+                            return None;
+                        }
+                        let e = fab
+                            .exchange(0, vec![vec![]; world])
+                            .expect_err("timeout must fire");
+                        e.abort_info().map(|i| i.rank)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results[0], Some(1), "silent rank blamed");
+    }
+
+    #[test]
+    fn version_mismatch_rejected_at_rendezvous() {
+        let rendezvous = free_rendezvous();
+        let addr = rendezvous.clone();
+        let world = 2;
+        std::thread::scope(|s| {
+            let host = s.spawn(|| {
+                let deadline =
+                    Instant::now() + Duration::from_millis(5_000);
+                rendezvous_rank0(world, &rendezvous, deadline)
+            });
+            let peer = s.spawn(move || {
+                // Hand-rolled HELLO with a bumped version.
+                let deadline = Instant::now() + Duration::from_millis(5_000);
+                let mut stream = loop {
+                    match TcpStream::connect(&addr) {
+                        Ok(c) => break c,
+                        Err(_) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(10))
+                        }
+                        Err(e) => panic!("connect: {e}"),
+                    }
+                };
+                let mut hello = hello_frame(world, 1, 1);
+                hello[4] = 0xEE;
+                stream.write_all(&hello).unwrap();
+                // Hold the socket open until the host rejects us.
+                let mut buf = [0u8; 1];
+                let _ = stream.read(&mut buf);
+            });
+            let e = host.join().unwrap().unwrap_err();
+            assert!(e.to_string().contains("wire version"), "{e}");
+            peer.join().unwrap();
+        });
+    }
+}

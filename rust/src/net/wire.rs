@@ -155,6 +155,38 @@ impl<'a> Reader<'a> {
         self.pos += n;
         Ok(s)
     }
+
+    /// Bytes left after the cursor — the bound every header-declared
+    /// count is validated against before it sizes an allocation.
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Reject a header-declared `count` of `width`-byte items that
+    /// cannot possibly fit in the remaining buffer. Frames arrive off
+    /// the network, so counts are attacker-controlled until this check:
+    /// allocating `count` slots first would let a corrupt frame
+    /// claiming `u64::MAX` rows abort or OOM the rank.
+    pub(crate) fn check_count(
+        &self,
+        count: usize,
+        width: usize,
+        what: &str,
+    ) -> Result<()> {
+        let fits = count
+            .checked_mul(width)
+            .is_some_and(|need| need <= self.remaining());
+        if fits {
+            Ok(())
+        } else {
+            Err(RylonError::parse(format!(
+                "wire header claims {count} {what} ({width} bytes each) \
+                 but only {} bytes remain at byte {}",
+                self.remaining(),
+                self.pos
+            )))
+        }
+    }
 }
 
 /// Deserialise a table from a wire buffer.
@@ -165,8 +197,13 @@ pub fn deserialize_table(buf: &[u8]) -> Result<Table> {
     }
     let ncols = r.u32()? as usize;
     let nrows = r.u64()? as usize;
-    let mut fields = Vec::with_capacity(ncols);
-    let mut cols = Vec::with_capacity(ncols);
+    // Every column consumes at least its 4-byte header, so `ncols`
+    // beyond that bound is a lie; the field/column vecs themselves grow
+    // per parsed column (each of which consumed real buffer bytes)
+    // rather than pre-sizing from the untrusted header.
+    r.check_count(ncols, 4, "columns")?;
+    let mut fields = Vec::new();
+    let mut cols = Vec::new();
     for _ in 0..ncols {
         let dtype = tag_dtype(r.u8()?)?;
         let has_validity = r.u8()? != 0;
@@ -176,15 +213,17 @@ pub fn deserialize_table(buf: &[u8]) -> Result<Table> {
                 RylonError::parse("column name is not utf-8")
             })?;
         let validity = if has_validity {
-            let words: Result<Vec<u64>> = (0..nrows.div_ceil(64))
-                .map(|_| r.u64())
-                .collect();
+            let nwords = nrows.div_ceil(64);
+            r.check_count(nwords, 8, "validity words")?;
+            let words: Result<Vec<u64>> =
+                (0..nwords).map(|_| r.u64()).collect();
             Some(Bitmap::from_words(words?, nrows))
         } else {
             None
         };
         let col = match dtype {
             DataType::Int64 => {
+                r.check_count(nrows, 8, "i64 rows")?;
                 let mut values = Vec::with_capacity(nrows);
                 for _ in 0..nrows {
                     values.push(r.u64()? as i64);
@@ -192,6 +231,7 @@ pub fn deserialize_table(buf: &[u8]) -> Result<Table> {
                 Column::Int64(prim_from_parts(values, validity))
             }
             DataType::Float64 => {
+                r.check_count(nrows, 8, "f64 rows")?;
                 let mut values = Vec::with_capacity(nrows);
                 for _ in 0..nrows {
                     values.push(f64::from_bits(r.u64()?));
@@ -204,16 +244,49 @@ pub fn deserialize_table(buf: &[u8]) -> Result<Table> {
                 Column::Bool(prim_from_parts(values, validity))
             }
             DataType::Utf8 => {
-                let mut offsets = Vec::with_capacity(nrows + 1);
-                for _ in 0..=nrows {
+                let noffsets = nrows.checked_add(1).ok_or_else(|| {
+                    RylonError::parse("utf8 offset count overflows")
+                })?;
+                r.check_count(noffsets, 8, "utf8 offsets")?;
+                let mut offsets = Vec::with_capacity(noffsets);
+                for _ in 0..noffsets {
                     offsets.push(r.u64()?);
                 }
                 let nbytes = r.u64()? as usize;
                 let bytes = r.bytes(nbytes)?.to_vec();
                 // Validate UTF-8 once on ingest; value() reads unchecked.
-                std::str::from_utf8(&bytes).map_err(|_| {
+                let s = std::str::from_utf8(&bytes).map_err(|_| {
                     RylonError::parse("string column is not utf-8")
                 })?;
+                // `StringColumn::value` slices `bytes[off[i]..off[i+1]]`
+                // without checks, so a malformed frame here would be an
+                // out-of-bounds read (or a non-boundary `&str` slice):
+                // offsets must be monotonic non-decreasing, end exactly
+                // at `nbytes` (which bounds them all within the
+                // buffer), and land on UTF-8 character boundaries.
+                let mut prev = 0u64;
+                for (i, &o) in offsets.iter().enumerate() {
+                    if o < prev {
+                        return Err(RylonError::parse(format!(
+                            "utf8 offsets decrease at row {i} \
+                             ({o} after {prev})"
+                        )));
+                    }
+                    if !s.is_char_boundary(o as usize) {
+                        return Err(RylonError::parse(format!(
+                            "utf8 offset {o} at row {i} splits a \
+                             character or exceeds the {nbytes}-byte \
+                             string buffer"
+                        )));
+                    }
+                    prev = o;
+                }
+                if prev as usize != nbytes {
+                    return Err(RylonError::parse(format!(
+                        "utf8 offsets end at {prev}, not at the \
+                         {nbytes}-byte string buffer length"
+                    )));
+                }
                 Column::Utf8(StringColumn::from_parts(
                     offsets, bytes, validity,
                 ))
@@ -303,5 +376,89 @@ mod tests {
         let wire = serialize_table(&t).len();
         // Wire adds only header + names on top of the raw buffers.
         assert!(wire < t.byte_size() + 128);
+    }
+
+    #[test]
+    fn huge_row_count_rejected_before_allocation() {
+        // A corrupt frame claiming u64::MAX rows must fail the
+        // remaining-bytes check, not reach Vec::with_capacity.
+        let mut bytes = serialize_table(&table());
+        bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        let e = deserialize_table(&bytes).unwrap_err();
+        assert!(e.to_string().contains("remain"), "{e}");
+        // Same for a large-but-plausible lie.
+        let mut bytes = serialize_table(&table());
+        bytes[8..16].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        assert!(deserialize_table(&bytes).is_err());
+    }
+
+    #[test]
+    fn huge_column_count_rejected_before_allocation() {
+        let mut bytes = serialize_table(&table());
+        bytes[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = deserialize_table(&bytes).unwrap_err();
+        assert!(e.to_string().contains("columns"), "{e}");
+    }
+
+    #[test]
+    fn utf8_offsets_past_buffer_rejected() {
+        // One string column: "ab", "c" (offsets 0,2,3; nbytes 3).
+        let t = Table::from_columns(vec![(
+            "s",
+            Column::from_str(&["ab", "c"]),
+        )])
+        .unwrap();
+        let good = serialize_table(&t);
+        assert!(deserialize_table(&good).is_ok());
+        // The last offset sits right before `u64 nbytes`+bytes (3+8+3
+        // trailing bytes): point it past the string buffer.
+        let last_off = good.len() - 3 - 8 - 8;
+        let mut bad = good.clone();
+        bad[last_off..last_off + 8]
+            .copy_from_slice(&u64::MAX.to_le_bytes());
+        let e = deserialize_table(&bad).unwrap_err();
+        assert!(e.to_string().contains("utf8 offset"), "{e}");
+        // A middle offset beyond nbytes (but with the last intact) is
+        // equally out of bounds.
+        let mid_off = last_off - 8;
+        let mut bad = good.clone();
+        bad[mid_off..mid_off + 8].copy_from_slice(&100u64.to_le_bytes());
+        assert!(deserialize_table(&bad).is_err());
+    }
+
+    #[test]
+    fn utf8_decreasing_offsets_rejected() {
+        let t = Table::from_columns(vec![(
+            "s",
+            Column::from_str(&["ab", "c"]),
+        )])
+        .unwrap();
+        let good = serialize_table(&t);
+        // offsets are 0,2,3 — make the middle one 3 > last (covered by
+        // monotonicity: 3 then 3 is fine, so use 0,3,2 via the last).
+        let last_off = good.len() - 3 - 8 - 8;
+        let mid_off = last_off - 8;
+        let mut bad = good.clone();
+        bad[mid_off..mid_off + 8].copy_from_slice(&3u64.to_le_bytes());
+        bad[last_off..last_off + 8].copy_from_slice(&2u64.to_le_bytes());
+        let e = deserialize_table(&bad).unwrap_err();
+        assert!(e.to_string().contains("decrease"), "{e}");
+    }
+
+    #[test]
+    fn utf8_offset_splitting_a_character_rejected() {
+        // "é" is 2 bytes; an offset of 1 lands inside it.
+        let t = Table::from_columns(vec![(
+            "s",
+            Column::from_str(&["é"]),
+        )])
+        .unwrap();
+        let good = serialize_table(&t);
+        // offsets are 0,2 (then nbytes=2, 2 string bytes).
+        let last_off = good.len() - 2 - 8 - 8;
+        let mut bad = good.clone();
+        bad[last_off..last_off + 8].copy_from_slice(&1u64.to_le_bytes());
+        let e = deserialize_table(&bad).unwrap_err();
+        assert!(e.to_string().contains("splits"), "{e}");
     }
 }

@@ -3,6 +3,8 @@
 //! the failing seed printed — a proptest substitute (proptest is not in
 //! the offline registry; every case logs its seed so failures replay).
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 use std::collections::HashMap;
 
 use rylon::column::Column;
@@ -21,6 +23,76 @@ use rylon::types::Value;
 use rylon::util::rng::Xoshiro256;
 
 const CASES: u64 = 30;
+
+// ---------------------------------------------------------------------
+// Counting allocator: per-thread net/peak byte accounting, so the wire
+// mutation property below can assert a corrupt frame never triggers a
+// header-sized allocation (the OOM vector the deserializer hardening
+// closed). Per-thread cells keep other tests in this binary from
+// polluting the measurement window.
+// ---------------------------------------------------------------------
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOC_CUR: Cell<i64> = const { Cell::new(0) };
+    static ALLOC_PEAK: Cell<i64> = const { Cell::new(0) };
+}
+
+fn track_alloc(delta: i64) {
+    // try_with: TLS may be mid-teardown when thread-exit destructors
+    // free memory; skipping those events is fine for a peak gauge.
+    let _ = ALLOC_CUR.try_with(|cur| {
+        let c = cur.get() + delta;
+        cur.set(c);
+        let _ = ALLOC_PEAK.try_with(|p| {
+            if c > p.get() {
+                p.set(c);
+            }
+        });
+    });
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            track_alloc(layout.size() as i64);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        track_alloc(-(layout.size() as i64));
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            track_alloc(new_size as i64 - layout.size() as i64);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f`, returning its result and the calling thread's peak net
+/// allocation (bytes above the level at entry) during the call.
+fn peak_alloc_of<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    ALLOC_CUR.with(|c| c.set(0));
+    ALLOC_PEAK.with(|p| p.set(0));
+    let r = f();
+    let peak = ALLOC_PEAK.with(|p| p.get()).max(0) as usize;
+    (peak, r)
+}
 
 /// Random table: i64 key (with nulls), f64 payload, short string col.
 fn random_table(rng: &mut Xoshiro256, max_rows: u64, key_domain: u64) -> Table {
@@ -576,5 +648,107 @@ fn prop_rebalance_preserves_order_and_evens_sizes() {
         let mut sorted = all.clone();
         sorted.sort();
         assert_eq!(all, sorted, "seed {seed} order broken");
+    }
+}
+
+/// Wire mutation property: `deserialize_table` over corrupted frames
+/// must *fail closed* — every strict truncation is an `Err`, no
+/// mutation (bit flip or splice) ever panics, and no outcome allocates
+/// more than ~2x the input (a lying header count must not become an
+/// OOM). This is the regression net over the `net::wire` hardening.
+#[test]
+fn prop_wire_mutations_fail_closed() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(13_000 + seed);
+        let t = random_table(&mut rng, 120, 20);
+        let frame = serialize_table(&t);
+        assert!(!frame.is_empty());
+        // A well-formed frame parses and stays within budget too.
+        let budget = 2 * frame.len() + (16 << 10);
+        let (peak, ok) = peak_alloc_of(|| deserialize_table(&frame));
+        assert!(ok.is_ok(), "seed {seed}: pristine frame rejected");
+        assert!(
+            peak <= budget,
+            "seed {seed}: clean parse peaked at {peak} B \
+             (> {budget} B for a {} B frame)",
+            frame.len()
+        );
+
+        // Every strict prefix must be an error, never a panic, never
+        // a large allocation (truncation removes load-bearing bytes).
+        let mut cuts = vec![0, frame.len() - 1, frame.len() / 2];
+        cuts.extend(
+            (0..8).map(|_| rng.next_below(frame.len() as u64) as usize),
+        );
+        for cut in cuts {
+            let pfx = &frame[..cut];
+            let (peak, r) = peak_alloc_of(|| {
+                std::panic::catch_unwind(|| {
+                    deserialize_table(pfx).map(|t| t.num_rows())
+                })
+            });
+            let r = r.unwrap_or_else(|_| {
+                panic!("seed {seed}: truncation at {cut} panicked")
+            });
+            assert!(
+                r.is_err(),
+                "seed {seed}: truncation at {cut}/{} parsed",
+                frame.len()
+            );
+            assert!(
+                peak <= budget,
+                "seed {seed}: truncation at {cut} peaked at {peak} B \
+                 (> {budget} B)"
+            );
+        }
+
+        // Random bit flips: a flip in payload bytes may legitimately
+        // still parse (different values), so only `Ok | Err` — never a
+        // panic, never an allocation blowup — is asserted.
+        for _ in 0..24 {
+            let mut m = frame.clone();
+            let pos = rng.next_below(m.len() as u64) as usize;
+            m[pos] ^= 1u8 << rng.next_below(8);
+            let (peak, r) = peak_alloc_of(|| {
+                std::panic::catch_unwind(|| {
+                    deserialize_table(&m).map(|t| t.num_rows())
+                })
+            });
+            assert!(
+                r.is_ok(),
+                "seed {seed}: bit flip at byte {pos} panicked"
+            );
+            assert!(
+                peak <= budget,
+                "seed {seed}: bit flip at byte {pos} peaked at \
+                 {peak} B (> {budget} B)"
+            );
+        }
+
+        // Random splices (replace a window with junk of a different
+        // length): same contract as flips.
+        for _ in 0..8 {
+            let mut m = frame.clone();
+            let at = rng.next_below(m.len() as u64) as usize;
+            let end = (at + 1 + rng.next_below(16) as usize).min(m.len());
+            let junk: Vec<u8> = (0..rng.next_below(25))
+                .map(|_| rng.next_below(256) as u8)
+                .collect();
+            m.splice(at..end, junk);
+            let (peak, r) = peak_alloc_of(|| {
+                std::panic::catch_unwind(|| {
+                    deserialize_table(&m).map(|t| t.num_rows())
+                })
+            });
+            assert!(
+                r.is_ok(),
+                "seed {seed}: splice at byte {at} panicked"
+            );
+            assert!(
+                peak <= budget,
+                "seed {seed}: splice at byte {at} peaked at {peak} B \
+                 (> {budget} B)"
+            );
+        }
     }
 }

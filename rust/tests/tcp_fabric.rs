@@ -1,0 +1,341 @@
+//! TCP multi-process fabric, end to end: the dist suite must be
+//! bit-identical across fabrics (threads / sim / tcp over real
+//! loopback sockets), the bytes metered on the tcp wire must match the
+//! in-process oracles, and killing a rank process mid-collective must
+//! abort the survivors with the dead rank attributed (the process
+//! tests drive the real `rylon` binary in launcher mode).
+
+use std::net::TcpListener;
+use std::process::Command;
+use std::thread;
+
+use rylon::column::Column;
+use rylon::dist::{Cluster, DistConfig, RankCtx};
+use rylon::error::Result;
+use rylon::io::csv::{write_csv, CsvOptions};
+use rylon::io::datagen::{gen_partition, DataGenSpec, KeyDist};
+use rylon::net::wire::serialize_table;
+use rylon::net::CostModel;
+use rylon::ops::groupby::{Agg, GroupByOptions};
+use rylon::ops::join::JoinOptions;
+use rylon::ops::orderby::SortKey;
+use rylon::pipeline::{Env, Pipeline};
+use rylon::table::Table;
+
+/// Reserve a loopback rendezvous address: bind port 0, read the
+/// assignment, release. The rebind window before the fabric takes the
+/// port is tiny; ports are per-test so suites can run concurrently.
+fn free_rendezvous() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap().to_string();
+    drop(l);
+    addr
+}
+
+/// The reference distributed workload: the demo ETL shape (filter →
+/// repartition join → groupby → global sort), which exercises every
+/// collective the dist layer has — allreduce, allgather, and the
+/// chunked AllToAll shuffle.
+fn workload(ctx: &mut RankCtx) -> Result<Table> {
+    let fact = gen_partition(
+        &DataGenSpec::paper_scaling(3000, 0xFAC7),
+        ctx.rank,
+        ctx.size,
+    )?;
+    let dim = gen_partition(
+        &DataGenSpec {
+            rows: 300,
+            payload_cols: 1,
+            key_dist: KeyDist::Sequential,
+            seed: 0xD17,
+        },
+        ctx.rank,
+        ctx.size,
+    )?;
+    let pipeline = Pipeline::new()
+        .select("d0 > 0")?
+        .join("dim", JoinOptions::inner("id", "id"))
+        .groupby(GroupByOptions::new(
+            &["id"],
+            vec![Agg::sum("d1"), Agg::count("d1"), Agg::mean("d2")],
+        ))
+        .orderby(vec![SortKey::desc("sum_d1")]);
+    let mut env = Env::new();
+    env.insert("dim".to_string(), dim);
+    let (t, _phases) = pipeline.run_dist(ctx, &fact, &env)?;
+    Ok(t)
+}
+
+/// One OS-thread-per-rank stand-in for one-process-per-rank: each
+/// "process" builds its own [`Cluster`] over a private [`TcpFabric`]
+/// and talks to its peers through real loopback sockets only. Returns
+/// `(rank, result table, that rank's metered wire bytes)`.
+fn run_workload_on_tcp(world: usize) -> Vec<(usize, Table, u64)> {
+    let rdv = free_rendezvous();
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let rdv = rdv.as_str();
+                s.spawn(move || {
+                    let cluster =
+                        Cluster::new(DistConfig::tcp(world, rank, rdv))
+                            .unwrap();
+                    assert_eq!(cluster.local_ranks(), &[rank]);
+                    let mut outs = cluster.run(workload).unwrap();
+                    assert_eq!(outs.len(), 1, "tcp hosts one rank");
+                    (rank, outs.pop().unwrap(), cluster.bytes_sent())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// The acceptance gate of the fabric: at world 2 and 4, every rank's
+/// result on tcp is byte-for-byte the frame the threads fabric
+/// produces, and the sum of per-rank tcp wire bytes equals the
+/// `bytes_sent` of both in-process oracles (threads and the BSP
+/// simulator meter posted bytes identically, so any divergence is a
+/// framing bug, not an accounting convention).
+#[test]
+fn tcp_matches_threads_and_sim_bit_for_bit() {
+    for world in [2usize, 4] {
+        let threads = Cluster::new(DistConfig::threads(world)).unwrap();
+        let expect = threads.run(workload).unwrap();
+        let expect_bytes = threads.bytes_sent();
+        assert!(expect_bytes > 0, "world {world}: oracle moved no bytes");
+
+        let sim =
+            Cluster::new(DistConfig::sim(world, CostModel::default()))
+                .unwrap();
+        let sim_outs = sim.run(workload).unwrap();
+        for (rank, (a, b)) in
+            expect.iter().zip(sim_outs.iter()).enumerate()
+        {
+            assert_eq!(
+                serialize_table(a),
+                serialize_table(b),
+                "world {world} rank {rank}: sim diverged from threads"
+            );
+        }
+        assert_eq!(
+            sim.bytes_sent(),
+            expect_bytes,
+            "world {world}: sim bytes accounting diverged"
+        );
+
+        let got = run_workload_on_tcp(world);
+        let tcp_bytes: u64 = got.iter().map(|(_, _, b)| *b).sum();
+        assert_eq!(
+            tcp_bytes, expect_bytes,
+            "world {world}: bytes on the tcp wire diverge from the \
+             in-process oracle"
+        );
+        for (rank, t, _) in &got {
+            assert_eq!(
+                serialize_table(t),
+                serialize_table(&expect[*rank]),
+                "world {world} rank {rank}: tcp result diverged"
+            );
+        }
+    }
+}
+
+/// The single-pass distributed ingest runs its summary-swap protocol
+/// steps through `RankCtx::allgather`/`exchange` directly — the one
+/// dist path the pipeline workload above does not cross. Each tcp
+/// rank process must stream the same partition out of the shared CSV
+/// as its threads-fabric twin, seam states and all.
+#[test]
+fn tcp_single_pass_ingest_matches_threads() {
+    let dir = std::env::temp_dir().join("rylon_tcp_ingest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("in.csv");
+    let n = 2000usize;
+    let table = Table::from_columns(vec![
+        (
+            "id",
+            Column::from_i64((0..n as i64).map(|i| i % 97).collect()),
+        ),
+        (
+            "s",
+            Column::from_str(
+                &(0..n)
+                    .map(|i| match i % 4 {
+                        0 => format!("multi\nline,{i}"),
+                        1 => format!("esc\"{i}"),
+                        2 => format!("日本語{i}"),
+                        _ => format!("plain{i}"),
+                    })
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+    .unwrap();
+    write_csv(&table, &path, &CsvOptions::default()).unwrap();
+
+    let world = 4usize;
+    let threads = Cluster::new(DistConfig::threads(world)).unwrap();
+    let expect = threads
+        .run(|ctx| {
+            rylon::dist::read_csv_partition(
+                ctx,
+                &path,
+                &CsvOptions::default(),
+            )
+        })
+        .unwrap();
+
+    let rdv = free_rendezvous();
+    let got: Vec<(usize, Table)> = thread::scope(|s| {
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let rdv = rdv.as_str();
+                let path = &path;
+                s.spawn(move || {
+                    let cluster =
+                        Cluster::new(DistConfig::tcp(world, rank, rdv))
+                            .unwrap();
+                    let mut outs = cluster
+                        .run(|ctx| {
+                            rylon::dist::read_csv_partition(
+                                ctx,
+                                path,
+                                &CsvOptions::default(),
+                            )
+                        })
+                        .unwrap();
+                    (rank, outs.pop().unwrap())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (rank, t) in &got {
+        assert_eq!(
+            serialize_table(t),
+            serialize_table(&expect[*rank]),
+            "rank {rank}: tcp ingest partition diverged"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Process-level tests: drive the real binary (launcher mode spawns one
+// OS process per rank; children inherit the captured stdio, so their
+// diagnostics land in the launcher's output).
+// ---------------------------------------------------------------------
+
+fn rylon_cmd(extra: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_rylon"))
+        .args(extra)
+        .output()
+        .expect("spawn rylon binary")
+}
+
+fn render(out: &std::process::Output) -> String {
+    format!(
+        "status: {:?}\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    )
+}
+
+#[test]
+fn launcher_runs_world_4_etl_to_completion() {
+    let rdv = free_rendezvous();
+    let out = rylon_cmd(&[
+        "etl",
+        "--rows",
+        "2000",
+        "--world",
+        "4",
+        "--fabric",
+        "tcp",
+        "--rendezvous",
+        &rdv,
+        "--collective-timeout",
+        "60000",
+    ]);
+    assert!(out.status.success(), "{}", render(&out));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("all 4 ranks completed"),
+        "{}",
+        render(&out)
+    );
+}
+
+/// Kill rank 1's whole process mid-shuffle (`exit@1:3` fires inside
+/// the join's AllToAll): every survivor must detect the death through
+/// the fabric, abort symmetrically, and attribute rank 1 — and the
+/// launcher must report the job failed.
+#[test]
+fn killing_a_rank_mid_shuffle_aborts_survivors_with_attribution() {
+    let rdv = free_rendezvous();
+    let out = rylon_cmd(&[
+        "etl",
+        "--rows",
+        "2000",
+        "--world",
+        "4",
+        "--fabric",
+        "tcp",
+        "--rendezvous",
+        &rdv,
+        "--fault-plan",
+        "exit@1:3",
+        "--collective-timeout",
+        "60000",
+    ]);
+    assert!(!out.status.success(), "job survived a dead rank\n{}", render(&out));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("injected exit at rank 1"),
+        "exit never fired\n{}",
+        render(&out)
+    );
+    // Survivors' abort paths name the dead rank (the lowest — and
+    // only — failing rank), not a generic I/O error.
+    assert!(
+        stderr.contains("rank 1 died"),
+        "no survivor attributed the dead rank\n{}",
+        render(&out)
+    );
+    assert!(
+        stderr.contains("exited with failure"),
+        "launcher did not report failed ranks\n{}",
+        render(&out)
+    );
+}
+
+/// A rank that hangs silently (no death, no frames) must be caught by
+/// `--collective-timeout` and blamed by the ranks it starved.
+#[test]
+fn silent_rank_is_blamed_by_the_collective_timeout() {
+    let rdv = free_rendezvous();
+    let out = rylon_cmd(&[
+        "etl",
+        "--rows",
+        "1000",
+        "--world",
+        "2",
+        "--fabric",
+        "tcp",
+        "--rendezvous",
+        &rdv,
+        "--fault-plan",
+        "delay5000@1:1",
+        "--collective-timeout",
+        "1000",
+    ]);
+    assert!(!out.status.success(), "hang went unnoticed\n{}", render(&out));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("timed out"),
+        "no timeout diagnostic\n{}",
+        render(&out)
+    );
+}
