@@ -204,7 +204,10 @@ unsafe fn assume_init_vec<T>(v: Vec<MaybeUninit<T>>) -> Vec<T> {
 /// the left (earlier-index) run wins, which with split points computed
 /// by the same rule keeps parallel permutations bit-identical to the
 /// serial stable sorts at any thread count and any chunk layout.
-fn merge_runs_stable_by<T, F>(mut runs: Vec<Vec<T>>, take_right: F) -> Vec<T>
+pub(crate) fn merge_runs_stable_by<T, F>(
+    mut runs: Vec<Vec<T>>,
+    take_right: F,
+) -> Vec<T>
 where
     T: Copy + Send + Sync,
     F: Fn(&T, &T) -> bool + Sync,

@@ -207,6 +207,12 @@ pub struct RylonConfig {
     /// process default (0 unless the `COLLECTIVE_TIMEOUT_MS` env var
     /// is set); `0` explicitly disables the timeout.
     pub collective_timeout_ms: Option<u64>,
+    /// Per-rank memory budget in bytes for the spilling operators
+    /// (`[exec] memory_budget_bytes`). `0` = the process default
+    /// ([`crate::exec::MEMORY_BUDGET_BYTES`], overridable via the
+    /// `MEMORY_BUDGET_BYTES` env var), which is itself unbounded by
+    /// default: join/sort/groupby keep today's in-memory paths.
+    pub memory_budget_bytes: usize,
     pub cost: CostModel,
     /// Directory holding AOT artifacts + manifest.json.
     pub artifacts_dir: String,
@@ -227,6 +233,7 @@ impl Default for RylonConfig {
             pipeline_fuse: None,
             fault_plan: None,
             collective_timeout_ms: None,
+            memory_budget_bytes: 0,
             cost: CostModel::default(),
             artifacts_dir: "artifacts".to_string(),
         }
@@ -263,6 +270,8 @@ impl RylonConfig {
                 .get("exec.collective_timeout_ms")
                 .and_then(|v| v.as_f64())
                 .map(|n| n as u64),
+            memory_budget_bytes: f
+                .usize_or("exec.memory_budget_bytes", d.memory_budget_bytes),
             cost: CostModel {
                 alpha: f.f64_or("cost.alpha", dc.alpha),
                 beta: f.f64_or("cost.beta", dc.beta),
@@ -301,6 +310,7 @@ work_steal = false
 pipeline_fuse = false
 fault_plan = "error@1:2"
 collective_timeout_ms = 30000
+memory_budget_bytes = 1048576
 
 [cost]
 alpha = 1e-5
@@ -334,6 +344,7 @@ ranks_per_node = 8
         assert_eq!(c.pipeline_fuse, Some(false));
         assert_eq!(c.fault_plan.as_deref(), Some("error@1:2"));
         assert_eq!(c.collective_timeout_ms, Some(30000));
+        assert_eq!(c.memory_budget_bytes, 1 << 20);
         // Keys absent = defer to the process defaults.
         let empty = RylonConfig::from_file(&ConfFile::parse("").unwrap());
         assert_eq!(empty.ingest_single_pass, None);
@@ -341,6 +352,7 @@ ranks_per_node = 8
         assert_eq!(empty.pipeline_fuse, None);
         assert_eq!(empty.fault_plan, None);
         assert_eq!(empty.collective_timeout_ms, None);
+        assert_eq!(empty.memory_budget_bytes, 0);
         // Numeric 0/1 spellings work like the env vars'.
         let num = ConfFile::parse(
             "[exec]\ningest_single_pass = 1\nwork_steal = 1\n\

@@ -141,6 +141,16 @@ pub struct DistConfig {
     /// timeout. Non-zero bounds every fabric collective, turning a
     /// hung rank into a symmetric rank-attributed comm error.
     pub collective_timeout_ms: Option<u64>,
+    /// Per-rank memory budget in bytes (`[exec] memory_budget_bytes`):
+    /// the working-set ceiling each rank's operators reserve against
+    /// through [`crate::exec::MemoryBudget`]. `0` = the process
+    /// default ([`crate::exec::MEMORY_BUDGET_BYTES`], overridable via
+    /// the `MEMORY_BUDGET_BYTES` env var — which is also `0`,
+    /// unbounded, unless set). Under a non-zero budget, joins, sorts,
+    /// and groupbys whose working set does not fit degrade to their
+    /// spill-to-disk paths — bit-identical results either way
+    /// (`docs/MEMORY.md`).
+    pub memory_budget_bytes: usize,
 }
 
 impl Default for DistConfig {
@@ -157,6 +167,7 @@ impl Default for DistConfig {
             pipeline_fuse: None,
             fault_plan: None,
             collective_timeout_ms: None,
+            memory_budget_bytes: 0,
         }
     }
 }
@@ -258,6 +269,15 @@ impl DistConfig {
     /// default).
     pub fn with_collective_timeout_ms(mut self, ms: u64) -> DistConfig {
         self.collective_timeout_ms = Some(ms);
+        self
+    }
+
+    /// Cap each rank's operator working set at `bytes` (`0` = the
+    /// process default, itself unbounded unless `MEMORY_BUDGET_BYTES`
+    /// is set). Operators that do not fit spill to disk and return
+    /// bit-identical results (see [`DistConfig::memory_budget_bytes`]).
+    pub fn with_memory_budget(mut self, bytes: usize) -> DistConfig {
+        self.memory_budget_bytes = bytes;
         self
     }
 }
@@ -363,6 +383,13 @@ pub struct Cluster {
     work_steal: bool,
     pipeline_fuse: bool,
     collective_timeout_ms: u64,
+    memory_budget_bytes: usize,
+    /// Bytes rank threads have written to spill files, summed over all
+    /// runs (drained from the rank threads' thread-local counters at
+    /// the end of each run — success or abort).
+    spilled_bytes: std::sync::atomic::AtomicU64,
+    /// Spill partitions/runs written by rank threads, summed likewise.
+    spilled_partitions: std::sync::atomic::AtomicU64,
     /// The outermost fabric every collective goes through: the checked
     /// verdict layer over (optionally) the fault injector over the
     /// base rendezvous fabric.
@@ -490,6 +517,11 @@ impl Cluster {
                 cfg.pipeline_fuse,
             ),
             collective_timeout_ms,
+            memory_budget_bytes: crate::exec::resolve_memory_budget_bytes(
+                cfg.memory_budget_bytes,
+            ),
+            spilled_bytes: std::sync::atomic::AtomicU64::new(0),
+            spilled_partitions: std::sync::atomic::AtomicU64::new(0),
             fabric,
             checked,
             faulty,
@@ -527,6 +559,28 @@ impl Cluster {
     /// resolved `[exec] pipeline_fuse` knob).
     pub fn pipeline_fuse(&self) -> bool {
         self.pipeline_fuse
+    }
+
+    /// The resolved per-rank memory budget in bytes (`0` = unbounded;
+    /// the `[exec] memory_budget_bytes` knob).
+    pub fn memory_budget_bytes(&self) -> usize {
+        self.memory_budget_bytes
+    }
+
+    /// Bytes rank threads have written to spill files, summed over all
+    /// pools and runs so far (0 with an unbounded budget, or whenever
+    /// every working set fit). The out-of-core gauge the CLI folds
+    /// into its phase JSON as `bytes_spilled`.
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled_bytes
+            .load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Spill partitions/runs written by rank threads, summed over all
+    /// runs so far (the `spill_partitions` counter).
+    pub fn spilled_partitions(&self) -> u64 {
+        self.spilled_partitions
+            .load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Total morsel tasks executed by a rank's worker on a **sibling**
@@ -575,6 +629,9 @@ impl Cluster {
                     let single_pass = self.ingest_single_pass;
                     let steal = self.work_steal;
                     let fuse = self.pipeline_fuse;
+                    let budget = self.memory_budget_bytes;
+                    let spilled_bytes = &self.spilled_bytes;
+                    let spilled_partitions = &self.spilled_partitions;
                     let pool = Arc::clone(&self.pools[slot]);
                     s.spawn(move || {
                         // The rank thread's intra-op budget: local
@@ -586,6 +643,7 @@ impl Cluster {
                         crate::exec::set_ingest_single_pass(single_pass);
                         crate::exec::set_work_steal(steal);
                         crate::exec::set_pipeline_fuse(fuse);
+                        crate::exec::set_memory_budget_bytes(budget);
                         crate::exec::install_thread_pool(pool);
                         let mut ctx = RankCtx {
                             rank,
@@ -613,6 +671,19 @@ impl Cluster {
                                 )
                             )))
                         });
+                        // Fold this rank thread's spill activity into
+                        // the cluster totals — on success *and* after
+                        // an error or panic, so aborted spills are
+                        // still visible in the gauges.
+                        let (sb, sp) = crate::exec::take_spill_stats();
+                        spilled_bytes.fetch_add(
+                            sb,
+                            std::sync::atomic::Ordering::Relaxed,
+                        );
+                        spilled_partitions.fetch_add(
+                            sp,
+                            std::sync::atomic::Ordering::Relaxed,
+                        );
                         // Deliver any failure to every peer: record it
                         // on the fabric (waking parked ranks) and
                         // return it with rank/op/step attribution. A
@@ -897,6 +968,26 @@ mod tests {
         let def = Cluster::new(DistConfig::threads(2)).unwrap();
         let outs = def.run(|_| Ok(crate::exec::pipeline_fuse())).unwrap();
         let d = crate::exec::default_pipeline_fuse();
+        assert_eq!(outs, vec![d, d]);
+    }
+
+    #[test]
+    fn memory_budget_reaches_rank_threads() {
+        let cfg = DistConfig::threads(2).with_memory_budget(1 << 20);
+        let cluster = Cluster::new(cfg).unwrap();
+        assert_eq!(cluster.memory_budget_bytes(), 1 << 20);
+        let outs = cluster
+            .run(|_| Ok(crate::exec::memory_budget_bytes()))
+            .unwrap();
+        assert_eq!(outs, vec![1 << 20, 1 << 20]);
+        assert_eq!(cluster.spilled_bytes(), 0, "nothing spilled yet");
+        assert_eq!(cluster.spilled_partitions(), 0);
+        // 0 resolves to the process default on every rank.
+        let cluster = Cluster::new(DistConfig::threads(2)).unwrap();
+        let outs = cluster
+            .run(|_| Ok(crate::exec::memory_budget_bytes()))
+            .unwrap();
+        let d = crate::exec::default_memory_budget_bytes();
         assert_eq!(outs, vec![d, d]);
     }
 

@@ -1,0 +1,412 @@
+//! Per-rank memory governor: a tracked reservation facade plus the
+//! spill-file plumbing operators fall back to when a reservation fails.
+//!
+//! The budget is the `[exec] memory_budget_bytes` knob (`0` =
+//! unbounded — exactly today's in-memory behaviour). Operators ask the
+//! governor for their estimated working set *before* building it
+//! ([`MemoryBudget::try_reserve`]); a successful reservation is an RAII
+//! [`Reservation`] released on drop, a failed one routes the operator
+//! onto its out-of-core path (grace hash join, external merge sort,
+//! partitioned spilling groupby — `docs/MEMORY.md`). Spill files live
+//! in a per-episode [`SpillDir`] whose `Drop` removes the whole
+//! directory, so cleanup happens on success *and* when an abort
+//! unwinds through the operator (the PR 6 fault domain: a rank that
+//! faults mid-spill must not leak temp files).
+//!
+//! Accounting is thread-local because the budget is *per rank*: rank
+//! threads get their resolved budget from `dist::Cluster::run`, local
+//! CLI commands and tests set it on the calling thread, and every
+//! reservation/spill an operator makes happens on that same thread
+//! (morsel workers never reserve — checks happen at operator entry).
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::error::Result;
+
+/// Default for the `[exec] memory_budget_bytes` knob: `0` = unbounded
+/// (no reservation ever fails, so every operator keeps its in-memory
+/// path — the oracle the spill paths are bit-identical to). A non-zero
+/// value is the per-rank working-set ceiling in bytes; operators whose
+/// estimated working set does not fit degrade to their spill-to-disk
+/// paths (`docs/MEMORY.md`). Override per thread with
+/// [`set_memory_budget_bytes`] / [`with_memory_budget_bytes`], per
+/// cluster with `DistConfig::with_memory_budget`, on the CLI with
+/// `--memory-budget`, in config via `[exec] memory_budget_bytes`, or
+/// process-wide with the `MEMORY_BUDGET_BYTES` env var (the CI spill
+/// leg).
+pub const MEMORY_BUDGET_BYTES: usize = 0;
+
+/// The process-wide default memory budget: the `MEMORY_BUDGET_BYTES`
+/// env var (bytes; the CI spill leg sets a small value so every join,
+/// sort, and groupby in the suite runs its out-of-core path), else
+/// [`MEMORY_BUDGET_BYTES`] (0 = unbounded). Read once; explicit
+/// setters and `DistConfig` always override it.
+pub fn default_memory_budget_bytes() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("MEMORY_BUDGET_BYTES")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(MEMORY_BUDGET_BYTES)
+    })
+}
+
+thread_local! {
+    /// Per-thread memory budget in bytes (see [`MEMORY_BUDGET_BYTES`]).
+    /// Rank threads get theirs from `dist::Cluster::run`.
+    static BUDGET: Cell<usize> = Cell::new(default_memory_budget_bytes());
+
+    /// Bytes currently reserved against the budget on this thread.
+    static RESERVED: Cell<usize> = const { Cell::new(0) };
+
+    /// High-water mark of [`RESERVED`] — what the governor ever let
+    /// operators hold at once (the property tests pin this to the
+    /// budget).
+    static RESERVED_PEAK: Cell<usize> = const { Cell::new(0) };
+
+    /// Bytes this thread has written to spill files.
+    static SPILL_BYTES: Cell<u64> = const { Cell::new(0) };
+
+    /// Spill partitions/runs this thread has written.
+    static SPILL_PARTS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// The calling thread's memory budget in bytes (`0` = unbounded).
+pub fn memory_budget_bytes() -> usize {
+    BUDGET.with(|c| c.get())
+}
+
+/// Set the calling thread's memory budget (`0` = unbounded — no clamp;
+/// unlike the other byte knobs, zero is a meaningful value here).
+pub fn set_memory_budget_bytes(bytes: usize) {
+    BUDGET.with(|c| c.set(bytes));
+}
+
+/// Run `f` under a temporary memory budget, restoring the previous
+/// budget afterwards — how the equivalence matrix forces spill paths
+/// on small inputs.
+pub fn with_memory_budget_bytes<T>(bytes: usize, f: impl FnOnce() -> T) -> T {
+    let prev = BUDGET.with(|c| c.replace(bytes));
+    let out = f();
+    BUDGET.with(|c| c.set(prev));
+    out
+}
+
+/// Resolve a configured memory budget: `0` = the process default
+/// (env-overridable via `MEMORY_BUDGET_BYTES`), anything else passes
+/// through. An explicit `0` and a default `0` mean the same thing —
+/// unbounded — so the sentinel overload is harmless.
+pub fn resolve_memory_budget_bytes(configured: usize) -> usize {
+    if configured > 0 {
+        configured
+    } else {
+        default_memory_budget_bytes()
+    }
+}
+
+/// Bytes currently reserved against the calling thread's budget.
+pub fn reserved_bytes() -> usize {
+    RESERVED.with(|c| c.get())
+}
+
+/// High-water mark of reserved bytes on the calling thread since the
+/// last [`reset_reserved_peak`] — the governor's own accounting never
+/// exceeds the budget, and the property tests assert it.
+pub fn reserved_peak() -> usize {
+    RESERVED_PEAK.with(|c| c.get())
+}
+
+/// Reset the calling thread's reserved-bytes high-water mark.
+pub fn reset_reserved_peak() {
+    RESERVED_PEAK.with(|c| c.set(RESERVED.with(|r| r.get())));
+}
+
+/// Bytes the calling thread has written to spill files (cumulative).
+pub fn spill_bytes() -> u64 {
+    SPILL_BYTES.with(|c| c.get())
+}
+
+/// Spill partitions/runs the calling thread has written (cumulative).
+pub fn spill_partitions() -> u64 {
+    SPILL_PARTS.with(|c| c.get())
+}
+
+/// Book one spilled partition/run of `bytes` bytes on the calling
+/// thread — called by the spill writers in `ops` / `compute::sort`.
+pub(crate) fn note_spill(bytes: u64) {
+    SPILL_BYTES.with(|c| c.set(c.get() + bytes));
+    SPILL_PARTS.with(|c| c.set(c.get() + 1));
+}
+
+/// Drain the calling thread's spill counters: returns
+/// `(bytes, partitions)` and resets both to zero. `dist::Cluster::run`
+/// uses this to fold rank-thread spill activity into cluster totals.
+pub(crate) fn take_spill_stats() -> (u64, u64) {
+    let bytes = SPILL_BYTES.with(|c| c.replace(0));
+    let parts = SPILL_PARTS.with(|c| c.replace(0));
+    (bytes, parts)
+}
+
+/// The per-rank memory governor: a snapshot of the calling thread's
+/// budget that operators reserve estimated working sets against.
+///
+/// `try_reserve` either books the bytes (returning an RAII
+/// [`Reservation`]) or fails, telling the operator to take its spill
+/// path. The governor is an *admission* facade, not an allocator hook:
+/// operators declare their big structures before building them, and
+/// one morsel's slack of small transient allocations is outside the
+/// accounting by design (`docs/MEMORY.md`).
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryBudget {
+    limit: usize,
+}
+
+impl MemoryBudget {
+    /// The governor for the calling thread's current budget.
+    pub fn current() -> MemoryBudget {
+        MemoryBudget {
+            limit: memory_budget_bytes(),
+        }
+    }
+
+    /// A governor with an explicit limit (`0` = unbounded) —
+    /// reservations still account on the calling thread.
+    pub fn with_limit(limit: usize) -> MemoryBudget {
+        MemoryBudget { limit }
+    }
+
+    /// The budget ceiling in bytes (`0` = unbounded).
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Whether this governor admits everything (budget `0`).
+    pub fn is_unbounded(&self) -> bool {
+        self.limit == 0
+    }
+
+    /// Try to reserve `bytes` against the budget. Unbounded governors
+    /// always succeed (and track nothing); bounded ones succeed only
+    /// if the thread's total reserved bytes stay within the limit.
+    /// The returned [`Reservation`] releases the bytes on drop.
+    pub fn try_reserve(&self, bytes: usize) -> Option<Reservation> {
+        if self.limit == 0 {
+            return Some(Reservation {
+                bytes: 0,
+                _not_send: PhantomData,
+            });
+        }
+        RESERVED.with(|r| {
+            let cur = r.get();
+            if cur.saturating_add(bytes) > self.limit {
+                return None;
+            }
+            r.set(cur + bytes);
+            RESERVED_PEAK.with(|p| p.set(p.get().max(cur + bytes)));
+            Some(Reservation {
+                bytes,
+                _not_send: PhantomData,
+            })
+        })
+    }
+}
+
+/// An accepted memory reservation; dropping it releases the bytes back
+/// to the calling thread's budget. `!Send` so the release always lands
+/// on the thread that reserved (the accounting is thread-local).
+#[derive(Debug)]
+pub struct Reservation {
+    bytes: usize,
+    _not_send: PhantomData<*const ()>,
+}
+
+impl Reservation {
+    /// The bytes this reservation holds (0 for unbounded governors).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for Reservation {
+    fn drop(&mut self) {
+        if self.bytes > 0 {
+            RESERVED.with(|r| {
+                r.set(r.get().saturating_sub(self.bytes));
+            });
+        }
+    }
+}
+
+/// Live (not yet dropped) spill directories across the whole process —
+/// the leak detector the fault-injection tests assert on: after a run
+/// completes *or aborts*, this must return to its prior value.
+static LIVE_SPILL_DIRS: AtomicUsize = AtomicUsize::new(0);
+
+/// Monotonic suffix making concurrent spill dirs in one process unique.
+static SPILL_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Root directory spill dirs are created under: the `RYLON_SPILL_DIR`
+/// env var if set (the tcp fault tests point rank processes at a
+/// per-test directory so leaks are observable from outside), else the
+/// system temp dir. Read once.
+pub fn spill_root() -> &'static Path {
+    static ROOT: OnceLock<PathBuf> = OnceLock::new();
+    ROOT.get_or_init(|| {
+        std::env::var_os("RYLON_SPILL_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(std::env::temp_dir)
+    })
+}
+
+/// Number of live spill directories in this process (0 = nothing to
+/// leak). Global, so tests asserting it must not race other spillers.
+pub fn live_spill_dirs() -> usize {
+    LIVE_SPILL_DIRS.load(Ordering::SeqCst)
+}
+
+/// One spill episode's temp directory (`rylon-spill-<pid>-<seq>` under
+/// [`spill_root`]). `Drop` removes the directory and everything in it,
+/// which is what makes cleanup hold on *both* exits: the operator
+/// returning normally, and an abort/panic unwinding through its frame
+/// (`dist::Cluster::run` catches rank panics *after* the unwind has
+/// run these drops).
+#[derive(Debug)]
+pub struct SpillDir {
+    path: PathBuf,
+}
+
+impl SpillDir {
+    /// Create a fresh, empty spill directory under [`spill_root`].
+    pub fn create() -> Result<SpillDir> {
+        let seq = SPILL_DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = spill_root().join(format!(
+            "rylon-spill-{}-{}",
+            std::process::id(),
+            seq
+        ));
+        std::fs::create_dir_all(&path)?;
+        LIVE_SPILL_DIRS.fetch_add(1, Ordering::SeqCst);
+        Ok(SpillDir { path })
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Path for a spill file named `name` inside this directory.
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for SpillDir {
+    fn drop(&mut self) {
+        // Best effort: an ENOENT here (root already swept) must not
+        // turn an orderly unwind into an abort.
+        let _ = std::fs::remove_dir_all(&self.path);
+        LIVE_SPILL_DIRS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_knob_scopes_and_restores() {
+        let prev = memory_budget_bytes();
+        with_memory_budget_bytes(4096, || {
+            assert_eq!(memory_budget_bytes(), 4096);
+            // Zero is meaningful (unbounded), not clamped.
+            with_memory_budget_bytes(0, || {
+                assert_eq!(memory_budget_bytes(), 0);
+                assert!(MemoryBudget::current().is_unbounded());
+            });
+        });
+        assert_eq!(memory_budget_bytes(), prev);
+        // 0 = the process default; explicit values pass through.
+        assert_eq!(
+            resolve_memory_budget_bytes(0),
+            default_memory_budget_bytes()
+        );
+        assert_eq!(resolve_memory_budget_bytes(123), 123);
+    }
+
+    #[test]
+    fn reservations_account_and_release() {
+        with_memory_budget_bytes(1000, || {
+            let base = reserved_bytes();
+            let b = MemoryBudget::current();
+            assert!(!b.is_unbounded());
+            let r1 = b.try_reserve(600).expect("fits");
+            assert_eq!(reserved_bytes(), base + 600);
+            // Over budget → denied, accounting unchanged.
+            assert!(b.try_reserve(600).is_none());
+            let r2 = b.try_reserve(400).expect("exactly fits");
+            assert_eq!(reserved_bytes(), base + 1000);
+            assert!(b.try_reserve(1).is_none());
+            drop(r1);
+            assert_eq!(reserved_bytes(), base + 400);
+            drop(r2);
+            assert_eq!(reserved_bytes(), base);
+            // The high-water mark saw the full occupancy.
+            assert!(reserved_peak() >= base + 1000);
+        });
+    }
+
+    #[test]
+    fn unbounded_budget_admits_everything_untracked() {
+        with_memory_budget_bytes(0, || {
+            let base = reserved_bytes();
+            let b = MemoryBudget::current();
+            let r = b.try_reserve(usize::MAX).expect("unbounded");
+            assert_eq!(r.bytes(), 0);
+            assert_eq!(reserved_bytes(), base);
+        });
+    }
+
+    #[test]
+    fn spill_dir_created_and_removed_on_drop() {
+        let d = SpillDir::create().unwrap();
+        let path = d.path().to_path_buf();
+        assert!(path.is_dir());
+        std::fs::write(d.file("part0.ryf"), b"x").unwrap();
+        drop(d);
+        assert!(!path.exists(), "spill dir must vanish on drop");
+    }
+
+    #[test]
+    fn spill_dir_removed_when_a_panic_unwinds_through_it() {
+        let path = std::cell::RefCell::new(PathBuf::new());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                let d = SpillDir::create().unwrap();
+                *path.borrow_mut() = d.path().to_path_buf();
+                std::fs::write(d.file("run0.ryf"), b"x").unwrap();
+                panic!("mid-spill fault");
+            },
+        ));
+        assert!(r.is_err());
+        let p = path.borrow();
+        assert!(p.file_name().is_some());
+        assert!(!p.exists(), "unwind must drop the spill dir");
+    }
+
+    #[test]
+    fn spill_counters_accumulate_and_drain() {
+        let (b0, p0) = (spill_bytes(), spill_partitions());
+        note_spill(100);
+        note_spill(28);
+        assert_eq!(spill_bytes(), b0 + 128);
+        assert_eq!(spill_partitions(), p0 + 2);
+        let (b, p) = take_spill_stats();
+        assert_eq!((b, p), (b0 + 128, p0 + 2));
+        assert_eq!(spill_bytes(), 0);
+        assert_eq!(spill_partitions(), 0);
+    }
+}

@@ -36,12 +36,21 @@
 
 #![warn(missing_docs)]
 
+mod memory;
 mod morsel;
 mod pool;
 
 use std::cell::Cell;
 use std::sync::OnceLock;
 
+pub use self::memory::{
+    default_memory_budget_bytes, live_spill_dirs, memory_budget_bytes,
+    reserved_bytes, reserved_peak, reset_reserved_peak,
+    resolve_memory_budget_bytes, set_memory_budget_bytes, spill_bytes,
+    spill_partitions, spill_root, with_memory_budget_bytes, MemoryBudget,
+    Reservation, SpillDir, MEMORY_BUDGET_BYTES,
+};
+pub(crate) use self::memory::{note_spill, take_spill_stats};
 pub use self::morsel::{
     fill_parallel, for_each_morsel, map_parallel, par_gather,
     run_partitions, split_even, split_morsels, Morsel, MORSEL_ROWS,

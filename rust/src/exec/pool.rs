@@ -738,6 +738,97 @@ mod tests {
     }
 
     #[test]
+    fn steal_signal_stress_no_lost_wakeups_under_job_storms() {
+        // The no-lost-wakeup gate on the steal-signal protocol — and
+        // the stress harness the ROADMAP's waiter-count follow-on
+        // wants in hand before optimising the wake path: four
+        // steal-linked pools take a storm of short jobs from four
+        // concurrent submitters, with pseudo-random task sleeps
+        // jittering every park/scan/submit interleaving. A submission
+        // slept through (the race `steal_signal` closes) strands its
+        // submitter on the job latch forever; the watchdog converts
+        // that hang into a bounded failure. Every task must run
+        // exactly once no matter which pool's worker claimed it.
+        use std::time::{Duration, Instant};
+
+        const POOLS: usize = 4;
+        const JOBS_PER_POOL: usize = 250;
+        const DEADLINE: Duration = Duration::from_secs(120);
+
+        let pools: Vec<Arc<WorkerPool>> =
+            (0..POOLS).map(|_| Arc::new(WorkerPool::new())).collect();
+        link_steal_group(&pools);
+
+        let ran = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<JoinHandle<()>> = pools
+            .iter()
+            .enumerate()
+            .map(|(p, pool)| {
+                let pool = Arc::clone(pool);
+                let ran = Arc::clone(&ran);
+                std::thread::spawn(move || {
+                    // Splitmix-style per-submitter stream: determines
+                    // job widths, permits, and sleep jitter.
+                    let mut state = 0x9E37_79B9_7F4A_7C15u64 ^ ((p as u64) << 32);
+                    let mut next = move || {
+                        state = state
+                            .wrapping_mul(6364136223846793005)
+                            .wrapping_add(1442695040888963407);
+                        state >> 33
+                    };
+                    for _ in 0..JOBS_PER_POOL {
+                        let ntasks = 2 + (next() % 9) as usize;
+                        let conc = 1 + (next() % 3) as usize;
+                        let sleep_ns = next() % 80_000;
+                        let hits: Vec<AtomicUsize> =
+                            (0..ntasks).map(|_| AtomicUsize::new(0)).collect();
+                        pool.run(ntasks, conc, &|i| {
+                            if sleep_ns > 0 {
+                                std::thread::sleep(Duration::from_nanos(
+                                    sleep_ns,
+                                ));
+                            }
+                            hits[i].fetch_add(1, Ordering::Relaxed);
+                        });
+                        assert!(
+                            hits.iter()
+                                .all(|h| h.load(Ordering::Relaxed) == 1),
+                            "a task ran zero times or twice"
+                        );
+                        ran.fetch_add(ntasks, Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+
+        let start = Instant::now();
+        while handles.iter().any(|h| !h.is_finished()) {
+            assert!(
+                start.elapsed() < DEADLINE,
+                "lost wakeup: a submitter is still parked after {:?} \
+                 ({} tasks ran)",
+                DEADLINE,
+                ran.load(Ordering::Relaxed)
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        for h in handles {
+            h.join().expect("a submitter panicked");
+        }
+
+        // Every pool is still serviceable after the storm, and
+        // shutdown joins every worker cleanly.
+        for pool in &pools {
+            let count = AtomicUsize::new(0);
+            pool.run(16, 2, &|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), 16);
+            pool.shutdown();
+        }
+    }
+
+    #[test]
     fn shutdown_is_idempotent_and_drops_clean() {
         let pool = WorkerPool::new();
         pool.run(4, 2, &|_| {});

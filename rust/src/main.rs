@@ -94,6 +94,13 @@ GLOBAL FLAGS
                         abort any collective not completing within MS
                         milliseconds, blaming the missing rank
                         (0 = wait forever, the default)
+  --memory-budget BYTES
+                        per-rank memory budget for join/sort/groupby
+                        (0 = unbounded, the default: all-in-memory
+                        paths). Operators whose working set exceeds
+                        the budget spill RYF partitions to a temp dir
+                        and stream them back; results are identical
+                        either way — docs/MEMORY.md
 
 See docs/CONFIG.md for the config-file/env equivalents of every knob.
 ";
@@ -230,6 +237,8 @@ fn make_cluster(
             })?),
             None => cfg.collective_timeout_ms,
         },
+        memory_budget_bytes: args
+            .usize_or("memory-budget", cfg.memory_budget_bytes),
     })
 }
 
@@ -455,6 +464,11 @@ fn cmd_etl(args: &Args, cfg: &RylonConfig) -> Result<()> {
         phases.merge(p);
     }
     cluster.fault_stats().record(&mut phases);
+    // Out-of-core traffic (docs/MEMORY.md): bytes and partitions the
+    // governed operators spilled under --memory-budget (0 when the
+    // budget was unbounded or everything fit).
+    phases.count("bytes_spilled", cluster.spilled_bytes());
+    phases.count("spill_partitions", cluster.spilled_partitions());
     println!(
         "pipeline: {} result rows in {:.3}s wall{}",
         human_count(total as u64),
@@ -785,6 +799,11 @@ fn run() -> Result<()> {
     rylon::exec::set_pipeline_fuse(rylon::exec::resolve_pipeline_fuse(
         args.bool_flag("pipeline-fuse")?.or(cfg.pipeline_fuse),
     ));
+    rylon::exec::set_memory_budget_bytes(
+        rylon::exec::resolve_memory_budget_bytes(
+            args.usize_or("memory-budget", cfg.memory_budget_bytes),
+        ),
+    );
     match args.cmd.as_str() {
         "gen" => cmd_gen(&args),
         "inspect" => cmd_inspect(&args),

@@ -13,13 +13,18 @@
 //! f64 accumulation order and SQL null semantics — is bit-identical to
 //! the serial path at any thread count.
 
+use std::sync::Arc;
+
 use crate::column::{Column, ColumnBuilder};
 use crate::compute::aggregate::{Accumulator, AggKind};
+use crate::compute::filter::{scatter_indices, take_parallel};
 use crate::compute::hash::{hash_columns, GroupIndex};
+use crate::dist::{HashPartitioner, Partitioner};
 use crate::error::{Result, RylonError};
-use crate::exec;
+use crate::exec::{self, MemoryBudget, SpillDir};
+use crate::io::ryf::{read_ryf_footer, read_ryf_group, RyfWriter};
 use crate::table::Table;
-use crate::types::{Field, Schema};
+use crate::types::{DataType, Field, Schema};
 
 /// One aggregate: `kind(column) as name`.
 #[derive(Debug, Clone)]
@@ -78,7 +83,50 @@ impl GroupByOptions {
 
 /// Hash group-by. Output: key columns (first occurrence order) then one
 /// column per aggregate.
+///
+/// Consults the per-rank memory governor
+/// ([`crate::exec::MemoryBudget`]): when the input's footprint doesn't
+/// fit the budget, the aggregation degrades to the partitioned
+/// spilling path — key-hash partitions spilled as RYF row groups and
+/// aggregated one at a time — with bit-identical output
+/// (`docs/MEMORY.md`).
 pub fn groupby(table: &Table, opts: &GroupByOptions) -> Result<Table> {
+    let budget = MemoryBudget::current();
+    match budget.try_reserve(table.byte_size()) {
+        Some(_held) => groupby_in_memory(table, opts),
+        None if table.num_rows() > 0 => {
+            validate(table, opts)?;
+            spilling_groupby(table, opts, &budget)
+        }
+        // Empty input: nothing to spill, and the in-memory path costs
+        // nothing.
+        None => groupby_in_memory(table, opts),
+    }
+}
+
+/// The option/schema checks [`groupby_in_memory`] performs up front,
+/// extracted so the spilling path rejects invalid requests with
+/// exactly the same errors before it partitions anything.
+fn validate(table: &Table, opts: &GroupByOptions) -> Result<()> {
+    if opts.keys.is_empty() {
+        return Err(RylonError::invalid("groupby requires at least one key"));
+    }
+    if opts.aggs.is_empty() {
+        return Err(RylonError::invalid(
+            "groupby requires at least one aggregate",
+        ));
+    }
+    for k in &opts.keys {
+        table.column_by_name(k)?;
+    }
+    for a in &opts.aggs {
+        let c = table.column_by_name(&a.column)?;
+        a.kind.output_dtype(c.dtype())?;
+    }
+    Ok(())
+}
+
+fn groupby_in_memory(table: &Table, opts: &GroupByOptions) -> Result<Table> {
     if opts.keys.is_empty() {
         return Err(RylonError::invalid("groupby requires at least one key"));
     }
@@ -223,6 +271,131 @@ pub fn groupby(table: &Table, opts: &GroupByOptions) -> Result<Table> {
         out_cols.push(b.finish());
     }
     Table::try_new(Schema::new(fields), out_cols)
+}
+
+/// Synthetic column carrying each row's original row id through the
+/// spilling path; `min(id)` per group is the group's global
+/// first-occurrence row, which restores the in-memory output order.
+const SPILL_REP: &str = "__rylon_spill_rep__";
+
+/// Partition counts per spill level — pairwise coprime so a recursive
+/// level's `hash % nparts` actually re-splits (same scheme as the
+/// grace hash join's).
+const SPILL_PARTS: [usize; 4] = [8, 11, 13, 17];
+
+/// Recursion ceiling; past it an unsplittable partition (one dominant
+/// key) is aggregated in memory regardless of the budget.
+const MAX_SPILL_DEPTH: usize = SPILL_PARTS.len() - 1;
+
+/// Out-of-core twin of [`groupby_in_memory`]: identical output,
+/// O(partition) resident memory instead of O(input). Rows are routed
+/// by the combined key hash (equal hashes share a partition, and a
+/// group is "same hash + equal keys", so every group is whole within
+/// one partition), gathered in ascending row order (so accumulator
+/// fold order — including f64 bit patterns — matches the serial
+/// path), spilled as RYF row groups, and aggregated one partition at a
+/// time. A min-aggregated row-id column recovers the global
+/// first-occurrence group order at the end.
+fn spilling_groupby(
+    table: &Table,
+    opts: &GroupByOptions,
+    budget: &MemoryBudget,
+) -> Result<Table> {
+    let n = table.num_rows();
+    // Augment with the row-id column and its min-aggregate.
+    let mut aug_cols: Vec<Arc<Column>> =
+        (0..table.num_columns()).map(|i| table.column_arc(i)).collect();
+    aug_cols.push(Arc::new(Column::from_i64((0..n as i64).collect())));
+    let mut aug_fields = table.schema().fields().to_vec();
+    aug_fields.push(Field::new(SPILL_REP.to_string(), DataType::Int64));
+    let aug = Table::from_parts(Schema::new(aug_fields), aug_cols, n);
+    let mut aug_opts = opts.clone();
+    aug_opts.aggs.push(Agg::min(SPILL_REP).named(SPILL_REP));
+
+    let grouped = spill_level(&aug, &aug_opts, budget, 0)?;
+
+    // Restore global first-occurrence order and strip the rep column.
+    let rep_idx = grouped.num_columns() - 1;
+    let reps = grouped.column(rep_idx).i64_values();
+    let mut perm: Vec<usize> = (0..grouped.num_rows()).collect();
+    perm.sort_unstable_by_key(|&i| reps[i]);
+    let ordered = take_parallel(
+        &grouped,
+        &perm,
+        exec::parallelism_for(perm.len()),
+    );
+    let out_fields = ordered.schema().fields()[..rep_idx].to_vec();
+    let out_cols: Vec<Arc<Column>> =
+        (0..rep_idx).map(|i| ordered.column_arc(i)).collect();
+    Ok(Table::from_parts(
+        Schema::new(out_fields),
+        out_cols,
+        ordered.num_rows(),
+    ))
+}
+
+/// One spill level: partition `aug` by key hash, spill each partition
+/// as an RYF row group under a per-level [`SpillDir`] (deleted when
+/// the dir drops — normal return or unwind), then aggregate the
+/// partitions one at a time, recursing when a partition still doesn't
+/// fit and can still split. Partial group order is irrelevant here —
+/// the caller sorts by the rep column.
+fn spill_level(
+    aug: &Table,
+    aug_opts: &GroupByOptions,
+    budget: &MemoryBudget,
+    depth: usize,
+) -> Result<Table> {
+    let nparts = SPILL_PARTS[depth.min(MAX_SPILL_DEPTH)];
+    let mut pids = Vec::new();
+    HashPartitioner::new(&aug_opts.keys, nparts)?.partition(aug, &mut pids)?;
+    let rows = scatter_indices(&pids, nparts);
+    drop(pids);
+
+    let dir = SpillDir::create()?;
+    let path = dir.file("groupby.ryf");
+    let mut w = RyfWriter::create(&path)?;
+    for part_rows in &rows {
+        let part = take_parallel(
+            aug,
+            part_rows,
+            exec::parallelism_for(part_rows.len()),
+        );
+        exec::note_spill(part.byte_size() as u64);
+        w.append(&part)?;
+    }
+    w.finish()?;
+    drop(rows);
+
+    let metas = read_ryf_footer(&path)?;
+    let mut partials: Vec<Table> = Vec::with_capacity(nparts);
+    for meta in &metas {
+        let sub = read_ryf_group(&path, meta)?;
+        if sub.num_rows() == 0 {
+            continue;
+        }
+        let splittable =
+            depth < MAX_SPILL_DEPTH && sub.num_rows() < aug.num_rows();
+        let partial = match budget.try_reserve(sub.byte_size()) {
+            Some(_held) => groupby_in_memory(&sub, aug_opts)?,
+            None if splittable => {
+                spill_level(&sub, aug_opts, budget, depth + 1)?
+            }
+            None => groupby_in_memory(&sub, aug_opts)?,
+        };
+        partials.push(partial);
+    }
+    match partials.first() {
+        Some(first) => {
+            let schema = first.schema().clone();
+            Table::concat_all(&schema, &partials)
+        }
+        // Unreachable for non-empty input, but keep it total.
+        None => groupby_in_memory(
+            &Table::empty(aug.schema().clone()),
+            aug_opts,
+        ),
+    }
 }
 
 #[cfg(test)]
@@ -392,6 +565,68 @@ mod tests {
             // and f64 bits accumulated in the same fold order.
             assert_eq!(par, serial, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn spilling_groupby_bit_identical_and_cleans_up() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(123);
+        let n = 5_000usize;
+        let keys: Vec<Option<i64>> = (0..n)
+            .map(|_| {
+                if rng.next_below(13) == 0 {
+                    None
+                } else {
+                    Some(rng.next_below(200) as i64)
+                }
+            })
+            .collect();
+        let vals: Vec<Option<f64>> = (0..n)
+            .map(|_| {
+                if rng.next_below(9) == 0 {
+                    None
+                } else {
+                    Some(rng.next_f64() * 100.0 - 50.0)
+                }
+            })
+            .collect();
+        let t = Table::from_columns(vec![
+            ("k", Column::from_opt_i64(keys)),
+            ("v", Column::from_opt_f64(vals)),
+        ])
+        .unwrap();
+        let opts = GroupByOptions::new(
+            &["k"],
+            vec![Agg::sum("v"), Agg::mean("v"), Agg::count("v")],
+        );
+        let oracle = groupby(&t, &opts).unwrap();
+        let dirs = exec::live_spill_dirs();
+        let parts0 = exec::spill_partitions();
+        // Tiny budget: recursive re-partitioning down to the depth cap.
+        let tiny = crate::exec::with_memory_budget_bytes(1, || {
+            groupby(&t, &opts).unwrap()
+        });
+        assert_eq!(tiny, oracle, "recursive spill");
+        // Half the footprint: one spill level, partitions aggregated
+        // in memory.
+        let half = crate::exec::with_memory_budget_bytes(
+            t.byte_size() / 2,
+            || groupby(&t, &opts).unwrap(),
+        );
+        assert_eq!(half, oracle, "one spill level");
+        assert!(exec::spill_partitions() > parts0, "partitions hit disk");
+        assert_eq!(exec::live_spill_dirs(), dirs, "no leaked spill dirs");
+        // Invalid requests fail identically under a spill-forcing
+        // budget (validation happens before any partitioning).
+        crate::exec::with_memory_budget_bytes(1, || {
+            assert!(groupby(&t, &GroupByOptions::new(&["k"], vec![]))
+                .is_err());
+            assert!(groupby(
+                &t,
+                &GroupByOptions::new(&["ghost"], vec![Agg::sum("v")])
+            )
+            .is_err());
+        });
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Grace hash join — the out-of-core fallback [`super::join`] takes
+//! when the memory governor denies the in-memory hash join's working
+//! set (`docs/MEMORY.md`).
+//!
+//! Both sides are routed by the combined key hash through the same
+//! [`HashPartitioner`] the distributed shuffle uses, gathered one
+//! partition at a time on the worker pool, and spilled as RYF row
+//! groups under a per-episode [`SpillDir`] (dropped — and therefore
+//! deleted — on success *and* when an abort unwinds through this
+//! frame). Equal keys share a hash, so every match is partition-local;
+//! each partition pair is then read back and joined in memory if its
+//! working set now fits, or recursively re-partitioned (with a coprime
+//! partition count, so the modulus actually re-splits) if it does not.
+//!
+//! The emitted index pairs are **bit-identical** to
+//! [`hash_join_indices`] on the whole input: the serial hash join
+//! emits left rows in ascending order (each row's matches in bucket
+//! order), then right-unmatched rows ascending. A left row lives in
+//! exactly one partition, so its matches arrive contiguously and in
+//! the same bucket order from that partition's in-memory join; a
+//! stable sort of the left-anchored pairs by left row id and an
+//! ascending sort of the right-unmatched ids restore the global order
+//! exactly. The equivalence matrix in
+//! `rust/tests/intra_op_equivalence.rs` pins this at every thread
+//! count.
+
+use crate::compute::filter::{scatter_indices, take_parallel};
+use crate::dist::{HashPartitioner, Partitioner};
+use crate::error::Result;
+use crate::exec::{self, MemoryBudget, SpillDir};
+use crate::io::ryf::{read_ryf_footer, read_ryf_group, RyfWriter};
+use crate::ops::join::hash_join::hash_join_indices;
+use crate::ops::join::JoinOptions;
+use crate::table::Table;
+
+/// Partition counts per recursion level. Pairwise coprime, so a
+/// partition formed at level *d* (rows with `hash % PARTS[d] == p`)
+/// still splits `PARTS[d+1]` ways at the next level — reusing the
+/// unsalted [`HashPartitioner`] hash at every depth.
+const GRACE_PARTS: [usize; 4] = [8, 11, 13, 17];
+
+/// Recursion ceiling: past this depth an unsplittable partition (e.g.
+/// every row sharing one key) is joined in memory regardless of the
+/// budget — the governor is an admission target, not a hard allocator.
+const MAX_GRACE_DEPTH: usize = GRACE_PARTS.len() - 1;
+
+/// Out-of-core twin of [`hash_join_indices`]: identical output pairs,
+/// O(partition) resident memory instead of O(input).
+pub(crate) fn grace_join_indices(
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+    budget: &MemoryBudget,
+) -> Result<(Vec<i64>, Vec<i64>)> {
+    grace_level(left, right, opts, budget, 0)
+}
+
+fn grace_level(
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+    budget: &MemoryBudget,
+    depth: usize,
+) -> Result<(Vec<i64>, Vec<i64>)> {
+    let nparts = GRACE_PARTS[depth.min(MAX_GRACE_DEPTH)];
+    let mut lp = Vec::new();
+    let mut rp = Vec::new();
+    HashPartitioner::new(&opts.left_on, nparts)?.partition(left, &mut lp)?;
+    HashPartitioner::new(&opts.right_on, nparts)?.partition(right, &mut rp)?;
+    let lrows = scatter_indices(&lp, nparts);
+    let rrows = scatter_indices(&rp, nparts);
+    drop((lp, rp));
+
+    // Spill phase: gather each partition (worker-pool gather kernels)
+    // and write it out as one RYF row group, holding only a single
+    // partition's sub-table at a time. The directory is removed when
+    // `dir` drops — normal return or unwind alike.
+    let dir = SpillDir::create()?;
+    let lpath = dir.file("join-left.ryf");
+    let rpath = dir.file("join-right.ryf");
+    for (path, table, rows) in
+        [(&lpath, left, &lrows), (&rpath, right, &rrows)]
+    {
+        let mut w = RyfWriter::create(path)?;
+        for part_rows in rows.iter() {
+            let part = take_parallel(
+                table,
+                part_rows,
+                exec::parallelism_for(part_rows.len()),
+            );
+            exec::note_spill(part.byte_size() as u64);
+            w.append(&part)?;
+        }
+        w.finish()?;
+    }
+
+    // Probe phase: read partition pairs back one at a time; join in
+    // memory when the governor now admits the pair, recurse when it
+    // does not (and the partition actually shrank).
+    let lmetas = read_ryf_footer(&lpath)?;
+    let rmetas = read_ryf_footer(&rpath)?;
+    let mut pairs: Vec<(i64, i64)> = Vec::new();
+    let mut right_unmatched: Vec<i64> = Vec::new();
+    for p in 0..nparts {
+        let lsub = read_ryf_group(&lpath, &lmetas[p])?;
+        let rsub = read_ryf_group(&rpath, &rmetas[p])?;
+        if lsub.num_rows() == 0 && rsub.num_rows() == 0 {
+            continue;
+        }
+        let splittable = depth < MAX_GRACE_DEPTH
+            && (lsub.num_rows() < left.num_rows()
+                || rsub.num_rows() < right.num_rows());
+        let need = lsub.byte_size() + rsub.byte_size();
+        let (li, ri) = match budget.try_reserve(need) {
+            Some(_held) => hash_join_indices(&lsub, &rsub, opts)?,
+            None if splittable => {
+                grace_level(&lsub, &rsub, opts, budget, depth + 1)?
+            }
+            None => hash_join_indices(&lsub, &rsub, opts)?,
+        };
+        for (&a, &b) in li.iter().zip(&ri) {
+            let gr = if b >= 0 { rrows[p][b as usize] as i64 } else { -1 };
+            if a >= 0 {
+                pairs.push((lrows[p][a as usize] as i64, gr));
+            } else {
+                right_unmatched.push(gr);
+            }
+        }
+    }
+
+    // Restore the serial emission order (module docs): stable by left
+    // row id, then right-unmatched ascending.
+    pairs.sort_by_key(|&(l, _)| l);
+    right_unmatched.sort_unstable();
+    let mut li = Vec::with_capacity(pairs.len() + right_unmatched.len());
+    let mut ri = Vec::with_capacity(pairs.len() + right_unmatched.len());
+    for (a, b) in pairs {
+        li.push(a);
+        ri.push(b);
+    }
+    for b in right_unmatched {
+        li.push(-1);
+        ri.push(b);
+    }
+    Ok((li, ri))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::ops::join::{JoinAlgo, JoinType};
+    use crate::util::rng::Xoshiro256;
+
+    fn random_pair(seed: u64, n: usize) -> (Table, Table) {
+        let mut rng = Xoshiro256::new(seed);
+        let opt_keys = |rng: &mut Xoshiro256, n: usize| -> Vec<Option<i64>> {
+            (0..n)
+                .map(|_| {
+                    if rng.next_below(13) == 0 {
+                        None
+                    } else {
+                        Some(rng.next_below(40) as i64)
+                    }
+                })
+                .collect()
+        };
+        let lk = opt_keys(&mut rng, n);
+        let rk = opt_keys(&mut rng, n / 2 + 1);
+        let lv: Vec<i64> = (0..n as i64).collect();
+        let rv: Vec<f64> = (0..n / 2 + 1).map(|i| i as f64 * 0.5).collect();
+        (
+            Table::from_columns(vec![
+                ("k", Column::from_opt_i64(lk)),
+                ("lv", Column::from_i64(lv)),
+            ])
+            .unwrap(),
+            Table::from_columns(vec![
+                ("k", Column::from_opt_i64(rk)),
+                ("rv", Column::from_f64(rv)),
+            ])
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn grace_pairs_bit_identical_to_in_memory_all_join_types() {
+        let (l, r) = random_pair(777, 600);
+        for jt in [
+            JoinType::Inner,
+            JoinType::Left,
+            JoinType::Right,
+            JoinType::FullOuter,
+        ] {
+            let opts = JoinOptions::new(jt, &["k"], &["k"])
+                .with_algo(JoinAlgo::Hash);
+            let oracle = hash_join_indices(&l, &r, &opts).unwrap();
+            // A 1-byte budget denies every per-partition reservation,
+            // forcing recursion to the depth cap.
+            let tiny = MemoryBudget::with_limit(1);
+            let grace = grace_join_indices(&l, &r, &opts, &tiny).unwrap();
+            assert_eq!(grace, oracle, "{jt:?} (recursive)");
+            // A budget that admits each partition but not the whole
+            // input exercises the single-level path.
+            let mid = MemoryBudget::with_limit(
+                l.byte_size() + r.byte_size() - 1,
+            );
+            let one = grace_join_indices(&l, &r, &opts, &mid).unwrap();
+            assert_eq!(one, oracle, "{jt:?} (one level)");
+        }
+    }
+
+    #[test]
+    fn grace_cleans_up_spill_dirs() {
+        let before = exec::live_spill_dirs();
+        let (l, r) = random_pair(42, 200);
+        let opts = JoinOptions::inner("k", "k").with_algo(JoinAlgo::Hash);
+        let tiny = MemoryBudget::with_limit(1);
+        grace_join_indices(&l, &r, &opts, &tiny).unwrap();
+        assert_eq!(exec::live_spill_dirs(), before);
+    }
+
+    #[test]
+    fn unsplittable_partition_falls_back_in_memory() {
+        // Every key equal: no partitioning can split the build side,
+        // so the depth cap must end the recursion, not a stack
+        // overflow.
+        let l = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![7; 64]),
+        )])
+        .unwrap();
+        let r = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![7; 32]),
+        )])
+        .unwrap();
+        let opts = JoinOptions::inner("k", "k").with_algo(JoinAlgo::Hash);
+        let oracle = hash_join_indices(&l, &r, &opts).unwrap();
+        let tiny = MemoryBudget::with_limit(1);
+        let grace = grace_join_indices(&l, &r, &opts, &tiny).unwrap();
+        assert_eq!(grace, oracle);
+        assert_eq!(grace.0.len(), 64 * 32);
+    }
+}

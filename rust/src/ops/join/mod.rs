@@ -13,6 +13,7 @@
 //! nothing (it still appears, null-extended, in the corresponding outer
 //! joins).
 
+mod grace;
 mod hash_join;
 mod sort_join;
 
@@ -145,10 +146,24 @@ pub(crate) fn validate(
 }
 
 /// Execute a join and materialise the output table.
+///
+/// Hash joins consult the per-rank memory governor
+/// ([`crate::exec::MemoryBudget`]): when the combined footprint of
+/// both sides doesn't fit the budget, the join degrades to the grace
+/// hash join — hash-partitioned RYF spill files joined one partition
+/// at a time — with bit-identical output (`docs/MEMORY.md`).
 pub fn join(left: &Table, right: &Table, opts: &JoinOptions) -> Result<Table> {
     validate(left, right, opts)?;
     let (li, ri) = match opts.algo {
-        JoinAlgo::Hash => hash_join_indices(left, right, opts)?,
+        JoinAlgo::Hash => {
+            let budget = crate::exec::MemoryBudget::current();
+            match budget.try_reserve(left.byte_size() + right.byte_size()) {
+                Some(_held) => hash_join_indices(left, right, opts)?,
+                None => grace::grace_join_indices(
+                    left, right, opts, &budget,
+                )?,
+            }
+        }
         JoinAlgo::Sort => sort_join_indices(left, right, opts)?,
     };
     assemble(left, right, &li, &ri, &opts.suffix)

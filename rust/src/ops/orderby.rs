@@ -1,11 +1,24 @@
 //! OrderBy — sort a table by one or more key columns (DataTable API
 //! surface; also the local phase of `dist::dist_sort`'s sample sort).
+//!
+//! When the per-rank memory governor denies the in-memory sort's
+//! working set, [`orderby`] degrades to an **external merge sort**:
+//! budget-sized contiguous runs are stably sorted one at a time,
+//! spilled as RYF row groups under a per-episode spill directory, read
+//! back, and stably merged (ties take the earlier run) through the
+//! same merge-level machinery the parallel in-memory sort uses — the
+//! output is bit-identical to the unbounded path (`docs/MEMORY.md`).
+
+use std::cmp::Ordering;
 
 use crate::compute::filter::take_parallel;
-use crate::compute::sort::{argsort_by_columns, argsort_i64};
+use crate::compute::sort::{
+    argsort_by_columns, argsort_i64, merge_runs_stable_by,
+};
 use crate::column::Column;
 use crate::error::Result;
-use crate::exec;
+use crate::exec::{self, MemoryBudget, SpillDir};
+use crate::io::ryf::{read_ryf_footer, read_ryf_group, RyfWriter};
 use crate::table::Table;
 
 /// Sort direction.
@@ -53,6 +66,14 @@ pub fn orderby(table: &Table, keys: &[SortKey]) -> Result<Table> {
         .iter()
         .map(|k| k.order == SortOrder::Descending)
         .collect();
+    // Declared working set: the sorted copy plus the permutation. If
+    // the governor denies it, sort out of core instead.
+    let budget = MemoryBudget::current();
+    let need = table.byte_size() + 8 * table.num_rows();
+    let held = budget.try_reserve(need);
+    if held.is_none() && table.num_rows() > 0 {
+        return external_sort(table, keys, &desc, &budget);
+    }
     // Radix fast path: single ascending i64 key.
     let perm = if cols.len() == 1 && !desc[0] {
         if let Column::Int64(c) = cols[0] {
@@ -67,6 +88,98 @@ pub fn orderby(table: &Table, keys: &[SortKey]) -> Result<Table> {
     // `table.take(&perm)` bit for bit.
     Ok(take_parallel(
         table,
+        &perm,
+        exec::parallelism_for(perm.len()),
+    ))
+}
+
+/// Smallest external-sort run, in rows: below this, run overhead (one
+/// RYF group per run) dwarfs any memory saving, so the budget-derived
+/// run size is floored here even when the budget is smaller.
+const MIN_RUN_ROWS: usize = 256;
+
+/// External merge sort (module docs): stably sorted budget-sized runs
+/// spilled as RYF groups, then a stable ties-take-left merge of the
+/// index runs over the read-back concatenation. Both the serial
+/// comparator sort and the radix fast path produce *the* stable
+/// permutation (nulls first, ties in input order), so one comparator
+/// merge reproduces either.
+fn external_sort(
+    table: &Table,
+    keys: &[SortKey],
+    desc: &[bool],
+    budget: &MemoryBudget,
+) -> Result<Table> {
+    let n = table.num_rows();
+    // Run size: each run's sorted copy + permutation should fit about
+    // half the budget, leaving headroom for the merge's chunk buffers.
+    let per_row = (table.byte_size() / n).max(1) + 8;
+    let run_rows = if budget.limit() == 0 {
+        n
+    } else {
+        (budget.limit() / (2 * per_row)).clamp(MIN_RUN_ROWS, n)
+    };
+
+    // Run phase: one run resident at a time — slice, stable-sort,
+    // materialise, spill, drop. The spill dir is removed when `dir`
+    // drops (normal return or unwind).
+    let dir = SpillDir::create()?;
+    let path = dir.file("sort-runs.ryf");
+    let mut w = RyfWriter::create(&path)?;
+    let mut lo = 0usize;
+    while lo < n {
+        let run = table.slice(lo, run_rows);
+        let rcols: Result<Vec<&Column>> = keys
+            .iter()
+            .map(|k| run.column_by_name(&k.column))
+            .collect();
+        let perm = argsort_by_columns(&rcols?, desc, run.num_rows());
+        let sorted =
+            take_parallel(&run, &perm, exec::parallelism_for(perm.len()));
+        exec::note_spill(sorted.byte_size() as u64);
+        w.append(&sorted)?;
+        lo += run.num_rows();
+    }
+    w.finish()?;
+
+    // Merge phase: read the sorted runs back and merge their index
+    // ranges stably (ties take the earlier run). Runs are contiguous
+    // pieces of the input in original order and each is stably sorted,
+    // so the merged order is exactly the serial stable argsort's.
+    let metas = read_ryf_footer(&path)?;
+    let mut parts = Vec::with_capacity(metas.len());
+    for m in &metas {
+        parts.push(read_ryf_group(&path, m)?);
+    }
+    let concat = Table::concat_all(table.schema(), &parts)?;
+    let runs: Vec<Vec<usize>> = {
+        let mut runs = Vec::with_capacity(parts.len());
+        let mut lo = 0usize;
+        for p in &parts {
+            runs.push((lo..lo + p.num_rows()).collect());
+            lo += p.num_rows();
+        }
+        runs
+    };
+    drop(parts);
+    let ccols: Result<Vec<&Column>> = keys
+        .iter()
+        .map(|k| concat.column_by_name(&k.column))
+        .collect();
+    let ccols = ccols?;
+    let cmp = |a: usize, b: usize| -> Ordering {
+        for (c, &d) in ccols.iter().zip(desc) {
+            let ord = c.cmp_rows(a, *c, b);
+            let ord = if d { ord.reverse() } else { ord };
+            if ord != Ordering::Equal {
+                return ord;
+            }
+        }
+        Ordering::Equal
+    };
+    let perm = merge_runs_stable_by(runs, |&b, &a| cmp(b, a) == Ordering::Less);
+    Ok(take_parallel(
+        &concat,
         &perm,
         exec::parallelism_for(perm.len()),
     ))
@@ -119,5 +232,60 @@ mod tests {
     #[test]
     fn missing_column() {
         assert!(orderby(&t(), &[SortKey::asc("ghost")]).is_err());
+    }
+
+    fn random_table(seed: u64, n: usize) -> Table {
+        let mut rng = crate::util::rng::Xoshiro256::new(seed);
+        let k: Vec<Option<i64>> = (0..n)
+            .map(|_| {
+                if rng.next_below(9) == 0 {
+                    None
+                } else {
+                    Some(rng.next_below(50) as i64)
+                }
+            })
+            .collect();
+        let s: Vec<String> =
+            (0..n).map(|_| format!("s{}", rng.next_below(7))).collect();
+        Table::from_columns(vec![
+            ("k", Column::from_opt_i64(k)),
+            ("s", Column::from_str(
+                &s.iter().map(|x| x.as_str()).collect::<Vec<_>>(),
+            )),
+            ("v", Column::from_i64((0..n as i64).collect())),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn external_sort_bit_identical_to_in_memory() {
+        let t = random_table(31, 3000);
+        for keys in [
+            vec![SortKey::asc("k")], // radix fast path oracle
+            vec![SortKey::desc("k"), SortKey::asc("s")],
+            vec![SortKey::asc("s"), SortKey::desc("v")],
+        ] {
+            let oracle = orderby(&t, &keys).unwrap();
+            // A 1-byte budget floors the run size at MIN_RUN_ROWS →
+            // many runs, real merging.
+            let spilled = exec::with_memory_budget_bytes(1, || {
+                orderby(&t, &keys).unwrap()
+            });
+            assert_eq!(spilled, oracle);
+        }
+    }
+
+    #[test]
+    fn external_sort_spills_and_cleans_up() {
+        let t = random_table(32, 2000);
+        let dirs = exec::live_spill_dirs();
+        let (bytes, parts) =
+            (exec::spill_bytes(), exec::spill_partitions());
+        exec::with_memory_budget_bytes(1, || {
+            orderby(&t, &[SortKey::asc("k")]).unwrap();
+        });
+        assert!(exec::spill_bytes() > bytes, "runs must hit disk");
+        assert!(exec::spill_partitions() > parts);
+        assert_eq!(exec::live_spill_dirs(), dirs, "no leaked spill dirs");
     }
 }

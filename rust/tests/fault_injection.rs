@@ -15,6 +15,9 @@
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 use std::sync::Once;
+use std::time::Duration;
+
+use rylon::exec::{live_spill_dirs, SpillDir};
 
 use rylon::dist::{
     dist_groupby, dist_join, dist_sort, read_csv_partition_with,
@@ -473,6 +476,274 @@ fn bad_fault_plans_are_rejected_at_cluster_build() {
         );
         assert!(r.is_err(), "accepted malformed plan '{bad}'");
     }
+}
+
+/// Spill-dir leak gate: other tests in this binary may hold their own
+/// short-lived spill dirs concurrently (the gauge is process-global),
+/// so tolerate churn by waiting for it to drain back to the entry
+/// level — a genuine leak never drains.
+fn assert_spill_dirs_drain_to(before: usize, label: &str) {
+    for _ in 0..200 {
+        if live_spill_dirs() <= before {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    panic!(
+        "{label}: {} spill dirs live, {before} at entry — leaked",
+        live_spill_dirs()
+    );
+}
+
+#[test]
+fn mid_spill_fault_cleans_every_rank_and_attributes_the_abort() {
+    // The out-of-core fault gate (docs/MEMORY.md): a 1-byte budget
+    // forces every rank's local join out of core, and each rank holds
+    // an explicit spill episode (directory + half-written run file)
+    // open across the faulting collective. `error` and `panic` faults
+    // injected at the shuffle exchanges must abort every rank
+    // symmetrically with the injected rank attributed — and the
+    // unwind must delete every rank's spill directory, the explicit
+    // one and the operators' own alike.
+    quiet_injected_panics();
+    let world = 2usize;
+    for kind in ["error", "panic"] {
+        for exchange in 0..3u64 {
+            let plan = format!("{kind}@1:{exchange}");
+            let label = format!("mid-spill plan={plan}");
+            let before = live_spill_dirs();
+            let cluster = Cluster::new(
+                DistConfig::threads(world)
+                    .with_intra_op_threads(1)
+                    .with_memory_budget(1)
+                    .with_fault_plan(plan.as_str())
+                    .with_collective_timeout_ms(TIMEOUT_MS),
+            )
+            .unwrap();
+            let slots: Vec<Mutex<Option<(usize, String, u64)>>> =
+                (0..world).map(|_| Mutex::new(None)).collect();
+            let r = cluster.run(|ctx| {
+                // A live spill episode spanning the collectives: the
+                // abort unwinds through this frame and must remove the
+                // directory and its contents on every rank.
+                let dir = SpillDir::create()?;
+                std::fs::write(dir.file("wip.ryf"), b"half a run")?;
+                let l = gen_partition(
+                    &DataGenSpec::paper_scaling(600, 7),
+                    ctx.rank,
+                    ctx.size,
+                )?;
+                let rt = gen_partition(
+                    &DataGenSpec::paper_scaling(600, 8),
+                    ctx.rank,
+                    ctx.size,
+                )?;
+                let out =
+                    dist_join(ctx, &l, &rt, &JoinOptions::inner("id", "id"));
+                if let Err(e) = &out {
+                    if let Some(i) = e.abort_info() {
+                        *slots[ctx.rank].lock().unwrap() =
+                            Some((i.rank, i.op.clone(), i.step));
+                    }
+                }
+                out.map(|t| t.num_rows())
+            });
+            if cluster.injected_faults() == 0 {
+                // Coordinates past the job's last exchange: it must
+                // have run clean — and under the 1-byte budget the
+                // local joins must actually have gone out of core.
+                assert!(
+                    r.is_ok(),
+                    "{label}: plan never fired yet the job failed: {}",
+                    r.err().map(|e| e.to_string()).unwrap_or_default()
+                );
+                assert!(
+                    cluster.spilled_partitions() > 0,
+                    "{label}: budget=1 dist_join did not spill"
+                );
+            } else {
+                let e = r.expect_err(&format!(
+                    "{label}: fault fired but the job succeeded"
+                ));
+                let info = e.abort_info().unwrap_or_else(|| {
+                    panic!("{label}: unattributed job error: {e}")
+                });
+                assert_eq!(info.rank, 1, "{label}: wrong rank blamed ({e})");
+                let attrs: Vec<(usize, String, u64)> = slots
+                    .iter()
+                    .filter_map(|s| s.lock().unwrap().clone())
+                    .collect();
+                for a in &attrs {
+                    assert_eq!(
+                        a,
+                        &attrs[0],
+                        "{label}: ranks disagree on attribution"
+                    );
+                    assert_eq!(a.0, 1, "{label}: wrong rank observed");
+                    assert!(
+                        a.1 == "shuffle" || a.1 == "dist_join",
+                        "{label}: unexpected op blamed: {}",
+                        a.1
+                    );
+                }
+            }
+            drop(cluster);
+            assert_spill_dirs_drain_to(before, &label);
+        }
+    }
+}
+
+fn rylon_cmd(spill_root: &Path, extra: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_rylon"))
+        .args(extra)
+        // A private spill root per test run: children inherit it, so
+        // every rank process spills here and nowhere else.
+        .env("RYLON_SPILL_DIR", spill_root)
+        .output()
+        .expect("spawn rylon binary")
+}
+
+fn render(out: &std::process::Output) -> String {
+    format!(
+        "status: {:?}\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    )
+}
+
+fn spill_root_entries(root: &Path) -> Vec<String> {
+    std::fs::read_dir(root)
+        .map(|rd| {
+            rd.filter_map(|e| {
+                e.ok().map(|e| e.file_name().to_string_lossy().into_owned())
+            })
+            .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Sum every `"bytes_spilled":N` a (possibly multi-rank) stdout
+/// printed — each tcp rank process emits its own phase report.
+fn total_bytes_spilled(stdout: &str) -> u64 {
+    stdout
+        .match_indices("\"bytes_spilled\":")
+        .map(|(i, pat)| {
+            stdout[i + pat.len()..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect::<String>()
+                .parse::<u64>()
+                .unwrap_or(0)
+        })
+        .sum()
+}
+
+#[test]
+fn budgeted_tcp_etl_spills_and_injected_exit_leaks_no_spill_files() {
+    // Process-level out-of-core fault gate (docs/MEMORY.md), over the
+    // real binary and the tcp fabric. Clean leg: a spill-forcing
+    // budget must let the 4-rank ETL complete, book spilled bytes into
+    // the phase reports, and leave the private spill root empty.
+    // Fault leg: killing rank 1's whole process mid-shuffle must abort
+    // the survivors with the dead rank attributed — and still leave
+    // the spill root empty on every rank (the survivors' unwinds
+    // delete their spill dirs; the dead rank held none at the
+    // collective boundary where it was shot).
+    let rendezvous = || {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        addr
+    };
+
+    let root = std::env::temp_dir().join("rylon_fault_spill_root_clean");
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).unwrap();
+    let rdv = rendezvous();
+    let out = rylon_cmd(
+        &root,
+        &[
+            "etl",
+            "--rows",
+            "2000",
+            "--world",
+            "4",
+            "--fabric",
+            "tcp",
+            "--rendezvous",
+            &rdv,
+            "--memory-budget",
+            "4096",
+            "--collective-timeout",
+            "60000",
+        ],
+    );
+    assert!(out.status.success(), "{}", render(&out));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("all 4 ranks completed"),
+        "{}",
+        render(&out)
+    );
+    assert!(
+        total_bytes_spilled(&stdout) > 0,
+        "budget=4096 ETL reported no spilled bytes\n{}",
+        render(&out)
+    );
+    assert_eq!(
+        spill_root_entries(&root),
+        Vec::<String>::new(),
+        "clean run left spill files behind"
+    );
+    std::fs::remove_dir_all(&root).ok();
+
+    let root = std::env::temp_dir().join("rylon_fault_spill_root_exit");
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).unwrap();
+    let rdv = rendezvous();
+    let out = rylon_cmd(
+        &root,
+        &[
+            "etl",
+            "--rows",
+            "2000",
+            "--world",
+            "4",
+            "--fabric",
+            "tcp",
+            "--rendezvous",
+            &rdv,
+            "--memory-budget",
+            "4096",
+            "--fault-plan",
+            "exit@1:3",
+            "--collective-timeout",
+            "60000",
+        ],
+    );
+    assert!(
+        !out.status.success(),
+        "job survived a dead rank\n{}",
+        render(&out)
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("injected exit at rank 1"),
+        "exit never fired\n{}",
+        render(&out)
+    );
+    assert!(
+        stderr.contains("rank 1 died"),
+        "no survivor attributed the dead rank\n{}",
+        render(&out)
+    );
+    assert_eq!(
+        spill_root_entries(&root),
+        Vec::<String>::new(),
+        "aborted run leaked spill files"
+    );
+    std::fs::remove_dir_all(&root).ok();
 }
 
 #[test]

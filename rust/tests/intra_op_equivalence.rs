@@ -769,6 +769,90 @@ fn fused_pipeline_bit_identical_matrix() {
 }
 
 #[test]
+fn spill_forcing_budget_matrix_bit_identical() {
+    // The out-of-core acceptance gate (docs/MEMORY.md): join, sort,
+    // and groupby under a memory budget chosen to force **zero**
+    // (unbounded control), **one** (half the declared working set:
+    // the whole input is denied, each hash partition is admitted),
+    // and **recursive** (1 byte: every reservation is denied down to
+    // the depth cap / run-size floor) spill levels must all produce
+    // tables bit-identical to the unbounded in-memory oracle — at
+    // 1/2/4/8 morsel workers, steal on and off. Every spill-forcing
+    // run must also book partitions into the governor's counters,
+    // and no run may leak a spill directory.
+    fn check(label: &str, need: usize, run: &dyn Fn() -> Table) {
+        let oracle = exec::with_intra_op_threads(1, || {
+            exec::with_memory_budget_bytes(0, run)
+        });
+        for (budget, levels) in
+            [(0usize, "zero"), (need / 2, "one"), (1, "recursive")]
+        {
+            for threads in [1usize, 2, 4, 8] {
+                for steal in [true, false] {
+                    let parts_before = exec::spill_partitions();
+                    let dirs_before = exec::live_spill_dirs();
+                    let out = exec::with_intra_op_threads(threads, || {
+                        exec::with_work_steal(steal, || {
+                            exec::with_memory_budget_bytes(budget, run)
+                        })
+                    });
+                    assert_eq!(
+                        out, oracle,
+                        "{label} diverged at budget={budget} ({levels} \
+                         spill levels), {threads} threads, steal={steal}"
+                    );
+                    let spilled =
+                        exec::spill_partitions() - parts_before;
+                    if budget == 0 {
+                        assert_eq!(
+                            spilled, 0,
+                            "{label}: unbounded control must not spill"
+                        );
+                    } else {
+                        assert!(
+                            spilled > 0,
+                            "{label}: budget={budget} ({levels}) must \
+                             spill at least one partition"
+                        );
+                    }
+                    assert_eq!(
+                        exec::live_spill_dirs(),
+                        dirs_before,
+                        "{label}: leaked spill dir at budget={budget}"
+                    );
+                }
+            }
+        }
+    }
+
+    let l = random_table(61, 9_000, 300, 5);
+    let r = random_table(62, 3_000, 250, 4);
+    let jopts = JoinOptions::new(JoinType::FullOuter, &["k"], &["k"])
+        .with_algo(JoinAlgo::Hash);
+    let gopts = GroupByOptions::new(
+        &["k"],
+        vec![
+            Agg::sum("v"),
+            Agg::count("v"),
+            Agg::mean("v"),
+            Agg::max("s"),
+        ],
+    );
+    let skeys = vec![SortKey::asc("k"), SortKey::desc("s")];
+
+    // The working-set estimate each operator declares to the governor
+    // (docs/MEMORY.md) — `need / 2` is therefore exactly the one-level
+    // budget for that operator.
+    check("join", l.byte_size() + r.byte_size(), &|| {
+        join(&l, &r, &jopts).unwrap()
+    });
+    check("sort", l.byte_size() + 8 * l.num_rows(), &|| {
+        orderby(&l, &skeys).unwrap()
+    });
+    check("groupby", l.byte_size(), &|| groupby(&l, &gopts).unwrap());
+}
+
+#[test]
 fn pipeline_end_to_end_bit_identical() {
     // A realistic chain: filter → join → groupby → orderby, all under
     // one parallel budget vs serial.

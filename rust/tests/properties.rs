@@ -15,6 +15,7 @@ use rylon::io::csv::{
     write_csv_to, CsvOptions,
 };
 use rylon::net::wire::{deserialize_table, serialize_table};
+use rylon::ops::groupby::{groupby, Agg, GroupByOptions};
 use rylon::ops::join::{join, JoinAlgo, JoinOptions, JoinType};
 use rylon::ops::orderby::{orderby, SortKey};
 use rylon::ops::set_ops::{difference, distinct, intersect, subtract, union};
@@ -648,6 +649,87 @@ fn prop_rebalance_preserves_order_and_evens_sizes() {
         let mut sorted = all.clone();
         sorted.sort();
         assert_eq!(all, sorted, "seed {seed} order broken");
+    }
+}
+
+/// Memory-governor property (docs/MEMORY.md): over randomized tables,
+/// shrinking the budget from exactly the declared working set (fully
+/// admitted — the in-memory path) down to one byte (every reservation
+/// denied — recursive spilling) must (1) never change a join / sort /
+/// groupby result, (2) never let tracked reservations exceed the
+/// budget, (3) never balloon real allocation past a generous multiple
+/// of the unbounded path's peak (the counting allocator above is the
+/// gauge: out-of-core means bounded *extra* residency, not an O(n²)
+/// blowup), and (4) always delete every spill directory on drop.
+#[test]
+fn prop_shrinking_memory_budget_never_changes_results_or_leaks() {
+    for seed in 0..12u64 {
+        let mut rng = Xoshiro256::new(14_000 + seed);
+        let a = random_table(&mut rng, 300, 12);
+        let b = random_table(&mut rng, 150, 12);
+        let jopts = JoinOptions::new(JoinType::Left, &["k"], &["k"])
+            .with_algo(JoinAlgo::Hash);
+        let gopts = GroupByOptions::new(
+            &["k"],
+            vec![Agg::sum("v"), Agg::count("v"), Agg::mean("v")],
+        );
+        let skeys = [SortKey::asc("k"), SortKey::desc("s")];
+
+        let check = |label: &str, need: usize, run: &dyn Fn() -> Table| {
+            let dirs = exec::live_spill_dirs();
+            let (peak0, oracle) = exec::with_intra_op_threads(1, || {
+                peak_alloc_of(|| exec::with_memory_budget_bytes(0, run))
+            });
+            let mut budgets = Vec::new();
+            let mut bytes = need.max(1);
+            while bytes > 1 {
+                budgets.push(bytes);
+                bytes /= 4;
+            }
+            budgets.push(1);
+            for budget in budgets {
+                exec::reset_reserved_peak();
+                let (peak, out) = exec::with_intra_op_threads(1, || {
+                    peak_alloc_of(|| {
+                        exec::with_memory_budget_bytes(budget, run)
+                    })
+                });
+                assert_eq!(
+                    out, oracle,
+                    "seed {seed} {label}: budget {budget} changed the \
+                     result"
+                );
+                assert!(
+                    exec::reserved_peak() <= budget,
+                    "seed {seed} {label}: reserved {} B over the {budget} \
+                     B budget",
+                    exec::reserved_peak()
+                );
+                let slack = 4 * peak0 + (1 << 20);
+                assert!(
+                    peak <= slack,
+                    "seed {seed} {label}: budget {budget} peaked at \
+                     {peak} B (> {slack} B; unbounded peak {peak0} B)"
+                );
+                assert_eq!(
+                    exec::live_spill_dirs(),
+                    dirs,
+                    "seed {seed} {label}: budget {budget} leaked a \
+                     spill dir"
+                );
+            }
+        };
+
+        // `need` is the working-set estimate each operator declares to
+        // the governor, so the first (largest) budget is the admitted
+        // boundary case and everything below it spills.
+        check("join", a.byte_size() + b.byte_size(), &|| {
+            join(&a, &b, &jopts).unwrap()
+        });
+        check("sort", a.byte_size() + 8 * a.num_rows(), &|| {
+            orderby(&a, &skeys).unwrap()
+        });
+        check("groupby", a.byte_size(), &|| groupby(&a, &gopts).unwrap());
     }
 }
 
