@@ -12,6 +12,12 @@
 //! `BENCH_ingest.json` (mirror of `intra_op_scaling.rs` →
 //! `BENCH_intra_op.json`).
 //!
+//! A **scan-selectivity sweep** (0.1% / 1% / 10% / 100%) scans the
+//! same table through the zone-map pushdown path (docs/STORAGE.md) in
+//! both RYF formats, asserting bit-identity and reporting
+//! `groups_skipped`, `decoded_bytes_avoided`, and
+//! `speedup_encoded_vs_raw` per selectivity.
+//!
 //! Env overrides: INGEST_ROWS (default 500_000), INGEST_SAMPLES,
 //! INGEST_MAX_THREADS.
 
@@ -24,7 +30,8 @@ use rylon::dist::{
 };
 use rylon::exec;
 use rylon::io::csv::{read_csv, read_csv_str, write_csv, CsvOptions};
-use rylon::io::ryf::{read_ryf, write_ryf};
+use rylon::io::ryf::{read_ryf, scan_ryf, write_ryf, ScanOptions};
+use rylon::ops::select::Predicate;
 use rylon::table::Table;
 use rylon::util::json::Json;
 
@@ -368,6 +375,111 @@ fn main() {
             sp_med, tp_med
         );
     }
+
+    // Scan-selectivity sweep: the sequential `id` column makes zone
+    // maps ideal, so `id < k` prunes every group past the cutoff
+    // without decoding. Encoded and raw files are scanned with the
+    // same predicate + projection; bit-identity is asserted before
+    // timing, and the counters that justify the encoded format
+    // (groups skipped, decoded bytes avoided) ride along.
+    let enc_scan_path = dir.join("rylon_ingest_scan_enc.ryf");
+    let raw_scan_path = dir.join("rylon_ingest_scan_raw.ryf");
+    let group_rows = (rows / 64).max(1);
+    exec::with_ryf_encoding(true, || {
+        write_ryf(&table, &enc_scan_path, group_rows)
+    })
+    .expect("write encoded ryf");
+    exec::with_ryf_encoding(false, || {
+        write_ryf(&table, &raw_scan_path, group_rows)
+    })
+    .expect("write raw ryf");
+    println!(
+        "scan selectivity sweep ({} rows/group, t={sweep_threads}):",
+        group_rows
+    );
+    for selectivity in [0.001f64, 0.01, 0.1, 1.0] {
+        let cutoff = ((rows as f64) * selectivity).round() as i64;
+        let sopts = ScanOptions {
+            predicate: Some(
+                Predicate::parse(&format!("id < {cutoff}")).unwrap(),
+            ),
+            projection: Some(vec!["id".to_string(), "v".to_string()]),
+        };
+        let _ = exec::take_scan_stats();
+        let (enc_out, sc) = exec::with_intra_op_threads(sweep_threads, || {
+            let out = scan_ryf(&enc_scan_path, &sopts).unwrap();
+            (out, exec::take_scan_stats())
+        });
+        let raw_out = exec::with_intra_op_threads(sweep_threads, || {
+            scan_ryf(&raw_scan_path, &sopts).unwrap()
+        });
+        let _ = exec::take_scan_stats();
+        assert_eq!(
+            enc_out, raw_out,
+            "encoded scan diverged from the raw oracle at \
+             selectivity {selectivity}"
+        );
+        let rows_out = enc_out.num_rows();
+        let time_scan = |path: &std::path::Path| {
+            let p = path.to_path_buf();
+            exec::with_intra_op_threads(sweep_threads, || {
+                let med = measure(opts, || {
+                    std::hint::black_box(
+                        scan_ryf(&p, &sopts).unwrap().num_rows(),
+                    );
+                })
+                .median;
+                let _ = exec::take_scan_stats();
+                med
+            })
+        };
+        let enc_med = time_scan(&enc_scan_path);
+        let raw_med = time_scan(&raw_scan_path);
+        let speedup = raw_med / enc_med.max(1e-12);
+        report.add_with(
+            "ryf_scan_selectivity",
+            selectivity,
+            enc_med,
+            vec![
+                ("raw_seconds".to_string(), raw_med),
+                ("speedup_encoded_vs_raw".to_string(), speedup),
+                ("groups_skipped".to_string(), sc.groups_skipped as f64),
+                (
+                    "decoded_bytes_avoided".to_string(),
+                    sc.decoded_bytes_avoided as f64,
+                ),
+                ("rows_out".to_string(), rows_out as f64),
+            ],
+        );
+        results.push(Json::obj(vec![
+            ("op", Json::str("ryf_scan_selectivity".to_string())),
+            ("selectivity", Json::num(selectivity)),
+            ("threads", Json::num(sweep_threads as f64)),
+            ("seconds", Json::num(enc_med)),
+            ("raw_seconds", Json::num(raw_med)),
+            ("speedup_encoded_vs_raw", Json::num(speedup)),
+            ("groups_total", Json::num(sc.groups_total as f64)),
+            ("groups_skipped", Json::num(sc.groups_skipped as f64)),
+            (
+                "decoded_bytes_avoided",
+                Json::num(sc.decoded_bytes_avoided as f64),
+            ),
+            ("pruned_columns", Json::num(sc.pruned_columns as f64)),
+            ("rows_out", Json::num(rows_out as f64)),
+        ]));
+        println!(
+            "  sel {:>6.3}%: enc {:>9.4}s  raw {:>9.4}s  \
+             ({speedup:.2}x)  skipped {}/{}  avoided {:>6.1} MiB",
+            selectivity * 100.0,
+            enc_med,
+            raw_med,
+            sc.groups_skipped,
+            sc.groups_total,
+            sc.decoded_bytes_avoided as f64 / (1024.0 * 1024.0)
+        );
+    }
+    std::fs::remove_file(&enc_scan_path).ok();
+    std::fs::remove_file(&raw_scan_path).ok();
 
     println!("{}", report.render());
     report.save("ingest_scaling").expect("save report");

@@ -266,3 +266,4 @@ mod tests {
     }
 }
 pub mod figures;
+pub mod recipe;

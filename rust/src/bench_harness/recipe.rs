@@ -1,0 +1,673 @@
+//! Recipe-driven bench runner: YAML-subset recipes describe a dataset
+//! shape (rows, payload columns, key distribution), a scan scenario,
+//! and a thread/world/selectivity matrix; the runner generates the
+//! dataset, writes it as both encoded (`RYF2`) and raw (`RYF1`) files,
+//! and times the pushed-down scan over each. Every case cross-checks
+//! the encoded result against the raw-format oracle bit-identically
+//! and errors on any divergence, so `rylon bench run-all` doubles as a
+//! correctness gate (the CI bench-recipe smoke leg). One summary JSON
+//! per recipe lands under `bench/results/`.
+//!
+//! The recipe grammar is a deliberately tiny YAML subset — `key:
+//! value` lines, `#` comments, and inline `[a, b, c]` lists; no
+//! nesting — because the offline registry has no YAML crate.
+
+use std::path::Path;
+
+use crate::dist::{Cluster, DistConfig};
+use crate::error::{Result, RylonError};
+use crate::exec::ScanCounters;
+use crate::io::datagen::{gen_table, DataGenSpec, KeyDist};
+use crate::io::ryf::write_ryf;
+use crate::pipeline::{Env, Pipeline};
+use crate::table::Table;
+use crate::util::json::Json;
+
+use super::{measure, BenchOpts};
+
+/// One parsed bench recipe.
+#[derive(Debug, Clone)]
+pub struct Recipe {
+    /// Recipe name (also the summary file stem).
+    pub name: String,
+    /// Fact-table rows.
+    pub rows: usize,
+    /// f64 payload columns beside the `id` key.
+    pub payload_cols: usize,
+    /// Rows per RYF row group.
+    pub group_rows: usize,
+    /// Key distribution: `seq`, `uniform`, or `zipf`.
+    pub dist: String,
+    /// `scan` (predicate only) or `scan_project` (predicate plus a
+    /// projection to `id`, exercising column pruning).
+    pub scenario: String,
+    /// Predicate selectivities to sweep, each in `(0, 1]`.
+    pub selectivities: Vec<f64>,
+    /// Per-rank morsel worker counts to sweep.
+    pub threads: Vec<usize>,
+    /// World sizes (rank counts) to sweep.
+    pub worlds: Vec<usize>,
+    /// Datagen seed.
+    pub seed: u64,
+}
+
+fn parse_usize(v: &str, lineno: usize) -> Result<usize> {
+    v.parse().map_err(|_| {
+        RylonError::parse(format!(
+            "recipe line {lineno}: bad integer {v:?}"
+        ))
+    })
+}
+
+fn parse_f64(v: &str, lineno: usize) -> Result<f64> {
+    v.parse().map_err(|_| {
+        RylonError::parse(format!("recipe line {lineno}: bad number {v:?}"))
+    })
+}
+
+/// Parse an inline `[a, b, c]` list with the given element parser.
+fn parse_list<T>(
+    v: &str,
+    lineno: usize,
+    elem: impl Fn(&str, usize) -> Result<T>,
+) -> Result<Vec<T>> {
+    let inner = v
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| {
+            RylonError::parse(format!(
+                "recipe line {lineno}: expected [a, b, …], got {v:?}"
+            ))
+        })?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(elem(part, lineno)?);
+    }
+    if out.is_empty() {
+        return Err(RylonError::parse(format!(
+            "recipe line {lineno}: empty list"
+        )));
+    }
+    Ok(out)
+}
+
+impl Recipe {
+    /// Parse recipe text. Unknown keys are errors (fail closed), so a
+    /// typo'd knob can't silently fall back to a default.
+    pub fn parse(text: &str) -> Result<Recipe> {
+        let mut r = Recipe {
+            name: String::new(),
+            rows: 0,
+            payload_cols: 2,
+            group_rows: 4096,
+            dist: "seq".to_string(),
+            scenario: "scan".to_string(),
+            selectivities: vec![0.01, 1.0],
+            threads: vec![1],
+            worlds: vec![1],
+            seed: 42,
+        };
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = match raw.find('#') {
+                Some(h) => &raw[..h],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once(':').ok_or_else(|| {
+                RylonError::parse(format!(
+                    "recipe line {lineno}: expected key: value"
+                ))
+            })?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "name" => r.name = v.to_string(),
+                "rows" => r.rows = parse_usize(v, lineno)?,
+                "payload_cols" => {
+                    r.payload_cols = parse_usize(v, lineno)?
+                }
+                "group_rows" => r.group_rows = parse_usize(v, lineno)?,
+                "seed" => r.seed = parse_usize(v, lineno)? as u64,
+                "dist" => r.dist = v.to_string(),
+                "scenario" => r.scenario = v.to_string(),
+                "selectivities" => {
+                    r.selectivities = parse_list(v, lineno, parse_f64)?
+                }
+                "threads" => {
+                    r.threads = parse_list(v, lineno, parse_usize)?
+                }
+                "worlds" => {
+                    r.worlds = parse_list(v, lineno, parse_usize)?
+                }
+                other => {
+                    return Err(RylonError::parse(format!(
+                        "recipe line {lineno}: unknown key '{other}'"
+                    )))
+                }
+            }
+        }
+        r.validate()?;
+        Ok(r)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let bad = |msg: String| Err(RylonError::invalid(msg));
+        if self.name.is_empty()
+            || !self
+                .name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || "_-".contains(c))
+        {
+            return bad(format!(
+                "recipe needs a [A-Za-z0-9_-] name, got '{}'",
+                self.name
+            ));
+        }
+        if self.rows == 0 || self.group_rows == 0 {
+            return bad(format!(
+                "recipe {}: rows and group_rows must be ≥ 1",
+                self.name
+            ));
+        }
+        if !matches!(self.dist.as_str(), "seq" | "uniform" | "zipf") {
+            return bad(format!(
+                "recipe {}: dist '{}' (seq|uniform|zipf)",
+                self.name, self.dist
+            ));
+        }
+        if !matches!(self.scenario.as_str(), "scan" | "scan_project") {
+            return bad(format!(
+                "recipe {}: scenario '{}' (scan|scan_project)",
+                self.name, self.scenario
+            ));
+        }
+        if self
+            .selectivities
+            .iter()
+            .any(|&s| !(s > 0.0 && s <= 1.0))
+        {
+            return bad(format!(
+                "recipe {}: selectivities must be in (0, 1]",
+                self.name
+            ));
+        }
+        if self.worlds.iter().chain(&self.threads).any(|&n| n == 0) {
+            return bad(format!(
+                "recipe {}: worlds and threads must be ≥ 1",
+                self.name
+            ));
+        }
+        Ok(())
+    }
+
+    fn key_dist(&self) -> KeyDist {
+        let domain = (self.rows as u64 * 2).max(1);
+        match self.dist.as_str() {
+            "uniform" => KeyDist::Uniform { domain },
+            "zipf" => KeyDist::Zipf { domain, s: 1.1 },
+            _ => KeyDist::Sequential,
+        }
+    }
+
+    /// Upper end of the `id` key domain (exclusive), used to turn a
+    /// selectivity into an `id < cutoff` predicate.
+    fn key_domain(&self) -> u64 {
+        match self.dist.as_str() {
+            "seq" => self.rows as u64,
+            _ => (self.rows as u64 * 2).max(1),
+        }
+    }
+
+    fn pipeline(&self, selectivity: f64) -> Result<Pipeline> {
+        let cutoff = ((self.key_domain() as f64 * selectivity).ceil()
+            as u64)
+            .max(1);
+        let p = Pipeline::new().select(&format!("id < {cutoff}"))?;
+        Ok(match self.scenario.as_str() {
+            "scan_project" => p.project(&["id"]),
+            _ => p,
+        })
+    }
+}
+
+/// One (world, threads, selectivity) measurement.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    /// Rank count.
+    pub world: usize,
+    /// Morsel workers per rank.
+    pub threads: usize,
+    /// Swept predicate selectivity.
+    pub selectivity: f64,
+    /// Median seconds over the encoded (`RYF2`) file.
+    pub seconds_encoded: f64,
+    /// Median seconds over the raw (`RYF1`) oracle file.
+    pub seconds_raw: f64,
+    /// Rows surviving the scan + predicate (identical either way).
+    pub rows_out: u64,
+    /// Scan-pushdown counters from one encoded run.
+    pub counters: ScanCounters,
+}
+
+/// A recipe's measured matrix, renderable and saveable as JSON.
+#[derive(Debug, Clone)]
+pub struct RecipeSummary {
+    /// The recipe's name.
+    pub name: String,
+    /// The recipe's fact-table rows.
+    pub rows: usize,
+    /// Scenario the cases ran.
+    pub scenario: String,
+    /// One entry per matrix point.
+    pub cases: Vec<CaseResult>,
+}
+
+impl RecipeSummary {
+    /// Aligned text table for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "== recipe {} ({} rows, {}) ==\n\
+             {:>6} {:>4} {:>7} {:>10} {:>10} {:>8} {:>14}\n",
+            self.name,
+            self.rows,
+            self.scenario,
+            "world",
+            "thr",
+            "sel",
+            "enc(s)",
+            "raw(s)",
+            "speedup",
+            "skipped/total",
+        );
+        for c in &self.cases {
+            let speedup = if c.seconds_encoded > 0.0 {
+                c.seconds_raw / c.seconds_encoded
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{:>6} {:>4} {:>7.3} {:>10.6} {:>10.6} {:>7.2}x \
+                 {:>7}/{}\n",
+                c.world,
+                c.threads,
+                c.selectivity,
+                c.seconds_encoded,
+                c.seconds_raw,
+                speedup,
+                c.counters.groups_skipped,
+                c.counters.groups_total,
+            ));
+        }
+        out
+    }
+
+    /// The summary as JSON (what `save` writes).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("recipe", Json::str(self.name.clone())),
+            ("rows", Json::num(self.rows as f64)),
+            ("scenario", Json::str(self.scenario.clone())),
+            (
+                "cases",
+                Json::Arr(
+                    self.cases
+                        .iter()
+                        .map(|c| {
+                            let speedup = if c.seconds_encoded > 0.0 {
+                                c.seconds_raw / c.seconds_encoded
+                            } else {
+                                0.0
+                            };
+                            Json::obj(vec![
+                                ("world", Json::num(c.world as f64)),
+                                ("threads", Json::num(c.threads as f64)),
+                                ("selectivity", Json::num(c.selectivity)),
+                                (
+                                    "seconds_encoded",
+                                    Json::num(c.seconds_encoded),
+                                ),
+                                ("seconds_raw", Json::num(c.seconds_raw)),
+                                (
+                                    "speedup_encoded_vs_raw",
+                                    Json::num(speedup),
+                                ),
+                                ("rows_out", Json::num(c.rows_out as f64)),
+                                (
+                                    "groups_total",
+                                    Json::num(
+                                        c.counters.groups_total as f64,
+                                    ),
+                                ),
+                                (
+                                    "groups_skipped",
+                                    Json::num(
+                                        c.counters.groups_skipped as f64,
+                                    ),
+                                ),
+                                (
+                                    "decoded_bytes",
+                                    Json::num(
+                                        c.counters.decoded_bytes as f64,
+                                    ),
+                                ),
+                                (
+                                    "decoded_bytes_avoided",
+                                    Json::num(
+                                        c.counters.decoded_bytes_avoided
+                                            as f64,
+                                    ),
+                                ),
+                                (
+                                    "pruned_columns",
+                                    Json::num(
+                                        c.counters.pruned_columns as f64,
+                                    ),
+                                ),
+                                (
+                                    "bit_identical",
+                                    // Divergence errors the run, so a
+                                    // written summary always passed.
+                                    Json::Bool(true),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `<dir>/<name>.json`.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(
+            dir.as_ref().join(format!("{}.json", self.name)),
+            self.to_json().to_string(),
+        )?;
+        Ok(())
+    }
+}
+
+fn counters_delta(after: &ScanCounters, before: &ScanCounters) -> ScanCounters {
+    ScanCounters {
+        groups_total: after.groups_total - before.groups_total,
+        groups_skipped: after.groups_skipped - before.groups_skipped,
+        decoded_bytes: after.decoded_bytes - before.decoded_bytes,
+        decoded_bytes_avoided: after.decoded_bytes_avoided
+            - before.decoded_bytes_avoided,
+        pruned_columns: after.pruned_columns - before.pruned_columns,
+    }
+}
+
+/// One full distributed scan of `path` through `pipe`, gathered in
+/// rank order.
+fn run_scan(
+    cluster: &Cluster,
+    pipe: &Pipeline,
+    path: &Path,
+) -> Result<Vec<Table>> {
+    cluster.run(|ctx| {
+        let (out, _) = pipe.run_ryf_dist(ctx, path, &Env::new())?;
+        Ok(out)
+    })
+}
+
+/// Run one recipe: generate the dataset, write the encoded and raw
+/// files, and measure every (world, threads, selectivity) point —
+/// erroring if any encoded result diverges from the raw oracle.
+pub fn run_recipe(recipe: &Recipe, samples: usize) -> Result<RecipeSummary> {
+    let table = gen_table(&DataGenSpec {
+        rows: recipe.rows,
+        payload_cols: recipe.payload_cols,
+        key_dist: recipe.key_dist(),
+        seed: recipe.seed,
+    })?;
+    let tmp = std::env::temp_dir();
+    let pid = std::process::id();
+    let enc = tmp.join(format!("rylon_recipe_{}_{pid}_enc.ryf", recipe.name));
+    let raw = tmp.join(format!("rylon_recipe_{}_{pid}_raw.ryf", recipe.name));
+    crate::exec::with_ryf_encoding(true, || {
+        write_ryf(&table, &enc, recipe.group_rows)
+    })?;
+    crate::exec::with_ryf_encoding(false, || {
+        write_ryf(&table, &raw, recipe.group_rows)
+    })?;
+    drop(table);
+    let result = run_cases(recipe, samples, &enc, &raw);
+    std::fs::remove_file(&enc).ok();
+    std::fs::remove_file(&raw).ok();
+    result
+}
+
+fn run_cases(
+    recipe: &Recipe,
+    samples: usize,
+    enc: &Path,
+    raw: &Path,
+) -> Result<RecipeSummary> {
+    let opts = BenchOpts {
+        // The oracle cross-check below already warmed both files.
+        warmup_iters: 0,
+        samples: samples.max(1),
+    };
+    let mut cases = Vec::new();
+    for &world in &recipe.worlds {
+        for &threads in &recipe.threads {
+            let cluster = Cluster::new(
+                DistConfig::threads(world)
+                    .with_intra_op_threads(threads),
+            )?;
+            for &sel in &recipe.selectivities {
+                let pipe = recipe.pipeline(sel)?;
+                // Correctness gate: the encoded scan must reproduce
+                // the raw oracle bit-identically, rank by rank.
+                let before = cluster.scan_stats();
+                let enc_out = run_scan(&cluster, &pipe, enc)?;
+                let counters =
+                    counters_delta(&cluster.scan_stats(), &before);
+                let raw_out = run_scan(&cluster, &pipe, raw)?;
+                if enc_out != raw_out {
+                    return Err(RylonError::invalid(format!(
+                        "recipe {}: encoded scan diverged from the raw \
+                         oracle at world={world} threads={threads} \
+                         selectivity={sel}",
+                        recipe.name
+                    )));
+                }
+                let rows_out: u64 =
+                    enc_out.iter().map(|t| t.num_rows() as u64).sum();
+                drop(enc_out);
+                drop(raw_out);
+                // `measure` can't propagate a Result out of its
+                // closure; park the first error and rethrow after.
+                let mut err: Option<RylonError> = None;
+                let enc_stats = measure(opts, || {
+                    if err.is_some() {
+                        return;
+                    }
+                    if let Err(e) = run_scan(&cluster, &pipe, enc) {
+                        err = Some(e);
+                    }
+                });
+                let raw_stats = measure(opts, || {
+                    if err.is_some() {
+                        return;
+                    }
+                    if let Err(e) = run_scan(&cluster, &pipe, raw) {
+                        err = Some(e);
+                    }
+                });
+                if let Some(e) = err {
+                    return Err(e);
+                }
+                cases.push(CaseResult {
+                    world,
+                    threads,
+                    selectivity: sel,
+                    seconds_encoded: enc_stats.median,
+                    seconds_raw: raw_stats.median,
+                    rows_out,
+                    counters,
+                });
+            }
+        }
+    }
+    Ok(RecipeSummary {
+        name: recipe.name.clone(),
+        rows: recipe.rows,
+        scenario: recipe.scenario.clone(),
+        cases,
+    })
+}
+
+/// Run every `*.yaml`/`*.yml` recipe in `recipes_dir` (or just the one
+/// whose file stem is `only`), writing one summary JSON per recipe
+/// under `out_dir`. Recipes run in file-name order.
+pub fn run_all(
+    recipes_dir: impl AsRef<Path>,
+    out_dir: impl AsRef<Path>,
+    samples: usize,
+    only: Option<&str>,
+) -> Result<Vec<RecipeSummary>> {
+    let dir = recipes_dir.as_ref();
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            matches!(
+                p.extension().and_then(|e| e.to_str()),
+                Some("yaml") | Some("yml")
+            )
+        })
+        .collect();
+    paths.sort();
+    let mut summaries = Vec::new();
+    for path in &paths {
+        if let Some(name) = only {
+            let stem = path.file_stem().and_then(|s| s.to_str());
+            if stem != Some(name) {
+                continue;
+            }
+        }
+        let recipe = Recipe::parse(&std::fs::read_to_string(path)?)?;
+        let summary = run_recipe(&recipe, samples)?;
+        summary.save(&out_dir)?;
+        summaries.push(summary);
+    }
+    if summaries.is_empty() {
+        return Err(RylonError::invalid(match only {
+            Some(name) => {
+                format!("recipe '{name}' not found in {}", dir.display())
+            }
+            None => format!("no recipes found in {}", dir.display()),
+        }));
+    }
+    Ok(summaries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# tiny sweep
+name: unit_scan
+rows: 400
+payload_cols: 1
+group_rows: 50
+dist: seq
+scenario: scan
+selectivities: [0.5, 1.0]
+threads: [1]
+worlds: [1, 2]
+";
+
+    #[test]
+    fn parse_recipe_and_defaults() {
+        let r = Recipe::parse(SAMPLE).unwrap();
+        assert_eq!(r.name, "unit_scan");
+        assert_eq!(r.rows, 400);
+        assert_eq!(r.group_rows, 50);
+        assert_eq!(r.selectivities, vec![0.5, 1.0]);
+        assert_eq!(r.worlds, vec![1, 2]);
+        assert_eq!(r.seed, 42, "untouched keys keep defaults");
+        assert_eq!(r.scenario, "scan");
+    }
+
+    #[test]
+    fn parse_rejects_bad_recipes() {
+        // Unknown key fails closed.
+        assert!(Recipe::parse("name: a\nrows: 10\ntypo: 1").is_err());
+        // Missing name / rows.
+        assert!(Recipe::parse("rows: 10").is_err());
+        assert!(Recipe::parse("name: a").is_err());
+        // Out-of-range selectivity, bad scenario, bad dist, bad list.
+        assert!(Recipe::parse(
+            "name: a\nrows: 10\nselectivities: [0.0]"
+        )
+        .is_err());
+        assert!(Recipe::parse("name: a\nrows: 10\nscenario: x").is_err());
+        assert!(Recipe::parse("name: a\nrows: 10\ndist: x").is_err());
+        assert!(Recipe::parse("name: a\nrows: 10\nworlds: 3").is_err());
+        assert!(Recipe::parse("name: a\nrows: 10\nworlds: [0]").is_err());
+    }
+
+    #[test]
+    fn recipe_runs_prune_and_match_oracle() {
+        let mut r = Recipe::parse(SAMPLE).unwrap();
+        r.name = "unit_scan_run".to_string();
+        let summary = run_recipe(&r, 1).unwrap();
+        assert_eq!(summary.cases.len(), 4, "2 worlds × 1 thread × 2 sel");
+        for c in &summary.cases {
+            assert_eq!(c.counters.groups_total, 8);
+            if c.selectivity < 1.0 {
+                // seq keys + id < 200 ⇒ half the groups zone-map out.
+                assert_eq!(c.counters.groups_skipped, 4);
+                assert_eq!(c.rows_out, 200);
+            } else {
+                assert_eq!(c.counters.groups_skipped, 0);
+                assert_eq!(c.rows_out, 400);
+            }
+        }
+        let text = summary.render();
+        assert!(text.contains("unit_scan_run"));
+        let json = summary.to_json().to_string();
+        let back = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(
+            back.get("recipe").unwrap().as_str().unwrap(),
+            "unit_scan_run"
+        );
+        assert_eq!(
+            back.get("cases").unwrap().as_arr().unwrap().len(),
+            4
+        );
+    }
+
+    #[test]
+    fn run_all_reads_dir_and_writes_summaries() {
+        let dir = std::env::temp_dir().join(format!(
+            "rylon_recipes_{}",
+            std::process::id()
+        ));
+        let out = dir.join("results");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("a_unit.yaml"),
+            SAMPLE.replace("unit_scan", "a_unit"),
+        )
+        .unwrap();
+        let summaries = run_all(&dir, &out, 1, None).unwrap();
+        assert_eq!(summaries.len(), 1);
+        assert!(out.join("a_unit.json").is_file());
+        // Filter by name; unknown names error.
+        assert!(run_all(&dir, &out, 1, Some("a_unit")).is_ok());
+        assert!(run_all(&dir, &out, 1, Some("nope")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

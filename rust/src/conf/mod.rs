@@ -196,6 +196,12 @@ pub struct RylonConfig {
     /// the operator-at-a-time executor (the CI oracle) that
     /// materializes a full `Table` between every pipeline stage.
     pub pipeline_fuse: Option<bool>,
+    /// Encoded RYF row groups (`[exec] ryf_encoding`). `None` (key
+    /// absent) = the process default ([`crate::exec::RYF_ENCODING`],
+    /// overridable via the `RYF_ENCODING` env var); `false` makes
+    /// [`crate::io::ryf::RyfWriter`] emit the raw RYF1 format (the CI
+    /// oracle) instead of encoded RYF2 groups with zone maps.
+    pub ryf_encoding: Option<bool>,
     /// Deterministic fault-injection plan (`[exec] fault_plan`;
     /// grammar in [`crate::net::faulty::FaultPlan`], e.g.
     /// `"error@1:2, panic@0:0"`). `None` (key absent) = the process
@@ -231,6 +237,7 @@ impl Default for RylonConfig {
             ingest_single_pass: None,
             work_steal: None,
             pipeline_fuse: None,
+            ryf_encoding: None,
             fault_plan: None,
             collective_timeout_ms: None,
             memory_budget_bytes: 0,
@@ -262,6 +269,7 @@ impl RylonConfig {
             ingest_single_pass: opt_bool(f, "exec.ingest_single_pass"),
             work_steal: opt_bool(f, "exec.work_steal"),
             pipeline_fuse: opt_bool(f, "exec.pipeline_fuse"),
+            ryf_encoding: opt_bool(f, "exec.ryf_encoding"),
             fault_plan: f
                 .get("exec.fault_plan")
                 .and_then(|v| v.as_str())
@@ -308,6 +316,7 @@ ingest_chunk_bytes = 65536
 ingest_single_pass = false
 work_steal = false
 pipeline_fuse = false
+ryf_encoding = false
 fault_plan = "error@1:2"
 collective_timeout_ms = 30000
 memory_budget_bytes = 1048576
@@ -342,6 +351,7 @@ ranks_per_node = 8
         assert_eq!(c.ingest_single_pass, Some(false));
         assert_eq!(c.work_steal, Some(false));
         assert_eq!(c.pipeline_fuse, Some(false));
+        assert_eq!(c.ryf_encoding, Some(false));
         assert_eq!(c.fault_plan.as_deref(), Some("error@1:2"));
         assert_eq!(c.collective_timeout_ms, Some(30000));
         assert_eq!(c.memory_budget_bytes, 1 << 20);
@@ -350,19 +360,21 @@ ranks_per_node = 8
         assert_eq!(empty.ingest_single_pass, None);
         assert_eq!(empty.work_steal, None);
         assert_eq!(empty.pipeline_fuse, None);
+        assert_eq!(empty.ryf_encoding, None);
         assert_eq!(empty.fault_plan, None);
         assert_eq!(empty.collective_timeout_ms, None);
         assert_eq!(empty.memory_budget_bytes, 0);
         // Numeric 0/1 spellings work like the env vars'.
         let num = ConfFile::parse(
             "[exec]\ningest_single_pass = 1\nwork_steal = 1\n\
-             pipeline_fuse = 0",
+             pipeline_fuse = 0\nryf_encoding = 1",
         )
         .unwrap();
         let num = RylonConfig::from_file(&num);
         assert_eq!(num.ingest_single_pass, Some(true));
         assert_eq!(num.work_steal, Some(true));
         assert_eq!(num.pipeline_fuse, Some(false));
+        assert_eq!(num.ryf_encoding, Some(true));
         assert_eq!(c.cost.alpha, 1e-5);
         assert_eq!(c.cost.ranks_per_node, 8);
         // Untouched keys keep defaults.

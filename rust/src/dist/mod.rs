@@ -128,6 +128,15 @@ pub struct DistConfig {
     /// work between morsels, never changes per-row arithmetic or merge
     /// order.
     pub pipeline_fuse: Option<bool>,
+    /// Encoded RYF row groups (`[exec] ryf_encoding`): rank-local RYF
+    /// writes ([`crate::io::ryf::RyfWriter`] — ingest convert, spill
+    /// directories) emit the encoded `RYF2` format with per-group
+    /// zone-map statistics instead of raw `RYF1`. `None` = the process
+    /// default ([`crate::exec::RYF_ENCODING`], overridable via the
+    /// `RYF_ENCODING` env var); `Some(false)` forces the raw oracle
+    /// format. Readers accept both formats whatever this says, and
+    /// scans are bit-identical either way (`docs/STORAGE.md`).
+    pub ryf_encoding: Option<bool>,
     /// Deterministic fault-injection plan (`[exec] fault_plan`;
     /// grammar in [`crate::net::faulty::FaultPlan`]). `None` = the
     /// process default (empty unless the `FAULT_PLAN` env var is set);
@@ -165,6 +174,7 @@ impl Default for DistConfig {
             ingest_single_pass: None,
             work_steal: None,
             pipeline_fuse: None,
+            ryf_encoding: None,
             fault_plan: None,
             collective_timeout_ms: None,
             memory_budget_bytes: 0,
@@ -254,6 +264,13 @@ impl DistConfig {
     /// operator-at-a-time oracle).
     pub fn with_pipeline_fuse(mut self, on: bool) -> DistConfig {
         self.pipeline_fuse = Some(on);
+        self
+    }
+
+    /// Force encoded RYF writes on (`true`) or off (`false`, the raw
+    /// `RYF1` oracle format).
+    pub fn with_ryf_encoding(mut self, on: bool) -> DistConfig {
+        self.ryf_encoding = Some(on);
         self
     }
 
@@ -382,6 +399,7 @@ pub struct Cluster {
     ingest_single_pass: bool,
     work_steal: bool,
     pipeline_fuse: bool,
+    ryf_encoding: bool,
     collective_timeout_ms: u64,
     memory_budget_bytes: usize,
     /// Bytes rank threads have written to spill files, summed over all
@@ -390,6 +408,14 @@ pub struct Cluster {
     spilled_bytes: std::sync::atomic::AtomicU64,
     /// Spill partitions/runs written by rank threads, summed likewise.
     spilled_partitions: std::sync::atomic::AtomicU64,
+    /// RYF scan-pushdown counters drained from rank threads at the end
+    /// of each run (success or abort), one atomic per
+    /// [`crate::exec::ScanCounters`] field.
+    scan_groups_total: std::sync::atomic::AtomicU64,
+    scan_groups_skipped: std::sync::atomic::AtomicU64,
+    scan_decoded_bytes: std::sync::atomic::AtomicU64,
+    scan_decoded_bytes_avoided: std::sync::atomic::AtomicU64,
+    scan_pruned_columns: std::sync::atomic::AtomicU64,
     /// The outermost fabric every collective goes through: the checked
     /// verdict layer over (optionally) the fault injector over the
     /// base rendezvous fabric.
@@ -516,12 +542,22 @@ impl Cluster {
             pipeline_fuse: crate::exec::resolve_pipeline_fuse(
                 cfg.pipeline_fuse,
             ),
+            ryf_encoding: crate::exec::resolve_ryf_encoding(
+                cfg.ryf_encoding,
+            ),
             collective_timeout_ms,
             memory_budget_bytes: crate::exec::resolve_memory_budget_bytes(
                 cfg.memory_budget_bytes,
             ),
             spilled_bytes: std::sync::atomic::AtomicU64::new(0),
             spilled_partitions: std::sync::atomic::AtomicU64::new(0),
+            scan_groups_total: std::sync::atomic::AtomicU64::new(0),
+            scan_groups_skipped: std::sync::atomic::AtomicU64::new(0),
+            scan_decoded_bytes: std::sync::atomic::AtomicU64::new(0),
+            scan_decoded_bytes_avoided: std::sync::atomic::AtomicU64::new(
+                0,
+            ),
+            scan_pruned_columns: std::sync::atomic::AtomicU64::new(0),
             fabric,
             checked,
             faulty,
@@ -565,6 +601,30 @@ impl Cluster {
     /// the `[exec] memory_budget_bytes` knob).
     pub fn memory_budget_bytes(&self) -> usize {
         self.memory_budget_bytes
+    }
+
+    /// Whether rank-local RYF writes emit the encoded `RYF2` format
+    /// (the resolved `[exec] ryf_encoding` knob).
+    pub fn ryf_encoding(&self) -> bool {
+        self.ryf_encoding
+    }
+
+    /// RYF scan-pushdown counters summed over every rank thread and
+    /// run so far (drained from the rank threads' thread-local
+    /// counters at the end of each run — success or abort). The CLI
+    /// folds these into its ETL phase JSON (`groups_skipped`,
+    /// `decoded_bytes`, …; `docs/STORAGE.md`).
+    pub fn scan_stats(&self) -> crate::exec::ScanCounters {
+        use std::sync::atomic::Ordering::Relaxed;
+        crate::exec::ScanCounters {
+            groups_total: self.scan_groups_total.load(Relaxed),
+            groups_skipped: self.scan_groups_skipped.load(Relaxed),
+            decoded_bytes: self.scan_decoded_bytes.load(Relaxed),
+            decoded_bytes_avoided: self
+                .scan_decoded_bytes_avoided
+                .load(Relaxed),
+            pruned_columns: self.scan_pruned_columns.load(Relaxed),
+        }
     }
 
     /// Bytes rank threads have written to spill files, summed over all
@@ -629,6 +689,7 @@ impl Cluster {
                     let single_pass = self.ingest_single_pass;
                     let steal = self.work_steal;
                     let fuse = self.pipeline_fuse;
+                    let ryf_enc = self.ryf_encoding;
                     let budget = self.memory_budget_bytes;
                     let spilled_bytes = &self.spilled_bytes;
                     let spilled_partitions = &self.spilled_partitions;
@@ -643,6 +704,7 @@ impl Cluster {
                         crate::exec::set_ingest_single_pass(single_pass);
                         crate::exec::set_work_steal(steal);
                         crate::exec::set_pipeline_fuse(fuse);
+                        crate::exec::set_ryf_encoding(ryf_enc);
                         crate::exec::set_memory_budget_bytes(budget);
                         crate::exec::install_thread_pool(pool);
                         let mut ctx = RankCtx {
@@ -684,6 +746,24 @@ impl Cluster {
                             sp,
                             std::sync::atomic::Ordering::Relaxed,
                         );
+                        // Likewise this rank thread's scan-pushdown
+                        // counters (zone-map skips, decoded bytes, …).
+                        let sc = crate::exec::take_scan_stats();
+                        {
+                            use std::sync::atomic::Ordering::Relaxed;
+                            self.scan_groups_total
+                                .fetch_add(sc.groups_total, Relaxed);
+                            self.scan_groups_skipped
+                                .fetch_add(sc.groups_skipped, Relaxed);
+                            self.scan_decoded_bytes
+                                .fetch_add(sc.decoded_bytes, Relaxed);
+                            self.scan_decoded_bytes_avoided.fetch_add(
+                                sc.decoded_bytes_avoided,
+                                Relaxed,
+                            );
+                            self.scan_pruned_columns
+                                .fetch_add(sc.pruned_columns, Relaxed);
+                        }
                         // Deliver any failure to every peer: record it
                         // on the fabric (waking parked ranks) and
                         // return it with rank/op/step attribution. A
@@ -969,6 +1049,64 @@ mod tests {
         let outs = def.run(|_| Ok(crate::exec::pipeline_fuse())).unwrap();
         let d = crate::exec::default_pipeline_fuse();
         assert_eq!(outs, vec![d, d]);
+    }
+
+    #[test]
+    fn ryf_encoding_resolves_and_reaches_rank_threads() {
+        let off = Cluster::new(
+            DistConfig::threads(2).with_ryf_encoding(false),
+        )
+        .unwrap();
+        assert!(!off.ryf_encoding());
+        let outs = off.run(|_| Ok(crate::exec::ryf_encoding())).unwrap();
+        assert_eq!(outs, vec![false, false]);
+        let on = Cluster::new(
+            DistConfig::threads(2).with_ryf_encoding(true),
+        )
+        .unwrap();
+        assert!(on.ryf_encoding());
+        let outs = on.run(|_| Ok(crate::exec::ryf_encoding())).unwrap();
+        assert_eq!(outs, vec![true, true]);
+        // None resolves to the process default on every rank.
+        let def = Cluster::new(DistConfig::threads(2)).unwrap();
+        let outs = def.run(|_| Ok(crate::exec::ryf_encoding())).unwrap();
+        let d = crate::exec::default_ryf_encoding();
+        assert_eq!(outs, vec![d, d]);
+    }
+
+    #[test]
+    fn scan_counters_drain_into_cluster_totals() {
+        let cluster = Cluster::new(DistConfig::threads(3)).unwrap();
+        assert_eq!(cluster.scan_stats(), crate::exec::ScanCounters::new());
+        cluster
+            .run(|ctx| {
+                crate::exec::note_scan(&crate::exec::ScanCounters {
+                    groups_total: 10,
+                    groups_skipped: ctx.rank as u64,
+                    decoded_bytes: 100,
+                    decoded_bytes_avoided: 7,
+                    pruned_columns: 1,
+                });
+                Ok(())
+            })
+            .unwrap();
+        let s = cluster.scan_stats();
+        assert_eq!(s.groups_total, 30);
+        assert_eq!(s.groups_skipped, 3, "rank-distinct shares summed");
+        assert_eq!(s.decoded_bytes, 300);
+        assert_eq!(s.decoded_bytes_avoided, 21);
+        assert_eq!(s.pruned_columns, 3);
+        // Additive across runs.
+        cluster
+            .run(|_| {
+                crate::exec::note_scan(&crate::exec::ScanCounters {
+                    groups_total: 1,
+                    ..crate::exec::ScanCounters::new()
+                });
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(cluster.scan_stats().groups_total, 33);
     }
 
     #[test]

@@ -116,6 +116,19 @@ pub const WORK_STEAL: bool = true;
 /// process-wide with the `PIPELINE_FUSE` env var.
 pub const PIPELINE_FUSE: bool = true;
 
+/// Default for the `[exec] ryf_encoding` knob: RYF writers emit the
+/// encoded `RYF2` format — per-row-group encodings (dictionary for
+/// strings, RLE + bit-packing for ints, null-stripped validity) plus
+/// per-group min/max/null-count zone-map statistics, so scans with a
+/// pushed-down predicate can skip whole groups without decoding them
+/// (`docs/STORAGE.md`). `false` writes the raw `RYF1` format — the
+/// bit-identity oracle (the CI `RYF_ENCODING=0` leg). Readers always
+/// accept both formats regardless of this knob. Override per cluster
+/// with `DistConfig::with_ryf_encoding`, on the CLI with
+/// `--ryf-encoding`, in config via `[exec] ryf_encoding`, or
+/// process-wide with the `RYF_ENCODING` env var.
+pub const RYF_ENCODING: bool = true;
+
 /// Default for the `[exec] fault_plan` knob: no injected faults. A
 /// non-empty plan (grammar in [`crate::net::faulty::FaultPlan`]; e.g.
 /// `error@1:2,delay250@0:5`) makes every `dist::Cluster` wrap its
@@ -252,6 +265,14 @@ pub fn default_pipeline_fuse() -> bool {
     *DEFAULT.get_or_init(|| env_bool("PIPELINE_FUSE", PIPELINE_FUSE))
 }
 
+/// The process-wide default for encoded RYF writes: the `RYF_ENCODING`
+/// env var (`0`/`false` disable, `1`/`true` enable), else
+/// [`RYF_ENCODING`]. Read once; explicit settings always override it.
+pub fn default_ryf_encoding() -> bool {
+    static DEFAULT: OnceLock<bool> = OnceLock::new();
+    *DEFAULT.get_or_init(|| env_bool("RYF_ENCODING", RYF_ENCODING))
+}
+
 /// The process-wide default fault-injection plan: the `FAULT_PLAN` env
 /// var, else [`FAULT_PLAN`] (empty — no faults). Read once; explicit
 /// settings always override it. The plan is parsed (and validated) by
@@ -341,6 +362,77 @@ thread_local! {
     /// by `pipeline::Pipeline::{run_local,run_dist}` at entry to pick
     /// the fused or operator-at-a-time executor.
     static FUSE: Cell<bool> = Cell::new(default_pipeline_fuse());
+
+    /// Per-thread encoded-RYF-writes toggle (see [`RYF_ENCODING`]).
+    /// Read by `io::ryf::RyfWriter::create` to pick the raw or encoded
+    /// file format.
+    static RYF_ENC: Cell<bool> = Cell::new(default_ryf_encoding());
+
+    /// Per-thread RYF scan-pushdown counters, drained by
+    /// `dist::Cluster::run` into the cluster-wide atomics (and by the
+    /// CLI into the ETL phase JSON): groups skipped via zone maps,
+    /// groups decoded, bytes decoded, bytes whose decode was avoided
+    /// (skipped groups + pruned column payloads), and column payloads
+    /// pruned by projection pushdown.
+    static SCAN_STATS: Cell<ScanCounters> =
+        const { Cell::new(ScanCounters::new()) };
+}
+
+/// Cumulative RYF scan-pushdown counters (`docs/STORAGE.md`): one
+/// value per observability surface, additive across scans.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScanCounters {
+    /// Row groups considered by scans.
+    pub groups_total: u64,
+    /// Row groups skipped whole via zone-map statistics (never
+    /// decoded).
+    pub groups_skipped: u64,
+    /// Serialized group/column bytes actually decoded.
+    pub decoded_bytes: u64,
+    /// Serialized bytes whose decode was avoided (skipped groups plus
+    /// pruned column payloads).
+    pub decoded_bytes_avoided: u64,
+    /// Column payloads skipped by projection pushdown.
+    pub pruned_columns: u64,
+}
+
+impl ScanCounters {
+    /// All-zero counters.
+    pub const fn new() -> ScanCounters {
+        ScanCounters {
+            groups_total: 0,
+            groups_skipped: 0,
+            decoded_bytes: 0,
+            decoded_bytes_avoided: 0,
+            pruned_columns: 0,
+        }
+    }
+
+    /// Element-wise sum.
+    pub fn add(&mut self, other: &ScanCounters) {
+        self.groups_total += other.groups_total;
+        self.groups_skipped += other.groups_skipped;
+        self.decoded_bytes += other.decoded_bytes;
+        self.decoded_bytes_avoided += other.decoded_bytes_avoided;
+        self.pruned_columns += other.pruned_columns;
+    }
+}
+
+/// Record one scan's pushdown counters on the calling thread
+/// (accumulated; drained by [`take_scan_stats`]).
+pub(crate) fn note_scan(stats: &ScanCounters) {
+    SCAN_STATS.with(|c| {
+        let mut cur = c.get();
+        cur.add(stats);
+        c.set(cur);
+    });
+}
+
+/// Drain the calling thread's accumulated scan counters (resetting
+/// them to zero) — `dist::Cluster::run` calls this on every rank
+/// thread after the rank closure finishes.
+pub fn take_scan_stats() -> ScanCounters {
+    SCAN_STATS.with(|c| c.replace(ScanCounters::new()))
 }
 
 /// The calling thread's current intra-op budget.
@@ -499,6 +591,37 @@ pub fn with_pipeline_fuse<T>(on: bool, f: impl FnOnce() -> T) -> T {
 /// through.
 pub fn resolve_pipeline_fuse(configured: Option<bool>) -> bool {
     configured.unwrap_or_else(default_pipeline_fuse)
+}
+
+/// Whether the calling thread's RYF writes emit the encoded `RYF2`
+/// format (see [`RYF_ENCODING`]).
+pub fn ryf_encoding() -> bool {
+    RYF_ENC.with(|c| c.get())
+}
+
+/// Set the calling thread's encoded-RYF-writes toggle (done by
+/// `dist::Cluster::run` for rank threads and by the CLI for local
+/// commands).
+pub fn set_ryf_encoding(on: bool) {
+    RYF_ENC.with(|c| c.set(on));
+}
+
+/// Run `f` with encoded RYF writes forced on or off, restoring the
+/// previous setting afterwards — how the equivalence matrix and the
+/// scan-selectivity bench write raw-oracle and encoded files from one
+/// process.
+pub fn with_ryf_encoding<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    let prev = RYF_ENC.with(|c| c.replace(on));
+    let out = f();
+    RYF_ENC.with(|c| c.set(prev));
+    out
+}
+
+/// Resolve a configured encoded-RYF toggle: `None` = the process
+/// default (env-overridable via `RYF_ENCODING`), `Some` passes
+/// through.
+pub fn resolve_ryf_encoding(configured: Option<bool>) -> bool {
+    configured.unwrap_or_else(default_ryf_encoding)
 }
 
 /// The effective budget for an `nrows`-row kernel: the thread-local
@@ -666,6 +789,43 @@ mod tests {
         assert_eq!(resolve_pipeline_fuse(None), default_pipeline_fuse());
         assert!(resolve_pipeline_fuse(Some(true)));
         assert!(!resolve_pipeline_fuse(Some(false)));
+    }
+
+    #[test]
+    fn ryf_encoding_knob_scopes_and_restores() {
+        let prev = ryf_encoding();
+        with_ryf_encoding(!prev, || {
+            assert_eq!(ryf_encoding(), !prev);
+        });
+        assert_eq!(ryf_encoding(), prev);
+        // None = the process default; Some passes through.
+        assert_eq!(resolve_ryf_encoding(None), default_ryf_encoding());
+        assert!(resolve_ryf_encoding(Some(true)));
+        assert!(!resolve_ryf_encoding(Some(false)));
+    }
+
+    #[test]
+    fn scan_counters_accumulate_and_drain() {
+        // Start from a clean slate (other tests on this thread may
+        // have scanned).
+        let _ = take_scan_stats();
+        let one = ScanCounters {
+            groups_total: 4,
+            groups_skipped: 3,
+            decoded_bytes: 100,
+            decoded_bytes_avoided: 300,
+            pruned_columns: 2,
+        };
+        note_scan(&one);
+        note_scan(&one);
+        let drained = take_scan_stats();
+        assert_eq!(drained.groups_total, 8);
+        assert_eq!(drained.groups_skipped, 6);
+        assert_eq!(drained.decoded_bytes, 200);
+        assert_eq!(drained.decoded_bytes_avoided, 600);
+        assert_eq!(drained.pruned_columns, 4);
+        // Drained means drained.
+        assert_eq!(take_scan_stats(), ScanCounters::new());
     }
 
     #[test]

@@ -1,0 +1,1449 @@
+//! Per-row-group column encodings and zone-map statistics for the
+//! encoded RYF2 format (`docs/STORAGE.md`).
+//!
+//! A row group serialised by [`encode_group`] stores each column as
+//! `dtype | encoding | validity | payload`. Int64 columns pick the
+//! smallest of plain / run-length / bit-packed-delta over the *valid*
+//! values only (null-stripped), Float64 columns store valid values
+//! plain, Bool columns pick plain or run-length, and Utf8 columns pick
+//! plain (the wire layout, byte-for-byte) or a dictionary over the row
+//! extents. Decoding reconstructs exactly the in-memory column
+//! representation the raw (`RYF1`) path produces — invalid slots hold
+//! `T::default()`, all-valid primitive bitmaps are dropped, string
+//! offsets are reproduced verbatim — so encoded scans are bit-identical
+//! to the raw oracle.
+//!
+//! Zone maps ([`ColumnStats`], one per column per group) record the
+//! null count and the min/max over valid rows. [`group_may_match`]
+//! evaluates a pushed-down [`Predicate`] against them conservatively:
+//! it never rules out a group that could contain a matching row, and a
+//! predicate the row-level evaluator would reject (unknown column,
+//! type mismatch) passes the group through so the pipeline surfaces
+//! exactly the error the raw path would.
+
+#![warn(missing_docs)]
+
+use std::cmp::Ordering;
+use std::collections::HashMap;
+
+use crate::buffer::Bitmap;
+use crate::column::{Column, PrimitiveColumn, StringColumn};
+use crate::error::{Result, RylonError};
+use crate::net::wire::{self, Reader};
+use crate::ops::select::{CmpOp, Predicate};
+use crate::table::Table;
+use crate::types::{DataType, Field, Schema, Value};
+
+/// Magic for one encoded row group ("RYG2" little-endian). Distinct
+/// from the wire table magic so `read_ryf_group` can dispatch on the
+/// first four bytes of any group regardless of the file format.
+pub const GROUP_MAGIC: u32 = u32::from_le_bytes(*b"RYG2");
+
+/// Longest string min/max kept in a zone map. Longer bounds are
+/// dropped (the group then always passes string predicates) so a
+/// wide-string column cannot bloat the footer.
+pub const MAX_STATS_STR: usize = 64;
+
+/// One column's physical encoding inside an encoded row group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    /// Values verbatim (the wire layout for strings; null-stripped
+    /// fixed-width values for primitives).
+    Plain,
+    /// Run-length: `(value, count)` pairs over the valid values
+    /// (Int64) or rows (Bool).
+    Rle,
+    /// Frame-of-reference bit-packing: `base + packed deltas` over the
+    /// valid Int64 values.
+    BitPack,
+    /// Dictionary over the row byte extents of a Utf8 column, nulls
+    /// included (their extents are normally empty).
+    Dict,
+}
+
+impl Encoding {
+    fn tag(self) -> u8 {
+        match self {
+            Encoding::Plain => 0,
+            Encoding::Rle => 1,
+            Encoding::BitPack => 2,
+            Encoding::Dict => 3,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Result<Encoding> {
+        match tag {
+            0 => Ok(Encoding::Plain),
+            1 => Ok(Encoding::Rle),
+            2 => Ok(Encoding::BitPack),
+            3 => Ok(Encoding::Dict),
+            _ => Err(RylonError::parse(format!("bad encoding tag {tag}"))),
+        }
+    }
+}
+
+/// What a projected decode skipped: payload/validity bytes never
+/// decoded and the number of pruned column payloads.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DecodePruning {
+    /// Validity + payload bytes of pruned columns (never decoded).
+    pub avoided_bytes: u64,
+    /// Column payloads skipped because the projection excluded them.
+    pub pruned_columns: u64,
+}
+
+// ---- encoding ------------------------------------------------------------
+
+/// Serialise one row group in the encoded format, choosing the
+/// smallest encoding per column.
+pub fn encode_group(table: &Table) -> Vec<u8> {
+    encode_group_with(table, None)
+}
+
+/// Serialise one row group, forcing `force` on every column where the
+/// dtype supports it (falling back to [`Encoding::Plain`] where it
+/// does not). `None` picks the smallest payload per column — the
+/// production path; forcing exists so tests can exercise every
+/// encoding on arbitrary data.
+pub fn encode_group_with(table: &Table, force: Option<Encoding>) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&GROUP_MAGIC.to_le_bytes());
+    out.extend_from_slice(&(table.num_columns() as u32).to_le_bytes());
+    out.extend_from_slice(&(table.num_rows() as u64).to_le_bytes());
+    for (i, field) in table.schema().fields().iter().enumerate() {
+        encode_column(&mut out, &field.name, table.column(i), force);
+    }
+    out
+}
+
+fn encode_column(
+    out: &mut Vec<u8>,
+    name: &str,
+    col: &Column,
+    force: Option<Encoding>,
+) {
+    let (enc, payload) = match col {
+        Column::Int64(c) => encode_i64(c, force),
+        Column::Float64(c) => (Encoding::Plain, plain_f64(c)),
+        Column::Bool(c) => encode_bool(c, force),
+        Column::Utf8(c) => encode_utf8(c, force),
+    };
+    out.push(wire::dtype_tag(col.dtype()));
+    out.push(enc.tag());
+    out.push(col.validity().is_some() as u8);
+    let name_bytes = name.as_bytes();
+    out.extend_from_slice(&(name_bytes.len() as u16).to_le_bytes());
+    out.extend_from_slice(name_bytes);
+    if let Some(bm) = col.validity() {
+        for w in bm.words() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+}
+
+/// Valid values only (null-stripping): invalid slots are not stored —
+/// the decoder rebuilds them as `T::default()` via `from_options`,
+/// which is exactly what the wire path produces.
+fn present<T: Copy>(c: &PrimitiveColumn<T>) -> Vec<T> {
+    match c.validity() {
+        None => c.values().to_vec(),
+        Some(bm) => c
+            .values()
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| bm.get(*i))
+            .map(|(_, &v)| v)
+            .collect(),
+    }
+}
+
+fn encode_i64(
+    c: &PrimitiveColumn<i64>,
+    force: Option<Encoding>,
+) -> (Encoding, Vec<u8>) {
+    let vals = present(c);
+    match force {
+        Some(Encoding::Rle) => return (Encoding::Rle, rle_i64(&vals)),
+        Some(Encoding::BitPack) => {
+            return (Encoding::BitPack, bitpack_i64(&vals))
+        }
+        Some(_) => return (Encoding::Plain, plain_i64(&vals)),
+        None => {}
+    }
+    let plain = plain_i64(&vals);
+    let mut best = (Encoding::Plain, plain);
+    let bp = bitpack_i64(&vals);
+    if bp.len() < best.1.len() {
+        best = (Encoding::BitPack, bp);
+    }
+    let rle = rle_i64(&vals);
+    if rle.len() < best.1.len() {
+        best = (Encoding::Rle, rle);
+    }
+    best
+}
+
+fn plain_i64(vals: &[i64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn plain_f64(c: &PrimitiveColumn<f64>) -> Vec<u8> {
+    let vals = present(c);
+    let mut out = Vec::with_capacity(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    out
+}
+
+fn rle_i64(vals: &[i64]) -> Vec<u8> {
+    let mut runs: Vec<(i64, u64)> = Vec::new();
+    for &v in vals {
+        match runs.last_mut() {
+            Some((rv, n)) if *rv == v => *n += 1,
+            _ => runs.push((v, 1)),
+        }
+    }
+    let mut out = Vec::with_capacity(8 + runs.len() * 16);
+    out.extend_from_slice(&(runs.len() as u64).to_le_bytes());
+    for (v, n) in runs {
+        out.extend_from_slice(&v.to_le_bytes());
+        out.extend_from_slice(&n.to_le_bytes());
+    }
+    out
+}
+
+fn bitpack_i64(vals: &[i64]) -> Vec<u8> {
+    let base = vals.iter().copied().min().unwrap_or(0);
+    let deltas: Vec<u64> = vals
+        .iter()
+        .map(|&v| (v as i128 - base as i128) as u64)
+        .collect();
+    let max_delta = deltas.iter().copied().max().unwrap_or(0);
+    let width: u8 = if max_delta == 0 {
+        0
+    } else {
+        64 - max_delta.leading_zeros() as u8
+    };
+    let mut out = Vec::new();
+    out.extend_from_slice(&base.to_le_bytes());
+    out.push(width);
+    out.extend_from_slice(&pack_bits(&deltas, width));
+    out
+}
+
+fn encode_bool(
+    c: &PrimitiveColumn<bool>,
+    force: Option<Encoding>,
+) -> (Encoding, Vec<u8>) {
+    let vals = present(c);
+    let plain: Vec<u8> = vals.iter().map(|&b| b as u8).collect();
+    let rle = {
+        let mut runs: Vec<(bool, u64)> = Vec::new();
+        for &v in &vals {
+            match runs.last_mut() {
+                Some((rv, n)) if *rv == v => *n += 1,
+                _ => runs.push((v, 1)),
+            }
+        }
+        let mut out = Vec::with_capacity(8 + runs.len() * 9);
+        out.extend_from_slice(&(runs.len() as u64).to_le_bytes());
+        for (v, n) in runs {
+            out.push(v as u8);
+            out.extend_from_slice(&n.to_le_bytes());
+        }
+        out
+    };
+    match force {
+        Some(Encoding::Rle) => (Encoding::Rle, rle),
+        Some(_) => (Encoding::Plain, plain),
+        None => {
+            if rle.len() < plain.len() {
+                (Encoding::Rle, rle)
+            } else {
+                (Encoding::Plain, plain)
+            }
+        }
+    }
+}
+
+fn encode_utf8(
+    c: &StringColumn,
+    force: Option<Encoding>,
+) -> (Encoding, Vec<u8>) {
+    let plain = {
+        let mut out =
+            Vec::with_capacity((c.len() + 2) * 8 + c.bytes().len());
+        for o in c.offsets() {
+            out.extend_from_slice(&o.to_le_bytes());
+        }
+        out.extend_from_slice(&(c.bytes().len() as u64).to_le_bytes());
+        out.extend_from_slice(c.bytes());
+        out
+    };
+    // Dictionary codes rebuild offsets as the running sum of entry
+    // lengths from 0, which only reproduces the raw offsets verbatim
+    // when they start at 0 (every constructor's invariant; wire frames
+    // could in principle carry a nonzero start, so check).
+    let dictable = c.offsets().first() == Some(&0)
+        && c.len() < u32::MAX as usize;
+    let dict = if dictable { Some(dict_utf8(c)) } else { None };
+    match (force, dict) {
+        (Some(Encoding::Dict), Some(d)) => (Encoding::Dict, d),
+        (Some(_), _) => (Encoding::Plain, plain),
+        (None, Some(d)) if d.len() < plain.len() => (Encoding::Dict, d),
+        _ => (Encoding::Plain, plain),
+    }
+}
+
+fn dict_utf8(c: &StringColumn) -> Vec<u8> {
+    let bytes = c.bytes();
+    let offsets = c.offsets();
+    let mut codes = Vec::with_capacity(c.len());
+    let mut index: HashMap<&[u8], u32> = HashMap::new();
+    let mut entries: Vec<&[u8]> = Vec::new();
+    for i in 0..c.len() {
+        let s = &bytes[offsets[i] as usize..offsets[i + 1] as usize];
+        let code = *index.entry(s).or_insert_with(|| {
+            entries.push(s);
+            (entries.len() - 1) as u32
+        });
+        codes.push(code);
+    }
+    let mut out = Vec::new();
+    out.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+    let mut off = 0u64;
+    out.extend_from_slice(&off.to_le_bytes());
+    for e in &entries {
+        off += e.len() as u64;
+        out.extend_from_slice(&off.to_le_bytes());
+    }
+    for e in &entries {
+        out.extend_from_slice(e);
+    }
+    out.extend_from_slice(&(codes.len() as u64).to_le_bytes());
+    for code in codes {
+        out.extend_from_slice(&code.to_le_bytes());
+    }
+    out
+}
+
+fn pack_bits(vals: &[u64], width: u8) -> Vec<u8> {
+    if width == 0 {
+        return Vec::new();
+    }
+    let width = width as usize;
+    let mut out = vec![0u8; (vals.len() * width).div_ceil(8)];
+    let mut bit = 0usize;
+    for &v in vals {
+        let mut done = 0usize;
+        while done < width {
+            let (byte, off) = (bit / 8, bit % 8);
+            let take = (8 - off).min(width - done);
+            let chunk = ((v >> done) & ((1u64 << take) - 1)) as u8;
+            out[byte] |= chunk << off;
+            bit += take;
+            done += take;
+        }
+    }
+    out
+}
+
+fn unpack_bits(buf: &[u8], n: usize, width: u8) -> Vec<u64> {
+    let width = width as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut bit = 0usize;
+    for _ in 0..n {
+        let mut v = 0u64;
+        let mut done = 0usize;
+        while done < width {
+            let (byte, off) = (bit / 8, bit % 8);
+            let take = (8 - off).min(width - done);
+            let chunk = ((buf[byte] >> off) as u64) & ((1u64 << take) - 1);
+            v |= chunk << done;
+            bit += take;
+            done += take;
+        }
+        out.push(v);
+    }
+    out
+}
+
+// ---- decoding ------------------------------------------------------------
+
+/// Decode one encoded row group. With a projection, columns whose
+/// names are not listed are skipped without decoding their validity or
+/// payload bytes (the returned table keeps the file's column order
+/// restricted to the projected set — the same rule the raw scan
+/// applies, so the two paths stay bit-identical). Fails closed on any
+/// malformed byte: truncation, bad tags, invalid UTF-8, out-of-range
+/// codes or offsets, or trailing bytes.
+pub fn decode_group(
+    buf: &[u8],
+    projection: Option<&[String]>,
+) -> Result<(Table, DecodePruning)> {
+    let mut r = Reader::new(buf);
+    if r.u32()? != GROUP_MAGIC {
+        return Err(RylonError::parse("bad encoded group magic"));
+    }
+    let ncols = r.u32()? as usize;
+    let nrows = r.u64()? as usize;
+    // Every column consumes at least its 5-byte fixed header.
+    r.check_count(ncols, 5, "encoded columns")?;
+    let nwords = nrows.div_ceil(64);
+    let mut fields = Vec::new();
+    let mut cols = Vec::new();
+    let mut pruning = DecodePruning::default();
+    for _ in 0..ncols {
+        let dtype = wire::tag_dtype(r.u8()?)?;
+        let enc = Encoding::from_tag(r.u8()?)?;
+        let has_validity = match r.u8()? {
+            0 => false,
+            1 => true,
+            v => {
+                return Err(RylonError::parse(format!(
+                    "bad validity flag {v}"
+                )))
+            }
+        };
+        let name_len = r.u16()? as usize;
+        let name = std::str::from_utf8(r.bytes(name_len)?)
+            .map_err(|_| RylonError::parse("column name is not utf-8"))?
+            .to_string();
+        let keep =
+            projection.map_or(true, |p| p.iter().any(|n| n == &name));
+        if !keep {
+            let skip = if has_validity { nwords * 8 } else { 0 };
+            r.check_count(skip, 1, "validity words")?;
+            r.bytes(skip)?;
+            let payload_len = r.u64()? as usize;
+            r.bytes(payload_len)?;
+            pruning.pruned_columns += 1;
+            pruning.avoided_bytes += (skip + payload_len) as u64;
+            continue;
+        }
+        let validity = if has_validity {
+            r.check_count(nwords, 8, "validity words")?;
+            let mut words = Vec::with_capacity(nwords);
+            for _ in 0..nwords {
+                words.push(r.u64()?);
+            }
+            Some(Bitmap::from_words(words, nrows))
+        } else {
+            None
+        };
+        let payload_len = r.u64()? as usize;
+        let payload = r.bytes(payload_len)?;
+        cols.push(decode_column(dtype, enc, nrows, &validity, payload)?);
+        fields.push(Field::new(&name, dtype));
+    }
+    if r.remaining() != 0 {
+        return Err(RylonError::parse(
+            "trailing bytes after encoded group",
+        ));
+    }
+    Ok((Table::try_new(Schema::new(fields), cols)?, pruning))
+}
+
+fn decode_column(
+    dtype: DataType,
+    enc: Encoding,
+    nrows: usize,
+    validity: &Option<Bitmap>,
+    payload: &[u8],
+) -> Result<Column> {
+    if let Some(bm) = validity {
+        if bm.len() != nrows {
+            return Err(RylonError::parse("validity length mismatch"));
+        }
+    }
+    let n_present = validity.as_ref().map_or(nrows, |b| b.count_ones());
+    let mut r = Reader::new(payload);
+    let col = match (dtype, enc) {
+        (DataType::Int64, _) => {
+            let vals = decode_i64_values(&mut r, enc, n_present)?;
+            Column::Int64(rebuild_prim(vals, nrows, validity)?)
+        }
+        (DataType::Float64, Encoding::Plain) => {
+            r.check_count(n_present, 8, "f64 values")?;
+            let mut vals = Vec::with_capacity(n_present);
+            for _ in 0..n_present {
+                vals.push(f64::from_bits(r.u64()?));
+            }
+            Column::Float64(rebuild_prim(vals, nrows, validity)?)
+        }
+        (DataType::Bool, Encoding::Plain) => {
+            r.check_count(n_present, 1, "bool values")?;
+            let mut vals = Vec::with_capacity(n_present);
+            for _ in 0..n_present {
+                vals.push(match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    v => {
+                        return Err(RylonError::parse(format!(
+                            "bad bool byte {v}"
+                        )))
+                    }
+                });
+            }
+            Column::Bool(rebuild_prim(vals, nrows, validity)?)
+        }
+        (DataType::Bool, Encoding::Rle) => {
+            let n_runs = r.u64()? as usize;
+            r.check_count(n_runs, 9, "bool runs")?;
+            let mut vals = Vec::new();
+            for _ in 0..n_runs {
+                let v = match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    v => {
+                        return Err(RylonError::parse(format!(
+                            "bad bool run value {v}"
+                        )))
+                    }
+                };
+                let count = r.u64()? as usize;
+                if vals.len() + count > n_present {
+                    return Err(RylonError::parse(
+                        "bool runs exceed the value count",
+                    ));
+                }
+                vals.extend(std::iter::repeat(v).take(count));
+            }
+            if vals.len() != n_present {
+                return Err(RylonError::parse(
+                    "bool runs do not cover the value count",
+                ));
+            }
+            Column::Bool(rebuild_prim(vals, nrows, validity)?)
+        }
+        (DataType::Utf8, Encoding::Plain) => {
+            Column::Utf8(decode_utf8_plain(&mut r, nrows, validity)?)
+        }
+        (DataType::Utf8, Encoding::Dict) => {
+            Column::Utf8(decode_utf8_dict(&mut r, nrows, validity)?)
+        }
+        (dt, enc) => {
+            return Err(RylonError::parse(format!(
+                "encoding {enc:?} is invalid for a {dt} column"
+            )))
+        }
+    };
+    if r.remaining() != 0 {
+        return Err(RylonError::parse(
+            "trailing bytes in encoded column payload",
+        ));
+    }
+    Ok(col)
+}
+
+fn decode_i64_values(
+    r: &mut Reader,
+    enc: Encoding,
+    n_present: usize,
+) -> Result<Vec<i64>> {
+    match enc {
+        Encoding::Plain => {
+            r.check_count(n_present, 8, "i64 values")?;
+            let mut vals = Vec::with_capacity(n_present);
+            for _ in 0..n_present {
+                vals.push(r.u64()? as i64);
+            }
+            Ok(vals)
+        }
+        Encoding::Rle => {
+            let n_runs = r.u64()? as usize;
+            r.check_count(n_runs, 16, "i64 runs")?;
+            let mut vals = Vec::new();
+            for _ in 0..n_runs {
+                let v = r.u64()? as i64;
+                let count = r.u64()? as usize;
+                if vals.len() + count > n_present {
+                    return Err(RylonError::parse(
+                        "i64 runs exceed the value count",
+                    ));
+                }
+                vals.extend(std::iter::repeat(v).take(count));
+            }
+            if vals.len() != n_present {
+                return Err(RylonError::parse(
+                    "i64 runs do not cover the value count",
+                ));
+            }
+            Ok(vals)
+        }
+        Encoding::BitPack => {
+            let base = r.u64()? as i64;
+            let width = r.u8()?;
+            if width > 64 {
+                return Err(RylonError::parse(format!(
+                    "bit-pack width {width} exceeds 64"
+                )));
+            }
+            let packed_len = (n_present * width as usize).div_ceil(8);
+            let packed = r.bytes(packed_len)?;
+            let deltas = unpack_bits(packed, n_present, width);
+            let mut vals = Vec::with_capacity(n_present);
+            for d in deltas {
+                let v = base as i128 + d as i128;
+                let v = i64::try_from(v).map_err(|_| {
+                    RylonError::parse(
+                        "bit-packed delta overflows i64",
+                    )
+                })?;
+                vals.push(v);
+            }
+            Ok(vals)
+        }
+        Encoding::Dict => Err(RylonError::parse(
+            "encoding Dict is invalid for an i64 column",
+        )),
+    }
+}
+
+/// Re-expand null-stripped values to the row count. Mirrors the wire
+/// path exactly: `from_options` stores `T::default()` in invalid slots
+/// and drops an all-valid bitmap, so the decoded column is
+/// representation-identical to a raw read.
+fn rebuild_prim<T: Copy + Default>(
+    present: Vec<T>,
+    nrows: usize,
+    validity: &Option<Bitmap>,
+) -> Result<PrimitiveColumn<T>> {
+    match validity {
+        None => {
+            if present.len() != nrows {
+                return Err(RylonError::parse(
+                    "value count does not match the row count",
+                ));
+            }
+            Ok(PrimitiveColumn::from_values(present))
+        }
+        Some(bm) => {
+            let mut it = present.into_iter();
+            let opts: Vec<Option<T>> = (0..nrows)
+                .map(|i| if bm.get(i) { it.next() } else { None })
+                .collect();
+            Ok(PrimitiveColumn::from_options(opts))
+        }
+    }
+}
+
+fn decode_utf8_plain(
+    r: &mut Reader,
+    nrows: usize,
+    validity: &Option<Bitmap>,
+) -> Result<StringColumn> {
+    let noffsets = nrows
+        .checked_add(1)
+        .ok_or_else(|| RylonError::parse("utf8 offset count overflows"))?;
+    r.check_count(noffsets, 8, "utf8 offsets")?;
+    let mut offsets = Vec::with_capacity(noffsets);
+    for _ in 0..noffsets {
+        offsets.push(r.u64()?);
+    }
+    let nbytes = r.u64()? as usize;
+    let bytes = r.bytes(nbytes)?.to_vec();
+    validate_utf8_extents(&offsets, &bytes)?;
+    Ok(StringColumn::from_parts(offsets, bytes, validity.clone()))
+}
+
+fn decode_utf8_dict(
+    r: &mut Reader,
+    nrows: usize,
+    validity: &Option<Bitmap>,
+) -> Result<StringColumn> {
+    let dict_n = r.u64()? as usize;
+    let n_dict_offsets = dict_n
+        .checked_add(1)
+        .ok_or_else(|| RylonError::parse("dict size overflows"))?;
+    r.check_count(n_dict_offsets, 8, "dict offsets")?;
+    let mut dict_offsets = Vec::with_capacity(n_dict_offsets);
+    for _ in 0..n_dict_offsets {
+        dict_offsets.push(r.u64()?);
+    }
+    let dict_nbytes = *dict_offsets.last().unwrap() as usize;
+    let dict_bytes = r.bytes(dict_nbytes)?.to_vec();
+    validate_utf8_extents(&dict_offsets, &dict_bytes)?;
+    let n_codes = r.u64()? as usize;
+    if n_codes != nrows {
+        return Err(RylonError::parse(format!(
+            "dict code count {n_codes} does not match row count {nrows}"
+        )));
+    }
+    r.check_count(n_codes, 4, "dict codes")?;
+    let mut offsets = Vec::with_capacity(nrows + 1);
+    let mut bytes = Vec::new();
+    offsets.push(0u64);
+    for _ in 0..n_codes {
+        let code = r.u32()? as usize;
+        if code >= dict_n {
+            return Err(RylonError::parse(format!(
+                "dict code {code} out of range ({dict_n} entries)"
+            )));
+        }
+        let lo = dict_offsets[code] as usize;
+        let hi = dict_offsets[code + 1] as usize;
+        bytes.extend_from_slice(&dict_bytes[lo..hi]);
+        offsets.push(bytes.len() as u64);
+    }
+    Ok(StringColumn::from_parts(offsets, bytes, validity.clone()))
+}
+
+/// The wire deserialiser's fail-closed extent checks: offsets must be
+/// monotone non-decreasing, land on character boundaries of a valid
+/// UTF-8 buffer, start within it, and end exactly at its length —
+/// `StringColumn::value` slices without checks downstream.
+fn validate_utf8_extents(offsets: &[u64], bytes: &[u8]) -> Result<()> {
+    if offsets.is_empty() {
+        return Err(RylonError::parse("utf8 offsets are empty"));
+    }
+    let s = std::str::from_utf8(bytes)
+        .map_err(|_| RylonError::parse("string buffer is not utf-8"))?;
+    let nbytes = bytes.len() as u64;
+    let mut prev = 0u64;
+    for (i, &o) in offsets.iter().enumerate() {
+        if i > 0 && o < prev {
+            return Err(RylonError::parse(format!(
+                "utf8 offsets decrease at row {i} ({o} after {prev})"
+            )));
+        }
+        if o > nbytes || !s.is_char_boundary(o as usize) {
+            return Err(RylonError::parse(format!(
+                "utf8 offset {o} at row {i} splits a character or \
+                 exceeds the {nbytes}-byte string buffer"
+            )));
+        }
+        prev = o;
+    }
+    if prev != nbytes {
+        return Err(RylonError::parse(format!(
+            "utf8 offsets end at {prev}, not at the {nbytes}-byte \
+             string buffer length"
+        )));
+    }
+    Ok(())
+}
+
+// ---- zone-map statistics -------------------------------------------------
+
+/// Per-group per-column zone-map statistics: the null count plus the
+/// min/max over valid rows (`None` when the group has no valid rows,
+/// or for strings longer than [`MAX_STATS_STR`]). Float64 bounds use
+/// `total_cmp` — the same total order the predicate evaluator uses —
+/// so NaN sorts greatest and pruning stays sound for NaN literals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnStats {
+    /// Number of null rows in the group.
+    pub null_count: u64,
+    /// Whether the in-memory column carried a validity bitmap when the
+    /// group was written (a null-free slice of a nullable column does,
+    /// `docs/STORAGE.md`). The scan uses this to reproduce the raw
+    /// path's `concat` validity promotion exactly when groups are
+    /// skipped — it plays no part in pruning.
+    pub has_validity: bool,
+    /// Smallest valid value, if any.
+    pub min: Option<Value>,
+    /// Largest valid value, if any.
+    pub max: Option<Value>,
+}
+
+/// Compute the zone-map statistics for one column.
+pub fn column_stats(col: &Column) -> ColumnStats {
+    let null_count = col.null_count() as u64;
+    let has_validity = col.validity().is_some();
+    let (mut min, mut max) = (None, None);
+    match col {
+        Column::Int64(c) => {
+            let mut bounds: Option<(i64, i64)> = None;
+            for (i, &v) in c.values().iter().enumerate() {
+                if c.is_valid(i) {
+                    bounds = Some(match bounds {
+                        None => (v, v),
+                        Some((lo, hi)) => (lo.min(v), hi.max(v)),
+                    });
+                }
+            }
+            if let Some((lo, hi)) = bounds {
+                min = Some(Value::Int64(lo));
+                max = Some(Value::Int64(hi));
+            }
+        }
+        Column::Float64(c) => {
+            let mut bounds: Option<(f64, f64)> = None;
+            for (i, &v) in c.values().iter().enumerate() {
+                if c.is_valid(i) {
+                    bounds = Some(match bounds {
+                        None => (v, v),
+                        Some((lo, hi)) => (
+                            if v.total_cmp(&lo) == Ordering::Less {
+                                v
+                            } else {
+                                lo
+                            },
+                            if v.total_cmp(&hi) == Ordering::Greater {
+                                v
+                            } else {
+                                hi
+                            },
+                        ),
+                    });
+                }
+            }
+            if let Some((lo, hi)) = bounds {
+                min = Some(Value::Float64(lo));
+                max = Some(Value::Float64(hi));
+            }
+        }
+        Column::Bool(c) => {
+            let mut bounds: Option<(bool, bool)> = None;
+            for (i, &v) in c.values().iter().enumerate() {
+                if c.is_valid(i) {
+                    bounds = Some(match bounds {
+                        None => (v, v),
+                        Some((lo, hi)) => (lo.min(v), hi.max(v)),
+                    });
+                }
+            }
+            if let Some((lo, hi)) = bounds {
+                min = Some(Value::Bool(lo));
+                max = Some(Value::Bool(hi));
+            }
+        }
+        Column::Utf8(c) => {
+            let mut bounds: Option<(&str, &str)> = None;
+            for i in 0..c.len() {
+                if c.is_valid(i) {
+                    let v = c.value(i);
+                    bounds = Some(match bounds {
+                        None => (v, v),
+                        Some((lo, hi)) => (lo.min(v), hi.max(v)),
+                    });
+                }
+            }
+            if let Some((lo, hi)) = bounds {
+                if lo.len() <= MAX_STATS_STR && hi.len() <= MAX_STATS_STR
+                {
+                    min = Some(Value::Utf8(lo.to_string()));
+                    max = Some(Value::Utf8(hi.to_string()));
+                }
+            }
+        }
+    }
+    ColumnStats {
+        null_count,
+        has_validity,
+        min,
+        max,
+    }
+}
+
+/// Serialise one column's zone-map stats into the RYF2 footer.
+pub(crate) fn write_stats(
+    out: &mut Vec<u8>,
+    dtype: DataType,
+    s: &ColumnStats,
+) {
+    out.extend_from_slice(&s.null_count.to_le_bytes());
+    out.push(s.has_validity as u8);
+    match (&s.min, &s.max) {
+        (Some(min), Some(max)) => {
+            out.push(1);
+            for v in [min, max] {
+                match (dtype, v) {
+                    (DataType::Int64, Value::Int64(x)) => {
+                        out.extend_from_slice(&x.to_le_bytes())
+                    }
+                    (DataType::Float64, Value::Float64(x)) => out
+                        .extend_from_slice(&x.to_bits().to_le_bytes()),
+                    (DataType::Bool, Value::Bool(x)) => {
+                        out.push(*x as u8)
+                    }
+                    (DataType::Utf8, Value::Utf8(x)) => {
+                        out.extend_from_slice(
+                            &(x.len() as u16).to_le_bytes(),
+                        );
+                        out.extend_from_slice(x.as_bytes());
+                    }
+                    _ => unreachable!(
+                        "stats value dtype mismatch (writer bug)"
+                    ),
+                }
+            }
+        }
+        _ => out.push(0),
+    }
+}
+
+/// Parse one column's zone-map stats from the RYF2 footer.
+pub(crate) fn read_stats(
+    r: &mut Reader,
+    dtype: DataType,
+) -> Result<ColumnStats> {
+    let null_count = r.u64()?;
+    let has_validity = match r.u8()? {
+        0 => false,
+        1 => true,
+        v => {
+            return Err(RylonError::parse(format!(
+                "bad stats validity flag {v}"
+            )))
+        }
+    };
+    let has_minmax = match r.u8()? {
+        0 => false,
+        1 => true,
+        v => {
+            return Err(RylonError::parse(format!(
+                "bad stats min/max flag {v}"
+            )))
+        }
+    };
+    let (mut min, mut max) = (None, None);
+    if has_minmax {
+        for slot in [&mut min, &mut max] {
+            *slot = Some(match dtype {
+                DataType::Int64 => Value::Int64(r.u64()? as i64),
+                DataType::Float64 => {
+                    Value::Float64(f64::from_bits(r.u64()?))
+                }
+                DataType::Bool => Value::Bool(match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    v => {
+                        return Err(RylonError::parse(format!(
+                            "bad bool stats byte {v}"
+                        )))
+                    }
+                }),
+                DataType::Utf8 => {
+                    let len = r.u16()? as usize;
+                    let s = std::str::from_utf8(r.bytes(len)?)
+                        .map_err(|_| {
+                            RylonError::parse(
+                                "stats string is not utf-8",
+                            )
+                        })?;
+                    Value::Utf8(s.to_string())
+                }
+            });
+        }
+    }
+    Ok(ColumnStats {
+        null_count,
+        has_validity,
+        min,
+        max,
+    })
+}
+
+// ---- zone-map pruning ----------------------------------------------------
+
+/// Conservative zone-map test: could any row of a group with these
+/// stats match `pred`? `false` means the group provably contains no
+/// matching row and can be skipped without decoding. Unknown columns
+/// and literal/dtype combinations the row evaluator would reject
+/// return `true`, so the surviving pipeline predicate surfaces the
+/// identical error the raw path produces.
+pub fn group_may_match(
+    pred: &Predicate,
+    schema: &Schema,
+    stats: &[ColumnStats],
+    rows: u64,
+) -> bool {
+    if rows == 0 {
+        return false;
+    }
+    match pred {
+        Predicate::Cmp {
+            column,
+            op,
+            literal,
+        } => {
+            let Some((dtype, s)) = col_stats(schema, stats, column)
+            else {
+                return true;
+            };
+            if s.null_count >= rows {
+                return false; // no valid rows; Cmp never matches null
+            }
+            match bound_orderings(dtype, s, literal) {
+                Some((lo, hi)) => match op {
+                    CmpOp::Eq => {
+                        lo != Ordering::Greater && hi != Ordering::Less
+                    }
+                    CmpOp::Ne => !(lo == Ordering::Equal
+                        && hi == Ordering::Equal),
+                    CmpOp::Lt => lo == Ordering::Less,
+                    CmpOp::Le => lo != Ordering::Greater,
+                    CmpOp::Gt => hi == Ordering::Greater,
+                    CmpOp::Ge => hi != Ordering::Less,
+                },
+                None => true,
+            }
+        }
+        Predicate::IsNull { column, negated } => {
+            let Some((_, s)) = col_stats(schema, stats, column) else {
+                return true;
+            };
+            if *negated {
+                s.null_count < rows
+            } else {
+                s.null_count > 0
+            }
+        }
+        Predicate::And(a, b) => {
+            group_may_match(a, schema, stats, rows)
+                && group_may_match(b, schema, stats, rows)
+        }
+        Predicate::Or(a, b) => {
+            group_may_match(a, schema, stats, rows)
+                || group_may_match(b, schema, stats, rows)
+        }
+        Predicate::Not(p) => !group_must_match_all(p, schema, stats, rows),
+    }
+}
+
+/// Dual of [`group_may_match`]: do *all* rows of the group provably
+/// match `pred`? Needed for `Not` (a group can be skipped under
+/// `not p` only when every row matches `p`). Conservative toward
+/// `false`.
+fn group_must_match_all(
+    pred: &Predicate,
+    schema: &Schema,
+    stats: &[ColumnStats],
+    rows: u64,
+) -> bool {
+    if rows == 0 {
+        return true;
+    }
+    match pred {
+        Predicate::Cmp {
+            column,
+            op,
+            literal,
+        } => {
+            let Some((dtype, s)) = col_stats(schema, stats, column)
+            else {
+                return false;
+            };
+            if s.null_count > 0 {
+                return false; // null rows never match a Cmp
+            }
+            match bound_orderings(dtype, s, literal) {
+                Some((lo, hi)) => match op {
+                    CmpOp::Eq => {
+                        lo == Ordering::Equal && hi == Ordering::Equal
+                    }
+                    CmpOp::Ne => {
+                        hi == Ordering::Less || lo == Ordering::Greater
+                    }
+                    CmpOp::Lt => hi == Ordering::Less,
+                    CmpOp::Le => hi != Ordering::Greater,
+                    CmpOp::Gt => lo == Ordering::Greater,
+                    CmpOp::Ge => lo != Ordering::Less,
+                },
+                None => false,
+            }
+        }
+        Predicate::IsNull { column, negated } => {
+            let Some((_, s)) = col_stats(schema, stats, column) else {
+                return false;
+            };
+            if *negated {
+                s.null_count == 0
+            } else {
+                s.null_count >= rows
+            }
+        }
+        Predicate::And(a, b) => {
+            group_must_match_all(a, schema, stats, rows)
+                && group_must_match_all(b, schema, stats, rows)
+        }
+        Predicate::Or(a, b) => {
+            group_must_match_all(a, schema, stats, rows)
+                || group_must_match_all(b, schema, stats, rows)
+        }
+        Predicate::Not(p) => !group_may_match(p, schema, stats, rows),
+    }
+}
+
+fn col_stats<'a>(
+    schema: &Schema,
+    stats: &'a [ColumnStats],
+    column: &str,
+) -> Option<(DataType, &'a ColumnStats)> {
+    let i = schema.index_of(column).ok()?;
+    let s = stats.get(i)?;
+    Some((schema.field(i).dtype, s))
+}
+
+/// `(min.cmp(literal), max.cmp(literal))` under exactly the comparison
+/// the row evaluator applies for this dtype/literal pair, or `None`
+/// when min/max are absent or the pair is one the evaluator rejects
+/// (callers then pass the group through). The Int64-vs-Float64 arm
+/// compares through `as f64` — a monotone non-decreasing cast, so the
+/// interval logic stays sound.
+fn bound_orderings(
+    dtype: DataType,
+    s: &ColumnStats,
+    literal: &Value,
+) -> Option<(Ordering, Ordering)> {
+    let (min, max) = (s.min.as_ref()?, s.max.as_ref()?);
+    match (dtype, literal) {
+        (DataType::Int64, Value::Int64(x)) => {
+            Some((min.as_i64()?.cmp(x), max.as_i64()?.cmp(x)))
+        }
+        (DataType::Int64, Value::Float64(x)) => Some((
+            (min.as_i64()? as f64).total_cmp(x),
+            (max.as_i64()? as f64).total_cmp(x),
+        )),
+        (DataType::Float64, lit) => {
+            let x = lit.as_f64()?;
+            match (min, max) {
+                (Value::Float64(lo), Value::Float64(hi)) => {
+                    Some((lo.total_cmp(&x), hi.total_cmp(&x)))
+                }
+                _ => None,
+            }
+        }
+        (DataType::Utf8, Value::Utf8(x)) => Some((
+            min.as_str()?.cmp(x.as_str()),
+            max.as_str()?.cmp(x.as_str()),
+        )),
+        (DataType::Bool, Value::Bool(x)) => Some((
+            min.as_bool()?.cmp(x),
+            max.as_bool()?.cmp(x),
+        )),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        Table::from_columns(vec![
+            (
+                "k",
+                Column::from_opt_i64(
+                    (0..200)
+                        .map(|i| {
+                            if i % 7 == 0 {
+                                None
+                            } else {
+                                Some(i * 3 - 100)
+                            }
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "v",
+                Column::from_opt_f64(
+                    (0..200)
+                        .map(|i| {
+                            if i % 11 == 0 {
+                                None
+                            } else {
+                                Some(i as f64 * 0.25 - 3.0)
+                            }
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "s",
+                Column::from_opt_str(
+                    &(0..200)
+                        .map(|i| {
+                            if i % 5 == 0 {
+                                None
+                            } else {
+                                Some(format!("tag-{}", i % 9))
+                            }
+                        })
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "b",
+                Column::from_bool((0..200).map(|i| i % 3 == 0).collect()),
+            ),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn every_forced_encoding_roundtrips() {
+        let t = sample();
+        for force in [
+            None,
+            Some(Encoding::Plain),
+            Some(Encoding::Rle),
+            Some(Encoding::BitPack),
+            Some(Encoding::Dict),
+        ] {
+            let buf = encode_group_with(&t, force);
+            let (back, pruning) = decode_group(&buf, None).unwrap();
+            assert_eq!(back, t, "force={force:?}");
+            assert_eq!(pruning, DecodePruning::default());
+        }
+    }
+
+    #[test]
+    fn auto_choice_beats_plain_on_compressible_data() {
+        let runs = Table::from_columns(vec![
+            ("r", Column::from_i64(vec![42; 4096])),
+            (
+                "small",
+                Column::from_i64((0..4096).map(|i| i % 16).collect()),
+            ),
+            (
+                "dict",
+                Column::from_str(
+                    &(0..4096)
+                        .map(|i| format!("name-{}", i % 4))
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+        .unwrap();
+        let auto = encode_group(&runs);
+        let plain = encode_group_with(&runs, Some(Encoding::Plain));
+        assert!(
+            auto.len() * 4 < plain.len(),
+            "auto {} vs plain {}",
+            auto.len(),
+            plain.len()
+        );
+        let (back, _) = decode_group(&auto, None).unwrap();
+        assert_eq!(back, runs);
+    }
+
+    #[test]
+    fn projection_skips_payloads_and_keeps_file_order() {
+        let t = sample();
+        let buf = encode_group(&t);
+        let proj = vec!["b".to_string(), "k".to_string()];
+        let (got, pruning) = decode_group(&buf, Some(&proj)).unwrap();
+        // File order (k before b), not projection-list order.
+        assert_eq!(
+            got.schema()
+                .fields()
+                .iter()
+                .map(|f| f.name.as_str())
+                .collect::<Vec<_>>(),
+            vec!["k", "b"]
+        );
+        assert_eq!(pruning.pruned_columns, 2);
+        assert!(pruning.avoided_bytes > 0);
+        assert_eq!(got.column(0), t.column(0));
+        assert_eq!(got.column(1), t.column(3));
+    }
+
+    #[test]
+    fn empty_and_all_null_groups_roundtrip() {
+        let empty = Table::from_columns(vec![
+            ("a", Column::from_i64(vec![])),
+            ("s", Column::from_str::<&str>(&[])),
+        ])
+        .unwrap();
+        let (back, _) =
+            decode_group(&encode_group(&empty), None).unwrap();
+        assert_eq!(back, empty);
+
+        let nulls = Table::from_columns(vec![
+            ("a", Column::from_opt_i64(vec![None; 70])),
+            (
+                "s",
+                Column::from_opt_str(&vec![None::<&str>; 70]),
+            ),
+        ])
+        .unwrap();
+        for force in [None, Some(Encoding::Rle), Some(Encoding::Dict)] {
+            let (back, _) =
+                decode_group(&encode_group_with(&nulls, force), None)
+                    .unwrap();
+            assert_eq!(back, nulls);
+        }
+    }
+
+    #[test]
+    fn bitpack_handles_extreme_range() {
+        let t = Table::from_columns(vec![(
+            "x",
+            Column::from_i64(vec![i64::MIN, 0, i64::MAX, -1, 1]),
+        )])
+        .unwrap();
+        let buf = encode_group_with(&t, Some(Encoding::BitPack));
+        let (back, _) = decode_group(&buf, None).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn truncation_and_garbage_fail_closed() {
+        let buf = encode_group(&sample());
+        for cut in [0, 3, 4, 11, 12, buf.len() / 2, buf.len() - 1] {
+            assert!(
+                decode_group(&buf[..cut], None).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF; // magic
+        assert!(decode_group(&bad, None).is_err());
+        let mut extra = buf.clone();
+        extra.push(0);
+        assert!(decode_group(&extra, None).is_err());
+    }
+
+    #[test]
+    fn stats_capture_minmax_and_nulls() {
+        let t = sample();
+        let s = column_stats(t.column(0));
+        assert_eq!(s.null_count, 29);
+        assert!(s.has_validity);
+        assert_eq!(s.min, Some(Value::Int64(-97)));
+        assert_eq!(s.max, Some(Value::Int64(497)));
+        let s = column_stats(&Column::from_i64(vec![1, 2]));
+        assert!(!s.has_validity);
+        let s = column_stats(&Column::from_opt_i64(vec![None, None]));
+        assert_eq!((s.min, s.max, s.null_count), (None, None, 2));
+        let long = "x".repeat(MAX_STATS_STR + 1);
+        let s = column_stats(&Column::from_str(&[long.as_str()]));
+        assert_eq!(s.min, None);
+    }
+
+    #[test]
+    fn stats_serialization_roundtrips() {
+        let t = sample();
+        for (i, f) in t.schema().fields().iter().enumerate() {
+            let s = column_stats(t.column(i));
+            let mut buf = Vec::new();
+            write_stats(&mut buf, f.dtype, &s);
+            let mut r = Reader::new(&buf);
+            let back = read_stats(&mut r, f.dtype).unwrap();
+            assert_eq!(back, s, "column {}", f.name);
+            assert_eq!(r.remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn pruning_matches_row_evaluation() {
+        // Candidate groups × candidate predicates: whenever any row
+        // matches, the zone map must keep the group.
+        let groups = [
+            Table::from_columns(vec![
+                ("k", Column::from_i64(vec![10, 20, 30])),
+                ("s", Column::from_str(&["aa", "bb", "cc"])),
+            ])
+            .unwrap(),
+            Table::from_columns(vec![
+                (
+                    "k",
+                    Column::from_opt_i64(vec![Some(5), None, Some(7)]),
+                ),
+                (
+                    "s",
+                    Column::from_opt_str(&[
+                        Some("zz"),
+                        None,
+                        Some("mm"),
+                    ]),
+                ),
+            ])
+            .unwrap(),
+            Table::from_columns(vec![
+                ("k", Column::from_opt_i64(vec![None, None])),
+                ("s", Column::from_opt_str(&[None::<&str>, None])),
+            ])
+            .unwrap(),
+        ];
+        let mut preds: Vec<Predicate> = [
+            "k == 20",
+            "k != 20",
+            "k < 6",
+            "k <= 5",
+            "k > 29",
+            "k >= 31",
+            "k == 20 and s == bb",
+            "k < 6 or s == cc",
+            "k is null",
+            "k is not null",
+            "s == bb",
+            "s < aa",
+            "s >= zz",
+            "k > 2.5",
+            "k < 5.5",
+        ]
+        .iter()
+        .map(|p| Predicate::parse(p).unwrap())
+        .collect();
+        // The parser has no `not` prefix; build negations directly.
+        for p in ["k < 100", "k >= 5 and k <= 30", "k is null"] {
+            preds.push(Predicate::Not(Box::new(
+                Predicate::parse(p).unwrap(),
+            )));
+        }
+        for t in &groups {
+            let stats: Vec<ColumnStats> =
+                (0..t.num_columns())
+                    .map(|i| column_stats(t.column(i)))
+                    .collect();
+            for pred in &preds {
+                let mask = pred.eval_mask(t).unwrap();
+                let any = mask.iter().any(|&m| m);
+                let may = group_may_match(
+                    pred,
+                    t.schema(),
+                    &stats,
+                    t.num_rows() as u64,
+                );
+                // Soundness: may=false requires no matching row.
+                assert!(
+                    may || !any,
+                    "pred `{pred:?}` pruned a matching group"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pruning_skips_provably_dead_groups() {
+        let t = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![100, 150, 199]),
+        )])
+        .unwrap();
+        let stats = vec![column_stats(t.column(0))];
+        for (p, expect_skip) in [
+            ("k < 100", true),
+            ("k > 199", true),
+            ("k == 50", true),
+            ("k is null", true),
+            ("k == 150", false),
+            ("k >= 199", false),
+            ("missing == 1", false), // unknown column: pass through
+            ("k == notanumber", false), // type error: pass through
+        ] {
+            let pred = Predicate::parse(p).unwrap();
+            let may =
+                group_may_match(&pred, t.schema(), &stats, 3);
+            assert_eq!(may, !expect_skip, "pred `{p}`");
+        }
+        // `not (k >= 100)` is all-false here: every row matches the
+        // inner predicate, so the negated group can be skipped.
+        let not_pred = Predicate::Not(Box::new(
+            Predicate::parse("k >= 100").unwrap(),
+        ));
+        assert!(!group_may_match(&not_pred, t.schema(), &stats, 3));
+    }
+}

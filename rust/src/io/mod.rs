@@ -4,4 +4,5 @@
 
 pub mod csv;
 pub mod datagen;
+pub mod encode;
 pub mod ryf;

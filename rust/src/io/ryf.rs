@@ -2,12 +2,24 @@
 //! plays in the paper's future-work list, §VIII: "we will be integrating
 //! HDF5 and Parquet data loading"). Row-grouped so distributed readers
 //! can fetch disjoint groups per rank without touching the rest of the
-//! file:
+//! file. Two on-disk formats share the container layout (header, group
+//! bytes, footer, trailing footer offset); the `[exec] ryf_encoding`
+//! knob picks which one [`RyfWriter`] emits, and every reader accepts
+//! both:
 //!
 //! ```text
-//! "RYF1" | u32 n_groups
-//! group 0 bytes (net::wire format) | group 1 bytes | …
-//! footer: n_groups × (u64 offset, u64 len, u64 rows) | u64 footer_off
+//! raw (the bit-identity oracle, RYF_ENCODING=0):
+//!   "RYF1" | u32 n_groups
+//!   group bytes (net::wire format) …
+//!   footer: n_groups × (u64 offset, u64 len, u64 rows) | u64 footer_off
+//!
+//! encoded (per-group encodings + zone maps, the default):
+//!   "RYF2" | u32 n_groups
+//!   group bytes (io::encode format) …
+//!   footer: u32 ncols | ncols × (u8 dtype | u16 name_len | name)
+//!           n_groups × (u64 offset, u64 len, u64 rows)
+//!           n_groups × ncols zone-map stats (io::encode layout)
+//!   u64 footer_off
 //! ```
 //!
 //! Both directions stream: [`RyfWriter`] appends row groups
@@ -16,18 +28,33 @@
 //! ([`read_ryf`]), per-rank ([`read_ryf_partition`]), or one group at
 //! a time ([`read_ryf_group`], which the CLI's RYF→CSV conversion
 //! walks so the egress side is bounded-memory too).
+//!
+//! [`scan_ryf`] / [`scan_ryf_partition`] are the pushdown-aware entry
+//! points: given [`ScanOptions`] carrying a pipeline's leading
+//! predicate and live column set, an encoded file's zone maps skip
+//! whole groups without decoding them and non-projected column
+//! payloads are never gathered (`docs/STORAGE.md`). The pruned result
+//! is bit-identical to reading everything and filtering, and the
+//! pushdown counters land in [`exec::take_scan_stats`].
 
 #![warn(missing_docs)]
 
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::Arc;
 
+use crate::buffer::Bitmap;
+use crate::column::{Column, PrimitiveColumn, StringColumn};
 use crate::error::{Result, RylonError};
 use crate::exec;
-use crate::net::wire::{deserialize_table, serialize_table};
+use crate::io::encode::{self, ColumnStats};
+use crate::net::wire::{self, deserialize_table, serialize_table, Reader};
+use crate::ops::select::Predicate;
 use crate::table::Table;
+use crate::types::{DataType, Field, Schema};
 
 const MAGIC: &[u8; 4] = b"RYF1";
+const MAGIC2: &[u8; 4] = b"RYF2";
 
 /// One row group's footer entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,31 +71,62 @@ pub struct GroupMeta {
 /// `finish()` to write the footer (the group count in the header is
 /// back-patched). Lets a bounded-memory producer — e.g. the streaming
 /// CSV reader's chunk tables — convert to RYF without ever holding the
-/// whole table.
+/// whole table. The file format (raw `RYF1` vs encoded `RYF2`) is
+/// fixed at `create` time from the calling thread's
+/// [`exec::ryf_encoding`] setting; the encoded writer additionally
+/// accumulates per-group zone-map statistics for the footer.
 pub struct RyfWriter {
     f: std::fs::File,
     metas: Vec<GroupMeta>,
     offset: u64,
+    encoded: bool,
+    schema: Option<Schema>,
+    stats: Vec<Vec<ColumnStats>>,
 }
 
 impl RyfWriter {
     /// Create the file and write the (to-be-patched) header.
     pub fn create(path: impl AsRef<Path>) -> Result<RyfWriter> {
+        let encoded = exec::ryf_encoding();
         let mut f = std::fs::File::create(path)?;
-        f.write_all(MAGIC)?;
+        f.write_all(if encoded { MAGIC2 } else { MAGIC })?;
         // Placeholder group count, patched in `finish`.
         f.write_all(&0u32.to_le_bytes())?;
         Ok(RyfWriter {
             f,
             metas: Vec::new(),
             offset: (MAGIC.len() + 4) as u64,
+            encoded,
+            schema: None,
+            stats: Vec::new(),
         })
     }
 
     /// Append one table as one row group (the caller controls group
-    /// sizing by how it slices).
+    /// sizing by how it slices). In encoded mode every group must
+    /// share the first group's schema — the footer stores it once.
     pub fn append(&mut self, group: &Table) -> Result<()> {
-        let bytes = serialize_table(group);
+        let bytes = if self.encoded {
+            match &self.schema {
+                None => self.schema = Some(group.schema().clone()),
+                Some(s) => {
+                    if s != group.schema() {
+                        return Err(RylonError::schema(
+                            "ryf: appended group schema differs from \
+                             the first group's",
+                        ));
+                    }
+                }
+            }
+            self.stats.push(
+                (0..group.num_columns())
+                    .map(|i| encode::column_stats(group.column(i)))
+                    .collect(),
+            );
+            encode::encode_group(group)
+        } else {
+            serialize_table(group)
+        };
         self.f.write_all(&bytes)?;
         self.metas.push(GroupMeta {
             offset: self.offset,
@@ -95,11 +153,36 @@ impl RyfWriter {
             ));
         }
         let footer_off = self.offset;
-        for m in &self.metas {
-            self.f.write_all(&m.offset.to_le_bytes())?;
-            self.f.write_all(&m.len.to_le_bytes())?;
-            self.f.write_all(&m.rows.to_le_bytes())?;
+        let mut foot: Vec<u8> = Vec::new();
+        if self.encoded {
+            let schema =
+                self.schema.as_ref().expect("groups imply a schema");
+            foot.extend_from_slice(
+                &(schema.len() as u32).to_le_bytes(),
+            );
+            for f in schema.fields() {
+                foot.push(wire::dtype_tag(f.dtype));
+                foot.extend_from_slice(
+                    &(f.name.len() as u16).to_le_bytes(),
+                );
+                foot.extend_from_slice(f.name.as_bytes());
+            }
         }
+        for m in &self.metas {
+            foot.extend_from_slice(&m.offset.to_le_bytes());
+            foot.extend_from_slice(&m.len.to_le_bytes());
+            foot.extend_from_slice(&m.rows.to_le_bytes());
+        }
+        if self.encoded {
+            let schema =
+                self.schema.as_ref().expect("groups imply a schema");
+            for gstats in &self.stats {
+                for (f, s) in schema.fields().iter().zip(gstats) {
+                    encode::write_stats(&mut foot, f.dtype, s);
+                }
+            }
+        }
+        self.f.write_all(&foot)?;
         self.f.write_all(&footer_off.to_le_bytes())?;
         self.f.seek(SeekFrom::Start(MAGIC.len() as u64))?;
         self.f
@@ -131,49 +214,155 @@ pub fn write_ryf(
     Ok(())
 }
 
-/// Open an RYF file: returns the group index (footer).
-pub fn read_ryf_footer(path: impl AsRef<Path>) -> Result<Vec<GroupMeta>> {
-    let mut f = std::fs::File::open(path)?;
-    let mut head = [0u8; 8];
-    f.read_exact(&mut head).map_err(|_| {
-        RylonError::parse("ryf: file too small for header")
-    })?;
-    if &head[..4] != MAGIC {
-        return Err(RylonError::parse("ryf: bad magic"));
-    }
-    let n_groups = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
-    f.seek(SeekFrom::End(-8))?;
-    let mut tail = [0u8; 8];
-    f.read_exact(&mut tail)?;
-    let footer_off = u64::from_le_bytes(tail);
-    f.seek(SeekFrom::Start(footer_off))?;
-    let mut metas = Vec::with_capacity(n_groups);
-    let mut entry = [0u8; 24];
-    for _ in 0..n_groups {
-        f.read_exact(&mut entry).map_err(|_| {
-            RylonError::parse("ryf: truncated footer")
-        })?;
+/// Everything a scan learns from an RYF footer without touching group
+/// bytes: the group index and — for encoded files — the schema and
+/// per-group zone-map statistics that drive pruning.
+#[derive(Debug, Clone)]
+pub struct RyfIndex {
+    /// `true` for the encoded `RYF2` format.
+    pub encoded: bool,
+    /// One entry per row group, in file order.
+    pub metas: Vec<GroupMeta>,
+    /// The file schema (encoded files only; raw files reveal it by
+    /// decoding a group).
+    pub schema: Option<Schema>,
+    /// `stats[g][c]` = zone map of column `c` in group `g` (encoded
+    /// files only).
+    pub stats: Vec<Vec<ColumnStats>>,
+}
+
+fn read_metas(r: &mut Reader, n: usize) -> Result<Vec<GroupMeta>> {
+    r.check_count(n, 24, "ryf footer entries")?;
+    let mut metas = Vec::with_capacity(n);
+    for _ in 0..n {
         metas.push(GroupMeta {
-            offset: u64::from_le_bytes(entry[0..8].try_into().unwrap()),
-            len: u64::from_le_bytes(entry[8..16].try_into().unwrap()),
-            rows: u64::from_le_bytes(entry[16..24].try_into().unwrap()),
+            offset: r.u64()?,
+            len: r.u64()?,
+            rows: r.u64()?,
         });
     }
     Ok(metas)
 }
 
-/// Read one row group.
-pub fn read_ryf_group(
-    path: impl AsRef<Path>,
-    meta: &GroupMeta,
-) -> Result<Table> {
+/// Open an RYF file and parse its footer into an index. Accepts both
+/// formats; fails closed on any structural inconsistency.
+pub fn read_ryf_index(path: impl AsRef<Path>) -> Result<RyfIndex> {
+    let mut f = std::fs::File::open(path)?;
+    let mut head = [0u8; 8];
+    f.read_exact(&mut head).map_err(|_| {
+        RylonError::parse("ryf: file too small for header")
+    })?;
+    let encoded = if head[..4] == *MAGIC {
+        false
+    } else if head[..4] == *MAGIC2 {
+        true
+    } else {
+        return Err(RylonError::parse("ryf: bad magic"));
+    };
+    let n_groups =
+        u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    let file_len = f.metadata()?.len();
+    if file_len < 16 {
+        return Err(RylonError::parse("ryf: file too small for footer"));
+    }
+    f.seek(SeekFrom::End(-8))?;
+    let mut tail = [0u8; 8];
+    f.read_exact(&mut tail)?;
+    let footer_off = u64::from_le_bytes(tail);
+    if footer_off < 8 || footer_off > file_len - 8 {
+        return Err(RylonError::parse("ryf: bad footer offset"));
+    }
+    let mut foot = vec![0u8; (file_len - 8 - footer_off) as usize];
+    f.seek(SeekFrom::Start(footer_off))?;
+    f.read_exact(&mut foot)
+        .map_err(|_| RylonError::parse("ryf: truncated footer"))?;
+    let mut r = Reader::new(&foot);
+    let index = if !encoded {
+        RyfIndex {
+            encoded,
+            metas: read_metas(&mut r, n_groups)?,
+            schema: None,
+            stats: Vec::new(),
+        }
+    } else {
+        let ncols = r.u32()? as usize;
+        r.check_count(ncols, 3, "ryf schema fields")?;
+        let mut fields = Vec::with_capacity(ncols);
+        for _ in 0..ncols {
+            let dtype = wire::tag_dtype(r.u8()?)?;
+            let name_len = r.u16()? as usize;
+            let name = std::str::from_utf8(r.bytes(name_len)?)
+                .map_err(|_| {
+                    RylonError::parse("ryf: field name is not utf-8")
+                })?;
+            fields.push(Field::new(name, dtype));
+        }
+        let schema = Schema::new(fields);
+        let metas = read_metas(&mut r, n_groups)?;
+        let mut stats = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
+            stats.push(
+                (0..ncols)
+                    .map(|c| {
+                        encode::read_stats(&mut r, schema.field(c).dtype)
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        RyfIndex {
+            encoded,
+            metas,
+            schema: Some(schema),
+            stats,
+        }
+    };
+    if r.remaining() != 0 {
+        return Err(RylonError::parse("ryf: trailing footer bytes"));
+    }
+    // Every group extent must land between the header and the footer —
+    // a lying `len` would otherwise size the group-read buffer.
+    for m in &index.metas {
+        let end = m.offset.checked_add(m.len);
+        if m.offset < 8 || end.map_or(true, |e| e > footer_off) {
+            return Err(RylonError::parse(
+                "ryf: group extent out of bounds",
+            ));
+        }
+    }
+    Ok(index)
+}
+
+/// Open an RYF file: returns the group index (footer).
+pub fn read_ryf_footer(path: impl AsRef<Path>) -> Result<Vec<GroupMeta>> {
+    Ok(read_ryf_index(path)?.metas)
+}
+
+fn read_group_bytes(path: &Path, meta: &GroupMeta) -> Result<Vec<u8>> {
     let mut f = std::fs::File::open(path)?;
     f.seek(SeekFrom::Start(meta.offset))?;
     let mut buf = vec![0u8; meta.len as usize];
     f.read_exact(&mut buf).map_err(|_| {
         RylonError::parse("ryf: truncated row group")
     })?;
-    deserialize_table(&buf)
+    Ok(buf)
+}
+
+fn group_is_encoded(buf: &[u8]) -> bool {
+    buf.len() >= 4 && buf[..4] == encode::GROUP_MAGIC.to_le_bytes()[..]
+}
+
+/// Read one row group (either format — the group bytes carry their own
+/// magic).
+pub fn read_ryf_group(
+    path: impl AsRef<Path>,
+    meta: &GroupMeta,
+) -> Result<Table> {
+    let buf = read_group_bytes(path.as_ref(), meta)?;
+    if group_is_encoded(&buf) {
+        Ok(encode::decode_group(&buf, None)?.0)
+    } else {
+        deserialize_table(&buf)
+    }
 }
 
 /// Fetch and deserialise `metas` row groups under the calling thread's
@@ -246,10 +435,275 @@ pub fn read_ryf_partition(
     Table::concat_all(&schema, &parts)
 }
 
+// ---- pushdown scan -------------------------------------------------------
+
+/// Pushed-down scan parameters (built by the pipeline from its fused
+/// leading stages).
+#[derive(Debug, Clone, Default)]
+pub struct ScanOptions {
+    /// The pipeline's leading predicate conjunction. Encoded groups
+    /// whose zone maps prove no row can match are skipped without
+    /// decoding. The predicate is *not* applied to surviving rows —
+    /// the pipeline's own select stage still runs, so a predicate the
+    /// row evaluator would reject (unknown column, type mismatch)
+    /// errors identically with or without pushdown.
+    pub predicate: Option<Predicate>,
+    /// The pipeline's live column set; column payloads not named here
+    /// are never decoded or gathered. Names missing from the file are
+    /// ignored (the pipeline surfaces the identical unknown-column
+    /// error either way).
+    pub projection: Option<Vec<String>>,
+}
+
+/// Scan the whole file with predicate/projection pushdown. On raw
+/// files this degrades to a plain (projected) read — zone maps only
+/// exist in encoded footers. Pushdown counters accumulate on the
+/// calling thread ([`exec::take_scan_stats`]).
+pub fn scan_ryf(
+    path: impl AsRef<Path>,
+    opts: &ScanOptions,
+) -> Result<Table> {
+    let index = read_ryf_index(&path)?;
+    let owned: Vec<usize> = (0..index.metas.len()).collect();
+    scan_groups(path.as_ref(), &index, &owned, opts)
+}
+
+/// Scan this rank's share of row groups (block distribution over
+/// groups, like [`read_ryf_partition`]) with pushdown.
+pub fn scan_ryf_partition(
+    path: impl AsRef<Path>,
+    rank: usize,
+    world: usize,
+    opts: &ScanOptions,
+) -> Result<Table> {
+    if world == 0 || rank >= world {
+        return Err(RylonError::invalid("bad rank/world"));
+    }
+    let index = read_ryf_index(&path)?;
+    let owned: Vec<usize> = (0..index.metas.len())
+        .filter(|g| g % world == rank)
+        .collect();
+    scan_groups(path.as_ref(), &index, &owned, opts)
+}
+
+fn scan_groups(
+    path: &Path,
+    index: &RyfIndex,
+    owned: &[usize],
+    opts: &ScanOptions,
+) -> Result<Table> {
+    let mut counters = exec::ScanCounters::new();
+    counters.groups_total = owned.len() as u64;
+    let proj = opts.projection.as_deref();
+    let mut survivors: Vec<GroupMeta> = Vec::with_capacity(owned.len());
+    for &g in owned {
+        let m = index.metas[g];
+        let skip = match (&opts.predicate, &index.schema) {
+            (Some(p), Some(schema)) => {
+                !encode::group_may_match(p, schema, &index.stats[g], m.rows)
+            }
+            _ => false,
+        };
+        if skip {
+            counters.groups_skipped += 1;
+            counters.decoded_bytes_avoided += m.len;
+        } else {
+            survivors.push(m);
+        }
+    }
+    let decoded = scan_groups_parallel(path, &survivors, proj)?;
+    let mut parts = Vec::with_capacity(decoded.len());
+    for (t, c) in decoded {
+        counters.add(&c);
+        parts.push(t);
+    }
+    let schema = match (&index.schema, parts.first()) {
+        (Some(s), _) => project_schema(s, proj),
+        (None, Some(t)) => t.schema().clone(),
+        (None, None) => {
+            // Raw file whose groups all belong to other ranks: probe
+            // the first group for its schema (nothing lands in the
+            // result, so the probe is not counted).
+            let first = index
+                .metas
+                .first()
+                .ok_or_else(|| RylonError::parse("ryf: empty file"))?;
+            project_schema(read_ryf_group(path, first)?.schema(), proj)
+        }
+    };
+    let out = Table::concat_all(&schema, &parts)?;
+    let out = if index.encoded {
+        restore_validity(out, index, owned)?
+    } else {
+        out
+    };
+    exec::note_scan(&counters);
+    Ok(out)
+}
+
+fn scan_groups_parallel(
+    path: &Path,
+    metas: &[GroupMeta],
+    proj: Option<&[String]>,
+) -> Result<Vec<(Table, exec::ScanCounters)>> {
+    let total_rows: u64 = metas.iter().map(|m| m.rows).sum();
+    let exec = exec::parallelism_for(total_rows as usize);
+    if !exec.is_parallel() || metas.len() <= 1 {
+        return metas
+            .iter()
+            .map(|m| scan_one_group(path, m, proj))
+            .collect();
+    }
+    let chunks = exec::split_even(metas.len(), exec.threads());
+    let parts: Vec<Result<Vec<(Table, exec::ScanCounters)>>> =
+        exec::map_parallel(chunks, |c| {
+            metas[c.range()]
+                .iter()
+                .map(|m| scan_one_group(path, m, proj))
+                .collect()
+        });
+    let mut out = Vec::with_capacity(metas.len());
+    for p in parts {
+        out.extend(p?);
+    }
+    Ok(out)
+}
+
+fn scan_one_group(
+    path: &Path,
+    meta: &GroupMeta,
+    proj: Option<&[String]>,
+) -> Result<(Table, exec::ScanCounters)> {
+    let buf = read_group_bytes(path, meta)?;
+    let mut c = exec::ScanCounters::new();
+    if group_is_encoded(&buf) {
+        let (t, pruning) = encode::decode_group(&buf, proj)?;
+        c.decoded_bytes = meta.len.saturating_sub(pruning.avoided_bytes);
+        c.decoded_bytes_avoided = pruning.avoided_bytes;
+        c.pruned_columns = pruning.pruned_columns;
+        Ok((t, c))
+    } else {
+        // Raw groups decode whole; the projection only drops the
+        // materialised columns afterwards (zero-copy).
+        let t = deserialize_table(&buf)?;
+        c.decoded_bytes = meta.len;
+        let t = match proj {
+            Some(names) => project_table(&t, names),
+            None => t,
+        };
+        Ok((t, c))
+    }
+}
+
+/// Keep the named columns in file order (zero-copy Arc reuse).
+/// Unknown names are ignored — the pipeline's own stages surface the
+/// identical unknown-column error whether or not the scan pruned.
+fn project_table(t: &Table, names: &[String]) -> Table {
+    let keep: Vec<usize> = (0..t.num_columns())
+        .filter(|&i| {
+            names.iter().any(|n| n == &t.schema().field(i).name)
+        })
+        .collect();
+    if keep.len() == t.num_columns() {
+        return t.clone();
+    }
+    let schema = t.schema().project(&keep);
+    let cols = keep.iter().map(|&i| t.column_arc(i)).collect();
+    Table::from_parts(schema, cols, t.num_rows())
+}
+
+fn project_schema(schema: &Schema, proj: Option<&[String]>) -> Schema {
+    match proj {
+        None => schema.clone(),
+        Some(names) => Schema::new(
+            schema
+                .fields()
+                .iter()
+                .filter(|f| names.iter().any(|n| n == &f.name))
+                .cloned()
+                .collect(),
+        ),
+    }
+}
+
+/// Whether one encoded group decodes column `dtype` with a validity
+/// bitmap attached. Primitives round-trip through the wire
+/// normalisation (all-valid bitmaps are dropped), so only a group with
+/// nulls carries one; string columns keep theirs exactly as written.
+fn group_col_has_validity(dtype: DataType, s: &ColumnStats) -> bool {
+    match dtype {
+        DataType::Int64 | DataType::Float64 | DataType::Bool => {
+            s.null_count > 0
+        }
+        DataType::Utf8 => s.has_validity,
+    }
+}
+
+/// Match the raw path's validity representation after pruning.
+/// `Table::concat` promotes a column to `Some` validity when any
+/// concatenated part carries one, so a scan that pruned the only
+/// null-carrying groups would come back `None` where the raw oracle
+/// (which decodes every group) says `Some(all ones)` — a downstream
+/// gather preserves that difference and breaks bit-identity. The
+/// footer stats record each group's nullability, so wrap an all-ones
+/// bitmap wherever the full owned set would have promoted. (Groups
+/// with zero rows never participate in `concat_all` and are ignored.)
+fn restore_validity(
+    out: Table,
+    index: &RyfIndex,
+    owned: &[usize],
+) -> Result<Table> {
+    let file_schema = match &index.schema {
+        Some(s) => s,
+        None => return Ok(out),
+    };
+    let n = out.num_rows();
+    let mut cols: Vec<Arc<Column>> =
+        Vec::with_capacity(out.num_columns());
+    for (i, f) in out.schema().fields().iter().enumerate() {
+        let col = out.column(i);
+        let fi = file_schema.index_of(&f.name)?;
+        let expected = owned.iter().any(|&g| {
+            index.metas[g].rows > 0
+                && group_col_has_validity(f.dtype, &index.stats[g][fi])
+        });
+        if expected && col.validity().is_none() {
+            cols.push(Arc::new(with_ones_validity(col, n)));
+        } else {
+            cols.push(out.column_arc(i));
+        }
+    }
+    Ok(Table::from_parts(out.schema().clone(), cols, n))
+}
+
+fn with_ones_validity(col: &Column, n: usize) -> Column {
+    let ones = Some(Bitmap::ones(n));
+    match col {
+        Column::Int64(c) => Column::Int64(PrimitiveColumn {
+            values: c.values().to_vec(),
+            validity: ones,
+        }),
+        Column::Float64(c) => Column::Float64(PrimitiveColumn {
+            values: c.values().to_vec(),
+            validity: ones,
+        }),
+        Column::Bool(c) => Column::Bool(PrimitiveColumn {
+            values: c.values().to_vec(),
+            validity: ones,
+        }),
+        Column::Utf8(c) => Column::Utf8(StringColumn::from_parts(
+            c.offsets().to_vec(),
+            c.bytes().to_vec(),
+            ones,
+        )),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::column::Column;
+    use crate::ops::select::select;
 
     fn t(n: usize) -> Table {
         Table::from_columns(vec![
@@ -405,6 +859,249 @@ mod tests {
         assert!(write_ryf(&t(5), &path, 0).is_err());
         write_ryf(&t(5), &path, 2).unwrap();
         assert!(read_ryf_partition(&path, 3, 3).is_err());
+        let opts = ScanOptions::default();
+        assert!(scan_ryf_partition(&path, 3, 3, &opts).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn knob_selects_format_and_both_roundtrip() {
+        let table = t(400);
+        let raw = tmp("fmt_raw");
+        let enc = tmp("fmt_enc");
+        exec::with_ryf_encoding(false, || write_ryf(&table, &raw, 64))
+            .unwrap();
+        exec::with_ryf_encoding(true, || write_ryf(&table, &enc, 64))
+            .unwrap();
+        assert_eq!(&std::fs::read(&raw).unwrap()[..4], b"RYF1");
+        assert_eq!(&std::fs::read(&enc).unwrap()[..4], b"RYF2");
+        assert_eq!(read_ryf(&raw).unwrap(), table);
+        assert_eq!(read_ryf(&enc).unwrap(), table);
+        for rank in 0..3 {
+            assert_eq!(
+                read_ryf_partition(&enc, rank, 3).unwrap(),
+                read_ryf_partition(&raw, rank, 3).unwrap(),
+                "partition {rank} diverged between formats"
+            );
+        }
+        let idx = read_ryf_index(&enc).unwrap();
+        assert!(idx.encoded);
+        assert_eq!(idx.schema.as_ref().unwrap(), table.schema());
+        assert_eq!(idx.metas.len(), 7); // ceil(400/64)
+        assert_eq!(idx.stats.len(), idx.metas.len());
+        let idx = read_ryf_index(&raw).unwrap();
+        assert!(!idx.encoded);
+        assert!(idx.schema.is_none() && idx.stats.is_empty());
+        std::fs::remove_file(&raw).ok();
+        std::fs::remove_file(&enc).ok();
+    }
+
+    #[test]
+    fn scan_prunes_groups_and_counts() {
+        let path = tmp("scan_prune");
+        let table = t(1000);
+        exec::with_ryf_encoding(true, || write_ryf(&table, &path, 100))
+            .unwrap();
+        let pred = Predicate::parse("id < 100").unwrap();
+        let opts = ScanOptions {
+            predicate: Some(pred.clone()),
+            projection: None,
+        };
+        let _ = exec::take_scan_stats();
+        let got = scan_ryf(&path, &opts).unwrap();
+        let c = exec::take_scan_stats();
+        assert_eq!(c.groups_total, 10);
+        assert_eq!(c.groups_skipped, 9, "only group 0 can match id<100");
+        assert!(c.decoded_bytes_avoided > 0);
+        assert!(c.decoded_bytes > 0);
+        assert_eq!(got.num_rows(), 100);
+        // The scan's survivors, filtered, are bit-identical to the
+        // unpruned read, filtered.
+        assert_eq!(
+            select(&got, &pred).unwrap(),
+            select(&read_ryf(&path).unwrap(), &pred).unwrap()
+        );
+        // Raw files have no zone maps: same result, nothing skipped.
+        let raw = tmp("scan_prune_raw");
+        exec::with_ryf_encoding(false, || write_ryf(&table, &raw, 100))
+            .unwrap();
+        let all = scan_ryf(&raw, &opts).unwrap();
+        let c = exec::take_scan_stats();
+        assert_eq!(c.groups_skipped, 0);
+        assert_eq!(
+            select(&got, &pred).unwrap(),
+            select(&all, &pred).unwrap(),
+            "encoded scan must match the raw oracle after filtering"
+        );
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&raw).ok();
+    }
+
+    #[test]
+    fn scan_projection_prunes_column_payloads() {
+        let path = tmp("scan_proj");
+        let table = t(600);
+        exec::with_ryf_encoding(true, || write_ryf(&table, &path, 100))
+            .unwrap();
+        let opts = ScanOptions {
+            predicate: None,
+            projection: Some(vec!["id".to_string()]),
+        };
+        let _ = exec::take_scan_stats();
+        let got = scan_ryf(&path, &opts).unwrap();
+        let c = exec::take_scan_stats();
+        assert_eq!(c.pruned_columns, 6, "one string column × 6 groups");
+        assert!(c.decoded_bytes_avoided > 0);
+        assert_eq!(got.num_columns(), 1);
+        assert_eq!(got.schema().field(0).name, "id");
+        assert_eq!(got.column(0), &*t(600).column_arc(0));
+        // Raw oracle: same table, columns dropped after decode.
+        let raw = tmp("scan_proj_raw");
+        exec::with_ryf_encoding(false, || write_ryf(&table, &raw, 100))
+            .unwrap();
+        assert_eq!(scan_ryf(&raw, &opts).unwrap(), got);
+        // Unknown projected names are ignored, not an error.
+        let opts = ScanOptions {
+            predicate: None,
+            projection: Some(vec!["nope".to_string()]),
+        };
+        assert_eq!(scan_ryf(&path, &opts).unwrap().num_columns(), 0);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&raw).ok();
+    }
+
+    #[test]
+    fn scan_restores_validity_when_null_groups_are_pruned() {
+        // Nulls live only in the high-id groups; pruning them away
+        // must not change the surviving columns' validity
+        // representation vs the raw oracle (concat promotes validity
+        // from *any* group, including pruned ones).
+        let n = 300;
+        let table = Table::from_columns(vec![
+            ("id", Column::from_i64((0..n as i64).collect())),
+            (
+                "v",
+                Column::from_opt_i64(
+                    (0..n as i64)
+                        .map(|i| if i < 200 { Some(i * 3) } else { None })
+                        .collect(),
+                ),
+            ),
+            (
+                "s",
+                Column::from_opt_str(
+                    &(0..n)
+                        .map(|i| {
+                            if i < 200 {
+                                Some(format!("tag{i}"))
+                            } else {
+                                None
+                            }
+                        })
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+        .unwrap();
+        let enc = tmp("scan_val_enc");
+        let raw = tmp("scan_val_raw");
+        exec::with_ryf_encoding(true, || write_ryf(&table, &enc, 100))
+            .unwrap();
+        exec::with_ryf_encoding(false, || write_ryf(&table, &raw, 100))
+            .unwrap();
+        let pred = Predicate::parse("id < 100").unwrap();
+        let opts = ScanOptions {
+            predicate: Some(pred.clone()),
+            projection: None,
+        };
+        let _ = exec::take_scan_stats();
+        let pruned = scan_ryf(&enc, &opts).unwrap();
+        let c = exec::take_scan_stats();
+        assert_eq!(c.groups_skipped, 2, "groups 1 and 2 are dead");
+        // Group 0 is null-free, but the raw path still carries a
+        // validity bitmap (promoted from the null groups).
+        assert!(pruned.column(1).validity().is_some());
+        assert_eq!(
+            select(&pruned, &pred).unwrap(),
+            select(&scan_ryf(&raw, &opts).unwrap(), &pred).unwrap(),
+            "validity representation must survive pruning"
+        );
+        std::fs::remove_file(&enc).ok();
+        std::fs::remove_file(&raw).ok();
+    }
+
+    #[test]
+    fn scan_partition_matches_raw_oracle() {
+        let table = t(900);
+        let enc = tmp("scan_part_enc");
+        let raw = tmp("scan_part_raw");
+        exec::with_ryf_encoding(true, || write_ryf(&table, &enc, 64))
+            .unwrap();
+        exec::with_ryf_encoding(false, || write_ryf(&table, &raw, 64))
+            .unwrap();
+        let pred = Predicate::parse("id >= 256 and id < 512").unwrap();
+        let opts = ScanOptions {
+            predicate: Some(pred.clone()),
+            projection: None,
+        };
+        for world in [1, 2, 3] {
+            for rank in 0..world {
+                let e =
+                    scan_ryf_partition(&enc, rank, world, &opts).unwrap();
+                let r =
+                    scan_ryf_partition(&raw, rank, world, &opts).unwrap();
+                assert_eq!(
+                    select(&e, &pred).unwrap(),
+                    select(&r, &pred).unwrap(),
+                    "rank {rank}/{world} diverged from the raw oracle"
+                );
+            }
+        }
+        let _ = exec::take_scan_stats();
+        std::fs::remove_file(&enc).ok();
+        std::fs::remove_file(&raw).ok();
+    }
+
+    #[test]
+    fn ryf2_footer_corruption_fails_closed() {
+        let path = tmp("bad2");
+        let table = t(50);
+        exec::with_ryf_encoding(true, || write_ryf(&table, &path, 10))
+            .unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let n = good.len();
+        let footer_off =
+            u64::from_le_bytes(good[n - 8..].try_into().unwrap()) as usize;
+
+        // Footer offset pointing nowhere.
+        for bad_off in [u64::MAX, 0u64, (n as u64) - 7] {
+            let mut bad = good.clone();
+            bad[n - 8..].copy_from_slice(&bad_off.to_le_bytes());
+            std::fs::write(&path, &bad).unwrap();
+            assert!(
+                read_ryf_index(&path).is_err(),
+                "footer offset {bad_off} must be rejected"
+            );
+        }
+        // Header group count inflated past the footer.
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_ryf_index(&path).is_err());
+        // Invalid dtype tag in the footer schema block.
+        let mut bad = good.clone();
+        bad[footer_off + 4] ^= 0x77;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_ryf_index(&path).is_err());
+        // Trailing garbage between the stats and the footer offset.
+        let mut bad = good[..n - 8].to_vec();
+        bad.push(0);
+        bad.extend_from_slice(&(footer_off as u64).to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_ryf_index(&path).is_err());
+        // Pristine bytes still parse.
+        std::fs::write(&path, &good).unwrap();
+        assert_eq!(read_ryf(&path).unwrap(), table);
         std::fs::remove_file(&path).ok();
     }
 }

@@ -40,9 +40,20 @@ COMMANDS
            [--algo sort|hash] [--world P] [--fabric threads|sim|tcp]
            [--out F.csv]
   etl      [--rows N] [--world P] [--fabric threads|sim|tcp]
-           [--artifacts DIR]   (end-to-end demo pipeline + tensor bridge)
+           [--in FILE.ryf] [--artifacts DIR]
+           (end-to-end demo pipeline + tensor bridge; with --in the
+           fact table is scanned from an RYF file with predicate and
+           projection pushdown — zone-map skips and decoded-bytes
+           counters land in the phase JSON)
   bench    --fig fig10|fig11|fig12|ablations [--rows N] [--samples K]
            [--max-world P] [--artifacts DIR]
+  bench run-all
+           [--recipes DIR] [--out DIR] [--recipe NAME] [--samples K]
+           (run every YAML bench recipe in --recipes, default
+           bench/recipes, and write one summary JSON per recipe to
+           --out, default bench/results; each run cross-checks the
+           encoded scan against the raw-format oracle and fails on
+           any bit-identity violation)
   sql      --query 'SELECT …' --tables name=a.csv,name2=b.csv
            [--out FILE.csv]
   convert  --in FILE.csv --out FILE.ryf [--group-rows N]
@@ -85,6 +96,13 @@ GLOBAL FLAGS
                         table; false = operator-at-a-time with a full
                         table between stages; results identical
                         either way — docs/PIPELINE.md)
+  --ryf-encoding true|false
+                        RYF write format (default true: encoded RYF2
+                        row groups — dictionary/RLE/bit-packed columns
+                        with zone-map statistics that let scans skip
+                        whole groups; false = raw RYF1, the
+                        bit-identity oracle; readers accept both —
+                        docs/STORAGE.md)
   --fault-plan PLAN     deterministic fault injection for cluster
                         commands: comma-separated kind@rank:exchange
                         entries, kind = error|panic|exit|delayMS (e.g.
@@ -224,6 +242,9 @@ fn make_cluster(
         pipeline_fuse: args
             .bool_flag("pipeline-fuse")?
             .or(cfg.pipeline_fuse),
+        ryf_encoding: args
+            .bool_flag("ryf-encoding")?
+            .or(cfg.ryf_encoding),
         fault_plan: args
             .str("fault-plan")
             .map(String::from)
@@ -424,7 +445,16 @@ fn cmd_etl(args: &Args, cfg: &RylonConfig) -> Result<()> {
         .str("artifacts")
         .unwrap_or(&cfg.artifacts_dir)
         .to_string();
-    println!("== rylon etl: {rows} rows, {world} ranks ==");
+    // Optional RYF fact source: each rank scans its share of row
+    // groups with the pipeline's leading predicate/projection pushed
+    // down (zone-map group skips, pruned column payloads).
+    let input = args.str("in").map(String::from);
+    match &input {
+        Some(path) => {
+            println!("== rylon etl: scan {path}, {world} ranks ==")
+        }
+        None => println!("== rylon etl: {rows} rows, {world} ranks =="),
+    }
 
     // The demo ETL: filter → fact ⋈ dim → groupby → global sort.
     let pipeline = Pipeline::new()
@@ -439,11 +469,6 @@ fn cmd_etl(args: &Args, cfg: &RylonConfig) -> Result<()> {
     let timer = rylon::metrics::Timer::start();
     let cluster = make_cluster(args, cfg, world)?;
     let outs = cluster.run(|ctx| {
-        let fact = rylon::io::datagen::gen_partition(
-            &DataGenSpec::paper_scaling(rows, 0xFAC7),
-            ctx.rank,
-            ctx.size,
-        )?;
         let dim = rylon::io::datagen::gen_partition(
             &DataGenSpec {
                 rows: (rows / 10).max(1),
@@ -456,7 +481,17 @@ fn cmd_etl(args: &Args, cfg: &RylonConfig) -> Result<()> {
         )?;
         let mut env = Env::new();
         env.insert("dim".to_string(), dim);
-        pipeline.run_dist(ctx, &fact, &env)
+        match &input {
+            Some(path) => pipeline.run_ryf_dist(ctx, path, &env),
+            None => {
+                let fact = rylon::io::datagen::gen_partition(
+                    &DataGenSpec::paper_scaling(rows, 0xFAC7),
+                    ctx.rank,
+                    ctx.size,
+                )?;
+                pipeline.run_dist(ctx, &fact, &env)
+            }
+        }
     })?;
     let total: usize = outs.iter().map(|(t, _)| t.num_rows()).sum();
     let mut phases = rylon::metrics::Phases::new();
@@ -469,6 +504,14 @@ fn cmd_etl(args: &Args, cfg: &RylonConfig) -> Result<()> {
     // budget was unbounded or everything fit).
     phases.count("bytes_spilled", cluster.spilled_bytes());
     phases.count("spill_partitions", cluster.spilled_partitions());
+    // Scan-pushdown gauges (docs/STORAGE.md): all 0 unless --in
+    // scanned an RYF fact table.
+    let scan = cluster.scan_stats();
+    phases.count("ryf_groups_total", scan.groups_total);
+    phases.count("ryf_groups_skipped", scan.groups_skipped);
+    phases.count("ryf_decoded_bytes", scan.decoded_bytes);
+    phases.count("ryf_decoded_bytes_avoided", scan.decoded_bytes_avoided);
+    phases.count("ryf_pruned_columns", scan.pruned_columns);
     println!(
         "pipeline: {} result rows in {:.3}s wall{}",
         human_count(total as u64),
@@ -765,8 +808,42 @@ fn cmd_convert(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run every (or one) YAML bench recipe and write a summary JSON per
+/// recipe (`docs/STORAGE.md`, `bench/recipes/README.md`). Each run
+/// cross-checks the encoded scan against the raw-format oracle and
+/// errors on any bit-identity violation, so CI can gate on it.
+fn cmd_bench_runall(args: &Args) -> Result<()> {
+    let recipes = args.str("recipes").unwrap_or("bench/recipes");
+    let out = args.str("out").unwrap_or("bench/results");
+    let samples = args.usize_or("samples", 3);
+    let summaries = rylon::bench_harness::recipe::run_all(
+        recipes,
+        out,
+        samples,
+        args.str("recipe"),
+    )?;
+    for s in &summaries {
+        println!("{}", s.render());
+    }
+    println!("wrote {} recipe summaries to {out}/", summaries.len());
+    Ok(())
+}
+
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    // `bench run-all` is the one positional sub-subcommand: fold it
+    // into a synthetic command name so the `--key value` flag parser
+    // stays dumb.
+    let argv: Vec<String> = if argv.first().map(String::as_str)
+        == Some("bench")
+        && argv.get(1).map(String::as_str) == Some("run-all")
+    {
+        std::iter::once("bench-run-all".to_string())
+            .chain(argv[2..].iter().cloned())
+            .collect()
+    } else {
+        argv
+    };
     let args = Args::parse(&argv)?;
     let cfg = load_config(&args)?;
     // Local (single-process) work — CSV/RYF ingest, local SQL, gather
@@ -799,6 +876,11 @@ fn run() -> Result<()> {
     rylon::exec::set_pipeline_fuse(rylon::exec::resolve_pipeline_fuse(
         args.bool_flag("pipeline-fuse")?.or(cfg.pipeline_fuse),
     ));
+    // Picks the RYF write format for local `convert` runs; cluster
+    // commands resolve per rank in `make_cluster`.
+    rylon::exec::set_ryf_encoding(rylon::exec::resolve_ryf_encoding(
+        args.bool_flag("ryf-encoding")?.or(cfg.ryf_encoding),
+    ));
     rylon::exec::set_memory_budget_bytes(
         rylon::exec::resolve_memory_budget_bytes(
             args.usize_or("memory-budget", cfg.memory_budget_bytes),
@@ -815,6 +897,7 @@ fn run() -> Result<()> {
         "join" => cmd_join(&args, &cfg),
         "etl" => cmd_etl(&args, &cfg),
         "bench" => cmd_bench(&args, &cfg),
+        "bench-run-all" => cmd_bench_runall(&args),
         "sql" => cmd_sql(&args),
         "convert" => cmd_convert(&args),
         "help" | "-h" | "--help" => {

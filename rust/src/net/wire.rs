@@ -20,9 +20,9 @@ use crate::error::{Result, RylonError};
 use crate::table::Table;
 use crate::types::{DataType, Field, Schema};
 
-const MAGIC: u32 = 0x52594C4E; // "RYLN"
+pub(crate) const MAGIC: u32 = 0x52594C4E; // "RYLN"
 
-fn dtype_tag(dt: DataType) -> u8 {
+pub(crate) fn dtype_tag(dt: DataType) -> u8 {
     match dt {
         DataType::Int64 => 0,
         DataType::Float64 => 1,
@@ -31,7 +31,7 @@ fn dtype_tag(dt: DataType) -> u8 {
     }
 }
 
-fn tag_dtype(tag: u8) -> Result<DataType> {
+pub(crate) fn tag_dtype(tag: u8) -> Result<DataType> {
     match tag {
         0 => Ok(DataType::Int64),
         1 => Ok(DataType::Float64),

@@ -201,8 +201,9 @@ struct MorselOut {
 }
 
 /// Collect the column names a predicate references, deduplicated in
-/// first-reference order.
-fn pred_columns(p: &Predicate, out: &mut Vec<String>) {
+/// first-reference order (also used by the scan-pushdown planner in
+/// [`Pipeline::scan_pushdown`]).
+pub(crate) fn pred_columns(p: &Predicate, out: &mut Vec<String>) {
     match p {
         Predicate::Cmp { column, .. } | Predicate::IsNull { column, .. } => {
             if !out.iter().any(|c| c == column) {

@@ -8,12 +8,14 @@
 mod fuse;
 
 use std::collections::HashMap;
+use std::path::Path;
 
 use crate::dist::{
     dist_difference, dist_groupby, dist_intersect, dist_join, dist_sort,
     dist_union, rebalance, RankCtx,
 };
 use crate::error::{Result, RylonError};
+use crate::io::ryf::{scan_ryf, scan_ryf_partition, ScanOptions};
 use crate::metrics::Phases;
 use crate::ops;
 use crate::ops::groupby::GroupByOptions;
@@ -283,6 +285,88 @@ impl Pipeline {
             phases.count("rows_out", cur.num_rows() as u64);
         }
         Ok((cur, phases))
+    }
+
+    /// The pushdown view of this pipeline's leading streamable run:
+    /// the conjunction of its `Select` predicates and — when the run
+    /// contains a `Project` — the live column set (the first
+    /// projection's columns plus every pushed predicate's columns).
+    /// The scan uses the predicate to skip whole row groups via zone
+    /// maps and the column set to skip dead column payloads; every
+    /// stage still runs over the scan output, so results *and errors*
+    /// are identical to an unpruned read (`docs/STORAGE.md`).
+    pub fn scan_pushdown(&self) -> ScanOptions {
+        let mut predicate: Option<Predicate> = None;
+        let mut pred_cols: Vec<String> = Vec::new();
+        let mut project: Option<&Vec<String>> = None;
+        for stage in &self.stages {
+            match stage {
+                Stage::Select(p) => {
+                    fuse::pred_columns(p, &mut pred_cols);
+                    predicate = Some(match predicate.take() {
+                        None => p.clone(),
+                        Some(acc) => acc.and(p.clone()),
+                    });
+                }
+                Stage::Project(cols) => {
+                    if project.is_none() {
+                        project = Some(cols);
+                    }
+                }
+                _ => break,
+            }
+        }
+        let projection = project.map(|cols| {
+            let mut live = cols.clone();
+            for c in pred_cols {
+                if !live.contains(&c) {
+                    live.push(c);
+                }
+            }
+            live
+        });
+        ScanOptions {
+            predicate,
+            projection,
+        }
+    }
+
+    /// Execute locally over an RYF file, pushing the leading predicate
+    /// and live column set into the scan ([`scan_ryf`]). The scan
+    /// seconds land in a `scan` phase and the post-pushdown row count
+    /// in a `rows_scanned` counter.
+    pub fn run_ryf_local(
+        &self,
+        path: impl AsRef<Path>,
+        env: &Env,
+    ) -> Result<(Table, Phases)> {
+        let opts = self.scan_pushdown();
+        let t = crate::metrics::Timer::start();
+        let input = scan_ryf(path, &opts)?;
+        let secs = t.seconds();
+        let (out, mut phases) = self.run_local(&input, env)?;
+        phases.add_seconds("scan", secs);
+        phases.count("rows_scanned", input.num_rows() as u64);
+        Ok((out, phases))
+    }
+
+    /// Execute SPMD over an RYF file: each rank scans its share of row
+    /// groups ([`scan_ryf_partition`]) with pushdown, then runs the
+    /// stage chain.
+    pub fn run_ryf_dist(
+        &self,
+        ctx: &mut RankCtx,
+        path: impl AsRef<Path>,
+        env: &Env,
+    ) -> Result<(Table, Phases)> {
+        let opts = self.scan_pushdown();
+        let t = crate::metrics::Timer::start();
+        let input = scan_ryf_partition(path, ctx.rank, ctx.size, &opts)?;
+        let secs = t.seconds();
+        let (out, mut phases) = self.run_dist(ctx, &input, env)?;
+        phases.add_seconds("scan", secs);
+        phases.count("rows_scanned", input.num_rows() as u64);
+        Ok((out, phases))
     }
 
     /// Length of the leading streamable run (batched when batch_rows>0).
@@ -578,6 +662,101 @@ mod tests {
         let p = Pipeline::new()
             .join("ghost", JoinOptions::inner("grp", "grp"));
         assert!(p.run_local(&input(), &Env::new()).is_err());
+    }
+
+    #[test]
+    fn scan_pushdown_collects_the_streamable_prefix() {
+        let p = Pipeline::new()
+            .select("v >= 10")
+            .unwrap()
+            .project(&["grp", "v"])
+            .select("v < 90")
+            .unwrap()
+            .groupby(GroupByOptions::new(&["grp"], vec![Agg::sum("v")]));
+        let opts = p.scan_pushdown();
+        // Both prefix selects fold into one conjunction.
+        match opts.predicate {
+            Some(Predicate::And(_, _)) => {}
+            other => panic!("expected And conjunction, got {other:?}"),
+        }
+        assert_eq!(
+            opts.projection,
+            Some(vec!["grp".to_string(), "v".to_string()])
+        );
+        // No project in the prefix → scan keeps every column.
+        let p = Pipeline::new().select("v >= 10").unwrap();
+        let opts = p.scan_pushdown();
+        assert!(opts.predicate.is_some());
+        assert!(opts.projection.is_none());
+        // A non-streamable head stops the walk before anything pushes.
+        let p = Pipeline::new().distinct().select("v >= 10").unwrap();
+        let opts = p.scan_pushdown();
+        assert!(opts.predicate.is_none());
+        assert!(opts.projection.is_none());
+        // Predicate columns join the live set even when not projected.
+        let p = Pipeline::new()
+            .select("id >= 50")
+            .unwrap()
+            .project(&["v"]);
+        let opts = p.scan_pushdown();
+        assert_eq!(
+            opts.projection,
+            Some(vec!["v".to_string(), "id".to_string()])
+        );
+    }
+
+    #[test]
+    fn ryf_pushdown_run_matches_in_memory_run() {
+        let table = input();
+        let path = std::env::temp_dir().join("rylon_pipe_ryf_push");
+        crate::exec::with_ryf_encoding(true, || {
+            crate::io::ryf::write_ryf(&table, &path, 10)
+        })
+        .unwrap();
+        let p = Pipeline::new()
+            .select("id >= 50")
+            .unwrap()
+            .project(&["id", "v"]);
+        let env = Env::new();
+        let (mem, _) = p.run_local(&table, &env).unwrap();
+        let _ = crate::exec::take_scan_stats();
+        let (scanned, phases) = p.run_ryf_local(&path, &env).unwrap();
+        let c = crate::exec::take_scan_stats();
+        assert_eq!(scanned, mem, "pushdown must not change the result");
+        assert!(phases.seconds("scan") >= 0.0);
+        assert_eq!(phases.counter("rows_scanned"), 50);
+        assert_eq!(c.groups_total, 10);
+        assert_eq!(c.groups_skipped, 5, "ids 0..49 live in dead groups");
+        assert_eq!(c.pruned_columns, 5, "grp pruned in each survivor");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ryf_dist_scan_covers_all_groups() {
+        let table = input();
+        let path = std::env::temp_dir().join("rylon_pipe_ryf_dist");
+        crate::exec::with_ryf_encoding(true, || {
+            crate::io::ryf::write_ryf(&table, &path, 10)
+        })
+        .unwrap();
+        let cluster = Cluster::new(DistConfig::threads(3)).unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let p = Pipeline::new()
+                    .select("id >= 50")?
+                    .project(&["id", "v"]);
+                let (out, _) =
+                    p.run_ryf_dist(ctx, &path, &Env::new())?;
+                Ok(out)
+            })
+            .unwrap();
+        let mut ids: Vec<i64> = outs
+            .iter()
+            .flat_map(|t| t.column(0).i64_values().to_vec())
+            .collect();
+        ids.sort();
+        assert_eq!(ids, (50..100).collect::<Vec<_>>());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

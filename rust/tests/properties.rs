@@ -14,6 +14,10 @@ use rylon::io::csv::{
     count_csv_records, read_csv_from, read_csv_records, read_csv_str,
     write_csv_to, CsvOptions,
 };
+use rylon::io::encode::{
+    decode_group, encode_group_with, DecodePruning, Encoding,
+};
+use rylon::io::ryf::{read_ryf, read_ryf_index, write_ryf};
 use rylon::net::wire::{deserialize_table, serialize_table};
 use rylon::ops::groupby::{groupby, Agg, GroupByOptions};
 use rylon::ops::join::{join, JoinAlgo, JoinOptions, JoinType};
@@ -832,5 +836,199 @@ fn prop_wire_mutations_fail_closed() {
                  (> {budget} B)"
             );
         }
+    }
+}
+
+/// RYF encoding roundtrip property: every forced per-column encoding
+/// (plain, run-length, bit-packed, dictionary) and the auto choice
+/// reproduce the exact in-memory table over randomized data — nulls,
+/// duplicate strings, multibyte text — and both file formats agree
+/// after a full write → read cycle.
+#[test]
+fn prop_ryf_encodings_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(15_000 + seed);
+        let t = random_table(&mut rng, 150, 20);
+        for force in [
+            None,
+            Some(Encoding::Plain),
+            Some(Encoding::Rle),
+            Some(Encoding::BitPack),
+            Some(Encoding::Dict),
+        ] {
+            let buf = encode_group_with(&t, force);
+            let (back, pruning) = decode_group(&buf, None)
+                .unwrap_or_else(|e| {
+                    panic!("seed {seed} force {force:?}: {e}")
+                });
+            assert_eq!(back, t, "seed {seed} force {force:?}");
+            assert_eq!(pruning, DecodePruning::default());
+        }
+        // Projected decode prunes the middle column and keeps file
+        // order, bit-identically to the full decode's columns.
+        let buf = encode_group_with(&t, None);
+        let proj = vec!["k".to_string(), "s".to_string()];
+        let (got, pruning) = decode_group(&buf, Some(&proj)).unwrap();
+        assert_eq!(got.num_columns(), 2, "seed {seed}");
+        assert_eq!(got.column(0), t.column(0), "seed {seed}");
+        assert_eq!(got.column(1), t.column(2), "seed {seed}");
+        assert_eq!(pruning.pruned_columns, 1, "seed {seed}");
+        // File level: encoded and raw files carry the same table, and
+        // the encoded footer has one zone map per group per column.
+        let enc = std::env::temp_dir()
+            .join(format!("rylon_prop_ryf_enc_{seed}.ryf"));
+        let raw = std::env::temp_dir()
+            .join(format!("rylon_prop_ryf_raw_{seed}.ryf"));
+        exec::with_ryf_encoding(true, || write_ryf(&t, &enc, 32))
+            .unwrap();
+        exec::with_ryf_encoding(false, || write_ryf(&t, &raw, 32))
+            .unwrap();
+        assert_eq!(read_ryf(&enc).unwrap(), t, "seed {seed} encoded");
+        assert_eq!(read_ryf(&raw).unwrap(), t, "seed {seed} raw");
+        let idx = read_ryf_index(&enc).unwrap();
+        assert!(idx.encoded, "seed {seed}");
+        assert_eq!(idx.stats.len(), idx.metas.len(), "seed {seed}");
+        assert!(
+            idx.stats.iter().all(|g| g.len() == t.num_columns()),
+            "seed {seed}: a group is missing zone maps"
+        );
+        std::fs::remove_file(&enc).ok();
+        std::fs::remove_file(&raw).ok();
+    }
+}
+
+/// RYF mutation property, in the image of the wire one above: corrupt
+/// encoded group bytes and corrupt file headers/footers (metas, zone
+/// maps, footer offset) are an `Err` or a well-formed different parse —
+/// never a panic, and never an allocation blowup past a small multiple
+/// of the pristine parse's peak (a lying group extent is rejected by
+/// the index before it can size a read buffer).
+#[test]
+fn prop_ryf_mutations_fail_closed() {
+    for seed in 0..10u64 {
+        let mut rng = Xoshiro256::new(16_000 + seed);
+        let t = random_table(&mut rng, 120, 20);
+
+        // Group bytes: strict prefixes always fail (the parse is
+        // deterministic on a prefix, so it runs dry mid-read or trips
+        // the trailing-bytes check); flips and splices never panic.
+        let buf = encode_group_with(&t, None);
+        let (peak0, ok) = peak_alloc_of(|| decode_group(&buf, None));
+        assert!(ok.is_ok(), "seed {seed}: pristine group rejected");
+        let budget = 4 * peak0 + (1 << 20);
+        let mut cuts = vec![0, buf.len() - 1, buf.len() / 2];
+        cuts.extend(
+            (0..6).map(|_| rng.next_below(buf.len() as u64) as usize),
+        );
+        for cut in cuts {
+            let pfx = &buf[..cut];
+            let (peak, r) = peak_alloc_of(|| {
+                std::panic::catch_unwind(|| {
+                    decode_group(pfx, None).map(|(t, _)| t.num_rows())
+                })
+            });
+            let r = r.unwrap_or_else(|_| {
+                panic!("seed {seed}: group cut at {cut} panicked")
+            });
+            assert!(r.is_err(), "seed {seed}: group cut at {cut} parsed");
+            assert!(
+                peak <= budget,
+                "seed {seed}: group cut at {cut} peaked at {peak} B \
+                 (> {budget} B)"
+            );
+        }
+        for case in 0..24 {
+            let mut m = buf.clone();
+            if case % 2 == 0 {
+                let pos = rng.next_below(m.len() as u64) as usize;
+                m[pos] ^= 1u8 << rng.next_below(8);
+            } else {
+                let at = rng.next_below(m.len() as u64) as usize;
+                let end =
+                    (at + 1 + rng.next_below(12) as usize).min(m.len());
+                let junk: Vec<u8> = (0..rng.next_below(16))
+                    .map(|_| rng.next_below(256) as u8)
+                    .collect();
+                m.splice(at..end, junk);
+            }
+            let (peak, r) = peak_alloc_of(|| {
+                std::panic::catch_unwind(|| {
+                    decode_group(&m, None).map(|(t, _)| t.num_rows())
+                })
+            });
+            assert!(
+                r.is_ok(),
+                "seed {seed} case {case}: mutated group panicked"
+            );
+            assert!(
+                peak <= budget,
+                "seed {seed} case {case}: mutated group peaked at \
+                 {peak} B (> {budget} B)"
+            );
+        }
+
+        // File level: truncations kill the read; header and
+        // footer/stats flips never panic it.
+        let path = std::env::temp_dir()
+            .join(format!("rylon_prop_ryf_mut_{seed}.ryf"));
+        exec::with_ryf_encoding(true, || write_ryf(&t, &path, 32))
+            .unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let n = good.len();
+        let footer_off =
+            u64::from_le_bytes(good[n - 8..].try_into().unwrap())
+                as usize;
+        let (fpeak0, pristine) = peak_alloc_of(|| read_ryf(&path));
+        assert_eq!(pristine.unwrap(), t, "seed {seed}");
+        let fbudget = 4 * fpeak0 + (1 << 20);
+        for cut in [0usize, 7, n / 2, footer_off, n - 9, n - 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            let (peak, r) = peak_alloc_of(|| {
+                std::panic::catch_unwind(|| {
+                    read_ryf(&path).map(|t| t.num_rows())
+                })
+            });
+            let r = r.unwrap_or_else(|_| {
+                panic!("seed {seed}: file cut at {cut} panicked")
+            });
+            assert!(r.is_err(), "seed {seed}: file cut at {cut} parsed");
+            assert!(
+                peak <= fbudget,
+                "seed {seed}: file cut at {cut} peaked at {peak} B \
+                 (> {fbudget} B)"
+            );
+        }
+        for case in 0..20u64 {
+            let mut m = good.clone();
+            let pos = if case % 2 == 0 {
+                rng.next_below(8) as usize
+            } else {
+                footer_off
+                    + rng.next_below((n - footer_off) as u64) as usize
+            };
+            m[pos] ^= 1u8 << rng.next_below(8);
+            std::fs::write(&path, &m).unwrap();
+            let (peak, r) = peak_alloc_of(|| {
+                std::panic::catch_unwind(|| {
+                    read_ryf(&path).map(|t| t.num_rows())
+                })
+            });
+            assert!(
+                r.is_ok(),
+                "seed {seed}: flip at byte {pos} panicked the read"
+            );
+            assert!(
+                peak <= fbudget,
+                "seed {seed}: flip at byte {pos} peaked at {peak} B \
+                 (> {fbudget} B)"
+            );
+        }
+        std::fs::write(&path, &good).unwrap();
+        assert_eq!(
+            read_ryf(&path).unwrap(),
+            t,
+            "seed {seed}: pristine bytes must still parse"
+        );
+        std::fs::remove_file(&path).ok();
     }
 }

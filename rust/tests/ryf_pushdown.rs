@@ -1,0 +1,277 @@
+//! Scan-pushdown equivalence matrix (docs/STORAGE.md): encoded `RYF2`
+//! scans must be bit-identical to the raw `RYF1` oracle across thread
+//! counts and work-stealing modes while actually skipping groups via
+//! zone maps; pushdown counters must total correctly across a
+//! cluster's ranks; and encoded groups must round-trip through the
+//! out-of-core operators' spill files.
+
+use rylon::column::Column;
+use rylon::dist::{Cluster, DistConfig};
+use rylon::exec;
+use rylon::io::ryf::{
+    read_ryf, scan_ryf, write_ryf, RyfWriter, ScanOptions,
+};
+use rylon::ops::groupby::{groupby, Agg, GroupByOptions};
+use rylon::ops::join::{join, JoinOptions};
+use rylon::ops::orderby::{orderby, SortKey};
+use rylon::ops::select::Predicate;
+use rylon::pipeline::{Env, Pipeline};
+use rylon::table::Table;
+
+/// Sequential ids (ideal zone-map pruning), an f64 payload, a
+/// low-cardinality string column (dictionary bait, prunable by
+/// projection), and a nullable column whose nulls live only in the
+/// last quarter of the rows — so pruning the null-carrying groups
+/// exercises the validity-restore path.
+fn dataset(n: usize) -> Table {
+    let null_from = (n - n / 4) as i64;
+    let tags: Vec<String> =
+        (0..n).map(|i| format!("t{}", i % 7)).collect();
+    Table::from_columns(vec![
+        ("id", Column::from_i64((0..n as i64).collect())),
+        (
+            "v",
+            Column::from_f64((0..n).map(|i| i as f64 * 0.5).collect()),
+        ),
+        (
+            "w",
+            Column::from_opt_i64(
+                (0..n as i64)
+                    .map(|i| {
+                        if i < null_from {
+                            Some(i * 2)
+                        } else {
+                            None
+                        }
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "tag",
+            Column::from_str(
+                &tags.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+    .unwrap()
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("rylon_ryfpd_{name}.ryf"))
+}
+
+#[test]
+fn encoded_scan_matches_raw_oracle_across_threads_and_steal() {
+    let table = dataset(4000);
+    let enc = tmp("matrix_enc");
+    let raw = tmp("matrix_raw");
+    exec::with_ryf_encoding(true, || write_ryf(&table, &enc, 250))
+        .unwrap();
+    exec::with_ryf_encoding(false, || write_ryf(&table, &raw, 250))
+        .unwrap();
+    let pipe = Pipeline::new()
+        .select("id < 400")
+        .unwrap()
+        .project(&["id", "v", "w"]);
+    let env = Env::new();
+    let reference = exec::with_intra_op_threads(1, || {
+        pipe.run_ryf_local(&raw, &env).unwrap().0
+    });
+    assert_eq!(reference.num_rows(), 400);
+    let _ = exec::take_scan_stats();
+    for threads in [1usize, 2, 4, 8] {
+        for steal in [false, true] {
+            exec::with_intra_op_threads(threads, || {
+                exec::with_par_row_threshold(1, || {
+                    exec::with_work_steal(steal, || {
+                        let label =
+                            format!("threads {threads} steal {steal}");
+                        let (e, _) =
+                            pipe.run_ryf_local(&enc, &env).unwrap();
+                        let sc = exec::take_scan_stats();
+                        assert_eq!(
+                            e, reference,
+                            "{label}: encoded diverged from the oracle"
+                        );
+                        assert_eq!(sc.groups_total, 16, "{label}");
+                        assert_eq!(
+                            sc.groups_skipped, 14,
+                            "{label}: only groups 0 and 1 can hold \
+                             id < 400"
+                        );
+                        assert!(
+                            sc.decoded_bytes_avoided > 0,
+                            "{label}"
+                        );
+                        assert_eq!(
+                            sc.pruned_columns, 2,
+                            "{label}: `tag` pruned in both survivors"
+                        );
+                        let (r, _) =
+                            pipe.run_ryf_local(&raw, &env).unwrap();
+                        let rc = exec::take_scan_stats();
+                        assert_eq!(
+                            r, reference,
+                            "{label}: raw rerun diverged"
+                        );
+                        assert_eq!(
+                            rc.groups_skipped, 0,
+                            "{label}: raw files have no zone maps"
+                        );
+                    })
+                })
+            });
+        }
+    }
+    std::fs::remove_file(&enc).ok();
+    std::fs::remove_file(&raw).ok();
+}
+
+#[test]
+fn dist_scan_counters_total_across_ranks() {
+    let table = dataset(4000);
+    let enc = tmp("dist_enc");
+    let raw = tmp("dist_raw");
+    exec::with_ryf_encoding(true, || write_ryf(&table, &enc, 250))
+        .unwrap();
+    exec::with_ryf_encoding(false, || write_ryf(&table, &raw, 250))
+        .unwrap();
+    let run = |path: &std::path::Path, encoding: bool| {
+        let cluster = Cluster::new(
+            DistConfig::threads(3).with_ryf_encoding(encoding),
+        )
+        .unwrap();
+        let outs = cluster
+            .run(|ctx| {
+                let pipe = Pipeline::new()
+                    .select("id < 400")?
+                    .project(&["id", "v", "w"]);
+                let (t, _) = pipe.run_ryf_dist(ctx, path, &Env::new())?;
+                Ok(t)
+            })
+            .unwrap();
+        (cluster.scan_stats(), outs)
+    };
+    let (sc, outs) = run(&enc, true);
+    let (rc, routs) = run(&raw, false);
+    assert_eq!(
+        outs, routs,
+        "per-rank encoded outputs must match the raw oracle"
+    );
+    let mut ids: Vec<i64> = outs
+        .iter()
+        .flat_map(|t| t.column(0).i64_values().to_vec())
+        .collect();
+    ids.sort();
+    assert_eq!(ids, (0..400).collect::<Vec<_>>());
+    // Every group is owned by exactly one rank, so the drained
+    // per-rank counters total the whole file.
+    assert_eq!(sc.groups_total, 16);
+    assert_eq!(sc.groups_skipped, 14);
+    assert!(sc.decoded_bytes > 0 && sc.decoded_bytes_avoided > 0);
+    assert_eq!(sc.pruned_columns, 2);
+    assert_eq!(rc.groups_total, 16);
+    assert_eq!(rc.groups_skipped, 0, "raw files have no zone maps");
+    std::fs::remove_file(&enc).ok();
+    std::fs::remove_file(&raw).ok();
+}
+
+#[test]
+fn encoded_groups_roundtrip_through_spill_dirs() {
+    let table = dataset(2000);
+    // SpillDir files are written by `RyfWriter` under the same
+    // thread-local knob, so spilled groups are encoded when it is on —
+    // and must read back exactly.
+    let dirs_before = exec::live_spill_dirs();
+    let dir = exec::SpillDir::create().unwrap();
+    let spill = dir.file("part0.ryf");
+    exec::with_ryf_encoding(true, || write_ryf(&table, &spill, 128))
+        .unwrap();
+    assert_eq!(&std::fs::read(&spill).unwrap()[..4], b"RYF2");
+    assert_eq!(read_ryf(&spill).unwrap(), table);
+    drop(dir);
+    // Out-of-core join / sort / groupby under a one-byte budget (every
+    // reservation denied → full spilling) must match the in-memory
+    // results whichever format their spill files use.
+    let keys = [SortKey::asc("tag"), SortKey::desc("id")];
+    let gopts = GroupByOptions::new(
+        &["tag"],
+        vec![Agg::sum("v"), Agg::count("id")],
+    );
+    let jopts = JoinOptions::inner("id", "id");
+    let (sorted0, grouped0, joined0) =
+        exec::with_memory_budget_bytes(0, || {
+            (
+                orderby(&table, &keys).unwrap(),
+                groupby(&table, &gopts).unwrap(),
+                join(&table, &table, &jopts).unwrap(),
+            )
+        });
+    for encoding in [false, true] {
+        exec::with_ryf_encoding(encoding, || {
+            exec::with_memory_budget_bytes(1, || {
+                assert_eq!(
+                    orderby(&table, &keys).unwrap(),
+                    sorted0,
+                    "out-of-core sort, encoding={encoding}"
+                );
+                assert_eq!(
+                    groupby(&table, &gopts).unwrap(),
+                    grouped0,
+                    "out-of-core groupby, encoding={encoding}"
+                );
+                assert_eq!(
+                    join(&table, &table, &jopts).unwrap(),
+                    joined0,
+                    "out-of-core join, encoding={encoding}"
+                );
+            })
+        });
+    }
+    assert_eq!(
+        exec::live_spill_dirs(),
+        dirs_before,
+        "a spill directory leaked"
+    );
+}
+
+#[test]
+fn streamed_encoded_appends_match_bulk_writes() {
+    // The single-pass CSV→RYF convert appends streamed chunk tables
+    // one group at a time; under the encoding knob that stream must
+    // produce byte-identical files to the bulk writer, and pushdown
+    // over them must behave identically.
+    let table = dataset(1000);
+    let streamed = tmp("stream_inc");
+    let bulk = tmp("stream_bulk");
+    exec::with_ryf_encoding(true, || -> rylon::Result<()> {
+        let mut w = RyfWriter::create(&streamed)?;
+        for g in 0..10 {
+            w.append(&table.slice(g * 100, 100))?;
+        }
+        w.finish()?;
+        write_ryf(&table, &bulk, 100)
+    })
+    .unwrap();
+    assert_eq!(
+        std::fs::read(&streamed).unwrap(),
+        std::fs::read(&bulk).unwrap(),
+        "streamed and bulk encoded writers must emit identical bytes"
+    );
+    let opts = ScanOptions {
+        predicate: Some(Predicate::parse("id < 100").unwrap()),
+        projection: Some(vec!["id".to_string(), "w".to_string()]),
+    };
+    let _ = exec::take_scan_stats();
+    let got = scan_ryf(&streamed, &opts).unwrap();
+    let c = exec::take_scan_stats();
+    assert_eq!(c.groups_total, 10);
+    assert_eq!(c.groups_skipped, 9);
+    assert_eq!(c.pruned_columns, 2, "`v` and `tag` in the survivor");
+    assert_eq!(got.num_rows(), 100);
+    assert_eq!(got.num_columns(), 2);
+    assert_eq!(got, scan_ryf(&bulk, &opts).unwrap());
+    std::fs::remove_file(&streamed).ok();
+    std::fs::remove_file(&bulk).ok();
+}
